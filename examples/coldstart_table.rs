@@ -1,0 +1,59 @@
+//! Table I: cold vs warm response latencies per FunctionBench application,
+//! measured on the REAL runtime — each cold start is an actual XLA
+//! compilation of the AOT artifact on the PJRT CPU client, each warm start
+//! a cache-hit execution. 20 runs each, like the paper.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example coldstart_table [-- --runs 20]
+
+use hiku::runtime::{Engine, Manifest};
+use hiku::stats::OnlineStats;
+use hiku::util::cli::Cli;
+use hiku::workload::BASE_APPS;
+
+fn main() {
+    let cli = Cli::new("coldstart_table", "Table I on the real PJRT runtime")
+        .opt("runs", Some("20"), "measurement runs per application");
+    let args = cli.parse_env();
+    let runs = args.parse_usize("runs").unwrap();
+
+    let manifest = Manifest::load("artifacts").unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+
+    println!("# Table I — average response latencies over {runs} runs (real PJRT)");
+    println!(
+        "{:<18} {:>12} {:>12} {:>9}   paper(ms): cold/warm",
+        "Application", "Cold (ms)", "Warm (ms)", "ratio"
+    );
+
+    let mut cold_sum = 0.0;
+    let mut warm_sum = 0.0;
+    for app in BASE_APPS.iter() {
+        let mut cold = OnlineStats::new();
+        let mut warm = OnlineStats::new();
+        for r in 0..runs {
+            // Fresh engine per run => a genuine cold start (XLA compile).
+            let mut e = Engine::new(manifest.clone(), 8).expect("engine");
+            let rc = e.execute(app.name, r as u32).expect("cold exec");
+            assert!(rc.cold);
+            cold.push(rc.total_s * 1000.0);
+            let rw = e.execute(app.name, r as u32 + 1000).expect("warm exec");
+            assert!(!rw.cold);
+            warm.push(rw.total_s * 1000.0);
+        }
+        cold_sum += cold.mean();
+        warm_sum += warm.mean();
+        println!(
+            "{:<18} {:>12.1} {:>12.1} {:>8.2}x   {:.0}/{:.0}",
+            app.name,
+            cold.mean(),
+            warm.mean(),
+            cold.mean() / warm.mean(),
+            app.cold_ms,
+            app.warm_ms
+        );
+    }
+    println!("\nmean cold/warm slowdown: {:.2}x (paper: 1.79x)", cold_sum / warm_sum);
+}

@@ -1,0 +1,72 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Proves all layers compose: the Pallas kernels (L1) lowered through the
+//! JAX payloads (L2) into HLO-text artifacts, loaded and executed by the
+//! PJRT runtime inside real worker threads, coordinated by the Hiku
+//! pull-based scheduler (L3) under the k6-like closed-loop workload —
+//! Python nowhere on the request path.
+//!
+//! Serves a batch of requests per scheduler and reports latency,
+//! throughput, cold-start rate and per-worker load — the paper's metrics,
+//! on real compute. Results recorded in EXPERIMENTS.md §E2E.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example e2e_serving [-- --requests 200]
+
+use hiku::config::Config;
+use hiku::server::serve_n_requests;
+use hiku::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("e2e_serving", "real PJRT serving, scheduler comparison")
+        .opt("requests", Some("200"), "requests per scheduler")
+        .opt("workers", Some("3"), "worker threads")
+        .opt("vus", Some("8"), "virtual users")
+        .opt("schedulers", Some("hiku,ch-bl,random,least-connections"), "schedulers");
+    let args = cli.parse_env();
+    let requests = args.parse_usize("requests").unwrap();
+    let workers = args.parse_usize("workers").unwrap();
+    let vus = args.parse_usize("vus").unwrap();
+
+    println!(
+        "# End-to-end serving: {requests} requests, {workers} PJRT workers, {vus} VUs (real compute)"
+    );
+    println!(
+        "{:<20} {:>9} {:>9} {:>9} {:>7} {:>8} {:>8}",
+        "scheduler", "mean(ms)", "p95(ms)", "p99(ms)", "cold%", "rps", "CV"
+    );
+
+    for sched in args.parse_list("schedulers") {
+        let mut cfg = Config::default();
+        cfg.scheduler.name = sched.clone();
+        cfg.cluster.workers = workers;
+        cfg.workload.vus = vus;
+        // Wall-clock run: compress think times (scales the paper's
+        // 0.1-1 s down by 20x; the closed-loop structure is unchanged).
+        cfg.workload.think_min_s = 0.005;
+        cfg.workload.think_max_s = 0.05;
+        // Tight executable caches so eviction/cold-start dynamics appear
+        // at demo scale: 4 of 8 payloads warm per worker.
+        cfg.cluster.mem_mb = 1024;
+
+        match serve_n_requests(&cfg, requests) {
+            Ok(mut m) => {
+                println!(
+                    "{:<20} {:>9.1} {:>9.1} {:>9.1} {:>6.1}% {:>8.1} {:>8.3}",
+                    sched,
+                    m.mean_latency_ms(),
+                    m.latency_percentile_ms(95.0),
+                    m.latency_percentile_ms(99.0),
+                    m.cold_rate() * 100.0,
+                    m.rps(),
+                    m.mean_cv(),
+                );
+            }
+            Err(e) => {
+                eprintln!("{sched}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("\n(cold start = real XLA compilation of the AOT artifact on the worker)");
+}

@@ -1,0 +1,33 @@
+//! Quickstart: the smallest complete use of the library.
+//!
+//! Builds the paper's default cluster (5 workers, 40 FunctionBench
+//! functions), runs a 60-second simulated experiment with Hiku pull-based
+//! scheduling, and prints the metrics the paper reports.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hiku::config::Config;
+use hiku::sim::run_once;
+
+fn main() {
+    // 1. Configure the experiment (defaults mirror the paper's §V-A setup).
+    let mut cfg = Config::default();
+    cfg.scheduler.name = "hiku".into(); // try: ch-bl, random, least-connections
+    cfg.workload.vus = 50;
+    cfg.workload.duration_s = 60.0;
+
+    // 2. Run one seeded, fully deterministic experiment.
+    let mut metrics = run_once(&cfg, 42).expect("simulation failed");
+
+    // 3. Read out the paper's metrics.
+    println!("scheduler          : {}", cfg.scheduler.name);
+    println!("completed requests : {}", metrics.completed);
+    println!("mean latency       : {:.1} ms", metrics.mean_latency_ms());
+    println!("p99 latency        : {:.1} ms", metrics.latency_percentile_ms(99.0));
+    println!("cold-start rate    : {:.1} %", metrics.cold_rate() * 100.0);
+    println!("load imbalance CV  : {:.3}", metrics.mean_cv());
+    println!("throughput         : {:.1} req/s", metrics.rps());
+
+    // 4. Machine-readable summary (same fields, JSON).
+    println!("\n{}", metrics.summary_json().to_string_pretty());
+}

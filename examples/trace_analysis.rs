@@ -1,0 +1,23 @@
+//! Figs 4-6: Azure-like workload characterization.
+//!
+//! Synthesizes the production-trace-calibrated workload (DESIGN.md §2) and
+//! prints the three characterization figures of the paper's §III-B:
+//! skewed popularity (Fig 4), heterogeneous performance (Fig 5), bursty
+//! invocations (Fig 6), each with the paper's reference numbers inline.
+//!
+//! Run: `cargo run --release --example trace_analysis [-- --minutes 30]`
+
+use hiku::report::trace_report;
+use hiku::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("trace_analysis", "Azure-like trace characterization (Figs 4-6)")
+        .opt("universe", Some("10000"), "functions in the universe")
+        .opt("minutes", Some("30"), "trace duration in minutes")
+        .opt("seed", Some("42"), "trace seed");
+    let args = cli.parse_env();
+    let universe = args.parse_usize("universe").unwrap();
+    let minutes = args.parse_f64("minutes").unwrap();
+    let seed = args.parse_u64("seed").unwrap();
+    print!("{}", trace_report(universe, minutes * 60.0, seed));
+}

@@ -1,0 +1,103 @@
+"""AOT compiler: lower every payload to HLO text + manifest for the Rust side.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt   one per payload in model.PAYLOADS
+  manifest.json    input/output specs + golden digests for Rust-side
+                   numeric verification (seed 42 and 7)
+
+`--report` additionally prints per-payload HLO op counts (fusion sanity:
+L2 perf target is "no redundant recompute, one fused module per payload").
+"""
+
+import argparse
+import collections
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PAYLOADS
+
+GOLDEN_SEEDS = (42, 7)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_payload(fn):
+    spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    return jax.jit(fn).lower(spec)
+
+
+def op_histogram(hlo_text: str):
+    """Rough opcode histogram from HLO text (perf report)."""
+    ops = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+\S+\s+([a-z0-9-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def build(out_dir: str, report: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "payloads": []}
+    for name, fn in PAYLOADS.items():
+        lowered = lower_payload(fn)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        goldens = []
+        for seed in GOLDEN_SEEDS:
+            out = jax.jit(fn)(jnp.uint32(seed))[0]
+            goldens.append(
+                {"seed": seed, "digest": [float(out[0]), float(out[1])]}
+            )
+        entry = {
+            "name": name,
+            "artifact": f"{name}.hlo.txt",
+            "input": {"dtype": "u32", "shape": []},
+            "output": {"dtype": "f32", "shape": [2], "tuple": True},
+            "goldens": goldens,
+            "hlo_bytes": len(text),
+        }
+        manifest["payloads"].append(entry)
+        if report:
+            ops = op_histogram(text)
+            total = sum(ops.values())
+            top = ", ".join(f"{k}:{v}" for k, v in ops.most_common(6))
+            print(f"  {name:>20}: {total:5d} ops ({top})")
+        print(f"wrote {path} ({len(text)} bytes)", file=sys.stderr)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}", file=sys.stderr)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--report", action="store_true", help="print HLO op histograms")
+    args = ap.parse_args()
+    build(os.path.abspath(args.out_dir), report=args.report)
+
+
+if __name__ == "__main__":
+    main()

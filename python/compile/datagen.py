@@ -1,0 +1,51 @@
+"""Deterministic on-device data generation shared by payloads and oracles.
+
+Serverless function payloads take a single u32 seed as input and synthesize
+their working set on device from that seed. This keeps the Rust->PJRT
+marshalling trivial (one scalar in, one small vector out) while still
+exercising real compute: the generator is a SplitMix32-style integer mixer
+evaluated over an iota, which XLA fuses into the consumer kernel.
+
+The same helpers back `kernels/ref.py`, so the pure-jnp oracle and the Pallas
+kernels consume bit-identical inputs.
+"""
+
+import jax.numpy as jnp
+
+# SplitMix64's golden-ratio increment, truncated to 32 bits.
+GOLDEN32 = jnp.uint32(0x9E3779B9)
+
+
+def mix32(x):
+    """SplitMix32 finalizer: a high-quality 32-bit integer mixer.
+
+    Operates on uint32 arrays with wrapping arithmetic (XLA semantics).
+    """
+    x = jnp.asarray(x, jnp.uint32)
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def gen_u32(n, seed):
+    """n pseudo-random uint32s derived from `seed` (scalar or 0-d array)."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    i = jnp.arange(n, dtype=jnp.uint32)
+    return mix32(i + seed * GOLDEN32 + jnp.uint32(1))
+
+
+def gen_f32(shape, seed):
+    """Uniform [0, 1) float32s of `shape` derived from `seed`."""
+    n = 1
+    for d in shape:
+        n *= d
+    u = gen_u32(n, seed)
+    # 24-bit mantissa path: exact uniform grid in [0, 1).
+    f = (u >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    return f.reshape(shape)
+
+
+def gen_bytes(n, seed):
+    """n pseudo-random byte values (as uint32 in [0, 256))."""
+    return gen_u32(n, seed) & jnp.uint32(0xFF)

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels (interpret=True) for the FunctionBench payloads."""
+
+from .matmul import matmul
+from .elementwise import float_chain
+from .mix import mix_rounds
+from .bytes_ops import histogram, delta_compress, gather_permute, strided_checksum
+
+__all__ = [
+    "matmul",
+    "float_chain",
+    "mix_rounds",
+    "histogram",
+    "delta_compress",
+    "gather_permute",
+    "strided_checksum",
+]

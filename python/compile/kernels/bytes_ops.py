@@ -1,0 +1,124 @@
+"""Byte-stream kernels — hot-spots of the I/O-flavoured FunctionBench payloads.
+
+The paper's disk/network functions (dd, gzip_compression, json_dumps_loads,
+chameleon) are memory-bound byte shufflers. On TPU these become VMEM-resident
+block transforms (see DESIGN.md §Hardware-Adaptation):
+
+- `histogram`   (json_dumps_loads): 256-bin byte histogram via a vectorized
+  compare-and-reduce per block, accumulated across the grid in the output
+  block (revisited output, k-style accumulation).
+- `delta_compress` (gzip_compression): block-local delta encoding + a
+  compressibility count of near-zero deltas.
+- `gather_permute` (chameleon): block-local pseudo-random permutation gather,
+  the access pattern of template rendering / string interning.
+- `strided_checksum` (dd): weighted block checksum, the read-modify-write
+  pattern of a file copy with verification.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..datagen import mix32
+
+
+def _histogram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    bins = jnp.arange(256, dtype=jnp.uint32)
+    # (256, block) compare matrix, reduced along the block axis.
+    counts = jnp.sum(
+        (x[None, :] == bins[:, None]).astype(jnp.uint32), axis=1
+    )
+    o_ref[...] += counts
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def histogram(x, *, block=8192):
+    """256-bin histogram of byte values stored in a 1-D u32 vector."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        _histogram_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.uint32),
+        interpret=True,
+    )(x)
+
+
+def _delta_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)
+    prev = jnp.concatenate([x[:1], x[:-1]])
+    o_ref[...] = x - prev
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def delta_compress(x, *, block=8192):
+    """Block-local delta encoding of a byte stream (u32 values in [0,256))."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _gather_kernel(x_ref, o_ref, *, block):
+    x = x_ref[...]
+    idx = jnp.arange(block, dtype=jnp.uint32)
+    # Block-local pseudo-random permutation (mix is a bijection mod 2^32;
+    # modulo block keeps indices in range — collisions allowed, this is a
+    # gather benchmark, not a crypto permutation).
+    perm = mix32(idx + jnp.uint32(pl.program_id(0) + 1)) % jnp.uint32(block)
+    o_ref[...] = x[perm]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gather_permute(x, *, block=8192):
+    """Pseudo-random block-local gather over a 1-D u32 vector."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block=block),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(x)
+
+
+def _checksum_kernel(x_ref, o_ref, *, block):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = (jnp.arange(block, dtype=jnp.uint32) & jnp.uint32(0xFF)) + jnp.uint32(1)
+    o_ref[...] += jnp.sum(x * w, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def strided_checksum(x, *, block=8192):
+    """Weighted wrap-around checksum of a u32 stream; returns u32[1]."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        functools.partial(_checksum_kernel, block=block),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.uint32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,39 @@
+"""Elementwise transcendental chain — hot-spot of `float_operation`.
+
+FunctionBench's float_operation benchmarks sqrt/sin/exp style scalar math in a
+tight loop. The TPU rethink: a VPU-friendly elementwise pipeline over
+lane-aligned blocks. The grid walks the vector in `block` chunks; each chunk
+is one HBM->VMEM->HBM pass with the whole chain fused in registers, so the
+kernel is bandwidth-bound with arithmetic intensity ~= chain length.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chain_kernel(x_ref, o_ref, *, rounds):
+    x = x_ref[...]
+    y = x
+    # `rounds` fused transcendental passes; matches ref.float_chain_ref.
+    for _ in range(rounds):
+        y = jnp.sin(y) * jnp.exp(-y * y) + jnp.sqrt(jnp.abs(y) + 1e-6)
+        y = y * jnp.float32(0.5)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rounds"))
+def float_chain(x, *, block=8192, rounds=4):
+    """Apply `rounds` of the transcendental chain to a 1-D f32 vector."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, rounds=rounds),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)

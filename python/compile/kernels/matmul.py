@@ -1,0 +1,58 @@
+"""Blocked Pallas matmul — the compute hot-spot of `matmul` and `linpack`.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks (M/bm, N/bn,
+K/bk); each step loads one (bm, bk) tile of A and one (bk, bn) tile of B into
+VMEM and feeds the MXU-shaped `jnp.dot`. The output block is revisited along
+the K dimension and accumulated in place — the BlockSpec index map for the
+output ignores `k`, which expresses the HBM<->VMEM reuse schedule that a CUDA
+version would express with threadblock tiling over shared memory.
+
+interpret=True is mandatory on this image: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the AOT
+artifact runs anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps):
+    """One grid step: accumulate x_block @ y_block into the output block."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    """Blocked matmul `x @ y` via Pallas.
+
+    Shapes must tile evenly: x (M, K), y (K, N) with bm | M, bn | N, bk | K.
+    Defaults (128, 128, 128) are MXU-aligned tiles; VMEM footprint per step is
+    bm*bk + bk*bn + bm*bn floats = 192 KiB at the defaults.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"block sizes ({bm},{bn},{bk}) must divide shapes ({m},{n},{k})"
+    )
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,52 @@
+"""ARX mixing rounds — hot-spot of the `pyaes` payload.
+
+FunctionBench's pyaes runs many cheap rounds of byte-level substitution and
+permutation over a block. Table-based AES S-boxes are gather-heavy and map
+poorly to vector units, so the TPU rethink keeps the *structure* — many
+sequential rounds of diffusion over a wide state — using an ARX
+(add-rotate-xor) network over u32 lanes, which vectorizes cleanly on the VPU.
+
+Each grid step owns one VMEM-resident state block and runs all rounds locally
+(round loop inside the kernel), so HBM traffic is paid once per block rather
+than once per round — the same trick a CUDA AES kernel plays with shared
+memory residency.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rotl(x, r):
+    """Rotate-left each u32 lane by constant r."""
+    r = jnp.uint32(r)
+    return (x << r) | (x >> (jnp.uint32(32) - r))
+
+
+def _mix_kernel(x_ref, o_ref, *, rounds):
+    s = x_ref[...]
+    for rnd in range(rounds):
+        # Round constant keyed by round index (odd => invertible multiply).
+        rc = jnp.uint32(0x9E3779B9) * jnp.uint32(2 * rnd + 1)
+        s = s + rc
+        s = s ^ _rotl(s, 13)
+        s = s * jnp.uint32(0x85EBCA6B) | jnp.uint32(1)
+        s = s ^ _rotl(s, 17)
+    o_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rounds"))
+def mix_rounds(x, *, block=8192, rounds=16):
+    """Run `rounds` of ARX diffusion over a 1-D u32 state vector."""
+    (n,) = x.shape
+    assert n % block == 0, f"block {block} must divide length {n}"
+    return pl.pallas_call(
+        functools.partial(_mix_kernel, rounds=rounds),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py` asserts
+allclose / array_equal between each kernel and its oracle over hypothesis-
+generated shapes, dtypes and seeds. Keep these boring — no Pallas, no grids,
+just the mathematical definition.
+"""
+
+import jax.numpy as jnp
+
+from ..datagen import mix32
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def float_chain_ref(x, *, rounds=4):
+    """Oracle for kernels.elementwise.float_chain."""
+    y = x
+    for _ in range(rounds):
+        y = jnp.sin(y) * jnp.exp(-y * y) + jnp.sqrt(jnp.abs(y) + 1e-6)
+        y = y * jnp.float32(0.5)
+    return y
+
+
+def _rotl(x, r):
+    r = jnp.uint32(r)
+    return (x << r) | (x >> (jnp.uint32(32) - r))
+
+
+def mix_rounds_ref(x, *, rounds=16):
+    """Oracle for kernels.mix.mix_rounds."""
+    s = jnp.asarray(x, jnp.uint32)
+    for rnd in range(rounds):
+        rc = jnp.uint32(0x9E3779B9) * jnp.uint32(2 * rnd + 1)
+        s = s + rc
+        s = s ^ _rotl(s, 13)
+        s = s * jnp.uint32(0x85EBCA6B) | jnp.uint32(1)
+        s = s ^ _rotl(s, 17)
+    return s
+
+
+def histogram_ref(x):
+    """Oracle for kernels.bytes_ops.histogram."""
+    bins = jnp.arange(256, dtype=jnp.uint32)
+    return jnp.sum((x[None, :] == bins[:, None]).astype(jnp.uint32), axis=1)
+
+
+def delta_compress_ref(x, *, block=8192):
+    """Oracle for kernels.bytes_ops.delta_compress (block-local deltas)."""
+    xi = x.astype(jnp.int32).reshape(-1, block)
+    prev = jnp.concatenate([xi[:, :1], xi[:, :-1]], axis=1)
+    return (xi - prev).reshape(-1)
+
+
+def gather_permute_ref(x, *, block=8192):
+    """Oracle for kernels.bytes_ops.gather_permute (block-local gathers)."""
+    xb = x.reshape(-1, block)
+    idx = jnp.arange(block, dtype=jnp.uint32)
+    out = []
+    for b in range(xb.shape[0]):
+        perm = mix32(idx + jnp.uint32(b + 1)) % jnp.uint32(block)
+        out.append(xb[b][perm])
+    return jnp.stack(out).reshape(-1)
+
+
+def strided_checksum_ref(x, *, block=8192):
+    """Oracle for kernels.bytes_ops.strided_checksum."""
+    n = x.shape[0]
+    i = jnp.arange(n, dtype=jnp.uint32) % jnp.uint32(block)
+    w = (i & jnp.uint32(0xFF)) + jnp.uint32(1)
+    return jnp.sum(x * w, keepdims=True)

@@ -1,0 +1,137 @@
+"""Layer-2: the serverless function payloads as JAX compute graphs.
+
+Each FunctionBench-inspired payload is a function `seed_u32 -> f32[2]`
+(digest + auxiliary statistic). The working set is synthesized on device from
+the seed (see datagen.py), so the Rust coordinator marshals exactly one scalar
+in and one tiny vector out per invocation. Every payload routes its compute
+hot-spot through a Pallas kernel (kernels/*), so the AOT artifact contains the
+kernel lowering, and Python never runs at serving time.
+
+`PAYLOADS` is the registry the AOT compiler (aot.py) walks; the Rust workload
+module mirrors the same eight names (x5 copies = 40 functions, Table II).
+"""
+
+import jax.numpy as jnp
+
+from . import datagen
+from . import kernels
+
+# Problem sizes: picked so a warm invocation lands in the low-millisecond
+# range on a single CPU core (paper's warm starts: 58-549 ms on Python;
+# orderings preserved, absolute scale is faster because the payloads are
+# compiled XLA rather than interpreted Python).
+MATMUL_N = 512
+LINPACK_N = 512
+LINPACK_RHS = 128
+LINPACK_ITERS = 4
+VEC_N = 1 << 19        # float_operation vector length
+STREAM_N = 1 << 19     # byte-stream payload length
+AES_ROUNDS = 24
+CHAIN_ROUNDS = 4
+
+
+def _digest_pair(a, b):
+    """Pack two scalars into the f32[2] payload output."""
+    return (jnp.stack([a.astype(jnp.float32), b.astype(jnp.float32)]),)
+
+
+def payload_matmul(seed):
+    """`matmul`: dense C = A @ B on synthesized operands.
+
+    Block shapes from the §Perf roofline iteration: (256, 256, 512) tiles
+    raise the arithmetic intensity from 28 to 52 flops/byte vs the naive
+    128-cube (VMEM 1.3 MiB/step, still MXU-aligned) — see
+    compile/roofline.py and EXPERIMENTS.md §Perf.
+    """
+    a = datagen.gen_f32((MATMUL_N, MATMUL_N), seed)
+    b = datagen.gen_f32((MATMUL_N, MATMUL_N), seed + jnp.uint32(1))
+    c = kernels.matmul(a, b, bm=256, bn=256, bk=512)
+    return _digest_pair(jnp.mean(c), jnp.trace(c))
+
+
+def payload_linpack(seed):
+    """`linpack`: Jacobi iterations on a diagonally dominant system.
+
+    x_{t+1} = (B - (A - D) x_t) / d with A strictly diagonally dominant;
+    the A @ x_t hot-spot goes through the Pallas matmul (8 stacked RHS so
+    the MXU tile is not degenerate).
+    """
+    n, r = LINPACK_N, LINPACK_RHS
+    a = datagen.gen_f32((n, n), seed) * jnp.float32(1.0 / n)
+    d = jnp.float32(2.0)  # dominant diagonal
+    a = a - jnp.diag(jnp.diag(a)) + d * jnp.eye(n, dtype=jnp.float32)
+    b = datagen.gen_f32((n, r), seed + jnp.uint32(7))
+    x = jnp.zeros((n, r), jnp.float32)
+    for _ in range(LINPACK_ITERS):
+        ax = kernels.matmul(a, x, bn=r)  # bn=128: full MXU tile (§Perf)
+        x = x + (b - ax) / d
+    resid = b - kernels.matmul(a, x, bn=r)
+    return _digest_pair(jnp.mean(x), jnp.sqrt(jnp.sum(resid * resid)))
+
+
+def payload_float_operation(seed):
+    """`float_operation`: transcendental chain over a long vector."""
+    x = datagen.gen_f32((VEC_N,), seed) * jnp.float32(4.0) - jnp.float32(2.0)
+    y = kernels.float_chain(x, rounds=CHAIN_ROUNDS)
+    return _digest_pair(jnp.sum(y), jnp.max(y))
+
+
+def payload_pyaes(seed):
+    """`pyaes`: ARX diffusion rounds over a wide u32 state."""
+    s = datagen.gen_u32(STREAM_N, seed)
+    out = kernels.mix_rounds(s, rounds=AES_ROUNDS)
+    lo = (out & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    return _digest_pair(jnp.mean(lo), jnp.max(lo))
+
+
+def payload_json_dumps_loads(seed):
+    """`json_dumps_loads`: byte histogram + entropy estimate."""
+    x = datagen.gen_bytes(STREAM_N, seed)
+    h = kernels.histogram(x)
+    p = h.astype(jnp.float32) / jnp.float32(STREAM_N)
+    entropy = -jnp.sum(p * jnp.log2(p + jnp.float32(1e-12)))
+    return _digest_pair(entropy, jnp.max(h).astype(jnp.float32))
+
+
+def payload_gzip_compression(seed):
+    """`gzip_compression`: delta encoding + compressibility estimate."""
+    x = datagen.gen_bytes(STREAM_N, seed)
+    # Make the stream locally correlated so deltas are small-ish.
+    x = (x >> jnp.uint32(3)) + (jnp.arange(STREAM_N, dtype=jnp.uint32) >> jnp.uint32(8)) & jnp.uint32(0xFF)
+    d = kernels.delta_compress(x)
+    small = jnp.sum((jnp.abs(d) < 4).astype(jnp.float32))
+    ratio = small / jnp.float32(STREAM_N)
+    return _digest_pair(ratio, jnp.sum(jnp.abs(d)).astype(jnp.float32))
+
+
+def payload_chameleon(seed):
+    """`chameleon`: permutation gathers (template-rendering access pattern)."""
+    x = datagen.gen_u32(STREAM_N, seed)
+    y = kernels.gather_permute(x)
+    y = kernels.gather_permute(y)
+    lo = (y & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    return _digest_pair(jnp.mean(lo), jnp.min(lo))
+
+
+def payload_dd(seed):
+    """`dd`: bulk copy + weighted checksum (file I/O access pattern)."""
+    x = datagen.gen_u32(STREAM_N, seed)
+    c = kernels.strided_checksum(x)
+    c2 = kernels.strided_checksum(x ^ jnp.uint32(0xA5A5A5A5))
+    return _digest_pair(
+        (c[0] & jnp.uint32(0xFFFFFF)).astype(jnp.float32),
+        (c2[0] & jnp.uint32(0xFFFFFF)).astype(jnp.float32),
+    )
+
+
+# Registry: name -> payload. Order matches Table II of the paper.
+PAYLOADS = {
+    "chameleon": payload_chameleon,
+    "float_operation": payload_float_operation,
+    "linpack": payload_linpack,
+    "matmul": payload_matmul,
+    "pyaes": payload_pyaes,
+    "dd": payload_dd,
+    "gzip_compression": payload_gzip_compression,
+    "json_dumps_loads": payload_json_dumps_loads,
+}

@@ -1,0 +1,252 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/block sizes/seeds; fixed cases pin the production
+configurations used by model.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile import kernels
+from compile.kernels import ref
+
+# Hypothesis: moderate case counts — kernels re-trace per shape and this
+# image is single-core.
+FAST = settings(max_examples=12, deadline=None)
+
+
+def _f32(shape, seed):
+    return datagen.gen_f32(shape, jnp.uint32(seed))
+
+
+def _u32(n, seed):
+    return datagen.gen_u32(n, jnp.uint32(seed))
+
+
+# ---------------------------------------------------------------- matmul
+
+class TestMatmul:
+    def test_production_shape(self):
+        x, y = _f32((256, 256), 1), _f32((256, 256), 2)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rectangular(self):
+        x, y = _f32((128, 256), 3), _f32((256, 64), 4)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y, bm=64, bn=64, bk=128),
+            ref.matmul_ref(x, y),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_narrow_rhs(self):
+        # linpack's 64-column RHS case
+        x, y = _f32((256, 256), 5), _f32((256, 64), 6)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y, bn=64), ref.matmul_ref(x, y),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_identity(self):
+        x = _f32((128, 128), 7)
+        eye = jnp.eye(128, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            kernels.matmul(x, eye, bm=64, bn=64, bk=64), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_block_mismatch_raises(self):
+        x, y = _f32((100, 100), 8), _f32((100, 100), 9)
+        with pytest.raises(AssertionError):
+            kernels.matmul(x, y)
+
+    @FAST
+    @given(
+        mi=st.integers(1, 3), ni=st.integers(1, 3), ki=st.integers(1, 3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matmul_property(self, mi, ni, ki, seed):
+        bm = bn = bk = 32
+        m, n, k = mi * bm, ni * bn, ki * bk
+        x, y = _f32((m, k), seed), _f32((k, n), seed + 1)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y, bm=bm, bn=bn, bk=bk),
+            ref.matmul_ref(x, y),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# ----------------------------------------------------------- float_chain
+
+class TestFloatChain:
+    def test_production_shape(self):
+        x = _f32((1 << 17,), 10) * 4.0 - 2.0
+        np.testing.assert_allclose(
+            kernels.float_chain(x), ref.float_chain_ref(x), rtol=1e-5, atol=1e-6
+        )
+
+    def test_zero_input(self):
+        x = jnp.zeros((8192,), jnp.float32)
+        np.testing.assert_allclose(
+            kernels.float_chain(x), ref.float_chain_ref(x), rtol=1e-6, atol=1e-7
+        )
+
+    @FAST
+    @given(
+        blocks=st.integers(1, 4), rounds=st.integers(1, 6),
+        seed=st.integers(0, 2**31),
+    )
+    def test_chain_property(self, blocks, rounds, seed):
+        n = blocks * 2048
+        x = _f32((n,), seed) * 2.0 - 1.0
+        np.testing.assert_allclose(
+            kernels.float_chain(x, block=2048, rounds=rounds),
+            ref.float_chain_ref(x, rounds=rounds),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+# ------------------------------------------------------------ mix_rounds
+
+class TestMixRounds:
+    def test_production_shape(self):
+        x = _u32(1 << 16, 11)
+        np.testing.assert_array_equal(
+            kernels.mix_rounds(x), ref.mix_rounds_ref(x)
+        )
+
+    def test_bit_exact_single_round(self):
+        x = _u32(8192, 12)
+        np.testing.assert_array_equal(
+            kernels.mix_rounds(x, rounds=1), ref.mix_rounds_ref(x, rounds=1)
+        )
+
+    def test_diffusion(self):
+        # Flipping one input bit changes ~half the output bits on average.
+        x = _u32(8192, 13)
+        y1 = np.asarray(kernels.mix_rounds(x))
+        y2 = np.asarray(kernels.mix_rounds(x ^ jnp.uint32(1)))
+        flipped = np.unpackbits((y1 ^ y2).view(np.uint8)).mean()
+        assert 0.4 < flipped < 0.6
+
+    @FAST
+    @given(blocks=st.integers(1, 4), rounds=st.integers(1, 8),
+           seed=st.integers(0, 2**31))
+    def test_mix_property(self, blocks, rounds, seed):
+        x = _u32(blocks * 2048, seed)
+        np.testing.assert_array_equal(
+            kernels.mix_rounds(x, block=2048, rounds=rounds),
+            ref.mix_rounds_ref(x, rounds=rounds),
+        )
+
+
+# ------------------------------------------------------------- histogram
+
+class TestHistogram:
+    def test_production_shape(self):
+        x = datagen.gen_bytes(1 << 16, jnp.uint32(14))
+        np.testing.assert_array_equal(kernels.histogram(x), ref.histogram_ref(x))
+
+    def test_counts_sum_to_n(self):
+        x = datagen.gen_bytes(1 << 15, jnp.uint32(15))
+        assert int(jnp.sum(kernels.histogram(x))) == (1 << 15)
+
+    def test_constant_stream(self):
+        x = jnp.full((8192,), 42, jnp.uint32)
+        h = np.asarray(kernels.histogram(x))
+        assert h[42] == 8192 and h.sum() == 8192
+
+    @FAST
+    @given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31))
+    def test_histogram_property(self, blocks, seed):
+        x = datagen.gen_bytes(blocks * 2048, jnp.uint32(seed))
+        np.testing.assert_array_equal(
+            kernels.histogram(x, block=2048), ref.histogram_ref(x)
+        )
+
+
+# -------------------------------------------------------- delta_compress
+
+class TestDeltaCompress:
+    def test_production_shape(self):
+        x = datagen.gen_bytes(1 << 16, jnp.uint32(16))
+        np.testing.assert_array_equal(
+            kernels.delta_compress(x), ref.delta_compress_ref(x)
+        )
+
+    def test_constant_stream_zero_deltas(self):
+        x = jnp.full((8192,), 7, jnp.uint32)
+        d = np.asarray(kernels.delta_compress(x))
+        assert d[0] == 0 and (d == 0).all()
+
+    def test_ramp(self):
+        x = jnp.arange(8192, dtype=jnp.uint32) & jnp.uint32(0xFF)
+        d = np.asarray(kernels.delta_compress(x))
+        # ramp has delta 1 except at the block start and the 255->0 wraps
+        assert d[0] == 0
+        assert (np.abs(d[1:]) <= 255).all()
+
+    @FAST
+    @given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31))
+    def test_delta_property(self, blocks, seed):
+        x = datagen.gen_bytes(blocks * 2048, jnp.uint32(seed))
+        np.testing.assert_array_equal(
+            kernels.delta_compress(x, block=2048),
+            ref.delta_compress_ref(x, block=2048),
+        )
+
+
+# -------------------------------------------------------- gather_permute
+
+class TestGatherPermute:
+    def test_production_shape(self):
+        x = _u32(1 << 16, 17)
+        np.testing.assert_array_equal(
+            kernels.gather_permute(x), ref.gather_permute_ref(x)
+        )
+
+    def test_values_from_input(self):
+        x = _u32(8192, 18)
+        y = np.asarray(kernels.gather_permute(x))
+        assert set(y.tolist()) <= set(np.asarray(x).tolist())
+
+    @FAST
+    @given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31))
+    def test_gather_property(self, blocks, seed):
+        x = _u32(blocks * 2048, seed)
+        np.testing.assert_array_equal(
+            kernels.gather_permute(x, block=2048),
+            ref.gather_permute_ref(x, block=2048),
+        )
+
+
+# ------------------------------------------------------ strided_checksum
+
+class TestStridedChecksum:
+    def test_production_shape(self):
+        x = _u32(1 << 16, 19)
+        np.testing.assert_array_equal(
+            kernels.strided_checksum(x), ref.strided_checksum_ref(x)
+        )
+
+    def test_zero_stream(self):
+        x = jnp.zeros((8192,), jnp.uint32)
+        assert int(kernels.strided_checksum(x)[0]) == 0
+
+    def test_linearity_mod_2_32(self):
+        x = _u32(8192, 20)
+        c1 = int(kernels.strided_checksum(x)[0])
+        c2 = int(kernels.strided_checksum(x * jnp.uint32(2))[0])
+        assert c2 == (2 * c1) % (1 << 32)
+
+    @FAST
+    @given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31))
+    def test_checksum_property(self, blocks, seed):
+        x = _u32(blocks * 2048, seed)
+        np.testing.assert_array_equal(
+            kernels.strided_checksum(x, block=2048),
+            ref.strided_checksum_ref(x, block=2048),
+        )

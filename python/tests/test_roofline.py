@@ -1,0 +1,42 @@
+"""The L1 performance model must track the kernels' actual configurations."""
+
+from compile import roofline
+from compile import model
+
+
+def test_all_kernels_covered():
+    names = {e.name for e in roofline.all_estimates()}
+    assert names == set(model.PAYLOADS), "roofline must cover every payload"
+
+
+def test_vmem_budgets_respected():
+    for e in roofline.all_estimates():
+        assert e.vmem_ok, f"{e.name} exceeds VMEM: {e.vmem_bytes}"
+
+
+def test_mxu_kernels_are_aligned():
+    m = roofline.estimate_matmul()
+    assert m.tile_efficiency == 1.0, "128-aligned tiles must have full MXU tile efficiency"
+
+
+def test_unaligned_tiles_penalized():
+    bad = roofline.estimate_matmul(bm=130, bn=128, bk=128)
+    assert bad.tile_efficiency < 0.6
+
+
+def test_stream_kernels_bandwidth_bound():
+    for name in ["gzip_compression", "chameleon", "dd"]:
+        e = roofline.estimate_stream(name)
+        assert e.arithmetic_intensity < roofline.RIDGE
+        assert e.est_utilization < 0.05, "stream kernels must be BW-capped"
+
+
+def test_matmul_block_scaling_raises_ai():
+    small = roofline.estimate_matmul(bm=128, bn=128, bk=128)
+    big = roofline.estimate_matmul(bm=256, bn=256, bk=256)
+    assert big.arithmetic_intensity > 1.5 * small.arithmetic_intensity
+
+
+def test_report_renders():
+    text = roofline.report()
+    assert "matmul" in text and "est-util" in text

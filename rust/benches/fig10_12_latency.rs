@@ -1,0 +1,60 @@
+//! Figs 10-12: response latency distribution per scheduler (100 VUs).
+//!
+//! Prints the paper's latency rows (mean + tails + CDF anchor points) and
+//! times the simulator itself (events/s) as the engine-perf metric.
+
+use hiku::config::Config;
+use hiku::report::run_cell;
+use hiku::stats::Samples;
+use std::time::Instant;
+
+const SCHEDS: [&str; 4] = ["hiku", "ch-bl", "random", "least-connections"];
+const RUNS: u64 = 5;
+
+fn main() {
+    let mut base = Config::default();
+    base.workload.duration_s = 120.0;
+
+    println!("# Figs 10-12 — response latencies at 100 VUs ({RUNS} runs x {}s)", 120);
+    println!("  paper Fig 11: pull 481 ms, contenders 565-660 ms (-14.9%..-27.1%)");
+    println!("  paper Fig 12: pull lowest tails, up to -36.4% at p99\n");
+    println!(
+        "{:<20} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "scheduler", "mean(ms)", "p50", "p90", "p95", "p99", "sim-time"
+    );
+
+    let mut hiku_mean = 0.0;
+    for s in SCHEDS {
+        let t0 = Instant::now();
+        let (agg, mut all) = run_cell(&base, s, 100, RUNS).expect("sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let mut pooled = Samples::new();
+        for m in &mut all {
+            for &v in m.latency_ms.values() {
+                pooled.push(v);
+            }
+        }
+        if s == "hiku" {
+            hiku_mean = agg.mean_latency_ms.mean();
+        }
+        println!(
+            "{:<20} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>8.2}s",
+            s,
+            agg.mean_latency_ms.mean(),
+            pooled.percentile(50.0),
+            agg.p90_ms.mean(),
+            agg.p95_ms.mean(),
+            agg.p99_ms.mean(),
+            wall,
+        );
+    }
+    println!();
+    for s in &SCHEDS[1..] {
+        let (agg, _) = run_cell(&base, s, 100, RUNS).expect("sweep");
+        println!(
+            "hiku vs {:<18} {:+.1}% mean latency",
+            s,
+            (hiku_mean - agg.mean_latency_ms.mean()) / agg.mean_latency_ms.mean() * 100.0
+        );
+    }
+}

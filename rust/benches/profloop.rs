@@ -1,0 +1,16 @@
+//! Profiling driver for the §Perf pass: 60 back-to-back 300 s x 100 VU
+//! hiku runs — run under `perf record` to find simulator hot spots.
+//! (Not a reporting bench; prints only the total request count.)
+use hiku::config::Config;
+use hiku::sim::run_once;
+fn main() {
+    let mut cfg = Config::default();
+    cfg.workload.vus = 100;
+    cfg.workload.duration_s = 300.0;
+    cfg.scheduler.name = "hiku".into();
+    let mut total = 0u64;
+    for seed in 0..60 {
+        total += run_once(&cfg, seed).unwrap().completed;
+    }
+    println!("{total}");
+}

@@ -1,0 +1,49 @@
+//! L3 engine performance: simulated-events/s and per-layer cost breakdown.
+//! This is the §Perf before/after bench for the optimization pass.
+
+use hiku::config::Config;
+use hiku::sim::run_once;
+use hiku::workload::loadgen::Workload;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.workload.vus = 100;
+    cfg.workload.duration_s = 300.0;
+
+    // Layer: workload generation.
+    let t0 = Instant::now();
+    let w = Workload::generate(&cfg.workload, 40, 42);
+    let gen_s = t0.elapsed().as_secs_f64();
+    println!(
+        "workload generation: {:.1} ms ({} scripted steps)",
+        gen_s * 1000.0,
+        w.total_steps()
+    );
+
+    // Layer: one full 300 s x 100 VU run per scheduler.
+    for sched in ["hiku", "ch-bl", "random", "least-connections"] {
+        cfg.scheduler.name = sched.into();
+        let t0 = Instant::now();
+        let m = run_once(&cfg, 42).expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        // Events per completed request: arrival + completion + keepalive
+        // (~1 per idle period) — report requests/s and a >=3x event bound.
+        let reqs = m.completed as f64;
+        println!(
+            "{:<20} {:>7.0} requests in {:>6.1} ms  ({:>5.2} M req/s, >= {:>5.2} M events/s)",
+            sched,
+            reqs,
+            wall * 1000.0,
+            reqs / wall / 1e6,
+            3.0 * reqs / wall / 1e6
+        );
+    }
+
+    // Layer: metrics summarization.
+    cfg.scheduler.name = "hiku".into();
+    let mut m = run_once(&cfg, 43).expect("run");
+    let t0 = Instant::now();
+    let _ = m.summary_json();
+    println!("metrics summarization: {:.2} ms", t0.elapsed().as_secs_f64() * 1000.0);
+}

@@ -1,0 +1,54 @@
+//! Table I bench: cold (XLA compile + execute) vs warm (execute) latency
+//! per FunctionBench payload on the real PJRT runtime.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise, so `cargo bench`
+//! stays green on a fresh checkout).
+
+use hiku::bench::Reporter;
+use hiku::runtime::{Engine, Manifest};
+use hiku::stats::OnlineStats;
+use hiku::workload::BASE_APPS;
+use std::time::Instant;
+
+const COLD_RUNS: usize = 5;
+const WARM_RUNS: usize = 40;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("table1_coldstart: artifacts/ not built, skipping (run `make artifacts`)");
+        return;
+    };
+    println!("# Table I — cold vs warm latency, real PJRT ({COLD_RUNS} cold / {WARM_RUNS} warm runs)");
+    let mut rep = Reporter::new(&["app", "cold(ms)", "warm(ms)", "ratio", "paper"]);
+    let mut cold_sum = 0.0;
+    let mut warm_sum = 0.0;
+    for app in BASE_APPS.iter() {
+        let mut cold = OnlineStats::new();
+        for r in 0..COLD_RUNS {
+            let mut e = Engine::new(manifest.clone(), 8).expect("engine");
+            let t0 = Instant::now();
+            let res = e.execute(app.name, r as u32).expect("exec");
+            assert!(res.cold);
+            cold.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        let mut e = Engine::new(manifest.clone(), 8).expect("engine");
+        e.execute(app.name, 0).expect("prime");
+        let mut warm = OnlineStats::new();
+        for r in 0..WARM_RUNS {
+            let t0 = Instant::now();
+            let res = e.execute(app.name, r as u32).expect("exec");
+            assert!(!res.cold);
+            warm.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        cold_sum += cold.mean();
+        warm_sum += warm.mean();
+        rep.row(&[
+            app.name.to_string(),
+            format!("{:.1}", cold.mean()),
+            format!("{:.2}", warm.mean()),
+            format!("{:.1}x", cold.mean() / warm.mean()),
+            format!("{:.0}/{:.0}", app.cold_ms, app.warm_ms),
+        ]);
+    }
+    println!("\nmean cold/warm slowdown: {:.2}x (paper: 1.79x)", cold_sum / warm_sum);
+}

@@ -1,0 +1,179 @@
+//! Miniature benchmark harness (no criterion vendored in this image).
+//!
+//! Provides criterion-like ergonomics for the `rust/benches/*` targets
+//! (declared with `harness = false`): warmup, calibrated iteration counts,
+//! mean/std/min reporting in adaptive units, and a `Reporter` that prints
+//! paper-style table rows. Wall-clock timing via `std::time::Instant`.
+
+use crate::stats::OnlineStats;
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bench {
+    /// Target wall time per measurement phase.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    /// Number of sample batches for std estimation.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(600),
+            warmup_time: Duration::from_millis(150),
+            samples: 12,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    /// Quick preset for long-running end-to-end benches (few iterations).
+    pub fn coarse() -> Self {
+        Self {
+            measure_time: Duration::from_millis(1500),
+            warmup_time: Duration::ZERO,
+            samples: 3,
+        }
+    }
+
+    /// Measure `f`, returning timing stats. `f` is called repeatedly; use
+    /// `std::hint::black_box` inside to defeat DCE.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + per-iteration estimate.
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup_time || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_ns = (wstart.elapsed().as_nanos() as f64 / warm_iters as f64).max(0.5);
+
+        // Batch size so each sample lasts measure_time/samples.
+        let per_sample_ns = self.measure_time.as_nanos() as f64 / self.samples as f64;
+        let batch = ((per_sample_ns / est_ns).ceil() as u64).max(1);
+
+        let mut stats = OnlineStats::new();
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+            stats.push(ns);
+            total_iters += batch;
+        }
+        Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats.mean(),
+            std_ns: stats.std(),
+            min_ns: stats.min(),
+        }
+    }
+
+    /// Measure and print in one call.
+    pub fn report<F: FnMut()>(&self, name: &str, f: F) -> Measurement {
+        let m = self.run(name, f);
+        println!(
+            "{:<44} {:>12} +/- {:>10}  (min {:>10}, {} iters)",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.std_ns),
+            fmt_ns(m.min_ns),
+            m.iters
+        );
+        m
+    }
+}
+
+/// Table printer for paper-figure benches: aligned columns, a header, and
+/// a trailing comparison against a baseline row.
+pub struct Reporter {
+    header_printed: bool,
+    columns: Vec<String>,
+}
+
+impl Reporter {
+    pub fn new(columns: &[&str]) -> Self {
+        Self {
+            header_printed: false,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        if !self.header_printed {
+            let head: Vec<String> = self.columns.iter().map(|c| format!("{c:>14}")).collect();
+            println!("{}", head.join(" "));
+            self.header_printed = true;
+        }
+        let row: Vec<String> = cells.iter().map(|c| format!("{c:>14}")).collect();
+        println!("{}", row.join(" "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bench {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            samples: 3,
+        };
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(m.mean_ns > 0.0 && m.mean_ns < 1_000_000.0, "{:?}", m);
+        assert!(m.iters > 0);
+        assert!(m.min_ns <= m.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("us"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with(" s"));
+    }
+}

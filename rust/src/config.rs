@@ -1,0 +1,450 @@
+//! Typed configuration system: JSON file + `--set path.key=value` overrides.
+//!
+//! Mirrors the paper's experimental setup (§V-A) in its defaults: 5 workers,
+//! 40 functions (8 FunctionBench types × 5 copies), 20/50/100 virtual users,
+//! 5-minute runs, CH-BL load threshold 1.25, think time U(0.1 s, 1 s).
+
+use crate::util::json::{obj, Json};
+use std::fmt;
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Cluster topology and worker resources.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of workers (paper: 5 OpenLambda workers).
+    pub workers: usize,
+    /// Per-worker sandbox memory pool in MB. Calibrated (see EXPERIMENTS.md
+    /// §Calibration) so the cold-start regime matches the paper's Fig 13:
+    /// busy sandboxes at 100 VUs occupy most of the pool and idle
+    /// sandboxes churn under pressure, yielding ~25-30% cold starts for
+    /// Hiku and 40-60% for the baselines.
+    pub mem_mb: u64,
+    /// Concurrent executions per worker (m5.xlarge: 4 vCPUs).
+    pub concurrency: usize,
+    /// Keep-alive: idle sandboxes are evicted after this many seconds.
+    pub keep_alive_s: f64,
+    /// Elastic workers (OpenLambda-like): requests start immediately and
+    /// vCPUs are time-shared (congestion multiplier); false = hard FIFO
+    /// admission queue at `concurrency` slots (ablation mode).
+    pub elastic: bool,
+    /// Predictive pre-warming (extension, cf. Kim & Roh [24]): each second
+    /// the platform compares per-function demand estimates against warm
+    /// supply and speculatively initializes sandboxes for the deficit.
+    pub prewarm: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 5,
+            mem_mb: 3584,
+            concurrency: 4,
+            keep_alive_s: 20.0,
+            elastic: true,
+            prewarm: false,
+        }
+    }
+}
+
+/// Workload shape (§V-A "Workload"/"Execution").
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Distinct FunctionBench applications (Table II).
+    pub base_functions: usize,
+    /// Copies per application ("5 identical copies with unique names").
+    pub copies: usize,
+    /// Virtual users (paper sweeps 20/50/100).
+    pub vus: usize,
+    /// Run duration in (virtual) seconds.
+    pub duration_s: f64,
+    /// Think-time bounds between invocations per VU.
+    pub think_min_s: f64,
+    pub think_max_s: f64,
+    /// Zipf exponent for Azure-like popularity skew.
+    pub zipf_s: f64,
+    /// Experiment seed (identical across schedulers within a run).
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            base_functions: 8,
+            copies: 5,
+            vus: 100,
+            duration_s: 300.0,
+            think_min_s: 0.1,
+            think_max_s: 1.0,
+            zipf_s: 2.05,
+            seed: 42,
+        }
+    }
+}
+
+/// Scheduler selection and algorithm parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// One of: hiku, least-connections, random, hash-mod, consistent,
+    /// ch-bl, rj-ch, jsq, power-of-d.
+    pub name: String,
+    /// CH-BL load threshold c (paper uses the recommended 1.25).
+    pub ch_bl_c: f64,
+    /// Virtual nodes per worker on the hash ring.
+    pub vnodes: usize,
+    /// d for power-of-d-choices.
+    pub power_d: usize,
+    /// Independent scheduler instances (distributed scheduling ablation;
+    /// VUs are sharded across instances, no synchronization between them).
+    pub instances: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { name: "hiku".into(), ch_bl_c: 1.25, vnodes: 100, power_d: 2, instances: 1 }
+    }
+}
+
+/// PJRT runtime settings (real-time serving mode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    /// Extra sandbox-initialization latency added to a real cold start, in
+    /// ms (models container/runtime startup on top of XLA compilation).
+    pub cold_extra_ms: f64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { artifacts_dir: "artifacts".into(), cold_extra_ms: 0.0 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub scheduler: SchedulerConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl Config {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "cluster",
+                obj(vec![
+                    ("workers", self.cluster.workers.into()),
+                    ("mem_mb", self.cluster.mem_mb.into()),
+                    ("concurrency", self.cluster.concurrency.into()),
+                    ("keep_alive_s", self.cluster.keep_alive_s.into()),
+                    ("elastic", self.cluster.elastic.into()),
+                    ("prewarm", self.cluster.prewarm.into()),
+                ]),
+            ),
+            (
+                "workload",
+                obj(vec![
+                    ("base_functions", self.workload.base_functions.into()),
+                    ("copies", self.workload.copies.into()),
+                    ("vus", self.workload.vus.into()),
+                    ("duration_s", self.workload.duration_s.into()),
+                    ("think_min_s", self.workload.think_min_s.into()),
+                    ("think_max_s", self.workload.think_max_s.into()),
+                    ("zipf_s", self.workload.zipf_s.into()),
+                    ("seed", self.workload.seed.into()),
+                ]),
+            ),
+            (
+                "scheduler",
+                obj(vec![
+                    ("name", self.scheduler.name.as_str().into()),
+                    ("ch_bl_c", self.scheduler.ch_bl_c.into()),
+                    ("vnodes", self.scheduler.vnodes.into()),
+                    ("power_d", self.scheduler.power_d.into()),
+                    ("instances", self.scheduler.instances.into()),
+                ]),
+            ),
+            (
+                "runtime",
+                obj(vec![
+                    ("artifacts_dir", self.runtime.artifacts_dir.as_str().into()),
+                    ("cold_extra_ms", self.runtime.cold_extra_ms.into()),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let missing = |p: &str| ConfigError(format!("bad or missing field {p}"));
+        if let Some(c) = j.get("cluster") {
+            if let Some(v) = c.get("workers") {
+                cfg.cluster.workers = v.as_u64().ok_or_else(|| missing("cluster.workers"))? as usize;
+            }
+            if let Some(v) = c.get("mem_mb") {
+                cfg.cluster.mem_mb = v.as_u64().ok_or_else(|| missing("cluster.mem_mb"))?;
+            }
+            if let Some(v) = c.get("concurrency") {
+                cfg.cluster.concurrency =
+                    v.as_u64().ok_or_else(|| missing("cluster.concurrency"))? as usize;
+            }
+            if let Some(v) = c.get("keep_alive_s") {
+                cfg.cluster.keep_alive_s =
+                    v.as_f64().ok_or_else(|| missing("cluster.keep_alive_s"))?;
+            }
+            if let Some(v) = c.get("elastic") {
+                cfg.cluster.elastic = v.as_bool().ok_or_else(|| missing("cluster.elastic"))?;
+            }
+            if let Some(v) = c.get("prewarm") {
+                cfg.cluster.prewarm = v.as_bool().ok_or_else(|| missing("cluster.prewarm"))?;
+            }
+        }
+        if let Some(w) = j.get("workload") {
+            if let Some(v) = w.get("base_functions") {
+                cfg.workload.base_functions =
+                    v.as_u64().ok_or_else(|| missing("workload.base_functions"))? as usize;
+            }
+            if let Some(v) = w.get("copies") {
+                cfg.workload.copies = v.as_u64().ok_or_else(|| missing("workload.copies"))? as usize;
+            }
+            if let Some(v) = w.get("vus") {
+                cfg.workload.vus = v.as_u64().ok_or_else(|| missing("workload.vus"))? as usize;
+            }
+            if let Some(v) = w.get("duration_s") {
+                cfg.workload.duration_s = v.as_f64().ok_or_else(|| missing("workload.duration_s"))?;
+            }
+            if let Some(v) = w.get("think_min_s") {
+                cfg.workload.think_min_s =
+                    v.as_f64().ok_or_else(|| missing("workload.think_min_s"))?;
+            }
+            if let Some(v) = w.get("think_max_s") {
+                cfg.workload.think_max_s =
+                    v.as_f64().ok_or_else(|| missing("workload.think_max_s"))?;
+            }
+            if let Some(v) = w.get("zipf_s") {
+                cfg.workload.zipf_s = v.as_f64().ok_or_else(|| missing("workload.zipf_s"))?;
+            }
+            if let Some(v) = w.get("seed") {
+                cfg.workload.seed = v.as_u64().ok_or_else(|| missing("workload.seed"))?;
+            }
+        }
+        if let Some(s) = j.get("scheduler") {
+            if let Some(v) = s.get("name") {
+                cfg.scheduler.name =
+                    v.as_str().ok_or_else(|| missing("scheduler.name"))?.to_string();
+            }
+            if let Some(v) = s.get("ch_bl_c") {
+                cfg.scheduler.ch_bl_c = v.as_f64().ok_or_else(|| missing("scheduler.ch_bl_c"))?;
+            }
+            if let Some(v) = s.get("vnodes") {
+                cfg.scheduler.vnodes =
+                    v.as_u64().ok_or_else(|| missing("scheduler.vnodes"))? as usize;
+            }
+            if let Some(v) = s.get("power_d") {
+                cfg.scheduler.power_d =
+                    v.as_u64().ok_or_else(|| missing("scheduler.power_d"))? as usize;
+            }
+            if let Some(v) = s.get("instances") {
+                cfg.scheduler.instances =
+                    v.as_u64().ok_or_else(|| missing("scheduler.instances"))? as usize;
+            }
+        }
+        if let Some(r) = j.get("runtime") {
+            if let Some(v) = r.get("artifacts_dir") {
+                cfg.runtime.artifacts_dir =
+                    v.as_str().ok_or_else(|| missing("runtime.artifacts_dir"))?.to_string();
+            }
+            if let Some(v) = r.get("cold_extra_ms") {
+                cfg.runtime.cold_extra_ms =
+                    v.as_f64().ok_or_else(|| missing("runtime.cold_extra_ms"))?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("reading {path}: {e}")))?;
+        let j = Json::parse(&text).map_err(|e| ConfigError(format!("parsing {path}: {e}")))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply `path.key=value` overrides (the `--set` CLI mechanism).
+    pub fn apply_override(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let (path, value) = kv
+            .split_once('=')
+            .ok_or_else(|| ConfigError(format!("override '{kv}' is not path=value")))?;
+        let bad = |p: &str, v: &str| ConfigError(format!("bad value '{v}' for {p}"));
+        match path {
+            "cluster.workers" => {
+                self.cluster.workers = value.parse().map_err(|_| bad(path, value))?
+            }
+            "cluster.mem_mb" => self.cluster.mem_mb = value.parse().map_err(|_| bad(path, value))?,
+            "cluster.concurrency" => {
+                self.cluster.concurrency = value.parse().map_err(|_| bad(path, value))?
+            }
+            "cluster.keep_alive_s" => {
+                self.cluster.keep_alive_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "cluster.elastic" => {
+                self.cluster.elastic = value.parse().map_err(|_| bad(path, value))?
+            }
+            "cluster.prewarm" => {
+                self.cluster.prewarm = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.base_functions" => {
+                self.workload.base_functions = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.copies" => {
+                self.workload.copies = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.vus" => self.workload.vus = value.parse().map_err(|_| bad(path, value))?,
+            "workload.duration_s" => {
+                self.workload.duration_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.think_min_s" => {
+                self.workload.think_min_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.think_max_s" => {
+                self.workload.think_max_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.zipf_s" => {
+                self.workload.zipf_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "workload.seed" => self.workload.seed = value.parse().map_err(|_| bad(path, value))?,
+            "scheduler.name" => self.scheduler.name = value.to_string(),
+            "scheduler.ch_bl_c" => {
+                self.scheduler.ch_bl_c = value.parse().map_err(|_| bad(path, value))?
+            }
+            "scheduler.vnodes" => {
+                self.scheduler.vnodes = value.parse().map_err(|_| bad(path, value))?
+            }
+            "scheduler.power_d" => {
+                self.scheduler.power_d = value.parse().map_err(|_| bad(path, value))?
+            }
+            "scheduler.instances" => {
+                self.scheduler.instances = value.parse().map_err(|_| bad(path, value))?
+            }
+            "runtime.artifacts_dir" => self.runtime.artifacts_dir = value.to_string(),
+            "runtime.cold_extra_ms" => {
+                self.runtime.cold_extra_ms = value.parse().map_err(|_| bad(path, value))?
+            }
+            _ => return Err(ConfigError(format!("unknown config path '{path}'"))),
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: &str| Err(ConfigError(m.to_string()));
+        if self.cluster.workers == 0 {
+            return e("cluster.workers must be >= 1");
+        }
+        if self.cluster.concurrency == 0 {
+            return e("cluster.concurrency must be >= 1");
+        }
+        if self.cluster.keep_alive_s <= 0.0 {
+            return e("cluster.keep_alive_s must be > 0");
+        }
+        if self.workload.base_functions == 0 || self.workload.copies == 0 {
+            return e("workload must define at least one function");
+        }
+        if self.workload.think_min_s < 0.0 || self.workload.think_max_s < self.workload.think_min_s
+        {
+            return e("workload think time range invalid");
+        }
+        if self.workload.duration_s <= 0.0 {
+            return e("workload.duration_s must be > 0");
+        }
+        if self.scheduler.ch_bl_c < 1.0 {
+            return e("scheduler.ch_bl_c must be >= 1.0");
+        }
+        if self.scheduler.vnodes == 0 {
+            return e("scheduler.vnodes must be >= 1");
+        }
+        if self.scheduler.power_d == 0 {
+            return e("scheduler.power_d must be >= 1");
+        }
+        if self.scheduler.instances == 0 {
+            return e("scheduler.instances must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Total distinct function types in the workload.
+    pub fn num_functions(&self) -> usize {
+        self.workload.base_functions * self.workload.copies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.cluster.workers, 5);
+        assert_eq!(c.num_functions(), 40);
+        assert_eq!(c.scheduler.ch_bl_c, 1.25);
+        assert_eq!(c.workload.duration_s, 300.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::default();
+        c.cluster.workers = 9;
+        c.scheduler.name = "ch-bl".into();
+        c.workload.vus = 50;
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::default();
+        c.apply_override("cluster.workers=10").unwrap();
+        c.apply_override("scheduler.name=random").unwrap();
+        c.apply_override("workload.zipf_s=1.1").unwrap();
+        assert_eq!(c.cluster.workers, 10);
+        assert_eq!(c.scheduler.name, "random");
+        assert_eq!(c.workload.zipf_s, 1.1);
+        assert!(c.apply_override("nope=1").is_err());
+        assert!(c.apply_override("cluster.workers=abc").is_err());
+        assert!(c.apply_override("cluster.workers").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = Config::default();
+        c.cluster.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.scheduler.ch_bl_c = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.workload.think_max_s = 0.01;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"cluster": {"workers": 3}}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.cluster.workers, 3);
+        assert_eq!(c.workload.vus, WorkloadConfig::default().vus);
+    }
+}

@@ -1,0 +1,29 @@
+//! # Hiku: pull-based scheduling for serverless computing
+//!
+//! A full reproduction of "Hiku: Pull-Based Scheduling for Serverless
+//! Computing" (Akbari & Hauswirth, CCGRID 2025) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! - [`scheduler`] — the paper's contribution: Hiku (Algorithm 1) plus all
+//!   baseline scheduling algorithms.
+//! - [`platform`] — the FaaS substrate: workers, sandboxes, keep-alive.
+//! - [`workload`] — FunctionBench registry, Azure-like traces, load gen.
+//! - [`sim`] — deterministic discrete-event simulator (the paper's cluster
+//!   experiments, Figs 10-17).
+//! - [`runtime`]/[`server`] — PJRT-backed real-time serving of the AOT
+//!   compiled payloads (end-to-end validation).
+
+pub mod bench;
+pub mod config;
+pub mod logging;
+pub mod platform;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,111 @@
+//! Leveled logger (no `log`/`env_logger` wiring needed on the hot path).
+//!
+//! The level is a process-global atomic read with Relaxed ordering, so a
+//! disabled log site costs one load + branch. Set via `HIKU_LOG`
+//! (error|warn|info|debug|trace) or programmatically with `set_level`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialize from HIKU_LOG if set. Idempotent.
+pub fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("HIKU_LOG") {
+            if let Some(l) = Level::from_str(&v) {
+                set_level(l);
+            }
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}: {}", l.name(), target, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, $target, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::from_str("info"), Some(Level::Info));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,272 @@
+//! `hiku` — the launcher binary.
+//!
+//! Subcommands:
+//!   sim      run one simulated experiment (one scheduler, one seed)
+//!   sweep    run the paper's evaluation sweep (schedulers x seeds x VUs)
+//!   trace    synthesize + analyze an Azure-like trace (Figs 4-6)
+//!   serve    real-time serving demo on the PJRT runtime (AOT artifacts)
+//!   config   print the default config as JSON
+//!
+//! Examples:
+//!   hiku sim --scheduler hiku --vus 100 --duration 300 --seed 42
+//!   hiku sweep --runs 5 --vu-levels 20,50,100
+//!   hiku trace --universe 10000 --minutes 30
+//!   hiku serve --scheduler hiku --requests 200
+
+use hiku::config::Config;
+use hiku::logging;
+use hiku::util::cli::Cli;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let code = match cmd {
+        "sim" => cmd_sim(rest),
+        "sweep" => cmd_sweep(rest),
+        "trace" => cmd_trace(rest),
+        "serve" => cmd_serve(rest),
+        "config" => cmd_config(rest),
+        "export" => cmd_export(rest),
+        "" | "--help" | "-h" | "help" => {
+            eprintln!(
+                "hiku — pull-based scheduling for serverless computing (CCGRID'25 reproduction)\n\n\
+                 USAGE:\n  hiku <sim|sweep|trace|serve|config|export> [OPTIONS]\n\n\
+                 Run `hiku <subcommand> --help` for options."
+            );
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}' (try --help)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Shared config-building options.
+fn config_cli(cli: Cli) -> Cli {
+    cli.opt("config", None, "JSON config file")
+        .opt("set", None, "comma-separated path=value overrides")
+        .opt("scheduler", None, "scheduler name (overrides config)")
+        .opt("vus", None, "virtual users")
+        .opt("duration", None, "run duration in seconds")
+        .opt("workers", None, "number of workers")
+        .opt("seed", None, "experiment seed")
+}
+
+fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path).map_err(|e| e.to_string())?,
+        None => Config::default(),
+    };
+    for kv in args.parse_list("set") {
+        cfg.apply_override(&kv).map_err(|e| e.to_string())?;
+    }
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler.name = s.to_string();
+    }
+    if let Some(v) = args.get("vus") {
+        cfg.workload.vus = v.parse().map_err(|_| "--vus: integer expected".to_string())?;
+    }
+    if let Some(v) = args.get("duration") {
+        cfg.workload.duration_s =
+            v.parse().map_err(|_| "--duration: number expected".to_string())?;
+    }
+    if let Some(v) = args.get("workers") {
+        cfg.cluster.workers =
+            v.parse().map_err(|_| "--workers: integer expected".to_string())?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_sim(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new("hiku sim", "run one simulated experiment"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let cfg = match build_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match hiku::sim::run_once(&cfg, cfg.workload.seed) {
+        Ok(mut m) => {
+            println!("{}", m.summary_json().to_string_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new("hiku sweep", "paper evaluation sweep"))
+        .opt("runs", Some("5"), "seeded runs per scheduler")
+        .opt("vu-levels", Some("20,50,100"), "VU levels (comma-separated)")
+        .opt("schedulers", Some("hiku,ch-bl,random,least-connections"), "schedulers to sweep");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let base = match build_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let runs = args.parse_u64("runs").unwrap_or(5);
+    let vu_levels: Vec<usize> =
+        args.parse_list("vu-levels").iter().filter_map(|v| v.parse().ok()).collect();
+    let schedulers = args.parse_list("schedulers");
+    match hiku::report::evaluation_report(&base, &schedulers, &vu_levels, runs) {
+        Ok(text) => {
+            println!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_trace(argv: &[String]) -> i32 {
+    let cli = Cli::new("hiku trace", "synthesize + analyze an Azure-like trace (Figs 4-6)")
+        .opt("universe", Some("10000"), "functions in the universe")
+        .opt("minutes", Some("30"), "trace duration in minutes")
+        .opt("seed", Some("42"), "trace seed");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let universe = args.parse_usize("universe").unwrap_or(10_000);
+    let minutes = args.parse_f64("minutes").unwrap_or(30.0);
+    let seed = args.parse_u64("seed").unwrap_or(42);
+    println!("{}", hiku::report::trace_report(universe, minutes * 60.0, seed));
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new("hiku serve", "real-time PJRT serving demo"))
+        .opt("requests", Some("100"), "requests to issue");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let cfg = match build_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let requests = args.parse_u64("requests").unwrap_or(100) as usize;
+    match hiku::server::serve_n_requests(&cfg, requests) {
+        Ok(mut m) => {
+            println!("{}", m.summary_json().to_string_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_export(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new("hiku export", "dump figure series as CSV for plotting"))
+        .opt("runs", Some("5"), "seeded runs per scheduler")
+        .opt("out-dir", Some("figures"), "output directory")
+        .opt("schedulers", Some("hiku,ch-bl,random,least-connections"), "schedulers");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let cfg = match build_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let runs = args.parse_u64("runs").unwrap_or(5);
+    let out_dir = args.get_or("out-dir", "figures").to_string();
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("error: creating {out_dir}: {e}");
+        return 1;
+    }
+    let mut all: Vec<(String, Vec<hiku::metrics::RunMetrics>)> = Vec::new();
+    for s in args.parse_list("schedulers") {
+        match hiku::report::run_cell(&cfg, &s, cfg.workload.vus, runs) {
+            Ok((_, rs)) => all.push((s, rs)),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    use hiku::report::export;
+    let files = [
+        ("fig10_latency_cdf.csv", export::latency_cdf_csv(&mut all, 100)),
+        ("fig14_cv_series.csv", export::cv_series_csv(&all)),
+        ("fig16_cumulative.csv", export::cumulative_csv(&all)),
+        ("summary.csv", export::summary_csv(&mut all)),
+    ];
+    for (name, content) in files {
+        let path = format!("{out_dir}/{name}");
+        if let Err(e) = std::fs::write(&path, content) {
+            eprintln!("error: writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_config(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new("hiku config", "print effective config as JSON"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    match build_config(&args) {
+        Ok(c) => {
+            println!("{}", c.to_json().to_string_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Per-run metric collection and summaries — one struct per experiment run,
+//! producing exactly the quantities the paper's figures report.
+
+use crate::stats::{LoadImbalance, OnlineStats, Samples, TimeSeries};
+use crate::util::json::{obj, Json};
+
+/// Collected during a run (sim or real-time).
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub scheduler: String,
+    pub vus: usize,
+    /// Response latencies in ms (arrival -> response), all completed requests.
+    pub latency_ms: Samples,
+    /// Response latencies split by cold/warm (Table I reproduction).
+    pub latency_cold_ms: Samples,
+    pub latency_warm_ms: Samples,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    /// Requests assigned per worker per second (Figs 14/15).
+    pub imbalance: LoadImbalance,
+    /// Completions per second (Figs 16/17).
+    pub throughput: TimeSeries,
+    /// Cold starts per second (windowed cold-rate analysis, e.g. around
+    /// auto-scaling events).
+    pub cold_series: TimeSeries,
+    /// Worker-queue delay (scheduling quality diagnostic).
+    pub queue_delay_ms: OnlineStats,
+    pub duration_s: f64,
+    pub completed: u64,
+    pub issued: u64,
+}
+
+impl RunMetrics {
+    pub fn new(scheduler: &str, workers: usize, vus: usize, duration_s: f64) -> Self {
+        Self {
+            scheduler: scheduler.to_string(),
+            vus,
+            latency_ms: Samples::new(),
+            latency_cold_ms: Samples::new(),
+            latency_warm_ms: Samples::new(),
+            cold_starts: 0,
+            warm_starts: 0,
+            imbalance: LoadImbalance::new(workers, 1.0),
+            throughput: TimeSeries::new(1.0),
+            cold_series: TimeSeries::new(1.0),
+            queue_delay_ms: OnlineStats::new(),
+            duration_s,
+            completed: 0,
+            issued: 0,
+        }
+    }
+
+    pub fn record_assignment(&mut self, worker: usize, t: f64) {
+        self.imbalance.record_assignment(worker, t);
+        self.issued += 1;
+    }
+
+    pub fn record_response(
+        &mut self,
+        latency_s: f64,
+        cold: bool,
+        queue_delay_s: f64,
+        t: f64,
+    ) {
+        let ms = latency_s * 1000.0;
+        self.latency_ms.push(ms);
+        if cold {
+            self.cold_starts += 1;
+            self.latency_cold_ms.push(ms);
+            self.cold_series.increment(t.min(self.duration_s * 1.999));
+        } else {
+            self.warm_starts += 1;
+            self.latency_warm_ms.push(ms);
+        }
+        self.queue_delay_ms.push(queue_delay_s * 1000.0);
+        self.throughput.increment(t.min(self.duration_s * 1.999));
+        self.completed += 1;
+    }
+
+    // ---- derived quantities (the paper's reported metrics) --------------
+
+    /// Fraction of requests that experienced a cold start (Fig 13).
+    pub fn cold_rate(&self) -> f64 {
+        let total = self.cold_starts + self.warm_starts;
+        if total == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / total as f64
+        }
+    }
+
+    /// Mean response latency in ms (Fig 11).
+    pub fn mean_latency_ms(&mut self) -> f64 {
+        self.latency_ms.mean()
+    }
+
+    /// Tail latency percentile in ms (Fig 12).
+    pub fn latency_percentile_ms(&mut self, p: f64) -> f64 {
+        self.latency_ms.percentile(p)
+    }
+
+    /// Average CV of per-worker assignment rate (Fig 15).
+    pub fn mean_cv(&self) -> f64 {
+        self.imbalance.mean_cv()
+    }
+
+    /// Completed requests per second over the run (Fig 17).
+    pub fn rps(&self) -> f64 {
+        self.completed as f64 / self.duration_s
+    }
+
+    /// Summary as JSON (dumped by the CLI for external plotting).
+    pub fn summary_json(&mut self) -> Json {
+        let mean = self.mean_latency_ms();
+        let p50 = self.latency_percentile_ms(50.0);
+        let p90 = self.latency_percentile_ms(90.0);
+        let p95 = self.latency_percentile_ms(95.0);
+        let p99 = self.latency_percentile_ms(99.0);
+        obj(vec![
+            ("scheduler", self.scheduler.as_str().into()),
+            ("vus", self.vus.into()),
+            ("completed", self.completed.into()),
+            ("issued", self.issued.into()),
+            ("mean_latency_ms", mean.into()),
+            ("p50_ms", p50.into()),
+            ("p90_ms", p90.into()),
+            ("p95_ms", p95.into()),
+            ("p99_ms", p99.into()),
+            ("cold_rate", self.cold_rate().into()),
+            ("cold_starts", self.cold_starts.into()),
+            ("warm_starts", self.warm_starts.into()),
+            ("mean_cv", self.mean_cv().into()),
+            ("rps", self.rps().into()),
+            ("mean_queue_delay_ms", self.queue_delay_ms.mean().into()),
+        ])
+    }
+}
+
+/// Aggregate over the paper's 20 repeated runs: mean of each scalar metric.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub mean_latency_ms: OnlineStats,
+    pub p90_ms: OnlineStats,
+    pub p95_ms: OnlineStats,
+    pub p99_ms: OnlineStats,
+    pub cold_rate: OnlineStats,
+    pub mean_cv: OnlineStats,
+    pub completed: OnlineStats,
+    pub rps: OnlineStats,
+}
+
+impl Aggregate {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn add(&mut self, run: &mut RunMetrics) {
+        self.mean_latency_ms.push(run.mean_latency_ms());
+        self.p90_ms.push(run.latency_percentile_ms(90.0));
+        self.p95_ms.push(run.latency_percentile_ms(95.0));
+        self.p99_ms.push(run.latency_percentile_ms(99.0));
+        self.cold_rate.push(run.cold_rate());
+        self.mean_cv.push(run.mean_cv());
+        self.completed.push(run.completed as f64);
+        self.rps.push(run.rps());
+    }
+
+    pub fn runs(&self) -> u64 {
+        self.mean_latency_ms.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_derive() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 10.0);
+        m.record_assignment(0, 0.5);
+        m.record_assignment(1, 0.6);
+        m.record_response(0.100, true, 0.0, 1.0);
+        m.record_response(0.050, false, 0.01, 2.0);
+        assert_eq!(m.completed, 2);
+        assert!((m.cold_rate() - 0.5).abs() < 1e-12);
+        assert!((m.mean_latency_ms() - 75.0).abs() < 1e-9);
+        assert!((m.rps() - 0.2).abs() < 1e-12);
+        let j = m.summary_json();
+        assert_eq!(j.get("cold_starts").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn aggregate_over_runs() {
+        let mut agg = Aggregate::new();
+        for seed in 0..3 {
+            let mut m = RunMetrics::new("x", 2, 10, 10.0);
+            m.record_response(0.1 * (seed + 1) as f64, seed == 0, 0.0, 1.0);
+            agg.add(&mut m);
+        }
+        assert_eq!(agg.runs(), 3);
+        assert!((agg.mean_latency_ms.mean() - 200.0).abs() < 1e-9);
+        assert!((agg.cold_rate.mean() - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

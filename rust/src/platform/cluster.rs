@@ -1,0 +1,106 @@
+//! Cluster: the set of workers plus cluster-wide inspection helpers that
+//! the schedulers consume (load vectors, idle-instance views).
+
+use super::worker::{Worker, WorkerId};
+use crate::config::ClusterConfig;
+use crate::workload::spec::FunctionId;
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub workers: Vec<Worker>,
+}
+
+impl Cluster {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let workers = (0..cfg.workers)
+            .map(|id| Worker::new(id, cfg.mem_mb, cfg.concurrency))
+            .collect();
+        Self { workers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn worker(&self, id: WorkerId) -> &Worker {
+        &self.workers[id]
+    }
+
+    pub fn worker_mut(&mut self, id: WorkerId) -> &mut Worker {
+        &mut self.workers[id]
+    }
+
+    /// Per-worker load snapshot (running + queued).
+    pub fn loads(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.load()).collect()
+    }
+
+    /// Workers that currently hold an idle sandbox for `f`.
+    pub fn workers_with_idle(&self, f: FunctionId) -> Vec<WorkerId> {
+        self.workers.iter().filter(|w| w.has_idle(f)).map(|w| w.id).collect()
+    }
+
+    /// Aggregate cold/warm/eviction counters across workers.
+    pub fn totals(&self) -> ClusterTotals {
+        let mut t = ClusterTotals::default();
+        for w in &self.workers {
+            t.cold += w.total_cold;
+            t.warm += w.total_warm;
+            t.evictions_pressure += w.total_evictions_pressure;
+            t.evictions_keepalive += w.total_evictions_keepalive;
+        }
+        t
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClusterTotals {
+    pub cold: u64,
+    pub warm: u64,
+    pub evictions_pressure: u64,
+    pub evictions_keepalive: u64,
+}
+
+impl ClusterTotals {
+    pub fn cold_rate(&self) -> f64 {
+        let total = self.cold + self.warm;
+        if total == 0 {
+            0.0
+        } else {
+            self.cold as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::worker::AssignOutcome;
+
+    #[test]
+    fn cluster_construction() {
+        let c = Cluster::new(&ClusterConfig::default());
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.loads(), vec![0; 5]);
+    }
+
+    #[test]
+    fn totals_and_idle_views() {
+        let mut c = Cluster::new(&ClusterConfig { workers: 2, ..Default::default() });
+        let info = match c.worker_mut(0).assign(1, 3, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(c.workers_with_idle(3), Vec::<usize>::new());
+        c.worker_mut(0).complete(info.sandbox, 1.0);
+        assert_eq!(c.workers_with_idle(3), vec![0]);
+        let t = c.totals();
+        assert_eq!(t.cold, 1);
+        assert_eq!(t.warm, 0);
+        assert!((t.cold_rate() - 1.0).abs() < 1e-12);
+    }
+}

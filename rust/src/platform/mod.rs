@@ -1,0 +1,12 @@
+//! FaaS platform substrate: workers, sandboxes, memory pools, eviction.
+//!
+//! This is the OpenLambda-equivalent the paper runs on (see Fig 1/Fig 2 of
+//! the paper and DESIGN.md §2 for the substitution argument).
+
+pub mod cluster;
+pub mod sandbox;
+pub mod worker;
+
+pub use cluster::{Cluster, ClusterTotals};
+pub use sandbox::{Sandbox, SandboxId, SandboxState};
+pub use worker::{AssignOutcome, EvictReason, QueuedRequest, StartInfo, Worker, WorkerId};

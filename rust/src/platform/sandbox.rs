@@ -1,0 +1,122 @@
+//! Sandbox: one virtualized execution environment for one function type.
+//!
+//! Implements the lifecycle of Fig 2 in the paper: a sandbox is created on a
+//! cold start (initializing -> busy), becomes idle after execution, can be
+//! reused by requests of the *same function type only* (warm start), and is
+//! evicted after the keep-alive timeout or under memory pressure.
+
+use crate::workload::spec::FunctionId;
+
+pub type SandboxId = u64;
+
+/// Sandbox lifecycle states (Fig 2). `Initializing` exists as a distinct
+/// state for the real-time backend where initialization (XLA compilation)
+/// has observable duration; the simulator folds init time into the first
+/// execution and transitions Created->Busy directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SandboxState {
+    Initializing,
+    Idle,
+    Busy,
+}
+
+#[derive(Clone, Debug)]
+pub struct Sandbox {
+    pub id: SandboxId,
+    pub function: FunctionId,
+    pub state: SandboxState,
+    pub mem_mb: u64,
+    /// Time this sandbox last became idle (valid when state == Idle).
+    pub idle_since: f64,
+    /// Monotonic reuse counter; guards stale keep-alive expiry events:
+    /// an expiry scheduled for (sandbox, epoch) only fires if the sandbox
+    /// is still idle in the same epoch.
+    pub epoch: u64,
+    /// Number of executions served (1 cold + n-1 warm).
+    pub executions: u64,
+    pub created_at: f64,
+}
+
+impl Sandbox {
+    pub fn new(id: SandboxId, function: FunctionId, mem_mb: u64, now: f64) -> Self {
+        Self {
+            id,
+            function,
+            state: SandboxState::Initializing,
+            mem_mb,
+            idle_since: now,
+            epoch: 0,
+            executions: 0,
+            created_at: now,
+        }
+    }
+
+    /// Initializing/Idle -> Busy. Returns false on an illegal transition.
+    pub fn start_execution(&mut self) -> bool {
+        match self.state {
+            SandboxState::Initializing | SandboxState::Idle => {
+                self.state = SandboxState::Busy;
+                self.executions += 1;
+                true
+            }
+            SandboxState::Busy => false,
+        }
+    }
+
+    /// Initializing -> Idle (pre-warming completed). Returns the idle epoch.
+    pub fn finish_init(&mut self, now: f64) -> Option<u64> {
+        if self.state != SandboxState::Initializing {
+            return None;
+        }
+        self.state = SandboxState::Idle;
+        self.idle_since = now;
+        self.epoch += 1;
+        Some(self.epoch)
+    }
+
+    /// Busy -> Idle at time `now`. Returns the new idle epoch.
+    pub fn finish_execution(&mut self, now: f64) -> Option<u64> {
+        if self.state != SandboxState::Busy {
+            return None;
+        }
+        self.state = SandboxState::Idle;
+        self.idle_since = now;
+        self.epoch += 1;
+        Some(self.epoch)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == SandboxState::Idle
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.state == SandboxState::Busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions() {
+        let mut sb = Sandbox::new(1, 7, 256, 0.0);
+        assert_eq!(sb.state, SandboxState::Initializing);
+        assert!(sb.start_execution());
+        assert!(sb.is_busy());
+        assert!(!sb.start_execution(), "busy sandbox cannot start again");
+        let e1 = sb.finish_execution(1.5).unwrap();
+        assert!(sb.is_idle());
+        assert_eq!(sb.idle_since, 1.5);
+        assert!(sb.start_execution());
+        let e2 = sb.finish_execution(3.0).unwrap();
+        assert!(e2 > e1, "epoch must advance per idle period");
+        assert_eq!(sb.executions, 2);
+    }
+
+    #[test]
+    fn finish_requires_busy() {
+        let mut sb = Sandbox::new(1, 0, 128, 0.0);
+        assert_eq!(sb.finish_execution(1.0), None);
+    }
+}

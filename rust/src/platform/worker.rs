@@ -1,0 +1,654 @@
+//! Worker: memory pool + sandbox table + execution slots + FIFO admission
+//! queue + LRU evictor (the "evictor component" of Fig 1).
+//!
+//! The worker is a passive state machine over virtual time: the simulator
+//! (or the real-time server) drives it and owns the clock. All transitions
+//! that destroy sandboxes report the evicted function types so the caller
+//! can deliver the paper's eviction notifications to the scheduler (§IV-A).
+
+use super::sandbox::{Sandbox, SandboxId};
+use crate::workload::spec::FunctionId;
+use std::collections::VecDeque;
+
+pub type WorkerId = usize;
+
+/// A request admitted to a worker but waiting for a free execution slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueuedRequest {
+    pub request_id: u64,
+    pub function: FunctionId,
+    pub mem_mb: u64,
+    pub queued_at: f64,
+}
+
+/// Outcome of handing a request to a worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AssignOutcome {
+    /// Execution started immediately.
+    Started(StartInfo),
+    /// All execution slots busy; request queued FIFO at the worker.
+    Queued,
+}
+
+/// Details of a started execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StartInfo {
+    pub sandbox: SandboxId,
+    /// True if a new sandbox had to be created (cold start).
+    pub cold: bool,
+    /// Function types whose idle sandboxes were force-evicted to make room
+    /// (memory pressure). One entry per evicted sandbox.
+    pub evicted: Vec<FunctionId>,
+    /// Request id (echoed for queued starts).
+    pub request_id: u64,
+    /// Queue delay experienced at the worker (0 for immediate starts).
+    pub queue_delay_s: f64,
+}
+
+/// Why an eviction happened (metrics/ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictReason {
+    KeepAliveExpired,
+    MemoryPressure,
+}
+
+#[derive(Clone, Debug)]
+pub struct Worker {
+    pub id: WorkerId,
+    pub mem_capacity_mb: u64,
+    pub mem_used_mb: u64,
+    /// Maximum concurrent executions (vCPU slots).
+    pub concurrency: usize,
+    running: usize,
+    sandboxes: Vec<Sandbox>,
+    queue: VecDeque<QueuedRequest>,
+    next_sandbox_id: SandboxId,
+    // ---- counters (metrics) ----
+    pub total_cold: u64,
+    pub total_warm: u64,
+    pub total_evictions_pressure: u64,
+    pub total_evictions_keepalive: u64,
+}
+
+impl Worker {
+    pub fn new(id: WorkerId, mem_capacity_mb: u64, concurrency: usize) -> Self {
+        Self {
+            id,
+            mem_capacity_mb,
+            mem_used_mb: 0,
+            concurrency,
+            running: 0,
+            sandboxes: Vec::new(),
+            queue: VecDeque::new(),
+            next_sandbox_id: 1,
+            total_cold: 0,
+            total_warm: 0,
+            total_evictions_pressure: 0,
+            total_evictions_keepalive: 0,
+        }
+    }
+
+    // ---- inspection -------------------------------------------------------
+
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Outstanding work at this worker (running + queued).
+    pub fn load(&self) -> usize {
+        self.running + self.queue.len()
+    }
+
+    pub fn mem_free_mb(&self) -> u64 {
+        self.mem_capacity_mb - self.mem_used_mb
+    }
+
+    pub fn has_idle(&self, f: FunctionId) -> bool {
+        self.sandboxes.iter().any(|s| s.function == f && s.is_idle())
+    }
+
+    pub fn idle_count(&self, f: FunctionId) -> usize {
+        self.sandboxes.iter().filter(|s| s.function == f && s.is_idle()).count()
+    }
+
+    pub fn num_sandboxes(&self) -> usize {
+        self.sandboxes.len()
+    }
+
+    pub fn sandbox(&self, id: SandboxId) -> Option<&Sandbox> {
+        self.sandboxes.iter().find(|s| s.id == id)
+    }
+
+    fn sandbox_mut(&mut self, id: SandboxId) -> Option<&mut Sandbox> {
+        self.sandboxes.iter_mut().find(|s| s.id == id)
+    }
+
+    // ---- request path -----------------------------------------------------
+
+    /// A request for `f` (with sandbox footprint `mem_mb`) arrives at `now`.
+    pub fn assign(
+        &mut self,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+    ) -> AssignOutcome {
+        assert!(
+            mem_mb * self.concurrency as u64 <= self.mem_capacity_mb,
+            "worker {} cannot ever fit {} x {mem_mb} MB",
+            self.id,
+            self.concurrency
+        );
+        if self.running >= self.concurrency {
+            self.queue.push_back(QueuedRequest { request_id, function: f, mem_mb, queued_at: now });
+            return AssignOutcome::Queued;
+        }
+        AssignOutcome::Started(self.start_execution(request_id, f, mem_mb, now, 0.0))
+    }
+
+    /// Start executing `f`, reusing an idle sandbox (warm) or creating one
+    /// (cold, evicting idle LRU sandboxes under memory pressure).
+    fn start_execution(
+        &mut self,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+        queue_delay_s: f64,
+    ) -> StartInfo {
+        debug_assert!(self.running < self.concurrency);
+        self.running += 1;
+
+        // Warm path: most-recently-idle sandbox of this type (stack reuse
+        // keeps the hottest sandbox warm, like OpenLambda's handler cache).
+        if let Some(idx) = self
+            .sandboxes
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.function == f && s.is_idle())
+            .max_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
+            .map(|(i, _)| i)
+        {
+            let sb = &mut self.sandboxes[idx];
+            let ok = sb.start_execution();
+            debug_assert!(ok);
+            self.total_warm += 1;
+            return StartInfo {
+                sandbox: sb.id,
+                cold: false,
+                evicted: Vec::new(),
+                request_id,
+                queue_delay_s,
+            };
+        }
+
+        // Cold path: free memory, then create.
+        let evicted = self.make_room(mem_mb);
+        let id = self.next_sandbox_id;
+        self.next_sandbox_id += 1;
+        let mut sb = Sandbox::new(id, f, mem_mb, now);
+        let ok = sb.start_execution();
+        debug_assert!(ok);
+        self.mem_used_mb += mem_mb;
+        debug_assert!(self.mem_used_mb <= self.mem_capacity_mb);
+        self.sandboxes.push(sb);
+        self.total_cold += 1;
+        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s }
+    }
+
+    /// Evict idle sandboxes (LRU: least-recently-idle first) until `mem_mb`
+    /// fits. Panics if the invariant `concurrency * max_mem <= capacity` is
+    /// violated (checked at assign).
+    fn make_room(&mut self, mem_mb: u64) -> Vec<FunctionId> {
+        let mut evicted = Vec::new();
+        while self.mem_used_mb + mem_mb > self.mem_capacity_mb {
+            let victim = self
+                .sandboxes
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_idle())
+                .min_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    let sb = self.sandboxes.swap_remove(i);
+                    self.mem_used_mb -= sb.mem_mb;
+                    self.total_evictions_pressure += 1;
+                    evicted.push(sb.function);
+                }
+                None => panic!(
+                    "worker {}: memory exhausted by busy sandboxes ({} used / {} cap, need {mem_mb})",
+                    self.id, self.mem_used_mb, self.mem_capacity_mb
+                ),
+            }
+        }
+        evicted
+    }
+
+    /// An execution finished at `now`. The sandbox becomes idle (keep-alive
+    /// countdown starts); if requests are queued, the next one starts
+    /// immediately. Returns (idle epoch for expiry scheduling, optional
+    /// started queued request).
+    pub fn complete(
+        &mut self,
+        sandbox: SandboxId,
+        now: f64,
+    ) -> (Option<(SandboxId, u64)>, Option<StartInfo>) {
+        let sb = self.sandbox_mut(sandbox).expect("completing unknown sandbox");
+        let f_done = sb.function;
+        let epoch = sb.finish_execution(now).expect("completing non-busy sandbox");
+        let _ = f_done;
+        debug_assert!(self.running > 0);
+        self.running -= 1;
+
+        let mut started = None;
+        if let Some(q) = self.queue.pop_front() {
+            let info =
+                self.start_execution(q.request_id, q.function, q.mem_mb, now, now - q.queued_at);
+            started = Some(info);
+        }
+        // If the sandbox we just idled got reused by the queued start, no
+        // expiry should be scheduled for it.
+        let still_idle = self.sandbox(sandbox).map(|s| s.is_idle()).unwrap_or(false);
+        let expiry = if still_idle { Some((sandbox, epoch)) } else { None };
+        (expiry, started)
+    }
+
+    // ---- elastic mode (OpenLambda-like, no admission queue) --------------
+    //
+    // The paper's OpenLambda workers do not bound concurrent executions at
+    // the vCPU count: every arriving request gets a sandbox immediately and
+    // the vCPUs are time-shared (the simulator models the slowdown with a
+    // congestion multiplier). Memory pressure only ever reclaims *idle*
+    // sandboxes; the busy set may transiently exceed the pool (admission
+    // control is out of scope, as in OpenLambda).
+
+    /// Elastic assignment: always starts an execution immediately.
+    pub fn assign_elastic(
+        &mut self,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+    ) -> StartInfo {
+        self.running += 1;
+
+        if let Some(idx) = self
+            .sandboxes
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.function == f && s.is_idle())
+            .max_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
+            .map(|(i, _)| i)
+        {
+            let sb = &mut self.sandboxes[idx];
+            let ok = sb.start_execution();
+            debug_assert!(ok);
+            self.total_warm += 1;
+            return StartInfo {
+                sandbox: sb.id,
+                cold: false,
+                evicted: Vec::new(),
+                request_id,
+                queue_delay_s: 0.0,
+            };
+        }
+
+        // Cold: reclaim idle LRU sandboxes while over capacity; busy
+        // overflow is tolerated.
+        let evicted = self.trim_idle_lru(mem_mb);
+        let id = self.next_sandbox_id;
+        self.next_sandbox_id += 1;
+        let mut sb = Sandbox::new(id, f, mem_mb, now);
+        let ok = sb.start_execution();
+        debug_assert!(ok);
+        self.mem_used_mb += mem_mb;
+        self.sandboxes.push(sb);
+        self.total_cold += 1;
+        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s: 0.0 }
+    }
+
+    /// Evict idle LRU sandboxes while admitting `incoming_mb` would exceed
+    /// the pool; stops when no idle sandbox remains.
+    fn trim_idle_lru(&mut self, incoming_mb: u64) -> Vec<FunctionId> {
+        let mut evicted = Vec::new();
+        while self.mem_used_mb + incoming_mb > self.mem_capacity_mb {
+            let victim = self
+                .sandboxes
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_idle())
+                .min_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    let sb = self.sandboxes.swap_remove(i);
+                    self.mem_used_mb -= sb.mem_mb;
+                    self.total_evictions_pressure += 1;
+                    evicted.push(sb.function);
+                }
+                None => break, // only busy sandboxes left: overflow
+            }
+        }
+        evicted
+    }
+
+    /// Elastic completion: the sandbox idles, then the idle pool is trimmed
+    /// back under the capacity (the just-idled sandbox is MRU, so it is
+    /// reclaimed last). Returns (keep-alive handle if the sandbox survived,
+    /// evicted function types).
+    pub fn complete_elastic(
+        &mut self,
+        sandbox: SandboxId,
+        now: f64,
+    ) -> (Option<(SandboxId, u64)>, Vec<FunctionId>) {
+        let sb = self.sandbox_mut(sandbox).expect("completing unknown sandbox");
+        let epoch = sb.finish_execution(now).expect("completing non-busy sandbox");
+        debug_assert!(self.running > 0);
+        self.running -= 1;
+        let evicted = self.trim_idle_lru(0);
+        let survived = self.sandbox(sandbox).map(|s| s.is_idle()).unwrap_or(false);
+        let expiry = if survived { Some((sandbox, epoch)) } else { None };
+        (expiry, evicted)
+    }
+
+    /// Speculatively create an Initializing sandbox for `f` (predictive
+    /// pre-warming, cf. Kim & Roh [24]). Never evicts for speculation:
+    /// returns None when the pool cannot fit the instance as-is.
+    pub fn prewarm(&mut self, f: FunctionId, mem_mb: u64, now: f64) -> Option<SandboxId> {
+        if self.mem_used_mb + mem_mb > self.mem_capacity_mb {
+            return None;
+        }
+        let id = self.next_sandbox_id;
+        self.next_sandbox_id += 1;
+        self.mem_used_mb += mem_mb;
+        self.sandboxes.push(Sandbox::new(id, f, mem_mb, now));
+        Some(id)
+    }
+
+    /// Pre-warm initialization finished: the sandbox becomes idle and can
+    /// serve warm starts. Returns (function, epoch) for advertisement.
+    pub fn finish_prewarm(&mut self, sandbox: SandboxId, now: f64) -> Option<(FunctionId, u64)> {
+        let sb = self.sandbox_mut(sandbox)?;
+        let f = sb.function;
+        let epoch = sb.finish_init(now)?;
+        Some((f, epoch))
+    }
+
+    /// Sandboxes of `f` currently initializing (pre-warm in flight).
+    pub fn initializing_count(&self, f: FunctionId) -> usize {
+        use super::sandbox::SandboxState;
+        self.sandboxes
+            .iter()
+            .filter(|s| s.function == f && s.state == SandboxState::Initializing)
+            .count()
+    }
+
+    /// Keep-alive sweep: evict every sandbox that has been idle since
+    /// `cutoff` or earlier. The simulator calls this on a periodic tick
+    /// (O(1) events per simulated second) instead of scheduling one expiry
+    /// event per idle period — same semantics to within the sweep interval.
+    pub fn sweep_keepalive(&mut self, cutoff: f64) -> Vec<FunctionId> {
+        let mut evicted = Vec::new();
+        let mut i = 0;
+        while i < self.sandboxes.len() {
+            if self.sandboxes[i].is_idle() && self.sandboxes[i].idle_since <= cutoff {
+                let sb = self.sandboxes.swap_remove(i);
+                self.mem_used_mb -= sb.mem_mb;
+                self.total_evictions_keepalive += 1;
+                evicted.push(sb.function);
+            } else {
+                i += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Drain: evict every idle sandbox (scale-down). Busy sandboxes finish
+    /// normally; the router stops selecting this worker.
+    pub fn drain_idle(&mut self) -> Vec<FunctionId> {
+        let mut evicted = Vec::new();
+        let mut i = 0;
+        while i < self.sandboxes.len() {
+            if self.sandboxes[i].is_idle() {
+                let sb = self.sandboxes.swap_remove(i);
+                self.mem_used_mb -= sb.mem_mb;
+                self.total_evictions_pressure += 1;
+                evicted.push(sb.function);
+            } else {
+                i += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Keep-alive expiry for (sandbox, epoch) fires at `_now`. Evicts only
+    /// if the sandbox is still idle in the same epoch (otherwise the event
+    /// is stale — the sandbox was reused or already evicted). Returns the
+    /// evicted function type if the eviction happened.
+    pub fn expire_keepalive(&mut self, sandbox: SandboxId, epoch: u64) -> Option<FunctionId> {
+        let idx = self.sandboxes.iter().position(|s| s.id == sandbox)?;
+        let sb = &self.sandboxes[idx];
+        if !sb.is_idle() || sb.epoch != epoch {
+            return None;
+        }
+        let sb = self.sandboxes.swap_remove(idx);
+        self.mem_used_mb -= sb.mem_mb;
+        self.total_evictions_keepalive += 1;
+        Some(sb.function)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker() -> Worker {
+        Worker::new(0, 1024, 2)
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let mut w = worker();
+        let out = w.assign(1, 7, 256, 0.0);
+        let info = match out {
+            AssignOutcome::Started(i) => i,
+            _ => panic!("expected start"),
+        };
+        assert!(info.cold);
+        assert_eq!(w.running(), 1);
+        let (expiry, started) = w.complete(info.sandbox, 1.0);
+        assert!(expiry.is_some());
+        assert!(started.is_none());
+        assert_eq!(w.running(), 0);
+        // Same function again: warm.
+        match w.assign(2, 7, 256, 2.0) {
+            AssignOutcome::Started(i) => {
+                assert!(!i.cold);
+                assert_eq!(i.sandbox, info.sandbox);
+            }
+            _ => panic!("expected warm start"),
+        }
+        assert_eq!(w.total_cold, 1);
+        assert_eq!(w.total_warm, 1);
+    }
+
+    #[test]
+    fn different_function_is_cold() {
+        let mut w = worker();
+        let i1 = match w.assign(1, 1, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        w.complete(i1.sandbox, 0.5);
+        match w.assign(2, 2, 256, 1.0) {
+            AssignOutcome::Started(i) => assert!(i.cold, "different type must cold-start"),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn concurrency_limit_queues() {
+        let mut w = worker();
+        assert!(matches!(w.assign(1, 1, 256, 0.0), AssignOutcome::Started(_)));
+        assert!(matches!(w.assign(2, 2, 256, 0.0), AssignOutcome::Started(_)));
+        assert!(matches!(w.assign(3, 3, 256, 0.0), AssignOutcome::Queued));
+        assert_eq!(w.queue_len(), 1);
+        assert_eq!(w.load(), 3);
+    }
+
+    #[test]
+    fn queued_request_starts_on_completion() {
+        let mut w = worker();
+        let i1 = match w.assign(1, 1, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        let _i2 = w.assign(2, 2, 256, 0.0);
+        assert!(matches!(w.assign(3, 1, 256, 0.0), AssignOutcome::Queued));
+        let (_, started) = w.complete(i1.sandbox, 2.0);
+        let s = started.expect("queued request must start");
+        assert_eq!(s.request_id, 3);
+        assert!(!s.cold, "queued request for same type reuses the idled sandbox");
+        assert!((s.queue_delay_s - 2.0).abs() < 1e-12);
+        assert_eq!(w.queue_len(), 0);
+    }
+
+    #[test]
+    fn memory_pressure_evicts_lru() {
+        let mut w = Worker::new(0, 768, 2); // fits 3 x 256
+        // Create three idle sandboxes for functions 1, 2, 3.
+        for (rid, f) in [(1u64, 1usize), (2, 2), (3, 3)] {
+            let i = match w.assign(rid, f, 256, rid as f64) {
+                AssignOutcome::Started(i) => i,
+                _ => panic!(),
+            };
+            w.complete(i.sandbox, rid as f64 + 0.25);
+        }
+        assert_eq!(w.num_sandboxes(), 3);
+        assert_eq!(w.mem_free_mb(), 0);
+        // A 4th type must evict the least-recently-idle (function 1).
+        match w.assign(4, 4, 256, 10.0) {
+            AssignOutcome::Started(i) => {
+                assert!(i.cold);
+                assert_eq!(i.evicted, vec![1]);
+            }
+            _ => panic!(),
+        }
+        assert!(!w.has_idle(1));
+        assert!(w.has_idle(2) && w.has_idle(3));
+        assert_eq!(w.total_evictions_pressure, 1);
+    }
+
+    #[test]
+    fn keepalive_expiry_and_stale_epochs() {
+        let mut w = worker();
+        let i = match w.assign(1, 5, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        let (expiry, _) = w.complete(i.sandbox, 1.0);
+        let (sb, epoch) = expiry.unwrap();
+        // Reuse before expiry: stale event must be ignored.
+        let i2 = match w.assign(2, 5, 256, 2.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i2.sandbox, sb);
+        assert_eq!(w.expire_keepalive(sb, epoch), None, "stale expiry must not fire");
+        let (expiry2, _) = w.complete(i2.sandbox, 3.0);
+        let (sb2, epoch2) = expiry2.unwrap();
+        assert_eq!(w.expire_keepalive(sb2, epoch2), Some(5));
+        assert_eq!(w.num_sandboxes(), 0);
+        assert_eq!(w.mem_used_mb, 0);
+        assert_eq!(w.total_evictions_keepalive, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot ever fit")]
+    fn oversized_function_rejected() {
+        let mut w = Worker::new(0, 256, 2);
+        w.assign(1, 1, 256, 0.0); // 2 slots x 256 MB > 256 MB capacity
+    }
+
+    // ---- elastic mode ----------------------------------------------------
+
+    #[test]
+    fn elastic_never_queues() {
+        let mut w = Worker::new(0, 1024, 2);
+        for rid in 0..6 {
+            let info = w.assign_elastic(rid, rid as usize, 128, 0.0);
+            assert!(info.cold);
+        }
+        assert_eq!(w.running(), 6, "elastic mode admits beyond concurrency");
+        assert_eq!(w.queue_len(), 0);
+    }
+
+    #[test]
+    fn elastic_busy_overflow_then_trim() {
+        let mut w = Worker::new(0, 512, 2);
+        // 3 busy x 256 MB = 768 > 512: overflow tolerated while busy.
+        let infos: Vec<_> = (0..3).map(|rid| w.assign_elastic(rid, rid as usize, 256, 0.0)).collect();
+        assert!(w.mem_used_mb > w.mem_capacity_mb);
+        // While the busy set alone exceeds the pool, completions reclaim
+        // the just-idled sandbox immediately (nothing can be kept warm).
+        let (expiry, ev1) = w.complete_elastic(infos[0].sandbox, 1.0);
+        assert_eq!(ev1, vec![0], "idled sandbox reclaimed under busy overflow");
+        assert!(expiry.is_none(), "reclaimed sandbox must not be advertised");
+        // 2 busy x 256 = 512 = cap: the next completion can keep its idle.
+        let (expiry2, ev2) = w.complete_elastic(infos[1].sandbox, 2.0);
+        assert!(ev2.is_empty());
+        assert!(expiry2.is_some(), "sandbox fits now and is advertised");
+        assert!(w.mem_used_mb <= w.mem_capacity_mb);
+    }
+
+    #[test]
+    fn sweep_keepalive_evicts_by_cutoff() {
+        let mut w = Worker::new(0, 1024, 4);
+        let a = w.assign_elastic(1, 1, 128, 0.0);
+        let b = w.assign_elastic(2, 2, 128, 0.0);
+        w.complete_elastic(a.sandbox, 1.0);
+        w.complete_elastic(b.sandbox, 5.0);
+        let evicted = w.sweep_keepalive(2.0); // cutoff: idle_since <= 2.0
+        assert_eq!(evicted, vec![1]);
+        assert!(w.has_idle(2));
+        assert_eq!(w.total_evictions_keepalive, 1);
+    }
+
+    #[test]
+    fn prewarm_lifecycle() {
+        let mut w = Worker::new(0, 512, 4);
+        let sb = w.prewarm(9, 256, 0.0).expect("fits");
+        assert_eq!(w.initializing_count(9), 1);
+        assert!(!w.has_idle(9), "initializing sandbox is not yet warm");
+        // No eviction for speculation: a second 256 MB prewarm over
+        // capacity is refused (256 used + 256 = 512 cap; third denied).
+        assert!(w.prewarm(8, 256, 0.0).is_some());
+        assert!(w.prewarm(7, 256, 0.0).is_none());
+        let (f, _epoch) = w.finish_prewarm(sb, 1.0).unwrap();
+        assert_eq!(f, 9);
+        assert!(w.has_idle(9));
+        // The pre-warmed instance serves a warm start.
+        let info = w.assign_elastic(1, 9, 256, 2.0);
+        assert!(!info.cold);
+        assert_eq!(info.sandbox, sb);
+    }
+
+    #[test]
+    fn drain_idle_reclaims_everything_idle() {
+        let mut w = Worker::new(0, 1024, 4);
+        let a = w.assign_elastic(1, 1, 128, 0.0);
+        let b = w.assign_elastic(2, 2, 128, 0.0);
+        w.complete_elastic(a.sandbox, 1.0);
+        // b stays busy.
+        let mut evicted = w.drain_idle();
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![1]);
+        assert_eq!(w.running(), 1);
+        assert_eq!(w.num_sandboxes(), 1);
+    }
+}

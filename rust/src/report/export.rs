@@ -1,0 +1,157 @@
+//! Figure-data export: CSV series for external plotting (gnuplot,
+//! matplotlib). Each function mirrors one of the paper's figures and
+//! writes the same series the figure plots.
+
+use crate::metrics::RunMetrics;
+use crate::stats::Samples;
+use std::fmt::Write as _;
+
+/// Escape a CSV cell (quotes + commas).
+fn cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Generic CSV writer: header + rows.
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.iter().map(|h| cell(h)).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.iter().map(|c| cell(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 10: latency CDF — columns (scheduler, latency_ms, cum_prob).
+pub fn latency_cdf_csv(runs: &mut [(String, Vec<RunMetrics>)], points: usize) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs.iter_mut() {
+        let mut pooled = Samples::new();
+        for m in ms.iter_mut() {
+            for &v in m.latency_ms.values() {
+                pooled.push(v);
+            }
+        }
+        for (v, q) in pooled.cdf(points) {
+            rows.push(vec![sched.clone(), format!("{v:.3}"), format!("{q:.4}")]);
+        }
+    }
+    to_csv(&["scheduler", "latency_ms", "cum_prob"], &rows)
+}
+
+/// Fig 14: CV-over-time series — columns (scheduler, second, cv).
+pub fn cv_series_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs {
+        if let Some(m) = ms.first() {
+            for (sec, cv) in m.imbalance.cv_series().iter().enumerate() {
+                rows.push(vec![sched.clone(), sec.to_string(), format!("{cv:.4}")]);
+            }
+        }
+    }
+    to_csv(&["scheduler", "second", "cv"], &rows)
+}
+
+/// Fig 16: cumulative throughput — columns (scheduler, second, cumulative).
+pub fn cumulative_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs {
+        if let Some(m) = ms.first() {
+            for (sec, total) in m.throughput.cumulative().iter().enumerate() {
+                rows.push(vec![sched.clone(), sec.to_string(), format!("{total:.0}")]);
+            }
+        }
+    }
+    to_csv(&["scheduler", "second", "cumulative_requests"], &rows)
+}
+
+/// Summary table (Figs 11/12/13/15/17 scalars) — one row per run.
+pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs.iter_mut() {
+        for (i, m) in ms.iter_mut().enumerate() {
+            rows.push(vec![
+                sched.clone(),
+                i.to_string(),
+                m.vus.to_string(),
+                format!("{:.2}", m.mean_latency_ms()),
+                format!("{:.2}", m.latency_percentile_ms(90.0)),
+                format!("{:.2}", m.latency_percentile_ms(95.0)),
+                format!("{:.2}", m.latency_percentile_ms(99.0)),
+                format!("{:.4}", m.cold_rate()),
+                format!("{:.4}", m.mean_cv()),
+                m.completed.to_string(),
+                format!("{:.2}", m.rps()),
+            ]);
+        }
+    }
+    to_csv(
+        &[
+            "scheduler", "run", "vus", "mean_ms", "p90_ms", "p95_ms", "p99_ms", "cold_rate",
+            "mean_cv", "completed", "rps",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::report::run_cell;
+
+    fn tiny_runs() -> Vec<(String, Vec<RunMetrics>)> {
+        let mut cfg = Config::default();
+        cfg.workload.duration_s = 8.0;
+        ["hiku", "random"]
+            .iter()
+            .map(|s| {
+                let (_, runs) = run_cell(&cfg, s, 5, 2).unwrap();
+                (s.to_string(), runs)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let out = to_csv(&["a", "b"], &[vec!["x,y".into(), "q\"z".into()]]);
+        assert_eq!(out, "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn cdf_csv_well_formed() {
+        let mut runs = tiny_runs();
+        let csv = latency_cdf_csv(&mut runs, 10);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "scheduler,latency_ms,cum_prob");
+        assert_eq!(lines.len(), 1 + 2 * 10);
+        assert!(lines[1].starts_with("hiku,"));
+        // Columns parse as numbers.
+        for l in &lines[1..] {
+            let cols: Vec<&str> = l.split(',').collect();
+            assert_eq!(cols.len(), 3);
+            cols[1].parse::<f64>().unwrap();
+            cols[2].parse::<f64>().unwrap();
+        }
+    }
+
+    #[test]
+    fn summary_csv_one_row_per_run() {
+        let mut runs = tiny_runs();
+        let csv = summary_csv(&mut runs);
+        assert_eq!(csv.lines().count(), 1 + 4, "2 schedulers x 2 runs + header");
+        assert!(csv.contains("mean_ms"));
+    }
+
+    #[test]
+    fn series_csvs_nonempty() {
+        let runs = tiny_runs();
+        assert!(cv_series_csv(&runs).lines().count() > 5);
+        assert!(cumulative_csv(&runs).lines().count() > 5);
+    }
+}

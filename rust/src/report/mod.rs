@@ -1,0 +1,188 @@
+//! Report rendering: regenerate the paper's tables and figure series as
+//! text — the same rows/series the paper plots, printed for comparison.
+//! CSV export for external plotting lives in [`export`].
+
+pub mod export;
+
+use crate::config::Config;
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::sim::run_once;
+use crate::workload::azure::SyntheticTrace;
+
+/// Run `runs` seeded repetitions for one (scheduler, vus) cell.
+pub fn run_cell(
+    base: &Config,
+    scheduler: &str,
+    vus: usize,
+    runs: u64,
+) -> Result<(Aggregate, Vec<RunMetrics>), String> {
+    let mut cfg = base.clone();
+    cfg.scheduler.name = scheduler.to_string();
+    cfg.workload.vus = vus;
+    let mut agg = Aggregate::new();
+    let mut all = Vec::new();
+    for r in 0..runs {
+        // The paper seeds each run with the experiment start date, shared
+        // across schedulers: seed depends on (base seed, run) only.
+        let seed = cfg.workload.seed.wrapping_add(r.wrapping_mul(0x9E37_79B9));
+        let mut m = run_once(&cfg, seed)?;
+        agg.add(&mut m);
+        all.push(m);
+    }
+    Ok((agg, all))
+}
+
+/// The evaluation sweep (Figs 10-17 summary table): schedulers x VU levels.
+pub fn evaluation_report(
+    base: &Config,
+    schedulers: &[String],
+    vu_levels: &[usize],
+    runs: u64,
+) -> Result<String, String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# Evaluation sweep: {} workers, {} functions, {} s/run, {} runs/cell\n\n",
+        base.cluster.workers,
+        base.num_functions(),
+        base.workload.duration_s,
+        runs
+    ));
+    out.push_str(&format!(
+        "{:<20} {:>4} {:>10} {:>8} {:>8} {:>8} {:>8} {:>7} {:>9} {:>8}\n",
+        "scheduler", "VUs", "mean(ms)", "p90(ms)", "p95(ms)", "p99(ms)", "cold%", "CV", "completed", "rps"
+    ));
+    for &vus in vu_levels {
+        for sched in schedulers {
+            let (agg, _) = run_cell(base, sched, vus, runs)?;
+            out.push_str(&format!(
+                "{:<20} {:>4} {:>10.1} {:>8.1} {:>8.1} {:>8.1} {:>6.1}% {:>7.3} {:>9.0} {:>8.1}\n",
+                sched,
+                vus,
+                agg.mean_latency_ms.mean(),
+                agg.p90_ms.mean(),
+                agg.p95_ms.mean(),
+                agg.p99_ms.mean(),
+                agg.cold_rate.mean() * 100.0,
+                agg.mean_cv.mean(),
+                agg.completed.mean(),
+                agg.rps.mean(),
+            ));
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Figs 4-6: trace characterization report.
+pub fn trace_report(universe: usize, duration_s: f64, seed: u64) -> String {
+    let tr = SyntheticTrace::generate(universe, duration_s, seed);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# Azure-like synthetic trace: {} functions, {:.0} min, {} invocations\n\n",
+        universe,
+        duration_s / 60.0,
+        tr.invocations.len()
+    ));
+
+    // Fig 4 — skewed popularity.
+    out.push_str("## Fig 4 — skewed function popularity\n");
+    out.push_str(&format!(
+        "top  1% of functions -> {:>5.1}% of invocations (paper: 51.3%)\n",
+        tr.top_share(0.01) * 100.0
+    ));
+    out.push_str(&format!(
+        "top 10% of functions -> {:>5.1}% of invocations (paper: 92.3%)\n",
+        tr.top_share(0.10) * 100.0
+    ));
+    out.push_str("cumulative share curve (fraction of functions -> share):\n");
+    for (frac, share) in tr.popularity_curve(10) {
+        out.push_str(&format!("  {:>5.1}% -> {:>5.1}%\n", frac * 100.0, share * 100.0));
+    }
+
+    // Fig 5 — heterogeneous performance.
+    out.push_str("\n## Fig 5 — heterogeneous function performance (first 15 functions)\n");
+    for (f, mean, std) in tr.exec_heterogeneity(15, seed) {
+        out.push_str(&format!(
+            "  fn {:>5}: exec {:>8.1} ms +/- {:>7.1} ms\n",
+            f,
+            mean * 1000.0,
+            std * 1000.0
+        ));
+    }
+
+    // Fig 6 — bursty invocations.
+    let (per_min, max_ratio) = tr.interarrival_per_minute();
+    out.push_str("\n## Fig 6 — bursty invocations (mean interarrival per minute, ms)\n  ");
+    for (i, v) in per_min.iter().enumerate() {
+        if v.is_finite() {
+            out.push_str(&format!("{v:.1} "));
+        }
+        if i % 10 == 9 {
+            out.push_str("\n  ");
+        }
+    }
+    out.push_str(&format!(
+        "\nmax minute-over-minute swing: {max_ratio:.1}x (paper: up to 13.5x)\n"
+    ));
+    out
+}
+
+/// Fig 10 — latency CDFs, one series per scheduler (points as text).
+pub fn latency_cdf_report(base: &Config, schedulers: &[String], runs: u64, points: usize) -> Result<String, String> {
+    let mut out = String::new();
+    out.push_str("# Fig 10 — response latency CDF per scheduler\n");
+    for sched in schedulers {
+        let (_, mut all) = run_cell(base, sched, base.workload.vus, runs)?;
+        // Pool latencies across runs for the CDF.
+        let mut pooled = crate::stats::Samples::new();
+        for m in &mut all {
+            for &v in m.latency_ms.values() {
+                pooled.push(v);
+            }
+        }
+        out.push_str(&format!("\n## {sched}\n"));
+        for (val, q) in pooled.cdf(points) {
+            out.push_str(&format!("  {:>8.1} ms  p={:.3}\n", val, q));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Config {
+        let mut cfg = Config::default();
+        cfg.workload.duration_s = 10.0;
+        cfg.workload.vus = 5;
+        cfg
+    }
+
+    #[test]
+    fn evaluation_report_renders() {
+        let out = evaluation_report(&tiny(), &["hiku".into(), "random".into()], &[5], 2).unwrap();
+        assert!(out.contains("hiku"));
+        assert!(out.contains("random"));
+        assert!(out.contains("cold%"));
+    }
+
+    #[test]
+    fn trace_report_contains_paper_anchors() {
+        let out = trace_report(2000, 300.0, 1);
+        assert!(out.contains("Fig 4"));
+        assert!(out.contains("paper: 51.3%"));
+        assert!(out.contains("Fig 6"));
+    }
+
+    #[test]
+    fn cdf_report_monotone_series() {
+        let out = latency_cdf_report(&tiny(), &["hiku".into()], 1, 10).unwrap();
+        assert!(out.matches(" p=").count() >= 10);
+    }
+
+    #[test]
+    fn bad_scheduler_is_error() {
+        assert!(evaluation_report(&tiny(), &["bogus".into()], &[5], 1).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! AOT manifest: metadata for the artifacts emitted by `python/compile/aot.py`
+//! (payload names, I/O specs, golden digests for numeric verification).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Golden {
+    pub seed: u32,
+    pub digest: [f32; 2],
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PayloadSpec {
+    pub name: String,
+    /// Absolute path to the HLO text artifact.
+    pub path: PathBuf,
+    pub goldens: Vec<Golden>,
+    pub hlo_bytes: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub payloads: Vec<PayloadSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let dir = Path::new(dir);
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                mpath.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| format!("manifest parse: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest, String> {
+        let fmt = j.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if fmt != "hlo-text" {
+            return Err(format!("unsupported artifact format '{fmt}' (want hlo-text)"));
+        }
+        let payloads = j
+            .get("payloads")
+            .and_then(|p| p.as_arr())
+            .ok_or("manifest missing payloads[]")?;
+        let mut out = Vec::new();
+        for p in payloads {
+            let name = p
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("payload missing name")?
+                .to_string();
+            let artifact = p
+                .get("artifact")
+                .and_then(|v| v.as_str())
+                .ok_or("payload missing artifact")?;
+            let mut goldens = Vec::new();
+            if let Some(gs) = p.get("goldens").and_then(|g| g.as_arr()) {
+                for g in gs {
+                    let seed = g
+                        .get("seed")
+                        .and_then(|v| v.as_u64())
+                        .ok_or("golden missing seed")? as u32;
+                    let d = g
+                        .get("digest")
+                        .and_then(|v| v.as_arr())
+                        .ok_or("golden missing digest")?;
+                    if d.len() != 2 {
+                        return Err("digest must have 2 entries".into());
+                    }
+                    let digest = [
+                        d[0].as_f64().ok_or("bad digest[0]")? as f32,
+                        d[1].as_f64().ok_or("bad digest[1]")? as f32,
+                    ];
+                    goldens.push(Golden { seed, digest });
+                }
+            }
+            out.push(PayloadSpec {
+                name,
+                path: dir.join(artifact),
+                goldens,
+                hlo_bytes: p.get("hlo_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+            });
+        }
+        if out.is_empty() {
+            return Err("manifest has no payloads".into());
+        }
+        Ok(Manifest { payloads: out })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PayloadSpec> {
+        self.payloads.iter().find(|p| p.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.payloads.iter().map(|p| p.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "payloads": [
+            {"name": "matmul", "artifact": "matmul.hlo.txt",
+             "input": {"dtype": "u32", "shape": []},
+             "output": {"dtype": "f32", "shape": [2], "tuple": true},
+             "goldens": [{"seed": 42, "digest": [0.25, 64.0]},
+                          {"seed": 7, "digest": [0.5, 32.0]}],
+             "hlo_bytes": 100}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.payloads.len(), 1);
+        let p = m.get("matmul").unwrap();
+        assert_eq!(p.path, PathBuf::from("/tmp/a/matmul.hlo.txt"));
+        assert_eq!(p.goldens.len(), 2);
+        assert_eq!(p.goldens[0].seed, 42);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::parse(r#"{"format": "proto", "payloads": []}"#).unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration: parse the actual artifacts/ if `make artifacts` ran.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert_eq!(m.payloads.len(), 8);
+            for p in &m.payloads {
+                assert!(p.path.exists(), "{} missing", p.path.display());
+                assert_eq!(p.goldens.len(), 2);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (emitted once at
+//! build time by `python/compile/aot.py`) and execute them from the Rust
+//! request path. Python is never on the hot path.
+//!
+//! Pattern adapted from /opt/xla-example/src/bin/load_hlo.rs:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, ExecResult};
+pub use manifest::{Golden, Manifest, PayloadSpec};
+
+/// Returns the PJRT platform name of a freshly created CPU client (smoke).
+pub fn platform_name() -> Result<String, String> {
+    let client = xla::PjRtClient::cpu().map_err(|e| format!("{e:?}"))?;
+    Ok(client.platform_name())
+}

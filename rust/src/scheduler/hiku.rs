@@ -1,0 +1,318 @@
+//! Hiku: pull-based scheduling (Algorithm 1 of the paper).
+//!
+//! The core idea is to decouple worker selection from task assignment:
+//! after finishing an execution of function `f`, a worker *enqueues itself*
+//! in the idle queue `PQ_f` (the pull mechanism). A request for `f`
+//! dequeues the least-loaded enqueued worker — a warm start with locality,
+//! achieved without consistent hashing. If `PQ_f` is empty, the fallback
+//! mechanism routes to the least-connections worker with random
+//! tie-breaking. Sandbox destruction sends an eviction notification that
+//! removes the first matching entry from `PQ_f`.
+//!
+//! ## Priority-queue representation
+//!
+//! `PQ_f` is "sorted by the number of active connections" (paper, Fig 8).
+//! Since worker loads change continuously between enqueue and dequeue, a
+//! heap keyed on enqueue-time loads would decay stale. We therefore store
+//! `PQ_f` as a multiset of worker ids and resolve "least loaded" against
+//! the *live* load vector at dequeue time — O(|PQ_f|) per dequeue with
+//! |PQ_f| bounded by idle instances of `f` cluster-wide (a few dozen at
+//! paper scale). This matches the algorithm's semantics exactly (the sort
+//! key is the current load) while staying allocation-free on the hot path.
+
+use super::{least_loaded_random_tie, SchedCtx, Scheduler, WorkerId};
+use crate::workload::spec::FunctionId;
+
+pub struct Hiku {
+    /// PQ_f: one multiset of enqueued workers per function type. Indexed
+    /// densely by FunctionId; grows on demand.
+    idle_queues: Vec<Vec<WorkerId>>,
+    workers: usize,
+    /// Fallback used when PQ_f is empty. The paper (§IV-B): "The fallback
+    /// mechanism can be changed to other scheduling algorithms". `None` =
+    /// the paper's default (least connections, random tie-break).
+    fallback: Option<Box<dyn Scheduler>>,
+    // ---- diagnostics ----
+    pub pulls: u64,
+    pub fallbacks: u64,
+    pub evict_notifications: u64,
+}
+
+impl Hiku {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            idle_queues: Vec::new(),
+            workers,
+            fallback: None,
+            pulls: 0,
+            fallbacks: 0,
+            evict_notifications: 0,
+        }
+    }
+
+    /// Hiku with a custom fallback scheduler (ablation §IV-B).
+    pub fn with_fallback(workers: usize, fallback: Box<dyn Scheduler>) -> Self {
+        let mut h = Self::new(workers);
+        h.fallback = Some(fallback);
+        h
+    }
+
+    fn queue_mut(&mut self, f: FunctionId) -> &mut Vec<WorkerId> {
+        if f >= self.idle_queues.len() {
+            self.idle_queues.resize_with(f + 1, Vec::new);
+        }
+        &mut self.idle_queues[f]
+    }
+
+    pub fn queue_len(&self, f: FunctionId) -> usize {
+        self.idle_queues.get(f).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Dequeue the enqueued worker with the lowest current load.
+    fn dequeue_least_loaded(&mut self, f: FunctionId, loads: &[u32]) -> Option<WorkerId> {
+        let q = self.queue_mut(f);
+        if q.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        for i in 1..q.len() {
+            if loads[q[i]] < loads[q[best]] {
+                best = i;
+            }
+        }
+        Some(q.swap_remove(best))
+    }
+}
+
+impl Scheduler for Hiku {
+    fn name(&self) -> &'static str {
+        "hiku"
+    }
+
+    fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
+        // Pull mechanism (Algorithm 1, lines 2-5).
+        if let Some(w) = self.dequeue_least_loaded(f, ctx.loads) {
+            self.pulls += 1;
+            return w;
+        }
+        // Fallback mechanism (lines 7-11): least connections, random ties
+        // by default; configurable per §IV-B.
+        self.fallbacks += 1;
+        match &mut self.fallback {
+            Some(fb) => fb.select(f, ctx),
+            None => least_loaded_random_tie(ctx.loads, ctx.rng),
+        }
+    }
+
+    fn on_complete(&mut self, w: WorkerId, f: FunctionId, _ctx: &mut SchedCtx) {
+        // Pull mechanism (lines 14-15): the worker proactively signals
+        // readiness for new tasks of its last executed function type.
+        debug_assert!(w < self.workers);
+        self.queue_mut(f).push(w);
+    }
+
+    fn on_evict(&mut self, w: WorkerId, f: FunctionId) {
+        // Notification mechanism (lines 18-19): remove the first occurrence.
+        self.evict_notifications += 1;
+        let q = self.queue_mut(f);
+        if let Some(pos) = q.iter().position(|&x| x == w) {
+            q.remove(pos);
+        }
+    }
+
+    fn on_worker_added(&mut self, w: WorkerId) {
+        // Pull-based scheduling needs no remapping: the new worker starts
+        // pulling as soon as it completes its first (fallback-routed)
+        // execution. Propagate to the fallback if one is configured.
+        self.workers = self.workers.max(w + 1);
+        if let Some(fb) = &mut self.fallback {
+            fb.on_worker_added(w);
+        }
+    }
+
+    fn on_worker_removed(&mut self, w: WorkerId) {
+        // Purge every advertisement from the drained worker.
+        for q in &mut self.idle_queues {
+            q.retain(|&x| x != w);
+        }
+        self.workers = self.workers.min(w);
+        if let Some(fb) = &mut self.fallback {
+            fb.on_worker_removed(w);
+        }
+    }
+
+    fn idle_entries(&self) -> usize {
+        self.idle_queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::rng::Pcg64;
+
+    fn ctx<'a>(loads: &'a [u32], rng: &'a mut Pcg64) -> SchedCtx<'a> {
+        SchedCtx { loads, rng }
+    }
+
+    #[test]
+    fn pull_prefers_idle_worker() {
+        let mut h = Hiku::new(4);
+        let mut rng = Pcg64::new(1);
+        let loads = [5u32, 5, 5, 5]; // worker 2 idle-enqueued despite high load
+        h.on_complete(2, 7, &mut ctx(&loads, &mut rng));
+        let w = h.select(7, &mut ctx(&loads, &mut rng));
+        assert_eq!(w, 2, "must pull the enqueued worker");
+        assert_eq!(h.pulls, 1);
+        assert_eq!(h.fallbacks, 0);
+    }
+
+    #[test]
+    fn dequeue_is_least_loaded_entry() {
+        let mut h = Hiku::new(4);
+        let mut rng = Pcg64::new(2);
+        let loads = [9u32, 3, 7, 1];
+        for w in [0, 1, 2] {
+            h.on_complete(w, 0, &mut ctx(&loads, &mut rng));
+        }
+        // Worker 3 is least loaded overall but NOT enqueued; among the
+        // enqueued {0,1,2} the least loaded is 1.
+        assert_eq!(h.select(0, &mut ctx(&loads, &mut rng)), 1);
+        // Next pull: among {0,2} -> 2.
+        assert_eq!(h.select(0, &mut ctx(&loads, &mut rng)), 2);
+    }
+
+    #[test]
+    fn fallback_when_queue_empty() {
+        let mut h = Hiku::new(3);
+        let mut rng = Pcg64::new(3);
+        let loads = [4u32, 0, 2];
+        let w = h.select(9, &mut ctx(&loads, &mut rng));
+        assert_eq!(w, 1, "fallback must be least-connections");
+        assert_eq!(h.fallbacks, 1);
+    }
+
+    #[test]
+    fn queues_are_per_function() {
+        let mut h = Hiku::new(4);
+        let mut rng = Pcg64::new(4);
+        let loads = [0u32, 9, 9, 9];
+        h.on_complete(3, 5, &mut ctx(&loads, &mut rng));
+        // Request for a DIFFERENT function must not consume f=5's entry.
+        let w = h.select(6, &mut ctx(&loads, &mut rng));
+        assert_eq!(w, 0, "different function must take the fallback path");
+        assert_eq!(h.queue_len(5), 1);
+        // And the entry is still there for f=5.
+        assert_eq!(h.select(5, &mut ctx(&loads, &mut rng)), 3);
+    }
+
+    #[test]
+    fn eviction_removes_first_occurrence_only() {
+        let mut h = Hiku::new(4);
+        let mut rng = Pcg64::new(5);
+        let loads = [0u32; 4];
+        h.on_complete(2, 1, &mut ctx(&loads, &mut rng));
+        h.on_complete(2, 1, &mut ctx(&loads, &mut rng)); // two idle instances
+        assert_eq!(h.queue_len(1), 2);
+        h.on_evict(2, 1);
+        assert_eq!(h.queue_len(1), 1, "only the first occurrence is removed");
+        h.on_evict(2, 1);
+        assert_eq!(h.queue_len(1), 0);
+        // Eviction of a non-enqueued worker is a no-op.
+        h.on_evict(0, 1);
+        assert_eq!(h.queue_len(1), 0);
+    }
+
+    #[test]
+    fn multiset_semantics_multiple_workers() {
+        let mut h = Hiku::new(3);
+        let mut rng = Pcg64::new(6);
+        let loads = [1u32, 2, 3];
+        h.on_complete(0, 4, &mut ctx(&loads, &mut rng));
+        h.on_complete(1, 4, &mut ctx(&loads, &mut rng));
+        h.on_complete(2, 4, &mut ctx(&loads, &mut rng));
+        assert_eq!(h.select(4, &mut ctx(&loads, &mut rng)), 0);
+        assert_eq!(h.select(4, &mut ctx(&loads, &mut rng)), 1);
+        assert_eq!(h.select(4, &mut ctx(&loads, &mut rng)), 2);
+        assert_eq!(h.fallbacks, 0);
+    }
+
+    /// Property: a pull never returns a worker that is not enqueued, the
+    /// queue shrinks by exactly one per pull, and enqueue/evict/pull
+    /// sequences preserve multiset consistency.
+    #[test]
+    fn prop_queue_consistency() {
+        check("hiku-queue-consistency", PropConfig { cases: 200, ..Default::default() }, |rng, size| {
+            let workers = 2 + rng.index(6);
+            let functions = 1 + rng.index(4);
+            let mut h = Hiku::new(workers);
+            // Shadow model: multiset per function.
+            let mut shadow: Vec<Vec<WorkerId>> = vec![Vec::new(); functions];
+            let loads: Vec<u32> = (0..workers).map(|_| rng.next_bounded(10) as u32).collect();
+            for _ in 0..size * 4 {
+                let f = rng.index(functions);
+                match rng.index(3) {
+                    0 => {
+                        let w = rng.index(workers);
+                        let mut c = SchedCtx { loads: &loads, rng };
+                        h.on_complete(w, f, &mut c);
+                        shadow[f].push(w);
+                    }
+                    1 => {
+                        let w = rng.index(workers);
+                        h.on_evict(w, f);
+                        if let Some(p) = shadow[f].iter().position(|&x| x == w) {
+                            shadow[f].remove(p);
+                        }
+                    }
+                    _ => {
+                        let was_empty = shadow[f].is_empty();
+                        let before = h.queue_len(f);
+                        let mut c = SchedCtx { loads: &loads, rng };
+                        let w = h.select(f, &mut c);
+                        prop_assert!(w < workers, "worker {} out of range", w);
+                        if was_empty {
+                            prop_assert!(
+                                h.queue_len(f) == 0,
+                                "fallback must not consume queue entries"
+                            );
+                            prop_assert!(
+                                loads[w] == *loads.iter().min().unwrap(),
+                                "fallback not least-loaded"
+                            );
+                        } else {
+                            prop_assert!(
+                                h.queue_len(f) == before - 1,
+                                "pull must consume exactly one entry"
+                            );
+                            let p = shadow[f].iter().position(|&x| x == w);
+                            prop_assert!(p.is_some(), "pulled worker {} not in shadow", w);
+                            // Pulled worker must be least-loaded among enqueued.
+                            let min_l = shadow[f].iter().map(|&x| loads[x]).min().unwrap();
+                            prop_assert!(
+                                loads[w] == min_l,
+                                "pulled load {} != min enqueued {}",
+                                loads[w],
+                                min_l
+                            );
+                            shadow[f].remove(p.unwrap());
+                        }
+                    }
+                }
+                // Multiset sizes always agree.
+                for (fi, s) in shadow.iter().enumerate() {
+                    prop_assert!(
+                        h.queue_len(fi) == s.len(),
+                        "queue size mismatch f={}: {} vs {}",
+                        fi,
+                        h.queue_len(fi),
+                        s.len()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Scheduling algorithms: Hiku pull-based scheduling (the paper's
+//! contribution, Algorithm 1) and every baseline the paper evaluates
+//! against (§V: least-connections, random, CH-BL) plus the related
+//! algorithms discussed in §II/§VI (plain consistent hashing, naive
+//! hash-mod, RJ-CH, JSQ, power-of-d-choices) for ablations.
+//!
+//! ## Contract
+//!
+//! The router (sim or real-time server) owns the *load view*: it increments
+//! `loads[w]` when a request is routed to `w` and decrements it when the
+//! response returns — this is the paper's "number of active connections".
+//! Schedulers are notified of lifecycle events:
+//!
+//! - [`Scheduler::select`] — choose a worker for a request (the decision
+//!   whose overhead §V-B reports: 0.0023 ms for random .. 0.0149 ms for
+//!   pull-based on the paper's testbed).
+//! - [`Scheduler::on_complete`] — a worker finished executing `f` and now
+//!   holds an idle instance (Hiku enqueues the worker in `PQ_f`).
+//! - [`Scheduler::on_evict`] — a worker evicted an idle instance of `f`
+//!   (Hiku's sandbox-destruction notification, §IV-A).
+
+pub mod baselines;
+pub mod hiku;
+pub mod ring;
+
+use crate::config::SchedulerConfig;
+use crate::util::rng::Pcg64;
+use crate::workload::spec::FunctionId;
+
+pub use baselines::{HashMod, Jsq, LeastConnections, PowerOfD, RandomSched};
+pub use hiku::Hiku;
+pub use ring::{ChBl, Consistent, RjCh};
+
+pub type WorkerId = usize;
+
+/// Router-maintained state handed to every scheduler call.
+pub struct SchedCtx<'a> {
+    /// Active connections per worker (outstanding routed requests).
+    pub loads: &'a [u32],
+    /// Scheduler-owned RNG stream (tie-breaking, random selection).
+    pub rng: &'a mut Pcg64,
+}
+
+/// A scheduling algorithm. Object-safe so the runtime can swap algorithms
+/// from config (`scheduler.name`).
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Route a request for function type `f` to a worker.
+    fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId;
+
+    /// Worker `w` finished an execution of `f` (its sandbox is now idle).
+    fn on_complete(&mut self, _w: WorkerId, _f: FunctionId, _ctx: &mut SchedCtx) {}
+
+    /// Worker `w` evicted an idle instance of `f`.
+    fn on_evict(&mut self, _w: WorkerId, _f: FunctionId) {}
+
+    /// Auto-scaling: worker `w` (== previous worker count) joined the
+    /// cluster. §II-C's motivation for consistent hashing is exactly this
+    /// event — how many function->worker assignments get redistributed.
+    fn on_worker_added(&mut self, _w: WorkerId) {}
+
+    /// Auto-scaling: worker `w` (the highest id — scaling is LIFO) is
+    /// draining out of the cluster and must no longer be selected.
+    fn on_worker_removed(&mut self, _w: WorkerId) {}
+
+    /// Diagnostic: total idle-queue entries (Hiku) or 0.
+    fn idle_entries(&self) -> usize {
+        0
+    }
+}
+
+/// Least-loaded worker with uniform random tie-breaking — the fallback rule
+/// of Algorithm 1 (lines 8-11) and the whole of least-connections.
+pub fn least_loaded_random_tie(loads: &[u32], rng: &mut Pcg64) -> WorkerId {
+    debug_assert!(!loads.is_empty());
+    let min = *loads.iter().min().unwrap();
+    // Reservoir-sample uniformly among ties in one pass.
+    let mut chosen = 0usize;
+    let mut seen = 0u64;
+    for (w, &l) in loads.iter().enumerate() {
+        if l == min {
+            seen += 1;
+            if rng.next_bounded(seen) == 0 {
+                chosen = w;
+            }
+        }
+    }
+    chosen
+}
+
+/// Construct a scheduler by config name. `hiku+<name>` builds Hiku with a
+/// custom fallback (§IV-B ablation), e.g. `hiku+random`, `hiku+ch-bl`.
+pub fn make_scheduler(cfg: &SchedulerConfig, workers: usize) -> Result<Box<dyn Scheduler>, String> {
+    if let Some(fb_name) = cfg.name.strip_prefix("hiku+") {
+        let fb_cfg = SchedulerConfig { name: fb_name.to_string(), ..cfg.clone() };
+        if fb_name.starts_with("hiku") {
+            return Err("hiku fallback cannot itself be hiku".into());
+        }
+        let fallback = make_scheduler(&fb_cfg, workers)?;
+        return Ok(Box::new(Hiku::with_fallback(workers, fallback)));
+    }
+    let s: Box<dyn Scheduler> = match cfg.name.as_str() {
+        "hiku" | "pull-based" | "pull" => Box::new(Hiku::new(workers)),
+        "least-connections" | "lc" => Box::new(LeastConnections::new()),
+        "random" => Box::new(RandomSched::new(workers)),
+        "hash-mod" => Box::new(HashMod::new(workers)),
+        "consistent" | "ch" => Box::new(Consistent::new(workers, cfg.vnodes)),
+        "ch-bl" => Box::new(ChBl::new(workers, cfg.vnodes, cfg.ch_bl_c)),
+        "rj-ch" => Box::new(RjCh::new(workers, cfg.vnodes, cfg.ch_bl_c)),
+        "jsq" => Box::new(Jsq::new()),
+        "power-of-d" | "pod" => Box::new(PowerOfD::new(workers, cfg.power_d)),
+        other => return Err(format!("unknown scheduler '{other}'")),
+    };
+    Ok(s)
+}
+
+/// All scheduler names the evaluation sweeps (paper's four + extensions).
+pub const PAPER_SCHEDULERS: [&str; 4] = ["hiku", "ch-bl", "random", "least-connections"];
+pub const ALL_SCHEDULERS: [&str; 9] = [
+    "hiku",
+    "least-connections",
+    "random",
+    "hash-mod",
+    "consistent",
+    "ch-bl",
+    "rj-ch",
+    "jsq",
+    "power-of-d",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_constructs_all() {
+        for name in ALL_SCHEDULERS {
+            let cfg = SchedulerConfig { name: name.into(), ..Default::default() };
+            let s = make_scheduler(&cfg, 5).unwrap();
+            assert!(!s.name().is_empty());
+        }
+        let bad = SchedulerConfig { name: "bogus".into(), ..Default::default() };
+        assert!(make_scheduler(&bad, 5).is_err());
+    }
+
+    #[test]
+    fn least_loaded_picks_min() {
+        let mut rng = Pcg64::new(1);
+        let loads = [3u32, 1, 2, 1, 5];
+        for _ in 0..100 {
+            let w = least_loaded_random_tie(&loads, &mut rng);
+            assert!(w == 1 || w == 3);
+        }
+    }
+
+    #[test]
+    fn least_loaded_tie_break_uniform() {
+        let mut rng = Pcg64::new(2);
+        let loads = [1u32, 1, 1, 1];
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[least_loaded_random_tie(&loads, &mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / n as f64 - 0.25).abs() < 0.02, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn all_schedulers_select_in_range() {
+        let mut rng = Pcg64::new(3);
+        for name in ALL_SCHEDULERS {
+            let cfg = SchedulerConfig { name: name.into(), ..Default::default() };
+            let mut s = make_scheduler(&cfg, 7).unwrap();
+            let loads = vec![0u32; 7];
+            for f in 0..40 {
+                let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+                let w = s.select(f, &mut ctx);
+                assert!(w < 7, "{name} selected out-of-range worker {w}");
+            }
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! Consistent-hashing schedulers: the hash ring (§II-C, Fig 3), plain
+//! consistent hashing, consistent hashing with bounded loads (CH-BL [26],
+//! the paper's strongest baseline with c = 1.25), and random jumps for
+//! consistent hashing (RJ-CH [27], the cascaded-overflow fix).
+
+use super::{SchedCtx, Scheduler, WorkerId};
+use crate::util::hashing;
+use crate::util::rng::Pcg64;
+use crate::workload::spec::FunctionId;
+
+/// The hash ring: each worker owns `vnodes` points on a u64 ring; a key is
+/// served by the first worker point clockwise from the key's hash.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// (point, worker) sorted by point.
+    points: Vec<(u64, WorkerId)>,
+    workers: usize,
+}
+
+impl HashRing {
+    pub fn new(workers: usize, vnodes: usize) -> Self {
+        assert!(workers > 0 && vnodes > 0);
+        let mut ring = Self { points: Vec::new(), workers: 0 };
+        for w in 0..workers {
+            ring.add_worker(w, vnodes);
+        }
+        ring
+    }
+
+    /// Add a worker's virtual nodes (auto-scaling up).
+    pub fn add_worker(&mut self, w: WorkerId, vnodes: usize) {
+        let base = hashing::mix64(0x57_u64.wrapping_mul(w as u64 + 1));
+        for v in 0..vnodes {
+            let point = hashing::combine(base, v as u64);
+            self.points.push((point, w));
+        }
+        self.points.sort_unstable();
+        self.workers = self.workers.max(w + 1);
+    }
+
+    /// Remove a worker's virtual nodes (auto-scaling down).
+    pub fn remove_worker(&mut self, w: WorkerId) {
+        self.points.retain(|&(_, pw)| pw != w);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Index of the first ring point clockwise from `hash`.
+    fn start_index(&self, hash: u64) -> usize {
+        match self.points.binary_search_by(|&(p, _)| p.cmp(&hash)) {
+            Ok(i) => i,
+            Err(i) => i % self.points.len(),
+        }
+    }
+
+    /// The worker owning `key` (plain consistent hashing).
+    pub fn lookup(&self, key: u64) -> WorkerId {
+        self.points[self.start_index(key)].1
+    }
+
+    /// Walk clockwise from `key`, returning the first worker accepted by
+    /// `ok`. Falls back to the primary owner if nobody accepts (all
+    /// overloaded — bounded-load threshold guarantees this cannot happen
+    /// when capacity is computed from the live total, but keep it total).
+    pub fn lookup_where<F: FnMut(WorkerId) -> bool>(&self, key: u64, mut ok: F) -> WorkerId {
+        let start = self.start_index(key);
+        let n = self.points.len();
+        let mut seen = 0usize;
+        let mut seen_mask = vec![false; self.workers];
+        let mut i = start;
+        loop {
+            let w = self.points[i].1;
+            if !seen_mask[w] {
+                if ok(w) {
+                    return w;
+                }
+                seen_mask[w] = true;
+                seen += 1;
+                if seen == self.workers {
+                    return self.points[start].1;
+                }
+            }
+            i = (i + 1) % n;
+        }
+    }
+
+    /// Distinct workers in clockwise order from `key` (for tests).
+    pub fn walk(&self, key: u64) -> Vec<WorkerId> {
+        let mut order = Vec::new();
+        self.lookup_where(key, |w| {
+            order.push(w);
+            false
+        });
+        order
+    }
+}
+
+/// Key for a function type: a stable hash of its id. Real deployments hash
+/// the function *name*; ids are bijective with names in the registry, and
+/// mix64 gives the same uniformity.
+#[inline]
+pub fn function_key(f: FunctionId) -> u64 {
+    hashing::mix64(0x9E37_0000_0000_0000 ^ f as u64)
+}
+
+/// CH-BL capacity: ceil(c * (inflight + 1) / workers) — each worker may
+/// hold at most a factor c above the average load, counting the request
+/// being placed ([26]'s bounded-load invariant).
+#[inline]
+pub fn chbl_capacity(c: f64, total_inflight: u64, workers: usize) -> u32 {
+    let avg = (total_inflight + 1) as f64 / workers as f64;
+    (c * avg).ceil() as u32
+}
+
+/// Plain consistent hashing (the common FaaS scheduler, §II-C).
+#[derive(Clone, Debug)]
+pub struct Consistent {
+    ring: HashRing,
+    vnodes: usize,
+}
+
+impl Consistent {
+    pub fn new(workers: usize, vnodes: usize) -> Self {
+        Self { ring: HashRing::new(workers, vnodes), vnodes }
+    }
+}
+
+impl Scheduler for Consistent {
+    fn name(&self) -> &'static str {
+        "consistent"
+    }
+
+    fn select(&mut self, f: FunctionId, _ctx: &mut SchedCtx) -> WorkerId {
+        self.ring.lookup(function_key(f))
+    }
+
+    fn on_worker_added(&mut self, w: WorkerId) {
+        self.ring.add_worker(w, self.vnodes);
+    }
+
+    fn on_worker_removed(&mut self, w: WorkerId) {
+        self.ring.remove_worker(w);
+    }
+}
+
+/// Consistent hashing with bounded loads (CH-BL [26]); threshold c = 1.25
+/// per the paper. Overloaded workers overflow to the next clockwise
+/// non-overloaded worker — which §II-C notes can cascade under load.
+#[derive(Clone, Debug)]
+pub struct ChBl {
+    ring: HashRing,
+    c: f64,
+    workers: usize,
+    vnodes: usize,
+    /// Overflow decisions taken (diagnostics for the cascade ablation).
+    pub overflows: u64,
+}
+
+impl ChBl {
+    pub fn new(workers: usize, vnodes: usize, c: f64) -> Self {
+        assert!(c >= 1.0);
+        Self { ring: HashRing::new(workers, vnodes), c, workers, vnodes, overflows: 0 }
+    }
+}
+
+impl Scheduler for ChBl {
+    fn name(&self) -> &'static str {
+        "ch-bl"
+    }
+
+    fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
+        let total: u64 = ctx.loads.iter().map(|&l| l as u64).sum();
+        let cap = chbl_capacity(self.c, total, self.workers);
+        let primary = self.ring.lookup(function_key(f));
+        let w = self.ring.lookup_where(function_key(f), |w| ctx.loads[w] < cap);
+        if w != primary {
+            self.overflows += 1;
+        }
+        w
+    }
+
+    fn on_worker_added(&mut self, w: WorkerId) {
+        self.ring.add_worker(w, self.vnodes);
+        self.workers = self.workers.max(w + 1);
+    }
+
+    fn on_worker_removed(&mut self, w: WorkerId) {
+        self.ring.remove_worker(w);
+        self.workers = self.workers.min(w).max(1);
+    }
+}
+
+/// Random jumps for consistent hashing (RJ-CH [27]): like CH-BL, but when
+/// the primary worker is overloaded, jump to a uniformly random
+/// non-overloaded worker instead of walking clockwise — avoiding cascaded
+/// overflows at the cost of locality.
+#[derive(Clone, Debug)]
+pub struct RjCh {
+    ring: HashRing,
+    c: f64,
+    workers: usize,
+    vnodes: usize,
+    pub jumps: u64,
+}
+
+impl RjCh {
+    pub fn new(workers: usize, vnodes: usize, c: f64) -> Self {
+        assert!(c >= 1.0);
+        Self { ring: HashRing::new(workers, vnodes), c, workers, vnodes, jumps: 0 }
+    }
+
+    fn random_underloaded(&self, cap: u32, loads: &[u32], rng: &mut Pcg64) -> Option<WorkerId> {
+        // Reservoir-sample uniformly among non-overloaded workers.
+        let mut chosen = None;
+        let mut seen = 0u64;
+        for (w, &l) in loads.iter().enumerate() {
+            if l < cap {
+                seen += 1;
+                if rng.next_bounded(seen) == 0 {
+                    chosen = Some(w);
+                }
+            }
+        }
+        chosen
+    }
+}
+
+impl Scheduler for RjCh {
+    fn name(&self) -> &'static str {
+        "rj-ch"
+    }
+
+    fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
+        let total: u64 = ctx.loads.iter().map(|&l| l as u64).sum();
+        let cap = chbl_capacity(self.c, total, self.workers);
+        let primary = self.ring.lookup(function_key(f));
+        if ctx.loads[primary] < cap {
+            return primary;
+        }
+        self.jumps += 1;
+        self.random_underloaded(cap, ctx.loads, ctx.rng).unwrap_or(primary)
+    }
+
+    fn on_worker_added(&mut self, w: WorkerId) {
+        self.ring.add_worker(w, self.vnodes);
+        self.workers = self.workers.max(w + 1);
+    }
+
+    fn on_worker_removed(&mut self, w: WorkerId) {
+        self.ring.remove_worker(w);
+        self.workers = self.workers.min(w).max(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::hashing;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn lookup_stable() {
+        let ring = HashRing::new(5, 100);
+        for f in 0..100 {
+            assert_eq!(ring.lookup(function_key(f)), ring.lookup(function_key(f)));
+        }
+    }
+
+    #[test]
+    fn ring_balances_keys_roughly() {
+        let ring = HashRing::new(5, 200);
+        let mut counts = [0usize; 5];
+        for f in 0..10_000 {
+            counts[ring.lookup(function_key(f))] += 1;
+        }
+        for &c in &counts {
+            // Within ±40% of perfect balance with 200 vnodes.
+            assert!((1_200..=2_800).contains(&c), "key spread skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn removing_worker_only_remaps_its_keys() {
+        // §II-C's minimal-redistribution property (Fig 3): keys not owned
+        // by the removed worker keep their assignment.
+        let ring_before = HashRing::new(6, 100);
+        let mut ring_after = ring_before.clone();
+        ring_after.remove_worker(3);
+        let mut remapped = 0;
+        for f in 0..5_000 {
+            let before = ring_before.lookup(function_key(f));
+            let after = ring_after.lookup(function_key(f));
+            if before != 3 {
+                assert_eq!(before, after, "key {f} moved although its worker stayed");
+            } else {
+                assert_ne!(after, 3);
+                remapped += 1;
+            }
+        }
+        // Roughly 1/6 of keys lived on worker 3.
+        assert!((500..1200).contains(&remapped), "remapped {remapped}");
+    }
+
+    #[test]
+    fn hash_mod_redistributes_many_more_keys_than_ring() {
+        // The motivation for consistent hashing (§II-C): compare keys moved
+        // when going from 6 to 5 workers.
+        let moved_mod = (0..5_000u64)
+            .filter(|&f| {
+                (hashing::mix64(f) % 6) != (hashing::mix64(f) % 5)
+            })
+            .count();
+        let ring_before = HashRing::new(6, 100);
+        let mut ring_after = ring_before.clone();
+        ring_after.remove_worker(5);
+        let moved_ring = (0..5_000)
+            .filter(|&f| ring_before.lookup(function_key(f)) != ring_after.lookup(function_key(f)))
+            .count();
+        assert!(
+            moved_mod > 3 * moved_ring,
+            "mod moved {moved_mod}, ring moved {moved_ring}"
+        );
+    }
+
+    #[test]
+    fn chbl_respects_capacity() {
+        let mut s = ChBl::new(4, 100, 1.25);
+        let mut rng = Pcg64::new(1);
+        // Worker loads: primary owner of f=0 will be checked against cap.
+        let loads = [10u32, 0, 0, 0];
+        let total = 10u64;
+        let cap = chbl_capacity(1.25, total, 4);
+        assert_eq!(cap, 4); // ceil(1.25 * 11/4) = ceil(3.4375)
+        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let w = s.select(0, &mut ctx);
+        assert_ne!(w, 0, "overloaded worker must be skipped (load 10 >= cap {cap})");
+    }
+
+    #[test]
+    fn chbl_cascade_walks_clockwise() {
+        let mut s = ChBl::new(4, 100, 1.25);
+        let mut rng = Pcg64::new(2);
+        let key = function_key(7);
+        let order = s.ring.walk(key);
+        // Overload the first two workers in clockwise order.
+        let mut loads = [0u32; 4];
+        loads[order[0]] = 100;
+        loads[order[1]] = 100;
+        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let w = s.select(7, &mut ctx);
+        assert_eq!(w, order[2], "must cascade to the next non-overloaded clockwise worker");
+        assert_eq!(s.overflows, 1);
+    }
+
+    #[test]
+    fn rjch_jumps_to_random_underloaded() {
+        let mut s = RjCh::new(5, 100, 1.25);
+        let mut rng = Pcg64::new(3);
+        let key_owner = {
+            let loads = [0u32; 5];
+            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            s.select(11, &mut ctx)
+        };
+        // Overload the owner; the jump target must be uniform over others.
+        let mut loads = [0u32; 5];
+        loads[key_owner] = 100;
+        let mut counts = [0usize; 5];
+        for _ in 0..20_000 {
+            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            counts[s.select(11, &mut ctx)] += 1;
+        }
+        assert_eq!(counts[key_owner], 0);
+        for (w, &c) in counts.iter().enumerate() {
+            if w != key_owner {
+                assert!((c as f64 / 20_000.0 - 0.25).abs() < 0.03, "{counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_overloaded_falls_back_to_primary() {
+        let mut s = ChBl::new(3, 50, 1.0);
+        let mut rng = Pcg64::new(4);
+        let loads = [50u32, 50, 50];
+        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let w = s.select(3, &mut ctx);
+        assert!(w < 3);
+    }
+
+    /// Property: ring monotonicity — adding a worker only steals keys (no
+    /// key moves between two pre-existing workers).
+    #[test]
+    fn prop_ring_monotone_under_growth() {
+        check("ring-monotone", PropConfig { cases: 60, max_size: 12, ..Default::default() }, |rng, size| {
+            let workers = 2 + size % 10;
+            let vnodes = 20 + rng.index(80);
+            let ring_before = HashRing::new(workers, vnodes);
+            let mut ring_after = ring_before.clone();
+            ring_after.add_worker(workers, vnodes);
+            for f in 0..500 {
+                let b = ring_before.lookup(function_key(f));
+                let a = ring_after.lookup(function_key(f));
+                prop_assert!(
+                    a == b || a == workers,
+                    "key {} moved {} -> {} (not to the new worker)",
+                    f,
+                    b,
+                    a
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: CH-BL never routes to a worker at/above capacity while any
+    /// worker is below it.
+    #[test]
+    fn prop_chbl_bounded() {
+        check("chbl-bounded", PropConfig { cases: 120, ..Default::default() }, |rng, size| {
+            let workers = 2 + rng.index(8);
+            let mut s = ChBl::new(workers, 64, 1.25);
+            let loads: Vec<u32> =
+                (0..workers).map(|_| rng.next_bounded(size as u64 + 1) as u32).collect();
+            let total: u64 = loads.iter().map(|&l| l as u64).sum();
+            let cap = chbl_capacity(1.25, total, workers);
+            let any_under = loads.iter().any(|&l| l < cap);
+            for f in 0..30 {
+                let mut ctx = SchedCtx { loads: &loads, rng };
+                let w = s.select(f, &mut ctx);
+                if any_under {
+                    prop_assert!(
+                        loads[w] < cap,
+                        "routed to overloaded worker {} (load {}, cap {})",
+                        w,
+                        loads[w],
+                        cap
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,246 @@
+//! Real-time serving backend: scheduler (router) thread + worker threads
+//! executing the AOT-compiled PJRT payloads. This is the end-to-end
+//! validation path — the same Scheduler trait and metrics as the simulator,
+//! but with wall-clock time and real XLA compilation as the cold start.
+//!
+//! Topology (vLLM-router-like leader/worker):
+//!
+//! ```text
+//!   router thread ──ExecMsg──▶ worker 0 thread (PJRT engine + LRU cache)
+//!        ▲  │                  worker 1 thread
+//!        │  └─────ExecMsg────▶ ...
+//!        └──Response(+evictions)─────────────┘
+//! ```
+//!
+//! Workers are OS threads with `std::sync::mpsc` channels (no tokio is
+//! vendored in this image; the request path is compute-bound so a
+//! thread-per-worker model is the right shape anyway).
+
+use crate::config::Config;
+use crate::metrics::RunMetrics;
+use crate::runtime::{Engine, Manifest};
+use crate::scheduler::{make_scheduler, SchedCtx};
+use crate::util::rng::Pcg64;
+use crate::workload::loadgen::Workload;
+use crate::workload::spec::FunctionRegistry;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Request sent to a worker thread.
+struct ExecMsg {
+    rid: u64,
+    /// Payload (base-app) name to execute.
+    payload: String,
+    /// Function type id (for eviction notifications).
+    function: usize,
+    seed: u32,
+}
+
+/// Worker -> router response.
+struct Response {
+    rid: u64,
+    worker: usize,
+    function: usize,
+    cold: bool,
+    digest: [f32; 2],
+    /// Function ids evicted from this worker's cache (by payload name
+    /// mapping; see `payload_to_functions`).
+    evicted_payloads: Vec<String>,
+}
+
+/// Spawn one worker thread owning a PJRT engine.
+fn spawn_worker(
+    id: usize,
+    artifacts_dir: String,
+    capacity: usize,
+    rx: mpsc::Receiver<ExecMsg>,
+    tx: mpsc::Sender<Result<Response, String>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut engine = match Engine::from_dir(&artifacts_dir, capacity) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = tx.send(Err(format!("worker {id}: {e}")));
+                return;
+            }
+        };
+        while let Ok(msg) = rx.recv() {
+            match engine.execute(&msg.payload, msg.seed) {
+                Ok(r) => {
+                    let _ = tx.send(Ok(Response {
+                        rid: msg.rid,
+                        worker: id,
+                        function: msg.function,
+                        cold: r.cold,
+                        digest: r.digest,
+                        evicted_payloads: r.evicted,
+                    }));
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(format!("worker {id}: {e}")));
+                }
+            }
+        }
+    })
+}
+
+/// Serve `n_requests` through the real-time cluster, closed-loop over the
+/// configured VUs, and return the usual metrics. Think times come from the
+/// workload config (scale them down for demos — wall-clock!).
+pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
+    let manifest = Manifest::load(&cfg.runtime.artifacts_dir)?;
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    // Each function copy maps to its base app's payload artifact.
+    let payload_of: Vec<String> = (0..registry.len())
+        .map(|f| registry.app(f).name.to_string())
+        .collect();
+    for p in &payload_of {
+        if manifest.get(p).is_none() {
+            return Err(format!("artifact for payload '{p}' missing; run `make artifacts`"));
+        }
+    }
+
+    let workers = cfg.cluster.workers;
+    // Cache capacity from the memory pool: one executable per ~256 MB of
+    // configured sandbox memory (same pressure model as the simulator).
+    let capacity = ((cfg.cluster.mem_mb / 256).max(1) as usize).min(registry.len());
+
+    let (resp_tx, resp_rx) = mpsc::channel::<Result<Response, String>>();
+    let mut work_tx = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let (tx, rx) = mpsc::channel::<ExecMsg>();
+        handles.push(spawn_worker(
+            w,
+            cfg.runtime.artifacts_dir.clone(),
+            capacity,
+            rx,
+            resp_tx.clone(),
+        ));
+        work_tx.push(tx);
+    }
+
+    crate::log_info!(
+        "server",
+        "starting {} PJRT workers (cache capacity {}), scheduler {}",
+        workers,
+        capacity,
+        cfg.scheduler.name
+    );
+    let mut scheduler = make_scheduler(&cfg.scheduler, workers)?;
+    let mut sched_rng = Pcg64::new(cfg.workload.seed ^ 0x5EED);
+    let workload = Workload::generate(&cfg.workload, registry.len(), cfg.workload.seed);
+    let vus = cfg.workload.vus.min(n_requests.max(1));
+
+    let mut metrics = RunMetrics::new(
+        &cfg.scheduler.name,
+        workers,
+        vus,
+        1.0, // duration finalized after the run (wall-clock)
+    );
+    let start = Instant::now();
+    let mut loads = vec![0u32; workers];
+    let mut issued = 0usize;
+    let mut completed = 0usize;
+    // Per-request bookkeeping.
+    let mut arrival: Vec<Instant> = Vec::new();
+    let mut vu_of: Vec<usize> = Vec::new();
+    let mut step_of: Vec<usize> = Vec::new();
+    // VU cursors and wake times.
+    let mut vu_step = vec![0usize; vus];
+    let mut wake: Vec<(Instant, usize)> = (0..vus).map(|v| (start, v)).collect();
+
+    while completed < n_requests {
+        // Wake any due VUs (issue their next request).
+        let now = Instant::now();
+        let mut i = 0;
+        while i < wake.len() {
+            if wake[i].0 <= now && issued < n_requests {
+                let vu = wake[i].1;
+                wake.swap_remove(i);
+                let step = vu_step[vu];
+                if step >= workload.vus[vu].steps.len() {
+                    continue;
+                }
+                // ---- issue the VU's next request ----
+                let f = workload.vus[vu].steps[step].function;
+                let rid = arrival.len() as u64;
+                let w = {
+                    let mut ctx = SchedCtx { loads: &loads, rng: &mut sched_rng };
+                    scheduler.select(f, &mut ctx)
+                };
+                loads[w] += 1;
+                metrics.record_assignment(w, start.elapsed().as_secs_f64());
+                arrival.push(Instant::now());
+                vu_of.push(vu);
+                step_of.push(step);
+                work_tx[w]
+                    .send(ExecMsg {
+                        rid,
+                        payload: payload_of[f].clone(),
+                        function: f,
+                        seed: (rid as u32).wrapping_mul(2654435761),
+                    })
+                    .map_err(|_| "worker channel closed".to_string())?;
+                issued += 1;
+            } else {
+                i += 1;
+            }
+        }
+        // Wait for a response (or the next VU wake time).
+        let timeout = wake
+            .iter()
+            .map(|(t, _)| t.saturating_duration_since(now))
+            .min()
+            .unwrap_or(Duration::from_millis(5))
+            .max(Duration::from_micros(100));
+        match resp_rx.recv_timeout(timeout) {
+            Ok(Ok(r)) => {
+                loads[r.worker] -= 1;
+                // Eviction notifications: every function copy whose payload
+                // was evicted from this worker's cache.
+                for p in &r.evicted_payloads {
+                    for f in 0..registry.len() {
+                        if &payload_of[f] == p {
+                            scheduler.on_evict(r.worker, f);
+                        }
+                    }
+                }
+                {
+                    let mut ctx = SchedCtx { loads: &loads, rng: &mut sched_rng };
+                    scheduler.on_complete(r.worker, r.function, &mut ctx);
+                }
+                let rid = r.rid as usize;
+                let lat = arrival[rid].elapsed().as_secs_f64();
+                metrics.record_response(lat, r.cold, 0.0, start.elapsed().as_secs_f64());
+                debug_assert!(r.digest.iter().all(|d| d.is_finite()));
+                completed += 1;
+                // Closed loop: schedule the VU's next step.
+                let vu = vu_of[rid];
+                let think = workload.vus[vu].steps[step_of[rid]].think_s;
+                vu_step[vu] = step_of[rid] + 1;
+                wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err("all workers disconnected".into());
+            }
+        }
+    }
+
+    metrics.duration_s = start.elapsed().as_secs_f64();
+    // Drop senders so workers exit; join them.
+    drop(work_tx);
+    drop(resp_tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    // Real-time server tests live in rust/tests/e2e.rs (they need built
+    // artifacts and real wall-clock time).
+}

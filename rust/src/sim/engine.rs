@@ -1,0 +1,551 @@
+//! The discrete-event simulation engine: wires workload -> scheduler(s) ->
+//! cluster and produces [`RunMetrics`].
+//!
+//! This reproduces the paper's cluster experiments (§V) without the AWS
+//! testbed: the same closed-loop VU workload, the same scheduler contract,
+//! the same sandbox lifecycle, with service times calibrated from Table I.
+//! Everything is deterministic under (config, seed): scripts, service-time
+//! streams and scheduler tie-breaking derive from split PRNG streams.
+//!
+//! Beyond the paper's base protocol the engine supports three extensions
+//! used by the ablation benches:
+//! - **auto-scaling** (`scale_times`): workers join mid-run; schedulers are
+//!   notified via `on_worker_added` (§II-C's redistribution story);
+//! - **multiple scheduler instances** (`scheduler.instances`): VUs are
+//!   sharded across independent, synchronization-free schedulers, each
+//!   with its own local load view (§I's distributed-scheduling claim);
+//! - **open-loop trace replay** (`run_open_loop`): arrivals from a
+//!   synthetic Azure-like trace instead of closed-loop VUs (burst
+//!   response, Fig 6 tie-in).
+
+use super::events::{Event, EventQueue};
+use crate::config::Config;
+use crate::metrics::RunMetrics;
+use crate::platform::{AssignOutcome, Cluster, StartInfo, Worker, WorkerId};
+use crate::scheduler::{SchedCtx, Scheduler};
+use crate::util::rng::Pcg64;
+use crate::workload::loadgen::{OpenLoopTrace, Workload};
+use crate::workload::spec::FunctionRegistry;
+
+/// Per-request bookkeeping.
+#[derive(Clone, Copy, Debug)]
+struct RequestMeta {
+    /// Closed loop: issuing VU; open loop: usize::MAX.
+    vu: usize,
+    step: usize,
+    function: usize,
+    worker: WorkerId,
+    /// Scheduler instance that routed this request.
+    sched: usize,
+    arrival: f64,
+}
+
+/// One simulation run: scheduler instance(s) against the workload.
+pub struct Simulation<'a> {
+    cfg: &'a Config,
+    registry: &'a FunctionRegistry,
+    workload: &'a Workload,
+    /// Scheduler instances; VU v is served by instance v % len.
+    schedulers: Vec<Box<dyn Scheduler>>,
+    cluster: Cluster,
+    queue: EventQueue,
+    /// Per-instance router-side active connections (local load views —
+    /// instances do not synchronize, per the paper's distributed design).
+    loads: Vec<Vec<u32>>,
+    sched_rng: Pcg64,
+    service_rng: Pcg64,
+    /// (time, up) auto-scaling events; up=false drains the highest worker.
+    scale_events: Vec<(f64, bool)>,
+    /// Workers currently eligible for selection (scale-down shrinks this;
+    /// drained workers still exist in the cluster to finish in-flight work).
+    active_workers: usize,
+    requests: Vec<RequestMeta>,
+    /// EWMA arrival rate per function (req/s), for the pre-warm policy.
+    arrival_rate: Vec<f64>,
+    last_arrival: Vec<f64>,
+    /// Cold-start flag per request, resolved when its execution starts.
+    cold_flags: Vec<bool>,
+    /// Worker-queue delay per request.
+    queue_delays: Vec<f64>,
+    metrics: RunMetrics,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        registry: &'a FunctionRegistry,
+        workload: &'a Workload,
+        scheduler: Box<dyn Scheduler>,
+        seed: u64,
+    ) -> Self {
+        Self::with_schedulers(cfg, registry, workload, vec![scheduler], seed)
+    }
+
+    pub fn with_schedulers(
+        cfg: &'a Config,
+        registry: &'a FunctionRegistry,
+        workload: &'a Workload,
+        schedulers: Vec<Box<dyn Scheduler>>,
+        seed: u64,
+    ) -> Self {
+        assert!(!schedulers.is_empty());
+        let mut root = Pcg64::new(seed ^ 0x51D0_C0DE);
+        let sched_rng = root.split();
+        let service_rng = root.split();
+        let name = schedulers[0].name().to_string();
+        let n = schedulers.len();
+        Self {
+            cfg,
+            registry,
+            workload,
+            schedulers,
+            cluster: Cluster::new(&cfg.cluster),
+            queue: EventQueue::new(),
+            loads: vec![vec![0; cfg.cluster.workers]; n],
+            sched_rng,
+            service_rng,
+            scale_events: Vec::new(),
+            active_workers: cfg.cluster.workers,
+            // Pre-size per-request tables to the scripted upper bound:
+            // avoids realloc + page-fault churn in the hot loop (§Perf).
+            requests: Vec::with_capacity(workload.total_steps().min(4_000_000)),
+            arrival_rate: vec![0.0; registry.len()],
+            last_arrival: vec![-1.0; registry.len()],
+            cold_flags: Vec::new(),
+            queue_delays: Vec::new(),
+            metrics: RunMetrics::new(
+                &name,
+                cfg.cluster.workers,
+                cfg.workload.vus,
+                cfg.workload.duration_s,
+            ),
+        }
+    }
+
+    /// Schedule auto-scaling events: one worker joins at each time.
+    pub fn with_scale_times(mut self, times: &[f64]) -> Self {
+        self.scale_events = times.iter().map(|&t| (t, true)).collect();
+        self
+    }
+
+    /// Schedule mixed scale events: (time, up). Scale-down is LIFO — the
+    /// highest-id worker drains.
+    pub fn with_scale_events(mut self, events: &[(f64, bool)]) -> Self {
+        self.scale_events = events.to_vec();
+        self
+    }
+
+    /// Run the closed-loop VU workload to completion.
+    pub fn run(mut self) -> RunMetrics {
+        for &(t, up) in &self.scale_events.clone() {
+            self.queue.push_at(t, Event::Scale { up });
+        }
+        for (vu, script) in self.workload.vus.iter().enumerate() {
+            self.queue.push_at(script.start_delay_s, Event::Arrival { vu, step: 0 });
+        }
+        if self.cfg.cluster.prewarm {
+            self.queue.push_at(1.0, Event::PreWarmTick);
+        }
+        self.queue.push_at(self.sweep_dt(), Event::SweepTick);
+        self.event_loop();
+        self.metrics
+    }
+
+    /// Keep-alive sweep interval: fine-grained for short TTLs, 1 Hz cap.
+    fn sweep_dt(&self) -> f64 {
+        (self.cfg.cluster.keep_alive_s / 2.0).clamp(0.05, 1.0)
+    }
+
+    /// Run an open-loop trace: arrivals at fixed timestamps, ignoring
+    /// completions (burst-response experiments).
+    pub fn run_open_loop(mut self, trace: &OpenLoopTrace) -> RunMetrics {
+        for &(t, up) in &self.scale_events.clone() {
+            self.queue.push_at(t, Event::Scale { up });
+        }
+        for (index, &(t, _)) in trace.arrivals.iter().enumerate() {
+            if t >= self.cfg.workload.duration_s {
+                break;
+            }
+            self.queue.push_at(t, Event::TraceArrival { index });
+        }
+        self.queue.push_at(self.sweep_dt(), Event::SweepTick);
+        // Steal the arrivals for dispatch (cheap copy of (f64, usize)).
+        let arrivals = trace.arrivals.clone();
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::TraceArrival { index } => {
+                    let (_, f) = arrivals[index];
+                    self.issue(usize::MAX, index, f, t);
+                }
+                other => self.dispatch(other, t),
+            }
+        }
+        self.metrics
+    }
+
+    fn event_loop(&mut self) {
+        while let Some((t, ev)) = self.queue.pop() {
+            self.dispatch(ev, t);
+        }
+    }
+
+    fn dispatch(&mut self, ev: Event, t: f64) {
+        match ev {
+            Event::Arrival { vu, step } => self.on_arrival(vu, step, t),
+            Event::Completion { worker, sandbox, request } => {
+                self.on_completion(worker, sandbox, request, t)
+            }
+            Event::SweepTick => self.on_sweep(t),
+            Event::KeepAlive { worker, sandbox, epoch } => {
+                // Precise per-sandbox expiry (unused by the default sweep
+                // mode, kept for API completeness).
+                if let Some(f) =
+                    self.cluster.worker_mut(worker).expire_keepalive(sandbox, epoch)
+                {
+                    self.notify_evict(worker, f);
+                }
+            }
+            Event::Scale { up } => self.on_scale(up),
+            Event::PreWarmTick => self.on_prewarm_tick(t),
+            Event::PreWarmDone { worker, sandbox } => self.on_prewarm_done(worker, sandbox, t),
+            Event::TraceArrival { .. } => unreachable!("only in run_open_loop"),
+        }
+    }
+
+    /// Periodic keep-alive sweep across all workers.
+    fn on_sweep(&mut self, t: f64) {
+        let cutoff = t - self.cfg.cluster.keep_alive_s;
+        for w in 0..self.cluster.len() {
+            let evicted = self.cluster.worker_mut(w).sweep_keepalive(cutoff);
+            for f in evicted {
+                self.notify_evict(w, f);
+            }
+        }
+        let next = t + self.sweep_dt();
+        // Stop sweeping once no more work can arrive and drain completes.
+        if next < self.cfg.workload.duration_s + self.cfg.cluster.keep_alive_s {
+            self.queue.push_at(next, Event::SweepTick);
+        }
+    }
+
+    /// A worker joins or drains out of the cluster (auto-scaling).
+    fn on_scale(&mut self, up: bool) {
+        crate::log_debug!(
+            "sim",
+            "scale {} at t={:.1}s (active {})",
+            if up { "up" } else { "down" },
+            self.queue.now(),
+            self.active_workers
+        );
+        if up {
+            if self.active_workers < self.cluster.len() {
+                // Re-activate a previously drained worker slot.
+                let id = self.active_workers;
+                self.active_workers += 1;
+                for s in &mut self.schedulers {
+                    s.on_worker_added(id);
+                }
+                return;
+            }
+            let id = self.cluster.len();
+            self.cluster
+                .workers
+                .push(Worker::new(id, self.cfg.cluster.mem_mb, self.cfg.cluster.concurrency));
+            for loads in &mut self.loads {
+                loads.push(0);
+            }
+            self.active_workers += 1;
+            self.metrics.imbalance.add_worker();
+            for s in &mut self.schedulers {
+                s.on_worker_added(id);
+            }
+        } else {
+            if self.active_workers <= 1 {
+                return; // never drain the last worker
+            }
+            self.active_workers -= 1;
+            let id = self.active_workers;
+            for s in &mut self.schedulers {
+                s.on_worker_removed(id);
+            }
+            // Reclaim the drained worker's idle sandboxes immediately.
+            let evicted = self.cluster.worker_mut(id).drain_idle();
+            for f in evicted {
+                self.notify_evict(id, f);
+            }
+        }
+    }
+
+    /// Broadcast an eviction notification. With one instance this is the
+    /// paper's exact mechanism; with several it is conservative (an entry
+    /// is dropped from every instance that advertises the worker, never
+    /// leaving a stale entry behind).
+    fn notify_evict(&mut self, w: WorkerId, f: usize) {
+        for s in &mut self.schedulers {
+            s.on_evict(w, f);
+        }
+    }
+
+    fn on_arrival(&mut self, vu: usize, step: usize, t: f64) {
+        // The run stops issuing at duration_s; in-flight requests drain.
+        if t >= self.cfg.workload.duration_s {
+            return;
+        }
+        let script = &self.workload.vus[vu];
+        let Some(s) = script.steps.get(step) else {
+            return; // script exhausted (bounded generation)
+        };
+        let f = s.function;
+        self.issue(vu, step, f, t);
+    }
+
+    /// Update the per-function EWMA arrival-rate estimate.
+    fn track_arrival(&mut self, f: usize, t: f64) {
+        const ALPHA: f64 = 0.2;
+        let last = self.last_arrival[f];
+        if last >= 0.0 && t > last {
+            let inst = 1.0 / (t - last);
+            self.arrival_rate[f] = ALPHA * inst + (1.0 - ALPHA) * self.arrival_rate[f];
+        }
+        self.last_arrival[f] = t;
+    }
+
+    /// Pre-warm policy (1 Hz): for each function, estimate the expected
+    /// concurrent demand (rate x mean warm service time) and speculatively
+    /// initialize sandboxes to cover any deficit vs. the warm supply, on
+    /// the least-loaded workers with free memory. Cf. Kim & Roh [24].
+    fn on_prewarm_tick(&mut self, t: f64) {
+        for f in 0..self.registry.len() {
+            let rate = self.arrival_rate[f];
+            if rate <= 0.0 {
+                continue;
+            }
+            let mean_exec = self.registry.app(f).warm_ms / 1000.0;
+            let demand = (rate * mean_exec).ceil() as usize;
+            let supply: usize = (0..self.active_workers)
+                .map(|w| {
+                    let wk = self.cluster.worker(w);
+                    wk.idle_count(f) + wk.initializing_count(f)
+                })
+                .sum();
+            let deficit = demand.saturating_sub(supply).min(2); // <= 2/tick/function
+            for _ in 0..deficit {
+                // Least-loaded active worker that can fit without eviction.
+                let mem = self.registry.mem_mb(f);
+                let target = (0..self.active_workers)
+                    .filter(|&w| self.cluster.worker(w).mem_free_mb() >= mem)
+                    .min_by_key(|&w| self.cluster.worker(w).load());
+                let Some(w) = target else { break };
+                if let Some(sb) = self.cluster.worker_mut(w).prewarm(f, mem, t) {
+                    let init = self.registry.sample_init_s(f, &mut self.service_rng);
+                    self.queue.push_at(t + init, Event::PreWarmDone { worker: w, sandbox: sb });
+                }
+            }
+        }
+        if t + 1.0 < self.cfg.workload.duration_s {
+            self.queue.push_at(t + 1.0, Event::PreWarmTick);
+        }
+    }
+
+    /// A speculative sandbox finished initializing: it becomes idle, is
+    /// advertised to a scheduler instance, and starts its keep-alive.
+    fn on_prewarm_done(&mut self, w: WorkerId, sandbox: u64, t: f64) {
+        if let Some((f, epoch)) = self.cluster.worker_mut(w).finish_prewarm(sandbox, t) {
+            if w < self.active_workers {
+                let si = f % self.schedulers.len();
+                let mut ctx = SchedCtx {
+                    loads: &self.loads[si][..self.active_workers],
+                    rng: &mut self.sched_rng,
+                };
+                self.schedulers[si].on_complete(w, f, &mut ctx);
+                // Keep-alive expiry handled by the periodic SweepTick.
+                let _ = (sandbox, epoch);
+            }
+        }
+    }
+
+    /// Route and start/queue one request (closed- or open-loop).
+    fn issue(&mut self, vu: usize, step: usize, f: usize, t: f64) {
+        let rid = self.requests.len() as u64;
+        if self.cfg.cluster.prewarm {
+            self.track_arrival(f, t);
+        }
+        let si = if vu == usize::MAX { step % self.schedulers.len() } else { vu % self.schedulers.len() };
+
+        // --- the scheduling decision (Algorithm 1 entry point) ---
+        let w = {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si][..self.active_workers],
+                rng: &mut self.sched_rng,
+            };
+            self.schedulers[si].select(f, &mut ctx)
+        };
+        debug_assert!(w < self.active_workers, "scheduler picked drained worker {w}");
+        self.loads[si][w] += 1;
+        self.metrics.record_assignment(w, t);
+        self.requests.push(RequestMeta { vu, step, function: f, worker: w, sched: si, arrival: t });
+
+        let mem = self.registry.mem_mb(f);
+        if self.cfg.cluster.elastic {
+            let info = self.cluster.worker_mut(w).assign_elastic(rid, f, mem, t);
+            self.handle_start(w, info, t);
+        } else {
+            match self.cluster.worker_mut(w).assign(rid, f, mem, t) {
+                AssignOutcome::Started(info) => self.handle_start(w, info, t),
+                AssignOutcome::Queued => {}
+            }
+        }
+    }
+
+    /// An execution actually starts on `w`: sample its service time,
+    /// schedule completion, and deliver eviction notifications.
+    fn handle_start(&mut self, w: WorkerId, info: StartInfo, t: f64) {
+        for f in info.evicted.clone() {
+            self.notify_evict(w, f);
+        }
+        let meta = self.requests[info.request_id as usize];
+        let mut dur = self.registry.sample_exec_s(meta.function, &mut self.service_rng);
+        if info.cold {
+            dur += self.registry.sample_init_s(meta.function, &mut self.service_rng);
+        }
+        if self.cfg.cluster.elastic {
+            // vCPU time-sharing: executions beyond the core count slow all
+            // of this worker's work down proportionally. Applying the
+            // multiplier at start time (rather than re-scaling in flight)
+            // keeps the DES single-pass; the approximation error is small
+            // at the paper's load levels and identical across schedulers.
+            let running = self.cluster.worker(w).running() as f64;
+            let cores = self.cfg.cluster.concurrency as f64;
+            let congestion = (running / cores).max(1.0);
+            dur *= congestion;
+        }
+        // Cold/warm and queue delay resolved at start time, kept per rid.
+        self.cold_flags.resize(self.requests.len(), false);
+        self.cold_flags[info.request_id as usize] = info.cold;
+        self.queue_delays.resize(self.requests.len(), 0.0);
+        self.queue_delays[info.request_id as usize] = info.queue_delay_s;
+        self.queue.push_at(
+            t + dur,
+            Event::Completion { worker: w, sandbox: info.sandbox, request: info.request_id },
+        );
+    }
+
+    fn on_completion(&mut self, w: WorkerId, sandbox: u64, rid: u64, t: f64) {
+        let meta = self.requests[rid as usize];
+        debug_assert_eq!(meta.worker, w);
+        self.loads[meta.sched][w] -= 1;
+
+        // Worker-side: sandbox idles; (queue mode) a queued request may
+        // start; (elastic mode) the idle pool is trimmed to capacity.
+        let (expiry, started, evicted) = if self.cfg.cluster.elastic {
+            let (expiry, evicted) = self.cluster.worker_mut(w).complete_elastic(sandbox, t);
+            (expiry, None, evicted)
+        } else {
+            let (expiry, started) = self.cluster.worker_mut(w).complete(sandbox, t);
+            (expiry, started, Vec::new())
+        };
+        for f in evicted {
+            self.notify_evict(w, f);
+        }
+
+        // Pull mechanism: the worker enqueues in PQ_f only if its instance
+        // is actually idle after completion (if it was immediately reused
+        // or reclaimed, there is nothing to advertise). The advertisement
+        // goes to the scheduler instance that served the request — the
+        // distributed-JIQ reporting rule [21].
+        if let Some((sb, epoch)) = expiry {
+            if w < self.active_workers {
+                let si = meta.sched;
+                let mut ctx = SchedCtx {
+                    loads: &self.loads[si][..self.active_workers],
+                    rng: &mut self.sched_rng,
+                };
+                self.schedulers[si].on_complete(w, meta.function, &mut ctx);
+                // Keep-alive expiry handled by the periodic SweepTick.
+            } else {
+                // Drained worker: reclaim the sandbox instead of
+                // advertising it.
+                if let Some(f) = self.cluster.worker_mut(w).expire_keepalive(sb, epoch) {
+                    self.notify_evict(w, f);
+                }
+            }
+        }
+
+        if let Some(info) = started {
+            self.handle_start(w, info, t);
+        }
+
+        // Metrics: response latency for the completed request.
+        let cold = self.cold_flags[rid as usize];
+        let qd = self.queue_delays[rid as usize];
+        self.metrics.record_response(t - meta.arrival, cold, qd, t);
+
+        // Closed loop: the VU thinks, then issues its next step.
+        if meta.vu != usize::MAX {
+            let script = &self.workload.vus[meta.vu];
+            let think = script.steps[meta.step].think_s;
+            let next_t = t + think;
+            if next_t < self.cfg.workload.duration_s {
+                self.queue.push_at(next_t, Event::Arrival { vu: meta.vu, step: meta.step + 1 });
+            }
+        }
+    }
+}
+
+/// Build the scheduler instances a config asks for.
+fn build_schedulers(cfg: &Config) -> Result<Vec<Box<dyn Scheduler>>, String> {
+    (0..cfg.scheduler.instances.max(1))
+        .map(|_| crate::scheduler::make_scheduler(&cfg.scheduler, cfg.cluster.workers))
+        .collect()
+}
+
+/// Convenience: run one (config, seed) experiment for a named scheduler.
+pub fn run_once(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
+    run_scaled(cfg, seed, &[])
+}
+
+/// Like [`run_once`] with mixed auto-scaling events: (time, up) — up=false
+/// drains the highest-id worker (LIFO).
+pub fn run_scale_events(
+    cfg: &Config,
+    seed: u64,
+    events: &[(f64, bool)],
+) -> Result<RunMetrics, String> {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    let workload = Workload::generate(&cfg.workload, registry.len(), seed);
+    let schedulers = build_schedulers(cfg)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_scale_events(events);
+    Ok(sim.run())
+}
+
+/// Like [`run_once`] with auto-scaling events: one worker joins at each of
+/// `scale_times`.
+pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMetrics, String> {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    if registry.len() != cfg.num_functions() {
+        return Err(format!(
+            "registry size {} != configured {}",
+            registry.len(),
+            cfg.num_functions()
+        ));
+    }
+    let workload = Workload::generate(&cfg.workload, registry.len(), seed);
+    let schedulers = build_schedulers(cfg)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_scale_times(scale_times);
+    Ok(sim.run())
+}
+
+/// Replay an open-loop (time, function) trace through the cluster.
+pub fn run_trace(cfg: &Config, trace: &OpenLoopTrace, seed: u64) -> Result<RunMetrics, String> {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    // The VU workload is unused in open-loop mode, but the constructor
+    // wants one; generate a minimal script set.
+    let mut wcfg = cfg.workload.clone();
+    wcfg.vus = 1;
+    let workload = Workload::generate(&wcfg, registry.len(), seed);
+    let schedulers = build_schedulers(cfg)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed);
+    Ok(sim.run_open_loop(trace))
+}

@@ -1,0 +1,85 @@
+//! Deterministic discrete-event simulation of the FaaS cluster — the
+//! engine behind every Fig 10-17 reproduction (see DESIGN.md §2 for why a
+//! simulator substitutes for the paper's 6-VM AWS testbed).
+
+pub mod engine;
+pub mod events;
+
+pub use engine::{run_once, run_scale_events, run_scaled, run_trace, Simulation};
+pub use events::{Event, EventQueue};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn small_cfg(sched: &str, vus: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.scheduler.name = sched.into();
+        cfg.workload.vus = vus;
+        cfg.workload.duration_s = 30.0;
+        cfg
+    }
+
+    #[test]
+    fn sim_conserves_requests() {
+        // Every issued request completes exactly once (closed loop drains).
+        for sched in crate::scheduler::PAPER_SCHEDULERS {
+            let m = run_once(&small_cfg(sched, 10), 1).unwrap();
+            assert_eq!(m.issued, m.completed, "{sched}: issued != completed");
+            assert!(m.completed > 100, "{sched}: suspiciously few requests ({})", m.completed);
+            assert_eq!(m.cold_starts + m.warm_starts, m.completed);
+        }
+    }
+
+    #[test]
+    fn sim_deterministic_under_seed() {
+        let a = run_once(&small_cfg("hiku", 10), 7).unwrap();
+        let b = run_once(&small_cfg("hiku", 10), 7).unwrap();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.cold_starts, b.cold_starts);
+        let (mut a, mut b) = (a, b);
+        assert_eq!(a.mean_latency_ms(), b.mean_latency_ms());
+        assert_eq!(a.mean_cv(), b.mean_cv());
+    }
+
+    #[test]
+    fn sim_seed_sensitivity() {
+        let a = run_once(&small_cfg("hiku", 10), 1).unwrap();
+        let b = run_once(&small_cfg("hiku", 10), 2).unwrap();
+        assert_ne!(
+            (a.completed, a.cold_starts),
+            (b.completed, b.cold_starts),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn workers_all_see_traffic_under_hiku() {
+        let m = run_once(&small_cfg("hiku", 20), 3).unwrap();
+        let totals = m.imbalance.totals();
+        assert!(totals.iter().all(|&t| t > 0.0), "idle worker under hiku: {totals:?}");
+    }
+
+    #[test]
+    fn hiku_beats_random_on_cold_rate() {
+        // The headline qualitative claim (Fig 13) at small scale.
+        let hiku = run_once(&small_cfg("hiku", 20), 4).unwrap();
+        let random = run_once(&small_cfg("random", 20), 4).unwrap();
+        assert!(
+            hiku.cold_rate() < random.cold_rate(),
+            "hiku {} vs random {}",
+            hiku.cold_rate(),
+            random.cold_rate()
+        );
+    }
+
+    #[test]
+    fn latencies_positive_and_bounded() {
+        let mut m = run_once(&small_cfg("ch-bl", 10), 5).unwrap();
+        let p0 = m.latency_percentile_ms(0.0);
+        let p100 = m.latency_percentile_ms(100.0);
+        assert!(p0 > 0.0, "non-positive latency {p0}");
+        assert!(p100 < 60_000.0, "implausible tail {p100} ms");
+    }
+}

@@ -1,0 +1,459 @@
+//! Statistics substrate: streaming moments, percentiles, CDFs, time series.
+//!
+//! Everything the paper's evaluation reports is computed here:
+//! - response-latency CDFs (Fig 10) and percentiles (Fig 12),
+//! - means (Fig 11), cold-start rates (Fig 13),
+//! - the coefficient of variation of per-worker assignment rates
+//!   (Figs 14/15 — the paper's load-imbalance metric),
+//! - throughput time series (Fig 16) and requests/s (Fig 17).
+
+/// Streaming mean/variance via Welford's algorithm, plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation (std/mean) — the paper's load-imbalance
+    /// metric (Figs 14/15).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.std() / m
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge two streams (parallel reduction).
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact sample reservoir for percentiles/CDFs. The paper's runs are
+/// ~16k requests × 20 runs — small enough that exact quantiles are cheap,
+/// so we keep all samples rather than approximating (a capped variant is
+/// available via `with_capacity_cap` for very long runs).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+    cap: Option<usize>,
+    seen: u64,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reservoir-capped variant (uniform reservoir sampling beyond `cap`).
+    pub fn with_capacity_cap(cap: usize) -> Self {
+        Self { cap: Some(cap), ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        match self.cap {
+            Some(cap) if self.xs.len() >= cap => {
+                // Deterministic reservoir: replace slot h(seen) % cap with
+                // probability cap/seen using a cheap hash of the counter.
+                let h = crate::util::hashing::mix64(self.seen);
+                if (h % self.seen) < cap as u64 {
+                    let slot = (h >> 32) as usize % cap;
+                    self.xs[slot] = x;
+                }
+            }
+            _ => self.xs.push(x),
+        }
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile in [0, 100] by linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    /// CDF sampled at `points` evenly spaced quantiles: Vec<(value, prob)>.
+    pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return Vec::new();
+        }
+        let n = self.xs.len();
+        (0..points)
+            .map(|i| {
+                let q = (i + 1) as f64 / points as f64;
+                let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+                (self.xs[idx], q)
+            })
+            .collect()
+    }
+
+    pub fn values(&mut self) -> &[f64] {
+        self.ensure_sorted();
+        &self.xs
+    }
+}
+
+/// Fixed-width time binning: accumulate per-bin counts/sums over virtual
+/// time. Backs the tasks-per-second series (Fig 14), the cumulative
+/// throughput curve (Fig 16) and requests/s (Fig 17).
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    bin_width: f64,
+    bins: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(bin_width: f64) -> Self {
+        assert!(bin_width > 0.0);
+        Self { bin_width, bins: Vec::new() }
+    }
+
+    pub fn add(&mut self, t: f64, value: f64) {
+        assert!(t >= 0.0, "negative time {t}");
+        let idx = (t / self.bin_width) as usize;
+        if idx >= self.bins.len() {
+            self.bins.resize(idx + 1, 0.0);
+        }
+        self.bins[idx] += value;
+    }
+
+    pub fn increment(&mut self, t: f64) {
+        self.add(t, 1.0);
+    }
+
+    pub fn bins(&self) -> &[f64] {
+        &self.bins
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        self.bin_width
+    }
+
+    /// Cumulative sum series (Fig 16's "cumulative requests over time").
+    pub fn cumulative(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.bins
+            .iter()
+            .map(|&x| {
+                acc += x;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.bins.iter().sum()
+    }
+
+    /// Mean rate per bin over the observed window.
+    pub fn mean_rate(&self) -> f64 {
+        if self.bins.is_empty() {
+            0.0
+        } else {
+            self.total() / (self.bins.len() as f64 * self.bin_width)
+        }
+    }
+}
+
+/// The paper's load-imbalance metric: per second, the coefficient of
+/// variation of requests assigned across workers; reported as a time series
+/// (Fig 14) and as its average (Fig 15).
+#[derive(Clone, Debug)]
+pub struct LoadImbalance {
+    per_worker: Vec<TimeSeries>,
+}
+
+impl LoadImbalance {
+    pub fn new(workers: usize, bin_width: f64) -> Self {
+        Self { per_worker: (0..workers).map(|_| TimeSeries::new(bin_width)).collect() }
+    }
+
+    pub fn record_assignment(&mut self, worker: usize, t: f64) {
+        self.per_worker[worker].increment(t);
+    }
+
+    /// Auto-scaling: start tracking an additional worker. Its bins before
+    /// the join time are implicitly zero (it received nothing). Note that
+    /// `cv_series` treats those zeros as real, so pre-join bins show a
+    /// higher CV in scaled runs — the auto-scale ablation reports windowed
+    /// cold rates/latency instead.
+    pub fn add_worker(&mut self) {
+        let bw = self.per_worker[0].bin_width();
+        self.per_worker.push(TimeSeries::new(bw));
+    }
+
+    /// CV across workers for each time bin.
+    pub fn cv_series(&self) -> Vec<f64> {
+        let n_bins = self.per_worker.iter().map(|ts| ts.bins().len()).max().unwrap_or(0);
+        (0..n_bins)
+            .map(|b| {
+                let mut st = OnlineStats::new();
+                for ts in &self.per_worker {
+                    st.push(ts.bins().get(b).copied().unwrap_or(0.0));
+                }
+                st.cv()
+            })
+            .collect()
+    }
+
+    /// Average CV over bins that saw any traffic (Fig 15's headline number).
+    pub fn mean_cv(&self) -> f64 {
+        let series = self.cv_series();
+        let active: Vec<f64> = series
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| {
+                self.per_worker
+                    .iter()
+                    .any(|ts| ts.bins().get(*b).copied().unwrap_or(0.0) > 0.0)
+            })
+            .map(|(_, &cv)| cv)
+            .collect();
+        if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<f64>() / active.len() as f64
+        }
+    }
+
+    /// Total requests assigned per worker (sanity/reporting).
+    pub fn totals(&self) -> Vec<f64> {
+        self.per_worker.iter().map(|ts| ts.total()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert!((s.cv() - 0.4).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn online_stats_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = OnlineStats::new();
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = Samples::new();
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        for _ in 0..1000 {
+            s.push(rng.next_f64() * 100.0);
+        }
+        let cdf = s.cdf(50);
+        assert_eq!(cdf.len(), 50);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0, "values not monotone");
+            assert!(w[0].1 < w[1].1, "probs not monotone");
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_cap_respected() {
+        let mut s = Samples::with_capacity_cap(100);
+        for i in 0..10_000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.seen(), 10_000);
+        // Reservoir should span the range, not just the head.
+        assert!(s.percentile(90.0) > 2_000.0);
+    }
+
+    #[test]
+    fn time_series_binning() {
+        let mut ts = TimeSeries::new(1.0);
+        ts.increment(0.1);
+        ts.increment(0.9);
+        ts.increment(1.5);
+        ts.increment(5.0);
+        assert_eq!(ts.bins(), &[2.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(ts.cumulative(), vec![2.0, 3.0, 3.0, 3.0, 3.0, 4.0]);
+        assert_eq!(ts.total(), 4.0);
+    }
+
+    #[test]
+    fn load_imbalance_uniform_is_zero() {
+        let mut li = LoadImbalance::new(4, 1.0);
+        for t in 0..10 {
+            for w in 0..4 {
+                li.record_assignment(w, t as f64 + 0.5);
+            }
+        }
+        assert!(li.mean_cv() < 1e-12);
+    }
+
+    #[test]
+    fn load_imbalance_skewed_is_positive() {
+        let mut li = LoadImbalance::new(4, 1.0);
+        for t in 0..10 {
+            // all load on worker 0
+            for _ in 0..4 {
+                li.record_assignment(0, t as f64 + 0.5);
+            }
+        }
+        // CV of (4,0,0,0) = std/mean = sqrt(3)/1 ≈ 1.732
+        assert!((li.mean_cv() - 3.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_nan_or_zero() {
+        let s = OnlineStats::new();
+        assert!(s.mean().is_nan());
+        let mut e = Samples::new();
+        assert!(e.percentile(50.0).is_nan());
+        assert!(TimeSeries::new(1.0).mean_rate() == 0.0);
+    }
+}

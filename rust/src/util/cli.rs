@@ -1,0 +1,286 @@
+//! Declarative command-line argument parser (no clap in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Generates `--help` text from the declarations. Used by the
+//! `hiku` binary, the examples and the bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI: register options, then parse.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parse result with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(String::from),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument (order of declaration = expected order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (name, _) in &self.positionals {
+            s.push_str(&format!(" <{name}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (name, help) in &self.positionals {
+                s.push_str(&format!("  <{name:<18}> {help}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<22} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a raw argv slice (excluding argv[0]). On `--help`, returns
+    /// Err with the help text so callers can print and exit.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{key} takes no value")));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.values.insert(key, v);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if args.positionals.len() > self.positionals.len() {
+            return Err(CliError(format!(
+                "too many positional arguments (expected {})",
+                self.positionals.len()
+            )));
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args(), printing help/errors and exiting as needed.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(if e.0.contains("USAGE:") { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number")))
+    }
+
+    pub fn parse_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer")))
+    }
+
+    pub fn parse_usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.parse_u64(name)? as usize)
+    }
+
+    /// Comma-separated list.
+    pub fn parse_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "test tool")
+            .opt("workers", Some("5"), "number of workers")
+            .opt("scheduler", None, "scheduler name")
+            .flag("verbose", "chatty output")
+            .positional("input", "input file")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("workers"), Some("5"));
+        assert_eq!(a.get("scheduler"), None);
+        let a = cli().parse(&argv(&["--workers", "9"])).unwrap();
+        assert_eq!(a.parse_u64("workers").unwrap(), 9);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&argv(&["--scheduler=hiku"])).unwrap();
+        assert_eq!(a.get("scheduler"), Some("hiku"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli().parse(&argv(&["--verbose", "file.json"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.positional(0), Some("file.json"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+        assert!(cli().parse(&argv(&["--scheduler"])).is_err());
+        assert!(cli().parse(&argv(&["--verbose=yes"])).is_err());
+        assert!(cli().parse(&argv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--workers"));
+        assert!(err.0.contains("USAGE"));
+    }
+
+    #[test]
+    fn parse_list_splits() {
+        let c = Cli::new("t", "t").opt("algos", Some("a, b,c"), "x");
+        let a = c.parse(&argv(&[])).unwrap();
+        assert_eq!(a.parse_list("algos"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Non-cryptographic hashes for the consistent-hashing ring and hash-mod
+//! schedulers. FNV-1a for strings (function names) and a SplitMix-style
+//! avalanche finalizer for integer keys (virtual node ids).
+
+/// FNV-1a, 64-bit. Stable across runs and platforms (unlike `DefaultHasher`,
+/// whose seed is randomized per process — useless for a reproducible ring).
+#[inline]
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Hash a string key.
+#[inline]
+pub fn hash_str(s: &str) -> u64 {
+    fnv1a_64(s.as_bytes())
+}
+
+/// Finalizing mixer for integer keys (SplitMix64 finalizer); combines a base
+/// hash with a counter, e.g. `mix64(worker_hash ^ vnode_index)`.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Combine two hashes (for (name, index) composite keys).
+#[inline]
+pub fn combine(a: u64, b: u64) -> u64 {
+    mix64(a ^ b.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a_64(b""), 0xCBF29CE484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xAF63DC4C8601EC8C);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn hash_str_stable() {
+        assert_eq!(hash_str("matmul_0"), hash_str("matmul_0"));
+        assert_ne!(hash_str("matmul_0"), hash_str("matmul_1"));
+    }
+
+    #[test]
+    fn mix64_avalanche() {
+        // Single-bit input flips should flip ~half of the output bits.
+        let mut total = 0u32;
+        let samples = 64;
+        for i in 0..samples {
+            let a = mix64(i);
+            let b = mix64(i ^ 1);
+            total += (a ^ b).count_ones();
+        }
+        let avg = total as f64 / samples as f64;
+        assert!((24.0..40.0).contains(&avg), "weak avalanche: {avg}");
+    }
+
+    #[test]
+    fn combine_order_sensitive() {
+        assert_ne!(combine(1, 2), combine(2, 1));
+    }
+}

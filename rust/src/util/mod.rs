@@ -1,0 +1,8 @@
+//! Hand-rolled substrates (no external crates vendored beyond `xla`):
+//! PRNG + distributions, stable hashing, JSON, CLI parsing, property tests.
+
+pub mod cli;
+pub mod hashing;
+pub mod json;
+pub mod prop;
+pub mod rng;

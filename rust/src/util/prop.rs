@@ -1,0 +1,132 @@
+//! Miniature property-testing framework (no proptest vendored).
+//!
+//! `check` runs a property over N seeded random cases; on failure it reports
+//! the failing case seed so the exact case can be replayed with
+//! `replay(seed, ...)`. Generators are plain closures over `Pcg64`, which
+//! keeps shrinking simple: we re-generate with progressively "smaller" size
+//! hints rather than structurally shrinking values.
+//!
+//! Used by the scheduler/platform/sim test suites to state invariants
+//! (routing conservation, queue sortedness, ring monotonicity, determinism).
+
+use super::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator; cases ramp from small
+    /// to large sizes so failures tend to be found at small sizes first.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases. The property returns
+/// `Result<(), String>`; an Err fails the run with a replayable report.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Size ramps 1..=max_size across the run.
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Try smaller sizes with the same seed to present a minimal-ish
+            // counterexample.
+            let mut min_fail = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 = Pcg64::new(case_seed);
+                if let Err(m2) = prop(&mut rng2, s) {
+                    min_fail = (s, m2);
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}, size {}): {}\n\
+                 replay with prop::replay({case_seed:#x}, {}, ...)",
+                min_fail.0, min_fail.1, min_fail.0
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F>(case_seed: u64, size: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(case_seed);
+    prop(&mut rng, size)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", PropConfig { cases: 50, ..Default::default() }, |rng, size| {
+            count += 1;
+            let x = rng.index(size.max(1) * 10 + 1);
+            prop_assert!(x <= size * 10, "x {} out of range", x);
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", PropConfig { cases: 5, ..Default::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let res = replay(0x1234, 8, |rng, size| {
+            let a = rng.next_u64();
+            prop_assert!(size == 8, "size mismatch");
+            let b = Pcg64::new(0x1234).next_u64();
+            prop_assert!(a == b, "rng not reproducible");
+            Ok(())
+        });
+        assert!(res.is_ok());
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut sizes = Vec::new();
+        check("sizes", PropConfig { cases: 10, max_size: 100, ..Default::default() }, |_, s| {
+            sizes.push(s);
+            Ok(())
+        });
+        assert!(sizes[0] < sizes[9]);
+        assert!(*sizes.last().unwrap() <= 100);
+    }
+}

@@ -1,0 +1,379 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The image has no `rand` crate vendored, and the paper's methodology
+//! *requires* seeded determinism anyway ("we seeded the random number
+//! generator in each run ... so that the order of function invocations as
+//! well as sleep durations ... were identical for each scheduling
+//! algorithm"). We implement SplitMix64 (seeding / stream splitting) and
+//! PCG64 (xsl-rr variant) from the published algorithms, plus the
+//! distributions the workload model needs: uniform, exponential, lognormal,
+//! Zipf (via rejection inversion), and an O(1) weighted alias table.
+
+/// SplitMix64: tiny, high-quality 64-bit mixer. Used to seed Pcg64 and to
+/// split independent streams from a single experiment seed.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL-RR 128/64: the de-facto default PRNG ("pcg64" in the pcg paper's
+/// nomenclature). 128-bit LCG state, 64-bit xorshift-low + random-rotate
+/// output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed from a single u64 via SplitMix64 stream expansion.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let i = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        Self::from_state(s, i)
+    }
+
+    /// Derive an independent stream (distinct odd increment selects a
+    /// distinct PCG sequence).
+    pub fn split(&mut self) -> Self {
+        let s = ((self.next_u64() as u128) << 64) | self.next_u64() as u128;
+        let i = ((self.next_u64() as u128) << 64) | self.next_u64() as u128;
+        Self::from_state(s, i)
+    }
+
+    fn from_state(state: u128, inc: u128) -> Self {
+        let mut rng = Self { state: 0, inc: (inc << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(state);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in [0, len).
+    #[inline]
+    pub fn index(&mut self, len: usize) -> usize {
+        self.next_bounded(len as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // 1 - U in (0, 1] avoids ln(0).
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+
+    /// Standard normal via Box-Muller (polar-free, fine for workload gen).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Lognormal parameterized by the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+/// Zipf-Mandelbrot distribution over ranks 1..=n: pmf(k) ∝ 1/(k+q)^s, by
+/// inversion on the precomputed CDF. O(n) setup, O(log n) sampling; n is at
+/// most ~100k for the Azure-like trace so this is plenty. The shift q
+/// flattens the head — needed to match Azure's empirical (top-1%, top-10%)
+/// invocation shares simultaneously (see workload::azure).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        Self::with_shift(n, s, 0.0)
+    }
+
+    pub fn with_shift(n: usize, s: f64, q: f64) -> Self {
+        assert!(n > 0);
+        assert!(q >= 0.0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64 + q).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Sample a rank in [0, n) (0 = most popular).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of rank k (0-based).
+    pub fn pmf(&self, k: usize) -> f64 {
+        let prev = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - prev
+    }
+}
+
+/// Walker's alias method: O(1) sampling from an arbitrary discrete
+/// distribution. Used for weighted function selection in the load generator
+/// (the paper's "weighted random selection" of Azure invocation
+/// probabilities).
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to > 0");
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut small: Vec<usize> = (0..n).filter(|&i| scaled[i] < 1.0).collect();
+        let mut large: Vec<usize> = (0..n).filter(|&i| scaled[i] >= 1.0).collect();
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in &large {
+            prob[l] = 1.0;
+        }
+        for &s in &small {
+            prob[s] = 1.0; // numerical leftovers
+        }
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.index(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // First outputs for seed 0 (reference values from the published
+        // splitmix64 implementation).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_seed_sensitive() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        let mut c = Pcg64::new(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_unbiased_small_range() {
+        let mut rng = Pcg64::new(2);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.next_bounded(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9000..11000).contains(&c), "counts skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = Zipf::new(1000, 1.1);
+        let mut rng = Pcg64::new(5);
+        let mut counts = vec![0usize; 1000];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 must dominate and pmf must sum to 1.
+        assert!(counts[0] > counts[10] && counts[10] > counts[500]);
+        let total_pmf: f64 = (0..1000).map(|k| z.pmf(k)).sum();
+        assert!((total_pmf - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [0.5, 0.25, 0.125, 0.125];
+        let at = AliasTable::new(&weights);
+        let mut rng = Pcg64::new(6);
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[at.sample(&mut rng)] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let freq = counts[i] as f64 / n as f64;
+            assert!((freq - w).abs() < 0.01, "bin {i}: {freq} vs {w}");
+        }
+    }
+
+    #[test]
+    fn alias_table_single_weight() {
+        let at = AliasTable::new(&[3.0]);
+        let mut rng = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(at.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle did nothing");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut a = Pcg64::new(9);
+        let mut b = a.split();
+        let va: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

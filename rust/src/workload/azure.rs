@@ -1,0 +1,350 @@
+//! Synthetic Azure-Functions-like trace generator.
+//!
+//! The paper (§III-B) characterizes the production trace of a commercial
+//! FaaS platform [12] by three marginal statistics and builds its workload
+//! from them; we synthesize a trace calibrated to the same statistics:
+//!
+//! - **Skewed popularity** (Fig 4): the top 1% of functions receive 51.3% of
+//!   invocations and the top 10% receive 92.3%. A Zipf law with exponent
+//!   ~1.5 over a 10k-function universe lands on those shares.
+//! - **Heterogeneous performance** (Fig 5): per-function execution times are
+//!   lognormal across functions (means spanning ms..s) and noisy within a
+//!   function.
+//! - **Bursty invocations** (Fig 6): per-minute mean interarrival times
+//!   swing by up to 13.5x minute-over-minute. We modulate a base Poisson
+//!   process with a regime-switching burst multiplier.
+//!
+//! The generator also backs the load generator's "weighted random selection"
+//! (§V-A): each experiment run samples 40 invocation probabilities from this
+//! popularity law, exactly as the paper samples 40 functions from the Azure
+//! dataset.
+
+use crate::stats::OnlineStats;
+use crate::util::rng::{Pcg64, Zipf};
+
+/// Popularity law over a universe of functions (Zipf-Mandelbrot).
+#[derive(Clone, Debug)]
+pub struct Popularity {
+    pub universe: usize,
+    pub zipf: Zipf,
+}
+
+/// Calibrated Zipf-Mandelbrot parameters: pmf(k) ∝ 1/(k+100)^2.05 over a
+/// 10k universe yields top-1% = 52.0% and top-10% = 92.6% of invocations —
+/// the paper reports 51.3% / 92.3% for the Azure dataset (Fig 4).
+pub const AZURE_ZIPF_S: f64 = 2.05;
+pub const AZURE_ZIPF_Q: f64 = 100.0;
+pub const AZURE_UNIVERSE: usize = 10_000;
+
+impl Popularity {
+    pub fn new(universe: usize, s: f64) -> Self {
+        Self { universe, zipf: Zipf::with_shift(universe, s, AZURE_ZIPF_Q) }
+    }
+
+    /// Azure-calibrated default (matches Fig 4's 51.3% / 92.3% shares).
+    pub fn azure_like() -> Self {
+        Self::new(AZURE_UNIVERSE, AZURE_ZIPF_S)
+    }
+
+    /// Share of invocations going to the top `frac` of functions.
+    pub fn top_share(&self, frac: f64) -> f64 {
+        let k = ((self.universe as f64 * frac).ceil() as usize).max(1);
+        (0..k).map(|r| self.zipf.pmf(r)).sum()
+    }
+
+    /// Sample per-function invocation probabilities for an experiment:
+    /// pick `n` distinct functions uniformly from the universe and
+    /// normalize their popularity masses (paper §V-A "randomly selected 40
+    /// functions from this dataset, calculated and normalized invocation
+    /// probabilities").
+    pub fn sample_weights(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        assert!(n <= self.universe);
+        // Uniform sample of distinct ranks via partial Fisher-Yates on a
+        // sparse map (universe can be large).
+        let mut picked = std::collections::BTreeSet::new();
+        while picked.len() < n {
+            picked.insert(rng.index(self.universe));
+        }
+        let mut w: Vec<f64> = picked.iter().map(|&r| self.zipf.pmf(r)).collect();
+        let total: f64 = w.iter().sum();
+        for x in &mut w {
+            *x /= total;
+        }
+        // Shuffle so function ids are not rank-ordered.
+        rng.shuffle(&mut w);
+        w
+    }
+}
+
+/// Per-function performance profile in the synthetic universe (Fig 5).
+#[derive(Clone, Debug)]
+pub struct PerfProfile {
+    /// Mean execution time per function (seconds).
+    pub mean_s: Vec<f64>,
+    /// Within-function lognormal sigma.
+    pub sigma: f64,
+}
+
+impl PerfProfile {
+    /// Means lognormal across functions: median ~120 ms, heavy right tail
+    /// (seconds), matching the spread visible in Fig 5.
+    pub fn synthesize(n: usize, rng: &mut Pcg64) -> Self {
+        let mean_s = (0..n).map(|_| rng.lognormal(-2.1, 1.1).clamp(0.001, 60.0)).collect();
+        Self { mean_s, sigma: 0.4 }
+    }
+
+    pub fn sample_exec_s(&self, f: usize, rng: &mut Pcg64) -> f64 {
+        let mean = self.mean_s[f];
+        let mu = mean.ln() - self.sigma * self.sigma / 2.0;
+        rng.lognormal(mu, self.sigma)
+    }
+}
+
+/// Regime-switching arrival-rate process (Fig 6 burstiness): each minute the
+/// base rate is multiplied by a burst factor that occasionally jumps.
+#[derive(Clone, Debug)]
+pub struct BurstyArrivals {
+    /// Base arrival rate (requests/second).
+    pub base_rate: f64,
+    /// Probability per minute of switching into a burst regime.
+    pub burst_prob: f64,
+    /// Burst intensity multiplier range.
+    pub burst_lo: f64,
+    pub burst_hi: f64,
+}
+
+impl Default for BurstyArrivals {
+    fn default() -> Self {
+        Self { base_rate: 50.0, burst_prob: 0.25, burst_lo: 3.0, burst_hi: 14.0 }
+    }
+}
+
+impl BurstyArrivals {
+    /// Generate arrival timestamps over `duration_s` seconds.
+    pub fn generate(&self, duration_s: f64, rng: &mut Pcg64) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut minute_end = 60.0;
+        let mut rate = self.base_rate;
+        loop {
+            t += rng.exponential(rate);
+            if t >= duration_s {
+                break;
+            }
+            if t >= minute_end {
+                // Re-draw the regime at each minute boundary crossed.
+                while t >= minute_end {
+                    minute_end += 60.0;
+                }
+                rate = if rng.next_f64() < self.burst_prob {
+                    self.base_rate * rng.uniform(self.burst_lo, self.burst_hi)
+                } else {
+                    self.base_rate * rng.uniform(0.6, 1.6)
+                };
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// A complete synthetic trace plus the summary statistics the paper plots.
+#[derive(Clone, Debug)]
+pub struct SyntheticTrace {
+    /// (arrival time s, function index) pairs, time-ordered.
+    pub invocations: Vec<(f64, usize)>,
+    pub universe: usize,
+    pub perf: PerfProfile,
+}
+
+impl SyntheticTrace {
+    pub fn generate(universe: usize, duration_s: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let pop = Popularity::new(universe, AZURE_ZIPF_S);
+        let perf = PerfProfile::synthesize(universe, &mut rng);
+        let arrivals = BurstyArrivals::default().generate(duration_s, &mut rng);
+        let invocations =
+            arrivals.into_iter().map(|t| (t, pop.zipf.sample(&mut rng))).collect();
+        Self { invocations, universe, perf }
+    }
+
+    /// Fig 4: cumulative invocation share of the top q-fraction of functions.
+    /// Returns (fraction_of_functions, share_of_invocations) points.
+    pub fn popularity_curve(&self, points: usize) -> Vec<(f64, f64)> {
+        let mut counts = vec![0u64; self.universe];
+        for &(_, f) in &self.invocations {
+            counts[f] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(points);
+        let mut acc = 0u64;
+        let mut next_point = 1;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            let frac = (i + 1) as f64 / self.universe as f64;
+            if frac >= next_point as f64 / points as f64 {
+                out.push((frac, acc as f64 / total as f64));
+                next_point += 1;
+            }
+        }
+        out
+    }
+
+    /// Share of invocations received by the top `frac` fraction of functions
+    /// (Fig 4's headline: top 1% -> 51.3%, top 10% -> 92.3%).
+    pub fn top_share(&self, frac: f64) -> f64 {
+        let mut counts = vec![0u64; self.universe];
+        for &(_, f) in &self.invocations {
+            counts[f] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = counts.iter().sum();
+        let k = ((self.universe as f64 * frac).ceil() as usize).max(1);
+        let top: u64 = counts.iter().take(k).sum();
+        top as f64 / total.max(1) as f64
+    }
+
+    /// Fig 5: per-function execution mean/std for the `n` most invoked
+    /// functions, ordered by first appearance in the trace (as the paper
+    /// orders them).
+    pub fn exec_heterogeneity(&self, n: usize, seed: u64) -> Vec<(usize, f64, f64)> {
+        let mut rng = Pcg64::new(seed ^ 0xFEED);
+        let mut seen = Vec::new();
+        let mut seen_set = std::collections::BTreeSet::new();
+        for &(_, f) in &self.invocations {
+            if seen_set.insert(f) {
+                seen.push(f);
+                if seen.len() == n {
+                    break;
+                }
+            }
+        }
+        seen.iter()
+            .map(|&f| {
+                let mut st = OnlineStats::new();
+                for _ in 0..200 {
+                    st.push(self.perf.sample_exec_s(f, &mut rng));
+                }
+                (f, st.mean(), st.std())
+            })
+            .collect()
+    }
+
+    /// Fig 6: mean interarrival time per minute (ms), plus the maximum
+    /// minute-over-minute ratio (paper: up to 13.5x within a minute).
+    pub fn interarrival_per_minute(&self) -> (Vec<f64>, f64) {
+        if self.invocations.len() < 2 {
+            return (Vec::new(), 1.0);
+        }
+        let horizon = self.invocations.last().unwrap().0;
+        let minutes = (horizon / 60.0).ceil() as usize;
+        let mut sums = vec![0.0f64; minutes];
+        let mut counts = vec![0u64; minutes];
+        let mut prev_t = self.invocations[0].0;
+        for &(t, _) in self.invocations.iter().skip(1) {
+            let m = ((t / 60.0) as usize).min(minutes - 1);
+            sums[m] += t - prev_t;
+            counts[m] += 1;
+            prev_t = t;
+        }
+        let series: Vec<f64> = sums
+            .iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { s / c as f64 * 1000.0 } else { f64::NAN })
+            .collect();
+        let mut max_ratio = 1.0f64;
+        for w in series.windows(2) {
+            if w[0].is_finite() && w[1].is_finite() && w[0] > 0.0 && w[1] > 0.0 {
+                let r = (w[0] / w[1]).max(w[1] / w[0]);
+                max_ratio = max_ratio.max(r);
+            }
+        }
+        (series, max_ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popularity_matches_azure_shares() {
+        // Fig 4 calibration targets: top 1% -> ~51.3%, top 10% -> ~92.3%.
+        let pop = Popularity::azure_like();
+        let s1 = pop.top_share(0.01);
+        let s10 = pop.top_share(0.10);
+        assert!((s1 - 0.513).abs() < 0.03, "top-1% share {s1}");
+        assert!((s10 - 0.923).abs() < 0.03, "top-10% share {s10}");
+    }
+
+    #[test]
+    fn sampled_weights_normalized_and_skewed() {
+        let pop = Popularity::azure_like();
+        let mut rng = Pcg64::new(3);
+        let w = pop.sample_weights(40, &mut rng);
+        assert_eq!(w.len(), 40);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let mut sorted = w.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // Heavy skew: the top function dominates the median one.
+        assert!(sorted[0] > 5.0 * sorted[20], "weights not skewed: {sorted:?}");
+    }
+
+    #[test]
+    fn trace_top_shares() {
+        // Empirical shares on the full calibrated universe (the Fig 4
+        // claim is stated for the 10k-function universe).
+        let tr = SyntheticTrace::generate(AZURE_UNIVERSE, 1200.0, 7);
+        let s10 = tr.top_share(0.10);
+        assert!(s10 > 0.85, "empirical top-10% share {s10}");
+        assert!(tr.top_share(0.01) > 0.40);
+    }
+
+    #[test]
+    fn popularity_curve_monotone() {
+        let tr = SyntheticTrace::generate(1000, 600.0, 8);
+        let curve = tr.popularity_curve(20);
+        assert!(!curve.is_empty());
+        for w in curve.windows(2) {
+            assert!(w[0].0 <= w[1].0 && w[0].1 <= w[1].1 + 1e-12);
+        }
+        assert!((curve.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_interarrival_swings() {
+        // Fig 6: the per-minute interarrival mean must swing by several x
+        // minute-over-minute (paper: up to 13.5x).
+        let tr = SyntheticTrace::generate(500, 1800.0, 9);
+        let (series, max_ratio) = tr.interarrival_per_minute();
+        assert!(series.len() >= 25);
+        assert!(max_ratio > 3.0, "trace not bursty: max ratio {max_ratio}");
+        assert!(max_ratio < 50.0, "implausibly bursty: {max_ratio}");
+    }
+
+    #[test]
+    fn heterogeneity_varies_across_functions() {
+        let tr = SyntheticTrace::generate(500, 600.0, 10);
+        let het = tr.exec_heterogeneity(20, 10);
+        assert_eq!(het.len(), 20);
+        let means: Vec<f64> = het.iter().map(|&(_, m, _)| m).collect();
+        let max = means.iter().cloned().fold(f64::MIN, f64::max);
+        let min = means.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 3.0, "means not heterogeneous: {min}..{max}");
+        // Within-function std is nonzero.
+        assert!(het.iter().all(|&(_, _, s)| s > 0.0));
+    }
+
+    #[test]
+    fn trace_deterministic_under_seed() {
+        let a = SyntheticTrace::generate(300, 120.0, 11);
+        let b = SyntheticTrace::generate(300, 120.0, 11);
+        assert_eq!(a.invocations.len(), b.invocations.len());
+        assert_eq!(a.invocations.first(), b.invocations.first());
+        assert_eq!(a.invocations.last(), b.invocations.last());
+    }
+}

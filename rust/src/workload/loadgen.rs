@@ -1,0 +1,191 @@
+//! k6-like closed-loop load generator (§V-A "Execution").
+//!
+//! Each virtual user (VU) loops: invoke a function chosen by weighted random
+//! selection -> wait for the response -> sleep U(0.1 s, 1 s) -> repeat. The
+//! paper seeds the RNG with the experiment start date so that *the order of
+//! function invocations and the sleep durations are identical for every
+//! scheduling algorithm*; we reproduce that by pre-generating each VU's
+//! script (function choices + think times) from the run seed, independent of
+//! scheduler behaviour.
+
+use super::azure::Popularity;
+use super::spec::FunctionId;
+use crate::config::WorkloadConfig;
+use crate::util::rng::{AliasTable, Pcg64};
+
+/// One scripted VU step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VuStep {
+    pub function: FunctionId,
+    /// Think time *after* this invocation completes, seconds.
+    pub think_s: f64,
+}
+
+/// A scripted virtual user: a deterministic sequence of steps.
+#[derive(Clone, Debug)]
+pub struct VuScript {
+    pub steps: Vec<VuStep>,
+    /// Initial stagger before the first invocation (spreads VU ramp-up).
+    pub start_delay_s: f64,
+}
+
+/// The full scripted workload for one run.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub vus: Vec<VuScript>,
+    /// Invocation probability per function (the run's weighted selection).
+    pub weights: Vec<f64>,
+    pub duration_s: f64,
+}
+
+impl Workload {
+    /// Generate the scripted workload for a run. `seed` plays the role of
+    /// the paper's "start date of the experiment" seed; two calls with the
+    /// same config+seed yield identical scripts.
+    pub fn generate(cfg: &WorkloadConfig, num_functions: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let pop = Popularity::new(10_000.max(num_functions), cfg.zipf_s);
+        let weights = pop.sample_weights(num_functions, &mut rng);
+        let table = AliasTable::new(&weights);
+
+        // Upper bound on steps a VU can need: duration / min cycle time.
+        // Cycle = think time + response; the fastest FunctionBench payload
+        // (linpack, 58 ms mean warm) rarely samples below ~20 ms, so bound
+        // the cycle at think_min + 20 ms. The simulator stops consuming
+        // steps at duration_s anyway and tolerates exhausted scripts.
+        let min_cycle_s = cfg.think_min_s.max(0.01) + 0.02;
+        let max_steps = ((cfg.duration_s / min_cycle_s).ceil() as usize + 8).min(100_000);
+
+        let vus = (0..cfg.vus)
+            .map(|_| {
+                // Each VU gets its own derived stream, but all streams are
+                // fixed by `seed` — scheduler-independent by construction.
+                let mut vrng = rng.split();
+                let start_delay_s = vrng.uniform(0.0, cfg.think_max_s);
+                let steps = (0..max_steps)
+                    .map(|_| VuStep {
+                        function: table.sample(&mut vrng),
+                        think_s: vrng.uniform(cfg.think_min_s, cfg.think_max_s),
+                    })
+                    .collect();
+                VuScript { steps, start_delay_s }
+            })
+            .collect();
+
+        Self { vus, weights, duration_s: cfg.duration_s }
+    }
+
+    pub fn num_vus(&self) -> usize {
+        self.vus.len()
+    }
+
+    /// Total scripted invocations (upper bound; closed loop consumes fewer).
+    pub fn total_steps(&self) -> usize {
+        self.vus.iter().map(|v| v.steps.len()).sum()
+    }
+}
+
+/// Open-loop replayer: turns a (time, function) trace into the same VuStep
+/// interface, for replaying synthetic Azure traces through the cluster
+/// (used by ablation benches; the paper's main experiments are closed-loop).
+#[derive(Clone, Debug)]
+pub struct OpenLoopTrace {
+    pub arrivals: Vec<(f64, FunctionId)>,
+}
+
+impl OpenLoopTrace {
+    pub fn from_synthetic(
+        invocations: &[(f64, usize)],
+        num_functions: usize,
+    ) -> Self {
+        // Fold the trace's universe onto the experiment's function set.
+        let arrivals = invocations
+            .iter()
+            .map(|&(t, f)| (t, f % num_functions))
+            .collect();
+        Self { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn cfg() -> WorkloadConfig {
+        WorkloadConfig { vus: 10, duration_s: 30.0, ..Default::default() }
+    }
+
+    #[test]
+    fn scripts_identical_for_same_seed() {
+        let a = Workload::generate(&cfg(), 40, 99);
+        let b = Workload::generate(&cfg(), 40, 99);
+        assert_eq!(a.num_vus(), b.num_vus());
+        for (va, vb) in a.vus.iter().zip(&b.vus) {
+            assert_eq!(va.start_delay_s, vb.start_delay_s);
+            assert_eq!(va.steps, vb.steps);
+        }
+    }
+
+    #[test]
+    fn scripts_differ_across_seeds() {
+        let a = Workload::generate(&cfg(), 40, 1);
+        let b = Workload::generate(&cfg(), 40, 2);
+        assert_ne!(a.vus[0].steps, b.vus[0].steps);
+    }
+
+    #[test]
+    fn think_times_in_range() {
+        let w = Workload::generate(&cfg(), 40, 3);
+        for vu in &w.vus {
+            for s in &vu.steps {
+                assert!((0.1..=1.0).contains(&s.think_s), "think {}", s.think_s);
+                assert!(s.function < 40);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_skewed_and_functions_covered() {
+        let w = Workload::generate(&cfg(), 40, 4);
+        assert_eq!(w.weights.len(), 40);
+        assert!((w.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Empirical selection follows the weights: most-popular function is
+        // picked far more often than the least-popular one.
+        let mut counts = vec![0u64; 40];
+        for vu in &w.vus {
+            for s in &vu.steps {
+                counts[s.function] += 1;
+            }
+        }
+        let top_w = w.weights.iter().cloned().fold(f64::MIN, f64::max);
+        let top_i = w.weights.iter().position(|&x| x == top_w).unwrap();
+        let max_c = *counts.iter().max().unwrap();
+        assert_eq!(counts[top_i], max_c, "most-weighted function not most-selected");
+    }
+
+    #[test]
+    fn enough_steps_for_duration() {
+        let w = Workload::generate(&cfg(), 40, 5);
+        // With think >= 0.1 s and response >= 20 ms, a 30 s run consumes at
+        // most 250 steps/VU.
+        for vu in &w.vus {
+            assert!(vu.steps.len() >= 250, "script too short: {}", vu.steps.len());
+        }
+    }
+
+    #[test]
+    fn open_loop_folding() {
+        let tr = vec![(0.5, 123usize), (1.0, 41), (2.0, 39)];
+        let ol = OpenLoopTrace::from_synthetic(&tr, 40);
+        assert_eq!(ol.arrivals, vec![(0.5, 3), (1.0, 1), (2.0, 39)]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload substrate: FunctionBench registry (Tables I/II), Azure-like
+//! trace synthesis (Figs 4-6), and the k6-like closed-loop load generator.
+
+pub mod azure;
+pub mod loadgen;
+pub mod spec;
+pub mod trace_io;
+
+pub use loadgen::{VuScript, VuStep, Workload};
+pub use spec::{FunctionId, FunctionRegistry, BASE_APPS};

@@ -1,0 +1,205 @@
+//! Function specifications: the paper's workload of 40 functions
+//! (8 FunctionBench applications × 5 identical copies, Table II), with
+//! cold/warm latency calibration from Table I and a per-function service
+//! time model used by the discrete-event simulator.
+
+use crate::util::rng::Pcg64;
+
+/// One FunctionBench application (Table I / Table II of the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BaseApp {
+    pub name: &'static str,
+    pub category: &'static str,
+    /// Mean cold-start response latency in ms (Table I).
+    pub cold_ms: f64,
+    /// Mean warm-start response latency in ms (Table I).
+    pub warm_ms: f64,
+    /// Sandbox memory footprint in MB (drives eviction pressure).
+    pub mem_mb: u64,
+}
+
+/// Table I of the paper, verbatim.
+pub const BASE_APPS: [BaseApp; 8] = [
+    BaseApp { name: "chameleon", category: "cpu", cold_ms: 536.0, warm_ms: 392.0, mem_mb: 256 },
+    BaseApp { name: "dd", category: "disk", cold_ms: 706.0, warm_ms: 549.0, mem_mb: 256 },
+    BaseApp { name: "float_operation", category: "cpu", cold_ms: 263.0, warm_ms: 94.0, mem_mb: 128 },
+    BaseApp { name: "gzip_compression", category: "disk", cold_ms: 510.0, warm_ms: 303.0, mem_mb: 256 },
+    BaseApp { name: "json_dumps_loads", category: "network", cold_ms: 269.0, warm_ms: 105.0, mem_mb: 128 },
+    BaseApp { name: "linpack", category: "cpu", cold_ms: 282.0, warm_ms: 58.0, mem_mb: 128 },
+    BaseApp { name: "matmul", category: "cpu", cold_ms: 284.0, warm_ms: 125.0, mem_mb: 256 },
+    BaseApp { name: "pyaes", category: "cpu", cold_ms: 329.0, warm_ms: 149.0, mem_mb: 128 },
+];
+
+/// Average cold/warm slowdown across Table I: ratio of mean cold latency to
+/// mean warm latency (the paper reports "on average 1.79x slower").
+pub fn mean_cold_slowdown() -> f64 {
+    let cold: f64 = BASE_APPS.iter().map(|a| a.cold_ms).sum();
+    let warm: f64 = BASE_APPS.iter().map(|a| a.warm_ms).sum();
+    cold / warm
+}
+
+/// A concrete function type in the experiment (one of the 40).
+#[derive(Clone, Debug)]
+pub struct FunctionSpec {
+    /// Unique name, e.g. "matmul_3".
+    pub name: String,
+    /// Index into BASE_APPS.
+    pub app: usize,
+    /// Stable id (index into the registry).
+    pub id: FunctionId,
+}
+
+pub type FunctionId = usize;
+
+/// The registry of all function types for an experiment.
+#[derive(Clone, Debug)]
+pub struct FunctionRegistry {
+    pub functions: Vec<FunctionSpec>,
+    /// Lognormal sigma of warm execution time (Fig 5 heterogeneity: repeated
+    /// executions of the same function vary significantly).
+    pub exec_sigma: f64,
+    /// Lognormal sigma of the cold-start initialization overhead.
+    pub init_sigma: f64,
+}
+
+impl FunctionRegistry {
+    /// Build the paper's registry: `copies` copies of each base app.
+    pub fn functionbench(copies: usize) -> Self {
+        let mut functions = Vec::with_capacity(BASE_APPS.len() * copies);
+        for c in 0..copies {
+            for (ai, app) in BASE_APPS.iter().enumerate() {
+                let id = functions.len();
+                functions.push(FunctionSpec { name: format!("{}_{c}", app.name), app: ai, id });
+            }
+        }
+        Self { functions, exec_sigma: 0.25, init_sigma: 0.20 }
+    }
+
+    /// Subset of base apps (used by unit tests and small experiments).
+    pub fn subset(apps: &[usize], copies: usize) -> Self {
+        let mut functions = Vec::new();
+        for c in 0..copies {
+            for &ai in apps {
+                let id = functions.len();
+                functions.push(FunctionSpec {
+                    name: format!("{}_{c}", BASE_APPS[ai].name),
+                    app: ai,
+                    id,
+                });
+            }
+        }
+        Self { functions, exec_sigma: 0.25, init_sigma: 0.20 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    pub fn get(&self, id: FunctionId) -> &FunctionSpec {
+        &self.functions[id]
+    }
+
+    pub fn app(&self, id: FunctionId) -> &'static BaseApp {
+        &BASE_APPS[self.functions[id].app]
+    }
+
+    pub fn mem_mb(&self, id: FunctionId) -> u64 {
+        self.app(id).mem_mb
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<FunctionId> {
+        self.functions.iter().position(|f| f.name == name)
+    }
+
+    /// Sample a warm execution time in seconds. Lognormal around the
+    /// Table I warm latency, matching Fig 5's within-function variance.
+    pub fn sample_exec_s(&self, id: FunctionId, rng: &mut Pcg64) -> f64 {
+        let app = self.app(id);
+        lognormal_with_mean(rng, app.warm_ms / 1000.0, self.exec_sigma)
+    }
+
+    /// Sample the *additional* cold-start initialization time in seconds
+    /// (cold response = init + exec, calibrated so the means match Table I).
+    pub fn sample_init_s(&self, id: FunctionId, rng: &mut Pcg64) -> f64 {
+        let app = self.app(id);
+        let init_mean = (app.cold_ms - app.warm_ms).max(1.0) / 1000.0;
+        lognormal_with_mean(rng, init_mean, self.init_sigma)
+    }
+}
+
+/// Lognormal sample with a target *mean* (not median): mu is corrected by
+/// -sigma^2/2 so E[X] = mean exactly.
+fn lognormal_with_mean(rng: &mut Pcg64, mean: f64, sigma: f64) -> f64 {
+    debug_assert!(mean > 0.0);
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    rng.lognormal(mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_slowdown_matches_paper() {
+        // Paper §II-B: "cold start executions are 1.79x slower".
+        let s = mean_cold_slowdown();
+        assert!((s - 1.79).abs() < 0.01, "slowdown {s} drifted from Table I");
+    }
+
+    #[test]
+    fn registry_has_40_functions() {
+        let reg = FunctionRegistry::functionbench(5);
+        assert_eq!(reg.len(), 40);
+        // Unique names.
+        let mut names: Vec<&str> = reg.functions.iter().map(|f| f.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 40);
+    }
+
+    #[test]
+    fn name_lookup_roundtrip() {
+        let reg = FunctionRegistry::functionbench(5);
+        for f in &reg.functions {
+            assert_eq!(reg.by_name(&f.name), Some(f.id));
+        }
+        assert_eq!(reg.by_name("nope"), None);
+    }
+
+    #[test]
+    fn exec_time_mean_calibrated() {
+        let reg = FunctionRegistry::functionbench(1);
+        let mut rng = Pcg64::new(1);
+        let id = reg.by_name("matmul_0").unwrap();
+        let n = 20_000;
+        let mean_s: f64 = (0..n).map(|_| reg.sample_exec_s(id, &mut rng)).sum::<f64>() / n as f64;
+        let expect = BASE_APPS[6].warm_ms / 1000.0;
+        assert!((mean_s - expect).abs() / expect < 0.03, "mean {mean_s} vs {expect}");
+    }
+
+    #[test]
+    fn cold_init_positive_and_calibrated() {
+        let reg = FunctionRegistry::functionbench(1);
+        let mut rng = Pcg64::new(2);
+        for id in 0..reg.len() {
+            let app = reg.app(id);
+            let n = 5_000;
+            let mean_s: f64 =
+                (0..n).map(|_| reg.sample_init_s(id, &mut rng)).sum::<f64>() / n as f64;
+            let expect = (app.cold_ms - app.warm_ms) / 1000.0;
+            assert!(mean_s > 0.0);
+            assert!((mean_s - expect).abs() / expect < 0.10, "{}: {mean_s} vs {expect}", app.name);
+        }
+    }
+
+    #[test]
+    fn subset_registry() {
+        let reg = FunctionRegistry::subset(&[0, 6], 2);
+        assert_eq!(reg.len(), 4);
+        assert_eq!(reg.app(1).name, "matmul");
+    }
+}

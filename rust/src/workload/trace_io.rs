@@ -1,0 +1,126 @@
+//! Trace file I/O: persist and load invocation traces as CSV.
+//!
+//! Lets users replay a *real* Azure Functions trace (or any invocation
+//! log) through the cluster instead of the synthetic generator: convert
+//! the log to `timestamp_s,function` rows, load it with
+//! [`load_trace_csv`], and feed it to `sim::run_trace`. The synthetic
+//! generator's traces round-trip through the same format, which the tests
+//! rely on.
+
+use super::loadgen::OpenLoopTrace;
+use super::spec::FunctionId;
+
+/// Serialize a trace as `timestamp_s,function` CSV (with header).
+pub fn trace_to_csv(trace: &OpenLoopTrace) -> String {
+    let mut out = String::with_capacity(trace.len() * 16 + 24);
+    out.push_str("timestamp_s,function\n");
+    for &(t, f) in &trace.arrivals {
+        out.push_str(&format!("{t:.6},{f}\n"));
+    }
+    out
+}
+
+/// Parse a `timestamp_s,function` CSV into a trace. Rows must be
+/// time-ordered; `num_functions` bounds the function ids (rows outside the
+/// range are folded by modulo, mirroring `OpenLoopTrace::from_synthetic`).
+pub fn trace_from_csv(text: &str, num_functions: usize) -> Result<OpenLoopTrace, String> {
+    assert!(num_functions > 0);
+    let mut arrivals: Vec<(f64, FunctionId)> = Vec::new();
+    let mut lines = text.lines().enumerate();
+    // Header (required, keeps files self-describing).
+    match lines.next() {
+        Some((_, h)) if h.trim() == "timestamp_s,function" => {}
+        Some((_, h)) => return Err(format!("bad header '{h}'")),
+        None => return Err("empty trace file".into()),
+    }
+    let mut prev_t = f64::NEG_INFINITY;
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (ts, fs) = line
+            .split_once(',')
+            .ok_or_else(|| format!("line {}: expected 'timestamp,function'", lineno + 1))?;
+        let t: f64 = ts
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {}: bad timestamp '{ts}'", lineno + 1))?;
+        let f: usize = fs
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {}: bad function id '{fs}'", lineno + 1))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("line {}: invalid timestamp {t}", lineno + 1));
+        }
+        if t < prev_t {
+            return Err(format!("line {}: timestamps not ordered ({t} < {prev_t})", lineno + 1));
+        }
+        prev_t = t;
+        arrivals.push((t, f % num_functions));
+    }
+    Ok(OpenLoopTrace { arrivals })
+}
+
+/// Write a trace to a file.
+pub fn save_trace(trace: &OpenLoopTrace, path: &str) -> Result<(), String> {
+    std::fs::write(path, trace_to_csv(trace)).map_err(|e| format!("writing {path}: {e}"))
+}
+
+/// Load a trace from a file.
+pub fn load_trace(path: &str, num_functions: usize) -> Result<OpenLoopTrace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    trace_from_csv(&text, num_functions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::azure::SyntheticTrace;
+
+    #[test]
+    fn roundtrip_synthetic_trace() {
+        let gen = SyntheticTrace::generate(100, 60.0, 5);
+        let tr = OpenLoopTrace::from_synthetic(&gen.invocations, 40);
+        let csv = trace_to_csv(&tr);
+        let back = trace_from_csv(&csv, 40).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.arrivals.iter().zip(&back.arrivals) {
+            assert!((a.0 - b.0).abs() < 1e-5);
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(trace_from_csv("", 40).is_err());
+        assert!(trace_from_csv("nope\n", 40).is_err());
+        assert!(trace_from_csv("timestamp_s,function\nx,1\n", 40).is_err());
+        assert!(trace_from_csv("timestamp_s,function\n1.0\n", 40).is_err());
+        assert!(trace_from_csv("timestamp_s,function\n-1.0,3\n", 40).is_err());
+        // Out-of-order timestamps.
+        assert!(trace_from_csv("timestamp_s,function\n2.0,1\n1.0,2\n", 40).is_err());
+    }
+
+    #[test]
+    fn folds_function_ids() {
+        let tr = trace_from_csv("timestamp_s,function\n0.5,123\n", 40).unwrap();
+        assert_eq!(tr.arrivals, vec![(0.5, 3)]);
+    }
+
+    #[test]
+    fn file_roundtrip_and_replay() {
+        let gen = SyntheticTrace::generate(50, 20.0, 6);
+        let tr = OpenLoopTrace::from_synthetic(&gen.invocations, 40);
+        let path = std::env::temp_dir().join("hiku_trace_io_test.csv");
+        let path = path.to_str().unwrap();
+        save_trace(&tr, path).unwrap();
+        let back = load_trace(path, 40).unwrap();
+        assert_eq!(back.len(), tr.len());
+        // The loaded trace replays through the simulator.
+        let cfg = crate::config::Config::default();
+        let m = crate::sim::run_trace(&cfg, &back, 6).unwrap();
+        assert_eq!(m.issued, m.completed);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,34 @@
+//! End-to-end integration: the real-time threaded cluster serving the AOT
+//! PJRT payloads through the Hiku scheduler. Wall-clock test — kept small.
+
+use hiku::config::Config;
+use hiku::server::serve_n_requests;
+
+fn cfg(sched: &str) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = sched.into();
+    c.cluster.workers = 2;
+    c.workload.vus = 4;
+    // Fast think times: this is wall-clock.
+    c.workload.think_min_s = 0.001;
+    c.workload.think_max_s = 0.005;
+    c
+}
+
+#[test]
+fn serves_requests_end_to_end() {
+    let mut m = serve_n_requests(&cfg("hiku"), 40).expect("serving failed");
+    assert_eq!(m.completed, 40);
+    assert!(m.cold_starts >= 1, "first touches must cold-start");
+    assert!(m.warm_starts >= 1, "repeats must warm-start");
+    assert!(m.mean_latency_ms() > 0.0);
+    let j = m.summary_json();
+    assert_eq!(j.get("scheduler").unwrap().as_str(), Some("hiku"));
+}
+
+#[test]
+fn random_scheduler_also_serves() {
+    let m = serve_n_requests(&cfg("random"), 20).expect("serving failed");
+    assert_eq!(m.completed, 20);
+    assert_eq!(m.cold_starts + m.warm_starts, 20);
+}

@@ -1,0 +1,98 @@
+//! Integration tests: the PJRT runtime against the real AOT artifacts.
+//!
+//! These REQUIRE `make artifacts` to have run (the Makefile test target
+//! guarantees the ordering). They verify the whole python -> HLO text ->
+//! rust -> PJRT -> numerics chain.
+
+use hiku::runtime::{Engine, Manifest};
+
+fn engine(cap: usize) -> Engine {
+    let m = Manifest::load("artifacts")
+        .expect("artifacts/manifest.json missing — run `make artifacts`");
+    Engine::new(m, cap).expect("PJRT engine")
+}
+
+#[test]
+fn manifest_covers_all_functionbench_apps() {
+    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+    let mut names = m.names();
+    names.sort_unstable();
+    assert_eq!(
+        names,
+        vec![
+            "chameleon",
+            "dd",
+            "float_operation",
+            "gzip_compression",
+            "json_dumps_loads",
+            "linpack",
+            "matmul",
+            "pyaes"
+        ]
+    );
+}
+
+#[test]
+fn goldens_verify_end_to_end() {
+    // The CORE cross-language correctness signal: rust-side PJRT execution
+    // reproduces the digests jax computed at AOT time, for every payload
+    // and both golden seeds.
+    let mut e = engine(8);
+    let n = e.verify_goldens().expect("golden verification");
+    assert_eq!(n, 16, "8 payloads x 2 seeds");
+}
+
+#[test]
+fn cold_warm_asymmetry_is_real() {
+    // Table I's premise: initialization (XLA compile) dominates a cold
+    // start. Warm executions must be much faster than cold ones.
+    let mut e = engine(8);
+    let mut cold_total = 0.0;
+    let mut warm_total = 0.0;
+    for name in ["matmul", "pyaes", "json_dumps_loads"] {
+        let cold = e.execute(name, 3).unwrap();
+        assert!(cold.cold);
+        let warm = e.execute(name, 4).unwrap();
+        assert!(!warm.cold);
+        cold_total += cold.total_s;
+        warm_total += warm.total_s;
+    }
+    assert!(
+        cold_total > 1.5 * warm_total,
+        "cold {cold_total:.4}s not >> warm {warm_total:.4}s"
+    );
+}
+
+#[test]
+fn digests_differ_across_seeds_and_payloads() {
+    let mut e = engine(8);
+    let a = e.execute("pyaes", 1).unwrap().digest;
+    let b = e.execute("pyaes", 2).unwrap().digest;
+    let c = e.execute("dd", 1).unwrap().digest;
+    assert_ne!(a, b, "seed must matter");
+    assert_ne!(a, c, "payload must matter");
+}
+
+#[test]
+fn cache_eviction_cycle() {
+    let mut e = engine(2);
+    e.execute("matmul", 1).unwrap();
+    e.execute("pyaes", 1).unwrap();
+    let r = e.execute("linpack", 1).unwrap();
+    assert_eq!(r.evicted, vec!["matmul".to_string()]);
+    // Re-touching the evicted payload is cold again.
+    let r2 = e.execute("matmul", 1).unwrap();
+    assert!(r2.cold, "evicted payload must cold-start");
+    assert_eq!(e.total_cold, 4);
+    assert_eq!(e.total_warm, 0);
+}
+
+#[test]
+fn warm_executions_are_deterministic() {
+    let mut e = engine(4);
+    let r1 = e.execute("gzip_compression", 42).unwrap();
+    let r2 = e.execute("gzip_compression", 42).unwrap();
+    let r3 = e.execute("gzip_compression", 42).unwrap();
+    assert_eq!(r1.digest, r2.digest);
+    assert_eq!(r2.digest, r3.digest);
+}
