@@ -8,11 +8,13 @@
 //! begins pulling as soon as it finishes fallback-routed requests.
 
 use hiku::config::Config;
-use hiku::sim::run_scaled;
+use hiku::sim::run_once;
 
 const SCHEDS: [&str; 5] = ["hiku", "ch-bl", "consistent", "hash-mod", "least-connections"];
 const SEEDS: [u64; 3] = [1, 2, 3];
-const SCALES: [f64; 2] = [60.0, 120.0];
+/// Scale times, expressed as the `scheduled` autoscale policy's event list
+/// (the policy-driven home of the old `run_scaled(cfg, seed, &[60, 120])`).
+const SCALE_EVENTS: &str = "60;120";
 
 fn window_cold_rate(cold: &[f64], total: &[f64], from: usize, to: usize) -> f64 {
     let c: f64 = cold.iter().skip(from).take(to - from).sum();
@@ -29,6 +31,8 @@ fn main() {
     base.cluster.workers = 4;
     base.workload.duration_s = 180.0;
     base.workload.vus = 60;
+    base.autoscale.policy = "scheduled".into();
+    base.autoscale.events = SCALE_EVENTS.into();
 
     println!("# Ablation — auto-scaling: 4 workers -> +1 @60s -> +1 @120s, 60 VUs");
     println!("  cold-start rate per 30 s window (average of {} seeds)\n", SEEDS.len());
@@ -42,7 +46,7 @@ fn main() {
         let mut windows = [0.0f64; 6];
         let mut mean_ms = 0.0;
         for &seed in &SEEDS {
-            let mut m = run_scaled(&cfg, seed, &SCALES).expect("run");
+            let mut m = run_once(&cfg, seed).expect("run");
             let cold = m.cold_series.bins().to_vec();
             let total = m.throughput.bins().to_vec();
             for (i, w) in windows.iter_mut().enumerate() {

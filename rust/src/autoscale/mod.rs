@@ -1,0 +1,176 @@
+//! Policy-driven elastic scaling and predictive pre-warming.
+//!
+//! The paper motivates Hiku with the auto-scaling disruption story (§II-C:
+//! how many function→worker assignments survive a scale event), but its
+//! testbed only ever *replays* scale events. This subsystem closes the
+//! loop: a recurring control tick hands an [`AutoscaleObs`] snapshot of the
+//! cluster to an [`AutoscalePolicy`], which answers with a worker-count
+//! target and per-function pre-warm pools. The simulator (and the
+//! real-time server) apply the decision through the same
+//! `on_worker_added`/`on_worker_removed` scheduler notifications the
+//! scripted scale events already use, so every scheduling algorithm is
+//! exercised unchanged.
+//!
+//! Policies (config `autoscale.policy`):
+//!
+//! - [`NoScaling`] (`none`) — the static cluster (default; bit-identical
+//!   to runs without the subsystem).
+//! - [`Scheduled`] (`scheduled`) — replays an explicit event list at exact
+//!   times; subsumes the old `run_scaled`/`run_scale_events` entry points.
+//! - [`Reactive`] (`reactive`) — utilization thresholds with a hysteresis
+//!   dead band, cooldown, and min/max worker bounds (the classic
+//!   K8s-HPA-style loop; cf. Kaffes et al., "Practical Scheduling for
+//!   Real-World Serverless Computing").
+//! - [`Predictive`] (`predictive`) — per-function arrival-rate forecasting
+//!   (EWMA + inter-arrival histograms) drives both the worker-count target
+//!   (Little's-law demand with headroom) and per-function pre-warm pools,
+//!   replacing the global `cluster.prewarm` heuristic (cf. Nguyen et al.,
+//!   "Taming Cold Starts: Proactive Serverless Scheduling with MPC").
+//!
+//! Determinism: policies are pure state machines over the observation
+//! stream — no wall clock, no RNG — so a simulated run under a fixed
+//! (config, seed) stays bit-reproducible with autoscaling enabled.
+
+pub mod predictive;
+pub mod reactive;
+pub mod scheduled;
+
+use crate::config::AutoscaleConfig;
+use crate::workload::spec::FunctionId;
+
+pub use predictive::Predictive;
+pub use reactive::Reactive;
+pub use scheduled::{NoScaling, Scheduled};
+
+/// Cluster snapshot handed to the policy on every control tick. All
+/// quantities are restricted to the *active* worker set (drained workers
+/// finishing in-flight work are excluded).
+pub struct AutoscaleObs<'a> {
+    /// Current (virtual or wall-clock) time in seconds.
+    pub now: f64,
+    /// Workers currently eligible for selection.
+    pub active_workers: usize,
+    /// Execution slots (vCPUs) per worker.
+    pub concurrency: usize,
+    /// Executions currently running across active workers.
+    pub total_running: usize,
+    /// Requests queued at active workers (0 in elastic mode).
+    pub total_queued: usize,
+    /// Per-function warm supply: idle + initializing sandboxes across the
+    /// active workers. Empty when the backend cannot observe sandboxes.
+    pub warm_supply: &'a [usize],
+    /// Per-function mean warm execution time in seconds.
+    pub mean_exec_s: &'a [f64],
+}
+
+impl AutoscaleObs<'_> {
+    /// Slot utilization: running executions over available vCPU slots.
+    /// Can exceed 1.0 in elastic mode (time-shared vCPUs).
+    pub fn utilization(&self) -> f64 {
+        let slots = (self.active_workers * self.concurrency) as f64;
+        if slots == 0.0 {
+            0.0
+        } else {
+            self.total_running as f64 / slots
+        }
+    }
+}
+
+/// What a policy wants done. An empty decision means "hold".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScaleDecision {
+    /// Desired active-worker count; the platform adds/drains workers one at
+    /// a time (LIFO drain) until it matches. `None` = no change.
+    pub target_workers: Option<usize>,
+    /// Per-function speculative sandboxes to initialize this tick.
+    pub prewarm: Vec<(FunctionId, usize)>,
+}
+
+/// An elastic-scaling policy. Object-safe (mirrors the [`crate::scheduler::Scheduler`]
+/// contract) so the platform can swap policies from config.
+pub trait AutoscalePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Exact-time (time, up) scale events to pre-schedule at run start.
+    /// Only the scheduled policy uses this; it keeps the event times exact
+    /// instead of quantizing them to the control tick.
+    fn scheduled_events(&self) -> Vec<(f64, bool)> {
+        Vec::new()
+    }
+
+    /// Whether the platform should run the recurring control tick for this
+    /// policy. Event-list policies return false and skip the tick entirely.
+    fn tick_driven(&self) -> bool {
+        true
+    }
+
+    /// A request for function `f` arrived at time `t` (forecaster feed).
+    fn on_arrival(&mut self, _f: FunctionId, _t: f64) {}
+
+    /// One control tick: observe the cluster, decide.
+    fn tick(&mut self, _obs: &AutoscaleObs) -> ScaleDecision {
+        ScaleDecision::default()
+    }
+}
+
+/// Policy names accepted by `autoscale.policy`.
+pub const ALL_POLICIES: [&str; 4] = ["none", "scheduled", "reactive", "predictive"];
+
+/// Construct the policy a config asks for.
+pub fn make_policy(cfg: &AutoscaleConfig) -> Result<Box<dyn AutoscalePolicy>, String> {
+    let p: Box<dyn AutoscalePolicy> = match cfg.policy.as_str() {
+        "none" => Box::new(NoScaling),
+        "scheduled" => Box::new(Scheduled::parse(&cfg.events)?),
+        "reactive" => Box::new(Reactive::from_config(cfg)),
+        "predictive" => Box::new(Predictive::from_config(cfg)),
+        other => return Err(format!("unknown autoscale policy '{other}'")),
+    };
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_constructs_all_policies() {
+        for name in ALL_POLICIES {
+            let cfg = AutoscaleConfig { policy: name.into(), ..Default::default() };
+            let p = make_policy(&cfg).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        let bad = AutoscaleConfig { policy: "bogus".into(), ..Default::default() };
+        assert!(make_policy(&bad).is_err());
+    }
+
+    #[test]
+    fn none_policy_is_inert() {
+        let mut p = NoScaling;
+        assert!(!p.tick_driven());
+        assert!(p.scheduled_events().is_empty());
+        let obs = AutoscaleObs {
+            now: 1.0,
+            active_workers: 2,
+            concurrency: 4,
+            total_running: 8,
+            total_queued: 3,
+            warm_supply: &[],
+            mean_exec_s: &[],
+        };
+        assert_eq!(p.tick(&obs), ScaleDecision::default());
+    }
+
+    #[test]
+    fn utilization_math() {
+        let obs = AutoscaleObs {
+            now: 0.0,
+            active_workers: 2,
+            concurrency: 4,
+            total_running: 6,
+            total_queued: 0,
+            warm_supply: &[],
+            mean_exec_s: &[],
+        };
+        assert!((obs.utilization() - 0.75).abs() < 1e-12);
+    }
+}

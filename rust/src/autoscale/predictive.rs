@@ -1,0 +1,330 @@
+//! Predictive scaling and pre-warming from per-function arrival forecasts.
+//!
+//! Two estimators run per function, fed by every arrival:
+//!
+//! - an **EWMA of the instantaneous arrival rate** (1/inter-arrival),
+//!   tracking the smooth component of demand;
+//! - a **log₂ inter-arrival histogram**, whose low quantile gives a
+//!   burst-robust rate estimate: during a burst the short inter-arrivals
+//!   pile into the low bins long before the EWMA catches up.
+//!
+//! The forecast rate is the max of the two. From it the policy derives
+//!
+//! - the **worker target** via Little's law: expected concurrent
+//!   executions `Σ_f rate_f · exec_f` over the per-worker slot budget
+//!   `concurrency · target_util` (the `1 - target_util` slack is the
+//!   burst headroom), clamped to `[min_workers, max_workers]`; scale-up
+//!   applies immediately, scale-down one worker per cooldown window;
+//! - **per-function pre-warm pools**: enough idle sandboxes to cover the
+//!   expected concurrency of each function, topped up by at most
+//!   `prewarm_max_per_tick` speculative initializations per tick —
+//!   this replaces the global `cluster.prewarm` heuristic with
+//!   per-function pools sized by the forecast.
+
+use super::{AutoscaleObs, AutoscalePolicy, ScaleDecision};
+use crate::config::AutoscaleConfig;
+use crate::workload::spec::FunctionId;
+
+/// Histogram bin k covers inter-arrivals in [2^k, 2^(k+1)) milliseconds;
+/// 16 bins span 1 ms .. ~65 s.
+const HIST_BINS: usize = 16;
+
+/// Per-function arrival forecaster (EWMA + inter-arrival histogram).
+pub struct Forecaster {
+    alpha: f64,
+    ewma_rate: Vec<f64>,
+    last_t: Vec<f64>,
+    hist: Vec<[u32; HIST_BINS]>,
+}
+
+impl Forecaster {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, ewma_rate: Vec::new(), last_t: Vec::new(), hist: Vec::new() }
+    }
+
+    fn grow(&mut self, f: FunctionId) {
+        if f >= self.ewma_rate.len() {
+            self.ewma_rate.resize(f + 1, 0.0);
+            self.last_t.resize(f + 1, -1.0);
+            self.hist.resize(f + 1, [0; HIST_BINS]);
+        }
+    }
+
+    pub fn on_arrival(&mut self, f: FunctionId, t: f64) {
+        self.grow(f);
+        let last = self.last_t[f];
+        if last >= 0.0 && t > last {
+            let dt = t - last;
+            let inst = 1.0 / dt;
+            self.ewma_rate[f] = self.alpha * inst + (1.0 - self.alpha) * self.ewma_rate[f];
+            let ms = dt * 1000.0;
+            let bin = if ms < 1.0 { 0 } else { (ms.log2() as usize).min(HIST_BINS - 1) };
+            self.hist[f][bin] = self.hist[f][bin].saturating_add(1);
+        }
+        self.last_t[f] = t;
+    }
+
+    /// Inter-arrival quantile in seconds from the histogram (bin upper
+    /// edge: pessimistic, i.e. rate-underestimating within a bin).
+    fn interarrival_quantile_s(&self, f: FunctionId, q: f64) -> Option<f64> {
+        let h = self.hist.get(f)?;
+        let total: u64 = h.iter().map(|&c| c as u64).sum();
+        if total < 8 {
+            return None; // too few samples to call it a distribution
+        }
+        let want = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (bin, &c) in h.iter().enumerate() {
+            acc += c as u64;
+            if acc >= want {
+                return Some((1u64 << (bin + 1)) as f64 / 1000.0);
+            }
+        }
+        None
+    }
+
+    /// Forecast arrival rate (req/s): max of the EWMA and the burst-mode
+    /// estimate (inverse 25th-percentile inter-arrival).
+    pub fn rate(&self, f: FunctionId) -> f64 {
+        let ewma = self.ewma_rate.get(f).copied().unwrap_or(0.0);
+        let burst = self
+            .interarrival_quantile_s(f, 0.25)
+            .map(|dt| 1.0 / dt)
+            .unwrap_or(0.0);
+        ewma.max(burst)
+    }
+
+    /// Forecast rate as of `now`. Both estimators only update on
+    /// arrivals, so a function that goes silent would otherwise pin its
+    /// burst-era rate forever; cap the estimate hyperbolically by the
+    /// observed silence (a function quiet for `s` seconds cannot plausibly
+    /// sustain much more than ~2/s req/s), so stale forecasts decay and
+    /// release capacity.
+    pub fn rate_at(&self, f: FunctionId, now: f64) -> f64 {
+        let base = self.rate(f);
+        let last = self.last_t.get(f).copied().unwrap_or(-1.0);
+        if last < 0.0 {
+            return 0.0;
+        }
+        let silence = now - last;
+        if silence <= 0.0 {
+            return base;
+        }
+        base.min(2.0 / silence)
+    }
+
+    /// Functions the forecaster has seen at least one arrival for.
+    pub fn len(&self) -> usize {
+        self.ewma_rate.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ewma_rate.is_empty()
+    }
+}
+
+pub struct Predictive {
+    forecaster: Forecaster,
+    min_workers: usize,
+    max_workers: usize,
+    target_util: f64,
+    cooldown_s: f64,
+    prewarm_cap: usize,
+    last_down_t: f64,
+}
+
+impl Predictive {
+    pub fn from_config(cfg: &AutoscaleConfig) -> Self {
+        Self {
+            forecaster: Forecaster::new(cfg.ewma_alpha),
+            min_workers: cfg.min_workers,
+            max_workers: cfg.max_workers,
+            target_util: cfg.target_util,
+            cooldown_s: cfg.cooldown_s,
+            prewarm_cap: cfg.prewarm_max_per_tick,
+            last_down_t: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Expose the forecast (diagnostics / tests).
+    pub fn forecast_rate(&self, f: FunctionId) -> f64 {
+        self.forecaster.rate(f)
+    }
+}
+
+impl AutoscalePolicy for Predictive {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn on_arrival(&mut self, f: FunctionId, t: f64) {
+        self.forecaster.on_arrival(f, t);
+    }
+
+    fn tick(&mut self, obs: &AutoscaleObs) -> ScaleDecision {
+        let mut d = ScaleDecision::default();
+
+        // Little's law per function: expected concurrent executions.
+        let mut demand = 0.0;
+        for (f, &exec_s) in obs.mean_exec_s.iter().enumerate() {
+            let rate = self.forecaster.rate_at(f, obs.now);
+            if rate <= 0.0 || exec_s <= 0.0 {
+                continue;
+            }
+            let df = rate * exec_s;
+            demand += df;
+            // Pre-warm pool: keep ceil(df) instances warm per function.
+            let want = df.ceil() as usize;
+            let have = obs.warm_supply.get(f).copied().unwrap_or(0);
+            let deficit = want.saturating_sub(have).min(self.prewarm_cap);
+            if deficit > 0 {
+                d.prewarm.push((f, deficit));
+            }
+        }
+
+        // Worker target with burst headroom; demand can also come straight
+        // from visible backlog when forecasts lag (queued requests).
+        let slots_per_worker = obs.concurrency as f64 * self.target_util;
+        let backlog = obs.total_running.max(obs.total_queued) as f64;
+        let needed = demand.max(backlog * self.target_util);
+        let target =
+            ((needed / slots_per_worker).ceil() as usize).clamp(self.min_workers, self.max_workers);
+
+        if target > obs.active_workers {
+            // Scale up immediately: pre-warming only helps if the capacity
+            // exists before the burst peaks.
+            d.target_workers = Some(target);
+        } else if target < obs.active_workers && obs.now - self.last_down_t >= self.cooldown_s {
+            // Scale down gently: one worker per cooldown window, so a lull
+            // between bursts does not flush the warm pool.
+            d.target_workers = Some(obs.active_workers - 1);
+            self.last_down_t = obs.now;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            policy: "predictive".into(),
+            min_workers: 1,
+            max_workers: 8,
+            target_util: 0.7,
+            cooldown_s: 10.0,
+            prewarm_max_per_tick: 2,
+            ewma_alpha: 0.2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn forecaster_converges_on_steady_rate() {
+        let mut fc = Forecaster::new(0.2);
+        for i in 0..200 {
+            fc.on_arrival(0, i as f64 * 0.1); // 10 req/s
+        }
+        let r = fc.rate(0);
+        assert!((5.0..=20.0).contains(&r), "rate {r} far from 10 req/s");
+    }
+
+    #[test]
+    fn histogram_catches_bursts_faster_than_ewma() {
+        let mut fc = Forecaster::new(0.05); // sluggish EWMA
+        let mut t = 0.0;
+        for _ in 0..50 {
+            fc.on_arrival(0, t);
+            t += 1.0; // 1 req/s baseline
+        }
+        for _ in 0..30 {
+            fc.on_arrival(0, t);
+            t += 0.01; // 100 req/s burst
+        }
+        assert!(fc.rate(0) > 10.0, "burst not detected: {}", fc.rate(0));
+    }
+
+    #[test]
+    fn unknown_function_has_zero_rate() {
+        let fc = Forecaster::new(0.2);
+        assert_eq!(fc.rate(7), 0.0);
+        assert_eq!(fc.rate_at(7, 100.0), 0.0);
+    }
+
+    #[test]
+    fn stale_forecast_decays_with_silence() {
+        let mut fc = Forecaster::new(0.2);
+        for i in 0..200 {
+            fc.on_arrival(0, i as f64 * 0.05); // 20 req/s until t=10
+        }
+        let fresh = fc.rate_at(0, 10.0);
+        assert!(fresh > 5.0, "active forecast {fresh} should be near 20");
+        let stale = fc.rate_at(0, 110.0); // silent for 100 s
+        assert!(stale <= 2.0 / 99.0, "stale forecast {stale} must decay");
+    }
+
+    fn obs_with<'a>(
+        now: f64,
+        active: usize,
+        warm: &'a [usize],
+        exec: &'a [f64],
+    ) -> AutoscaleObs<'a> {
+        AutoscaleObs {
+            now,
+            active_workers: active,
+            concurrency: 4,
+            total_running: 0,
+            total_queued: 0,
+            warm_supply: warm,
+            mean_exec_s: exec,
+        }
+    }
+
+    #[test]
+    fn prewarm_pool_covers_forecast_deficit() {
+        let mut p = Predictive::from_config(&cfg());
+        for i in 0..100 {
+            p.on_arrival(0, i as f64 * 0.1); // ~10 req/s
+        }
+        let exec = [0.4]; // demand ~ 4 concurrent
+        let d = p.tick(&obs_with(10.0, 2, &[1], &exec));
+        let pool: Vec<_> = d.prewarm.iter().filter(|&&(f, _)| f == 0).collect();
+        assert_eq!(pool.len(), 1);
+        let n = pool[0].1;
+        assert!((1..=2).contains(&n), "deficit {n} should be capped at 2");
+    }
+
+    #[test]
+    fn no_prewarm_when_supply_covers_demand() {
+        let mut p = Predictive::from_config(&cfg());
+        for i in 0..100 {
+            p.on_arrival(0, i as f64 * 0.1);
+        }
+        let exec = [0.4];
+        let d = p.tick(&obs_with(10.0, 2, &[8], &exec));
+        assert!(d.prewarm.is_empty(), "warm supply 8 covers demand ~4: {:?}", d.prewarm);
+    }
+
+    #[test]
+    fn scales_up_for_forecast_demand_and_down_slowly() {
+        let mut p = Predictive::from_config(&cfg());
+        for i in 0..400 {
+            p.on_arrival(0, i as f64 * 0.025); // ~40 req/s
+        }
+        let exec = [0.5]; // demand ~ 20 concurrent -> ceil(20 / 2.8) = 8 workers
+        let d = p.tick(&obs_with(10.0, 2, &[0], &exec));
+        let up = d.target_workers.expect("must scale up");
+        assert!(up > 4, "forecast demand should ask for several workers, got {up}");
+
+        // Demand gone: downscale is one worker per cooldown window.
+        let mut q = Predictive::from_config(&cfg());
+        let d1 = q.tick(&obs_with(100.0, 6, &[], &[]));
+        assert_eq!(d1.target_workers, Some(5));
+        let d2 = q.tick(&obs_with(101.0, 5, &[], &[]));
+        assert_eq!(d2.target_workers, None, "cooldown gates the next drain");
+        let d3 = q.tick(&obs_with(110.0, 5, &[], &[]));
+        assert_eq!(d3.target_workers, Some(4));
+    }
+}

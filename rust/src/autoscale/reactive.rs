@@ -1,0 +1,141 @@
+//! Reactive (threshold) scaling: the classic horizontal-autoscaler loop.
+//!
+//! Scale up when slot utilization crosses `scale_up_util` (or requests are
+//! queueing), scale down when it falls below `scale_down_util`; the gap
+//! between the thresholds is the hysteresis dead band and `cooldown_s`
+//! rate-limits consecutive actions, so a bursty trace does not make the
+//! cluster flap. Purely reactive: capacity arrives only *after* load is
+//! visible, so every scale-up serves its first requests cold — the
+//! baseline the predictive policy is measured against.
+
+use super::{AutoscaleObs, AutoscalePolicy, ScaleDecision};
+use crate::config::AutoscaleConfig;
+
+pub struct Reactive {
+    min_workers: usize,
+    max_workers: usize,
+    up_util: f64,
+    down_util: f64,
+    cooldown_s: f64,
+    step: usize,
+    /// Time of the last scaling action; f64::NEG_INFINITY before the first.
+    last_action_t: f64,
+}
+
+impl Reactive {
+    pub fn from_config(cfg: &AutoscaleConfig) -> Self {
+        Self {
+            min_workers: cfg.min_workers,
+            max_workers: cfg.max_workers,
+            up_util: cfg.scale_up_util,
+            down_util: cfg.scale_down_util,
+            cooldown_s: cfg.cooldown_s,
+            step: cfg.step.max(1),
+            last_action_t: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl AutoscalePolicy for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn tick(&mut self, obs: &AutoscaleObs) -> ScaleDecision {
+        let mut d = ScaleDecision::default();
+        if obs.now - self.last_action_t < self.cooldown_s {
+            return d;
+        }
+        let util = obs.utilization();
+        if util > self.up_util || obs.total_queued > 0 {
+            let target = obs.active_workers.saturating_add(self.step).min(self.max_workers);
+            if target > obs.active_workers {
+                self.last_action_t = obs.now;
+                d.target_workers = Some(target);
+            }
+        } else if util < self.down_util {
+            let target = obs.active_workers.saturating_sub(self.step).max(self.min_workers);
+            if target < obs.active_workers {
+                self.last_action_t = obs.now;
+                d.target_workers = Some(target);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Reactive {
+        Reactive::from_config(&AutoscaleConfig {
+            policy: "reactive".into(),
+            min_workers: 2,
+            max_workers: 6,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            cooldown_s: 10.0,
+            step: 1,
+            ..Default::default()
+        })
+    }
+
+    fn obs(now: f64, active: usize, running: usize, queued: usize) -> ScaleDecision {
+        // Helper builds the obs and ticks a fresh borrow each call site.
+        let o = AutoscaleObs {
+            now,
+            active_workers: active,
+            concurrency: 4,
+            total_running: running,
+            total_queued: queued,
+            warm_supply: &[],
+            mean_exec_s: &[],
+        };
+        let mut p = policy();
+        p.tick(&o)
+    }
+
+    #[test]
+    fn scales_up_on_high_utilization() {
+        assert_eq!(obs(0.0, 3, 11, 0).target_workers, Some(4)); // 11/12 > 0.8
+    }
+
+    #[test]
+    fn scales_up_on_queueing() {
+        assert_eq!(obs(0.0, 3, 2, 5).target_workers, Some(4));
+    }
+
+    #[test]
+    fn dead_band_holds() {
+        assert_eq!(obs(0.0, 3, 6, 0).target_workers, None); // 0.5: between thresholds
+    }
+
+    #[test]
+    fn scales_down_when_idle_but_respects_min() {
+        assert_eq!(obs(0.0, 4, 1, 0).target_workers, Some(3)); // 1/16 < 0.3
+        assert_eq!(obs(0.0, 2, 0, 0).target_workers, None, "min bound holds");
+    }
+
+    #[test]
+    fn respects_max_bound() {
+        assert_eq!(obs(0.0, 6, 24, 9).target_workers, None, "max bound holds");
+    }
+
+    #[test]
+    fn cooldown_rate_limits() {
+        let mut p = policy();
+        let hot = |now| AutoscaleObs {
+            now,
+            active_workers: 3,
+            concurrency: 4,
+            total_running: 12,
+            total_queued: 0,
+            warm_supply: &[],
+            mean_exec_s: &[],
+        };
+        assert_eq!(p.tick(&hot(0.0)).target_workers, Some(4));
+        assert_eq!(p.tick(&hot(5.0)).target_workers, None, "inside cooldown");
+        assert_eq!(p.tick(&hot(10.0)).target_workers, Some(4), "cooldown elapsed");
+    }
+}

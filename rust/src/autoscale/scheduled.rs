@@ -1,0 +1,125 @@
+//! The inert policy and the explicit-event-list policy.
+//!
+//! `Scheduled` is the closed-loop home of the repo's original
+//! externally-scripted scaling (`run_scaled` / `run_scale_events`): the
+//! event list is pre-scheduled at run start at its *exact* times (not
+//! quantized to the control tick), so replays are bit-identical to the
+//! legacy entry points.
+
+use super::{AutoscaleObs, AutoscalePolicy, ScaleDecision};
+
+/// `none`: the static cluster. Never ticks, never scales.
+pub struct NoScaling;
+
+impl AutoscalePolicy for NoScaling {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn tick_driven(&self) -> bool {
+        false
+    }
+}
+
+/// `scheduled`: replay an explicit (time, up) event list.
+pub struct Scheduled {
+    /// (time, up) in caller order. Order is preserved verbatim: two events
+    /// at the same timestamp fire in list order (FIFO tie-breaking in the
+    /// event queue), which the LIFO-drain tests rely on.
+    events: Vec<(f64, bool)>,
+}
+
+impl Scheduled {
+    pub fn new(events: Vec<(f64, bool)>) -> Self {
+        Self { events }
+    }
+
+    /// Parse an event spec: separator-delimited signed times, e.g.
+    /// `"60,120,-150"` — up at 60 s and 120 s, down (LIFO drain) at 150 s.
+    /// Accepts `,`, `;`, or whitespace as separators (`;` survives the
+    /// comma-splitting `--set` CLI mechanism) and an optional `+` prefix.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for tok in spec.split(|c: char| c == ',' || c == ';' || c.is_whitespace()) {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (up, num) = match tok.strip_prefix('-') {
+                Some(rest) => (false, rest),
+                None => (true, tok.strip_prefix('+').unwrap_or(tok)),
+            };
+            let t: f64 = num
+                .parse()
+                .map_err(|_| format!("autoscale.events: bad time '{tok}'"))?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!("autoscale.events: time '{tok}' must be >= 0"));
+            }
+            events.push((t, up));
+        }
+        Ok(Self::new(events))
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl AutoscalePolicy for Scheduled {
+    fn name(&self) -> &'static str {
+        "scheduled"
+    }
+
+    fn scheduled_events(&self) -> Vec<(f64, bool)> {
+        self.events.clone()
+    }
+
+    fn tick_driven(&self) -> bool {
+        false
+    }
+
+    fn tick(&mut self, _obs: &AutoscaleObs) -> ScaleDecision {
+        // Events are pre-scheduled exactly; nothing to do per tick.
+        ScaleDecision::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_signed_times() {
+        let s = Scheduled::parse("60,120,-150").unwrap();
+        assert_eq!(s.scheduled_events(), vec![(60.0, true), (120.0, true), (150.0, false)]);
+    }
+
+    #[test]
+    fn parse_alternate_separators_and_plus() {
+        let s = Scheduled::parse(" +30; -45.5  90 ").unwrap();
+        assert_eq!(s.scheduled_events(), vec![(30.0, true), (45.5, false), (90.0, true)]);
+    }
+
+    #[test]
+    fn parse_preserves_duplicate_times_in_order() {
+        // LIFO-drain semantics depend on same-time events staying FIFO.
+        let s = Scheduled::parse("-30,-30,60").unwrap();
+        assert_eq!(s.scheduled_events(), vec![(30.0, false), (30.0, false), (60.0, true)]);
+    }
+
+    #[test]
+    fn parse_empty_is_no_events() {
+        assert!(Scheduled::parse("").unwrap().is_empty());
+        assert!(Scheduled::parse(" , ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Scheduled::parse("abc").is_err());
+        assert!(Scheduled::parse("1e400").is_err(), "infinite time rejected");
+    }
+}

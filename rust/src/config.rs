@@ -114,6 +114,64 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Elastic-scaling control loop (the `autoscale` section).
+///
+/// The platform runs a recurring control tick (period `interval_s`) that
+/// hands a cluster snapshot to the configured [`crate::autoscale`] policy;
+/// the policy answers with a worker-count target and per-function pre-warm
+/// pools. See `DESIGN.md` §4 for the subsystem architecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// One of: none, scheduled, reactive, predictive.
+    pub policy: String,
+    /// Control-tick period in seconds.
+    pub interval_s: f64,
+    /// Worker-count bounds enforced by the reactive/predictive policies
+    /// (the scheduled policy replays its event list verbatim).
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Reactive: scale up when utilization (running / (workers x vCPUs))
+    /// exceeds this threshold.
+    pub scale_up_util: f64,
+    /// Reactive: scale down when utilization falls below this threshold
+    /// (the gap between the two thresholds is the hysteresis dead band).
+    pub scale_down_util: f64,
+    /// Minimum seconds between two scaling actions of the same policy.
+    pub cooldown_s: f64,
+    /// Workers added or drained per scaling action.
+    pub step: usize,
+    /// Scheduled policy: comma-separated signed times in seconds, e.g.
+    /// "60,120,-150" — a worker joins at 60 s and at 120 s, one drains
+    /// (LIFO) at 150 s.
+    pub events: String,
+    /// Predictive: plan capacity so expected utilization sits at this level
+    /// (headroom for burst absorption).
+    pub target_util: f64,
+    /// Predictive: cap on speculative sandboxes per function per tick.
+    pub prewarm_max_per_tick: usize,
+    /// Predictive: EWMA smoothing factor for per-function arrival rates.
+    pub ewma_alpha: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            policy: "none".into(),
+            interval_s: 1.0,
+            min_workers: 1,
+            max_workers: 16,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            cooldown_s: 10.0,
+            step: 1,
+            events: String::new(),
+            target_util: 0.7,
+            prewarm_max_per_tick: 2,
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
 /// PJRT runtime settings (real-time serving mode).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RuntimeConfig {
@@ -135,6 +193,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub workload: WorkloadConfig,
     pub scheduler: SchedulerConfig,
+    pub autoscale: AutoscaleConfig,
     pub runtime: RuntimeConfig,
 }
 
@@ -173,6 +232,23 @@ impl Config {
                     ("vnodes", self.scheduler.vnodes.into()),
                     ("power_d", self.scheduler.power_d.into()),
                     ("instances", self.scheduler.instances.into()),
+                ]),
+            ),
+            (
+                "autoscale",
+                obj(vec![
+                    ("policy", self.autoscale.policy.as_str().into()),
+                    ("interval_s", self.autoscale.interval_s.into()),
+                    ("min_workers", self.autoscale.min_workers.into()),
+                    ("max_workers", self.autoscale.max_workers.into()),
+                    ("scale_up_util", self.autoscale.scale_up_util.into()),
+                    ("scale_down_util", self.autoscale.scale_down_util.into()),
+                    ("cooldown_s", self.autoscale.cooldown_s.into()),
+                    ("step", self.autoscale.step.into()),
+                    ("events", self.autoscale.events.as_str().into()),
+                    ("target_util", self.autoscale.target_util.into()),
+                    ("prewarm_max_per_tick", self.autoscale.prewarm_max_per_tick.into()),
+                    ("ewma_alpha", self.autoscale.ewma_alpha.into()),
                 ]),
             ),
             (
@@ -260,6 +336,55 @@ impl Config {
                     v.as_u64().ok_or_else(|| missing("scheduler.instances"))? as usize;
             }
         }
+        if let Some(a) = j.get("autoscale") {
+            if let Some(v) = a.get("policy") {
+                cfg.autoscale.policy =
+                    v.as_str().ok_or_else(|| missing("autoscale.policy"))?.to_string();
+            }
+            if let Some(v) = a.get("interval_s") {
+                cfg.autoscale.interval_s =
+                    v.as_f64().ok_or_else(|| missing("autoscale.interval_s"))?;
+            }
+            if let Some(v) = a.get("min_workers") {
+                cfg.autoscale.min_workers =
+                    v.as_u64().ok_or_else(|| missing("autoscale.min_workers"))? as usize;
+            }
+            if let Some(v) = a.get("max_workers") {
+                cfg.autoscale.max_workers =
+                    v.as_u64().ok_or_else(|| missing("autoscale.max_workers"))? as usize;
+            }
+            if let Some(v) = a.get("scale_up_util") {
+                cfg.autoscale.scale_up_util =
+                    v.as_f64().ok_or_else(|| missing("autoscale.scale_up_util"))?;
+            }
+            if let Some(v) = a.get("scale_down_util") {
+                cfg.autoscale.scale_down_util =
+                    v.as_f64().ok_or_else(|| missing("autoscale.scale_down_util"))?;
+            }
+            if let Some(v) = a.get("cooldown_s") {
+                cfg.autoscale.cooldown_s =
+                    v.as_f64().ok_or_else(|| missing("autoscale.cooldown_s"))?;
+            }
+            if let Some(v) = a.get("step") {
+                cfg.autoscale.step = v.as_u64().ok_or_else(|| missing("autoscale.step"))? as usize;
+            }
+            if let Some(v) = a.get("events") {
+                cfg.autoscale.events =
+                    v.as_str().ok_or_else(|| missing("autoscale.events"))?.to_string();
+            }
+            if let Some(v) = a.get("target_util") {
+                cfg.autoscale.target_util =
+                    v.as_f64().ok_or_else(|| missing("autoscale.target_util"))?;
+            }
+            if let Some(v) = a.get("prewarm_max_per_tick") {
+                cfg.autoscale.prewarm_max_per_tick =
+                    v.as_u64().ok_or_else(|| missing("autoscale.prewarm_max_per_tick"))? as usize;
+            }
+            if let Some(v) = a.get("ewma_alpha") {
+                cfg.autoscale.ewma_alpha =
+                    v.as_f64().ok_or_else(|| missing("autoscale.ewma_alpha"))?;
+            }
+        }
         if let Some(r) = j.get("runtime") {
             if let Some(v) = r.get("artifacts_dir") {
                 cfg.runtime.artifacts_dir =
@@ -337,6 +462,39 @@ impl Config {
             "scheduler.instances" => {
                 self.scheduler.instances = value.parse().map_err(|_| bad(path, value))?
             }
+            "autoscale.policy" => self.autoscale.policy = value.to_string(),
+            "autoscale.interval_s" => {
+                self.autoscale.interval_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.min_workers" => {
+                self.autoscale.min_workers = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.max_workers" => {
+                self.autoscale.max_workers = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.scale_up_util" => {
+                self.autoscale.scale_up_util = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.scale_down_util" => {
+                self.autoscale.scale_down_util = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.cooldown_s" => {
+                self.autoscale.cooldown_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.step" => {
+                self.autoscale.step = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.events" => self.autoscale.events = value.to_string(),
+            "autoscale.target_util" => {
+                self.autoscale.target_util = value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.prewarm_max_per_tick" => {
+                self.autoscale.prewarm_max_per_tick =
+                    value.parse().map_err(|_| bad(path, value))?
+            }
+            "autoscale.ewma_alpha" => {
+                self.autoscale.ewma_alpha = value.parse().map_err(|_| bad(path, value))?
+            }
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = value.to_string(),
             "runtime.cold_extra_ms" => {
                 self.runtime.cold_extra_ms = value.parse().map_err(|_| bad(path, value))?
@@ -378,6 +536,45 @@ impl Config {
         }
         if self.scheduler.instances == 0 {
             return e("scheduler.instances must be >= 1");
+        }
+        if !crate::autoscale::ALL_POLICIES.contains(&self.autoscale.policy.as_str()) {
+            return Err(ConfigError(format!(
+                "unknown autoscale.policy '{}' (expected one of {:?})",
+                self.autoscale.policy,
+                crate::autoscale::ALL_POLICIES
+            )));
+        }
+        if self.autoscale.interval_s <= 0.0 {
+            return e("autoscale.interval_s must be > 0");
+        }
+        if self.autoscale.min_workers == 0 {
+            return e("autoscale.min_workers must be >= 1");
+        }
+        if self.autoscale.max_workers < self.autoscale.min_workers {
+            return e("autoscale.max_workers must be >= autoscale.min_workers");
+        }
+        if self.autoscale.scale_up_util <= self.autoscale.scale_down_util
+            || self.autoscale.scale_down_util < 0.0
+        {
+            return e("autoscale utilization thresholds must satisfy 0 <= down < up");
+        }
+        if self.autoscale.cooldown_s < 0.0 {
+            return e("autoscale.cooldown_s must be >= 0");
+        }
+        if self.autoscale.step == 0 {
+            return e("autoscale.step must be >= 1");
+        }
+        if self.autoscale.target_util <= 0.0 {
+            return e("autoscale.target_util must be > 0");
+        }
+        if self.autoscale.ewma_alpha <= 0.0 || self.autoscale.ewma_alpha > 1.0 {
+            return e("autoscale.ewma_alpha must be in (0, 1]");
+        }
+        if self.autoscale.policy == "predictive" && self.cluster.prewarm {
+            // The predictive policy's per-function pools replace the legacy
+            // global heuristic; running both would double-speculate against
+            // the same warm supply and corrupt the prewarm hit-rate metric.
+            return e("autoscale.policy=predictive replaces cluster.prewarm; disable one");
         }
         Ok(())
     }
@@ -446,5 +643,46 @@ mod tests {
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.cluster.workers, 3);
         assert_eq!(c.workload.vus, WorkloadConfig::default().vus);
+        assert_eq!(c.autoscale.policy, "none");
+    }
+
+    #[test]
+    fn autoscale_roundtrip_and_overrides() {
+        let mut c = Config::default();
+        c.apply_override("autoscale.policy=reactive").unwrap();
+        c.apply_override("autoscale.max_workers=12").unwrap();
+        c.apply_override("autoscale.cooldown_s=5.5").unwrap();
+        c.apply_override("autoscale.events=60;-120").unwrap();
+        assert_eq!(c.autoscale.policy, "reactive");
+        assert_eq!(c.autoscale.max_workers, 12);
+        assert_eq!(c.autoscale.cooldown_s, 5.5);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn autoscale_validation_rejects_bad_configs() {
+        let mut c = Config::default();
+        c.autoscale.policy = "bogus".into();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.autoscale.interval_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.autoscale.max_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.autoscale.scale_down_util = 0.9; // above scale_up_util: no dead band
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.autoscale.ewma_alpha = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.autoscale.policy = "predictive".into();
+        c.cluster.prewarm = true; // double speculation: rejected
+        assert!(c.validate().is_err());
+        c.cluster.prewarm = false;
+        assert!(c.validate().is_ok());
     }
 }

@@ -8,12 +8,15 @@
 //! - [`scheduler`] — the paper's contribution: Hiku (Algorithm 1) plus all
 //!   baseline scheduling algorithms.
 //! - [`platform`] — the FaaS substrate: workers, sandboxes, keep-alive.
+//! - [`autoscale`] — policy-driven elastic scaling and predictive
+//!   pre-warming (closes the §II-C auto-scaling loop).
 //! - [`workload`] — FunctionBench registry, Azure-like traces, load gen.
 //! - [`sim`] — deterministic discrete-event simulator (the paper's cluster
 //!   experiments, Figs 10-17).
 //! - [`runtime`]/[`server`] — PJRT-backed real-time serving of the AOT
 //!   compiled payloads (end-to-end validation).
 
+pub mod autoscale;
 pub mod bench;
 pub mod config;
 pub mod logging;

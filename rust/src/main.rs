@@ -1,16 +1,19 @@
 //! `hiku` — the launcher binary.
 //!
 //! Subcommands:
-//!   sim      run one simulated experiment (one scheduler, one seed)
-//!   sweep    run the paper's evaluation sweep (schedulers x seeds x VUs)
-//!   trace    synthesize + analyze an Azure-like trace (Figs 4-6)
-//!   serve    real-time serving demo on the PJRT runtime (AOT artifacts)
-//!   config   print the default config as JSON
+//!   sim        run one simulated experiment (one scheduler, one seed)
+//!   sweep      run the paper's evaluation sweep (schedulers x seeds x VUs)
+//!   trace      synthesize + analyze an Azure-like trace (Figs 4-6)
+//!   autoscale  compare autoscale policies x schedulers on the bursty trace
+//!   serve      real-time serving demo on the PJRT runtime (AOT artifacts)
+//!   config     print the default config as JSON
 //!
 //! Examples:
 //!   hiku sim --scheduler hiku --vus 100 --duration 300 --seed 42
+//!   hiku sim --scheduler hiku --autoscale reactive --workers 2
 //!   hiku sweep --runs 5 --vu-levels 20,50,100
 //!   hiku trace --universe 10000 --minutes 30
+//!   hiku autoscale --policies none,reactive,predictive --schedulers hiku,lc
 //!   hiku serve --scheduler hiku --requests 200
 
 use hiku::config::Config;
@@ -26,13 +29,14 @@ fn main() {
         "sim" => cmd_sim(rest),
         "sweep" => cmd_sweep(rest),
         "trace" => cmd_trace(rest),
+        "autoscale" => cmd_autoscale(rest),
         "serve" => cmd_serve(rest),
         "config" => cmd_config(rest),
         "export" => cmd_export(rest),
         "" | "--help" | "-h" | "help" => {
             eprintln!(
                 "hiku — pull-based scheduling for serverless computing (CCGRID'25 reproduction)\n\n\
-                 USAGE:\n  hiku <sim|sweep|trace|serve|config|export> [OPTIONS]\n\n\
+                 USAGE:\n  hiku <sim|sweep|trace|autoscale|serve|config|export> [OPTIONS]\n\n\
                  Run `hiku <subcommand> --help` for options."
             );
             0
@@ -53,6 +57,8 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("vus", None, "virtual users")
         .opt("duration", None, "run duration in seconds")
         .opt("workers", None, "number of workers")
+        .opt("autoscale", None, "autoscale policy (none|scheduled|reactive|predictive)")
+        .opt("scale-events", None, "scheduled-policy events, e.g. '60;120;-150'")
         .opt("seed", None, "experiment seed")
 }
 
@@ -77,6 +83,12 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     if let Some(v) = args.get("workers") {
         cfg.cluster.workers =
             v.parse().map_err(|_| "--workers: integer expected".to_string())?;
+    }
+    if let Some(p) = args.get("autoscale") {
+        cfg.autoscale.policy = p.to_string();
+    }
+    if let Some(e) = args.get("scale-events") {
+        cfg.autoscale.events = e.to_string();
     }
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;
@@ -167,6 +179,51 @@ fn cmd_trace(argv: &[String]) -> i32 {
     0
 }
 
+fn cmd_autoscale(argv: &[String]) -> i32 {
+    let cli = config_cli(Cli::new(
+        "hiku autoscale",
+        "compare autoscale policies x schedulers on the bursty trace",
+    ))
+    .opt("policies", Some("none,scheduled,reactive,predictive"), "policies to sweep")
+    .opt("schedulers", Some("hiku,least-connections"), "schedulers to sweep");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let mut base = match build_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    // Autoscale-friendly defaults when the caller sticks to the paper
+    // setup: start small so scaling has room to act.
+    if args.get("workers").is_none() && args.get("config").is_none() {
+        base.cluster.workers = 2;
+        base.autoscale.min_workers = 2;
+        base.autoscale.max_workers = 10;
+    }
+    if args.get("duration").is_none() {
+        base.workload.duration_s = 240.0;
+    }
+    let policies = args.parse_list("policies");
+    let schedulers = args.parse_list("schedulers");
+    match hiku::report::autoscale_report(&base, &policies, &schedulers, base.workload.seed) {
+        Ok(text) => {
+            println!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> i32 {
     let cli = config_cli(Cli::new("hiku serve", "real-time PJRT serving demo"))
         .opt("requests", Some("100"), "requests to issue");
@@ -237,6 +294,7 @@ fn cmd_export(argv: &[String]) -> i32 {
         ("fig10_latency_cdf.csv", export::latency_cdf_csv(&mut all, 100)),
         ("fig14_cv_series.csv", export::cv_series_csv(&all)),
         ("fig16_cumulative.csv", export::cumulative_csv(&all)),
+        ("autoscale_timeline.csv", export::scaling_timeline_csv(&all)),
         ("summary.csv", export::summary_csv(&mut all)),
     ];
     for (name, content) in files {

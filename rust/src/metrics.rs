@@ -25,6 +25,17 @@ pub struct RunMetrics {
     pub cold_series: TimeSeries,
     /// Worker-queue delay (scheduling quality diagnostic).
     pub queue_delay_ms: OnlineStats,
+    /// Autoscale timeline: (time, active workers after the event). The
+    /// first entry is the initial worker count at t=0; a static run has
+    /// exactly one entry.
+    pub scaling_timeline: Vec<(f64, usize)>,
+    /// Integral of active workers over the run (cost proxy): one worker
+    /// kept for one second = one worker-second.
+    pub worker_seconds: f64,
+    /// Speculative sandboxes initialized (predictive pre-warming).
+    pub prewarm_spawned: u64,
+    /// Warm starts served by a pre-warmed (never-before-used) sandbox.
+    pub prewarm_hits: u64,
     pub duration_s: f64,
     pub completed: u64,
     pub issued: u64,
@@ -44,9 +55,32 @@ impl RunMetrics {
             throughput: TimeSeries::new(1.0),
             cold_series: TimeSeries::new(1.0),
             queue_delay_ms: OnlineStats::new(),
+            scaling_timeline: Vec::new(),
+            worker_seconds: 0.0,
+            prewarm_spawned: 0,
+            prewarm_hits: 0,
             duration_s,
             completed: 0,
             issued: 0,
+        }
+    }
+
+    /// Record the active-worker count changing to `active` at time `t`
+    /// (also called once at t=0 with the initial count).
+    pub fn record_scale(&mut self, t: f64, active: usize) {
+        if let Some(&(t0, a0)) = self.scaling_timeline.last() {
+            self.worker_seconds += (t - t0).max(0.0) * a0 as f64;
+        }
+        self.scaling_timeline.push((t, active));
+    }
+
+    /// Close the worker-seconds integral at the end of the run.
+    pub fn finalize_scaling(&mut self, end_t: f64) {
+        if let Some(&(t0, a0)) = self.scaling_timeline.last() {
+            if end_t > t0 {
+                self.worker_seconds += (end_t - t0) * a0 as f64;
+                self.scaling_timeline.push((end_t, a0));
+            }
         }
     }
 
@@ -109,6 +143,21 @@ impl RunMetrics {
         self.completed as f64 / self.duration_s
     }
 
+    /// Number of scaling actions that changed the worker count.
+    pub fn scale_event_count(&self) -> usize {
+        self.scaling_timeline.windows(2).filter(|w| w[0].1 != w[1].1).count()
+    }
+
+    /// Fraction of pre-warmed sandboxes that served a warm start before
+    /// being evicted (speculation accuracy).
+    pub fn prewarm_hit_rate(&self) -> f64 {
+        if self.prewarm_spawned == 0 {
+            0.0
+        } else {
+            self.prewarm_hits as f64 / self.prewarm_spawned as f64
+        }
+    }
+
     /// Summary as JSON (dumped by the CLI for external plotting).
     pub fn summary_json(&mut self) -> Json {
         let mean = self.mean_latency_ms();
@@ -132,6 +181,10 @@ impl RunMetrics {
             ("mean_cv", self.mean_cv().into()),
             ("rps", self.rps().into()),
             ("mean_queue_delay_ms", self.queue_delay_ms.mean().into()),
+            ("worker_seconds", self.worker_seconds.into()),
+            ("scale_events", self.scale_event_count().into()),
+            ("prewarm_spawned", self.prewarm_spawned.into()),
+            ("prewarm_hit_rate", self.prewarm_hit_rate().into()),
         ])
     }
 }
@@ -147,6 +200,8 @@ pub struct Aggregate {
     pub mean_cv: OnlineStats,
     pub completed: OnlineStats,
     pub rps: OnlineStats,
+    pub worker_seconds: OnlineStats,
+    pub prewarm_hit_rate: OnlineStats,
 }
 
 impl Aggregate {
@@ -163,6 +218,8 @@ impl Aggregate {
         self.mean_cv.push(run.mean_cv());
         self.completed.push(run.completed as f64);
         self.rps.push(run.rps());
+        self.worker_seconds.push(run.worker_seconds);
+        self.prewarm_hit_rate.push(run.prewarm_hit_rate());
     }
 
     pub fn runs(&self) -> u64 {
@@ -187,6 +244,27 @@ mod tests {
         assert!((m.rps() - 0.2).abs() < 1e-12);
         let j = m.summary_json();
         assert_eq!(j.get("cold_starts").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn scaling_timeline_integrates_worker_seconds() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 100.0);
+        m.record_scale(0.0, 2);
+        m.record_scale(10.0, 3); // 2 workers x 10 s
+        m.record_scale(40.0, 2); // 3 workers x 30 s
+        m.finalize_scaling(100.0); // 2 workers x 60 s
+        assert!((m.worker_seconds - (20.0 + 90.0 + 120.0)).abs() < 1e-9);
+        assert_eq!(m.scale_event_count(), 2, "terminal point is not an event");
+        assert_eq!(m.scaling_timeline.last(), Some(&(100.0, 2)));
+    }
+
+    #[test]
+    fn prewarm_hit_rate_bounds() {
+        let mut m = RunMetrics::new("hiku", 1, 1, 1.0);
+        assert_eq!(m.prewarm_hit_rate(), 0.0, "no speculation -> rate 0");
+        m.prewarm_spawned = 4;
+        m.prewarm_hits = 3;
+        assert!((m.prewarm_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

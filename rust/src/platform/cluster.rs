@@ -52,6 +52,8 @@ impl Cluster {
             t.warm += w.total_warm;
             t.evictions_pressure += w.total_evictions_pressure;
             t.evictions_keepalive += w.total_evictions_keepalive;
+            t.prewarm_spawned += w.total_prewarm_spawned;
+            t.prewarm_hits += w.total_prewarm_hits;
         }
         t
     }
@@ -63,6 +65,8 @@ pub struct ClusterTotals {
     pub warm: u64,
     pub evictions_pressure: u64,
     pub evictions_keepalive: u64,
+    pub prewarm_spawned: u64,
+    pub prewarm_hits: u64,
 }
 
 impl ClusterTotals {

@@ -34,6 +34,10 @@ pub struct Sandbox {
     pub epoch: u64,
     /// Number of executions served (1 cold + n-1 warm).
     pub executions: u64,
+    /// True for a speculatively created (pre-warmed) sandbox that has not
+    /// yet served its first execution; cleared on first use so each
+    /// speculation is counted as at most one hit.
+    pub prewarmed: bool,
     pub created_at: f64,
 }
 
@@ -47,6 +51,7 @@ impl Sandbox {
             idle_since: now,
             epoch: 0,
             executions: 0,
+            prewarmed: false,
             created_at: now,
         }
     }

@@ -68,6 +68,10 @@ pub struct Worker {
     pub total_warm: u64,
     pub total_evictions_pressure: u64,
     pub total_evictions_keepalive: u64,
+    /// Speculative sandboxes created via [`Worker::prewarm`].
+    pub total_prewarm_spawned: u64,
+    /// Warm starts served by a pre-warmed sandbox's first use.
+    pub total_prewarm_hits: u64,
 }
 
 impl Worker {
@@ -85,6 +89,8 @@ impl Worker {
             total_warm: 0,
             total_evictions_pressure: 0,
             total_evictions_keepalive: 0,
+            total_prewarm_spawned: 0,
+            total_prewarm_hits: 0,
         }
     }
 
@@ -104,7 +110,9 @@ impl Worker {
     }
 
     pub fn mem_free_mb(&self) -> u64 {
-        self.mem_capacity_mb - self.mem_used_mb
+        // Elastic mode tolerates the busy set transiently exceeding the
+        // pool, so this must saturate (0 free), not underflow.
+        self.mem_capacity_mb.saturating_sub(self.mem_used_mb)
     }
 
     pub fn has_idle(&self, f: FunctionId) -> bool {
@@ -176,6 +184,9 @@ impl Worker {
             let sb = &mut self.sandboxes[idx];
             let ok = sb.start_execution();
             debug_assert!(ok);
+            if std::mem::replace(&mut sb.prewarmed, false) {
+                self.total_prewarm_hits += 1;
+            }
             self.total_warm += 1;
             return StartInfo {
                 sandbox: sb.id,
@@ -288,6 +299,9 @@ impl Worker {
             let sb = &mut self.sandboxes[idx];
             let ok = sb.start_execution();
             debug_assert!(ok);
+            if std::mem::replace(&mut sb.prewarmed, false) {
+                self.total_prewarm_hits += 1;
+            }
             self.total_warm += 1;
             return StartInfo {
                 sandbox: sb.id,
@@ -366,7 +380,10 @@ impl Worker {
         let id = self.next_sandbox_id;
         self.next_sandbox_id += 1;
         self.mem_used_mb += mem_mb;
-        self.sandboxes.push(Sandbox::new(id, f, mem_mb, now));
+        let mut sb = Sandbox::new(id, f, mem_mb, now);
+        sb.prewarmed = true;
+        self.sandboxes.push(sb);
+        self.total_prewarm_spawned += 1;
         Some(id)
     }
 
@@ -386,6 +403,18 @@ impl Worker {
             .iter()
             .filter(|s| s.function == f && s.state == SandboxState::Initializing)
             .count()
+    }
+
+    /// Warm supply per function in one pass: counts idle *and* initializing
+    /// sandboxes into `out[f]` (the autoscale observation; avoids the
+    /// O(functions x sandboxes) cost of per-function queries).
+    pub fn warm_counts_into(&self, out: &mut [usize]) {
+        use super::sandbox::SandboxState;
+        for s in &self.sandboxes {
+            if s.state != SandboxState::Busy && s.function < out.len() {
+                out[s.function] += 1;
+            }
+        }
     }
 
     /// Keep-alive sweep: evict every sandbox that has been idle since
@@ -632,10 +661,29 @@ mod tests {
         let (f, _epoch) = w.finish_prewarm(sb, 1.0).unwrap();
         assert_eq!(f, 9);
         assert!(w.has_idle(9));
-        // The pre-warmed instance serves a warm start.
+        // The pre-warmed instance serves a warm start and counts as a hit.
         let info = w.assign_elastic(1, 9, 256, 2.0);
         assert!(!info.cold);
         assert_eq!(info.sandbox, sb);
+        assert_eq!(w.total_prewarm_spawned, 2);
+        assert_eq!(w.total_prewarm_hits, 1);
+        // Reusing the same sandbox again is NOT a second speculation hit.
+        w.complete_elastic(info.sandbox, 3.0);
+        let again = w.assign_elastic(2, 9, 256, 4.0);
+        assert!(!again.cold);
+        assert_eq!(w.total_prewarm_hits, 1, "hit counted at most once per speculation");
+    }
+
+    #[test]
+    fn warm_counts_single_pass() {
+        let mut w = Worker::new(0, 1024, 4);
+        let a = w.assign_elastic(1, 1, 128, 0.0);
+        let _b = w.assign_elastic(2, 2, 128, 0.0); // stays busy
+        w.complete_elastic(a.sandbox, 1.0); // idle f=1
+        w.prewarm(1, 128, 1.5); // initializing f=1
+        let mut counts = vec![0usize; 3];
+        w.warm_counts_into(&mut counts);
+        assert_eq!(counts, vec![0, 2, 0], "idle + initializing counted, busy excluded");
     }
 
     #[test]

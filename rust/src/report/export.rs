@@ -70,6 +70,21 @@ pub fn cumulative_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
     to_csv(&["scheduler", "second", "cumulative_requests"], &rows)
 }
 
+/// Autoscale timeline — columns (scheduler, time_s, active_workers). One
+/// series per scheduler (first run); static runs contribute the initial
+/// and terminal points only.
+pub fn scaling_timeline_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs {
+        if let Some(m) = ms.first() {
+            for &(t, active) in &m.scaling_timeline {
+                rows.push(vec![sched.clone(), format!("{t:.3}"), active.to_string()]);
+            }
+        }
+    }
+    to_csv(&["scheduler", "time_s", "active_workers"], &rows)
+}
+
 /// Summary table (Figs 11/12/13/15/17 scalars) — one row per run.
 pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
     let mut rows = Vec::new();
@@ -153,5 +168,16 @@ mod tests {
         let runs = tiny_runs();
         assert!(cv_series_csv(&runs).lines().count() > 5);
         assert!(cumulative_csv(&runs).lines().count() > 5);
+    }
+
+    #[test]
+    fn scaling_timeline_csv_has_initial_points() {
+        let runs = tiny_runs();
+        let csv = scaling_timeline_csv(&runs);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "scheduler,time_s,active_workers");
+        // Static runs: initial + terminal point per scheduler.
+        assert!(lines.len() >= 1 + 2 * runs.len(), "{csv}");
+        assert!(lines[1].starts_with("hiku,0.000,"));
     }
 }

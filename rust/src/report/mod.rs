@@ -6,8 +6,10 @@ pub mod export;
 
 use crate::config::Config;
 use crate::metrics::{Aggregate, RunMetrics};
-use crate::sim::run_once;
-use crate::workload::azure::SyntheticTrace;
+use crate::sim::{run_once, run_trace};
+use crate::util::rng::Pcg64;
+use crate::workload::azure::{BurstyArrivals, SyntheticTrace};
+use crate::workload::loadgen::OpenLoopTrace;
 
 /// Run `runs` seeded repetitions for one (scheduler, vus) cell.
 pub fn run_cell(
@@ -127,6 +129,84 @@ pub fn trace_report(universe: usize, duration_s: f64, seed: u64) -> String {
     out
 }
 
+/// The bursty open-loop trace used by the autoscale bench/report: an
+/// Azure-like function mix re-timed with a burstier regime-switching
+/// arrival process so the bursts actually hit capacity.
+pub fn bursty_trace(num_functions: usize, duration_s: f64, seed: u64) -> OpenLoopTrace {
+    let gen = SyntheticTrace::generate(num_functions, duration_s, seed);
+    if gen.invocations.is_empty() {
+        return OpenLoopTrace::from_synthetic(&[], num_functions.max(1));
+    }
+    let mut rng = Pcg64::new(seed ^ 0xB125);
+    let times = BurstyArrivals { base_rate: 40.0, burst_prob: 0.35, burst_lo: 2.0, burst_hi: 6.0 }
+        .generate(duration_s, &mut rng);
+    let invocations: Vec<(f64, usize)> = times
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| (t, gen.invocations[i % gen.invocations.len()].1))
+        .collect();
+    OpenLoopTrace::from_synthetic(&invocations, num_functions)
+}
+
+/// Autoscale policy comparison: policies x schedulers on the bursty trace,
+/// reporting the cost/quality trade-off — cold-start rate and latency
+/// against worker-seconds (the cost proxy) and pre-warm speculation
+/// accuracy. The interesting comparison is `predictive` vs `reactive`:
+/// the forecast-driven pools should cut cold starts at comparable
+/// worker-seconds.
+pub fn autoscale_report(
+    base: &Config,
+    policies: &[String],
+    schedulers: &[String],
+    seed: u64,
+) -> Result<String, String> {
+    let trace = bursty_trace(base.num_functions(), base.workload.duration_s, seed);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# Autoscale sweep: bursty trace ({} arrivals / {:.0} s), {} start workers, bounds [{}, {}]\n\n",
+        trace.len(),
+        base.workload.duration_s,
+        base.cluster.workers,
+        base.autoscale.min_workers,
+        base.autoscale.max_workers,
+    ));
+    out.push_str(&format!(
+        "{:<12} {:<20} {:>9} {:>10} {:>9} {:>7} {:>10} {:>7} {:>8}\n",
+        "policy", "scheduler", "completed", "mean(ms)", "p95(ms)", "cold%", "worker-s", "scale#", "prewarm%"
+    ));
+    for policy in policies {
+        for sched in schedulers {
+            let mut cfg = base.clone();
+            cfg.scheduler.name = sched.clone();
+            cfg.autoscale.policy = policy.clone();
+            if policy == "scheduled" && cfg.autoscale.events.is_empty() {
+                // Default demo schedule: one worker joins at 1/4 and at
+                // 1/2 of the run.
+                cfg.autoscale.events = format!(
+                    "{:.0};{:.0}",
+                    base.workload.duration_s / 4.0,
+                    base.workload.duration_s / 2.0
+                );
+            }
+            let mut m = run_trace(&cfg, &trace, seed)?;
+            out.push_str(&format!(
+                "{:<12} {:<20} {:>9} {:>10.1} {:>9.1} {:>6.1}% {:>10.0} {:>7} {:>7.1}%\n",
+                policy,
+                sched,
+                m.completed,
+                m.mean_latency_ms(),
+                m.latency_percentile_ms(95.0),
+                m.cold_rate() * 100.0,
+                m.worker_seconds,
+                m.scale_event_count(),
+                m.prewarm_hit_rate() * 100.0,
+            ));
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
 /// Fig 10 — latency CDFs, one series per scheduler (points as text).
 pub fn latency_cdf_report(base: &Config, schedulers: &[String], runs: u64, points: usize) -> Result<String, String> {
     let mut out = String::new();
@@ -184,5 +264,32 @@ mod tests {
     #[test]
     fn bad_scheduler_is_error() {
         assert!(evaluation_report(&tiny(), &["bogus".into()], &[5], 1).is_err());
+    }
+
+    #[test]
+    fn autoscale_report_renders_all_cells() {
+        let mut cfg = tiny();
+        cfg.cluster.workers = 2;
+        cfg.autoscale.min_workers = 2;
+        cfg.autoscale.max_workers = 6;
+        let out = autoscale_report(
+            &cfg,
+            &["none".into(), "reactive".into()],
+            &["hiku".into(), "random".into()],
+            7,
+        )
+        .unwrap();
+        assert!(out.contains("reactive"));
+        assert!(out.contains("worker-s"));
+        assert_eq!(out.matches("hiku").count(), 2, "one row per policy");
+    }
+
+    #[test]
+    fn bursty_trace_is_deterministic_and_bounded() {
+        let a = bursty_trace(40, 30.0, 5);
+        let b = bursty_trace(40, 30.0, 5);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert!(!a.is_empty());
+        assert!(a.arrivals.iter().all(|&(t, f)| t >= 0.0 && f < 40));
     }
 }

@@ -16,6 +16,7 @@
 //! vendored in this image; the request path is compute-bound so a
 //! thread-per-worker model is the right shape anyway).
 
+use crate::autoscale::{make_policy, AutoscaleObs, AutoscalePolicy as _};
 use crate::config::Config;
 use crate::metrics::RunMetrics;
 use crate::runtime::{Engine, Manifest};
@@ -100,7 +101,18 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
         }
     }
 
-    let workers = cfg.cluster.workers;
+    // Autoscaling (reactive/predictive): spawn the full `max_workers`
+    // thread pool up front but only route to the `active` prefix; the
+    // policy moves the boundary. The `scheduled` policy is sim-only (its
+    // exact-time replay has no meaning against wall clock) and behaves
+    // like `none` here.
+    let autoscaling = matches!(cfg.autoscale.policy.as_str(), "reactive" | "predictive");
+    let workers = if autoscaling {
+        cfg.autoscale.max_workers.max(cfg.cluster.workers)
+    } else {
+        cfg.cluster.workers
+    };
+    let mut active = cfg.cluster.workers.min(workers);
     // Cache capacity from the memory pool: one executable per ~256 MB of
     // configured sandbox memory (same pressure model as the simulator).
     let capacity = ((cfg.cluster.mem_mb / 256).max(1) as usize).min(registry.len());
@@ -122,22 +134,32 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
 
     crate::log_info!(
         "server",
-        "starting {} PJRT workers (cache capacity {}), scheduler {}",
+        "starting {} PJRT workers ({} active, cache capacity {}), scheduler {}, autoscale {}",
         workers,
+        active,
         capacity,
-        cfg.scheduler.name
+        cfg.scheduler.name,
+        cfg.autoscale.policy
     );
-    let mut scheduler = make_scheduler(&cfg.scheduler, workers)?;
+    let mut scheduler = make_scheduler(&cfg.scheduler, active)?;
+    let mut policy = make_policy(&cfg.autoscale)?;
+    let mean_exec_s: Vec<f64> =
+        (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect();
+    let mut last_tick = Instant::now();
     let mut sched_rng = Pcg64::new(cfg.workload.seed ^ 0x5EED);
     let workload = Workload::generate(&cfg.workload, registry.len(), cfg.workload.seed);
     let vus = cfg.workload.vus.min(n_requests.max(1));
 
+    // Imbalance columns track workers that have ever been active (the
+    // simulator's add_worker convention) — not the idle thread pool.
     let mut metrics = RunMetrics::new(
         &cfg.scheduler.name,
-        workers,
+        active,
         vus,
         1.0, // duration finalized after the run (wall-clock)
     );
+    let mut imbalance_cols = active;
+    metrics.record_scale(0.0, active);
     let start = Instant::now();
     let mut loads = vec![0u32; workers];
     let mut issued = 0usize;
@@ -151,6 +173,42 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     let mut wake: Vec<(Instant, usize)> = (0..vus).map(|v| (start, v)).collect();
 
     while completed < n_requests {
+        // Autoscale control tick (wall clock). The policy only ever moves
+        // the active boundary; threads beyond it sit idle on their channel.
+        if autoscaling && last_tick.elapsed().as_secs_f64() >= cfg.autoscale.interval_s {
+            last_tick = Instant::now();
+            let total_running: usize = loads[..active].iter().map(|&l| l as usize).sum();
+            let obs = AutoscaleObs {
+                now: start.elapsed().as_secs_f64(),
+                active_workers: active,
+                concurrency: cfg.cluster.concurrency,
+                total_running,
+                total_queued: 0,
+                // The PJRT workers warm on first execution and expose no
+                // speculative-init hook, so the warm supply is opaque here
+                // and pre-warm plans are applied by the simulator only.
+                warm_supply: &[],
+                mean_exec_s: &mean_exec_s,
+            };
+            let d = policy.tick(&obs);
+            if let Some(target) = d.target_workers {
+                let target = target.clamp(1, workers);
+                while active < target {
+                    scheduler.on_worker_added(active);
+                    active += 1;
+                    if active > imbalance_cols {
+                        metrics.imbalance.add_worker();
+                        imbalance_cols = active;
+                    }
+                    metrics.record_scale(start.elapsed().as_secs_f64(), active);
+                }
+                while active > target {
+                    active -= 1;
+                    scheduler.on_worker_removed(active);
+                    metrics.record_scale(start.elapsed().as_secs_f64(), active);
+                }
+            }
+        }
         // Wake any due VUs (issue their next request).
         let now = Instant::now();
         let mut i = 0;
@@ -165,8 +223,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 // ---- issue the VU's next request ----
                 let f = workload.vus[vu].steps[step].function;
                 let rid = arrival.len() as u64;
+                policy.on_arrival(f, start.elapsed().as_secs_f64());
                 let w = {
-                    let mut ctx = SchedCtx { loads: &loads, rng: &mut sched_rng };
+                    let mut ctx = SchedCtx { loads: &loads[..active], rng: &mut sched_rng };
                     scheduler.select(f, &mut ctx)
                 };
                 loads[w] += 1;
@@ -206,8 +265,10 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         }
                     }
                 }
-                {
-                    let mut ctx = SchedCtx { loads: &loads, rng: &mut sched_rng };
+                // Drained workers (beyond the active boundary) must not
+                // re-advertise idle capacity.
+                if r.worker < active {
+                    let mut ctx = SchedCtx { loads: &loads[..active], rng: &mut sched_rng };
                     scheduler.on_complete(r.worker, r.function, &mut ctx);
                 }
                 let rid = r.rid as usize;
@@ -230,6 +291,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     }
 
     metrics.duration_s = start.elapsed().as_secs_f64();
+    metrics.finalize_scaling(metrics.duration_s);
     // Drop senders so workers exit; join them.
     drop(work_tx);
     drop(resp_tx);

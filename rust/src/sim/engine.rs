@@ -9,8 +9,12 @@
 //!
 //! Beyond the paper's base protocol the engine supports three extensions
 //! used by the ablation benches:
-//! - **auto-scaling** (`scale_times`): workers join mid-run; schedulers are
-//!   notified via `on_worker_added` (§II-C's redistribution story);
+//! - **auto-scaling** (the [`crate::autoscale`] subsystem): a recurring
+//!   control tick evaluates the configured policy, which adds/drains
+//!   workers and plans per-function pre-warm pools; schedulers are
+//!   notified via `on_worker_added`/`on_worker_removed` (§II-C's
+//!   redistribution story). Externally scripted scale times are the
+//!   `scheduled` policy's event list;
 //! - **multiple scheduler instances** (`scheduler.instances`): VUs are
 //!   sharded across independent, synchronization-free schedulers, each
 //!   with its own local load view (§I's distributed-scheduling claim);
@@ -19,6 +23,7 @@
 //!   response, Fig 6 tie-in).
 
 use super::events::{Event, EventQueue};
+use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
 use crate::config::Config;
 use crate::metrics::RunMetrics;
 use crate::platform::{AssignOutcome, Cluster, StartInfo, Worker, WorkerId};
@@ -56,6 +61,13 @@ pub struct Simulation<'a> {
     service_rng: Pcg64,
     /// (time, up) auto-scaling events; up=false drains the highest worker.
     scale_events: Vec<(f64, bool)>,
+    /// Closed-loop autoscale policy (None = static cluster). Scheduled
+    /// events and the recurring control tick both come from here.
+    autoscaler: Option<Box<dyn AutoscalePolicy>>,
+    /// Control-tick period (config `autoscale.interval_s`).
+    tick_dt: f64,
+    /// Per-function mean warm execution time (autoscale observation).
+    mean_exec_s: Vec<f64>,
     /// Workers currently eligible for selection (scale-down shrinks this;
     /// drained workers still exist in the cluster to finish in-flight work).
     active_workers: usize,
@@ -105,6 +117,9 @@ impl<'a> Simulation<'a> {
             sched_rng,
             service_rng,
             scale_events: Vec::new(),
+            autoscaler: None,
+            tick_dt: cfg.autoscale.interval_s,
+            mean_exec_s: (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect(),
             active_workers: cfg.cluster.workers,
             // Pre-size per-request tables to the scripted upper bound:
             // avoids realloc + page-fault churn in the hot loop (§Perf).
@@ -135,8 +150,45 @@ impl<'a> Simulation<'a> {
         self
     }
 
+    /// Install an autoscale policy (closed-loop scaling + pre-warming).
+    pub fn with_autoscaler(mut self, policy: Box<dyn AutoscalePolicy>) -> Self {
+        self.autoscaler = Some(policy);
+        self
+    }
+
+    /// Install the autoscale policy the config's `[autoscale]` section
+    /// asks for (the `none` policy is inert, so this is always safe).
+    pub fn with_config_autoscaler(mut self) -> Result<Self, String> {
+        self.autoscaler = Some(crate::autoscale::make_policy(&self.cfg.autoscale)?);
+        Ok(self)
+    }
+
+    /// Pre-schedule the autoscaler's exact-time events and, for
+    /// tick-driven policies, the first control tick.
+    fn install_autoscaler_events(&mut self) {
+        let Some(p) = &self.autoscaler else { return };
+        for (t, up) in p.scheduled_events() {
+            self.queue.push_at(t, Event::Scale { up });
+        }
+        if p.tick_driven() && self.tick_dt < self.cfg.workload.duration_s {
+            self.queue.push_at(self.tick_dt, Event::AutoscaleTick);
+        }
+    }
+
+    /// Copy prewarm speculation counters into the metrics and close the
+    /// worker-seconds integral once the event loop has drained.
+    fn finalize_metrics(&mut self) {
+        let end = self.queue.now().max(self.cfg.workload.duration_s);
+        self.metrics.finalize_scaling(end);
+        let totals = self.cluster.totals();
+        self.metrics.prewarm_spawned = totals.prewarm_spawned;
+        self.metrics.prewarm_hits = totals.prewarm_hits;
+    }
+
     /// Run the closed-loop VU workload to completion.
     pub fn run(mut self) -> RunMetrics {
+        self.metrics.record_scale(0.0, self.active_workers);
+        self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
             self.queue.push_at(t, Event::Scale { up });
         }
@@ -148,6 +200,7 @@ impl<'a> Simulation<'a> {
         }
         self.queue.push_at(self.sweep_dt(), Event::SweepTick);
         self.event_loop();
+        self.finalize_metrics();
         self.metrics
     }
 
@@ -159,6 +212,8 @@ impl<'a> Simulation<'a> {
     /// Run an open-loop trace: arrivals at fixed timestamps, ignoring
     /// completions (burst-response experiments).
     pub fn run_open_loop(mut self, trace: &OpenLoopTrace) -> RunMetrics {
+        self.metrics.record_scale(0.0, self.active_workers);
+        self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
             self.queue.push_at(t, Event::Scale { up });
         }
@@ -180,6 +235,7 @@ impl<'a> Simulation<'a> {
                 other => self.dispatch(other, t),
             }
         }
+        self.finalize_metrics();
         self.metrics
     }
 
@@ -206,6 +262,7 @@ impl<'a> Simulation<'a> {
                 }
             }
             Event::Scale { up } => self.on_scale(up),
+            Event::AutoscaleTick => self.on_autoscale_tick(t),
             Event::PreWarmTick => self.on_prewarm_tick(t),
             Event::PreWarmDone { worker, sandbox } => self.on_prewarm_done(worker, sandbox, t),
             Event::TraceArrival { .. } => unreachable!("only in run_open_loop"),
@@ -245,6 +302,7 @@ impl<'a> Simulation<'a> {
                 for s in &mut self.schedulers {
                     s.on_worker_added(id);
                 }
+                self.metrics.record_scale(self.queue.now(), self.active_workers);
                 return;
             }
             let id = self.cluster.len();
@@ -272,6 +330,81 @@ impl<'a> Simulation<'a> {
             let evicted = self.cluster.worker_mut(id).drain_idle();
             for f in evicted {
                 self.notify_evict(id, f);
+            }
+        }
+        self.metrics.record_scale(self.queue.now(), self.active_workers);
+    }
+
+    /// Autoscale control tick: snapshot the active cluster, ask the policy,
+    /// apply its worker target and pre-warm plan. Everything here is
+    /// deterministic under (config, seed): the observation derives from
+    /// simulator state and the only randomness (pre-warm init sampling)
+    /// comes from the dedicated service-time stream.
+    fn on_autoscale_tick(&mut self, t: f64) {
+        let decision = {
+            let Some(policy) = self.autoscaler.as_mut() else { return };
+            let mut warm_supply = vec![0usize; self.registry.len()];
+            let mut total_running = 0usize;
+            let mut total_queued = 0usize;
+            for w in 0..self.active_workers {
+                let wk = self.cluster.worker(w);
+                wk.warm_counts_into(&mut warm_supply);
+                total_running += wk.running();
+                total_queued += wk.queue_len();
+            }
+            let obs = AutoscaleObs {
+                now: t,
+                active_workers: self.active_workers,
+                concurrency: self.cfg.cluster.concurrency,
+                total_running,
+                total_queued,
+                warm_supply: &warm_supply,
+                mean_exec_s: &self.mean_exec_s,
+            };
+            policy.tick(&obs)
+        };
+
+        if let Some(target) = decision.target_workers {
+            crate::log_debug!(
+                "autoscale",
+                "t={t:.1}s target {} (active {})",
+                target,
+                self.active_workers
+            );
+            while self.active_workers < target {
+                self.on_scale(true);
+            }
+            while self.active_workers > target {
+                let before = self.active_workers;
+                self.on_scale(false);
+                if self.active_workers == before {
+                    break; // the last worker never drains
+                }
+            }
+        }
+        for (f, n) in decision.prewarm {
+            self.spawn_prewarm(f, n, t);
+        }
+
+        let next = t + self.tick_dt;
+        if next < self.cfg.workload.duration_s {
+            self.queue.push_at(next, Event::AutoscaleTick);
+        }
+    }
+
+    /// Speculatively initialize up to `n` sandboxes for `f` on the
+    /// least-loaded active workers with free memory (never evicts).
+    fn spawn_prewarm(&mut self, f: usize, n: usize, t: f64) {
+        let mem = self.registry.mem_mb(f);
+        for _ in 0..n {
+            // Least-loaded active worker that can fit without eviction.
+            let target = (0..self.active_workers)
+                .filter(|&w| self.cluster.worker(w).mem_free_mb() >= mem)
+                .min_by_key(|&w| self.cluster.worker(w).load());
+            let Some(w) = target else { return };
+            if let Some(sb) = self.cluster.worker_mut(w).prewarm(f, mem, t) {
+                let init = self.registry.sample_init_s(f, &mut self.service_rng);
+                self.queue.push_at(t + init, Event::PreWarmDone { worker: w, sandbox: sb });
             }
         }
     }
@@ -329,18 +462,7 @@ impl<'a> Simulation<'a> {
                 })
                 .sum();
             let deficit = demand.saturating_sub(supply).min(2); // <= 2/tick/function
-            for _ in 0..deficit {
-                // Least-loaded active worker that can fit without eviction.
-                let mem = self.registry.mem_mb(f);
-                let target = (0..self.active_workers)
-                    .filter(|&w| self.cluster.worker(w).mem_free_mb() >= mem)
-                    .min_by_key(|&w| self.cluster.worker(w).load());
-                let Some(w) = target else { break };
-                if let Some(sb) = self.cluster.worker_mut(w).prewarm(f, mem, t) {
-                    let init = self.registry.sample_init_s(f, &mut self.service_rng);
-                    self.queue.push_at(t + init, Event::PreWarmDone { worker: w, sandbox: sb });
-                }
-            }
+            self.spawn_prewarm(f, deficit, t);
         }
         if t + 1.0 < self.cfg.workload.duration_s {
             self.queue.push_at(t + 1.0, Event::PreWarmTick);
@@ -369,6 +491,9 @@ impl<'a> Simulation<'a> {
         let rid = self.requests.len() as u64;
         if self.cfg.cluster.prewarm {
             self.track_arrival(f, t);
+        }
+        if let Some(p) = self.autoscaler.as_mut() {
+            p.on_arrival(f, t);
         }
         let si = if vu == usize::MAX { step % self.schedulers.len() } else { vu % self.schedulers.len() };
 
@@ -499,29 +624,14 @@ fn build_schedulers(cfg: &Config) -> Result<Vec<Box<dyn Scheduler>>, String> {
         .collect()
 }
 
-/// Convenience: run one (config, seed) experiment for a named scheduler.
-pub fn run_once(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
-    run_scaled(cfg, seed, &[])
-}
-
-/// Like [`run_once`] with mixed auto-scaling events: (time, up) — up=false
-/// drains the highest-id worker (LIFO).
-pub fn run_scale_events(
+/// Shared entry-point setup: registry (validated against the config),
+/// scripted workload, scheduler instances. `vus` overrides the configured
+/// VU count (open-loop mode only needs a placeholder script set).
+fn build_parts(
     cfg: &Config,
     seed: u64,
-    events: &[(f64, bool)],
-) -> Result<RunMetrics, String> {
-    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
-    let workload = Workload::generate(&cfg.workload, registry.len(), seed);
-    let schedulers = build_schedulers(cfg)?;
-    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
-        .with_scale_events(events);
-    Ok(sim.run())
-}
-
-/// Like [`run_once`] with auto-scaling events: one worker joins at each of
-/// `scale_times`.
-pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMetrics, String> {
+    vus: Option<usize>,
+) -> Result<(FunctionRegistry, Workload, Vec<Box<dyn Scheduler>>), String> {
     let registry = FunctionRegistry::functionbench(cfg.workload.copies);
     if registry.len() != cfg.num_functions() {
         return Err(format!(
@@ -530,22 +640,56 @@ pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMet
             cfg.num_functions()
         ));
     }
-    let workload = Workload::generate(&cfg.workload, registry.len(), seed);
+    let mut wcfg = cfg.workload.clone();
+    if let Some(v) = vus {
+        wcfg.vus = v;
+    }
+    let workload = Workload::generate(&wcfg, registry.len(), seed);
     let schedulers = build_schedulers(cfg)?;
+    Ok((registry, workload, schedulers))
+}
+
+/// Run one (config, seed) closed-loop experiment. This is the single
+/// policy-driven entry point: auto-scaling comes from `cfg.autoscale`
+/// (`none`, `scheduled`, `reactive`, or `predictive`).
+pub fn run_once(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
+    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
     let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
-        .with_scale_times(scale_times);
+        .with_config_autoscaler()?;
     Ok(sim.run())
 }
 
-/// Replay an open-loop (time, function) trace through the cluster.
+/// Deprecated shim over the `scheduled` autoscale policy: mixed scale
+/// events (time, up); up=false drains the highest-id worker (LIFO).
+/// Prefer `cfg.autoscale.policy = "scheduled"` + `cfg.autoscale.events`.
+pub fn run_scale_events(
+    cfg: &Config,
+    seed: u64,
+    events: &[(f64, bool)],
+) -> Result<RunMetrics, String> {
+    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_autoscaler(Box::new(Scheduled::new(events.to_vec())));
+    Ok(sim.run())
+}
+
+/// Deprecated shim over the `scheduled` autoscale policy: one worker joins
+/// at each of `scale_times`. Prefer `cfg.autoscale`.
+pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMetrics, String> {
+    let events: Vec<(f64, bool)> = scale_times.iter().map(|&t| (t, true)).collect();
+    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_autoscaler(Box::new(Scheduled::new(events)));
+    Ok(sim.run())
+}
+
+/// Replay an open-loop (time, function) trace through the cluster, with
+/// auto-scaling from `cfg.autoscale` (the bursty-trace autoscale bench).
 pub fn run_trace(cfg: &Config, trace: &OpenLoopTrace, seed: u64) -> Result<RunMetrics, String> {
-    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
     // The VU workload is unused in open-loop mode, but the constructor
     // wants one; generate a minimal script set.
-    let mut wcfg = cfg.workload.clone();
-    wcfg.vus = 1;
-    let workload = Workload::generate(&wcfg, registry.len(), seed);
-    let schedulers = build_schedulers(cfg)?;
-    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed);
+    let (registry, workload, schedulers) = build_parts(cfg, seed, Some(1))?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_config_autoscaler()?;
     Ok(sim.run_open_loop(trace))
 }

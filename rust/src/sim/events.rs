@@ -24,6 +24,9 @@ pub enum Event {
     TraceArrival { index: usize },
     /// Auto-scaling: one worker joins (up) or drains out of the cluster.
     Scale { up: bool },
+    /// Recurring autoscale control tick: the engine snapshots the cluster
+    /// and asks the configured [`crate::autoscale::AutoscalePolicy`].
+    AutoscaleTick,
     /// Pre-warming policy tick (1 Hz when cluster.prewarm is on).
     PreWarmTick,
     /// A speculative sandbox finished initializing.

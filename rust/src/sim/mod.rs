@@ -1,6 +1,12 @@
 //! Deterministic discrete-event simulation of the FaaS cluster — the
 //! engine behind every Fig 10-17 reproduction (see DESIGN.md §2 for why a
-//! simulator substitutes for the paper's 6-VM AWS testbed).
+//! simulator substitutes for the paper's 6-VM AWS testbed, and §4 for the
+//! autoscale control loop layered on top).
+//!
+//! [`run_once`]/[`run_trace`] are the policy-driven entry points: all
+//! auto-scaling comes from `cfg.autoscale`. [`run_scaled`] and
+//! [`run_scale_events`] are thin deprecated shims over the `scheduled`
+//! policy, kept so the original benches compile unchanged.
 
 pub mod engine;
 pub mod events;

@@ -1,0 +1,249 @@
+//! Integration tests for the autoscale subsystem: scale-event invariants
+//! across every scheduler, determinism under closed-loop autoscaling, and
+//! the policy-driven consolidation of the old scripted entry points.
+
+use hiku::config::{Config, SchedulerConfig};
+use hiku::prop_assert;
+use hiku::scheduler::{make_scheduler, Hiku, SchedCtx, Scheduler, ALL_SCHEDULERS};
+use hiku::sim::{run_once, run_scaled};
+use hiku::util::prop::{check, PropConfig};
+use hiku::util::rng::Pcg64;
+
+fn cfg(sched: &str, vus: usize, dur: f64) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = sched.into();
+    c.workload.vus = vus;
+    c.workload.duration_s = dur;
+    c
+}
+
+/// Property (satellite invariant): after `on_worker_removed`, no scheduler
+/// ever selects the drained worker, across random warm-up histories of
+/// selects/completions/evictions.
+#[test]
+fn prop_no_scheduler_selects_drained_worker() {
+    for name in ALL_SCHEDULERS {
+        check(
+            &format!("drained-worker-{name}"),
+            PropConfig { cases: 60, ..Default::default() },
+            |rng, size| {
+                let workers = 3 + rng.index(5);
+                let scfg = SchedulerConfig { name: name.into(), ..Default::default() };
+                let mut s = make_scheduler(&scfg, workers)?;
+                let loads = vec![1u32; workers];
+                // Random warm-up: routed requests, idle advertisements,
+                // evictions — so internal state (rings, idle queues)
+                // references every worker.
+                for _ in 0..size * 3 {
+                    let f = rng.index(6);
+                    let w = {
+                        let mut c = SchedCtx { loads: &loads, rng };
+                        s.select(f, &mut c)
+                    };
+                    prop_assert!(w < workers, "{name}: out-of-range {w}");
+                    match rng.index(3) {
+                        0 => {
+                            let mut c = SchedCtx { loads: &loads, rng };
+                            s.on_complete(w, f, &mut c);
+                        }
+                        1 => s.on_evict(w, f),
+                        _ => {}
+                    }
+                }
+                // Drain the top 1-2 workers (LIFO, as the platform does).
+                let drains = 1 + rng.index(usize::min(2, workers - 1));
+                let active = workers - drains;
+                for d in 0..drains {
+                    s.on_worker_removed(workers - 1 - d);
+                }
+                let act_loads = vec![0u32; active];
+                for f in 0..24 {
+                    let w = {
+                        let mut c = SchedCtx { loads: &act_loads, rng };
+                        s.select(f, &mut c)
+                    };
+                    prop_assert!(
+                        w < active,
+                        "{name}: selected drained worker {w} (active {active})"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Satellite invariant: draining a worker purges every advertisement it
+/// left in Hiku's idle queues (no stale pull targets).
+#[test]
+fn hiku_drain_purges_idle_queues() {
+    let mut h = Hiku::new(4);
+    let mut rng = Pcg64::new(9);
+    let loads = [0u32; 4];
+    for f in 0..6 {
+        let mut c = SchedCtx { loads: &loads, rng: &mut rng };
+        h.on_complete(3, f, &mut c);
+        let mut c = SchedCtx { loads: &loads, rng: &mut rng };
+        h.on_complete(1, f, &mut c);
+    }
+    assert_eq!(h.idle_entries(), 12);
+    h.on_worker_removed(3);
+    assert_eq!(h.idle_entries(), 6, "drained worker's advertisements must be purged");
+    // Every remaining pull resolves to the surviving advertiser.
+    let act_loads = [0u32; 3];
+    for f in 0..6 {
+        let mut c = SchedCtx { loads: &act_loads, rng: &mut rng };
+        assert_eq!(h.select(f, &mut c), 1);
+    }
+    assert_eq!(h.idle_entries(), 0);
+}
+
+/// Property: after `on_worker_added` every scheduler still selects in
+/// range and can reach the new worker through normal operation.
+#[test]
+fn prop_worker_added_stays_in_range() {
+    for name in ALL_SCHEDULERS {
+        check(
+            &format!("worker-added-{name}"),
+            PropConfig { cases: 40, ..Default::default() },
+            |rng, size| {
+                let workers = 2 + rng.index(4);
+                let scfg = SchedulerConfig { name: name.into(), ..Default::default() };
+                let mut s = make_scheduler(&scfg, workers)?;
+                s.on_worker_added(workers);
+                let grown = workers + 1;
+                let loads = vec![0u32; grown];
+                for _ in 0..size * 2 {
+                    let f = rng.index(6);
+                    let w = {
+                        let mut c = SchedCtx { loads: &loads, rng };
+                        s.select(f, &mut c)
+                    };
+                    prop_assert!(w < grown, "{name}: out-of-range {w} after add");
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Determinism (acceptance criterion): with the closed-loop autoscaler
+/// enabled, repeated runs under one seed are bit-identical.
+#[test]
+fn autoscale_deterministic_under_seed() {
+    for policy in ["reactive", "predictive"] {
+        let mut c = cfg("hiku", 60, 40.0);
+        c.cluster.workers = 2;
+        c.autoscale.policy = policy.into();
+        c.autoscale.min_workers = 2;
+        c.autoscale.max_workers = 8;
+        c.autoscale.cooldown_s = 5.0;
+        let a = run_once(&c, 31).unwrap();
+        let b = run_once(&c, 31).unwrap();
+        assert_eq!(a.completed, b.completed, "{policy}");
+        assert_eq!(a.cold_starts, b.cold_starts, "{policy}");
+        assert_eq!(a.scaling_timeline, b.scaling_timeline, "{policy}");
+        let (mut a, mut b) = (a, b);
+        assert!(a.mean_latency_ms() == b.mean_latency_ms(), "{policy}: latency diverged");
+    }
+}
+
+/// The reactive policy must actually add capacity when a small cluster is
+/// saturated — and the accounting must see it.
+#[test]
+fn reactive_scales_up_under_load() {
+    let mut c = cfg("hiku", 100, 60.0);
+    c.cluster.workers = 2;
+    c.autoscale.policy = "reactive".into();
+    c.autoscale.min_workers = 2;
+    c.autoscale.max_workers = 8;
+    c.autoscale.cooldown_s = 5.0;
+    let m = run_once(&c, 32).unwrap();
+    assert_eq!(m.issued, m.completed);
+    let peak = m.scaling_timeline.iter().map(|&(_, a)| a).max().unwrap();
+    assert!(peak > 2, "100 VUs on 2 workers must trigger scale-up (peak {peak})");
+    assert!(m.scale_event_count() >= 1);
+    assert!(
+        m.worker_seconds > 2.0 * 60.0,
+        "worker-seconds {} must exceed the static-2-worker floor",
+        m.worker_seconds
+    );
+}
+
+/// Consolidation check: the legacy `run_scaled` wrapper and the
+/// `scheduled` policy configured through `[autoscale]` are the same code
+/// path and must agree bit-for-bit.
+#[test]
+fn scheduled_policy_matches_legacy_wrapper() {
+    let mut c = cfg("hiku", 60, 90.0);
+    c.cluster.workers = 3;
+    let a = run_scaled(&c, 22, &[30.0, 60.0]).unwrap();
+    let mut c2 = c.clone();
+    c2.autoscale.policy = "scheduled".into();
+    c2.autoscale.events = "30;60".into();
+    let b = run_once(&c2, 22).unwrap();
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.cold_starts, b.cold_starts);
+    assert_eq!(a.scaling_timeline, b.scaling_timeline);
+    let (mut a, mut b) = (a, b);
+    assert!(a.mean_latency_ms() == b.mean_latency_ms());
+}
+
+/// The predictive policy's pools actually speculate, and speculation pays:
+/// some pre-warmed sandboxes serve warm starts.
+#[test]
+fn predictive_prewarm_pools_speculate_and_hit() {
+    // Pin the worker count (min == max == workers) so the comparison
+    // isolates pre-warming from scaling.
+    let mk = |policy: &str| {
+        let mut c = cfg("hiku", 40, 60.0);
+        c.cluster.workers = 5;
+        c.autoscale.policy = policy.into();
+        c.autoscale.min_workers = 5;
+        c.autoscale.max_workers = 5;
+        c
+    };
+    let none = run_once(&mk("none"), 33).unwrap();
+    let pred = run_once(&mk("predictive"), 33).unwrap();
+    assert_eq!(none.prewarm_spawned, 0);
+    assert!(pred.prewarm_spawned > 0, "predictive must speculate");
+    assert!(pred.prewarm_hits > 0, "some speculation must pay off");
+    assert!(
+        pred.cold_rate() <= none.cold_rate(),
+        "pre-warming must not increase the cold rate: {} vs {}",
+        pred.cold_rate(),
+        none.cold_rate()
+    );
+}
+
+/// Open-loop burst scenario (acceptance criterion): predictive beats
+/// reactive on cold starts without a runaway worker-seconds bill.
+#[test]
+fn predictive_beats_reactive_on_cold_starts_for_bursts() {
+    use hiku::report::bursty_trace;
+    use hiku::sim::run_trace;
+    let mut base = cfg("hiku", 1, 120.0);
+    base.cluster.workers = 2;
+    base.autoscale.min_workers = 2;
+    base.autoscale.max_workers = 10;
+    let trace = bursty_trace(base.num_functions(), base.workload.duration_s, 77);
+    let run = |policy: &str| {
+        let mut c = base.clone();
+        c.autoscale.policy = policy.into();
+        run_trace(&c, &trace, 77).unwrap()
+    };
+    let reactive = run("reactive");
+    let predictive = run("predictive");
+    assert!(
+        predictive.cold_rate() < reactive.cold_rate(),
+        "predictive {} must beat reactive {} on cold rate",
+        predictive.cold_rate(),
+        reactive.cold_rate()
+    );
+    assert!(
+        predictive.worker_seconds < 2.0 * reactive.worker_seconds.max(1.0),
+        "predictive worker-seconds {} vs reactive {} (not comparable)",
+        predictive.worker_seconds,
+        reactive.worker_seconds
+    );
+}
