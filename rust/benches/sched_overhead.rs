@@ -24,7 +24,7 @@ fn main() {
 
         // Precondition Hiku/queue state: enqueue 2 idle workers per function.
         {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             for f in 0..FUNCTIONS {
                 sched.on_complete(f % WORKERS, f, &mut ctx);
                 sched.on_complete((f + 1) % WORKERS, f, &mut ctx);
@@ -33,7 +33,7 @@ fn main() {
 
         let mut f = 0usize;
         bench.report(&format!("select/{name}"), || {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             let w = sched.select(f, &mut ctx);
             std::hint::black_box(w);
             // Keep Hiku's queues topped up so we measure the pull path,
@@ -51,7 +51,7 @@ fn main() {
     let loads = vec![1u32; WORKERS];
     let mut f = 0usize;
     bench.report("hiku full lifecycle (select+complete+evict)", || {
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         let w = sched.select(f, &mut ctx);
         sched.on_complete(w, f, &mut ctx);
         sched.on_evict(w, f);

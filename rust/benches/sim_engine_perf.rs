@@ -1,49 +1,268 @@
-//! L3 engine performance: simulated-events/s and per-layer cost breakdown.
-//! This is the §Perf before/after bench for the optimization pass.
+//! L3 engine performance: the event-core scaling sweep.
+//!
+//! Runs closed- and open-loop simulations at 1k / 10k / 100k workers on
+//! the optimized engine (calendar queue + incremental load accounting)
+//! and, where affordable, on the seed reference engine (`BinaryHeap` +
+//! full-cluster scans, behind the `ref-heap` feature) — same binary, same
+//! (config, seed), bit-identical results (see tests/determinism.rs), so
+//! the events/s ratio is a pure engine-cost comparison.
+//!
+//! Emits machine-readable `BENCH_sim_engine.json` (events/s, wall time,
+//! peak queue length per scale point, plus per-scale speedups) so future
+//! PRs have a perf trajectory to regress against.
+//!
+//! Usage:
+//!   cargo bench --bench sim_engine_perf            # full sweep
+//!   cargo bench --bench sim_engine_perf -- --quick # CI smoke (~seconds)
+//!
+//! Notes on the sweep shape:
+//! - closed loop uses 24 VUs/worker at 1k/10k (the paper's
+//!   high-concurrency regime: the event set is hundreds of thousands of
+//!   pending events and every worker holds ~a dozen outstanding
+//!   requests) and 1 VU/worker at 100k (bounded warm-up cost);
+//! - the reference engine is only run at 1k/10k — at 100k the seed's
+//!   O(workers) per-decision scans would run for many minutes, which is
+//!   exactly the point of the overhaul;
+//! - least-connections keeps the seed's *exact* uniform-random
+//!   tie-breaking (one RNG draw per tied worker, bit-identical streams),
+//!   so its per-decision cost is inherently Θ(tie set) in *both* engines
+//!   and the tie set under load-equalizing schedulers is Θ(workers). It
+//!   is measured at the 1k point for the trajectory but excluded from the
+//!   headline speedup aggregate and from the larger scale points; hiku's
+//!   *fallback* uses the same rule but fires only when PQ_f is empty.
 
 use hiku::config::Config;
-use hiku::sim::run_once;
-use hiku::workload::loadgen::Workload;
+use hiku::metrics::RunMetrics;
+use hiku::scheduler::make_scheduler;
+use hiku::sim::Simulation;
+use hiku::util::json::{obj, Json};
+use hiku::util::rng::Pcg64;
+use hiku::workload::azure::BurstyArrivals;
+use hiku::workload::loadgen::{OpenLoopTrace, Workload};
+use hiku::workload::spec::FunctionRegistry;
 use std::time::Instant;
 
-fn main() {
+const SEED: u64 = 42;
+
+struct Row {
+    workers: usize,
+    mode: &'static str,
+    scheduler: &'static str,
+    core: &'static str,
+    completed: u64,
+    events: u64,
+    wall_s: f64,
+    events_per_s: f64,
+    peak_queue: usize,
+}
+
+impl Row {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("workers", self.workers.into()),
+            ("mode", self.mode.into()),
+            ("scheduler", self.scheduler.into()),
+            ("core", self.core.into()),
+            ("completed", self.completed.into()),
+            ("events", self.events.into()),
+            ("wall_s", self.wall_s.into()),
+            ("events_per_s", self.events_per_s.into()),
+            ("peak_queue_len", self.peak_queue.into()),
+        ])
+    }
+}
+
+fn scale_cfg(workers: usize, sched: &'static str, duration_s: f64, vus_mult: usize) -> Config {
     let mut cfg = Config::default();
-    cfg.workload.vus = 100;
-    cfg.workload.duration_s = 300.0;
+    cfg.cluster.workers = workers;
+    cfg.scheduler.name = sched.into();
+    cfg.workload.vus = vus_mult * workers;
+    cfg.workload.duration_s = duration_s;
+    // Exercise the control-tick paths the overhaul made incremental.
+    cfg.cluster.prewarm = true;
+    cfg
+}
 
-    // Layer: workload generation.
+fn build_sim<'a>(
+    cfg: &'a Config,
+    registry: &'a FunctionRegistry,
+    workload: &'a Workload,
+    reference: bool,
+) -> Simulation<'a> {
+    let sched = make_scheduler(&cfg.scheduler, cfg.cluster.workers).expect("scheduler");
+    let sim = Simulation::new(cfg, registry, workload, sched, SEED);
+    if reference {
+        sim.with_reference_core()
+    } else {
+        sim
+    }
+}
+
+fn run_closed(cfg: &Config, reference: bool) -> (RunMetrics, f64) {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    let workload = Workload::generate(&cfg.workload, registry.len(), SEED);
+    let sim = build_sim(cfg, &registry, &workload, reference);
     let t0 = Instant::now();
-    let w = Workload::generate(&cfg.workload, 40, 42);
-    let gen_s = t0.elapsed().as_secs_f64();
-    println!(
-        "workload generation: {:.1} ms ({} scripted steps)",
-        gen_s * 1000.0,
-        w.total_steps()
-    );
+    let m = sim.run();
+    (m, t0.elapsed().as_secs_f64())
+}
 
-    // Layer: one full 300 s x 100 VU run per scheduler.
-    for sched in ["hiku", "ch-bl", "random", "least-connections"] {
-        cfg.scheduler.name = sched.into();
-        let t0 = Instant::now();
-        let m = run_once(&cfg, 42).expect("run");
-        let wall = t0.elapsed().as_secs_f64();
-        // Events per completed request: arrival + completion + keepalive
-        // (~1 per idle period) — report requests/s and a >=3x event bound.
-        let reqs = m.completed as f64;
-        println!(
-            "{:<20} {:>7.0} requests in {:>6.1} ms  ({:>5.2} M req/s, >= {:>5.2} M events/s)",
-            sched,
-            reqs,
-            wall * 1000.0,
-            reqs / wall / 1e6,
-            3.0 * reqs / wall / 1e6
-        );
+fn run_open(cfg: &Config, trace: &OpenLoopTrace, reference: bool) -> (RunMetrics, f64) {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    let mut wcfg = cfg.workload.clone();
+    wcfg.vus = 1; // placeholder scripts; open loop ignores them
+    let workload = Workload::generate(&wcfg, registry.len(), SEED);
+    let sim = build_sim(cfg, &registry, &workload, reference);
+    let t0 = Instant::now();
+    let m = sim.run_open_loop(trace);
+    (m, t0.elapsed().as_secs_f64())
+}
+
+/// Open-loop trace with arrival rate proportional to the cluster size
+/// (`rate` req/s/worker), uniform over the 40 function types.
+fn make_trace(workers: usize, duration_s: f64, rate: f64) -> OpenLoopTrace {
+    let mut rng = Pcg64::new(SEED ^ 0x7ACE);
+    let gen = BurstyArrivals { base_rate: rate * workers as f64, ..Default::default() };
+    let times = gen.generate(duration_s, &mut rng);
+    let invocations: Vec<(f64, usize)> = times.into_iter().map(|t| (t, rng.index(40))).collect();
+    OpenLoopTrace::from_synthetic(&invocations, 40)
+}
+
+fn record(
+    rows: &mut Vec<Row>,
+    workers: usize,
+    mode: &'static str,
+    scheduler: &'static str,
+    core: &'static str,
+    m: &RunMetrics,
+    wall: f64,
+) {
+    let events_per_s = m.events_processed as f64 / wall.max(1e-9);
+    println!(
+        "{workers:>7} workers  {mode:<6} {scheduler:<18} {core:<9} \
+         {:>9} reqs  {:>10} events  {:>8.1} ms  {:>7.2} M events/s  peak queue {}",
+        m.completed,
+        m.events_processed,
+        wall * 1000.0,
+        events_per_s / 1e6,
+        m.peak_event_queue,
+    );
+    rows.push(Row {
+        workers,
+        mode,
+        scheduler,
+        core,
+        completed: m.completed,
+        events: m.events_processed,
+        wall_s: wall,
+        events_per_s,
+        peak_queue: m.peak_event_queue,
+    });
+}
+
+/// Aggregate events/s speedup (calendar vs reference) over all rows at one
+/// scale point and mode. Least-connections is excluded: its exact
+/// uniform-random tie-breaking is Θ(tie set) in both engines by
+/// construction (see module docs), so it measures tie-set size, not
+/// engine cost; its rows stay in the JSON for transparency.
+fn speedup(rows: &[Row], workers: usize, mode: &str) -> Option<f64> {
+    let sum = |core: &str| {
+        let (ev, wall) = rows
+            .iter()
+            .filter(|r| {
+                r.workers == workers
+                    && r.mode == mode
+                    && r.core == core
+                    && r.scheduler != "least-connections"
+            })
+            .fold((0u64, 0f64), |(e, w), r| (e + r.events, w + r.wall_s));
+        if wall > 0.0 {
+            Some(ev as f64 / wall)
+        } else {
+            None
+        }
+    };
+    Some(sum("calendar")? / sum("ref-heap")?)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut rows: Vec<Row> = Vec::new();
+
+    // (workers, closed-loop duration_s, VUs per worker, schedulers,
+    //  run the reference engine too)
+    type ScalePoint = (usize, f64, usize, Vec<&'static str>, bool);
+    let scale_points: Vec<ScalePoint> = if quick {
+        vec![(1_000, 4.0, 8, vec!["hiku"], true)]
+    } else {
+        vec![
+            (1_000, 30.0, 24, vec!["hiku", "least-connections", "ch-bl", "jsq", "random"], true),
+            (10_000, 12.0, 24, vec!["hiku", "ch-bl", "jsq", "random"], true),
+            // The reference engine is deliberately skipped at 100k (the
+            // seed scans would run for minutes); least-connections is
+            // skipped beyond 1k since its exact tie-breaking semantics
+            // are inherently tie-set-bound (see module docs).
+            (100_000, 6.0, 1, vec!["hiku", "random"], false),
+        ]
+    };
+
+    println!("# sim_engine scaling sweep (calendar queue + incremental accounting vs seed)");
+    for (workers, dur, vus_mult, scheds, with_ref) in &scale_points {
+        for &sched in scheds {
+            let cfg = scale_cfg(*workers, sched, *dur, *vus_mult);
+            let (m, wall) = run_closed(&cfg, false);
+            record(&mut rows, *workers, "closed", sched, "calendar", &m, wall);
+            if *with_ref {
+                let (m, wall) = run_closed(&cfg, true);
+                record(&mut rows, *workers, "closed", sched, "ref-heap", &m, wall);
+            }
+        }
+        // Open loop: hiku against a rate-scaled bursty trace.
+        let open_dur = (*dur).min(10.0);
+        let rate = if *workers >= 100_000 { 1.0 } else { 2.0 };
+        let trace = make_trace(*workers, open_dur, rate);
+        let cfg = scale_cfg(*workers, "hiku", open_dur, *vus_mult);
+        let (m, wall) = run_open(&cfg, &trace, false);
+        record(&mut rows, *workers, "open", "hiku", "calendar", &m, wall);
+        if *with_ref {
+            let (m, wall) = run_open(&cfg, &trace, true);
+            record(&mut rows, *workers, "open", "hiku", "ref-heap", &m, wall);
+        }
     }
 
-    // Layer: metrics summarization.
-    cfg.scheduler.name = "hiku".into();
-    let mut m = run_once(&cfg, 43).expect("run");
-    let t0 = Instant::now();
-    let _ = m.summary_json();
-    println!("metrics summarization: {:.2} ms", t0.elapsed().as_secs_f64() * 1000.0);
+    // Per-scale aggregate speedups (the acceptance gate reads speedup_10k).
+    let mut summary: Vec<(&'static str, Json)> = vec![
+        ("bench", "sim_engine".into()),
+        ("quick", quick.into()),
+        (
+            "speedup_note",
+            "aggregate events/s per scale point, calendar engine vs seed ref-heap engine \
+             (same binary, bit-identical runs); least-connections rows excluded from the \
+             aggregate (tie-set-bound by its exact-semantics requirement)"
+                .into(),
+        ),
+    ];
+    for (workers, _, _, _, with_ref) in &scale_points {
+        if !*with_ref {
+            continue;
+        }
+        if let Some(s) = speedup(&rows, *workers, "closed") {
+            println!("closed-loop speedup @ {workers} workers: {s:.2}x");
+            let key: &'static str = match *workers {
+                1_000 => "speedup_1k",
+                10_000 => "speedup_10k",
+                _ => "speedup_other",
+            };
+            summary.push((key, s.into()));
+        }
+        if let Some(s) = speedup(&rows, *workers, "open") {
+            println!("open-loop   speedup @ {workers} workers: {s:.2}x");
+        }
+    }
+    summary.push(("rows", Json::Arr(rows.iter().map(Row::json).collect())));
+
+    let out = obj(summary);
+    let path = "BENCH_sim_engine.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path} ({} rows)", rows.len());
 }

@@ -36,6 +36,11 @@ pub struct RunMetrics {
     pub prewarm_spawned: u64,
     /// Warm starts served by a pre-warmed (never-before-used) sandbox.
     pub prewarm_hits: u64,
+    /// Simulation events processed (the perf sweep's events/s numerator;
+    /// 0 for real-time runs).
+    pub events_processed: u64,
+    /// High-water mark of the pending-event queue (perf diagnostics).
+    pub peak_event_queue: usize,
     pub duration_s: f64,
     pub completed: u64,
     pub issued: u64,
@@ -59,6 +64,8 @@ impl RunMetrics {
             worker_seconds: 0.0,
             prewarm_spawned: 0,
             prewarm_hits: 0,
+            events_processed: 0,
+            peak_event_queue: 0,
             duration_s,
             completed: 0,
             issued: 0,

@@ -1,13 +1,51 @@
 //! Cluster: the set of workers plus cluster-wide inspection helpers that
-//! the schedulers consume (load vectors, idle-instance views).
+//! the schedulers consume (load vectors, idle-instance views) — and, since
+//! the event-core overhaul, the *incrementally maintained aggregates* that
+//! replace the engine's per-tick full-cluster scans:
+//!
+//! - per-function warm supply (idle + initializing sandboxes over the
+//!   active worker set) — the autoscale observation and the pre-warm
+//!   heuristic's supply term, read in O(functions) instead of
+//!   O(workers × functions);
+//! - total running / total queued over the active set — O(1) reads;
+//! - a bucketed min-load index over worker loads — `spawn_prewarm`'s
+//!   least-loaded-fitting placement in O(tie set) instead of O(workers).
+//!
+//! ## Invariants
+//!
+//! The aggregates stay exact only if every worker mutation goes through
+//! the `Cluster` wrapper methods ([`Cluster::assign`],
+//! [`Cluster::complete`], [`Cluster::sweep_keepalive`], …), which snapshot
+//! running/queued around the call and drain the worker's warm-delta
+//! journal into the aggregate. `worker_mut` remains public for tests and
+//! read-modify experiments, but simulator code must not mutate workers
+//! through it. Workers are active in the LIFO prefix `0..active`;
+//! [`Cluster::set_active`] moves boundary workers' contributions in and
+//! out of every aggregate, so drained workers (finishing in-flight work)
+//! are excluded exactly as the seed's `0..active_workers` scans excluded
+//! them. `tests/determinism.rs` pins the equivalence run-for-run.
 
-use super::worker::{Worker, WorkerId};
+use super::worker::{AssignOutcome, StartInfo, Worker, WorkerId};
 use crate::config::ClusterConfig;
+use crate::platform::sandbox::SandboxId;
+use crate::util::loadidx::MinLoadIndex;
 use crate::workload::spec::FunctionId;
 
 #[derive(Clone, Debug)]
 pub struct Cluster {
     pub workers: Vec<Worker>,
+    /// Workers `0..active` are eligible for selection; the suffix is
+    /// draining (scale-down is LIFO).
+    active: usize,
+    /// Bucketed min-load index over `worker.load()` (running + queued).
+    load_index: MinLoadIndex,
+    /// Executions running across active workers.
+    agg_running: usize,
+    /// Requests queued at active workers.
+    agg_queued: usize,
+    /// Non-busy (idle + initializing) sandboxes per function across active
+    /// workers. i64 so transient delta application can never underflow.
+    warm_agg: Vec<i64>,
 }
 
 impl Cluster {
@@ -15,7 +53,14 @@ impl Cluster {
         let workers = (0..cfg.workers)
             .map(|id| Worker::new(id, cfg.mem_mb, cfg.concurrency))
             .collect();
-        Self { workers }
+        Self {
+            workers,
+            active: cfg.workers,
+            load_index: MinLoadIndex::new(cfg.workers),
+            agg_running: 0,
+            agg_queued: 0,
+            warm_agg: Vec::new(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -30,6 +75,8 @@ impl Cluster {
         &self.workers[id]
     }
 
+    /// Raw mutable access. Mutating a worker through this bypasses the
+    /// incremental aggregates — simulator code must use the wrappers below.
     pub fn worker_mut(&mut self, id: WorkerId) -> &mut Worker {
         &mut self.workers[id]
     }
@@ -56,6 +103,222 @@ impl Cluster {
             t.prewarm_hits += w.total_prewarm_hits;
         }
         t
+    }
+
+    // ---- incremental aggregates (active worker set) ------------------------
+
+    /// Workers currently eligible for selection.
+    pub fn active_workers(&self) -> usize {
+        self.active
+    }
+
+    /// Executions running across active workers (O(1)).
+    pub fn total_running(&self) -> usize {
+        self.agg_running
+    }
+
+    /// Requests queued at active workers (O(1)).
+    pub fn total_queued(&self) -> usize {
+        self.agg_queued
+    }
+
+    /// Warm supply (idle + initializing) for `f` across active workers.
+    pub fn warm_nonbusy(&self, f: FunctionId) -> usize {
+        self.warm_agg.get(f).map(|&v| v.max(0) as usize).unwrap_or(0)
+    }
+
+    /// Fill `out[f]` with the warm supply per function (O(functions)).
+    pub fn warm_supply_into(&self, out: &mut [usize]) {
+        for (f, o) in out.iter_mut().enumerate() {
+            *o = self.warm_nonbusy(f);
+        }
+    }
+
+    /// Least-loaded active worker with at least `mem_mb` free, lowest id
+    /// among ties — identical to
+    /// `(0..active).filter(fit).min_by_key(load)` but O(tie set).
+    pub fn least_loaded_fitting(&self, mem_mb: u64) -> Option<WorkerId> {
+        self.load_index.least_loaded_where(|w| self.workers[w].mem_free_mb() >= mem_mb)
+    }
+
+    /// Append a new (inactive) worker; activate it with `set_active`.
+    pub fn push_worker(&mut self, mem_mb: u64, concurrency: usize) -> WorkerId {
+        let id = self.workers.len();
+        self.workers.push(Worker::new(id, mem_mb, concurrency));
+        self.load_index.add_worker();
+        id
+    }
+
+    /// Grow or shrink the active prefix, moving boundary workers'
+    /// contributions (running, queued, warm counts, load-index membership)
+    /// in or out of the aggregates.
+    pub fn set_active(&mut self, n: usize) {
+        assert!(
+            (1..=self.workers.len()).contains(&n),
+            "active {n} out of range 1..={}",
+            self.workers.len()
+        );
+        while self.active < n {
+            let w = self.active;
+            // Any undrained journal entries are already reflected in the
+            // worker's own counters, which we add wholesale below.
+            self.workers[w].warm_deltas.clear();
+            self.agg_running += self.workers[w].running();
+            self.agg_queued += self.workers[w].queue_len();
+            self.apply_worker_warm(w, 1);
+            self.active += 1;
+        }
+        while self.active > n {
+            let w = self.active - 1;
+            self.workers[w].warm_deltas.clear();
+            self.agg_running -= self.workers[w].running();
+            self.agg_queued -= self.workers[w].queue_len();
+            self.apply_worker_warm(w, -1);
+            self.active -= 1;
+        }
+        self.load_index.set_active(n);
+    }
+
+    /// Add (`sign`=1) or remove (`sign`=-1) worker `w`'s warm counts.
+    fn apply_worker_warm(&mut self, w: WorkerId, sign: i64) {
+        // Copy out to keep the borrows disjoint; scale events are rare.
+        let counts: Vec<u32> = self.workers[w].warm_by_fn().to_vec();
+        if counts.len() > self.warm_agg.len() {
+            self.warm_agg.resize(counts.len(), 0);
+        }
+        for (f, &c) in counts.iter().enumerate() {
+            self.warm_agg[f] += sign * c as i64;
+            debug_assert!(self.warm_agg[f] >= 0, "warm aggregate underflow f={f}");
+        }
+    }
+
+    /// Post-op bookkeeping: apply the worker's running/queued delta and
+    /// drain its warm-delta journal into the aggregates (discarded when
+    /// the worker is drained, exactly as the seed's scans skipped it).
+    fn sync_after(&mut self, w: WorkerId, before: (usize, usize)) {
+        let (run_before, q_before) = before;
+        let (run_after, q_after) = self.snapshot(w);
+        self.load_index.set_load(w, (run_after + q_after) as u32);
+        let is_active = w < self.active;
+        let mut deltas = std::mem::take(&mut self.workers[w].warm_deltas);
+        if is_active {
+            for &(f, d) in &deltas {
+                if f >= self.warm_agg.len() {
+                    self.warm_agg.resize(f + 1, 0);
+                }
+                self.warm_agg[f] += d as i64;
+                debug_assert!(self.warm_agg[f] >= 0, "warm aggregate underflow f={f}");
+            }
+            self.agg_running = self.agg_running + run_after - run_before;
+            self.agg_queued = self.agg_queued + q_after - q_before;
+        }
+        deltas.clear();
+        self.workers[w].warm_deltas = deltas; // hand the buffer back
+    }
+
+    #[inline]
+    fn snapshot(&self, w: WorkerId) -> (usize, usize) {
+        let wk = &self.workers[w];
+        (wk.running(), wk.queue_len())
+    }
+
+    // ---- accounted worker operations (the simulator's mutation API) -------
+
+    pub fn assign(
+        &mut self,
+        w: WorkerId,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+    ) -> AssignOutcome {
+        let before = self.snapshot(w);
+        let out = self.workers[w].assign(request_id, f, mem_mb, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn assign_elastic(
+        &mut self,
+        w: WorkerId,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+    ) -> StartInfo {
+        let before = self.snapshot(w);
+        let out = self.workers[w].assign_elastic(request_id, f, mem_mb, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn complete(
+        &mut self,
+        w: WorkerId,
+        sandbox: SandboxId,
+        now: f64,
+    ) -> (Option<(SandboxId, u64)>, Option<StartInfo>) {
+        let before = self.snapshot(w);
+        let out = self.workers[w].complete(sandbox, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn complete_elastic(
+        &mut self,
+        w: WorkerId,
+        sandbox: SandboxId,
+        now: f64,
+    ) -> (Option<(SandboxId, u64)>, Vec<FunctionId>) {
+        let before = self.snapshot(w);
+        let out = self.workers[w].complete_elastic(sandbox, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn prewarm(&mut self, w: WorkerId, f: FunctionId, mem_mb: u64, now: f64) -> Option<SandboxId> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].prewarm(f, mem_mb, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn finish_prewarm(
+        &mut self,
+        w: WorkerId,
+        sandbox: SandboxId,
+        now: f64,
+    ) -> Option<(FunctionId, u64)> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].finish_prewarm(sandbox, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn sweep_keepalive(&mut self, w: WorkerId, cutoff: f64) -> Vec<FunctionId> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].sweep_keepalive(cutoff);
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn drain_idle(&mut self, w: WorkerId) -> Vec<FunctionId> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].drain_idle();
+        self.sync_after(w, before);
+        out
+    }
+
+    pub fn expire_keepalive(
+        &mut self,
+        w: WorkerId,
+        sandbox: SandboxId,
+        epoch: u64,
+    ) -> Option<FunctionId> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].expire_keepalive(sandbox, epoch);
+        self.sync_after(w, before);
+        out
     }
 }
 
@@ -84,27 +347,178 @@ impl ClusterTotals {
 mod tests {
     use super::*;
     use crate::platform::worker::AssignOutcome;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
 
     #[test]
     fn cluster_construction() {
         let c = Cluster::new(&ClusterConfig::default());
         assert_eq!(c.len(), 5);
         assert_eq!(c.loads(), vec![0; 5]);
+        assert_eq!(c.active_workers(), 5);
+        assert_eq!(c.total_running(), 0);
+        assert_eq!(c.total_queued(), 0);
     }
 
     #[test]
     fn totals_and_idle_views() {
         let mut c = Cluster::new(&ClusterConfig { workers: 2, ..Default::default() });
-        let info = match c.worker_mut(0).assign(1, 3, 256, 0.0) {
+        let info = match c.assign(0, 1, 3, 256, 0.0) {
             AssignOutcome::Started(i) => i,
             _ => panic!(),
         };
         assert_eq!(c.workers_with_idle(3), Vec::<usize>::new());
-        c.worker_mut(0).complete(info.sandbox, 1.0);
+        assert_eq!(c.total_running(), 1);
+        assert_eq!(c.warm_nonbusy(3), 0);
+        c.complete(0, info.sandbox, 1.0);
         assert_eq!(c.workers_with_idle(3), vec![0]);
+        assert_eq!(c.total_running(), 0);
+        assert_eq!(c.warm_nonbusy(3), 1);
         let t = c.totals();
         assert_eq!(t.cold, 1);
         assert_eq!(t.warm, 0);
         assert!((t.cold_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_active_moves_contributions() {
+        let mut c = Cluster::new(&ClusterConfig { workers: 3, ..Default::default() });
+        // Worker 2 gets one running execution and one idle sandbox.
+        let a = c.assign_elastic(2, 1, 7, 256, 0.0);
+        c.complete_elastic(2, a.sandbox, 1.0);
+        c.assign_elastic(2, 2, 8, 256, 2.0);
+        assert_eq!(c.total_running(), 1);
+        assert_eq!(c.warm_nonbusy(7), 1);
+        // Drain worker 2: its contributions leave the aggregates.
+        c.set_active(2);
+        assert_eq!(c.active_workers(), 2);
+        assert_eq!(c.total_running(), 0);
+        assert_eq!(c.warm_nonbusy(7), 0);
+        // Its in-flight completion while drained is not counted...
+        let (_, _) = c.complete_elastic(2, a.sandbox + 1, 3.0);
+        assert_eq!(c.total_running(), 0);
+        // ...but re-activation restores the current state exactly.
+        c.set_active(3);
+        assert_eq!(c.warm_nonbusy(7), 1);
+        assert_eq!(c.warm_nonbusy(8), 1);
+        assert_eq!(c.total_running(), 0);
+    }
+
+    #[test]
+    fn least_loaded_fitting_matches_scan() {
+        let mut c = Cluster::new(&ClusterConfig { workers: 3, mem_mb: 512, ..Default::default() });
+        // Workers 0 and 1 take one execution each (1's fills its memory);
+        // worker 2 stays empty and must win as the least-loaded fit.
+        c.assign_elastic(0, 1, 1, 128, 0.0);
+        c.assign_elastic(1, 2, 2, 512, 0.0);
+        assert_eq!(c.least_loaded_fitting(128), Some(2));
+        // Among load-1 workers only worker 0 has room for 256 MB.
+        c.assign_elastic(2, 3, 3, 128, 0.0);
+        assert_eq!(c.least_loaded_fitting(256), Some(0));
+        // Nothing fits a huge footprint.
+        assert_eq!(c.least_loaded_fitting(4096), None);
+    }
+
+    /// Property: after arbitrary wrapped-op sequences with scale events,
+    /// every aggregate equals the seed's full scan over the active prefix.
+    #[test]
+    fn prop_aggregates_match_full_scan() {
+        check("cluster-aggregates", PropConfig { cases: 100, ..Default::default() }, |rng, size| {
+            let workers = 2 + rng.index(4);
+            let nf = 5usize;
+            let cfg = ClusterConfig { workers, mem_mb: 2048, concurrency: 2, ..Default::default() };
+            let mut c = Cluster::new(&cfg);
+            let elastic = rng.index(2) == 0;
+            let mut busy: Vec<(WorkerId, SandboxId)> = Vec::new();
+            let mut t = 0.0;
+            for _ in 0..size * 4 {
+                t += 0.2;
+                match rng.index(6) {
+                    0 | 1 => {
+                        let w = rng.index(c.len());
+                        let f = rng.index(nf);
+                        if elastic {
+                            let info = c.assign_elastic(w, 0, f, 256, t);
+                            busy.push((w, info.sandbox));
+                        } else if let AssignOutcome::Started(info) = c.assign(w, 0, f, 256, t) {
+                            busy.push((w, info.sandbox));
+                        }
+                    }
+                    2 => {
+                        if !busy.is_empty() {
+                            let i = rng.index(busy.len());
+                            let (w, sb) = busy.swap_remove(i);
+                            if elastic {
+                                c.complete_elastic(w, sb, t);
+                            } else {
+                                let (_, started) = c.complete(w, sb, t);
+                                if let Some(info) = started {
+                                    busy.push((w, info.sandbox));
+                                }
+                            }
+                        }
+                    }
+                    3 => {
+                        let w = rng.index(c.len());
+                        let f = rng.index(nf);
+                        if let Some(sb) = c.prewarm(w, f, 256, t) {
+                            c.finish_prewarm(w, sb, t);
+                        }
+                    }
+                    4 => {
+                        let w = rng.index(c.len());
+                        c.sweep_keepalive(w, t - 3.0);
+                    }
+                    _ => {
+                        let n = 1 + rng.index(c.len());
+                        c.set_active(n);
+                    }
+                }
+                // Full-scan ground truth over the active prefix.
+                let active = c.active_workers();
+                let mut warm = vec![0usize; nf];
+                let mut running = 0;
+                let mut queued = 0;
+                for w in 0..active {
+                    c.worker(w).warm_counts_into(&mut warm);
+                    running += c.worker(w).running();
+                    queued += c.worker(w).queue_len();
+                }
+                prop_assert!(
+                    c.total_running() == running,
+                    "running {} != {}",
+                    c.total_running(),
+                    running
+                );
+                prop_assert!(
+                    c.total_queued() == queued,
+                    "queued {} != {}",
+                    c.total_queued(),
+                    queued
+                );
+                for (f, &want) in warm.iter().enumerate() {
+                    prop_assert!(
+                        c.warm_nonbusy(f) == want,
+                        "warm f={}: {} != {}",
+                        f,
+                        c.warm_nonbusy(f),
+                        want
+                    );
+                }
+                // Placement query vs the seed linear scan.
+                for &mem in &[256u64, 1024, 4096] {
+                    let scan = (0..active)
+                        .filter(|&w| c.worker(w).mem_free_mb() >= mem)
+                        .min_by_key(|&w| c.worker(w).load());
+                    prop_assert!(
+                        c.least_loaded_fitting(mem) == scan,
+                        "fit({mem}): {:?} != {:?}",
+                        c.least_loaded_fitting(mem),
+                        scan
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -63,6 +63,14 @@ pub struct Worker {
     sandboxes: Vec<Sandbox>,
     queue: VecDeque<QueuedRequest>,
     next_sandbox_id: SandboxId,
+    /// Non-busy (idle + initializing) sandbox count per function — the
+    /// worker's contribution to the cluster's incremental warm-supply
+    /// aggregate. Updated at every sandbox state transition; always equals
+    /// what [`Worker::warm_counts_into`] would recount.
+    warm_by_fn: Vec<u32>,
+    /// Journal of warm-count deltas since the cluster last drained it
+    /// (see `Cluster::sync_after`). Mirrors `warm_by_fn` updates 1:1.
+    pub(crate) warm_deltas: Vec<(FunctionId, i32)>,
     // ---- counters (metrics) ----
     pub total_cold: u64,
     pub total_warm: u64,
@@ -85,6 +93,8 @@ impl Worker {
             sandboxes: Vec::new(),
             queue: VecDeque::new(),
             next_sandbox_id: 1,
+            warm_by_fn: Vec::new(),
+            warm_deltas: Vec::new(),
             total_cold: 0,
             total_warm: 0,
             total_evictions_pressure: 0,
@@ -135,6 +145,36 @@ impl Worker {
         self.sandboxes.iter_mut().find(|s| s.id == id)
     }
 
+    /// This worker's non-busy sandbox counts per function (dense by
+    /// FunctionId; shorter than the registry when tail functions never ran
+    /// here).
+    pub fn warm_by_fn(&self) -> &[u32] {
+        &self.warm_by_fn
+    }
+
+    // ---- incremental warm accounting --------------------------------------
+    //
+    // Called at every transition that changes a sandbox's non-busy status
+    // (Idle/Initializing vs Busy/destroyed). The per-worker counter and
+    // the delta journal move together so the cluster aggregate can be
+    // updated incrementally without rescanning sandboxes.
+
+    #[inline]
+    fn note_warm_up(&mut self, f: FunctionId) {
+        if f >= self.warm_by_fn.len() {
+            self.warm_by_fn.resize(f + 1, 0);
+        }
+        self.warm_by_fn[f] += 1;
+        self.warm_deltas.push((f, 1));
+    }
+
+    #[inline]
+    fn note_warm_down(&mut self, f: FunctionId) {
+        debug_assert!(self.warm_by_fn.get(f).copied().unwrap_or(0) > 0, "warm underflow f={f}");
+        self.warm_by_fn[f] -= 1;
+        self.warm_deltas.push((f, -1));
+    }
+
     // ---- request path -----------------------------------------------------
 
     /// A request for `f` (with sandbox footprint `mem_mb`) arrives at `now`.
@@ -181,15 +221,19 @@ impl Worker {
             .max_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
             .map(|(i, _)| i)
         {
-            let sb = &mut self.sandboxes[idx];
-            let ok = sb.start_execution();
-            debug_assert!(ok);
-            if std::mem::replace(&mut sb.prewarmed, false) {
+            let (sandbox, was_prewarmed) = {
+                let sb = &mut self.sandboxes[idx];
+                let ok = sb.start_execution();
+                debug_assert!(ok);
+                (sb.id, std::mem::replace(&mut sb.prewarmed, false))
+            };
+            if was_prewarmed {
                 self.total_prewarm_hits += 1;
             }
             self.total_warm += 1;
+            self.note_warm_down(f);
             return StartInfo {
-                sandbox: sb.id,
+                sandbox,
                 cold: false,
                 evicted: Vec::new(),
                 request_id,
@@ -229,6 +273,7 @@ impl Worker {
                     let sb = self.sandboxes.swap_remove(i);
                     self.mem_used_mb -= sb.mem_mb;
                     self.total_evictions_pressure += 1;
+                    self.note_warm_down(sb.function);
                     evicted.push(sb.function);
                 }
                 None => panic!(
@@ -252,9 +297,9 @@ impl Worker {
         let sb = self.sandbox_mut(sandbox).expect("completing unknown sandbox");
         let f_done = sb.function;
         let epoch = sb.finish_execution(now).expect("completing non-busy sandbox");
-        let _ = f_done;
         debug_assert!(self.running > 0);
         self.running -= 1;
+        self.note_warm_up(f_done);
 
         let mut started = None;
         if let Some(q) = self.queue.pop_front() {
@@ -296,15 +341,19 @@ impl Worker {
             .max_by(|(_, a), (_, b)| a.idle_since.partial_cmp(&b.idle_since).unwrap())
             .map(|(i, _)| i)
         {
-            let sb = &mut self.sandboxes[idx];
-            let ok = sb.start_execution();
-            debug_assert!(ok);
-            if std::mem::replace(&mut sb.prewarmed, false) {
+            let (sandbox, was_prewarmed) = {
+                let sb = &mut self.sandboxes[idx];
+                let ok = sb.start_execution();
+                debug_assert!(ok);
+                (sb.id, std::mem::replace(&mut sb.prewarmed, false))
+            };
+            if was_prewarmed {
                 self.total_prewarm_hits += 1;
             }
             self.total_warm += 1;
+            self.note_warm_down(f);
             return StartInfo {
-                sandbox: sb.id,
+                sandbox,
                 cold: false,
                 evicted: Vec::new(),
                 request_id,
@@ -343,6 +392,7 @@ impl Worker {
                     let sb = self.sandboxes.swap_remove(i);
                     self.mem_used_mb -= sb.mem_mb;
                     self.total_evictions_pressure += 1;
+                    self.note_warm_down(sb.function);
                     evicted.push(sb.function);
                 }
                 None => break, // only busy sandboxes left: overflow
@@ -361,9 +411,11 @@ impl Worker {
         now: f64,
     ) -> (Option<(SandboxId, u64)>, Vec<FunctionId>) {
         let sb = self.sandbox_mut(sandbox).expect("completing unknown sandbox");
+        let f_done = sb.function;
         let epoch = sb.finish_execution(now).expect("completing non-busy sandbox");
         debug_assert!(self.running > 0);
         self.running -= 1;
+        self.note_warm_up(f_done);
         let evicted = self.trim_idle_lru(0);
         let survived = self.sandbox(sandbox).map(|s| s.is_idle()).unwrap_or(false);
         let expiry = if survived { Some((sandbox, epoch)) } else { None };
@@ -384,6 +436,7 @@ impl Worker {
         sb.prewarmed = true;
         self.sandboxes.push(sb);
         self.total_prewarm_spawned += 1;
+        self.note_warm_up(f);
         Some(id)
     }
 
@@ -429,6 +482,7 @@ impl Worker {
                 let sb = self.sandboxes.swap_remove(i);
                 self.mem_used_mb -= sb.mem_mb;
                 self.total_evictions_keepalive += 1;
+                self.note_warm_down(sb.function);
                 evicted.push(sb.function);
             } else {
                 i += 1;
@@ -447,6 +501,7 @@ impl Worker {
                 let sb = self.sandboxes.swap_remove(i);
                 self.mem_used_mb -= sb.mem_mb;
                 self.total_evictions_pressure += 1;
+                self.note_warm_down(sb.function);
                 evicted.push(sb.function);
             } else {
                 i += 1;
@@ -468,6 +523,7 @@ impl Worker {
         let sb = self.sandboxes.swap_remove(idx);
         self.mem_used_mb -= sb.mem_mb;
         self.total_evictions_keepalive += 1;
+        self.note_warm_down(sb.function);
         Some(sb.function)
     }
 }
@@ -684,6 +740,64 @@ mod tests {
         let mut counts = vec![0usize; 3];
         w.warm_counts_into(&mut counts);
         assert_eq!(counts, vec![0, 2, 0], "idle + initializing counted, busy excluded");
+    }
+
+    /// Property: the incremental per-function warm counters always equal a
+    /// fresh recount of sandbox states, across random op sequences touching
+    /// every transition (assign, complete, prewarm, finish, sweep).
+    #[test]
+    fn prop_warm_by_fn_matches_recount() {
+        use crate::prop_assert;
+        use crate::util::prop::{check, PropConfig};
+        check("worker-warm-counters", PropConfig { cases: 120, ..Default::default() }, |rng, size| {
+            let nf = 4;
+            let mut w = Worker::new(0, 2048, 2);
+            let mut busy: Vec<SandboxId> = Vec::new();
+            let mut initializing: Vec<SandboxId> = Vec::new();
+            let mut rid = 0u64;
+            let mut t = 0.0;
+            for _ in 0..size * 3 {
+                t += 0.25;
+                match rng.index(5) {
+                    0 | 1 => {
+                        let f = rng.index(nf);
+                        let info = w.assign_elastic(rid, f, 256, t);
+                        busy.push(info.sandbox);
+                        rid += 1;
+                    }
+                    2 => {
+                        if !busy.is_empty() {
+                            let i = rng.index(busy.len());
+                            let sb = busy.swap_remove(i);
+                            w.complete_elastic(sb, t);
+                        }
+                    }
+                    3 => {
+                        let f = rng.index(nf);
+                        if let Some(sb) = w.prewarm(f, 256, t) {
+                            initializing.push(sb);
+                        }
+                    }
+                    _ => {
+                        if initializing.is_empty() {
+                            w.sweep_keepalive(t - 5.0);
+                        } else {
+                            let i = rng.index(initializing.len());
+                            let sb = initializing.swap_remove(i);
+                            w.finish_prewarm(sb, t);
+                        }
+                    }
+                }
+                w.warm_deltas.clear(); // the journal is the cluster's concern
+                let mut recount = vec![0usize; nf];
+                w.warm_counts_into(&mut recount);
+                for (f, &want) in recount.iter().enumerate() {
+                    let have = w.warm_by_fn().get(f).copied().unwrap_or(0) as usize;
+                    prop_assert!(have == want, "f={}: counter {} != recount {}", f, have, want);
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! JSQ and power-of-d are the classic queueing-theory push-based algorithms
 //! (§VI) included for ablation benches.
 
-use super::{least_loaded_random_tie, SchedCtx, Scheduler, WorkerId};
+use super::{SchedCtx, Scheduler, WorkerId};
 use crate::util::hashing;
 use crate::workload::spec::FunctionId;
 
@@ -28,7 +28,9 @@ impl Scheduler for LeastConnections {
     }
 
     fn select(&mut self, _f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
-        least_loaded_random_tie(ctx.loads, ctx.rng)
+        // O(tie set) via the router's min-load index when attached,
+        // identical linear scan otherwise.
+        ctx.least_loaded_random_tie()
     }
 }
 
@@ -116,13 +118,7 @@ impl Scheduler for Jsq {
     }
 
     fn select(&mut self, _f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
-        let mut best = 0usize;
-        for (w, &l) in ctx.loads.iter().enumerate() {
-            if l < ctx.loads[best] {
-                best = w;
-            }
-        }
-        best
+        ctx.least_loaded_lowest_id()
     }
 }
 
@@ -199,7 +195,7 @@ mod tests {
         let mut s = LeastConnections::new();
         let mut rng = Pcg64::new(1);
         let loads = [3u32, 0, 2];
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         assert_eq!(s.select(0, &mut ctx), 1);
     }
 
@@ -210,7 +206,7 @@ mod tests {
         let loads = [100u32, 0, 0, 0]; // load-oblivious: still picks 0 sometimes
         let mut counts = [0usize; 4];
         for _ in 0..40_000 {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             counts[s.select(7, &mut ctx)] += 1;
         }
         for &c in &counts {
@@ -224,9 +220,9 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let loads = [0u32; 5];
         for f in 0..40 {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             let w1 = s.select(f, &mut ctx);
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             let w2 = s.select(f, &mut ctx);
             assert_eq!(w1, w2, "hashing must be stable");
         }
@@ -239,7 +235,7 @@ mod tests {
         let loads = [0u32; 5];
         let mut hit = [false; 5];
         for f in 0..200 {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             hit[s.select(f, &mut ctx)] = true;
         }
         assert!(hit.iter().all(|&h| h), "200 functions must cover 5 workers");
@@ -250,7 +246,7 @@ mod tests {
         let mut s = Jsq::new();
         let mut rng = Pcg64::new(5);
         let loads = [2u32, 1, 1, 5];
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         assert_eq!(s.select(0, &mut ctx), 1, "lowest id among ties");
     }
 
@@ -265,7 +261,7 @@ mod tests {
         let mut overloaded_hits = 0usize;
         let n = 20_000;
         for _ in 0..n {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             if pod.select(0, &mut ctx) == 0 {
                 overloaded_hits += 1;
             }
@@ -282,7 +278,7 @@ mod tests {
         let mut pod = PowerOfD::new(4, 4);
         let mut rng = Pcg64::new(7);
         let loads = [3u32, 1, 2, 4];
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         assert_eq!(pod.select(0, &mut ctx), 1);
     }
 }

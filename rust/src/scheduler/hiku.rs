@@ -19,8 +19,20 @@
 //! |PQ_f| bounded by idle instances of `f` cluster-wide (a few dozen at
 //! paper scale). This matches the algorithm's semantics exactly (the sort
 //! key is the current load) while staying allocation-free on the hot path.
+//!
+//! ### Multiset invariant
+//!
+//! Because `PQ_f` is a multiset whose "least loaded" is resolved against
+//! live loads at dequeue time, the *order* of entries inside the backing
+//! `Vec` carries no meaning — only the multiset of worker ids does. All
+//! mutations are therefore free to use `swap_remove` (O(1)) instead of
+//! order-preserving `remove` (O(n) shift): eviction removes *a* matching
+//! entry, and dequeue removes *a* minimum-load entry. The only observable
+//! effect is which of several equally-loaded enqueued workers wins a tie,
+//! which the algorithm leaves unspecified; under a fixed seed the choice
+//! is still fully deterministic.
 
-use super::{least_loaded_random_tie, SchedCtx, Scheduler, WorkerId};
+use super::{SchedCtx, Scheduler, WorkerId};
 use crate::workload::spec::FunctionId;
 
 pub struct Hiku {
@@ -96,11 +108,12 @@ impl Scheduler for Hiku {
             return w;
         }
         // Fallback mechanism (lines 7-11): least connections, random ties
-        // by default; configurable per §IV-B.
+        // by default; configurable per §IV-B. The ctx helper uses the
+        // router's incremental min-load index when one is attached.
         self.fallbacks += 1;
         match &mut self.fallback {
             Some(fb) => fb.select(f, ctx),
-            None => least_loaded_random_tie(ctx.loads, ctx.rng),
+            None => ctx.least_loaded_random_tie(),
         }
     }
 
@@ -112,11 +125,13 @@ impl Scheduler for Hiku {
     }
 
     fn on_evict(&mut self, w: WorkerId, f: FunctionId) {
-        // Notification mechanism (lines 18-19): remove the first occurrence.
+        // Notification mechanism (lines 18-19): remove one occurrence.
+        // swap_remove is O(1) and multiset-equivalent to the seed's O(n)
+        // shifting remove — see "Multiset invariant" in the module docs.
         self.evict_notifications += 1;
         let q = self.queue_mut(f);
         if let Some(pos) = q.iter().position(|&x| x == w) {
-            q.remove(pos);
+            q.swap_remove(pos);
         }
     }
 
@@ -154,7 +169,7 @@ mod tests {
     use crate::util::rng::Pcg64;
 
     fn ctx<'a>(loads: &'a [u32], rng: &'a mut Pcg64) -> SchedCtx<'a> {
-        SchedCtx { loads, rng }
+        SchedCtx::new(loads, rng)
     }
 
     #[test]
@@ -209,7 +224,7 @@ mod tests {
     }
 
     #[test]
-    fn eviction_removes_first_occurrence_only() {
+    fn eviction_removes_one_occurrence_only() {
         let mut h = Hiku::new(4);
         let mut rng = Pcg64::new(5);
         let loads = [0u32; 4];
@@ -217,7 +232,7 @@ mod tests {
         h.on_complete(2, 1, &mut ctx(&loads, &mut rng)); // two idle instances
         assert_eq!(h.queue_len(1), 2);
         h.on_evict(2, 1);
-        assert_eq!(h.queue_len(1), 1, "only the first occurrence is removed");
+        assert_eq!(h.queue_len(1), 1, "exactly one occurrence is removed");
         h.on_evict(2, 1);
         assert_eq!(h.queue_len(1), 0);
         // Eviction of a non-enqueued worker is a no-op.
@@ -256,7 +271,7 @@ mod tests {
                 match rng.index(3) {
                     0 => {
                         let w = rng.index(workers);
-                        let mut c = SchedCtx { loads: &loads, rng };
+                        let mut c = SchedCtx::new(&loads, rng);
                         h.on_complete(w, f, &mut c);
                         shadow[f].push(w);
                     }
@@ -270,7 +285,7 @@ mod tests {
                     _ => {
                         let was_empty = shadow[f].is_empty();
                         let before = h.queue_len(f);
-                        let mut c = SchedCtx { loads: &loads, rng };
+                        let mut c = SchedCtx::new(&loads, rng);
                         let w = h.select(f, &mut c);
                         prop_assert!(w < workers, "worker {} out of range", w);
                         if was_empty {

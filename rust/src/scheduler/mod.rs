@@ -24,6 +24,7 @@ pub mod hiku;
 pub mod ring;
 
 use crate::config::SchedulerConfig;
+use crate::util::loadidx::MinLoadIndex;
 use crate::util::rng::Pcg64;
 use crate::workload::spec::FunctionId;
 
@@ -37,8 +38,67 @@ pub type WorkerId = usize;
 pub struct SchedCtx<'a> {
     /// Active connections per worker (outstanding routed requests).
     pub loads: &'a [u32],
+    /// Incremental min-load index over the *same* active worker set as
+    /// `loads` (the router maintains both). `None` for callers without
+    /// one — the selection helpers below then fall back to a linear scan
+    /// with bit-identical semantics, so schedulers behave the same either
+    /// way; the index only changes the cost.
+    pub min_index: Option<&'a MinLoadIndex>,
     /// Scheduler-owned RNG stream (tie-breaking, random selection).
     pub rng: &'a mut Pcg64,
+}
+
+impl<'a> SchedCtx<'a> {
+    /// Context without an index (tests, the real-time server).
+    pub fn new(loads: &'a [u32], rng: &'a mut Pcg64) -> Self {
+        Self { loads, min_index: None, rng }
+    }
+
+    /// Least-loaded worker, uniform random among ties — Algorithm 1's
+    /// fallback rule and the whole of least-connections. With an index the
+    /// reservoir runs over just the tie set (in ascending worker order, so
+    /// the RNG stream and the winner match the linear scan exactly).
+    pub fn least_loaded_random_tie(&mut self) -> WorkerId {
+        match self.min_index {
+            Some(idx) => {
+                debug_assert_eq!(idx.active(), self.loads.len());
+                idx.least_loaded_random_tie(self.rng)
+            }
+            None => least_loaded_random_tie(self.loads, self.rng),
+        }
+    }
+
+    /// Least-loaded worker, lowest id among ties (classical JSQ).
+    pub fn least_loaded_lowest_id(&self) -> WorkerId {
+        match self.min_index {
+            Some(idx) => {
+                debug_assert_eq!(idx.active(), self.loads.len());
+                idx.least_loaded_lowest_id()
+            }
+            None => {
+                debug_assert!(!self.loads.is_empty());
+                let mut best = 0usize;
+                for (w, &l) in self.loads.iter().enumerate() {
+                    if l < self.loads[best] {
+                        best = w;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Total outstanding load across the active workers (CH-BL/RJ-CH's
+    /// bounded-load capacity input). O(1) with an index.
+    pub fn total_load(&self) -> u64 {
+        match self.min_index {
+            Some(idx) => {
+                debug_assert_eq!(idx.active(), self.loads.len());
+                idx.total_active_load()
+            }
+            None => self.loads.iter().map(|&l| l as u64).sum(),
+        }
+    }
 }
 
 /// A scheduling algorithm. Object-safe so the runtime can swap algorithms
@@ -168,6 +228,36 @@ mod tests {
         }
     }
 
+    /// An indexed context and a plain-slice context must produce identical
+    /// selections AND consume identical RNG streams, for every helper the
+    /// schedulers route through.
+    #[test]
+    fn indexed_ctx_matches_scan_ctx() {
+        let mut idx = MinLoadIndex::new(6);
+        let loads = [2u32, 0, 1, 0, 3, 0];
+        for (w, &l) in loads.iter().enumerate() {
+            for _ in 0..l {
+                idx.inc(w);
+            }
+        }
+        let mut rng_a = Pcg64::new(11);
+        let mut rng_b = Pcg64::new(11);
+        for _ in 0..200 {
+            let mut with_idx = SchedCtx { loads: &loads, min_index: Some(&idx), rng: &mut rng_a };
+            let a = with_idx.least_loaded_random_tie();
+            let ta = with_idx.total_load();
+            let ja = with_idx.least_loaded_lowest_id();
+            let mut plain = SchedCtx::new(&loads, &mut rng_b);
+            let b = plain.least_loaded_random_tie();
+            let tb = plain.total_load();
+            let jb = plain.least_loaded_lowest_id();
+            assert_eq!(a, b, "tie-break diverged");
+            assert_eq!(ta, tb, "total diverged");
+            assert_eq!(ja, jb, "jsq rule diverged");
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams diverged");
+    }
+
     #[test]
     fn all_schedulers_select_in_range() {
         let mut rng = Pcg64::new(3);
@@ -176,7 +266,7 @@ mod tests {
             let mut s = make_scheduler(&cfg, 7).unwrap();
             let loads = vec![0u32; 7];
             for f in 0..40 {
-                let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+                let mut ctx = SchedCtx::new(&loads, &mut rng);
                 let w = s.select(f, &mut ctx);
                 assert!(w < 7, "{name} selected out-of-range worker {w}");
             }

@@ -15,25 +15,38 @@ pub struct HashRing {
     /// (point, worker) sorted by point.
     points: Vec<(u64, WorkerId)>,
     workers: usize,
+    /// Per-worker visit stamps for `lookup_where` (replaces the seed's
+    /// per-call `vec![false; workers]` allocation — at 10k+ workers that
+    /// alloc+memset dominated every CH-BL decision).
+    seen_stamp: Vec<u32>,
+    stamp: u32,
 }
 
 impl HashRing {
     pub fn new(workers: usize, vnodes: usize) -> Self {
         assert!(workers > 0 && vnodes > 0);
-        let mut ring = Self { points: Vec::new(), workers: 0 };
+        // Bulk build: generate every point, sort once. The seed sorted
+        // after each worker (O(workers² · vnodes · log) at construction —
+        // prohibitive at 10k+ workers); the final sorted vector is
+        // identical since sorting is order-insensitive.
+        let mut points = Vec::with_capacity(workers * vnodes);
         for w in 0..workers {
-            ring.add_worker(w, vnodes);
+            Self::worker_points(w, vnodes, &mut points);
         }
-        ring
+        points.sort_unstable();
+        Self { points, workers, seen_stamp: vec![0; workers], stamp: 0 }
+    }
+
+    fn worker_points(w: WorkerId, vnodes: usize, out: &mut Vec<(u64, WorkerId)>) {
+        let base = hashing::mix64(0x57_u64.wrapping_mul(w as u64 + 1));
+        for v in 0..vnodes {
+            out.push((hashing::combine(base, v as u64), w));
+        }
     }
 
     /// Add a worker's virtual nodes (auto-scaling up).
     pub fn add_worker(&mut self, w: WorkerId, vnodes: usize) {
-        let base = hashing::mix64(0x57_u64.wrapping_mul(w as u64 + 1));
-        for v in 0..vnodes {
-            let point = hashing::combine(base, v as u64);
-            self.points.push((point, w));
-        }
+        Self::worker_points(w, vnodes, &mut self.points);
         self.points.sort_unstable();
         self.workers = self.workers.max(w + 1);
     }
@@ -64,19 +77,27 @@ impl HashRing {
     /// `ok`. Falls back to the primary owner if nobody accepts (all
     /// overloaded — bounded-load threshold guarantees this cannot happen
     /// when capacity is computed from the live total, but keep it total).
-    pub fn lookup_where<F: FnMut(WorkerId) -> bool>(&self, key: u64, mut ok: F) -> WorkerId {
+    pub fn lookup_where<F: FnMut(WorkerId) -> bool>(&mut self, key: u64, mut ok: F) -> WorkerId {
         let start = self.start_index(key);
         let n = self.points.len();
+        if self.seen_stamp.len() < self.workers {
+            self.seen_stamp.resize(self.workers, 0);
+        }
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            // Stamp wrapped: reset the scratch once per ~4 billion calls.
+            self.seen_stamp.fill(0);
+            self.stamp = 1;
+        }
         let mut seen = 0usize;
-        let mut seen_mask = vec![false; self.workers];
         let mut i = start;
         loop {
             let w = self.points[i].1;
-            if !seen_mask[w] {
+            if self.seen_stamp[w] != self.stamp {
                 if ok(w) {
                     return w;
                 }
-                seen_mask[w] = true;
+                self.seen_stamp[w] = self.stamp;
                 seen += 1;
                 if seen == self.workers {
                     return self.points[start].1;
@@ -87,7 +108,7 @@ impl HashRing {
     }
 
     /// Distinct workers in clockwise order from `key` (for tests).
-    pub fn walk(&self, key: u64) -> Vec<WorkerId> {
+    pub fn walk(&mut self, key: u64) -> Vec<WorkerId> {
         let mut order = Vec::new();
         self.lookup_where(key, |w| {
             order.push(w);
@@ -171,7 +192,8 @@ impl Scheduler for ChBl {
     }
 
     fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
-        let total: u64 = ctx.loads.iter().map(|&l| l as u64).sum();
+        // O(1) total via the router's index (falls back to a slice sum).
+        let total = ctx.total_load();
         let cap = chbl_capacity(self.c, total, self.workers);
         let primary = self.ring.lookup(function_key(f));
         let w = self.ring.lookup_where(function_key(f), |w| ctx.loads[w] < cap);
@@ -233,7 +255,7 @@ impl Scheduler for RjCh {
     }
 
     fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
-        let total: u64 = ctx.loads.iter().map(|&l| l as u64).sum();
+        let total = ctx.total_load();
         let cap = chbl_capacity(self.c, total, self.workers);
         let primary = self.ring.lookup(function_key(f));
         if ctx.loads[primary] < cap {
@@ -334,7 +356,7 @@ mod tests {
         let total = 10u64;
         let cap = chbl_capacity(1.25, total, 4);
         assert_eq!(cap, 4); // ceil(1.25 * 11/4) = ceil(3.4375)
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         let w = s.select(0, &mut ctx);
         assert_ne!(w, 0, "overloaded worker must be skipped (load 10 >= cap {cap})");
     }
@@ -349,7 +371,7 @@ mod tests {
         let mut loads = [0u32; 4];
         loads[order[0]] = 100;
         loads[order[1]] = 100;
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         let w = s.select(7, &mut ctx);
         assert_eq!(w, order[2], "must cascade to the next non-overloaded clockwise worker");
         assert_eq!(s.overflows, 1);
@@ -361,7 +383,7 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let key_owner = {
             let loads = [0u32; 5];
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             s.select(11, &mut ctx)
         };
         // Overload the owner; the jump target must be uniform over others.
@@ -369,7 +391,7 @@ mod tests {
         loads[key_owner] = 100;
         let mut counts = [0usize; 5];
         for _ in 0..20_000 {
-            let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
             counts[s.select(11, &mut ctx)] += 1;
         }
         assert_eq!(counts[key_owner], 0);
@@ -385,7 +407,7 @@ mod tests {
         let mut s = ChBl::new(3, 50, 1.0);
         let mut rng = Pcg64::new(4);
         let loads = [50u32, 50, 50];
-        let mut ctx = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut ctx = SchedCtx::new(&loads, &mut rng);
         let w = s.select(3, &mut ctx);
         assert!(w < 3);
     }
@@ -428,7 +450,7 @@ mod tests {
             let cap = chbl_capacity(1.25, total, workers);
             let any_under = loads.iter().any(|&l| l < cap);
             for f in 0..30 {
-                let mut ctx = SchedCtx { loads: &loads, rng };
+                let mut ctx = SchedCtx::new(&loads, rng);
                 let w = s.select(f, &mut ctx);
                 if any_under {
                     prop_assert!(

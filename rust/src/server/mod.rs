@@ -225,7 +225,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 let rid = arrival.len() as u64;
                 policy.on_arrival(f, start.elapsed().as_secs_f64());
                 let w = {
-                    let mut ctx = SchedCtx { loads: &loads[..active], rng: &mut sched_rng };
+                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
                     scheduler.select(f, &mut ctx)
                 };
                 loads[w] += 1;
@@ -268,7 +268,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 // Drained workers (beyond the active boundary) must not
                 // re-advertise idle capacity.
                 if r.worker < active {
-                    let mut ctx = SchedCtx { loads: &loads[..active], rng: &mut sched_rng };
+                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
                     scheduler.on_complete(r.worker, r.function, &mut ctx);
                 }
                 let rid = r.rid as usize;

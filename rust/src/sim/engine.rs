@@ -21,13 +21,32 @@
 //! - **open-loop trace replay** (`run_open_loop`): arrivals from a
 //!   synthetic Azure-like trace instead of closed-loop VUs (burst
 //!   response, Fig 6 tie-in).
+//!
+//! ## Hot-path architecture (the event-core overhaul)
+//!
+//! The engine is built for 10k–100k-worker simulations:
+//! - events live in a calendar queue ([`EventQueue`], amortized O(1)
+//!   push/pop) instead of a binary heap;
+//! - the control ticks (`on_autoscale_tick`, `on_prewarm_tick`) read the
+//!   cluster's incrementally maintained aggregates (O(functions)) instead
+//!   of scanning O(workers × functions) state;
+//! - `spawn_prewarm` and the schedulers' least-loaded decisions use
+//!   incremental min-load indices (O(tie set)) instead of O(workers)
+//!   scans.
+//!
+//! Each replacement is *bit-identical* to the scan it replaces. With the
+//! `ref-heap` feature (default) the seed paths are kept alive behind
+//! [`Simulation::with_reference_core`], and `tests/determinism.rs` asserts
+//! run-for-run equivalence across schedulers, modes, autoscale policies
+//! and seeds; `benches/sim_engine_perf.rs` measures the before/after.
 
 use super::events::{Event, EventQueue};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
 use crate::config::Config;
 use crate::metrics::RunMetrics;
-use crate::platform::{AssignOutcome, Cluster, StartInfo, Worker, WorkerId};
+use crate::platform::{AssignOutcome, Cluster, StartInfo, WorkerId};
 use crate::scheduler::{SchedCtx, Scheduler};
+use crate::util::loadidx::MinLoadIndex;
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
 use crate::workload::spec::FunctionRegistry;
@@ -56,7 +75,9 @@ pub struct Simulation<'a> {
     queue: EventQueue,
     /// Per-instance router-side active connections (local load views —
     /// instances do not synchronize, per the paper's distributed design).
-    loads: Vec<Vec<u32>>,
+    /// Each view is a min-load index: the counts vector plus the bucket
+    /// structure behind the O(tie set) least-loaded queries.
+    loads: Vec<MinLoadIndex>,
     sched_rng: Pcg64,
     service_rng: Pcg64,
     /// (time, up) auto-scaling events; up=false drains the highest worker.
@@ -68,17 +89,20 @@ pub struct Simulation<'a> {
     tick_dt: f64,
     /// Per-function mean warm execution time (autoscale observation).
     mean_exec_s: Vec<f64>,
-    /// Workers currently eligible for selection (scale-down shrinks this;
-    /// drained workers still exist in the cluster to finish in-flight work).
-    active_workers: usize,
     requests: Vec<RequestMeta>,
     /// EWMA arrival rate per function (req/s), for the pre-warm policy.
     arrival_rate: Vec<f64>,
     last_arrival: Vec<f64>,
     /// Cold-start flag per request, resolved when its execution starts.
+    /// Grows in lockstep with `requests` (pushed at issue time).
     cold_flags: Vec<bool>,
-    /// Worker-queue delay per request.
+    /// Worker-queue delay per request (same lockstep).
     queue_delays: Vec<f64>,
+    /// Scratch for the per-tick warm-supply observation (O(functions)).
+    warm_scratch: Vec<usize>,
+    /// Reference mode: seed event core + seed O(workers) scan paths, for
+    /// the equivalence suite and before/after benchmarks.
+    reference: bool,
     metrics: RunMetrics,
 }
 
@@ -106,6 +130,9 @@ impl<'a> Simulation<'a> {
         let service_rng = root.split();
         let name = schedulers[0].name().to_string();
         let n = schedulers.len();
+        // Pre-size per-request tables to the scripted upper bound:
+        // avoids realloc + page-fault churn in the hot loop (§Perf).
+        let cap = workload.total_steps().min(4_000_000);
         Self {
             cfg,
             registry,
@@ -113,21 +140,20 @@ impl<'a> Simulation<'a> {
             schedulers,
             cluster: Cluster::new(&cfg.cluster),
             queue: EventQueue::new(),
-            loads: vec![vec![0; cfg.cluster.workers]; n],
+            loads: (0..n).map(|_| MinLoadIndex::new(cfg.cluster.workers)).collect(),
             sched_rng,
             service_rng,
             scale_events: Vec::new(),
             autoscaler: None,
             tick_dt: cfg.autoscale.interval_s,
             mean_exec_s: (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect(),
-            active_workers: cfg.cluster.workers,
-            // Pre-size per-request tables to the scripted upper bound:
-            // avoids realloc + page-fault churn in the hot loop (§Perf).
-            requests: Vec::with_capacity(workload.total_steps().min(4_000_000)),
+            requests: Vec::with_capacity(cap),
             arrival_rate: vec![0.0; registry.len()],
             last_arrival: vec![-1.0; registry.len()],
-            cold_flags: Vec::new(),
-            queue_delays: Vec::new(),
+            cold_flags: Vec::with_capacity(cap),
+            queue_delays: Vec::with_capacity(cap),
+            warm_scratch: vec![0; registry.len()],
+            reference: false,
             metrics: RunMetrics::new(
                 &name,
                 cfg.cluster.workers,
@@ -163,6 +189,17 @@ impl<'a> Simulation<'a> {
         Ok(self)
     }
 
+    /// Run on the seed implementation: `BinaryHeap` event core plus the
+    /// original O(workers)/O(workers × functions) scan paths. Exists to
+    /// prove the optimized engine bit-identical (`tests/determinism.rs`)
+    /// and to measure the before/after (`benches/sim_engine_perf.rs`).
+    #[cfg(feature = "ref-heap")]
+    pub fn with_reference_core(mut self) -> Self {
+        self.reference = true;
+        self.queue = EventQueue::reference();
+        self
+    }
+
     /// Pre-schedule the autoscaler's exact-time events and, for
     /// tick-driven policies, the first control tick.
     fn install_autoscaler_events(&mut self) {
@@ -183,11 +220,13 @@ impl<'a> Simulation<'a> {
         let totals = self.cluster.totals();
         self.metrics.prewarm_spawned = totals.prewarm_spawned;
         self.metrics.prewarm_hits = totals.prewarm_hits;
+        self.metrics.events_processed = self.queue.popped();
+        self.metrics.peak_event_queue = self.queue.peak_len();
     }
 
     /// Run the closed-loop VU workload to completion.
     pub fn run(mut self) -> RunMetrics {
-        self.metrics.record_scale(0.0, self.active_workers);
+        self.metrics.record_scale(0.0, self.cluster.active_workers());
         self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
             self.queue.push_at(t, Event::Scale { up });
@@ -212,7 +251,7 @@ impl<'a> Simulation<'a> {
     /// Run an open-loop trace: arrivals at fixed timestamps, ignoring
     /// completions (burst-response experiments).
     pub fn run_open_loop(mut self, trace: &OpenLoopTrace) -> RunMetrics {
-        self.metrics.record_scale(0.0, self.active_workers);
+        self.metrics.record_scale(0.0, self.cluster.active_workers());
         self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
             self.queue.push_at(t, Event::Scale { up });
@@ -255,9 +294,7 @@ impl<'a> Simulation<'a> {
             Event::KeepAlive { worker, sandbox, epoch } => {
                 // Precise per-sandbox expiry (unused by the default sweep
                 // mode, kept for API completeness).
-                if let Some(f) =
-                    self.cluster.worker_mut(worker).expire_keepalive(sandbox, epoch)
-                {
+                if let Some(f) = self.cluster.expire_keepalive(worker, sandbox, epoch) {
                     self.notify_evict(worker, f);
                 }
             }
@@ -273,7 +310,7 @@ impl<'a> Simulation<'a> {
     fn on_sweep(&mut self, t: f64) {
         let cutoff = t - self.cfg.cluster.keep_alive_s;
         for w in 0..self.cluster.len() {
-            let evicted = self.cluster.worker_mut(w).sweep_keepalive(cutoff);
+            let evicted = self.cluster.sweep_keepalive(w, cutoff);
             for f in evicted {
                 self.notify_evict(w, f);
             }
@@ -285,54 +322,62 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    /// Keep the cluster's and every instance load view's active set in
+    /// lockstep (they must agree for the index-backed paths to be exact).
+    fn set_active(&mut self, n: usize) {
+        self.cluster.set_active(n);
+        for view in &mut self.loads {
+            view.set_active(n);
+        }
+    }
+
     /// A worker joins or drains out of the cluster (auto-scaling).
     fn on_scale(&mut self, up: bool) {
+        let active = self.cluster.active_workers();
         crate::log_debug!(
             "sim",
             "scale {} at t={:.1}s (active {})",
             if up { "up" } else { "down" },
             self.queue.now(),
-            self.active_workers
+            active
         );
         if up {
-            if self.active_workers < self.cluster.len() {
+            if active < self.cluster.len() {
                 // Re-activate a previously drained worker slot.
-                let id = self.active_workers;
-                self.active_workers += 1;
+                let id = active;
+                self.set_active(active + 1);
                 for s in &mut self.schedulers {
                     s.on_worker_added(id);
                 }
-                self.metrics.record_scale(self.queue.now(), self.active_workers);
+                self.metrics.record_scale(self.queue.now(), self.cluster.active_workers());
                 return;
             }
-            let id = self.cluster.len();
-            self.cluster
-                .workers
-                .push(Worker::new(id, self.cfg.cluster.mem_mb, self.cfg.cluster.concurrency));
-            for loads in &mut self.loads {
-                loads.push(0);
+            let id =
+                self.cluster.push_worker(self.cfg.cluster.mem_mb, self.cfg.cluster.concurrency);
+            for view in &mut self.loads {
+                view.add_worker();
             }
-            self.active_workers += 1;
+            self.set_active(active + 1);
             self.metrics.imbalance.add_worker();
             for s in &mut self.schedulers {
                 s.on_worker_added(id);
             }
         } else {
-            if self.active_workers <= 1 {
+            if active <= 1 {
                 return; // never drain the last worker
             }
-            self.active_workers -= 1;
-            let id = self.active_workers;
+            let id = active - 1;
+            self.set_active(id);
             for s in &mut self.schedulers {
                 s.on_worker_removed(id);
             }
             // Reclaim the drained worker's idle sandboxes immediately.
-            let evicted = self.cluster.worker_mut(id).drain_idle();
+            let evicted = self.cluster.drain_idle(id);
             for f in evicted {
                 self.notify_evict(id, f);
             }
         }
-        self.metrics.record_scale(self.queue.now(), self.active_workers);
+        self.metrics.record_scale(self.queue.now(), self.cluster.active_workers());
     }
 
     /// Autoscale control tick: snapshot the active cluster, ask the policy,
@@ -340,25 +385,36 @@ impl<'a> Simulation<'a> {
     /// deterministic under (config, seed): the observation derives from
     /// simulator state and the only randomness (pre-warm init sampling)
     /// comes from the dedicated service-time stream.
+    ///
+    /// The observation is read from the cluster's incremental aggregates
+    /// (O(functions)); reference mode recomputes it with the seed's
+    /// O(workers × functions) scan, and the two are bit-identical.
     fn on_autoscale_tick(&mut self, t: f64) {
         let decision = {
             let Some(policy) = self.autoscaler.as_mut() else { return };
-            let mut warm_supply = vec![0usize; self.registry.len()];
-            let mut total_running = 0usize;
-            let mut total_queued = 0usize;
-            for w in 0..self.active_workers {
-                let wk = self.cluster.worker(w);
-                wk.warm_counts_into(&mut warm_supply);
-                total_running += wk.running();
-                total_queued += wk.queue_len();
-            }
+            let active = self.cluster.active_workers();
+            let (total_running, total_queued) = if self.reference {
+                self.warm_scratch.fill(0);
+                let mut running = 0usize;
+                let mut queued = 0usize;
+                for w in 0..active {
+                    let wk = self.cluster.worker(w);
+                    wk.warm_counts_into(&mut self.warm_scratch);
+                    running += wk.running();
+                    queued += wk.queue_len();
+                }
+                (running, queued)
+            } else {
+                self.cluster.warm_supply_into(&mut self.warm_scratch);
+                (self.cluster.total_running(), self.cluster.total_queued())
+            };
             let obs = AutoscaleObs {
                 now: t,
-                active_workers: self.active_workers,
+                active_workers: active,
                 concurrency: self.cfg.cluster.concurrency,
                 total_running,
                 total_queued,
-                warm_supply: &warm_supply,
+                warm_supply: &self.warm_scratch,
                 mean_exec_s: &self.mean_exec_s,
             };
             policy.tick(&obs)
@@ -369,15 +425,15 @@ impl<'a> Simulation<'a> {
                 "autoscale",
                 "t={t:.1}s target {} (active {})",
                 target,
-                self.active_workers
+                self.cluster.active_workers()
             );
-            while self.active_workers < target {
+            while self.cluster.active_workers() < target {
                 self.on_scale(true);
             }
-            while self.active_workers > target {
-                let before = self.active_workers;
+            while self.cluster.active_workers() > target {
+                let before = self.cluster.active_workers();
                 self.on_scale(false);
-                if self.active_workers == before {
+                if self.cluster.active_workers() == before {
                     break; // the last worker never drains
                 }
             }
@@ -394,15 +450,20 @@ impl<'a> Simulation<'a> {
 
     /// Speculatively initialize up to `n` sandboxes for `f` on the
     /// least-loaded active workers with free memory (never evicts).
+    /// Placement comes from the cluster's min-load index (O(tie set));
+    /// reference mode keeps the seed's O(workers) scan — identical picks.
     fn spawn_prewarm(&mut self, f: usize, n: usize, t: f64) {
         let mem = self.registry.mem_mb(f);
         for _ in 0..n {
-            // Least-loaded active worker that can fit without eviction.
-            let target = (0..self.active_workers)
-                .filter(|&w| self.cluster.worker(w).mem_free_mb() >= mem)
-                .min_by_key(|&w| self.cluster.worker(w).load());
+            let target = if self.reference {
+                (0..self.cluster.active_workers())
+                    .filter(|&w| self.cluster.worker(w).mem_free_mb() >= mem)
+                    .min_by_key(|&w| self.cluster.worker(w).load())
+            } else {
+                self.cluster.least_loaded_fitting(mem)
+            };
             let Some(w) = target else { return };
-            if let Some(sb) = self.cluster.worker_mut(w).prewarm(f, mem, t) {
+            if let Some(sb) = self.cluster.prewarm(w, f, mem, t) {
                 let init = self.registry.sample_init_s(f, &mut self.service_rng);
                 self.queue.push_at(t + init, Event::PreWarmDone { worker: w, sandbox: sb });
             }
@@ -447,6 +508,9 @@ impl<'a> Simulation<'a> {
     /// concurrent demand (rate x mean warm service time) and speculatively
     /// initialize sandboxes to cover any deficit vs. the warm supply, on
     /// the least-loaded workers with free memory. Cf. Kim & Roh [24].
+    /// The supply term reads the cluster's per-function warm aggregate
+    /// (O(1) per function); reference mode keeps the seed's O(workers)
+    /// recount per function.
     fn on_prewarm_tick(&mut self, t: f64) {
         for f in 0..self.registry.len() {
             let rate = self.arrival_rate[f];
@@ -455,12 +519,16 @@ impl<'a> Simulation<'a> {
             }
             let mean_exec = self.registry.app(f).warm_ms / 1000.0;
             let demand = (rate * mean_exec).ceil() as usize;
-            let supply: usize = (0..self.active_workers)
-                .map(|w| {
-                    let wk = self.cluster.worker(w);
-                    wk.idle_count(f) + wk.initializing_count(f)
-                })
-                .sum();
+            let supply: usize = if self.reference {
+                (0..self.cluster.active_workers())
+                    .map(|w| {
+                        let wk = self.cluster.worker(w);
+                        wk.idle_count(f) + wk.initializing_count(f)
+                    })
+                    .sum()
+            } else {
+                self.cluster.warm_nonbusy(f)
+            };
             let deficit = demand.saturating_sub(supply).min(2); // <= 2/tick/function
             self.spawn_prewarm(f, deficit, t);
         }
@@ -472,11 +540,13 @@ impl<'a> Simulation<'a> {
     /// A speculative sandbox finished initializing: it becomes idle, is
     /// advertised to a scheduler instance, and starts its keep-alive.
     fn on_prewarm_done(&mut self, w: WorkerId, sandbox: u64, t: f64) {
-        if let Some((f, epoch)) = self.cluster.worker_mut(w).finish_prewarm(sandbox, t) {
-            if w < self.active_workers {
+        if let Some((f, epoch)) = self.cluster.finish_prewarm(w, sandbox, t) {
+            let active = self.cluster.active_workers();
+            if w < active {
                 let si = f % self.schedulers.len();
                 let mut ctx = SchedCtx {
-                    loads: &self.loads[si][..self.active_workers],
+                    loads: &self.loads[si].loads()[..active],
+                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
                     rng: &mut self.sched_rng,
                 };
                 self.schedulers[si].on_complete(w, f, &mut ctx);
@@ -495,27 +565,34 @@ impl<'a> Simulation<'a> {
         if let Some(p) = self.autoscaler.as_mut() {
             p.on_arrival(f, t);
         }
-        let si = if vu == usize::MAX { step % self.schedulers.len() } else { vu % self.schedulers.len() };
+        let si =
+            if vu == usize::MAX { step % self.schedulers.len() } else { vu % self.schedulers.len() };
+        let active = self.cluster.active_workers();
 
         // --- the scheduling decision (Algorithm 1 entry point) ---
         let w = {
             let mut ctx = SchedCtx {
-                loads: &self.loads[si][..self.active_workers],
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
             };
             self.schedulers[si].select(f, &mut ctx)
         };
-        debug_assert!(w < self.active_workers, "scheduler picked drained worker {w}");
-        self.loads[si][w] += 1;
+        debug_assert!(w < active, "scheduler picked drained worker {w}");
+        self.loads[si].inc(w);
         self.metrics.record_assignment(w, t);
         self.requests.push(RequestMeta { vu, step, function: f, worker: w, sched: si, arrival: t });
+        // Per-request tables grow in lockstep with `requests` so
+        // handle_start never resizes on the hot path.
+        self.cold_flags.push(false);
+        self.queue_delays.push(0.0);
 
         let mem = self.registry.mem_mb(f);
         if self.cfg.cluster.elastic {
-            let info = self.cluster.worker_mut(w).assign_elastic(rid, f, mem, t);
+            let info = self.cluster.assign_elastic(w, rid, f, mem, t);
             self.handle_start(w, info, t);
         } else {
-            match self.cluster.worker_mut(w).assign(rid, f, mem, t) {
+            match self.cluster.assign(w, rid, f, mem, t) {
                 AssignOutcome::Started(info) => self.handle_start(w, info, t),
                 AssignOutcome::Queued => {}
             }
@@ -525,7 +602,7 @@ impl<'a> Simulation<'a> {
     /// An execution actually starts on `w`: sample its service time,
     /// schedule completion, and deliver eviction notifications.
     fn handle_start(&mut self, w: WorkerId, info: StartInfo, t: f64) {
-        for f in info.evicted.clone() {
+        for &f in &info.evicted {
             self.notify_evict(w, f);
         }
         let meta = self.requests[info.request_id as usize];
@@ -545,9 +622,7 @@ impl<'a> Simulation<'a> {
             dur *= congestion;
         }
         // Cold/warm and queue delay resolved at start time, kept per rid.
-        self.cold_flags.resize(self.requests.len(), false);
         self.cold_flags[info.request_id as usize] = info.cold;
-        self.queue_delays.resize(self.requests.len(), 0.0);
         self.queue_delays[info.request_id as usize] = info.queue_delay_s;
         self.queue.push_at(
             t + dur,
@@ -558,20 +633,19 @@ impl<'a> Simulation<'a> {
     fn on_completion(&mut self, w: WorkerId, sandbox: u64, rid: u64, t: f64) {
         let meta = self.requests[rid as usize];
         debug_assert_eq!(meta.worker, w);
-        self.loads[meta.sched][w] -= 1;
+        self.loads[meta.sched].dec(w);
 
         // Worker-side: sandbox idles; (queue mode) a queued request may
         // start; (elastic mode) the idle pool is trimmed to capacity.
-        let (expiry, started, evicted) = if self.cfg.cluster.elastic {
-            let (expiry, evicted) = self.cluster.worker_mut(w).complete_elastic(sandbox, t);
-            (expiry, None, evicted)
+        let (expiry, started) = if self.cfg.cluster.elastic {
+            let (expiry, evicted) = self.cluster.complete_elastic(w, sandbox, t);
+            for f in evicted {
+                self.notify_evict(w, f);
+            }
+            (expiry, None)
         } else {
-            let (expiry, started) = self.cluster.worker_mut(w).complete(sandbox, t);
-            (expiry, started, Vec::new())
+            self.cluster.complete(w, sandbox, t)
         };
-        for f in evicted {
-            self.notify_evict(w, f);
-        }
 
         // Pull mechanism: the worker enqueues in PQ_f only if its instance
         // is actually idle after completion (if it was immediately reused
@@ -579,20 +653,20 @@ impl<'a> Simulation<'a> {
         // goes to the scheduler instance that served the request — the
         // distributed-JIQ reporting rule [21].
         if let Some((sb, epoch)) = expiry {
-            if w < self.active_workers {
+            let active = self.cluster.active_workers();
+            if w < active {
                 let si = meta.sched;
                 let mut ctx = SchedCtx {
-                    loads: &self.loads[si][..self.active_workers],
+                    loads: &self.loads[si].loads()[..active],
+                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
                     rng: &mut self.sched_rng,
                 };
                 self.schedulers[si].on_complete(w, meta.function, &mut ctx);
                 // Keep-alive expiry handled by the periodic SweepTick.
-            } else {
+            } else if let Some(f) = self.cluster.expire_keepalive(w, sb, epoch) {
                 // Drained worker: reclaim the sandbox instead of
                 // advertising it.
-                if let Some(f) = self.cluster.worker_mut(w).expire_keepalive(sb, epoch) {
-                    self.notify_evict(w, f);
-                }
+                self.notify_evict(w, f);
             }
         }
 
@@ -659,6 +733,17 @@ pub fn run_once(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
     Ok(sim.run())
 }
 
+/// `run_once` on the seed event core + seed scan paths (the equivalence
+/// suite's "before"; see [`Simulation::with_reference_core`]).
+#[cfg(feature = "ref-heap")]
+pub fn run_once_reference(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
+    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_config_autoscaler()?
+        .with_reference_core();
+    Ok(sim.run())
+}
+
 /// Deprecated shim over the `scheduled` autoscale policy: mixed scale
 /// events (time, up); up=false drains the highest-id worker (LIFO).
 /// Prefer `cfg.autoscale.policy = "scheduled"` + `cfg.autoscale.events`.
@@ -691,5 +776,19 @@ pub fn run_trace(cfg: &Config, trace: &OpenLoopTrace, seed: u64) -> Result<RunMe
     let (registry, workload, schedulers) = build_parts(cfg, seed, Some(1))?;
     let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
         .with_config_autoscaler()?;
+    Ok(sim.run_open_loop(trace))
+}
+
+/// `run_trace` on the reference core (see [`Simulation::with_reference_core`]).
+#[cfg(feature = "ref-heap")]
+pub fn run_trace_reference(
+    cfg: &Config,
+    trace: &OpenLoopTrace,
+    seed: u64,
+) -> Result<RunMetrics, String> {
+    let (registry, workload, schedulers) = build_parts(cfg, seed, Some(1))?;
+    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
+        .with_config_autoscaler()?
+        .with_reference_core();
     Ok(sim.run_open_loop(trace))
 }

@@ -1,8 +1,51 @@
-//! Discrete-event queue: a binary heap over (time, seq) with deterministic
-//! FIFO tie-breaking — two events at the same timestamp fire in insertion
-//! order, which makes whole simulations bit-reproducible under a seed.
+//! Discrete-event queue with deterministic FIFO tie-breaking — two events
+//! at the same timestamp fire in insertion order, which makes whole
+//! simulations bit-reproducible under a seed.
+//!
+//! ## Event core: calendar queue
+//!
+//! The seed implementation was a `BinaryHeap` over `(time, seq)`. At
+//! production scale (10k–100k workers) the heap holds hundreds of
+//! thousands of pending events and every push/pop walks ~log n cache-cold
+//! levels — `sim_engine_perf` showed it dominating the hot loop. The
+//! replacement is a classic calendar queue (R. Brown, CACM 1988): events
+//! hash into `nbuckets` time buckets of width `width` seconds, pops scan
+//! one "year" (a rotation of the bucket ring) from the current clock, and
+//! the structure resizes itself (bucket count from occupancy, width from
+//! the observed event-time span) so push and pop are amortized O(1).
+//!
+//! ## Determinism argument
+//!
+//! Pop order must be *exactly* ascending `(time, seq)` — not just
+//! approximately time-sorted — or simulations stop being bit-reproducible.
+//! The calendar queue guarantees this structurally:
+//!
+//! 1. Every entry stores `key = time.to_bits()`. Times are finite and
+//!    non-negative (asserted on push), so IEEE-754 bit patterns order
+//!    exactly like the times themselves and `(key, seq)` is a total order
+//!    with no float comparisons.
+//! 2. Every entry stores its virtual bucket number `vb = ⌊t/width⌋`,
+//!    computed once at insertion (and recomputed on resize) with the same
+//!    `t * inv_width` expression the pop scan uses. Since `t ↦ vb` is
+//!    monotone (IEEE multiplication and truncation are monotone), entries
+//!    in *earlier* lap positions can never have *later* times.
+//! 3. A pop scans bucket positions `vb = ⌊now/width⌋, …` upward; within a
+//!    bucket it takes the minimum `(key, seq)` entry and pops it only if
+//!    its stored `vb` is due (`entry.vb <= vb`). If the minimum entry of a
+//!    bucket is not due, no entry of that bucket is (monotonicity again),
+//!    so skipping the bucket is exact. Events with equal times always land
+//!    in the same bucket (same `t` ⇒ same `vb`), where the `seq` component
+//!    breaks the tie FIFO.
+//! 4. If a full rotation finds nothing due (all events more than one
+//!    "year" ahead), a direct search returns the global `(key, seq)`
+//!    minimum.
+//!
+//! The seed heap is kept behind the `ref-heap` feature (on by default) as
+//! [`EventQueue::reference`]; `tests/determinism.rs` proves whole-run
+//! bit-equivalence and the property tests below prove pop-order
+//! equivalence under randomized interleavings.
 
-use std::cmp::Ordering;
+#[cfg(feature = "ref-heap")]
 use std::collections::BinaryHeap;
 
 use crate::platform::SandboxId;
@@ -33,48 +76,241 @@ pub enum Event {
     PreWarmDone { worker: WorkerId, sandbox: SandboxId },
 }
 
+/// One scheduled event. `key` is the event time's IEEE bit pattern (times
+/// are finite and >= 0, so `u64` ordering == time ordering); `vb` is the
+/// virtual bucket number under the calendar's current width (unused by the
+/// reference heap).
 #[derive(Clone, Copy, Debug)]
-struct HeapEntry {
-    time: f64,
+struct Entry {
+    key: u64,
+    vb: u64,
     seq: u64,
     event: Event,
 }
 
-impl PartialEq for HeapEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+impl Entry {
+    #[inline]
+    fn time(&self) -> f64 {
+        f64::from_bits(self.key)
     }
 }
-impl Eq for HeapEntry {}
 
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for a min-heap on (time, seq). Times are finite by
-        // construction (asserted on push).
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap()
-            .then_with(|| other.seq.cmp(&self.seq))
+#[cfg(feature = "ref-heap")]
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
     }
 }
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+#[cfg(feature = "ref-heap")]
+impl Eq for Entry {}
+
+#[cfg(feature = "ref-heap")]
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed (key, seq) so BinaryHeap pops the minimum — the seed
+        // heap's exact ordering.
+        other.key.cmp(&self.key).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+#[cfg(feature = "ref-heap")]
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// Min-heap event queue with a virtual clock.
-#[derive(Debug, Default)]
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 21;
+const MIN_WIDTH: f64 = 1e-9;
+
+/// The calendar (bucket ring). Buckets are unsorted `Vec`s: with the
+/// occupancy the resize policy maintains (~0.5–2 entries/bucket), a linear
+/// min-scan of a tiny contiguous bucket beats any per-bucket ordering
+/// structure.
+#[derive(Debug)]
+struct Calendar {
+    buckets: Vec<Vec<Entry>>,
+    /// `buckets.len() - 1`; bucket count is a power of two.
+    mask: usize,
+    /// Bucket width in (virtual) seconds.
+    width: f64,
+    inv_width: f64,
+    count: usize,
+}
+
+impl Calendar {
+    fn new() -> Self {
+        Self {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: MIN_BUCKETS - 1,
+            width: 1.0,
+            inv_width: 1.0,
+            count: 0,
+        }
+    }
+
+    #[inline]
+    fn vb_of(&self, t: f64) -> u64 {
+        // Non-negative finite t: the cast truncates toward zero == floor.
+        (t * self.inv_width) as u64
+    }
+
+    fn push(&mut self, key: u64, seq: u64, event: Event) {
+        let vb = self.vb_of(f64::from_bits(key));
+        let idx = (vb as usize) & self.mask;
+        self.buckets[idx].push(Entry { key, vb, seq, event });
+        self.count += 1;
+        if self.count > 2 * (self.mask + 1) && self.mask + 1 < MAX_BUCKETS {
+            self.rebuild();
+        }
+    }
+
+    /// Index of the minimum `(key, seq)` entry in a non-empty bucket.
+    fn min_pos(bucket: &[Entry]) -> usize {
+        let mut mi = 0;
+        for (i, e) in bucket.iter().enumerate().skip(1) {
+            if (e.key, e.seq) < (bucket[mi].key, bucket[mi].seq) {
+                mi = i;
+            }
+        }
+        mi
+    }
+
+    /// Remove and return the globally minimum `(key, seq)` entry.
+    /// `now` is the queue clock (all entries are at or after it).
+    fn pop(&mut self, now: f64) -> Entry {
+        debug_assert!(self.count > 0);
+        let nbuckets = self.mask + 1;
+        let start_vb = self.vb_of(now);
+        for k in 0..nbuckets {
+            let vb = start_vb + k as u64;
+            let idx = (vb as usize) & self.mask;
+            if self.buckets[idx].is_empty() {
+                continue;
+            }
+            let mi = Self::min_pos(&self.buckets[idx]);
+            if self.buckets[idx][mi].vb <= vb {
+                let e = self.buckets[idx].swap_remove(mi);
+                self.count -= 1;
+                self.maybe_shrink();
+                return e;
+            }
+            // The bucket's minimum is beyond this rotation; by vb
+            // monotonicity so is everything else in it.
+        }
+        // Nothing due within one full rotation: the next event is more
+        // than a "year" ahead. Direct search for the global minimum (the
+        // shrink policy keeps this path rare).
+        let mut best: Option<(usize, usize)> = None;
+        let mut best_key = (u64::MAX, u64::MAX);
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                if (e.key, e.seq) < best_key {
+                    best_key = (e.key, e.seq);
+                    best = Some((bi, i));
+                }
+            }
+        }
+        let (bi, i) = best.expect("count > 0 but no entry found");
+        let e = self.buckets[bi].swap_remove(i);
+        self.count -= 1;
+        self.maybe_shrink();
+        e
+    }
+
+    fn maybe_shrink(&mut self) {
+        if self.mask + 1 > MIN_BUCKETS && self.count * 8 < self.mask + 1 {
+            self.rebuild();
+        }
+    }
+
+    /// Re-derive bucket count from occupancy and width from the observed
+    /// event-time span, then redistribute. Deterministic: geometry is a
+    /// pure function of current contents.
+    fn rebuild(&mut self) {
+        let mut entries: Vec<Entry> = Vec::with_capacity(self.count);
+        for bucket in &mut self.buckets {
+            entries.append(bucket);
+        }
+        debug_assert_eq!(entries.len(), self.count);
+        let target = (self.count.max(1) * 2).next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        if self.count >= 2 {
+            let mut min_key = u64::MAX;
+            let mut max_key = 0u64;
+            for e in &entries {
+                min_key = min_key.min(e.key);
+                max_key = max_key.max(e.key);
+            }
+            let span = f64::from_bits(max_key) - f64::from_bits(min_key);
+            if span > 0.0 {
+                // Aim for ~0.5 events per bucket across the occupied span.
+                self.width = (span / self.count as f64 * 2.0).max(MIN_WIDTH);
+            }
+        }
+        self.inv_width = 1.0 / self.width;
+        if self.buckets.len() != target {
+            self.buckets = (0..target).map(|_| Vec::new()).collect();
+        }
+        self.mask = target - 1;
+        for e in entries {
+            let vb = self.vb_of(e.time());
+            let idx = (vb as usize) & self.mask;
+            self.buckets[idx].push(Entry { vb, ..e });
+        }
+    }
+}
+
+/// Storage backend: the calendar queue, or (reference builds) the seed's
+/// binary heap for bit-equivalence testing and before/after benchmarks.
+#[derive(Debug)]
+enum Store {
+    Calendar(Calendar),
+    #[cfg(feature = "ref-heap")]
+    Heap(BinaryHeap<Entry>),
+}
+
+/// Min event queue with a virtual clock, FIFO at equal timestamps.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<HeapEntry>,
+    store: Store,
     seq: u64,
     now: f64,
+    len: usize,
+    peak_len: usize,
+    popped: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
+    /// The production event core (calendar queue).
     pub fn new() -> Self {
-        Default::default()
+        Self {
+            store: Store::Calendar(Calendar::new()),
+            seq: 0,
+            now: 0.0,
+            len: 0,
+            peak_len: 0,
+            popped: 0,
+        }
+    }
+
+    /// The seed `BinaryHeap` event core, kept as the bit-exact reference
+    /// implementation for the equivalence suite and the perf sweep.
+    #[cfg(feature = "ref-heap")]
+    pub fn reference() -> Self {
+        Self {
+            store: Store::Heap(BinaryHeap::new()),
+            seq: 0,
+            now: 0.0,
+            len: 0,
+            peak_len: 0,
+            popped: 0,
+        }
     }
 
     pub fn now(&self) -> f64 {
@@ -82,19 +318,41 @@ impl EventQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
-    /// Schedule `event` at absolute time `t` (must be >= now and finite).
+    /// High-water mark of pending events (perf diagnostics).
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Total events popped so far (the bench's events/s numerator).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Schedule `event` at absolute time `t` (must be >= now, finite and
+    /// non-negative — the bit-pattern ordering relies on it).
     pub fn push_at(&mut self, t: f64, event: Event) {
-        assert!(t.is_finite(), "non-finite event time");
+        assert!(t.is_finite() && t >= 0.0, "non-finite or negative event time");
         debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
-        self.heap.push(HeapEntry { time: t, seq: self.seq, event });
+        // Normalize -0.0 to +0.0: its sign-bit pattern would otherwise
+        // sort as the largest u64 key and break the (key, seq) order.
+        let key = (t + 0.0).to_bits();
+        match &mut self.store {
+            Store::Calendar(c) => c.push(key, self.seq, event),
+            #[cfg(feature = "ref-heap")]
+            Store::Heap(h) => h.push(Entry { key, vb: 0, seq: self.seq, event }),
+        }
         self.seq += 1;
+        self.len += 1;
+        if self.len > self.peak_len {
+            self.peak_len = self.len;
+        }
     }
 
     /// Schedule `event` after a delay from the current clock.
@@ -104,16 +362,28 @@ impl EventQueue {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let e = self.heap.pop()?;
-        debug_assert!(e.time >= self.now);
-        self.now = e.time;
-        Some((e.time, e.event))
+        if self.len == 0 {
+            return None;
+        }
+        let e = match &mut self.store {
+            Store::Calendar(c) => c.pop(self.now),
+            #[cfg(feature = "ref-heap")]
+            Store::Heap(h) => h.pop().expect("len > 0"),
+        };
+        self.len -= 1;
+        self.popped += 1;
+        let t = e.time();
+        debug_assert!(t >= self.now);
+        self.now = t;
+        Some((t, e.event))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
 
     #[test]
     fn time_ordering() {
@@ -159,5 +429,223 @@ mod tests {
     fn rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push_at(f64::NAN, Event::TraceArrival { index: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite or negative")]
+    fn rejects_negative_time() {
+        let mut q = EventQueue::new();
+        q.push_at(-1.0, Event::TraceArrival { index: 0 });
+    }
+
+    #[test]
+    fn negative_zero_sorts_as_zero() {
+        // -0.0 passes the non-negative guard; its sign-bit pattern must
+        // not leak into the key order (it would sort as the largest u64).
+        let mut q = EventQueue::new();
+        q.push_at(-0.0, Event::TraceArrival { index: 0 });
+        q.push_at(1.0, Event::TraceArrival { index: 1 });
+        let (t0, e0) = q.pop().unwrap();
+        assert_eq!(t0, 0.0);
+        assert_eq!(e0, Event::TraceArrival { index: 0 });
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(t1, 1.0);
+    }
+
+    #[test]
+    fn order_survives_rebuilds() {
+        // Push enough events to force several grow rebuilds, interleaved
+        // with exact ties, then drain: order must be (time, seq) exact.
+        let mut q = EventQueue::new();
+        let mut expect: Vec<usize> = Vec::new();
+        let mut idx = 0usize;
+        for group in 0..200 {
+            let t = group as f64 * 0.37;
+            for _ in 0..5 {
+                q.push_at(t, Event::TraceArrival { index: idx });
+                expect.push(idx);
+                idx += 1;
+            }
+        }
+        assert_eq!(q.len(), 1000);
+        assert_eq!(q.peak_len(), 1000);
+        let got: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|(_, e)| match e {
+            Event::TraceArrival { index } => index,
+            _ => unreachable!(),
+        })
+        .collect();
+        assert_eq!(got, expect);
+        assert_eq!(q.popped(), 1000);
+    }
+
+    #[test]
+    fn sparse_far_future_jump() {
+        // A lone event far beyond one bucket rotation exercises the
+        // direct-search path.
+        let mut q = EventQueue::new();
+        q.push_at(0.5, Event::SweepTick);
+        q.pop();
+        q.push_at(1.0e6, Event::TraceArrival { index: 7 });
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, 1.0e6);
+        assert_eq!(e, Event::TraceArrival { index: 7 });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shrink_after_burst() {
+        // Fill (grow), drain to near-empty (shrink), then keep operating.
+        let mut q = EventQueue::new();
+        for i in 0..5000 {
+            q.push_at(i as f64 * 1e-3, Event::TraceArrival { index: i });
+        }
+        for _ in 0..4990 {
+            q.pop();
+        }
+        assert_eq!(q.len(), 10);
+        q.push_after(0.001, Event::SweepTick);
+        let mut last = q.now();
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    /// Randomized ops against a sorted-Vec model: every pop must return
+    /// the minimum (time, seq) entry — FIFO ties, monotone clock.
+    #[test]
+    fn prop_calendar_matches_sorted_model() {
+        check("calendar-vs-model", PropConfig { cases: 150, ..Default::default() }, |rng, size| {
+            let mut q = EventQueue::new();
+            let mut model: Vec<(u64, u64)> = Vec::new(); // (key, tag=seq)
+            let mut tag = 0u64;
+            for _ in 0..size * 6 {
+                if rng.next_f64() < 0.6 || q.is_empty() {
+                    let delay = match rng.index(4) {
+                        0 => 0.0, // exact tie with the clock
+                        1 => rng.next_f64() * 1e-3,
+                        2 => rng.next_f64() * 10.0,
+                        _ => rng.next_f64() * 1000.0,
+                    };
+                    let t = q.now() + delay;
+                    q.push_at(t, Event::TraceArrival { index: tag as usize });
+                    model.push((t.to_bits(), tag));
+                    tag += 1;
+                } else {
+                    let (t, ev) = q.pop().unwrap();
+                    let (mi, _) = model
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|&(_, &(k, s))| (k, s))
+                        .expect("model empty but queue popped");
+                    let (k, want) = model.swap_remove(mi);
+                    prop_assert!(
+                        t.to_bits() == k,
+                        "popped time {} != model min {}",
+                        t,
+                        f64::from_bits(k)
+                    );
+                    let got = match ev {
+                        Event::TraceArrival { index } => index as u64,
+                        _ => unreachable!(),
+                    };
+                    prop_assert!(got == want, "popped tag {} != model {}", got, want);
+                }
+            }
+            while let Some((_, ev)) = q.pop() {
+                let (mi, _) = model
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &(k, s))| (k, s))
+                    .expect("model drained early");
+                let (_, want) = model.swap_remove(mi);
+                let got = match ev {
+                    Event::TraceArrival { index } => index as u64,
+                    _ => unreachable!(),
+                };
+                prop_assert!(got == want, "drain tag {} != model {}", got, want);
+            }
+            prop_assert!(model.is_empty(), "{} entries left in model", model.len());
+            Ok(())
+        });
+    }
+
+    /// The calendar queue and the reference heap pop identical sequences
+    /// under identical randomized schedules.
+    #[cfg(feature = "ref-heap")]
+    #[test]
+    fn prop_calendar_equals_reference_heap() {
+        check("calendar-vs-heap", PropConfig { cases: 120, ..Default::default() }, |rng, size| {
+            // Pre-draw the op script so both queues see the same schedule.
+            #[derive(Clone, Copy)]
+            enum Op {
+                Push(f64, usize),
+                Pop,
+            }
+            let mut ops = Vec::new();
+            let mut pending = 0usize;
+            let mut tag = 0usize;
+            for _ in 0..size * 6 {
+                if rng.next_f64() < 0.55 || pending == 0 {
+                    let delay = match rng.index(3) {
+                        0 => 0.0,
+                        1 => rng.next_f64() * 0.01,
+                        _ => rng.next_f64() * 50.0,
+                    };
+                    ops.push(Op::Push(delay, tag));
+                    tag += 1;
+                    pending += 1;
+                } else {
+                    ops.push(Op::Pop);
+                    pending -= 1;
+                }
+            }
+            let mut cal = EventQueue::new();
+            let mut heap = EventQueue::reference();
+            for &op in &ops {
+                match op {
+                    Op::Push(delay, tag) => {
+                        cal.push_after(delay, Event::TraceArrival { index: tag });
+                        heap.push_after(delay, Event::TraceArrival { index: tag });
+                    }
+                    Op::Pop => {
+                        let a = cal.pop();
+                        let b = heap.pop();
+                        prop_assert!(a == b, "pop diverged: {:?} vs {:?}", a, b);
+                    }
+                }
+                prop_assert!(
+                    cal.now() == heap.now() && cal.len() == heap.len(),
+                    "state diverged: now {}/{} len {}/{}",
+                    cal.now(),
+                    heap.now(),
+                    cal.len(),
+                    heap.len()
+                );
+            }
+            loop {
+                let a = cal.pop();
+                let b = heap.pop();
+                prop_assert!(a == b, "drain diverged: {:?} vs {:?}", a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Rejects a worst case: all events at one timestamp still drain FIFO.
+    #[test]
+    fn massive_tie_block() {
+        let mut q = EventQueue::new();
+        for i in 0..2000 {
+            q.push_at(42.0, Event::TraceArrival { index: i });
+        }
+        for i in 0..2000 {
+            let (t, e) = q.pop().unwrap();
+            assert_eq!(t, 42.0);
+            assert_eq!(e, Event::TraceArrival { index: i });
+        }
     }
 }

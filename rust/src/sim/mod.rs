@@ -12,6 +12,8 @@ pub mod engine;
 pub mod events;
 
 pub use engine::{run_once, run_scale_events, run_scaled, run_trace, Simulation};
+#[cfg(feature = "ref-heap")]
+pub use engine::{run_once_reference, run_trace_reference};
 pub use events::{Event, EventQueue};
 
 #[cfg(test)]

@@ -1,0 +1,386 @@
+//! Incremental min-load index: a bucket queue over per-worker load values.
+//!
+//! The seed implementation answered "which active worker has the fewest
+//! active connections?" with an O(workers) scan per scheduling decision —
+//! the cost Kaffes et al. identify as the scheduling-core limiter at
+//! cluster scale. This index maintains, incrementally under ±1 load
+//! updates, a bucket per load value holding the *active* workers at that
+//! load (a `BTreeSet`, so members iterate in ascending worker id). Queries
+//! then touch only the tie set at the minimum load instead of the whole
+//! cluster, while reproducing the seed's selection bit-for-bit:
+//!
+//! - [`MinLoadIndex::least_loaded_random_tie`] replays the seed's
+//!   reservoir sampling over the tie set in ascending worker order, so it
+//!   consumes the *identical* RNG stream and returns the identical worker
+//!   as a full-vector scan (`scheduler::least_loaded_random_tie`).
+//! - [`MinLoadIndex::least_loaded_lowest_id`] is JSQ's deterministic
+//!   lowest-id-among-minima rule.
+//! - [`MinLoadIndex::least_loaded_where`] walks buckets upward and returns
+//!   the lowest-id worker passing a fitness predicate in the lowest load
+//!   bucket that has one — exactly `filter(fit).min_by_key(load)` over
+//!   ascending worker ids.
+//!
+//! Workers are split into an *active* prefix `0..active` (eligible for
+//! selection, present in buckets) and a drained suffix (load still
+//! tracked in `load_of`, absent from buckets) — mirroring the engine's
+//! LIFO scale-down. `set_active` moves boundary workers in or out with
+//! their current load, so re-activation restores in-flight load exactly.
+
+use std::cell::Cell;
+use std::collections::BTreeSet;
+
+use super::rng::Pcg64;
+
+/// Bucket queue over worker loads with an active-prefix restriction.
+#[derive(Clone, Debug)]
+pub struct MinLoadIndex {
+    /// Current load per worker (tracked for drained workers too).
+    load_of: Vec<u32>,
+    /// `buckets[l]` = active workers whose load is exactly `l`.
+    buckets: Vec<BTreeSet<usize>>,
+    /// Workers `0..active` are selectable; `active..len` are drained.
+    active: usize,
+    /// Sum of loads over the active prefix (CH-BL's total-inflight input).
+    active_total: u64,
+    /// Lower bound on the lowest non-empty bucket; advanced lazily during
+    /// queries (interior mutability keeps queries `&self`).
+    min_hint: Cell<usize>,
+}
+
+impl MinLoadIndex {
+    /// A fresh index: `n` active workers, all at load 0.
+    pub fn new(n: usize) -> Self {
+        let mut zero = BTreeSet::new();
+        zero.extend(0..n);
+        Self {
+            load_of: vec![0; n],
+            buckets: vec![zero],
+            active: n,
+            active_total: 0,
+            min_hint: Cell::new(0),
+        }
+    }
+
+    /// Total tracked workers (active + drained).
+    pub fn len(&self) -> usize {
+        self.load_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.load_of.is_empty()
+    }
+
+    /// Size of the active (selectable) prefix.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// The full per-worker load vector (slice `[..active]` for the view
+    /// schedulers see).
+    pub fn loads(&self) -> &[u32] {
+        &self.load_of
+    }
+
+    pub fn load(&self, w: usize) -> u32 {
+        self.load_of[w]
+    }
+
+    /// Sum of loads over the active prefix.
+    pub fn total_active_load(&self) -> u64 {
+        self.active_total
+    }
+
+    /// Append a new worker slot at load 0. The worker joins *inactive*;
+    /// activate it with [`MinLoadIndex::set_active`] (the engine's scale-up
+    /// order: create, then activate).
+    pub fn add_worker(&mut self) {
+        self.load_of.push(0);
+    }
+
+    /// Grow or shrink the active prefix to `n` workers, moving boundary
+    /// workers into/out of the buckets with their current load.
+    pub fn set_active(&mut self, n: usize) {
+        assert!(n <= self.load_of.len(), "active {n} > {} workers", self.load_of.len());
+        while self.active < n {
+            let w = self.active;
+            let l = self.load_of[w] as usize;
+            if l >= self.buckets.len() {
+                self.buckets.resize_with(l + 1, BTreeSet::new);
+            }
+            self.buckets[l].insert(w);
+            self.active_total += self.load_of[w] as u64;
+            if l < self.min_hint.get() {
+                self.min_hint.set(l);
+            }
+            self.active += 1;
+        }
+        while self.active > n {
+            let w = self.active - 1;
+            let l = self.load_of[w] as usize;
+            let removed = self.buckets[l].remove(&w);
+            debug_assert!(removed, "active worker {w} missing from bucket {l}");
+            self.active_total -= self.load_of[w] as u64;
+            self.active -= 1;
+        }
+    }
+
+    /// Set worker `w`'s load to `new`, relocating it between buckets if it
+    /// is active.
+    pub fn set_load(&mut self, w: usize, new: u32) {
+        let old = self.load_of[w];
+        if old == new {
+            return;
+        }
+        self.load_of[w] = new;
+        if w < self.active {
+            let newl = new as usize;
+            if newl >= self.buckets.len() {
+                self.buckets.resize_with(newl + 1, BTreeSet::new);
+            }
+            let removed = self.buckets[old as usize].remove(&w);
+            debug_assert!(removed, "active worker {w} missing from bucket {old}");
+            self.buckets[newl].insert(w);
+            self.active_total = self.active_total + new as u64 - old as u64;
+            if newl < self.min_hint.get() {
+                self.min_hint.set(newl);
+            }
+        }
+    }
+
+    pub fn inc(&mut self, w: usize) {
+        let l = self.load_of[w];
+        self.set_load(w, l + 1);
+    }
+
+    pub fn dec(&mut self, w: usize) {
+        let l = self.load_of[w];
+        debug_assert!(l > 0, "decrementing idle worker {w}");
+        self.set_load(w, l - 1);
+    }
+
+    /// Lowest load value held by an active worker (advances the lazy hint).
+    fn min_nonempty(&self) -> Option<usize> {
+        if self.active == 0 {
+            return None;
+        }
+        let mut l = self.min_hint.get();
+        while l < self.buckets.len() {
+            if !self.buckets[l].is_empty() {
+                self.min_hint.set(l);
+                return Some(l);
+            }
+            l += 1;
+        }
+        unreachable!("active workers exist but every bucket is empty");
+    }
+
+    /// Minimum load among active workers.
+    pub fn min_load(&self) -> Option<u32> {
+        self.min_nonempty().map(|l| l as u32)
+    }
+
+    /// Least-loaded active worker with uniform random tie-breaking.
+    ///
+    /// Bit-identical to `scheduler::least_loaded_random_tie` over
+    /// `loads()[..active]`: the tie set is visited in ascending worker id
+    /// and one `next_bounded(seen)` is drawn per tie, so both the RNG
+    /// stream and the selected worker match the seed scan exactly.
+    pub fn least_loaded_random_tie(&self, rng: &mut Pcg64) -> usize {
+        let l = self.min_nonempty().expect("no active workers");
+        let mut chosen = 0usize;
+        let mut seen = 0u64;
+        for &w in self.buckets[l].iter() {
+            seen += 1;
+            if rng.next_bounded(seen) == 0 {
+                chosen = w;
+            }
+        }
+        chosen
+    }
+
+    /// Least-loaded active worker, lowest id among ties (JSQ's rule).
+    pub fn least_loaded_lowest_id(&self) -> usize {
+        let l = self.min_nonempty().expect("no active workers");
+        *self.buckets[l].iter().next().expect("non-empty min bucket")
+    }
+
+    /// Lowest-id worker passing `fit` in the lowest load bucket that has
+    /// one — identical to `(0..active).filter(fit).min_by_key(load)`
+    /// (`min_by_key` keeps the first minimum, i.e. the lowest id).
+    pub fn least_loaded_where<F: FnMut(usize) -> bool>(&self, mut fit: F) -> Option<usize> {
+        let mut l = self.min_nonempty()?;
+        while l < self.buckets.len() {
+            for &w in self.buckets[l].iter() {
+                if fit(w) {
+                    return Some(w);
+                }
+            }
+            l += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn starts_all_zero() {
+        let idx = MinLoadIndex::new(4);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(idx.active(), 4);
+        assert_eq!(idx.min_load(), Some(0));
+        assert_eq!(idx.total_active_load(), 0);
+        assert_eq!(idx.least_loaded_lowest_id(), 0);
+    }
+
+    #[test]
+    fn inc_dec_moves_buckets() {
+        let mut idx = MinLoadIndex::new(3);
+        idx.inc(0);
+        idx.inc(0);
+        idx.inc(1);
+        assert_eq!(idx.loads(), &[2, 1, 0]);
+        assert_eq!(idx.min_load(), Some(0));
+        assert_eq!(idx.least_loaded_lowest_id(), 2);
+        idx.inc(2);
+        assert_eq!(idx.min_load(), Some(1));
+        assert_eq!(idx.least_loaded_lowest_id(), 1);
+        idx.dec(0);
+        idx.dec(0);
+        assert_eq!(idx.least_loaded_lowest_id(), 0);
+        assert_eq!(idx.total_active_load(), 2);
+    }
+
+    #[test]
+    fn drained_workers_are_unselectable_but_tracked() {
+        let mut idx = MinLoadIndex::new(3);
+        idx.inc(0);
+        idx.inc(2); // worker 2 has in-flight load 1
+        idx.set_active(2); // drain worker 2
+        assert_eq!(idx.active(), 2);
+        assert_eq!(idx.total_active_load(), 1);
+        // Worker 2 never selected even though its load would win later.
+        idx.inc(0);
+        idx.inc(1);
+        idx.inc(1);
+        assert_eq!(idx.least_loaded_lowest_id(), 0);
+        // Its load keeps changing while drained...
+        idx.dec(2);
+        assert_eq!(idx.load(2), 0);
+        // ...and re-activation restores it at the current value.
+        idx.set_active(3);
+        assert_eq!(idx.least_loaded_lowest_id(), 2);
+        assert_eq!(idx.total_active_load(), 5);
+    }
+
+    #[test]
+    fn add_worker_joins_inactive() {
+        let mut idx = MinLoadIndex::new(2);
+        idx.inc(0);
+        idx.inc(1);
+        idx.add_worker();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.active(), 2);
+        assert_eq!(idx.min_load(), Some(1), "inactive worker must not appear in buckets");
+        idx.set_active(3);
+        assert_eq!(idx.least_loaded_lowest_id(), 2);
+    }
+
+    #[test]
+    fn least_loaded_where_skips_unfit() {
+        let mut idx = MinLoadIndex::new(4);
+        idx.inc(0); // loads [1, 0, 0, 0]
+        // Min bucket {1,2,3}; 1 and 2 unfit -> 3.
+        assert_eq!(idx.least_loaded_where(|w| w == 3 || w == 0), Some(3));
+        // Nobody in the min bucket fits -> next bucket up.
+        assert_eq!(idx.least_loaded_where(|w| w == 0), Some(0));
+        assert_eq!(idx.least_loaded_where(|_| false), None);
+    }
+
+    /// Property: against a naive model, every query matches the seed scan
+    /// bit-for-bit — including the RNG stream consumed by tie-breaking.
+    #[test]
+    fn prop_matches_linear_scan() {
+        check("loadidx-vs-scan", PropConfig { cases: 150, ..Default::default() }, |rng, size| {
+            let n = 1 + rng.index(12);
+            let mut idx = MinLoadIndex::new(n);
+            let mut model: Vec<u32> = vec![0; n];
+            let mut active = n;
+            for _ in 0..size * 4 {
+                match rng.index(5) {
+                    0 | 1 => {
+                        let w = rng.index(n);
+                        idx.inc(w);
+                        model[w] += 1;
+                    }
+                    2 => {
+                        let w = rng.index(n);
+                        if model[w] > 0 {
+                            idx.dec(w);
+                            model[w] -= 1;
+                        }
+                    }
+                    3 => {
+                        active = 1 + rng.index(n);
+                        idx.set_active(active);
+                    }
+                    _ => {}
+                }
+                let view = &model[..active];
+                // Total and minimum agree with the slice.
+                let total: u64 = view.iter().map(|&l| l as u64).sum();
+                prop_assert!(
+                    idx.total_active_load() == total,
+                    "total {} != {}",
+                    idx.total_active_load(),
+                    total
+                );
+                let min = *view.iter().min().unwrap();
+                prop_assert!(
+                    idx.min_load() == Some(min),
+                    "min {:?} != {}",
+                    idx.min_load(),
+                    min
+                );
+                // Random-tie selection: identical worker AND identical RNG
+                // consumption vs the seed reservoir scan.
+                let mut rng_a = rng.split();
+                let mut rng_b = rng_a.clone();
+                let fast = idx.least_loaded_random_tie(&mut rng_a);
+                let slow = crate::scheduler::least_loaded_random_tie(view, &mut rng_b);
+                prop_assert!(fast == slow, "tie-break {} != {}", fast, slow);
+                prop_assert!(
+                    rng_a.next_u64() == rng_b.next_u64(),
+                    "RNG streams diverged after tie-break"
+                );
+                // Lowest-id rule matches a JSQ scan.
+                let jsq = view
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &l)| l)
+                    .map(|(w, _)| w)
+                    .unwrap();
+                prop_assert!(
+                    idx.least_loaded_lowest_id() == jsq,
+                    "jsq {} != {}",
+                    idx.least_loaded_lowest_id(),
+                    jsq
+                );
+                // Predicate walk matches filter + min_by_key.
+                let fit = |w: usize| w % 2 == 0;
+                let want = (0..active).filter(|&w| fit(w)).min_by_key(|&w| view[w]);
+                prop_assert!(
+                    idx.least_loaded_where(fit) == want,
+                    "where {:?} != {:?}",
+                    idx.least_loaded_where(fit),
+                    want
+                );
+            }
+            Ok(())
+        });
+    }
+}

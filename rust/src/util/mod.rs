@@ -4,5 +4,6 @@
 pub mod cli;
 pub mod hashing;
 pub mod json;
+pub mod loadidx;
 pub mod prop;
 pub mod rng;

@@ -37,13 +37,13 @@ fn prop_no_scheduler_selects_drained_worker() {
                 for _ in 0..size * 3 {
                     let f = rng.index(6);
                     let w = {
-                        let mut c = SchedCtx { loads: &loads, rng };
+                        let mut c = SchedCtx::new(&loads, rng);
                         s.select(f, &mut c)
                     };
                     prop_assert!(w < workers, "{name}: out-of-range {w}");
                     match rng.index(3) {
                         0 => {
-                            let mut c = SchedCtx { loads: &loads, rng };
+                            let mut c = SchedCtx::new(&loads, rng);
                             s.on_complete(w, f, &mut c);
                         }
                         1 => s.on_evict(w, f),
@@ -59,7 +59,7 @@ fn prop_no_scheduler_selects_drained_worker() {
                 let act_loads = vec![0u32; active];
                 for f in 0..24 {
                     let w = {
-                        let mut c = SchedCtx { loads: &act_loads, rng };
+                        let mut c = SchedCtx::new(&act_loads, rng);
                         s.select(f, &mut c)
                     };
                     prop_assert!(
@@ -81,9 +81,9 @@ fn hiku_drain_purges_idle_queues() {
     let mut rng = Pcg64::new(9);
     let loads = [0u32; 4];
     for f in 0..6 {
-        let mut c = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut c = SchedCtx::new(&loads, &mut rng);
         h.on_complete(3, f, &mut c);
-        let mut c = SchedCtx { loads: &loads, rng: &mut rng };
+        let mut c = SchedCtx::new(&loads, &mut rng);
         h.on_complete(1, f, &mut c);
     }
     assert_eq!(h.idle_entries(), 12);
@@ -92,7 +92,7 @@ fn hiku_drain_purges_idle_queues() {
     // Every remaining pull resolves to the surviving advertiser.
     let act_loads = [0u32; 3];
     for f in 0..6 {
-        let mut c = SchedCtx { loads: &act_loads, rng: &mut rng };
+        let mut c = SchedCtx::new(&act_loads, &mut rng);
         assert_eq!(h.select(f, &mut c), 1);
     }
     assert_eq!(h.idle_entries(), 0);
@@ -116,7 +116,7 @@ fn prop_worker_added_stays_in_range() {
                 for _ in 0..size * 2 {
                     let f = rng.index(6);
                     let w = {
-                        let mut c = SchedCtx { loads: &loads, rng };
+                        let mut c = SchedCtx::new(&loads, rng);
                         s.select(f, &mut c)
                     };
                     prop_assert!(w < grown, "{name}: out-of-range {w} after add");

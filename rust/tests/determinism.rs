@@ -1,0 +1,148 @@
+//! Determinism equivalence suite for the event-core overhaul.
+//!
+//! The calendar-queue event core plus the incremental load/warm-supply
+//! accounting must be *bit-identical* to the seed implementation (binary
+//! heap + full-cluster scans), which lives on behind the `ref-heap`
+//! feature as `Simulation::with_reference_core`. For every scheduler ×
+//! {elastic, queue} × autoscale policy combination we run the same
+//! (config, seed) on both engines and require identical `summary_json()`
+//! output, event counts, and peak queue depth across ≥3 seeds.
+
+#![cfg(feature = "ref-heap")]
+
+use hiku::config::Config;
+use hiku::metrics::RunMetrics;
+use hiku::scheduler::{ALL_SCHEDULERS, PAPER_SCHEDULERS};
+use hiku::sim::{run_once, run_once_reference, run_trace, run_trace_reference};
+use hiku::workload::azure::SyntheticTrace;
+use hiku::workload::loadgen::OpenLoopTrace;
+
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+fn cfg(sched: &str, vus: usize, dur: f64) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = sched.into();
+    c.workload.vus = vus;
+    c.workload.duration_s = dur;
+    c
+}
+
+fn assert_equiv_metrics(a: &mut RunMetrics, b: &mut RunMetrics, label: &str) {
+    assert_eq!(
+        a.events_processed, b.events_processed,
+        "{label}: event counts diverged (calendar {} vs ref {})",
+        a.events_processed, b.events_processed
+    );
+    assert_eq!(
+        a.peak_event_queue, b.peak_event_queue,
+        "{label}: peak queue depth diverged"
+    );
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "{label}: summaries diverged"
+    );
+}
+
+fn assert_equiv(c: &Config, seed: u64, label: &str) {
+    let mut a = run_once(c, seed).unwrap_or_else(|e| panic!("{label}: {e}"));
+    let mut b = run_once_reference(c, seed).unwrap_or_else(|e| panic!("{label}: {e}"));
+    assert_equiv_metrics(&mut a, &mut b, &format!("{label}/seed{seed}"));
+}
+
+#[test]
+fn all_schedulers_elastic_static() {
+    for sched in ALL_SCHEDULERS {
+        for seed in SEEDS {
+            assert_equiv(&cfg(sched, 10, 20.0), seed, sched);
+        }
+    }
+}
+
+#[test]
+fn paper_schedulers_queue_mode() {
+    // Hard admission queues (elastic=false) exercise the queued-start path
+    // and the total_queued aggregate.
+    for sched in PAPER_SCHEDULERS {
+        for seed in SEEDS {
+            let mut c = cfg(sched, 10, 20.0);
+            c.cluster.elastic = false;
+            assert_equiv(&c, seed, &format!("{sched}/queue"));
+        }
+    }
+}
+
+#[test]
+fn autoscale_policies_equivalent() {
+    // Scale events churn the active set, which the incremental aggregates
+    // must track exactly (contributions move in/out at the boundary).
+    for sched in ["hiku", "least-connections", "ch-bl"] {
+        for policy in ["scheduled", "reactive", "predictive"] {
+            for seed in SEEDS {
+                let mut c = cfg(sched, 12, 25.0);
+                c.autoscale.policy = policy.into();
+                c.autoscale.max_workers = 9;
+                c.autoscale.cooldown_s = 3.0;
+                if policy == "scheduled" {
+                    c.autoscale.events = "4,8,-15,-18".into();
+                }
+                assert_equiv(&c, seed, &format!("{sched}/{policy}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prewarm_heuristic_equivalent() {
+    // cluster.prewarm drives on_prewarm_tick (warm-supply reads) and
+    // spawn_prewarm (min-load-fitting placement) every simulated second.
+    for sched in ["hiku", "random"] {
+        for seed in SEEDS {
+            let mut c = cfg(sched, 10, 20.0);
+            c.cluster.prewarm = true;
+            assert_equiv(&c, seed, &format!("{sched}/prewarm"));
+        }
+    }
+}
+
+#[test]
+fn multi_instance_equivalent() {
+    // Several scheduler instances = several independent load views, each
+    // with its own min-load index.
+    for seed in SEEDS {
+        let mut c = cfg("hiku", 12, 20.0);
+        c.scheduler.instances = 3;
+        assert_equiv(&c, seed, "hiku/instances=3");
+    }
+}
+
+#[test]
+fn hiku_fallback_variants_equivalent() {
+    // Custom fallbacks route through the same ctx helpers.
+    for sched in ["hiku+random", "hiku+ch-bl"] {
+        for seed in SEEDS {
+            assert_equiv(&cfg(sched, 10, 15.0), seed, sched);
+        }
+    }
+}
+
+#[test]
+fn open_loop_trace_equivalent() {
+    let c = cfg("hiku", 1, 60.0);
+    let gen = SyntheticTrace::generate(40, 60.0, 777);
+    let trace = OpenLoopTrace::from_synthetic(&gen.invocations, 40);
+    for seed in SEEDS {
+        let mut a = run_trace(&c, &trace, seed).expect("trace run");
+        let mut b = run_trace_reference(&c, &trace, seed).expect("trace ref run");
+        assert_equiv_metrics(&mut a, &mut b, &format!("open-loop/seed{seed}"));
+    }
+}
+
+#[test]
+fn repeated_runs_identical_on_new_core() {
+    // The new core is also self-deterministic (not just ref-equivalent).
+    let c = cfg("hiku", 10, 20.0);
+    let mut a = run_once(&c, 7).unwrap();
+    let mut b = run_once(&c, 7).unwrap();
+    assert_eq!(a.summary_json().to_string_compact(), b.summary_json().to_string_compact());
+}
