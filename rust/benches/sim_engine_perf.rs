@@ -11,9 +11,19 @@
 //! peak queue length per scale point, plus per-scale speedups) so future
 //! PRs have a perf trajectory to regress against.
 //!
+//! Two sweeps:
+//! - **core sweep**: calendar engine vs the seed `ref-heap` engine,
+//!   serial, per scheduler/mode/scale (`speedup_1k`/`speedup_10k`);
+//! - **shard sweep**: the calendar engine at `--shards {1,2,4}` (hiku,
+//!   closed loop) — workload generation outside the timer, so the
+//!   `shard_speedup_*` keys are pure engine-parallelism ratios. The
+//!   sampled tie-break row (`calendar-sampled`) shows least-connections
+//!   running at 100k workers with `scheduler.tie_sample_d = 2`.
+//!
 //! Usage:
 //!   cargo bench --bench sim_engine_perf            # full sweep
 //!   cargo bench --bench sim_engine_perf -- --quick # CI smoke (~seconds)
+//!                                                  # (includes --shards 2)
 //!
 //! Notes on the sweep shape:
 //! - closed loop uses 24 VUs/worker at 1k/10k (the paper's
@@ -34,6 +44,7 @@
 use hiku::config::Config;
 use hiku::metrics::RunMetrics;
 use hiku::scheduler::make_scheduler;
+use hiku::sim::shard::run_sharded_with;
 use hiku::sim::Simulation;
 use hiku::util::json::{obj, Json};
 use hiku::util::rng::Pcg64;
@@ -49,6 +60,7 @@ struct Row {
     mode: &'static str,
     scheduler: &'static str,
     core: &'static str,
+    shards: usize,
     completed: u64,
     events: u64,
     wall_s: f64,
@@ -63,6 +75,7 @@ impl Row {
             ("mode", self.mode.into()),
             ("scheduler", self.scheduler.into()),
             ("core", self.core.into()),
+            ("shards", self.shards.into()),
             ("completed", self.completed.into()),
             ("events", self.events.into()),
             ("wall_s", self.wall_s.into()),
@@ -137,9 +150,23 @@ fn record(
     m: &RunMetrics,
     wall: f64,
 ) {
+    record_sharded(rows, workers, mode, scheduler, core, 1, m, wall);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record_sharded(
+    rows: &mut Vec<Row>,
+    workers: usize,
+    mode: &'static str,
+    scheduler: &'static str,
+    core: &'static str,
+    shards: usize,
+    m: &RunMetrics,
+    wall: f64,
+) {
     let events_per_s = m.events_processed as f64 / wall.max(1e-9);
     println!(
-        "{workers:>7} workers  {mode:<6} {scheduler:<18} {core:<9} \
+        "{workers:>7} workers  {mode:<6} {scheduler:<18} {core:<9} x{shards} \
          {:>9} reqs  {:>10} events  {:>8.1} ms  {:>7.2} M events/s  peak queue {}",
         m.completed,
         m.events_processed,
@@ -152,6 +179,7 @@ fn record(
         mode,
         scheduler,
         core,
+        shards,
         completed: m.completed,
         events: m.events_processed,
         wall_s: wall,
@@ -173,6 +201,7 @@ fn speedup(rows: &[Row], workers: usize, mode: &str) -> Option<f64> {
                 r.workers == workers
                     && r.mode == mode
                     && r.core == core
+                    && r.shards == 1 // shard-sweep rows have their own aggregate
                     && r.scheduler != "least-connections"
             })
             .fold((0u64, 0f64), |(e, w), r| (e + r.events, w + r.wall_s));
@@ -230,6 +259,51 @@ fn main() {
         }
     }
 
+    // ---- shard-scaling sweep: the same calendar engine partitioned ----
+    // across N OS threads behind the event-time barrier. Workload
+    // generation stays outside the timer so the ratio is pure engine
+    // cost; shards=1 is the serial engine (the `--shards 1` path).
+    // (workers, duration_s, VUs/worker, shard counts)
+    let shard_points: Vec<(usize, f64, usize, Vec<usize>)> = if quick {
+        vec![(1_000, 4.0, 8, vec![1, 2])]
+    } else {
+        vec![(10_000, 12.0, 24, vec![1, 2, 4]), (100_000, 6.0, 1, vec![1, 2, 4])]
+    };
+    println!("# shard scaling (hiku closed loop, calendar core, N OS threads)");
+    let mut shard_eps: Vec<(usize, usize, f64)> = Vec::new(); // (workers, shards, events/s)
+    for (workers, dur, vus_mult, counts) in &shard_points {
+        let cfg0 = scale_cfg(*workers, "hiku", *dur, *vus_mult);
+        let registry = FunctionRegistry::functionbench(cfg0.workload.copies);
+        let workload = Workload::generate(&cfg0.workload, registry.len(), SEED);
+        for &sh in counts {
+            let mut cfg = cfg0.clone();
+            cfg.sim.shards = sh;
+            let (m, wall) = if sh <= 1 {
+                let sim = build_sim(&cfg, &registry, &workload, false);
+                let t0 = Instant::now();
+                let m = sim.run();
+                (m, t0.elapsed().as_secs_f64())
+            } else {
+                let t0 = Instant::now();
+                let m = run_sharded_with(&cfg, &registry, &workload, None, SEED)
+                    .expect("sharded run");
+                (m, t0.elapsed().as_secs_f64())
+            };
+            record_sharded(&mut rows, *workers, "closed", "hiku", "calendar", sh, &m, wall);
+            shard_eps.push((*workers, sh, m.events_processed as f64 / wall.max(1e-9)));
+        }
+    }
+
+    // Sampled tie-break: least-connections is now feasible at 100k
+    // workers with the O(d) power-of-d variant (scheduler.tie_sample_d);
+    // the exact-semantics rule stays excluded above (Θ(tie set)).
+    if !quick {
+        let mut cfg = scale_cfg(100_000, "least-connections", 6.0, 1);
+        cfg.scheduler.tie_sample_d = 2;
+        let (m, wall) = run_closed(&cfg, false);
+        record(&mut rows, 100_000, "closed", "least-connections", "calendar-sampled", &m, wall);
+    }
+
     // Per-scale aggregate speedups (the acceptance gate reads speedup_10k).
     let mut summary: Vec<(&'static str, Json)> = vec![
         ("bench", "sim_engine".into()),
@@ -257,6 +331,26 @@ fn main() {
         }
         if let Some(s) = speedup(&rows, *workers, "open") {
             println!("open-loop   speedup @ {workers} workers: {s:.2}x");
+        }
+    }
+    // Shard speedups: events/s at the highest shard count vs shards=1 at
+    // the same scale (the acceptance gate reads shard_speedup_100k).
+    for (workers, key) in [
+        (1_000usize, "shard_speedup_1k"),
+        (10_000, "shard_speedup_10k"),
+        (100_000, "shard_speedup_100k"),
+    ] {
+        let base = shard_eps.iter().find(|&&(w, sh, _)| w == workers && sh == 1);
+        let best = shard_eps
+            .iter()
+            .filter(|&&(w, _, _)| w == workers)
+            .max_by_key(|&&(_, sh, _)| sh);
+        if let (Some(&(_, _, e1)), Some(&(_, shn, en))) = (base, best) {
+            if shn > 1 && e1 > 0.0 {
+                let s = en / e1;
+                println!("shard speedup @ {workers} workers: {s:.2}x ({shn} shards vs 1)");
+                summary.push((key, s.into()));
+            }
         }
     }
     summary.push(("rows", Json::Arr(rows.iter().map(Row::json).collect())));

@@ -89,6 +89,7 @@ pub struct ScaleDecision {
 /// An elastic-scaling policy. Object-safe (mirrors the [`crate::scheduler::Scheduler`]
 /// contract) so the platform can swap policies from config.
 pub trait AutoscalePolicy: Send {
+    /// Stable policy name (the config `autoscale.policy` vocabulary).
     fn name(&self) -> &'static str;
 
     /// Exact-time (time, up) scale events to pre-schedule at run start.

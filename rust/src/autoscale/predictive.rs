@@ -38,6 +38,7 @@ pub struct Forecaster {
 }
 
 impl Forecaster {
+    /// A forecaster with EWMA smoothing factor `alpha`.
     pub fn new(alpha: f64) -> Self {
         Self { alpha, ewma_rate: Vec::new(), last_t: Vec::new(), hist: Vec::new() }
     }
@@ -50,6 +51,7 @@ impl Forecaster {
         }
     }
 
+    /// Feed one arrival of function `f` at time `t`.
     pub fn on_arrival(&mut self, f: FunctionId, t: f64) {
         self.grow(f);
         let last = self.last_t[f];
@@ -118,11 +120,15 @@ impl Forecaster {
         self.ewma_rate.len()
     }
 
+    /// True when no arrivals have been observed yet.
     pub fn is_empty(&self) -> bool {
         self.ewma_rate.is_empty()
     }
 }
 
+/// Forecast-driven scaling: per-function EWMA arrival rates drive a
+/// Little's-law worker target and per-function pre-warm pools. See the
+/// module docs in [`crate::autoscale`].
 pub struct Predictive {
     forecaster: Forecaster,
     min_workers: usize,
@@ -134,6 +140,7 @@ pub struct Predictive {
 }
 
 impl Predictive {
+    /// Build from the `[autoscale]` config section.
     pub fn from_config(cfg: &AutoscaleConfig) -> Self {
         Self {
             forecaster: Forecaster::new(cfg.ewma_alpha),

@@ -11,6 +11,9 @@
 use super::{AutoscaleObs, AutoscalePolicy, ScaleDecision};
 use crate::config::AutoscaleConfig;
 
+/// Utilization-threshold scaling with hysteresis, cooldown and bounds
+/// (the classic HPA-style loop). See the module docs in
+/// [`crate::autoscale`].
 pub struct Reactive {
     min_workers: usize,
     max_workers: usize,
@@ -23,6 +26,7 @@ pub struct Reactive {
 }
 
 impl Reactive {
+    /// Build from the `[autoscale]` config section.
     pub fn from_config(cfg: &AutoscaleConfig) -> Self {
         Self {
             min_workers: cfg.min_workers,

@@ -30,6 +30,7 @@ pub struct Scheduled {
 }
 
 impl Scheduled {
+    /// A policy replaying the given (time, up) event list verbatim.
     pub fn new(events: Vec<(f64, bool)>) -> Self {
         Self { events }
     }
@@ -60,10 +61,12 @@ impl Scheduled {
         Ok(Self::new(events))
     }
 
+    /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// True when the event list is empty.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }

@@ -11,14 +11,20 @@ use std::time::{Duration, Instant};
 /// One measured benchmark result.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
+    /// Total timed iterations across all sample batches.
     pub iters: u64,
+    /// Mean wall time per iteration in nanoseconds.
     pub mean_ns: f64,
+    /// Standard deviation across sample batches, in nanoseconds.
     pub std_ns: f64,
+    /// Fastest sample-batch mean, in nanoseconds.
     pub min_ns: f64,
 }
 
 impl Measurement {
+    /// Mean per-iteration time as a `Duration`.
     pub fn mean(&self) -> Duration {
         Duration::from_nanos(self.mean_ns as u64)
     }
@@ -40,6 +46,7 @@ fn fmt_ns(ns: f64) -> String {
 pub struct Bench {
     /// Target wall time per measurement phase.
     pub measure_time: Duration,
+    /// Wall time spent warming up (and calibrating the batch size).
     pub warmup_time: Duration,
     /// Number of sample batches for std estimation.
     pub samples: usize,
@@ -56,6 +63,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// The default calibration (600 ms measure, 150 ms warmup).
     pub fn new() -> Self {
         Default::default()
     }
@@ -131,6 +139,7 @@ pub struct Reporter {
 }
 
 impl Reporter {
+    /// A table with the given column headers.
     pub fn new(columns: &[&str]) -> Self {
         Self {
             header_printed: false,
@@ -138,6 +147,7 @@ impl Reporter {
         }
     }
 
+    /// Print one row (the header prints lazily before the first row).
     pub fn row(&mut self, cells: &[String]) {
         if !self.header_printed {
             let head: Vec<String> = self.columns.iter().map(|c| format!("{c:>14}")).collect();

@@ -7,8 +7,12 @@
 use crate::util::json::{obj, Json};
 use std::fmt;
 
+/// A configuration parse/validation failure.
 #[derive(Debug)]
-pub struct ConfigError(pub String);
+pub struct ConfigError(
+    /// Human-readable description of what is wrong.
+    pub String,
+);
 
 impl fmt::Display for ConfigError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -67,8 +71,9 @@ pub struct WorkloadConfig {
     pub vus: usize,
     /// Run duration in (virtual) seconds.
     pub duration_s: f64,
-    /// Think-time bounds between invocations per VU.
+    /// Lower think-time bound between invocations per VU, in seconds.
     pub think_min_s: f64,
+    /// Upper think-time bound between invocations per VU, in seconds.
     pub think_max_s: f64,
     /// Zipf exponent for Azure-like popularity skew.
     pub zipf_s: f64,
@@ -106,11 +111,26 @@ pub struct SchedulerConfig {
     /// Independent scheduler instances (distributed scheduling ablation;
     /// VUs are sharded across instances, no synchronization between them).
     pub instances: usize,
+    /// Sampled tie-break for least-loaded selection: 0 (default) keeps
+    /// the exact uniform-among-ties rule — Θ(tie set) per decision, the
+    /// paper's semantics, bit-identical to the seed RNG stream. d ≥ 1
+    /// samples d workers with replacement and routes to the least loaded
+    /// of the sample — O(d), the power-of-d-style variant that makes
+    /// least-connections viable at 100k workers (DESIGN.md §6). Changes
+    /// the RNG stream, so it is not bit-comparable with d = 0 runs.
+    pub tie_sample_d: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { name: "hiku".into(), ch_bl_c: 1.25, vnodes: 100, power_d: 2, instances: 1 }
+        Self {
+            name: "hiku".into(),
+            ch_bl_c: 1.25,
+            vnodes: 100,
+            power_d: 2,
+            instances: 1,
+            tie_sample_d: 0,
+        }
     }
 }
 
@@ -126,9 +146,10 @@ pub struct AutoscaleConfig {
     pub policy: String,
     /// Control-tick period in seconds.
     pub interval_s: f64,
-    /// Worker-count bounds enforced by the reactive/predictive policies
+    /// Minimum worker count enforced by the reactive/predictive policies
     /// (the scheduled policy replays its event list verbatim).
     pub min_workers: usize,
+    /// Maximum worker count enforced by the reactive/predictive policies.
     pub max_workers: usize,
     /// Reactive: scale up when utilization (running / (workers x vCPUs))
     /// exceeds this threshold.
@@ -172,9 +193,33 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Simulation-engine execution parameters (the `sim` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Event-core shards: OS threads the worker set is partitioned
+    /// across. 1 (default) is the serial engine — bit-identical to the
+    /// seed path; ≥ 2 runs the parallel core with an event-time barrier
+    /// ([`crate::sim::shard`], DESIGN.md §6). Must not exceed
+    /// `cluster.workers`, and the `predictive` autoscale policy requires
+    /// the serial engine.
+    pub shards: usize,
+    /// Event-time barrier period in virtual seconds for sharded runs.
+    /// With a tick-driven autoscale policy the control interval
+    /// (`autoscale.interval_s`) is the barrier period instead, so global
+    /// control fires exactly at barriers.
+    pub barrier_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { shards: 1, barrier_s: 1.0 }
+    }
+}
+
 /// PJRT runtime settings (real-time serving mode).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RuntimeConfig {
+    /// Directory holding the AOT artifact set (`manifest.json` + HLO).
     pub artifacts_dir: String,
     /// Extra sandbox-initialization latency added to a real cold start, in
     /// ms (models container/runtime startup on top of XLA compilation).
@@ -190,14 +235,22 @@ impl Default for RuntimeConfig {
 /// Top-level configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
+    /// Cluster topology and worker resources.
     pub cluster: ClusterConfig,
+    /// Workload shape (VUs, functions, duration, seed).
     pub workload: WorkloadConfig,
+    /// Scheduler selection and algorithm parameters.
     pub scheduler: SchedulerConfig,
+    /// Elastic-scaling control loop.
     pub autoscale: AutoscaleConfig,
+    /// Simulation-engine execution (shards, barrier period).
+    pub sim: SimConfig,
+    /// PJRT runtime settings (real-time serving mode).
     pub runtime: RuntimeConfig,
 }
 
 impl Config {
+    /// Serialize every section (the `hiku config` dump).
     pub fn to_json(&self) -> Json {
         obj(vec![
             (
@@ -232,6 +285,7 @@ impl Config {
                     ("vnodes", self.scheduler.vnodes.into()),
                     ("power_d", self.scheduler.power_d.into()),
                     ("instances", self.scheduler.instances.into()),
+                    ("tie_sample_d", self.scheduler.tie_sample_d.into()),
                 ]),
             ),
             (
@@ -252,6 +306,13 @@ impl Config {
                 ]),
             ),
             (
+                "sim",
+                obj(vec![
+                    ("shards", self.sim.shards.into()),
+                    ("barrier_s", self.sim.barrier_s.into()),
+                ]),
+            ),
+            (
                 "runtime",
                 obj(vec![
                     ("artifacts_dir", self.runtime.artifacts_dir.as_str().into()),
@@ -261,6 +322,8 @@ impl Config {
         ])
     }
 
+    /// Build from JSON, filling omitted fields from the defaults and
+    /// validating the result.
     pub fn from_json(j: &Json) -> Result<Config, ConfigError> {
         let mut cfg = Config::default();
         let missing = |p: &str| ConfigError(format!("bad or missing field {p}"));
@@ -335,6 +398,10 @@ impl Config {
                 cfg.scheduler.instances =
                     v.as_u64().ok_or_else(|| missing("scheduler.instances"))? as usize;
             }
+            if let Some(v) = s.get("tie_sample_d") {
+                cfg.scheduler.tie_sample_d =
+                    v.as_u64().ok_or_else(|| missing("scheduler.tie_sample_d"))? as usize;
+            }
         }
         if let Some(a) = j.get("autoscale") {
             if let Some(v) = a.get("policy") {
@@ -385,6 +452,14 @@ impl Config {
                     v.as_f64().ok_or_else(|| missing("autoscale.ewma_alpha"))?;
             }
         }
+        if let Some(s) = j.get("sim") {
+            if let Some(v) = s.get("shards") {
+                cfg.sim.shards = v.as_u64().ok_or_else(|| missing("sim.shards"))? as usize;
+            }
+            if let Some(v) = s.get("barrier_s") {
+                cfg.sim.barrier_s = v.as_f64().ok_or_else(|| missing("sim.barrier_s"))?;
+            }
+        }
         if let Some(r) = j.get("runtime") {
             if let Some(v) = r.get("artifacts_dir") {
                 cfg.runtime.artifacts_dir =
@@ -399,6 +474,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Read and parse a JSON config file.
     pub fn from_file(path: &str) -> Result<Config, ConfigError> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| ConfigError(format!("reading {path}: {e}")))?;
@@ -462,6 +538,13 @@ impl Config {
             "scheduler.instances" => {
                 self.scheduler.instances = value.parse().map_err(|_| bad(path, value))?
             }
+            "scheduler.tie_sample_d" => {
+                self.scheduler.tie_sample_d = value.parse().map_err(|_| bad(path, value))?
+            }
+            "sim.shards" => self.sim.shards = value.parse().map_err(|_| bad(path, value))?,
+            "sim.barrier_s" => {
+                self.sim.barrier_s = value.parse().map_err(|_| bad(path, value))?
+            }
             "autoscale.policy" => self.autoscale.policy = value.to_string(),
             "autoscale.interval_s" => {
                 self.autoscale.interval_s = value.parse().map_err(|_| bad(path, value))?
@@ -504,6 +587,7 @@ impl Config {
         self.validate()
     }
 
+    /// Centralized cross-field validation (every entry point calls this).
     pub fn validate(&self) -> Result<(), ConfigError> {
         let e = |m: &str| Err(ConfigError(m.to_string()));
         if self.cluster.workers == 0 {
@@ -575,6 +659,20 @@ impl Config {
             // global heuristic; running both would double-speculate against
             // the same warm supply and corrupt the prewarm hit-rate metric.
             return e("autoscale.policy=predictive replaces cluster.prewarm; disable one");
+        }
+        if self.sim.shards == 0 {
+            return e("sim.shards must be >= 1");
+        }
+        if self.sim.shards > self.cluster.workers {
+            return e("sim.shards must be <= cluster.workers (every shard needs a worker)");
+        }
+        if self.sim.barrier_s <= 0.0 {
+            return e("sim.barrier_s must be > 0");
+        }
+        if self.sim.shards > 1 && self.autoscale.policy == "predictive" {
+            // The predictive policy consumes the per-arrival stream; the
+            // sharded coordinator only sees epoch summaries (DESIGN.md §6).
+            return e("autoscale.policy=predictive requires the serial engine (sim.shards=1)");
         }
         Ok(())
     }
@@ -659,6 +757,39 @@ mod tests {
         let j = c.to_json();
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn sim_section_roundtrip_and_validation() {
+        let mut c = Config::default();
+        assert_eq!(c.sim.shards, 1, "serial engine by default");
+        c.apply_override("sim.shards=4").unwrap();
+        c.apply_override("sim.barrier_s=0.5").unwrap();
+        c.apply_override("scheduler.tie_sample_d=2").unwrap();
+        assert_eq!(c.sim.shards, 4);
+        assert_eq!(c.scheduler.tie_sample_d, 2);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        // More shards than workers cannot partition.
+        let mut c = Config::default();
+        c.cluster.workers = 3;
+        c.sim.shards = 4;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.sim.shards = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.sim.barrier_s = 0.0;
+        assert!(c.validate().is_err());
+        // Predictive autoscale needs the serial engine's arrival feed.
+        let mut c = Config::default();
+        c.cluster.workers = 8;
+        c.sim.shards = 2;
+        c.autoscale.policy = "predictive".into();
+        assert!(c.validate().is_err());
+        c.autoscale.policy = "reactive".into();
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! A full reproduction of "Hiku: Pull-Based Scheduling for Serverless
 //! Computing" (Akbari & Hauswirth, CCGRID 2025) as a three-layer
-//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Rust + JAX + Pallas system. Start at the repository `README.md` for
+//! the quickstart; `DESIGN.md` holds the architecture reference and
+//! `EXPERIMENTS.md` the paper-vs-measured results and bench commands.
 //!
 //! - [`scheduler`] — the paper's contribution: Hiku (Algorithm 1) plus all
 //!   baseline scheduling algorithms.
@@ -12,16 +13,26 @@
 //!   pre-warming (closes the §II-C auto-scaling loop).
 //! - [`workload`] — FunctionBench registry, Azure-like traces, load gen.
 //! - [`sim`] — deterministic discrete-event simulator (the paper's cluster
-//!   experiments, Figs 10-17).
+//!   experiments, Figs 10-17): calendar-queue event core, incremental load
+//!   accounting, and the sharded parallel engine ([`sim::shard`]) that
+//!   partitions workers across OS threads behind an event-time barrier.
 //! - [`runtime`]/[`server`] — PJRT-backed real-time serving of the AOT
 //!   compiled payloads (end-to-end validation).
+//!
+//! Determinism is the crate-wide contract: every run is a pure function
+//! of (config, seed) — including autoscaled, pre-warmed and sharded runs
+//! (per shard count) — which turns every figure into a regression test.
+//! See `DESIGN.md` §3 for the rules and `tests/determinism.rs` for the
+//! enforcement.
+
+#![warn(missing_docs)]
 
 pub mod autoscale;
 pub mod bench;
 pub mod config;
 pub mod logging;
-pub mod platform;
 pub mod metrics;
+pub mod platform;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;

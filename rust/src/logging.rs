@@ -6,17 +6,24 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or data-corrupting conditions.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// High-level progress (the default level).
     Info = 2,
+    /// Per-decision detail (scale events, routing).
     Debug = 3,
+    /// Per-event firehose.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a level name (case-insensitive; `HIKU_LOG` values).
     pub fn from_str(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -28,6 +35,7 @@ impl Level {
         }
     }
 
+    /// Uppercase display name.
     pub fn name(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -53,10 +61,12 @@ pub fn init() {
     });
 }
 
+/// Set the process-global log level.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// The current process-global log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -67,25 +77,32 @@ pub fn level() -> Level {
     }
 }
 
+/// Whether a message at level `l` would be emitted (one relaxed load).
 #[inline]
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one log line to stderr if `l` is enabled (use the `log_*!` macros).
 pub fn log(l: Level, target: &str, msg: std::fmt::Arguments) {
     if enabled(l) {
         eprintln!("[{:5}] {}: {}", l.name(), target, msg);
     }
 }
 
+/// Log at [`Level::Error`] with `format!` arguments.
 #[macro_export]
 macro_rules! log_error { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, $target, format_args!($($arg)*)) } }
+/// Log at [`Level::Warn`] with `format!` arguments.
 #[macro_export]
 macro_rules! log_warn { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, $target, format_args!($($arg)*)) } }
+/// Log at [`Level::Info`] with `format!` arguments.
 #[macro_export]
 macro_rules! log_info { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, $target, format_args!($($arg)*)) } }
+/// Log at [`Level::Debug`] with `format!` arguments.
 #[macro_export]
 macro_rules! log_debug { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, $target, format_args!($($arg)*)) } }
+/// Log at [`Level::Trace`] with `format!` arguments.
 #[macro_export]
 macro_rules! log_trace { ($target:expr, $($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, $target, format_args!($($arg)*)) } }
 

@@ -11,6 +11,7 @@
 //! Examples:
 //!   hiku sim --scheduler hiku --vus 100 --duration 300 --seed 42
 //!   hiku sim --scheduler hiku --autoscale reactive --workers 2
+//!   hiku sim --workers 100000 --vus 100000 --shards 4 --duration 10
 //!   hiku sweep --runs 5 --vu-levels 20,50,100
 //!   hiku trace --universe 10000 --minutes 30
 //!   hiku autoscale --policies none,reactive,predictive --schedulers hiku,lc
@@ -59,6 +60,7 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("workers", None, "number of workers")
         .opt("autoscale", None, "autoscale policy (none|scheduled|reactive|predictive)")
         .opt("scale-events", None, "scheduled-policy events, e.g. '60;120;-150'")
+        .opt("shards", None, "event-core shards (OS threads; 1 = serial engine)")
         .opt("seed", None, "experiment seed")
 }
 
@@ -89,6 +91,9 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     }
     if let Some(e) = args.get("scale-events") {
         cfg.autoscale.events = e.to_string();
+    }
+    if let Some(v) = args.get("shards") {
+        cfg.sim.shards = v.parse().map_err(|_| "--shards: integer expected".to_string())?;
     }
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;

@@ -7,14 +7,19 @@ use crate::util::json::{obj, Json};
 /// Collected during a run (sim or real-time).
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
+    /// Scheduler name the run used.
     pub scheduler: String,
+    /// Virtual users the run was configured with.
     pub vus: usize,
     /// Response latencies in ms (arrival -> response), all completed requests.
     pub latency_ms: Samples,
     /// Response latencies split by cold/warm (Table I reproduction).
     pub latency_cold_ms: Samples,
+    /// Warm-start response latencies in ms.
     pub latency_warm_ms: Samples,
+    /// Requests whose execution required creating a sandbox.
     pub cold_starts: u64,
+    /// Requests served by an existing warm sandbox.
     pub warm_starts: u64,
     /// Requests assigned per worker per second (Figs 14/15).
     pub imbalance: LoadImbalance,
@@ -41,12 +46,17 @@ pub struct RunMetrics {
     pub events_processed: u64,
     /// High-water mark of the pending-event queue (perf diagnostics).
     pub peak_event_queue: usize,
+    /// Configured run duration in (virtual) seconds.
     pub duration_s: f64,
+    /// Requests that completed.
     pub completed: u64,
+    /// Requests that were issued (routed).
     pub issued: u64,
 }
 
 impl RunMetrics {
+    /// An empty collector for one run of `scheduler` over `workers`
+    /// workers, `vus` virtual users and `duration_s` seconds.
     pub fn new(scheduler: &str, workers: usize, vus: usize, duration_s: f64) -> Self {
         Self {
             scheduler: scheduler.to_string(),
@@ -91,11 +101,14 @@ impl RunMetrics {
         }
     }
 
+    /// One request was routed to `worker` at time `t`.
     pub fn record_assignment(&mut self, worker: usize, t: f64) {
         self.imbalance.record_assignment(worker, t);
         self.issued += 1;
     }
 
+    /// One request completed: record its end-to-end latency, cold/warm
+    /// outcome and worker-queue delay at completion time `t`.
     pub fn record_response(
         &mut self,
         latency_s: f64,
@@ -165,6 +178,35 @@ impl RunMetrics {
         }
     }
 
+    /// Fold another run's raw measurements into this one — the shard-merge
+    /// reduction over disjoint worker sets and request streams sharing one
+    /// virtual clock. Samples are unioned (derived percentiles/rates are
+    /// then exact over the union), per-worker series are appended in shard
+    /// order, the scaling timelines are added as step functions (so
+    /// `worker_seconds` stays the integral of the *global* active-worker
+    /// count), and counters sum. `scheduler`, `vus` and `duration_s` keep
+    /// `self`'s values; `peak_event_queue` sums (total pending events
+    /// across shard queues is the meaningful high-water proxy).
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.latency_ms.merge_from(&other.latency_ms);
+        self.latency_cold_ms.merge_from(&other.latency_cold_ms);
+        self.latency_warm_ms.merge_from(&other.latency_warm_ms);
+        self.cold_starts += other.cold_starts;
+        self.warm_starts += other.warm_starts;
+        self.imbalance.merge_append(&other.imbalance);
+        self.throughput.merge_add(&other.throughput);
+        self.cold_series.merge_add(&other.cold_series);
+        self.queue_delay_ms.merge(&other.queue_delay_ms);
+        self.scaling_timeline = merge_timelines(&self.scaling_timeline, &other.scaling_timeline);
+        self.worker_seconds += other.worker_seconds;
+        self.prewarm_spawned += other.prewarm_spawned;
+        self.prewarm_hits += other.prewarm_hits;
+        self.events_processed += other.events_processed;
+        self.peak_event_queue += other.peak_event_queue;
+        self.completed += other.completed;
+        self.issued += other.issued;
+    }
+
     /// Summary as JSON (dumped by the CLI for external plotting).
     pub fn summary_json(&mut self) -> Json {
         let mean = self.mean_latency_ms();
@@ -196,26 +238,69 @@ impl RunMetrics {
     }
 }
 
+/// Sum two non-negative step functions given as (time, value) breakpoint
+/// lists (each list's value holds from its breakpoint until the next; 0
+/// before the first breakpoint). Duplicate times within a list resolve to
+/// the last entry, matching how `record_scale` appends.
+fn merge_timelines(a: &[(f64, usize)], b: &[(f64, usize)]) -> Vec<(f64, usize)> {
+    if a.is_empty() {
+        return b.to_vec();
+    }
+    if b.is_empty() {
+        return a.to_vec();
+    }
+    let mut out: Vec<(f64, usize)> = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut va, mut vb) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let ta = a.get(i).map(|p| p.0).unwrap_or(f64::INFINITY);
+        let tb = b.get(j).map(|p| p.0).unwrap_or(f64::INFINITY);
+        let t = ta.min(tb);
+        while i < a.len() && a[i].0 == t {
+            va = a[i].1;
+            i += 1;
+        }
+        while j < b.len() && b[j].0 == t {
+            vb = b[j].1;
+            j += 1;
+        }
+        out.push((t, va + vb));
+    }
+    out
+}
+
 /// Aggregate over the paper's 20 repeated runs: mean of each scalar metric.
 #[derive(Clone, Debug, Default)]
 pub struct Aggregate {
+    /// Mean latency (ms) across runs.
     pub mean_latency_ms: OnlineStats,
+    /// p90 latency (ms) across runs.
     pub p90_ms: OnlineStats,
+    /// p95 latency (ms) across runs.
     pub p95_ms: OnlineStats,
+    /// p99 latency (ms) across runs.
     pub p99_ms: OnlineStats,
+    /// Cold-start rate across runs.
     pub cold_rate: OnlineStats,
+    /// Load-imbalance CV across runs.
     pub mean_cv: OnlineStats,
+    /// Completed requests across runs.
     pub completed: OnlineStats,
+    /// Requests/s across runs.
     pub rps: OnlineStats,
+    /// Worker-seconds (cost proxy) across runs.
     pub worker_seconds: OnlineStats,
+    /// Pre-warm speculation hit rate across runs.
     pub prewarm_hit_rate: OnlineStats,
 }
 
 impl Aggregate {
+    /// An empty aggregate.
     pub fn new() -> Self {
         Default::default()
     }
 
+    /// Fold one run's scalar metrics into the aggregate.
     pub fn add(&mut self, run: &mut RunMetrics) {
         self.mean_latency_ms.push(run.mean_latency_ms());
         self.p90_ms.push(run.latency_percentile_ms(90.0));
@@ -229,6 +314,7 @@ impl Aggregate {
         self.prewarm_hit_rate.push(run.prewarm_hit_rate());
     }
 
+    /// Runs folded in so far.
     pub fn runs(&self) -> u64 {
         self.mean_latency_ms.count()
     }
@@ -272,6 +358,39 @@ mod tests {
         m.prewarm_spawned = 4;
         m.prewarm_hits = 3;
         assert!((m.prewarm_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_unions_samples_and_sums_timelines() {
+        // Shard 0: 2 workers, one cold response; shard 1: 1 worker, one
+        // warm response and a scale event.
+        let mut a = RunMetrics::new("hiku", 2, 10, 100.0);
+        a.record_scale(0.0, 2);
+        a.record_assignment(0, 1.0);
+        a.record_response(0.100, true, 0.0, 2.0);
+        a.finalize_scaling(100.0); // 2 x 100 = 200 worker-seconds
+        let mut b = RunMetrics::new("hiku", 1, 10, 100.0);
+        b.record_scale(0.0, 1);
+        b.record_assignment(0, 1.5);
+        b.record_response(0.300, false, 0.01, 3.0);
+        b.record_scale(50.0, 2); // 1 x 50 + 2 x 50 = 150 worker-seconds
+        b.finalize_scaling(100.0);
+        a.merge(&b);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.issued, 2);
+        assert_eq!(a.cold_starts, 1);
+        assert_eq!(a.warm_starts, 1);
+        assert!((a.mean_latency_ms() - 200.0).abs() < 1e-9);
+        assert!((a.cold_rate() - 0.5).abs() < 1e-12);
+        // Timeline: 3 workers from t=0, 4 from t=50; integral 200 + 150.
+        assert!((a.worker_seconds - 350.0).abs() < 1e-9);
+        assert_eq!(a.scaling_timeline.first(), Some(&(0.0, 3)));
+        assert!(a.scaling_timeline.contains(&(50.0, 4)));
+        assert_eq!(a.scaling_timeline.last(), Some(&(100.0, 4)));
+        assert_eq!(a.scale_event_count(), 1, "only the t=50 step changes the count");
+        // Worker series appended: shard 0's workers then shard 1's.
+        assert_eq!(a.imbalance.totals().len(), 3);
+        assert_eq!(a.imbalance.totals(), vec![1.0, 0.0, 1.0]);
     }
 
     #[test]

@@ -28,11 +28,30 @@
 use super::worker::{AssignOutcome, StartInfo, Worker, WorkerId};
 use crate::config::ClusterConfig;
 use crate::platform::sandbox::SandboxId;
-use crate::util::loadidx::MinLoadIndex;
+use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::workload::spec::FunctionId;
 
+/// Per-completion result from [`Cluster::complete_batch`]: the union of
+/// what [`Cluster::complete`] (queue mode) and [`Cluster::complete_elastic`]
+/// report, so batched and one-at-a-time dispatch share a post-processing
+/// path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchCompletion {
+    /// Keep-alive handle `(sandbox, epoch)` if the sandbox idled and
+    /// survived — the caller advertises it to the scheduler.
+    pub expiry: Option<(SandboxId, u64)>,
+    /// Queue mode: a queued request that started on the freed slot.
+    pub started: Option<StartInfo>,
+    /// Elastic mode: function types whose idle sandboxes were reclaimed
+    /// while trimming the pool back to capacity.
+    pub evicted: Vec<FunctionId>,
+}
+
+/// The worker set plus incrementally maintained cluster-wide aggregates.
+/// See the module docs for the invariants.
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// The worker nodes, indexed by [`WorkerId`].
     pub workers: Vec<Worker>,
     /// Workers `0..active` are eligible for selection; the suffix is
     /// draining (scale-down is LIFO).
@@ -49,6 +68,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// A cluster of `cfg.workers` identical workers, all active.
     pub fn new(cfg: &ClusterConfig) -> Self {
         let workers = (0..cfg.workers)
             .map(|id| Worker::new(id, cfg.mem_mb, cfg.concurrency))
@@ -63,14 +83,17 @@ impl Cluster {
         }
     }
 
+    /// Total workers, active and draining.
     pub fn len(&self) -> usize {
         self.workers.len()
     }
 
+    /// True when the cluster holds no workers at all.
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
     }
 
+    /// Borrow a worker for inspection.
     pub fn worker(&self, id: WorkerId) -> &Worker {
         &self.workers[id]
     }
@@ -139,6 +162,12 @@ impl Cluster {
     /// `(0..active).filter(fit).min_by_key(load)` but O(tie set).
     pub fn least_loaded_fitting(&self, mem_mb: u64) -> Option<WorkerId> {
         self.load_index.least_loaded_where(|w| self.workers[w].mem_free_mb() >= mem_mb)
+    }
+
+    /// O(1) digest of the active workers' load state — the shard barrier
+    /// payload ([`LoadSummary`] merges across disjoint worker sets).
+    pub fn load_summary(&self) -> LoadSummary {
+        self.load_index.summary()
     }
 
     /// Append a new (inactive) worker; activate it with `set_active`.
@@ -224,6 +253,8 @@ impl Cluster {
 
     // ---- accounted worker operations (the simulator's mutation API) -------
 
+    /// Queue-mode assignment (started or queued), with incremental
+    /// aggregate accounting.
     pub fn assign(
         &mut self,
         w: WorkerId,
@@ -238,6 +269,8 @@ impl Cluster {
         out
     }
 
+    /// Elastic-mode assignment (always starts), with incremental
+    /// aggregate accounting.
     pub fn assign_elastic(
         &mut self,
         w: WorkerId,
@@ -252,6 +285,8 @@ impl Cluster {
         out
     }
 
+    /// Queue-mode completion: the sandbox idles and a queued request may
+    /// start. Aggregates updated incrementally.
     pub fn complete(
         &mut self,
         w: WorkerId,
@@ -264,6 +299,8 @@ impl Cluster {
         out
     }
 
+    /// Elastic-mode completion: the sandbox idles, then the idle pool is
+    /// trimmed back to capacity. Aggregates updated incrementally.
     pub fn complete_elastic(
         &mut self,
         w: WorkerId,
@@ -276,6 +313,40 @@ impl Cluster {
         out
     }
 
+    /// Complete several same-tick executions on one worker with a *single*
+    /// aggregate sync (the batch-coalescing optimization, DESIGN.md §6).
+    /// The worker-side operations run in the given order, exactly as the
+    /// one-at-a-time calls would; only the snapshot/journal/load-index
+    /// bookkeeping is amortized across the batch, so the final worker and
+    /// aggregate state — and every per-completion result — are identical
+    /// to sequential [`Cluster::complete`] / [`Cluster::complete_elastic`]
+    /// calls (property-tested in `tests/determinism.rs`).
+    pub fn complete_batch(
+        &mut self,
+        w: WorkerId,
+        sandboxes: &[SandboxId],
+        elastic: bool,
+        now: f64,
+    ) -> Vec<BatchCompletion> {
+        let before = self.snapshot(w);
+        let out = sandboxes
+            .iter()
+            .map(|&sb| {
+                if elastic {
+                    let (expiry, evicted) = self.workers[w].complete_elastic(sb, now);
+                    BatchCompletion { expiry, started: None, evicted }
+                } else {
+                    let (expiry, started) = self.workers[w].complete(sb, now);
+                    BatchCompletion { expiry, started, evicted: Vec::new() }
+                }
+            })
+            .collect();
+        self.sync_after(w, before);
+        out
+    }
+
+    /// Speculatively create an Initializing sandbox for `f` on `w`
+    /// (never evicts; `None` when it does not fit).
     pub fn prewarm(&mut self, w: WorkerId, f: FunctionId, mem_mb: u64, now: f64) -> Option<SandboxId> {
         let before = self.snapshot(w);
         let out = self.workers[w].prewarm(f, mem_mb, now);
@@ -283,6 +354,7 @@ impl Cluster {
         out
     }
 
+    /// A speculative sandbox finished initializing; it becomes idle.
     pub fn finish_prewarm(
         &mut self,
         w: WorkerId,
@@ -295,6 +367,7 @@ impl Cluster {
         out
     }
 
+    /// Evict `w`'s sandboxes idle since `cutoff` or earlier (keep-alive).
     pub fn sweep_keepalive(&mut self, w: WorkerId, cutoff: f64) -> Vec<FunctionId> {
         let before = self.snapshot(w);
         let out = self.workers[w].sweep_keepalive(cutoff);
@@ -302,6 +375,7 @@ impl Cluster {
         out
     }
 
+    /// Evict every idle sandbox on `w` (scale-down drain).
     pub fn drain_idle(&mut self, w: WorkerId) -> Vec<FunctionId> {
         let before = self.snapshot(w);
         let out = self.workers[w].drain_idle();
@@ -309,6 +383,7 @@ impl Cluster {
         out
     }
 
+    /// Precise per-sandbox keep-alive expiry (ignores stale epochs).
     pub fn expire_keepalive(
         &mut self,
         w: WorkerId,
@@ -322,17 +397,25 @@ impl Cluster {
     }
 }
 
+/// Cluster-wide lifetime counters, summed over all workers.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ClusterTotals {
+    /// Cold starts.
     pub cold: u64,
+    /// Warm starts.
     pub warm: u64,
+    /// Evictions under memory pressure (incl. scale-down drains).
     pub evictions_pressure: u64,
+    /// Evictions by keep-alive expiry.
     pub evictions_keepalive: u64,
+    /// Speculative (pre-warm) sandboxes created.
     pub prewarm_spawned: u64,
+    /// Warm starts served by a pre-warmed sandbox's first use.
     pub prewarm_hits: u64,
 }
 
 impl ClusterTotals {
+    /// Cold starts over all starts (0 when nothing ran).
     pub fn cold_rate(&self) -> f64 {
         let total = self.cold + self.warm;
         if total == 0 {

@@ -7,6 +7,6 @@ pub mod cluster;
 pub mod sandbox;
 pub mod worker;
 
-pub use cluster::{Cluster, ClusterTotals};
+pub use cluster::{BatchCompletion, Cluster, ClusterTotals};
 pub use sandbox::{Sandbox, SandboxId, SandboxState};
 pub use worker::{AssignOutcome, EvictReason, QueuedRequest, StartInfo, Worker, WorkerId};

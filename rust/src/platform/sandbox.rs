@@ -7,6 +7,7 @@
 
 use crate::workload::spec::FunctionId;
 
+/// Process-unique (per worker) sandbox identifier.
 pub type SandboxId = u64;
 
 /// Sandbox lifecycle states (Fig 2). `Initializing` exists as a distinct
@@ -15,16 +16,24 @@ pub type SandboxId = u64;
 /// execution and transitions Created->Busy directly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SandboxState {
+    /// Being created/compiled; cannot serve requests yet.
     Initializing,
+    /// Warm and ready to serve its function type.
     Idle,
+    /// Currently executing a request.
     Busy,
 }
 
+/// One sandbox instance and its lifecycle state.
 #[derive(Clone, Debug)]
 pub struct Sandbox {
+    /// Identifier, unique within its worker.
     pub id: SandboxId,
+    /// The single function type this sandbox can serve.
     pub function: FunctionId,
+    /// Current lifecycle state (Fig 2).
     pub state: SandboxState,
+    /// Memory footprint in MB, held for the sandbox's whole lifetime.
     pub mem_mb: u64,
     /// Time this sandbox last became idle (valid when state == Idle).
     pub idle_since: f64,
@@ -38,10 +47,12 @@ pub struct Sandbox {
     /// yet served its first execution; cleared on first use so each
     /// speculation is counted as at most one hit.
     pub prewarmed: bool,
+    /// Creation timestamp (virtual seconds).
     pub created_at: f64,
 }
 
 impl Sandbox {
+    /// A fresh `Initializing` sandbox created at `now`.
     pub fn new(id: SandboxId, function: FunctionId, mem_mb: u64, now: f64) -> Self {
         Self {
             id,
@@ -90,10 +101,12 @@ impl Sandbox {
         Some(self.epoch)
     }
 
+    /// True when idle (warm and reusable).
     pub fn is_idle(&self) -> bool {
         self.state == SandboxState::Idle
     }
 
+    /// True when executing.
     pub fn is_busy(&self) -> bool {
         self.state == SandboxState::Busy
     }

@@ -10,14 +10,19 @@ use super::sandbox::{Sandbox, SandboxId};
 use crate::workload::spec::FunctionId;
 use std::collections::VecDeque;
 
+/// Dense worker index (0-based; the active set is a prefix).
 pub type WorkerId = usize;
 
 /// A request admitted to a worker but waiting for a free execution slot.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QueuedRequest {
+    /// The router-assigned request id.
     pub request_id: u64,
+    /// Function the request invokes.
     pub function: FunctionId,
+    /// Sandbox memory footprint the execution will need, in MB.
     pub mem_mb: u64,
+    /// When the request entered the queue (virtual seconds).
     pub queued_at: f64,
 }
 
@@ -33,6 +38,7 @@ pub enum AssignOutcome {
 /// Details of a started execution.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StartInfo {
+    /// Sandbox the execution runs in.
     pub sandbox: SandboxId,
     /// True if a new sandbox had to be created (cold start).
     pub cold: bool,
@@ -48,14 +54,20 @@ pub struct StartInfo {
 /// Why an eviction happened (metrics/ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EvictReason {
+    /// The sandbox sat idle past the keep-alive timeout.
     KeepAliveExpired,
+    /// An idle sandbox was reclaimed to make room.
     MemoryPressure,
 }
 
+/// One worker node: memory pool, sandbox table, execution slots.
 #[derive(Clone, Debug)]
 pub struct Worker {
+    /// This worker's id (its index in the cluster).
     pub id: WorkerId,
+    /// Sandbox memory pool size in MB.
     pub mem_capacity_mb: u64,
+    /// Memory currently held by sandboxes, in MB.
     pub mem_used_mb: u64,
     /// Maximum concurrent executions (vCPU slots).
     pub concurrency: usize,
@@ -72,9 +84,13 @@ pub struct Worker {
     /// (see `Cluster::sync_after`). Mirrors `warm_by_fn` updates 1:1.
     pub(crate) warm_deltas: Vec<(FunctionId, i32)>,
     // ---- counters (metrics) ----
+    /// Executions that required creating a sandbox (cold starts).
     pub total_cold: u64,
+    /// Executions served by an existing idle sandbox (warm starts).
     pub total_warm: u64,
+    /// Idle sandboxes evicted under memory pressure.
     pub total_evictions_pressure: u64,
+    /// Idle sandboxes evicted by keep-alive expiry.
     pub total_evictions_keepalive: u64,
     /// Speculative sandboxes created via [`Worker::prewarm`].
     pub total_prewarm_spawned: u64,
@@ -83,6 +99,7 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// An empty worker with the given memory pool and vCPU slots.
     pub fn new(id: WorkerId, mem_capacity_mb: u64, concurrency: usize) -> Self {
         Self {
             id,
@@ -106,10 +123,12 @@ impl Worker {
 
     // ---- inspection -------------------------------------------------------
 
+    /// Executions currently running.
     pub fn running(&self) -> usize {
         self.running
     }
 
+    /// Requests waiting in the FIFO admission queue.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -119,24 +138,29 @@ impl Worker {
         self.running + self.queue.len()
     }
 
+    /// Free sandbox-pool memory in MB (saturating at 0).
     pub fn mem_free_mb(&self) -> u64 {
         // Elastic mode tolerates the busy set transiently exceeding the
         // pool, so this must saturate (0 free), not underflow.
         self.mem_capacity_mb.saturating_sub(self.mem_used_mb)
     }
 
+    /// Whether an idle (warm) sandbox for `f` exists here.
     pub fn has_idle(&self, f: FunctionId) -> bool {
         self.sandboxes.iter().any(|s| s.function == f && s.is_idle())
     }
 
+    /// Idle (warm) sandboxes for `f`.
     pub fn idle_count(&self, f: FunctionId) -> usize {
         self.sandboxes.iter().filter(|s| s.function == f && s.is_idle()).count()
     }
 
+    /// Total sandboxes on this worker, in any state.
     pub fn num_sandboxes(&self) -> usize {
         self.sandboxes.len()
     }
 
+    /// Look up a sandbox by id.
     pub fn sandbox(&self, id: SandboxId) -> Option<&Sandbox> {
         self.sandboxes.iter().find(|s| s.id == id)
     }

@@ -22,7 +22,9 @@ struct CacheEntry {
 /// Execution result + timing.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecResult {
+    /// The payload's output digest (f32[2]).
     pub digest: [f32; 2],
+    /// True when this execution compiled the payload (cold start).
     pub cold: bool,
     /// Total handling time (compile if cold + execute), seconds.
     pub total_s: f64,
@@ -40,7 +42,9 @@ pub struct Engine {
     /// Maximum executables held warm (memory-pressure model).
     capacity: usize,
     tick: u64,
+    /// Executions that required compilation (cold starts).
     pub total_cold: u64,
+    /// Executions served from the executable cache (warm starts).
     pub total_warm: u64,
 }
 
@@ -65,18 +69,22 @@ impl Engine {
         })
     }
 
+    /// Engine over `<dir>/manifest.json`'s artifact set.
     pub fn from_dir(dir: &str, capacity: usize) -> Result<Engine, String> {
         Ok(Self::new(Manifest::load(dir)?, capacity)?)
     }
 
+    /// The artifact manifest this engine serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Whether `name` is currently held warm in the cache.
     pub fn cached(&self, name: &str) -> bool {
         self.cache.iter().any(|e| e.name == name)
     }
 
+    /// Number of executables currently held warm.
     pub fn cache_len(&self) -> usize {
         self.cache.len()
     }

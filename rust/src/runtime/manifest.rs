@@ -4,23 +4,32 @@
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
+/// A golden check: digest of a payload's output for a known input seed.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Golden {
+    /// Input seed the digest was computed for.
     pub seed: u32,
+    /// (sum, sum-of-squares)-style output digest from the AOT pipeline.
     pub digest: [f32; 2],
 }
 
+/// One AOT-compiled payload and its verification metadata.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PayloadSpec {
+    /// Payload (function) name.
     pub name: String,
     /// Absolute path to the HLO text artifact.
     pub path: PathBuf,
+    /// Golden digests for numeric verification.
     pub goldens: Vec<Golden>,
+    /// Size of the HLO artifact in bytes (compile-cost proxy).
     pub hlo_bytes: u64,
 }
 
+/// The artifact manifest emitted by `python/compile/aot.py`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
+    /// Every payload in the artifact set.
     pub payloads: Vec<PayloadSpec>,
 }
 
@@ -39,6 +48,7 @@ impl Manifest {
         Self::from_json(&j, dir)
     }
 
+    /// Parse a manifest document; artifact paths resolve relative to `dir`.
     pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest, String> {
         let fmt = j.get("format").and_then(|f| f.as_str()).unwrap_or("");
         if fmt != "hlo-text" {
@@ -93,10 +103,12 @@ impl Manifest {
         Ok(Manifest { payloads: out })
     }
 
+    /// Look up a payload by name.
     pub fn get(&self, name: &str) -> Option<&PayloadSpec> {
         self.payloads.iter().find(|p| p.name == name)
     }
 
+    /// All payload names, in manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.payloads.iter().map(|p| p.name.as_str()).collect()
     }

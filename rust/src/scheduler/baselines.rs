@@ -14,11 +14,23 @@ use crate::workload::spec::FunctionId;
 /// Least-connections: route to the worker with the fewest active
 /// connections; uniform random among ties (olscheduler's "least-loaded").
 #[derive(Clone, Debug, Default)]
-pub struct LeastConnections;
+pub struct LeastConnections {
+    /// 0 = exact uniform-among-ties; d ≥ 1 = power-of-d sampled variant
+    /// (`scheduler.tie_sample_d`, see [`super::sampled_least_loaded`]).
+    sample_d: usize,
+}
 
 impl LeastConnections {
+    /// Exact least-connections (the paper's baseline).
     pub fn new() -> Self {
-        Self
+        Self::default()
+    }
+
+    /// Switch to the power-of-d sampled tie-break when `d >= 1` (0 keeps
+    /// the exact rule). O(d) per decision instead of Θ(tie set).
+    pub fn with_tie_sample(mut self, d: usize) -> Self {
+        self.sample_d = d;
+        self
     }
 }
 
@@ -28,6 +40,9 @@ impl Scheduler for LeastConnections {
     }
 
     fn select(&mut self, _f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
+        if self.sample_d > 0 {
+            return super::sampled_least_loaded(ctx.loads, ctx.rng, self.sample_d);
+        }
         // O(tie set) via the router's min-load index when attached,
         // identical linear scan otherwise.
         ctx.least_loaded_random_tie()
@@ -41,6 +56,7 @@ pub struct RandomSched {
 }
 
 impl RandomSched {
+    /// Uniform-random routing over `workers` workers.
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         Self { workers }
@@ -74,6 +90,7 @@ pub struct HashMod {
 }
 
 impl HashMod {
+    /// `hash(f) mod workers` routing.
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         Self { workers }
@@ -107,6 +124,7 @@ impl Scheduler for HashMod {
 pub struct Jsq;
 
 impl Jsq {
+    /// Classical JSQ (lowest id among minima).
     pub fn new() -> Self {
         Self
     }
@@ -131,6 +149,7 @@ pub struct PowerOfD {
 }
 
 impl PowerOfD {
+    /// Power-of-d-choices over `workers` workers (d distinct samples).
     pub fn new(workers: usize, d: usize) -> Self {
         assert!(workers > 0 && d > 0);
         Self { workers, d: d.min(workers) }

@@ -35,6 +35,7 @@
 use super::{SchedCtx, Scheduler, WorkerId};
 use crate::workload::spec::FunctionId;
 
+/// The pull-based scheduler (Algorithm 1). See the module docs.
 pub struct Hiku {
     /// PQ_f: one multiset of enqueued workers per function type. Indexed
     /// densely by FunctionId; grows on demand.
@@ -44,18 +45,27 @@ pub struct Hiku {
     /// mechanism can be changed to other scheduling algorithms". `None` =
     /// the paper's default (least connections, random tie-break).
     fallback: Option<Box<dyn Scheduler>>,
+    /// 0 = the exact default fallback; d ≥ 1 = power-of-d sampled variant
+    /// (`scheduler.tie_sample_d`). Ignored when a custom `fallback` is
+    /// installed (the custom scheduler owns its own tie policy).
+    sample_d: usize,
     // ---- diagnostics ----
+    /// Requests served through the pull mechanism (PQ_f dequeues).
     pub pulls: u64,
+    /// Requests served through the fallback mechanism.
     pub fallbacks: u64,
+    /// Eviction notifications received.
     pub evict_notifications: u64,
 }
 
 impl Hiku {
+    /// Hiku with the paper's default fallback (least connections).
     pub fn new(workers: usize) -> Self {
         Self {
             idle_queues: Vec::new(),
             workers,
             fallback: None,
+            sample_d: 0,
             pulls: 0,
             fallbacks: 0,
             evict_notifications: 0,
@@ -69,6 +79,13 @@ impl Hiku {
         h
     }
 
+    /// Use the power-of-d sampled tie-break in the default fallback when
+    /// `d >= 1` (0 keeps the exact uniform-among-ties rule).
+    pub fn with_tie_sample(mut self, d: usize) -> Self {
+        self.sample_d = d;
+        self
+    }
+
     fn queue_mut(&mut self, f: FunctionId) -> &mut Vec<WorkerId> {
         if f >= self.idle_queues.len() {
             self.idle_queues.resize_with(f + 1, Vec::new);
@@ -76,6 +93,7 @@ impl Hiku {
         &mut self.idle_queues[f]
     }
 
+    /// Current size of `PQ_f` (idle advertisements for `f`).
     pub fn queue_len(&self, f: FunctionId) -> usize {
         self.idle_queues.get(f).map(|q| q.len()).unwrap_or(0)
     }
@@ -113,6 +131,9 @@ impl Scheduler for Hiku {
         self.fallbacks += 1;
         match &mut self.fallback {
             Some(fb) => fb.select(f, ctx),
+            None if self.sample_d > 0 => {
+                super::sampled_least_loaded(ctx.loads, ctx.rng, self.sample_d)
+            }
             None => ctx.least_loaded_random_tie(),
         }
     }

@@ -32,6 +32,7 @@ pub use baselines::{HashMod, Jsq, LeastConnections, PowerOfD, RandomSched};
 pub use hiku::Hiku;
 pub use ring::{ChBl, Consistent, RjCh};
 
+/// Dense worker index (see [`crate::platform::worker::WorkerId`]).
 pub type WorkerId = usize;
 
 /// Router-maintained state handed to every scheduler call.
@@ -104,6 +105,7 @@ impl<'a> SchedCtx<'a> {
 /// A scheduling algorithm. Object-safe so the runtime can swap algorithms
 /// from config (`scheduler.name`).
 pub trait Scheduler: Send {
+    /// Stable algorithm name (the config `scheduler.name` vocabulary).
     fn name(&self) -> &'static str;
 
     /// Route a request for function type `f` to a worker.
@@ -128,6 +130,26 @@ pub trait Scheduler: Send {
     fn idle_entries(&self) -> usize {
         0
     }
+}
+
+/// Power-of-d-style sampled approximation of [`least_loaded_random_tie`]:
+/// draw `d` workers uniformly *with replacement* and keep the least
+/// loaded, first-drawn among equals. O(d) time, zero allocation, exactly
+/// `d` RNG draws — the `scheduler.tie_sample_d` variant that makes
+/// least-connections viable at 100k workers, where the exact rule's
+/// one-draw-per-tied-worker reservoir is Θ(tie set) by construction
+/// (DESIGN.md §6). Not stream-compatible with the exact rule: enabling it
+/// changes every subsequent tie-break draw.
+pub fn sampled_least_loaded(loads: &[u32], rng: &mut Pcg64, d: usize) -> WorkerId {
+    debug_assert!(!loads.is_empty() && d >= 1);
+    let mut best = rng.index(loads.len());
+    for _ in 1..d {
+        let w = rng.index(loads.len());
+        if loads[w] < loads[best] {
+            best = w;
+        }
+    }
+    best
 }
 
 /// Least-loaded worker with uniform random tie-breaking — the fallback rule
@@ -161,8 +183,12 @@ pub fn make_scheduler(cfg: &SchedulerConfig, workers: usize) -> Result<Box<dyn S
         return Ok(Box::new(Hiku::with_fallback(workers, fallback)));
     }
     let s: Box<dyn Scheduler> = match cfg.name.as_str() {
-        "hiku" | "pull-based" | "pull" => Box::new(Hiku::new(workers)),
-        "least-connections" | "lc" => Box::new(LeastConnections::new()),
+        "hiku" | "pull-based" | "pull" => {
+            Box::new(Hiku::new(workers).with_tie_sample(cfg.tie_sample_d))
+        }
+        "least-connections" | "lc" => {
+            Box::new(LeastConnections::new().with_tie_sample(cfg.tie_sample_d))
+        }
         "random" => Box::new(RandomSched::new(workers)),
         "hash-mod" => Box::new(HashMod::new(workers)),
         "consistent" | "ch" => Box::new(Consistent::new(workers, cfg.vnodes)),
@@ -175,8 +201,9 @@ pub fn make_scheduler(cfg: &SchedulerConfig, workers: usize) -> Result<Box<dyn S
     Ok(s)
 }
 
-/// All scheduler names the evaluation sweeps (paper's four + extensions).
+/// The paper's evaluated schedulers (its contribution + three baselines).
 pub const PAPER_SCHEDULERS: [&str; 4] = ["hiku", "ch-bl", "random", "least-connections"];
+/// Every scheduler the crate implements (paper set + §II/§VI ablations).
 pub const ALL_SCHEDULERS: [&str; 9] = [
     "hiku",
     "least-connections",
@@ -256,6 +283,65 @@ mod tests {
             assert_eq!(ja, jb, "jsq rule diverged");
         }
         assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn sampled_tie_break_is_bounded_and_load_aware() {
+        let mut rng = Pcg64::new(9);
+        // d = 1 is plain uniform random (no load awareness by design).
+        let loads = [100u32, 0, 0, 0];
+        let mut picked0 = false;
+        for _ in 0..200 {
+            let w = sampled_least_loaded(&loads, &mut rng, 1);
+            assert!(w < 4);
+            picked0 |= w == 0;
+        }
+        assert!(picked0, "d=1 must sometimes pick the loaded worker");
+        // d = 4 with replacement: picking worker 0 needs all 4 draws to
+        // land on it — p = (1/4)^4; over 2000 trials a handful at most.
+        let mut hits = 0;
+        for _ in 0..2000 {
+            if sampled_least_loaded(&loads, &mut rng, 4) == 0 {
+                hits += 1;
+            }
+        }
+        assert!(hits < 40, "overloaded worker picked {hits}/2000 times");
+    }
+
+    #[test]
+    fn tie_sample_config_reaches_lc_and_hiku_fallback() {
+        // With a huge d the sample almost surely covers the single idle
+        // worker, so the sampled variant still finds it.
+        let cfg = SchedulerConfig {
+            name: "least-connections".into(),
+            tie_sample_d: 64,
+            ..Default::default()
+        };
+        let mut s = make_scheduler(&cfg, 8).unwrap();
+        let mut rng = Pcg64::new(10);
+        let mut loads = [5u32; 8];
+        loads[3] = 0;
+        // A 64-draw sample misses the idle worker with p = (7/8)^64 ≈
+        // 3e-4, so near-all selections must land on it.
+        let mut hits = 0;
+        for _ in 0..50 {
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
+            if s.select(0, &mut ctx) == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 45, "sampled LC found the idle worker only {hits}/50 times");
+        // Hiku with an empty PQ_f takes the sampled fallback path.
+        let cfg = SchedulerConfig { name: "hiku".into(), tie_sample_d: 64, ..Default::default() };
+        let mut h = make_scheduler(&cfg, 8).unwrap();
+        let mut hits = 0;
+        for _ in 0..50 {
+            let mut ctx = SchedCtx::new(&loads, &mut rng);
+            if h.select(0, &mut ctx) == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 45, "sampled hiku fallback found the idle worker only {hits}/50 times");
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub struct HashRing {
 }
 
 impl HashRing {
+    /// A ring over `workers` workers with `vnodes` points each.
     pub fn new(workers: usize, vnodes: usize) -> Self {
         assert!(workers > 0 && vnodes > 0);
         // Bulk build: generate every point, sort once. The seed sorted
@@ -56,6 +57,7 @@ impl HashRing {
         self.points.retain(|&(_, pw)| pw != w);
     }
 
+    /// True when the ring holds no points (no workers).
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
@@ -143,6 +145,7 @@ pub struct Consistent {
 }
 
 impl Consistent {
+    /// Plain consistent hashing over `workers` workers.
     pub fn new(workers: usize, vnodes: usize) -> Self {
         Self { ring: HashRing::new(workers, vnodes), vnodes }
     }
@@ -180,6 +183,7 @@ pub struct ChBl {
 }
 
 impl ChBl {
+    /// CH-BL with load threshold `c` (the paper uses 1.25).
     pub fn new(workers: usize, vnodes: usize, c: f64) -> Self {
         assert!(c >= 1.0);
         Self { ring: HashRing::new(workers, vnodes), c, workers, vnodes, overflows: 0 }
@@ -224,10 +228,12 @@ pub struct RjCh {
     c: f64,
     workers: usize,
     vnodes: usize,
+    /// Random jumps taken (diagnostics for the cascade ablation).
     pub jumps: u64,
 }
 
 impl RjCh {
+    /// RJ-CH with load threshold `c`.
     pub fn new(workers: usize, vnodes: usize, c: f64) -> Self {
         assert!(c >= 1.0);
         Self { ring: HashRing::new(workers, vnodes), c, workers, vnodes, jumps: 0 }

@@ -39,14 +39,35 @@
 //! [`Simulation::with_reference_core`], and `tests/determinism.rs` asserts
 //! run-for-run equivalence across schedulers, modes, autoscale policies
 //! and seeds; `benches/sim_engine_perf.rs` measures the before/after.
+//!
+//! ## Sharding hooks
+//!
+//! The parallel driver ([`crate::sim::shard`]) runs one `Simulation` per
+//! OS thread over a worker slice and a VU slice
+//! ([`Simulation::with_vu_slice`]), stepping each through epoch-bounded
+//! event processing (`step_until`) between event-time barriers. `run()`
+//! is exactly `prepare + drain-everything + finalize`, so the serial path
+//! (`--shards 1`) is byte-for-byte the seed behavior — the stepping API
+//! only re-chunks the identical pop sequence.
+//!
+//! ## Batch-coalesced completions
+//!
+//! When several completions land on the same worker at the same timestamp
+//! *adjacently* in `(time, seq)` order, the dispatcher folds them into one
+//! [`Cluster::complete_batch`] call: the worker-side transitions run in
+//! the same order, but the aggregate snapshot/journal/load-index
+//! bookkeeping is paid once per batch instead of once per event. Only
+//! adjacent events are merged, so scheduler callbacks, RNG draws, metric
+//! pushes and event seq numbers are identical to one-at-a-time dispatch
+//! (DESIGN.md §6; equivalence property-tested in `tests/determinism.rs`).
 
 use super::events::{Event, EventQueue};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
 use crate::config::Config;
 use crate::metrics::RunMetrics;
-use crate::platform::{AssignOutcome, Cluster, StartInfo, WorkerId};
+use crate::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId, StartInfo, WorkerId};
 use crate::scheduler::{SchedCtx, Scheduler};
-use crate::util::loadidx::MinLoadIndex;
+use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
 use crate::workload::spec::FunctionRegistry;
@@ -103,10 +124,26 @@ pub struct Simulation<'a> {
     /// Reference mode: seed event core + seed O(workers) scan paths, for
     /// the equivalence suite and before/after benchmarks.
     reference: bool,
+    /// VU-slice restriction (sharded runs): this instance issues arrivals
+    /// only for VUs (closed loop) / trace indices (open loop) with
+    /// `i % vu_stride == vu_offset`. `(0, 1)` = the whole workload.
+    vu_offset: usize,
+    vu_stride: usize,
+    /// Open-loop arrivals table, installed by `prepare_open`.
+    open_arrivals: Option<Vec<(f64, usize)>>,
+    /// Track per-function arrival rates even when `cluster.prewarm` is off
+    /// (sharded runs: the coordinator pre-warms globally from shard-local
+    /// rate estimates).
+    track_rates: bool,
+    /// Scratch for same-tick completion coalescing: (sandbox, request).
+    batch_buf: Vec<(SandboxId, u64)>,
+    /// Scratch sandbox-id list handed to `Cluster::complete_batch`.
+    batch_ids: Vec<SandboxId>,
     metrics: RunMetrics,
 }
 
 impl<'a> Simulation<'a> {
+    /// A single-scheduler simulation over the configured cluster/workload.
     pub fn new(
         cfg: &'a Config,
         registry: &'a FunctionRegistry,
@@ -117,6 +154,9 @@ impl<'a> Simulation<'a> {
         Self::with_schedulers(cfg, registry, workload, vec![scheduler], seed)
     }
 
+    /// A simulation with several independent scheduler instances (VU `v`
+    /// is served by instance `v % instances` — the distributed-scheduling
+    /// ablation).
     pub fn with_schedulers(
         cfg: &'a Config,
         registry: &'a FunctionRegistry,
@@ -154,6 +194,12 @@ impl<'a> Simulation<'a> {
             queue_delays: Vec::with_capacity(cap),
             warm_scratch: vec![0; registry.len()],
             reference: false,
+            vu_offset: 0,
+            vu_stride: 1,
+            open_arrivals: None,
+            track_rates: false,
+            batch_buf: Vec::new(),
+            batch_ids: Vec::new(),
             metrics: RunMetrics::new(
                 &name,
                 cfg.cluster.workers,
@@ -200,6 +246,27 @@ impl<'a> Simulation<'a> {
         self
     }
 
+    /// Restrict this instance to the VU slice `offset, offset + stride, …`
+    /// — the sharded engine's workload partition (the worker slice comes
+    /// from `cfg.cluster.workers`; VU ids stay global). In open-loop mode
+    /// the same rule partitions trace arrival indices. `(0, 1)` is the
+    /// default whole-workload behavior, with an identical event stream to
+    /// an unsliced run.
+    pub fn with_vu_slice(mut self, offset: usize, stride: usize) -> Self {
+        assert!(stride >= 1 && offset < stride, "bad VU slice {offset}/{stride}");
+        self.vu_offset = offset;
+        self.vu_stride = stride;
+        self
+    }
+
+    /// Track per-function arrival rates even without the local pre-warm
+    /// heuristic — the sharded coordinator aggregates shard-local rates at
+    /// barriers to drive globally placed pre-warming.
+    pub(crate) fn with_rate_tracking(mut self) -> Self {
+        self.track_rates = true;
+        self
+    }
+
     /// Pre-schedule the autoscaler's exact-time events and, for
     /// tick-driven policies, the first control tick.
     fn install_autoscaler_events(&mut self) {
@@ -224,20 +291,29 @@ impl<'a> Simulation<'a> {
         self.metrics.peak_event_queue = self.queue.peak_len();
     }
 
-    /// Run the closed-loop VU workload to completion.
-    pub fn run(mut self) -> RunMetrics {
+    /// Seed the initial event set for a closed-loop run. The push order is
+    /// part of the determinism contract (event `seq` numbers break ties),
+    /// so it must not change across refactors.
+    pub(crate) fn prepare_closed(&mut self) {
         self.metrics.record_scale(0.0, self.cluster.active_workers());
         self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
             self.queue.push_at(t, Event::Scale { up });
         }
         for (vu, script) in self.workload.vus.iter().enumerate() {
-            self.queue.push_at(script.start_delay_s, Event::Arrival { vu, step: 0 });
+            if vu % self.vu_stride == self.vu_offset {
+                self.queue.push_at(script.start_delay_s, Event::Arrival { vu, step: 0 });
+            }
         }
         if self.cfg.cluster.prewarm {
             self.queue.push_at(1.0, Event::PreWarmTick);
         }
         self.queue.push_at(self.sweep_dt(), Event::SweepTick);
+    }
+
+    /// Run the closed-loop VU workload to completion.
+    pub fn run(mut self) -> RunMetrics {
+        self.prepare_closed();
         self.event_loop();
         self.finalize_metrics();
         self.metrics
@@ -248,9 +324,10 @@ impl<'a> Simulation<'a> {
         (self.cfg.cluster.keep_alive_s / 2.0).clamp(0.05, 1.0)
     }
 
-    /// Run an open-loop trace: arrivals at fixed timestamps, ignoring
-    /// completions (burst-response experiments).
-    pub fn run_open_loop(mut self, trace: &OpenLoopTrace) -> RunMetrics {
+    /// Seed the initial event set for an open-loop trace replay (same
+    /// push-order contract as [`Simulation::prepare_closed`]) and install
+    /// the arrivals table the dispatcher resolves trace indices against.
+    pub(crate) fn prepare_open(&mut self, trace: &OpenLoopTrace) {
         self.metrics.record_scale(0.0, self.cluster.active_workers());
         self.install_autoscaler_events();
         for &(t, up) in &self.scale_events.clone() {
@@ -260,20 +337,20 @@ impl<'a> Simulation<'a> {
             if t >= self.cfg.workload.duration_s {
                 break;
             }
-            self.queue.push_at(t, Event::TraceArrival { index });
+            if index % self.vu_stride == self.vu_offset {
+                self.queue.push_at(t, Event::TraceArrival { index });
+            }
         }
         self.queue.push_at(self.sweep_dt(), Event::SweepTick);
         // Steal the arrivals for dispatch (cheap copy of (f64, usize)).
-        let arrivals = trace.arrivals.clone();
-        while let Some((t, ev)) = self.queue.pop() {
-            match ev {
-                Event::TraceArrival { index } => {
-                    let (_, f) = arrivals[index];
-                    self.issue(usize::MAX, index, f, t);
-                }
-                other => self.dispatch(other, t),
-            }
-        }
+        self.open_arrivals = Some(trace.arrivals.clone());
+    }
+
+    /// Run an open-loop trace: arrivals at fixed timestamps, ignoring
+    /// completions (burst-response experiments).
+    pub fn run_open_loop(mut self, trace: &OpenLoopTrace) -> RunMetrics {
+        self.prepare_open(trace);
+        self.event_loop();
         self.finalize_metrics();
         self.metrics
     }
@@ -284,11 +361,110 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    // ---- sharded-driver stepping API (crate::sim::shard) -----------------
+
+    /// Process every pending event strictly before `limit` (one barrier
+    /// epoch); returns true when the queue is fully drained. Over rising
+    /// limits this pops the exact sequence `run()`'s drain would — the
+    /// barrier only re-chunks it.
+    pub(crate) fn step_until(&mut self, limit: f64) -> bool {
+        while let Some((t, ev)) = self.queue.pop_before(limit) {
+            self.dispatch(ev, t);
+        }
+        self.queue.is_empty()
+    }
+
+    /// Advance the virtual clock to the barrier epoch `t` so coordinator
+    /// actions (scale, pre-warm) are timestamped at the boundary.
+    pub(crate) fn advance_clock_to(&mut self, t: f64) {
+        self.queue.advance_to(t);
+    }
+
+    /// Finalize and return the metrics (the per-shard tail of a run).
+    pub(crate) fn finish(mut self) -> RunMetrics {
+        self.finalize_metrics();
+        self.metrics
+    }
+
+    /// Workers currently eligible for selection in this shard.
+    pub(crate) fn active_workers(&self) -> usize {
+        self.cluster.active_workers()
+    }
+
+    /// (running, queued) totals over this shard's active workers.
+    pub(crate) fn cluster_running_queued(&self) -> (usize, usize) {
+        (self.cluster.total_running(), self.cluster.total_queued())
+    }
+
+    /// Fill `out[f]` with this shard's warm supply per function.
+    pub(crate) fn cluster_warm_supply_into(&self, out: &mut [usize]) {
+        self.cluster.warm_supply_into(out);
+    }
+
+    /// O(1) digest of this shard's worker loads (barrier payload).
+    pub(crate) fn cluster_load_summary(&self) -> LoadSummary {
+        self.cluster.load_summary()
+    }
+
+    /// The pre-warm heuristic's capped deficit for one function given the
+    /// current warm `supply`: expected concurrent demand (EWMA arrival
+    /// rate × mean warm service time) minus supply, at most 2 per tick.
+    /// Single source of truth shared by the serial `on_prewarm_tick` and
+    /// the shard report (`prewarm_deficits_into`), so the sharded
+    /// coordinator can never drift from the serial formula.
+    fn prewarm_deficit(&self, f: usize, supply: usize) -> usize {
+        let rate = self.arrival_rate[f];
+        if rate <= 0.0 {
+            return 0;
+        }
+        let mean_exec = self.registry.app(f).warm_ms / 1000.0;
+        let demand = (rate * mean_exec).ceil() as usize;
+        demand.saturating_sub(supply).min(2) // <= 2/tick/function
+    }
+
+    /// Per-function pre-warm deficits under the 1 Hz heuristic: the
+    /// shard-local [`Simulation::prewarm_deficit`] against the local warm
+    /// supply. The coordinator sums these across shards and places the
+    /// global total.
+    pub(crate) fn prewarm_deficits_into(&self, out: &mut Vec<(usize, usize)>) {
+        out.clear();
+        for f in 0..self.registry.len() {
+            let deficit = self.prewarm_deficit(f, self.cluster.warm_nonbusy(f));
+            if deficit > 0 {
+                out.push((f, deficit));
+            }
+        }
+    }
+
+    /// Scale this shard's active worker slice to `target` (the shard's
+    /// share of a global autoscale decision), one worker at a time exactly
+    /// like the serial `on_autoscale_tick` application loop.
+    pub(crate) fn apply_scale_target(&mut self, target: usize) {
+        while self.cluster.active_workers() < target {
+            self.on_scale(true);
+        }
+        while self.cluster.active_workers() > target {
+            let before = self.cluster.active_workers();
+            self.on_scale(false);
+            if self.cluster.active_workers() == before {
+                break; // the shard's last worker never drains
+            }
+        }
+    }
+
+    /// Speculatively initialize `n` sandboxes for `f` at the current clock
+    /// (a coordinator `SpawnPrewarm` message; placement is shard-local via
+    /// the min-load index).
+    pub(crate) fn apply_prewarm(&mut self, f: usize, n: usize) {
+        let t = self.queue.now();
+        self.spawn_prewarm(f, n, t);
+    }
+
     fn dispatch(&mut self, ev: Event, t: f64) {
         match ev {
             Event::Arrival { vu, step } => self.on_arrival(vu, step, t),
             Event::Completion { worker, sandbox, request } => {
-                self.on_completion(worker, sandbox, request, t)
+                self.on_completion_coalesced(worker, sandbox, request, t)
             }
             Event::SweepTick => self.on_sweep(t),
             Event::KeepAlive { worker, sandbox, epoch } => {
@@ -302,8 +478,53 @@ impl<'a> Simulation<'a> {
             Event::AutoscaleTick => self.on_autoscale_tick(t),
             Event::PreWarmTick => self.on_prewarm_tick(t),
             Event::PreWarmDone { worker, sandbox } => self.on_prewarm_done(worker, sandbox, t),
-            Event::TraceArrival { .. } => unreachable!("only in run_open_loop"),
+            Event::TraceArrival { index } => {
+                let f = self.open_arrivals.as_ref().expect("open-loop arrivals not installed")
+                    [index]
+                    .1;
+                self.issue(usize::MAX, index, f, t);
+            }
         }
+    }
+
+    /// Dispatch a completion, folding the maximal run of *immediately
+    /// following* same-timestamp completions on the same worker into one
+    /// batched cluster update (see "Batch-coalesced completions" in the
+    /// module docs). Only adjacent `(time, seq)` events merge, so every
+    /// observable ordering is identical to one-at-a-time dispatch; the
+    /// saving is one aggregate sync per batch instead of per event.
+    fn on_completion_coalesced(&mut self, w: WorkerId, sandbox: SandboxId, request: u64, t: f64) {
+        // Fast path: the head of the queue is not a same-tick completion
+        // on this worker (ties need identical f64 completion times, so
+        // batches only form under quantized service times / extreme
+        // rates).
+        let first_more = self.queue.pop_if(|t2, ev| {
+            t2 == t && matches!(ev, Event::Completion { worker, .. } if *worker == w)
+        });
+        let Some((_, more)) = first_more else {
+            self.on_completion(w, sandbox, request, t);
+            return;
+        };
+        let mut batch = std::mem::take(&mut self.batch_buf);
+        batch.clear();
+        batch.push((sandbox, request));
+        let Event::Completion { sandbox: sb2, request: rid2, .. } = more else { unreachable!() };
+        batch.push((sb2, rid2));
+        while let Some((_, ev)) = self.queue.pop_if(|t2, ev| {
+            t2 == t && matches!(ev, Event::Completion { worker, .. } if *worker == w)
+        }) {
+            let Event::Completion { sandbox, request, .. } = ev else { unreachable!() };
+            batch.push((sandbox, request));
+        }
+        let mut ids = std::mem::take(&mut self.batch_ids);
+        ids.clear();
+        ids.extend(batch.iter().map(|&(sb, _)| sb));
+        let outcomes = self.cluster.complete_batch(w, &ids, self.cfg.cluster.elastic, t);
+        for (&(_, rid), outcome) in batch.iter().zip(outcomes) {
+            self.post_completion(w, rid, outcome, t);
+        }
+        self.batch_ids = ids;
+        self.batch_buf = batch;
     }
 
     /// Periodic keep-alive sweep across all workers.
@@ -513,12 +734,9 @@ impl<'a> Simulation<'a> {
     /// recount per function.
     fn on_prewarm_tick(&mut self, t: f64) {
         for f in 0..self.registry.len() {
-            let rate = self.arrival_rate[f];
-            if rate <= 0.0 {
-                continue;
+            if self.arrival_rate[f] <= 0.0 {
+                continue; // skip the supply read entirely (hot at scale)
             }
-            let mean_exec = self.registry.app(f).warm_ms / 1000.0;
-            let demand = (rate * mean_exec).ceil() as usize;
             let supply: usize = if self.reference {
                 (0..self.cluster.active_workers())
                     .map(|w| {
@@ -529,7 +747,7 @@ impl<'a> Simulation<'a> {
             } else {
                 self.cluster.warm_nonbusy(f)
             };
-            let deficit = demand.saturating_sub(supply).min(2); // <= 2/tick/function
+            let deficit = self.prewarm_deficit(f, supply);
             self.spawn_prewarm(f, deficit, t);
         }
         if t + 1.0 < self.cfg.workload.duration_s {
@@ -559,7 +777,7 @@ impl<'a> Simulation<'a> {
     /// Route and start/queue one request (closed- or open-loop).
     fn issue(&mut self, vu: usize, step: usize, f: usize, t: f64) {
         let rid = self.requests.len() as u64;
-        if self.cfg.cluster.prewarm {
+        if self.cfg.cluster.prewarm || self.track_rates {
             self.track_arrival(f, t);
         }
         if let Some(p) = self.autoscaler.as_mut() {
@@ -630,29 +848,38 @@ impl<'a> Simulation<'a> {
         );
     }
 
-    fn on_completion(&mut self, w: WorkerId, sandbox: u64, rid: u64, t: f64) {
+    fn on_completion(&mut self, w: WorkerId, sandbox: SandboxId, rid: u64, t: f64) {
+        // Worker-side: sandbox idles; (queue mode) a queued request may
+        // start; (elastic mode) the idle pool is trimmed to capacity.
+        let outcome = if self.cfg.cluster.elastic {
+            let (expiry, evicted) = self.cluster.complete_elastic(w, sandbox, t);
+            BatchCompletion { expiry, started: None, evicted }
+        } else {
+            let (expiry, started) = self.cluster.complete(w, sandbox, t);
+            BatchCompletion { expiry, started, evicted: Vec::new() }
+        };
+        self.post_completion(w, rid, outcome, t);
+    }
+
+    /// Everything after the worker-side completion transition: load-view
+    /// decrement, eviction notifications, the pull advertisement, the
+    /// queued start, response metrics, and the VU's next arrival. Shared
+    /// verbatim between one-at-a-time and batch-coalesced dispatch so the
+    /// two paths cannot drift.
+    fn post_completion(&mut self, w: WorkerId, rid: u64, outcome: BatchCompletion, t: f64) {
         let meta = self.requests[rid as usize];
         debug_assert_eq!(meta.worker, w);
         self.loads[meta.sched].dec(w);
-
-        // Worker-side: sandbox idles; (queue mode) a queued request may
-        // start; (elastic mode) the idle pool is trimmed to capacity.
-        let (expiry, started) = if self.cfg.cluster.elastic {
-            let (expiry, evicted) = self.cluster.complete_elastic(w, sandbox, t);
-            for f in evicted {
-                self.notify_evict(w, f);
-            }
-            (expiry, None)
-        } else {
-            self.cluster.complete(w, sandbox, t)
-        };
+        for f in outcome.evicted {
+            self.notify_evict(w, f);
+        }
 
         // Pull mechanism: the worker enqueues in PQ_f only if its instance
         // is actually idle after completion (if it was immediately reused
         // or reclaimed, there is nothing to advertise). The advertisement
         // goes to the scheduler instance that served the request — the
         // distributed-JIQ reporting rule [21].
-        if let Some((sb, epoch)) = expiry {
+        if let Some((sb, epoch)) = outcome.expiry {
             let active = self.cluster.active_workers();
             if w < active {
                 let si = meta.sched;
@@ -670,7 +897,7 @@ impl<'a> Simulation<'a> {
             }
         }
 
-        if let Some(info) = started {
+        if let Some(info) = outcome.started {
             self.handle_start(w, info, t);
         }
 
@@ -725,8 +952,14 @@ fn build_parts(
 
 /// Run one (config, seed) closed-loop experiment. This is the single
 /// policy-driven entry point: auto-scaling comes from `cfg.autoscale`
-/// (`none`, `scheduled`, `reactive`, or `predictive`).
+/// (`none`, `scheduled`, `reactive`, or `predictive`), and `cfg.sim.shards`
+/// selects the engine — 1 (default) is the serial engine, bit-identical to
+/// the seed path; ≥ 2 partitions workers and VUs across OS threads behind
+/// an event-time barrier ([`crate::sim::shard`]).
 pub fn run_once(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
+    if cfg.sim.shards > 1 {
+        return super::shard::run_sharded(cfg, seed);
+    }
     let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
     let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
         .with_config_autoscaler()?;
@@ -770,7 +1003,12 @@ pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMet
 
 /// Replay an open-loop (time, function) trace through the cluster, with
 /// auto-scaling from `cfg.autoscale` (the bursty-trace autoscale bench).
+/// `cfg.sim.shards ≥ 2` partitions trace arrivals round-robin across the
+/// sharded engine's threads.
 pub fn run_trace(cfg: &Config, trace: &OpenLoopTrace, seed: u64) -> Result<RunMetrics, String> {
+    if cfg.sim.shards > 1 {
+        return super::shard::run_sharded_trace(cfg, trace, seed);
+    }
     // The VU workload is unused in open-loop mode, but the constructor
     // wants one; generate a minimal script set.
     let (registry, workload, schedulers) = build_parts(cfg, seed, Some(1))?;

@@ -176,9 +176,10 @@ impl Calendar {
         mi
     }
 
-    /// Remove and return the globally minimum `(key, seq)` entry.
-    /// `now` is the queue clock (all entries are at or after it).
-    fn pop(&mut self, now: f64) -> Entry {
+    /// Locate the globally minimum `(key, seq)` entry without removing it:
+    /// returns its (bucket index, position). `now` is the queue clock (all
+    /// entries are at or after it).
+    fn find_min(&self, now: f64) -> (usize, usize) {
         debug_assert!(self.count > 0);
         let nbuckets = self.mask + 1;
         let start_vb = self.vb_of(now);
@@ -190,10 +191,7 @@ impl Calendar {
             }
             let mi = Self::min_pos(&self.buckets[idx]);
             if self.buckets[idx][mi].vb <= vb {
-                let e = self.buckets[idx].swap_remove(mi);
-                self.count -= 1;
-                self.maybe_shrink();
-                return e;
+                return (idx, mi);
             }
             // The bucket's minimum is beyond this rotation; by vb
             // monotonicity so is everything else in it.
@@ -211,11 +209,21 @@ impl Calendar {
                 }
             }
         }
-        let (bi, i) = best.expect("count > 0 but no entry found");
+        best.expect("count > 0 but no entry found")
+    }
+
+    /// Remove the entry at (bucket, position) found by [`Calendar::find_min`].
+    fn remove_at(&mut self, bi: usize, i: usize) -> Entry {
         let e = self.buckets[bi].swap_remove(i);
         self.count -= 1;
         self.maybe_shrink();
         e
+    }
+
+    /// Remove and return the globally minimum `(key, seq)` entry.
+    fn pop(&mut self, now: f64) -> Entry {
+        let (bi, i) = self.find_min(now);
+        self.remove_at(bi, i)
     }
 
     fn maybe_shrink(&mut self) {
@@ -313,14 +321,17 @@ impl EventQueue {
         }
     }
 
+    /// The virtual clock: the timestamp of the last popped event.
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Pending (scheduled, not yet popped) events.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -376,6 +387,82 @@ impl EventQueue {
         debug_assert!(t >= self.now);
         self.now = t;
         Some((t, e.event))
+    }
+
+    /// Timestamp of the earliest pending event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        match &self.store {
+            Store::Calendar(c) => {
+                let (bi, i) = c.find_min(self.now);
+                Some(c.buckets[bi][i].time())
+            }
+            #[cfg(feature = "ref-heap")]
+            Store::Heap(h) => h.peek().map(Entry::time),
+        }
+    }
+
+    /// Pop the earliest event only if `pred(time, &event)` accepts it;
+    /// bookkeeping (clock, counters) matches [`EventQueue::pop`] exactly.
+    /// One minimum-search per call whether or not the pop happens — this
+    /// backs the epoch-bounded draining of the sharded engine
+    /// ([`EventQueue::pop_before`]) and the engine's same-tick completion
+    /// coalescing without a separate peek + pop double scan.
+    pub fn pop_if<F>(&mut self, pred: F) -> Option<(f64, Event)>
+    where
+        F: FnOnce(f64, &Event) -> bool,
+    {
+        if self.len == 0 {
+            return None;
+        }
+        let e = match &mut self.store {
+            Store::Calendar(c) => {
+                let (bi, i) = c.find_min(self.now);
+                let head = c.buckets[bi][i];
+                if !pred(head.time(), &head.event) {
+                    return None;
+                }
+                c.remove_at(bi, i)
+            }
+            #[cfg(feature = "ref-heap")]
+            Store::Heap(h) => {
+                let head = *h.peek().expect("len > 0");
+                if !pred(head.time(), &head.event) {
+                    return None;
+                }
+                h.pop().expect("len > 0")
+            }
+        };
+        self.len -= 1;
+        self.popped += 1;
+        let t = e.time();
+        debug_assert!(t >= self.now);
+        self.now = t;
+        Some((t, e.event))
+    }
+
+    /// Pop the earliest event if it is strictly before `limit` — the
+    /// sharded engine's epoch boundary rule (events exactly at a barrier
+    /// epoch belong to the next epoch, after control actions applied at
+    /// the barrier).
+    pub fn pop_before(&mut self, limit: f64) -> Option<(f64, Event)> {
+        self.pop_if(|t, _| t < limit)
+    }
+
+    /// Advance the clock to `t` without popping, so control actions
+    /// injected at a barrier (scale, pre-warm) are timestamped at the
+    /// epoch boundary rather than at the shard's last local event. No
+    /// pending event may be earlier than `t`.
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(
+            self.peek_time().map_or(true, |pt| pt >= t),
+            "advancing the clock past a pending event"
+        );
+        if t > self.now {
+            self.now = t;
+        }
     }
 }
 
@@ -631,6 +718,77 @@ mod tests {
                     break;
                 }
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peek_and_pop_before_respect_bounds() {
+        let mut q = EventQueue::new();
+        q.push_at(2.0, Event::TraceArrival { index: 0 });
+        q.push_at(5.0, Event::TraceArrival { index: 1 });
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.len(), 2, "peek must not remove");
+        // Head at the limit: strictly-before rule refuses it.
+        assert_eq!(q.pop_before(2.0), None);
+        assert_eq!(q.pop_before(2.5), Some((2.0, Event::TraceArrival { index: 0 })));
+        assert_eq!(q.now(), 2.0);
+        assert_eq!(q.pop_before(4.0), None, "next head is at 5.0");
+        // advance_to moves the clock into the gap; pushes at the boundary
+        // stay legal and the head is untouched.
+        q.advance_to(4.0);
+        assert_eq!(q.now(), 4.0);
+        q.push_at(4.0, Event::SweepTick);
+        assert_eq!(q.pop_before(6.0), Some((4.0, Event::SweepTick)));
+        assert_eq!(q.pop_before(6.0), Some((5.0, Event::TraceArrival { index: 1 })));
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        assert_eq!(q.pop_before(100.0), None);
+        assert_eq!(q.popped(), 3, "refused pops must not count");
+    }
+
+    #[test]
+    fn pop_if_matches_head_only() {
+        let mut q = EventQueue::new();
+        q.push_at(1.0, Event::TraceArrival { index: 0 });
+        q.push_at(1.0, Event::SweepTick);
+        // Predicate rejects the head (index 0): nothing pops, even though
+        // the second entry would match.
+        assert_eq!(q.pop_if(|_, e| matches!(e, Event::SweepTick)), None);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_if(|_, e| matches!(e, Event::TraceArrival { .. })).map(|(_, e)| e),
+            Some(Event::TraceArrival { index: 0 }));
+        assert_eq!(q.pop_if(|_, e| matches!(e, Event::SweepTick)).map(|(t, _)| t), Some(1.0));
+    }
+
+    /// `pop_before` over rising limits drains the identical (time, seq)
+    /// sequence as plain `pop` — the sharded engine's epoch-stepping rule
+    /// is a pure re-chunking of the serial order.
+    #[cfg(feature = "ref-heap")]
+    #[test]
+    fn prop_pop_before_equals_pop_sequence() {
+        check("pop-before-vs-pop", PropConfig { cases: 80, ..Default::default() }, |rng, size| {
+            let mut plain = EventQueue::new();
+            let mut epoch = EventQueue::reference();
+            for i in 0..size * 4 {
+                let t = rng.next_f64() * 40.0;
+                plain.push_at(t, Event::TraceArrival { index: i });
+                epoch.push_at(t, Event::TraceArrival { index: i });
+            }
+            let dt = 0.5 + rng.next_f64();
+            let mut k = 1u32;
+            loop {
+                let limit = dt * k as f64;
+                while let Some(got) = epoch.pop_before(limit) {
+                    let want = plain.pop();
+                    prop_assert!(Some(got) == want, "diverged: {:?} vs {:?}", got, want);
+                }
+                if epoch.is_empty() {
+                    break;
+                }
+                k += 1;
+            }
+            prop_assert!(plain.is_empty(), "plain queue has leftovers");
             Ok(())
         });
     }

@@ -1,0 +1,593 @@
+//! Sharded parallel event core: the worker set partitioned across OS
+//! threads behind an **event-time barrier**.
+//!
+//! ## Model
+//!
+//! `cfg.sim.shards = N` splits the cluster into N contiguous worker
+//! slices and the workload into N VU slices (VU `v` → shard `v mod N`;
+//! open-loop trace arrival `i` → shard `i mod N`). Each shard runs its own
+//! serial [`Simulation`] — its own calendar-queue [`super::EventQueue`],
+//! its own `Cluster` slice, scheduler instance(s), load views and split
+//! RNG streams — on its own thread. Workloads are therefore
+//! *partition-closed*: every request routes to a worker of the shard that
+//! issued it, which is exactly the paper's synchronization-free
+//! distributed-scheduler deployment (§I; the engine's
+//! `scheduler.instances` ablation, now with real parallelism).
+//!
+//! ## The event-time barrier
+//!
+//! Virtual time is chopped into epochs of `barrier_dt` seconds (the
+//! autoscale control interval when a tick-driven policy is configured,
+//! else `cfg.sim.barrier_s`). Within an epoch every shard drains its own
+//! events with `t < epoch_end` — no cross-thread communication at all —
+//! then the shards rendezvous twice per epoch:
+//!
+//! 1. each shard publishes a report (`ShardReport`): drained flag, active
+//!    worker count, running/queued totals, per-function warm supply, an
+//!    O(1) [`LoadSummary`] of its worker loads, and its local pre-warm
+//!    deficits;
+//! 2. *(barrier)* one thread becomes the coordinator: it merges the
+//!    reports in shard order (deterministic regardless of which thread
+//!    leads), runs the global control decisions — the autoscale policy
+//!    tick over the merged observation, scheduled scale events due this
+//!    epoch, and global pre-warm placement — and writes per-shard
+//!    [`ShardMsg`] mailboxes;
+//! 3. *(barrier)* each shard applies its mailbox at the epoch boundary
+//!    (the clock advances to the barrier time first, so control actions
+//!    are timestamped like the serial engine's control ticks) and starts
+//!    the next epoch.
+//!
+//! The run ends when every shard is drained, the epoch has passed
+//! `duration_s`, and the coordinator issued no messages.
+//!
+//! ## Cross-shard selection: power-of-d over shard summaries
+//!
+//! Global decisions that the serial engine answers with "the least-loaded
+//! worker" (pre-warm placement) would need a cross-shard argmin — Θ(tie
+//! set) by the exact-semantics argument of DESIGN.md §5. The coordinator
+//! instead samples **d = 2 shards** per placement from the merged
+//! [`LoadSummary`] table and routes to the less-loaded sample (mean load,
+//! then `min_load` as the tie key): O(d) per decision, never O(workers),
+//! and the chosen shard places locally with its own O(tie set) min-load
+//! index. This is the power-of-d-choices trade (Mitzenmacher): a bounded
+//! approximation of the argmin in exchange for constant cost.
+//!
+//! ## Determinism
+//!
+//! For a fixed (seed, shard count) the run is bit-reproducible regardless
+//! of thread scheduling: shards only interact at barriers, reports are
+//! merged in shard order, the coordinator's RNG is its own split stream,
+//! and every mailbox is a pure function of the epoch's reports. `--shards
+//! 1` never enters this module — [`super::run_once`] routes it to the
+//! serial engine, so the single-shard path stays bit-identical to the
+//! PR 2 engine (enforced by `tests/determinism.rs`). For shard counts
+//! ≥ 2 with no coordinator traffic (static cluster, no pre-warm) the run
+//! equals the *merge of N independent serial runs* of the partitions —
+//! also enforced by `tests/determinism.rs` against the `ref-heap`
+//! reference engine. Semantics that differ from the serial engine, by
+//! design: control actions quantize to epoch boundaries, the global
+//! worker floor is one *per shard*, and pre-warm placement is sampled
+//! rather than exact (DESIGN.md §6).
+//!
+//! The `predictive` autoscale policy needs the per-arrival forecast feed,
+//! which would require streaming every arrival to the coordinator;
+//! rejected at validation for `shards > 1`.
+
+use std::collections::BTreeMap;
+use std::sync::{Barrier, Mutex};
+
+use super::engine::Simulation;
+use crate::autoscale::{AutoscaleObs, AutoscalePolicy};
+use crate::config::Config;
+use crate::metrics::RunMetrics;
+use crate::scheduler::{make_scheduler, Scheduler};
+use crate::util::loadidx::LoadSummary;
+use crate::util::rng::Pcg64;
+use crate::workload::loadgen::{OpenLoopTrace, Workload};
+use crate::workload::spec::FunctionRegistry;
+
+/// A control message delivered to one shard at an epoch barrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardMsg {
+    /// Scale this shard's active worker slice to `target` (its share of a
+    /// global autoscale decision).
+    ScaleTo {
+        /// Desired active workers in this shard after the barrier.
+        target: usize,
+    },
+    /// Speculatively initialize `n` sandboxes for function `f` on this
+    /// shard (global pre-warm placement routed here by power-of-d
+    /// sampling over the shard load summaries).
+    SpawnPrewarm {
+        /// Function type to pre-warm.
+        f: usize,
+        /// Sandboxes to initialize.
+        n: usize,
+    },
+}
+
+/// What one shard publishes at each barrier: the whole cross-thread
+/// surface of an epoch. Everything here is O(functions) or O(1) — the
+/// barrier never ships per-worker or per-request state.
+#[derive(Clone, Debug, Default)]
+struct ShardReport {
+    /// The shard's event queue is empty.
+    drained: bool,
+    /// Active workers in the shard.
+    active: usize,
+    /// Executions running across the shard's active workers.
+    running: usize,
+    /// Requests queued at the shard's active workers.
+    queued: usize,
+    /// O(1) digest of the shard's worker loads.
+    load: LoadSummary,
+    /// Per-function warm supply (idle + initializing).
+    warm: Vec<usize>,
+    /// Per-function pre-warm deficits from the shard-local rate EWMAs.
+    deficits: Vec<(usize, usize)>,
+}
+
+/// Coordinator state: owned by whichever thread wins the first barrier
+/// each epoch, mutated only between the two barriers (so a plain mutex
+/// with zero contention).
+struct Coord {
+    /// Tick-driven global autoscale policy (`reactive`); `none` ⇒ None.
+    policy: Option<Box<dyn AutoscalePolicy>>,
+    /// Scheduled-policy scale events not yet applied, ascending time.
+    pending_events: Vec<(f64, bool)>,
+    /// Next `pending_events` entry to apply.
+    next_event: usize,
+    /// Coordinator RNG: its own stream, used only for power-of-d shard
+    /// sampling (shard-local streams are untouched).
+    rng: Pcg64,
+    /// Global pre-warm heuristic on (`cluster.prewarm`).
+    prewarm_global: bool,
+    duration_s: f64,
+    concurrency: usize,
+    shards: usize,
+    mean_exec_s: Vec<f64>,
+    warm_scratch: Vec<usize>,
+    reports: Vec<ShardReport>,
+    mailboxes: Vec<Vec<ShardMsg>>,
+    done: bool,
+}
+
+impl Coord {
+    /// Sample two shards uniformly and keep the less-loaded one (mean
+    /// load, then `min_load`) — O(d=2) cross-shard selection.
+    fn sample_shard(&mut self) -> usize {
+        let a = self.rng.index(self.shards);
+        let b = self.rng.index(self.shards);
+        if self.reports[b].load.less_loaded_than(&self.reports[a].load) {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// One barrier: merge the reports, run the global control decisions,
+    /// fill the mailboxes, and decide termination. Pure function of
+    /// (reports, coordinator state) — independent of which thread leads.
+    fn coordinate(&mut self, limit: f64) {
+        let mut active = 0usize;
+        let mut running = 0usize;
+        let mut queued = 0usize;
+        let mut all_drained = true;
+        self.warm_scratch.fill(0);
+        for r in &self.reports {
+            active += r.active;
+            running += r.running;
+            queued += r.queued;
+            all_drained &= r.drained;
+            for (acc, w) in self.warm_scratch.iter_mut().zip(&r.warm) {
+                *acc += *w;
+            }
+        }
+
+        let mut sent = false;
+        if limit < self.duration_s {
+            // 1) Global worker target: scheduled events due this epoch,
+            //    then the tick-driven policy over the merged observation.
+            let mut target: Option<usize> = None;
+            let mut tgt = active;
+            while self.next_event < self.pending_events.len()
+                && self.pending_events[self.next_event].0 <= limit
+            {
+                let (_, up) = self.pending_events[self.next_event];
+                self.next_event += 1;
+                if up {
+                    tgt += 1;
+                } else if tgt > self.shards {
+                    tgt -= 1; // never below one worker per shard
+                }
+                target = Some(tgt);
+            }
+            let decision = match self.policy.as_mut() {
+                Some(p) if p.tick_driven() => {
+                    let obs = AutoscaleObs {
+                        now: limit,
+                        active_workers: active,
+                        concurrency: self.concurrency,
+                        total_running: running,
+                        total_queued: queued,
+                        warm_supply: &self.warm_scratch,
+                        mean_exec_s: &self.mean_exec_s,
+                    };
+                    Some(p.tick(&obs))
+                }
+                _ => None,
+            };
+            if let Some(d) = decision {
+                if let Some(t) = d.target_workers {
+                    target = Some(t);
+                }
+                // Policy-requested pools (none for reactive today) place
+                // exactly like the heuristic's: power-of-d over shards.
+                for (f, count) in d.prewarm {
+                    for _ in 0..count {
+                        let s = self.sample_shard();
+                        self.mailboxes[s].push(ShardMsg::SpawnPrewarm { f, n: 1 });
+                        sent = true;
+                    }
+                }
+            }
+            if let Some(t) = target {
+                let t = t.max(self.shards); // one worker per shard, minimum
+                if t != active {
+                    for s in 0..self.shards {
+                        let share = shard_workers(t, s, self.shards);
+                        if share != self.reports[s].active {
+                            self.mailboxes[s].push(ShardMsg::ScaleTo { target: share });
+                            sent = true;
+                        }
+                    }
+                }
+            }
+
+            // 2) Global pre-warm placement: sum the shard-local deficits
+            //    per function (BTreeMap: deterministic order), cap at the
+            //    serial heuristic's 2/function/tick, place each sandbox on
+            //    a power-of-d sampled shard.
+            if self.prewarm_global {
+                let mut need: BTreeMap<usize, usize> = BTreeMap::new();
+                for r in &self.reports {
+                    for &(f, d) in &r.deficits {
+                        *need.entry(f).or_insert(0) += d;
+                    }
+                }
+                for (f, d) in need {
+                    for _ in 0..d.min(2) {
+                        let s = self.sample_shard();
+                        self.mailboxes[s].push(ShardMsg::SpawnPrewarm { f, n: 1 });
+                        sent = true;
+                    }
+                }
+            }
+        }
+
+        self.done = all_drained && !sent && limit >= self.duration_s;
+    }
+}
+
+/// Number of workers shard `s` of `n` owns out of `total`: contiguous
+/// blocks differing by at most one, the first `total mod n` shards taking
+/// the extra worker. Also the split rule for global worker targets.
+pub fn shard_workers(total: usize, s: usize, n: usize) -> usize {
+    total / n + usize::from(s < total % n)
+}
+
+/// The per-shard `Config`: the shard's worker slice, local control
+/// disabled (the coordinator owns autoscale and pre-warm placement), and
+/// `shards` reset to 1. VU slicing is applied separately via
+/// [`Simulation::with_vu_slice`].
+pub fn partition_config(cfg: &Config, s: usize, n: usize) -> Config {
+    let mut c = cfg.clone();
+    c.cluster.workers = shard_workers(cfg.cluster.workers, s, n);
+    c.sim.shards = 1;
+    c.cluster.prewarm = false;
+    c.autoscale.policy = "none".into();
+    c
+}
+
+/// The per-shard RNG seed. Shard 0 keeps the run seed — with one shard
+/// the serial engine consumes the identical streams — and later shards
+/// derive disjoint streams via a golden-ratio step.
+pub fn shard_seed(seed: u64, s: usize) -> u64 {
+    seed ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Shared entry-point setup (the sharded twin of `engine::build_parts`):
+/// validated registry plus the scripted workload. `vus` overrides the
+/// configured VU count (open-loop mode only needs a placeholder set).
+fn build_registry_workload(
+    cfg: &Config,
+    seed: u64,
+    vus: Option<usize>,
+) -> Result<(FunctionRegistry, Workload), String> {
+    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+    if registry.len() != cfg.num_functions() {
+        return Err(format!(
+            "registry size {} != configured {}",
+            registry.len(),
+            cfg.num_functions()
+        ));
+    }
+    let mut wcfg = cfg.workload.clone();
+    if let Some(v) = vus {
+        wcfg.vus = v;
+    }
+    let workload = Workload::generate(&wcfg, registry.len(), seed);
+    Ok((registry, workload))
+}
+
+/// Run one (config, seed) closed-loop experiment on `cfg.sim.shards`
+/// threads. Prefer [`super::run_once`], which routes here for
+/// `shards > 1` and to the serial engine otherwise.
+pub fn run_sharded(cfg: &Config, seed: u64) -> Result<RunMetrics, String> {
+    let (registry, workload) = build_registry_workload(cfg, seed, None)?;
+    run_sharded_with(cfg, &registry, &workload, None, seed)
+}
+
+/// Sharded open-loop trace replay: arrival `i` is issued by shard
+/// `i mod shards`. Prefer [`super::run_trace`], which routes here.
+pub fn run_sharded_trace(
+    cfg: &Config,
+    trace: &OpenLoopTrace,
+    seed: u64,
+) -> Result<RunMetrics, String> {
+    // The VU workload is unused in open-loop mode; minimal script set.
+    let (registry, workload) = build_registry_workload(cfg, seed, Some(1))?;
+    run_sharded_with(cfg, &registry, &workload, Some(trace), seed)
+}
+
+/// The sharded driver over pre-built workload parts (the perf bench times
+/// this directly so workload generation stays outside the measurement).
+/// `trace` switches to open-loop replay.
+pub fn run_sharded_with(
+    cfg: &Config,
+    registry: &FunctionRegistry,
+    workload: &Workload,
+    trace: Option<&OpenLoopTrace>,
+    seed: u64,
+) -> Result<RunMetrics, String> {
+    let n = cfg.sim.shards;
+    if n < 2 {
+        return Err("run_sharded_with needs sim.shards >= 2 (1 is the serial engine)".into());
+    }
+    if cfg.cluster.workers < n {
+        return Err(format!(
+            "sim.shards = {n} exceeds cluster.workers = {}",
+            cfg.cluster.workers
+        ));
+    }
+    if cfg.autoscale.policy == "predictive" {
+        return Err("autoscale.policy = predictive is not supported with sim.shards > 1 \
+                    (needs the per-arrival forecast feed; see DESIGN.md §6)"
+            .into());
+    }
+
+    // Per-shard configs and scheduler instances (fallible work happens
+    // before any thread spawns, so the barrier protocol can't deadlock on
+    // a construction error).
+    let shard_cfgs: Vec<Config> = (0..n).map(|s| partition_config(cfg, s, n)).collect();
+    let mut shard_scheds: Vec<Vec<Box<dyn Scheduler>>> = Vec::with_capacity(n);
+    for sc in &shard_cfgs {
+        let mut v = Vec::new();
+        for _ in 0..cfg.scheduler.instances.max(1) {
+            v.push(make_scheduler(&cfg.scheduler, sc.cluster.workers)?);
+        }
+        shard_scheds.push(v);
+    }
+
+    // Global control: the coordinator owns the policy (ticked over merged
+    // observations) and the scheduled event list (epoch-quantized).
+    let policy = crate::autoscale::make_policy(&cfg.autoscale)?;
+    let mut pending_events = policy.scheduled_events();
+    pending_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let tick_driven = policy.tick_driven();
+    let barrier_dt =
+        if tick_driven { cfg.autoscale.interval_s } else { cfg.sim.barrier_s };
+    debug_assert!(barrier_dt > 0.0, "validated by Config::validate");
+    // The serial open-loop engine never pre-warms (`prepare_open` installs
+    // no PreWarmTick), so the coordinator must not either — otherwise
+    // shard-count comparisons on trace benches would be confounded.
+    let prewarm_global = cfg.cluster.prewarm && trace.is_none();
+    let coord = Mutex::new(Coord {
+        policy: if tick_driven { Some(policy) } else { None },
+        pending_events,
+        next_event: 0,
+        rng: Pcg64::new(seed ^ 0x5AAD_C0DE),
+        prewarm_global,
+        duration_s: cfg.workload.duration_s,
+        concurrency: cfg.cluster.concurrency,
+        shards: n,
+        mean_exec_s: (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect(),
+        warm_scratch: vec![0; registry.len()],
+        reports: vec![ShardReport::default(); n],
+        mailboxes: vec![Vec::new(); n],
+        done: false,
+    });
+    let barrier = Barrier::new(n);
+    let results: Mutex<Vec<Option<RunMetrics>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for (s, scheds) in shard_scheds.into_iter().enumerate() {
+            let shard_cfg = &shard_cfgs[s];
+            let (coord, barrier, results) = (&coord, &barrier, &results);
+            scope.spawn(move || {
+                // A panicking shard would leave its siblings blocked in
+                // barrier.wait() forever (std Barrier has no poisoning),
+                // turning an invariant violation into a silent hang. Catch
+                // the panic, surface it, and abort the process instead.
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    shard_main(shard_cfg, registry, workload, trace, scheds, seed, s, n,
+                        barrier_dt, prewarm_global, coord, barrier)
+                }));
+                match run {
+                    Ok(m) => results.lock().unwrap()[s] = Some(m),
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|m| m.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        eprintln!(
+                            "shard {s} panicked ({msg}); aborting — barrier peers \
+                             cannot make progress"
+                        );
+                        std::process::abort();
+                    }
+                }
+            });
+        }
+    });
+
+    // Merge per-shard metrics in shard order (worker ids are the shard
+    // slices concatenated — the same global ids the partition defines).
+    let mut merged: Option<RunMetrics> = None;
+    for slot in results.into_inner().unwrap() {
+        let m = slot.expect("shard thread exited without producing metrics");
+        match &mut merged {
+            None => merged = Some(m),
+            Some(acc) => acc.merge(&m),
+        }
+    }
+    Ok(merged.expect("at least two shards ran"))
+}
+
+/// One shard's whole life: build the per-shard simulation, run the epoch
+/// loop against the barrier protocol, finalize. Runs on its own thread.
+#[allow(clippy::too_many_arguments)]
+fn shard_main(
+    shard_cfg: &Config,
+    registry: &FunctionRegistry,
+    workload: &Workload,
+    trace: Option<&OpenLoopTrace>,
+    scheds: Vec<Box<dyn Scheduler>>,
+    seed: u64,
+    s: usize,
+    n: usize,
+    barrier_dt: f64,
+    prewarm_global: bool,
+    coord: &Mutex<Coord>,
+    barrier: &Barrier,
+) -> RunMetrics {
+    let mut sim =
+        Simulation::with_schedulers(shard_cfg, registry, workload, scheds, shard_seed(seed, s))
+            .with_vu_slice(s, n);
+    if prewarm_global {
+        sim = sim.with_rate_tracking();
+    }
+    match trace {
+        Some(tr) => sim.prepare_open(tr),
+        None => sim.prepare_closed(),
+    }
+    let mut epoch = 0u64;
+    loop {
+        epoch += 1;
+        let limit = epoch as f64 * barrier_dt;
+        let drained = sim.step_until(limit);
+        // Phase 1: publish this shard's report.
+        {
+            let mut c = coord.lock().unwrap();
+            let r = &mut c.reports[s];
+            r.drained = drained;
+            r.active = sim.active_workers();
+            let (running, queued) = sim.cluster_running_queued();
+            r.running = running;
+            r.queued = queued;
+            r.load = sim.cluster_load_summary();
+            r.warm.resize(registry.len(), 0);
+            r.warm.fill(0);
+            sim.cluster_warm_supply_into(&mut r.warm);
+            if prewarm_global {
+                sim.prewarm_deficits_into(&mut r.deficits);
+            } else {
+                r.deficits.clear();
+            }
+        }
+        // Phase 2: one thread coordinates between the barriers.
+        if barrier.wait().is_leader() {
+            coord.lock().unwrap().coordinate(limit);
+        }
+        barrier.wait();
+        // Phase 3: apply this shard's mailbox at the epoch boundary, then
+        // check termination.
+        let (msgs, done) = {
+            let mut c = coord.lock().unwrap();
+            (std::mem::take(&mut c.mailboxes[s]), c.done)
+        };
+        if !msgs.is_empty() {
+            sim.advance_clock_to(limit);
+            for m in msgs {
+                match m {
+                    ShardMsg::ScaleTo { target } => sim.apply_scale_target(target),
+                    ShardMsg::SpawnPrewarm { f, n } => sim.apply_prewarm(f, n),
+                }
+            }
+        }
+        if done {
+            break;
+        }
+    }
+    sim.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_worker_split_covers_total() {
+        for total in [5usize, 8, 100, 101, 103] {
+            for n in [2usize, 3, 4, 7] {
+                let parts: Vec<usize> = (0..n).map(|s| shard_workers(total, s, n)).collect();
+                assert_eq!(parts.iter().sum::<usize>(), total, "{total}/{n}: {parts:?}");
+                let (mn, mx) =
+                    (parts.iter().min().unwrap(), parts.iter().max().unwrap());
+                assert!(mx - mn <= 1, "uneven split {parts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_seed_zero_is_run_seed() {
+        assert_eq!(shard_seed(42, 0), 42);
+        assert_ne!(shard_seed(42, 1), 42);
+        assert_ne!(shard_seed(42, 1), shard_seed(42, 2));
+    }
+
+    #[test]
+    fn partition_config_slices_and_disarms_local_control() {
+        let mut cfg = Config::default();
+        cfg.cluster.workers = 5;
+        cfg.cluster.prewarm = true;
+        cfg.sim.shards = 2;
+        let p0 = partition_config(&cfg, 0, 2);
+        let p1 = partition_config(&cfg, 1, 2);
+        assert_eq!(p0.cluster.workers, 3);
+        assert_eq!(p1.cluster.workers, 2);
+        for p in [&p0, &p1] {
+            assert_eq!(p.sim.shards, 1);
+            assert!(!p.cluster.prewarm, "local pre-warm must be coordinator-owned");
+            assert_eq!(p.autoscale.policy, "none");
+            assert_eq!(p.workload, cfg.workload, "workload section must stay global");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shard_setups() {
+        let registry = FunctionRegistry::functionbench(5);
+        let mut cfg = Config::default();
+        cfg.workload.vus = 2;
+        cfg.workload.duration_s = 1.0;
+        let workload = Workload::generate(&cfg.workload, registry.len(), 1);
+        // shards = 1 is the serial engine's job.
+        cfg.sim.shards = 1;
+        assert!(run_sharded_with(&cfg, &registry, &workload, None, 1).is_err());
+        // More shards than workers cannot partition.
+        cfg.sim.shards = 9;
+        cfg.cluster.workers = 5;
+        assert!(run_sharded_with(&cfg, &registry, &workload, None, 1).is_err());
+    }
+}

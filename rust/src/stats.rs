@@ -18,10 +18,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// An empty stream (mean/variance are NaN until the first push).
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation into the stream.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -35,10 +37,12 @@ impl OnlineStats {
         }
     }
 
+    /// Observations folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Arithmetic mean (NaN for the empty stream).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -56,6 +60,7 @@ impl OnlineStats {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -71,10 +76,12 @@ impl OnlineStats {
         }
     }
 
+    /// Smallest observation (`+inf` for the empty stream).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation (`-inf` for the empty stream).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -113,6 +120,7 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// An uncapped (exact) sample set.
     pub fn new() -> Self {
         Self::default()
     }
@@ -122,6 +130,7 @@ impl Samples {
         Self { cap: Some(cap), ..Default::default() }
     }
 
+    /// Record one sample (reservoir-replacing beyond the cap, if any).
     pub fn push(&mut self, x: f64) {
         self.seen += 1;
         match self.cap {
@@ -139,14 +148,17 @@ impl Samples {
         self.sorted = false;
     }
 
+    /// Samples currently retained (≤ seen when capped).
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// True when nothing has been retained.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
 
+    /// Samples ever pushed (including reservoir-dropped ones).
     pub fn seen(&self) -> u64 {
         self.seen
     }
@@ -176,6 +188,7 @@ impl Samples {
         self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
     }
 
+    /// Mean of the retained samples (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             f64::NAN
@@ -200,9 +213,20 @@ impl Samples {
             .collect()
     }
 
+    /// The retained samples, sorted ascending.
     pub fn values(&mut self) -> &[f64] {
         self.ensure_sorted();
         &self.xs
+    }
+
+    /// Append another sample set (the shard-merge reduction). Percentiles
+    /// and CDFs over the merged set are exact when neither side is
+    /// reservoir-capped — the simulator's per-run samples never are; a
+    /// capped reservoir merges its *retained* samples only.
+    pub fn merge_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.seen += other.seen;
+        self.sorted = false;
     }
 }
 
@@ -216,11 +240,13 @@ pub struct TimeSeries {
 }
 
 impl TimeSeries {
+    /// An empty series with `bin_width`-second bins.
     pub fn new(bin_width: f64) -> Self {
         assert!(bin_width > 0.0);
         Self { bin_width, bins: Vec::new() }
     }
 
+    /// Accumulate `value` into the bin containing time `t`.
     pub fn add(&mut self, t: f64, value: f64) {
         assert!(t >= 0.0, "negative time {t}");
         let idx = (t / self.bin_width) as usize;
@@ -230,14 +256,17 @@ impl TimeSeries {
         self.bins[idx] += value;
     }
 
+    /// Count one event at time `t`.
     pub fn increment(&mut self, t: f64) {
         self.add(t, 1.0);
     }
 
+    /// The per-bin accumulated values (index = bin number).
     pub fn bins(&self) -> &[f64] {
         &self.bins
     }
 
+    /// Bin width in seconds.
     pub fn bin_width(&self) -> f64 {
         self.bin_width
     }
@@ -254,6 +283,7 @@ impl TimeSeries {
             .collect()
     }
 
+    /// Sum over all bins.
     pub fn total(&self) -> f64 {
         self.bins.iter().sum()
     }
@@ -264,6 +294,23 @@ impl TimeSeries {
             0.0
         } else {
             self.total() / (self.bins.len() as f64 * self.bin_width)
+        }
+    }
+
+    /// Elementwise-add another series with the same bin width (disjoint
+    /// event streams over the same virtual clock — the shard merge).
+    pub fn merge_add(&mut self, other: &TimeSeries) {
+        assert!(
+            (self.bin_width - other.bin_width).abs() < 1e-12,
+            "merging series with different bin widths ({} vs {})",
+            self.bin_width,
+            other.bin_width
+        );
+        if other.bins.len() > self.bins.len() {
+            self.bins.resize(other.bins.len(), 0.0);
+        }
+        for (b, &v) in self.bins.iter_mut().zip(&other.bins) {
+            *b += v;
         }
     }
 }
@@ -277,10 +324,12 @@ pub struct LoadImbalance {
 }
 
 impl LoadImbalance {
+    /// Start tracking `workers` workers with `bin_width`-second bins.
     pub fn new(workers: usize, bin_width: f64) -> Self {
         Self { per_worker: (0..workers).map(|_| TimeSeries::new(bin_width)).collect() }
     }
 
+    /// One request was assigned to `worker` at time `t`.
     pub fn record_assignment(&mut self, worker: usize, t: f64) {
         self.per_worker[worker].increment(t);
     }
@@ -332,6 +381,14 @@ impl LoadImbalance {
     /// Total requests assigned per worker (sanity/reporting).
     pub fn totals(&self) -> Vec<f64> {
         self.per_worker.iter().map(|ts| ts.total()).collect()
+    }
+
+    /// Append another *disjoint* worker set's assignment series: merged
+    /// worker ids are `self`'s workers followed by `other`'s, in order —
+    /// the shard-merge reduction (the CV is then computed over the global
+    /// worker set, exactly as a single run over all workers would).
+    pub fn merge_append(&mut self, other: &LoadImbalance) {
+        self.per_worker.extend(other.per_worker.iter().cloned());
     }
 }
 
@@ -446,6 +503,77 @@ mod tests {
         }
         // CV of (4,0,0,0) = std/mean = sqrt(3)/1 ≈ 1.732
         assert!((li.mean_cv() - 3.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_merge_is_exact_union() {
+        let mut a = Samples::new();
+        let mut b = Samples::new();
+        let mut all = Samples::new();
+        for i in 0..50 {
+            let x = ((i * 37) % 50) as f64;
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge_from(&b);
+        assert_eq!(a.len(), all.len());
+        assert_eq!(a.seen(), all.seen());
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p{p} diverged");
+        }
+    }
+
+    #[test]
+    fn time_series_merge_adds_elementwise() {
+        let mut a = TimeSeries::new(1.0);
+        let mut b = TimeSeries::new(1.0);
+        a.increment(0.5);
+        a.increment(2.5);
+        b.increment(0.7);
+        b.increment(4.1); // longer than a
+        a.merge_add(&b);
+        assert_eq!(a.bins(), &[2.0, 0.0, 1.0, 0.0, 1.0]);
+        // Shorter other leaves the tail untouched.
+        let c = TimeSeries::new(1.0);
+        a.merge_add(&c);
+        assert_eq!(a.bins(), &[2.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different bin widths")]
+    fn time_series_merge_rejects_width_mismatch() {
+        let mut a = TimeSeries::new(1.0);
+        a.merge_add(&TimeSeries::new(0.5));
+    }
+
+    #[test]
+    fn load_imbalance_merge_appends_worker_sets() {
+        // Two disjoint shards, each perfectly balanced internally but at
+        // different rates: the merged CV must equal a single tracker over
+        // the union (order: shard 0's workers then shard 1's).
+        let mut a = LoadImbalance::new(2, 1.0);
+        let mut b = LoadImbalance::new(2, 1.0);
+        let mut whole = LoadImbalance::new(4, 1.0);
+        for t in 0..5 {
+            let tt = t as f64 + 0.5;
+            for w in 0..2 {
+                a.record_assignment(w, tt);
+                whole.record_assignment(w, tt);
+            }
+            for w in 0..2 {
+                b.record_assignment(w, tt);
+                b.record_assignment(w, tt);
+                whole.record_assignment(2 + w, tt);
+                whole.record_assignment(2 + w, tt);
+            }
+        }
+        a.merge_append(&b);
+        assert_eq!(a.totals(), whole.totals());
+        assert!((a.mean_cv() - whole.mean_cv()).abs() < 1e-12);
     }
 
     #[test]

@@ -7,8 +7,12 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// An argument-parsing failure (or the `--help` text).
 #[derive(Debug)]
-pub struct CliError(pub String);
+pub struct CliError(
+    /// The error message, or the full help text on `--help`.
+    pub String,
+);
 
 impl fmt::Display for CliError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -44,6 +48,7 @@ pub struct Args {
 }
 
 impl Cli {
+    /// A CLI named `program` with a one-line description.
     pub fn new(program: &str, about: &str) -> Self {
         Self { program: program.into(), about: about.into(), ..Default::default() }
     }
@@ -76,6 +81,7 @@ impl Cli {
         self
     }
 
+    /// Render the generated `--help` text.
     pub fn help_text(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
         for (name, _) in &self.positionals {
@@ -176,22 +182,27 @@ impl Cli {
 }
 
 impl Args {
+    /// The value of `--name`, if given or defaulted.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Whether the boolean `--name` flag was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The i-th positional argument.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positionals.get(i).map(|s| s.as_str())
     }
 
+    /// Parse `--name` as f64 (error when missing or malformed).
     pub fn parse_f64(&self, name: &str) -> Result<f64, CliError> {
         self.get(name)
             .ok_or_else(|| CliError(format!("missing --{name}")))?
@@ -199,6 +210,7 @@ impl Args {
             .map_err(|_| CliError(format!("--{name}: expected a number")))
     }
 
+    /// Parse `--name` as u64 (error when missing or malformed).
     pub fn parse_u64(&self, name: &str) -> Result<u64, CliError> {
         self.get(name)
             .ok_or_else(|| CliError(format!("missing --{name}")))?
@@ -206,6 +218,7 @@ impl Args {
             .map_err(|_| CliError(format!("--{name}: expected an integer")))
     }
 
+    /// Parse `--name` as usize (error when missing or malformed).
     pub fn parse_usize(&self, name: &str) -> Result<usize, CliError> {
         Ok(self.parse_u64(name)? as usize)
     }

@@ -12,17 +12,26 @@ use std::fmt;
 /// A JSON value. Objects use BTreeMap so serialization is deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64 representation).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys ⇒ deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
 }
 
@@ -35,6 +44,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -48,6 +58,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer ≤ 2^53, if exactly one.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 && x <= (1u64 << 53) as f64 {
@@ -65,6 +77,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -79,6 +93,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -86,6 +101,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -114,12 +130,14 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
+    /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(0));
         s
     }
 
+    /// Serialize with no whitespace (the determinism-test comparison form).
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None);

@@ -31,6 +31,79 @@ use std::collections::BTreeSet;
 
 use super::rng::Pcg64;
 
+/// A mergeable O(1) digest of a [`MinLoadIndex`]: just enough to compare
+/// and combine the load state of *disjoint* worker sets without touching
+/// per-worker data. This is the unit the sharded simulation exchanges at
+/// its event-time barriers (DESIGN.md §6): each shard publishes the
+/// summary of its local index, the coordinator merges them, and
+/// cross-shard placement decisions (power-of-d sampling) read only these
+/// four fields — O(shards), never O(workers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadSummary {
+    /// Active (selectable) workers in the summarized set.
+    pub active: usize,
+    /// Lowest load among active workers (`u32::MAX` for the empty set, so
+    /// merging with the identity never wins a minimum).
+    pub min_load: u32,
+    /// Active workers at `min_load` — the tie-set size.
+    pub min_count: usize,
+    /// Sum of loads over the active workers.
+    pub total_load: u64,
+}
+
+impl Default for LoadSummary {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl LoadSummary {
+    /// Summary of the empty worker set: the identity of [`LoadSummary::merge`].
+    pub fn empty() -> Self {
+        Self { active: 0, min_load: u32::MAX, min_count: 0, total_load: 0 }
+    }
+
+    /// Combine the summaries of two disjoint worker sets. Associative and
+    /// commutative with [`LoadSummary::empty`] as identity, so shard
+    /// summaries can be folded in any grouping.
+    pub fn merge(&self, other: &LoadSummary) -> LoadSummary {
+        use std::cmp::Ordering;
+        let (min_load, min_count) = match self.min_load.cmp(&other.min_load) {
+            Ordering::Less => (self.min_load, self.min_count),
+            Ordering::Greater => (other.min_load, other.min_count),
+            Ordering::Equal => (self.min_load, self.min_count + other.min_count),
+        };
+        LoadSummary {
+            active: self.active + other.active,
+            min_load,
+            min_count,
+            total_load: self.total_load + other.total_load,
+        }
+    }
+
+    /// Mean load per active worker; the empty set reports `f64::INFINITY`
+    /// so it always loses a "less loaded" comparison.
+    pub fn mean_load(&self) -> f64 {
+        if self.active == 0 {
+            f64::INFINITY
+        } else {
+            self.total_load as f64 / self.active as f64
+        }
+    }
+
+    /// "Less loaded" order for placement decisions: by mean load, then by
+    /// `min_load` (a set with an idler minimum wins a mean tie). Total,
+    /// deterministic and allocation-free — the comparison the sharded
+    /// coordinator's power-of-d sampling uses.
+    pub fn less_loaded_than(&self, other: &LoadSummary) -> bool {
+        let (a, b) = (self.mean_load(), other.mean_load());
+        if a != b {
+            return a < b;
+        }
+        self.min_load < other.min_load
+    }
+}
+
 /// Bucket queue over worker loads with an active-prefix restriction.
 #[derive(Clone, Debug)]
 pub struct MinLoadIndex {
@@ -66,6 +139,7 @@ impl MinLoadIndex {
         self.load_of.len()
     }
 
+    /// True when the index tracks no workers at all.
     pub fn is_empty(&self) -> bool {
         self.load_of.is_empty()
     }
@@ -81,6 +155,7 @@ impl MinLoadIndex {
         &self.load_of
     }
 
+    /// Current load of worker `w` (tracked whether or not it is active).
     pub fn load(&self, w: usize) -> u32 {
         self.load_of[w]
     }
@@ -147,11 +222,13 @@ impl MinLoadIndex {
         }
     }
 
+    /// Increment worker `w`'s load by one (request routed to it).
     pub fn inc(&mut self, w: usize) {
         let l = self.load_of[w];
         self.set_load(w, l + 1);
     }
 
+    /// Decrement worker `w`'s load by one (response returned).
     pub fn dec(&mut self, w: usize) {
         let l = self.load_of[w];
         debug_assert!(l > 0, "decrementing idle worker {w}");
@@ -202,6 +279,20 @@ impl MinLoadIndex {
     pub fn least_loaded_lowest_id(&self) -> usize {
         let l = self.min_nonempty().expect("no active workers");
         *self.buckets[l].iter().next().expect("non-empty min bucket")
+    }
+
+    /// O(1) digest of the active prefix for cross-index comparison and
+    /// merging (the sharded engine's barrier payload).
+    pub fn summary(&self) -> LoadSummary {
+        match self.min_nonempty() {
+            None => LoadSummary::empty(),
+            Some(l) => LoadSummary {
+                active: self.active,
+                min_load: l as u32,
+                min_count: self.buckets[l].len(),
+                total_load: self.active_total,
+            },
+        }
     }
 
     /// Lowest-id worker passing `fit` in the lowest load bucket that has
@@ -291,6 +382,35 @@ mod tests {
     }
 
     #[test]
+    fn summary_digest_and_merge() {
+        let mut a = MinLoadIndex::new(3);
+        a.inc(0);
+        a.inc(0);
+        a.inc(1); // loads [2, 1, 0]
+        let sa = a.summary();
+        assert_eq!(sa, LoadSummary { active: 3, min_load: 0, min_count: 1, total_load: 3 });
+        let mut b = MinLoadIndex::new(2);
+        b.inc(0);
+        b.inc(1); // loads [1, 1]
+        let sb = b.summary();
+        assert_eq!(sb, LoadSummary { active: 2, min_load: 1, min_count: 2, total_load: 2 });
+        // Merge over disjoint sets: global min/tie-set/total, any grouping.
+        let m = sa.merge(&sb);
+        assert_eq!(m, LoadSummary { active: 5, min_load: 0, min_count: 1, total_load: 5 });
+        assert_eq!(m, sb.merge(&sa), "merge must be commutative");
+        assert_eq!(m, sa.merge(&LoadSummary::empty()).merge(&sb), "empty is the identity");
+        assert_eq!(LoadSummary::empty().mean_load(), f64::INFINITY);
+        assert!(sb.mean_load() > sa.mean_load());
+        assert!(sa.less_loaded_than(&sb));
+        // Mean tie resolved by min_load: [0, 2] beats [1, 1].
+        let mut c = MinLoadIndex::new(2);
+        c.inc(0);
+        c.inc(0); // loads [2, 0], mean 1.0 == sb's mean
+        assert!(c.summary().less_loaded_than(&sb));
+        assert!(!sb.less_loaded_than(&c.summary()));
+    }
+
+    #[test]
     fn least_loaded_where_skips_unfit() {
         let mut idx = MinLoadIndex::new(4);
         idx.inc(0); // loads [1, 0, 0, 0]
@@ -345,6 +465,18 @@ mod tests {
                     "min {:?} != {}",
                     idx.min_load(),
                     min
+                );
+                // The O(1) digest agrees with the slice scan.
+                let s = idx.summary();
+                let ties = view.iter().filter(|&&l| l == min).count();
+                prop_assert!(
+                    s == LoadSummary { active, min_load: min, min_count: ties, total_load: total },
+                    "summary {:?} != scan (active {}, min {}, ties {}, total {})",
+                    s,
+                    active,
+                    min,
+                    ties,
+                    total
                 );
                 // Random-tie selection: identical worker AND identical RNG
                 // consumption vs the seed reservoir scan.

@@ -14,7 +14,9 @@ use super::rng::Pcg64;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct PropConfig {
+    /// Random cases to run.
     pub cases: usize,
+    /// Base seed; each case derives its own replayable seed from it.
     pub seed: u64,
     /// Maximum "size" hint passed to the generator; cases ramp from small
     /// to large sizes so failures tend to be found at small sizes first.

@@ -17,10 +17,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start a stream at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
@@ -67,6 +69,7 @@ impl Pcg64 {
         rng
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -157,10 +160,12 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Plain Zipf over ranks 1..=n with exponent `s`.
     pub fn new(n: usize, s: f64) -> Self {
         Self::with_shift(n, s, 0.0)
     }
 
+    /// Zipf-Mandelbrot with head-flattening shift `q`.
     pub fn with_shift(n: usize, s: f64, q: f64) -> Self {
         assert!(n > 0);
         assert!(q >= 0.0);
@@ -204,6 +209,7 @@ pub struct AliasTable {
 }
 
 impl AliasTable {
+    /// Build the alias table for the given (unnormalized) weights.
     pub fn new(weights: &[f64]) -> Self {
         let n = weights.len();
         assert!(n > 0, "alias table needs at least one weight");
@@ -233,6 +239,7 @@ impl AliasTable {
         Self { prob, alias }
     }
 
+    /// Sample an index with probability proportional to its weight, O(1).
     #[inline]
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let i = rng.index(self.prob.len());
@@ -243,10 +250,12 @@ impl AliasTable {
         }
     }
 
+    /// Number of weights.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// True when the table has no weights (cannot happen via `new`).
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -25,7 +25,9 @@ use crate::util::rng::{Pcg64, Zipf};
 /// Popularity law over a universe of functions (Zipf-Mandelbrot).
 #[derive(Clone, Debug)]
 pub struct Popularity {
+    /// Functions in the universe the law ranges over.
     pub universe: usize,
+    /// The calibrated Zipf-Mandelbrot distribution.
     pub zipf: Zipf,
 }
 
@@ -33,10 +35,13 @@ pub struct Popularity {
 /// 10k universe yields top-1% = 52.0% and top-10% = 92.6% of invocations —
 /// the paper reports 51.3% / 92.3% for the Azure dataset (Fig 4).
 pub const AZURE_ZIPF_S: f64 = 2.05;
+/// Zipf-Mandelbrot head-flattening shift calibrated to Fig 4.
 pub const AZURE_ZIPF_Q: f64 = 100.0;
+/// Function-universe size of the Azure characterization (Fig 4).
 pub const AZURE_UNIVERSE: usize = 10_000;
 
 impl Popularity {
+    /// A popularity law over `universe` functions with exponent `s`.
     pub fn new(universe: usize, s: f64) -> Self {
         Self { universe, zipf: Zipf::with_shift(universe, s, AZURE_ZIPF_Q) }
     }
@@ -93,6 +98,7 @@ impl PerfProfile {
         Self { mean_s, sigma: 0.4 }
     }
 
+    /// Sample one execution time for function `f`, in seconds.
     pub fn sample_exec_s(&self, f: usize, rng: &mut Pcg64) -> f64 {
         let mean = self.mean_s[f];
         let mu = mean.ln() - self.sigma * self.sigma / 2.0;
@@ -108,8 +114,9 @@ pub struct BurstyArrivals {
     pub base_rate: f64,
     /// Probability per minute of switching into a burst regime.
     pub burst_prob: f64,
-    /// Burst intensity multiplier range.
+    /// Lower bound of the burst intensity multiplier.
     pub burst_lo: f64,
+    /// Upper bound of the burst intensity multiplier.
     pub burst_hi: f64,
 }
 
@@ -153,11 +160,15 @@ impl BurstyArrivals {
 pub struct SyntheticTrace {
     /// (arrival time s, function index) pairs, time-ordered.
     pub invocations: Vec<(f64, usize)>,
+    /// Size of the function universe the trace draws from.
     pub universe: usize,
+    /// Per-function performance profile (Fig 5).
     pub perf: PerfProfile,
 }
 
 impl SyntheticTrace {
+    /// Synthesize a trace over `universe` functions for `duration_s`
+    /// seconds, fully determined by `seed`.
     pub fn generate(universe: usize, duration_s: f64, seed: u64) -> Self {
         let mut rng = Pcg64::new(seed);
         let pop = Popularity::new(universe, AZURE_ZIPF_S);

@@ -16,6 +16,7 @@ use crate::util::rng::{AliasTable, Pcg64};
 /// One scripted VU step.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct VuStep {
+    /// The function this step invokes.
     pub function: FunctionId,
     /// Think time *after* this invocation completes, seconds.
     pub think_s: f64,
@@ -24,6 +25,7 @@ pub struct VuStep {
 /// A scripted virtual user: a deterministic sequence of steps.
 #[derive(Clone, Debug)]
 pub struct VuScript {
+    /// The VU's invocation sequence, consumed in order.
     pub steps: Vec<VuStep>,
     /// Initial stagger before the first invocation (spreads VU ramp-up).
     pub start_delay_s: f64,
@@ -32,9 +34,11 @@ pub struct VuScript {
 /// The full scripted workload for one run.
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// One pre-generated script per virtual user.
     pub vus: Vec<VuScript>,
     /// Invocation probability per function (the run's weighted selection).
     pub weights: Vec<f64>,
+    /// Run duration in virtual seconds.
     pub duration_s: f64,
 }
 
@@ -75,6 +79,7 @@ impl Workload {
         Self { vus, weights, duration_s: cfg.duration_s }
     }
 
+    /// Number of virtual users.
     pub fn num_vus(&self) -> usize {
         self.vus.len()
     }
@@ -90,10 +95,13 @@ impl Workload {
 /// (used by ablation benches; the paper's main experiments are closed-loop).
 #[derive(Clone, Debug)]
 pub struct OpenLoopTrace {
+    /// (arrival time, function) pairs, ascending in time.
     pub arrivals: Vec<(f64, FunctionId)>,
 }
 
 impl OpenLoopTrace {
+    /// Fold a synthetic trace's function universe onto the experiment's
+    /// `num_functions` types (modulo mapping).
     pub fn from_synthetic(
         invocations: &[(f64, usize)],
         num_functions: usize,
@@ -106,10 +114,12 @@ impl OpenLoopTrace {
         Self { arrivals }
     }
 
+    /// Number of arrivals.
     pub fn len(&self) -> usize {
         self.arrivals.len()
     }
 
+    /// True when the trace has no arrivals.
     pub fn is_empty(&self) -> bool {
         self.arrivals.is_empty()
     }

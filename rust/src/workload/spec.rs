@@ -8,7 +8,9 @@ use crate::util::rng::Pcg64;
 /// One FunctionBench application (Table I / Table II of the paper).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BaseApp {
+    /// FunctionBench application name.
     pub name: &'static str,
+    /// Resource category (cpu / disk / network).
     pub category: &'static str,
     /// Mean cold-start response latency in ms (Table I).
     pub cold_ms: f64,
@@ -49,11 +51,13 @@ pub struct FunctionSpec {
     pub id: FunctionId,
 }
 
+/// Dense function-type index into the experiment's registry.
 pub type FunctionId = usize;
 
 /// The registry of all function types for an experiment.
 #[derive(Clone, Debug)]
 pub struct FunctionRegistry {
+    /// Every function type, indexed by [`FunctionId`].
     pub functions: Vec<FunctionSpec>,
     /// Lognormal sigma of warm execution time (Fig 5 heterogeneity: repeated
     /// executions of the same function vary significantly).
@@ -91,26 +95,32 @@ impl FunctionRegistry {
         Self { functions, exec_sigma: 0.25, init_sigma: 0.20 }
     }
 
+    /// Number of function types.
     pub fn len(&self) -> usize {
         self.functions.len()
     }
 
+    /// True when the registry holds no functions.
     pub fn is_empty(&self) -> bool {
         self.functions.is_empty()
     }
 
+    /// The function spec for `id`.
     pub fn get(&self, id: FunctionId) -> &FunctionSpec {
         &self.functions[id]
     }
 
+    /// The base application behind function `id`.
     pub fn app(&self, id: FunctionId) -> &'static BaseApp {
         &BASE_APPS[self.functions[id].app]
     }
 
+    /// Sandbox memory footprint of function `id`, in MB.
     pub fn mem_mb(&self, id: FunctionId) -> u64 {
         self.app(id).mem_mb
     }
 
+    /// Reverse lookup by unique function name.
     pub fn by_name(&self, name: &str) -> Option<FunctionId> {
         self.functions.iter().position(|f| f.name == name)
     }

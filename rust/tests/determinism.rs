@@ -1,4 +1,5 @@
-//! Determinism equivalence suite for the event-core overhaul.
+//! Determinism equivalence suite for the event-core overhaul and the
+//! sharded parallel engine.
 //!
 //! The calendar-queue event core plus the incremental load/warm-supply
 //! accounting must be *bit-identical* to the seed implementation (binary
@@ -7,15 +8,32 @@
 //! {elastic, queue} × autoscale policy combination we run the same
 //! (config, seed) on both engines and require identical `summary_json()`
 //! output, event counts, and peak queue depth across ≥3 seeds.
+//!
+//! The sharded engine (`sim.shards > 1`, DESIGN.md §6) adds three more
+//! contracts, pinned below:
+//! - `--shards 1` never enters the parallel driver, so the serial path
+//!   stays bit-identical to the reference engine;
+//! - on partition-closed workloads a sharded run equals the merge of N
+//!   independent *reference-engine* runs of its partitions;
+//! - with the full barrier protocol active (policy ticks, power-of-d
+//!   pre-warm placement messages) runs are bit-reproducible under
+//!   (seed, shards) regardless of thread scheduling;
+//! - batch-coalesced completions are state-identical to one-at-a-time
+//!   dispatch (property test over the public `Cluster` API).
 
 #![cfg(feature = "ref-heap")]
 
-use hiku::config::Config;
+use hiku::config::{ClusterConfig, Config};
 use hiku::metrics::RunMetrics;
-use hiku::scheduler::{ALL_SCHEDULERS, PAPER_SCHEDULERS};
-use hiku::sim::{run_once, run_once_reference, run_trace, run_trace_reference};
+use hiku::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId};
+use hiku::prop_assert;
+use hiku::scheduler::{make_scheduler, ALL_SCHEDULERS, PAPER_SCHEDULERS};
+use hiku::sim::shard::{partition_config, shard_seed};
+use hiku::sim::{run_once, run_once_reference, run_trace, run_trace_reference, Simulation};
+use hiku::util::prop::{check, PropConfig};
 use hiku::workload::azure::SyntheticTrace;
-use hiku::workload::loadgen::OpenLoopTrace;
+use hiku::workload::loadgen::{OpenLoopTrace, Workload};
+use hiku::workload::spec::FunctionRegistry;
 
 const SEEDS: [u64; 3] = [1, 2, 3];
 
@@ -145,4 +163,234 @@ fn repeated_runs_identical_on_new_core() {
     let mut a = run_once(&c, 7).unwrap();
     let mut b = run_once(&c, 7).unwrap();
     assert_eq!(a.summary_json().to_string_compact(), b.summary_json().to_string_compact());
+}
+
+// ---- sharded engine (sim.shards > 1) ----------------------------------
+
+/// Serial reference run of one shard's partition on the seed (`ref-heap`)
+/// engine: the shard's worker slice, its VU slice, its RNG seed — built
+/// through the same public APIs the sharded driver uses internally.
+fn run_partition_reference(base: &Config, seed: u64, s: usize, n: usize) -> RunMetrics {
+    let pc = partition_config(base, s, n);
+    let registry = FunctionRegistry::functionbench(pc.workload.copies);
+    let workload = Workload::generate(&pc.workload, registry.len(), seed);
+    let sched = make_scheduler(&pc.scheduler, pc.cluster.workers).expect("scheduler");
+    Simulation::new(&pc, &registry, &workload, sched, shard_seed(seed, s))
+        .with_vu_slice(s, n)
+        .with_reference_core()
+        .run()
+}
+
+#[test]
+fn shards_one_is_the_serial_engine() {
+    // The acceptance contract: --shards 1 is bit-identical to the PR 2
+    // engine (and, transitively, to the seed reference engine).
+    for seed in SEEDS {
+        let c1 = cfg("hiku", 10, 20.0); // default shards = 1
+        let mut c2 = cfg("hiku", 10, 20.0);
+        c2.sim.shards = 1;
+        let mut a = run_once(&c1, seed).unwrap();
+        let mut b = run_once(&c2, seed).unwrap();
+        let mut r = run_once_reference(&c2, seed).unwrap();
+        assert_equiv_metrics(&mut a, &mut b, &format!("explicit-shards1/seed{seed}"));
+        assert_equiv_metrics(&mut b, &mut r, &format!("shards1-vs-reference/seed{seed}"));
+    }
+}
+
+#[test]
+fn sharded_matches_partitioned_reference() {
+    // Partition-closed workloads (static cluster, no pre-warm): a
+    // parallel sharded run must equal the merge, in shard order, of N
+    // independent serial runs of its partitions — run here on the
+    // *reference* engine, which transitively pins the sharded engine all
+    // the way back to the seed event core.
+    for sched in ALL_SCHEDULERS {
+        for &shards in &[2usize, 4] {
+            for seed in SEEDS {
+                let mut c = cfg(sched, 12, 20.0);
+                c.cluster.workers = 6;
+                c.sim.shards = shards;
+                let mut a = run_once(&c, seed).unwrap_or_else(|e| panic!("{sched}: {e}"));
+                let mut merged: Option<RunMetrics> = None;
+                for s in 0..shards {
+                    let m = run_partition_reference(&c, seed, s, shards);
+                    match &mut merged {
+                        None => merged = Some(m),
+                        Some(acc) => acc.merge(&m),
+                    }
+                }
+                let mut b = merged.unwrap();
+                assert_equiv_metrics(
+                    &mut a,
+                    &mut b,
+                    &format!("{sched}/shards{shards}/seed{seed}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_open_loop_matches_partitioned_reference() {
+    let mut c = cfg("hiku", 1, 40.0);
+    c.cluster.workers = 6;
+    c.sim.shards = 2;
+    let gen = SyntheticTrace::generate(40, 40.0, 555);
+    let trace = OpenLoopTrace::from_synthetic(&gen.invocations, 40);
+    for seed in SEEDS {
+        let mut a = run_trace(&c, &trace, seed).expect("sharded trace run");
+        let mut merged: Option<RunMetrics> = None;
+        for s in 0..2 {
+            let pc = partition_config(&c, s, 2);
+            let registry = FunctionRegistry::functionbench(pc.workload.copies);
+            let mut wcfg = pc.workload.clone();
+            wcfg.vus = 1; // open loop ignores the VU scripts
+            let workload = Workload::generate(&wcfg, registry.len(), seed);
+            let sched = make_scheduler(&pc.scheduler, pc.cluster.workers).expect("scheduler");
+            let m = Simulation::new(&pc, &registry, &workload, sched, shard_seed(seed, s))
+                .with_vu_slice(s, 2)
+                .with_reference_core()
+                .run_open_loop(&trace);
+            match &mut merged {
+                None => merged = Some(m),
+                Some(acc) => acc.merge(&m),
+            }
+        }
+        let mut b = merged.unwrap();
+        assert_equiv_metrics(&mut a, &mut b, &format!("open-loop-sharded/seed{seed}"));
+    }
+}
+
+#[test]
+fn sharded_runs_reproducible_with_full_coordination() {
+    // Reactive autoscale + the global pre-warm heuristic exercise the
+    // whole barrier protocol: shard reports, merged policy ticks,
+    // ScaleTo splits and power-of-d SpawnPrewarm placement. The run must
+    // be bit-reproducible under (seed, shards) regardless of thread
+    // scheduling, and the scaling machinery must actually fire.
+    for &shards in &[2usize, 3] {
+        let mut c = cfg("hiku", 24, 30.0);
+        c.cluster.workers = 6;
+        c.sim.shards = shards;
+        c.cluster.prewarm = true;
+        c.autoscale.policy = "reactive".into();
+        c.autoscale.max_workers = 12;
+        c.autoscale.cooldown_s = 2.0;
+        let mut a = run_once(&c, 7).unwrap();
+        let mut b = run_once(&c, 7).unwrap();
+        assert_equiv_metrics(&mut a, &mut b, &format!("coordinated/shards{shards}"));
+        assert_eq!(a.completed, a.issued, "closed loop must drain");
+        assert!(a.completed > 100, "suspiciously few requests");
+    }
+}
+
+#[test]
+fn sharded_scheduled_events_apply_at_epochs() {
+    let mut c = cfg("hiku", 12, 30.0);
+    c.cluster.workers = 4;
+    c.sim.shards = 2;
+    c.autoscale.policy = "scheduled".into();
+    c.autoscale.events = "5,9,-20".into();
+    let mut a = run_once(&c, 3).unwrap();
+    let mut b = run_once(&c, 3).unwrap();
+    assert_equiv_metrics(&mut a, &mut b, "scheduled/shards2");
+    assert!(
+        a.scale_event_count() >= 2,
+        "scheduled events must reach the shards: {:?}",
+        a.scaling_timeline
+    );
+    assert_eq!(a.scaling_timeline.first().map(|&(_, w)| w), Some(4));
+}
+
+/// Batch-coalesced completions ([`Cluster::complete_batch`]) must be
+/// state- and result-identical to one-at-a-time dispatch, in both
+/// admission modes, including queued-start handoffs and keep-alive
+/// sweeps interleaved between batches.
+#[test]
+fn prop_batched_completions_equal_sequential() {
+    check("batch-vs-sequential", PropConfig { cases: 120, ..Default::default() }, |rng, size| {
+        let workers = 1 + rng.index(3);
+        let elastic = rng.index(2) == 0;
+        let ccfg = ClusterConfig { workers, mem_mb: 2048, concurrency: 2, ..Default::default() };
+        let mut a = Cluster::new(&ccfg); // batched
+        let mut b = Cluster::new(&ccfg); // sequential reference
+        let mut busy: Vec<Vec<SandboxId>> = vec![Vec::new(); workers];
+        let mut t = 0.0;
+        for _ in 0..size * 3 {
+            t += 0.25;
+            match rng.index(4) {
+                0 | 1 => {
+                    let w = rng.index(workers);
+                    let f = rng.index(5);
+                    if elastic {
+                        let ia = a.assign_elastic(w, 0, f, 256, t);
+                        let ib = b.assign_elastic(w, 0, f, 256, t);
+                        prop_assert!(ia == ib, "assign diverged: {:?} vs {:?}", ia, ib);
+                        busy[w].push(ia.sandbox);
+                    } else {
+                        let oa = a.assign(w, 0, f, 256, t);
+                        let ob = b.assign(w, 0, f, 256, t);
+                        prop_assert!(oa == ob, "assign diverged: {:?} vs {:?}", oa, ob);
+                        if let AssignOutcome::Started(i) = oa {
+                            busy[w].push(i.sandbox);
+                        }
+                    }
+                }
+                2 => {
+                    // Batch-complete a random prefix of one worker's busy
+                    // executions in one call vs one at a time.
+                    let w = rng.index(workers);
+                    if busy[w].is_empty() {
+                        continue;
+                    }
+                    let k = 1 + rng.index(busy[w].len());
+                    let batch: Vec<SandboxId> = busy[w].drain(..k).collect();
+                    let got = a.complete_batch(w, &batch, elastic, t);
+                    prop_assert!(got.len() == batch.len(), "batch result length");
+                    for (i, &sb) in batch.iter().enumerate() {
+                        let want = if elastic {
+                            let (expiry, evicted) = b.complete_elastic(w, sb, t);
+                            BatchCompletion { expiry, started: None, evicted }
+                        } else {
+                            let (expiry, started) = b.complete(w, sb, t);
+                            BatchCompletion { expiry, started, evicted: Vec::new() }
+                        };
+                        prop_assert!(
+                            got[i] == want,
+                            "completion {} diverged: {:?} vs {:?}",
+                            i,
+                            got[i],
+                            want
+                        );
+                        // A queued request started on the freed slot: its
+                        // sandbox is busy again (both sides identical).
+                        if let Some(info) = &got[i].started {
+                            busy[w].push(info.sandbox);
+                        }
+                    }
+                }
+                _ => {
+                    let w = rng.index(workers);
+                    let ea = a.sweep_keepalive(w, t - 3.0);
+                    let eb = b.sweep_keepalive(w, t - 3.0);
+                    prop_assert!(ea == eb, "sweep diverged: {:?} vs {:?}", ea, eb);
+                }
+            }
+            // Full-state cross-check after every op.
+            prop_assert!(a.loads() == b.loads(), "loads diverged");
+            prop_assert!(
+                a.total_running() == b.total_running() && a.total_queued() == b.total_queued(),
+                "aggregate totals diverged"
+            );
+            for f in 0..5 {
+                prop_assert!(
+                    a.warm_nonbusy(f) == b.warm_nonbusy(f),
+                    "warm supply diverged at f={}",
+                    f
+                );
+            }
+            prop_assert!(a.load_summary() == b.load_summary(), "load summaries diverged");
+        }
+        Ok(())
+    });
 }
