@@ -1,0 +1,165 @@
+//! L2 ablation: the dispatch protocol — hiku under `dispatch.mode =
+//! "push"` vs `"pull"` on the bursty open-loop workload.
+//!
+//! The pull rows sweep the wait deadline (`dispatch.max_wait_s`): how
+//! long a request with a warm prospect may park in the router's pending
+//! queue before it is force-placed. The push row is the pre-redesign
+//! behavior (immediate fallback placement when `PQ_f` is empty). The
+//! headline number is the cold-start fraction: parked requests that get
+//! pulled are warm by construction, so pull should trade a bounded queue
+//! wait for a lower cold rate on bursts.
+//!
+//! A second section prices scale-to-zero: the same trace with a 60 s
+//! idle tail, reactive autoscaling with `min_workers` 1 vs 0 — the
+//! worker-seconds delta is the cost of holding the floor, and the cold
+//! rate shows what the queue-triggered wake pays for it.
+//!
+//! Emits machine-readable **`BENCH_dispatch.json`** (one row per run +
+//! aggregate cold-rate/cost keys) — the committed experiment recipe is
+//! in EXPERIMENTS.md §Dispatch. The equivalence/reduction contracts are
+//! enforced separately by `tests/determinism.rs` (push bit-identity) and
+//! `tests/dispatch.rs` (pull never cold-starts more than push on this
+//! workload).
+//!
+//! Usage:
+//!   cargo bench --bench ablation_dispatch            # full table
+//!   cargo bench --bench ablation_dispatch -- --quick # CI smoke
+
+use hiku::config::Config;
+use hiku::report::bursty_trace;
+use hiku::sim::run_trace;
+use hiku::util::json::{obj, Json};
+
+fn base_cfg(dur: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.name = "hiku".into();
+    cfg.workload.vus = 1; // open loop ignores the VU scripts
+    cfg.workload.duration_s = dur;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dur = if quick { 30.0 } else { 120.0 };
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+    let waits: &[f64] = if quick { &[0.5] } else { &[0.25, 0.5, 1.0] };
+    let trace = bursty_trace(40, dur, 42);
+    println!(
+        "# dispatch ablation: hiku push vs pull, bursty trace ({} arrivals / {:.0} s), {} workers",
+        trace.len(),
+        dur,
+        Config::default().cluster.workers
+    );
+    println!(
+        "{:<6} {:>6} {:>5} {:>9} {:>7} {:>9} {:>9} {:>9} {:>9} {:>7}",
+        "mode", "wait_s", "seed", "completed", "cold%", "mean(ms)", "p95(ms)", "wait(ms)",
+        "enqueued", "reject"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut cold_push = 0.0f64;
+    let mut cold_pull = 0.0f64; // at the default 0.5 s deadline
+    let mut run_cell = |mode: &str, wait: f64, seed: u64, rows: &mut Vec<Json>| -> (f64, f64) {
+        let mut cfg = base_cfg(dur);
+        cfg.dispatch.mode = mode.into();
+        if wait > 0.0 {
+            cfg.dispatch.max_wait_s = wait;
+        }
+        let mut m = run_trace(&cfg, &trace, seed).expect("dispatch ablation run");
+        let cold = m.cold_rate();
+        let mean = m.mean_latency_ms();
+        let p95 = m.latency_percentile_ms(95.0);
+        println!(
+            "{:<6} {:>6.2} {:>5} {:>9} {:>6.1}% {:>9.1} {:>9.1} {:>9.1} {:>9} {:>7}",
+            mode,
+            wait,
+            seed,
+            m.completed,
+            cold * 100.0,
+            mean,
+            p95,
+            m.mean_pending_wait_ms(),
+            m.enqueued,
+            m.rejected
+        );
+        rows.push(obj(vec![
+            ("mode", mode.into()),
+            ("max_wait_s", wait.into()),
+            ("seed", seed.into()),
+            ("completed", m.completed.into()),
+            ("cold_rate", cold.into()),
+            ("mean_ms", mean.into()),
+            ("p95_ms", p95.into()),
+            ("mean_pending_wait_ms", m.mean_pending_wait_ms().into()),
+            ("enqueued", m.enqueued.into()),
+            ("rejected", m.rejected.into()),
+            ("worker_seconds", m.worker_seconds.into()),
+        ]));
+        (cold, m.worker_seconds)
+    };
+
+    for &seed in seeds {
+        let (c, _) = run_cell("push", 0.0, seed, &mut rows);
+        cold_push += c / seeds.len() as f64;
+    }
+    for &wait in waits {
+        for &seed in seeds {
+            let (c, _) = run_cell("pull", wait, seed, &mut rows);
+            if (wait - 0.5).abs() < 1e-9 {
+                cold_pull += c / seeds.len() as f64;
+            }
+        }
+    }
+
+    // ---- scale-to-zero pricing: the trace plus a 60 s idle tail ----
+    println!("# scale-to-zero: reactive autoscale, min_workers 1 vs 0, 60 s idle tail");
+    let tail = 60.0;
+    let mut z_rows: Vec<Json> = Vec::new();
+    let mut ws = [0.0f64; 2];
+    for (i, &floor) in [1usize, 0].iter().enumerate() {
+        let mut cfg = base_cfg(dur + tail);
+        cfg.dispatch.mode = "pull".into();
+        cfg.cluster.workers = 2;
+        cfg.autoscale.policy = "reactive".into();
+        cfg.autoscale.min_workers = floor;
+        cfg.autoscale.max_workers = 10;
+        let mut m = run_trace(&cfg, &trace, 1).expect("scale-to-zero run");
+        println!(
+            "min_workers={} -> worker-seconds {:>8.0}, cold {:>5.1}%, p95 {:>8.1} ms",
+            floor,
+            m.worker_seconds,
+            m.cold_rate() * 100.0,
+            m.latency_percentile_ms(95.0)
+        );
+        ws[i] = m.worker_seconds;
+        z_rows.push(obj(vec![
+            ("min_workers", floor.into()),
+            ("worker_seconds", m.worker_seconds.into()),
+            ("cold_rate", m.cold_rate().into()),
+            ("p95_ms", m.latency_percentile_ms(95.0).into()),
+            ("completed", m.completed.into()),
+        ]));
+    }
+
+    let reduction =
+        if cold_push > 0.0 { (cold_push - cold_pull) / cold_push * 100.0 } else { 0.0 };
+    println!(
+        "cold-start fraction: push {:.2}% -> pull(0.5s) {:.2}%  ({reduction:.1}% reduction)",
+        cold_push * 100.0,
+        cold_pull * 100.0
+    );
+    let out = obj(vec![
+        ("bench", "dispatch".into()),
+        ("quick", quick.into()),
+        ("cold_rate_push", cold_push.into()),
+        ("cold_rate_pull_wait0_5", cold_pull.into()),
+        ("cold_reduction_pct", reduction.into()),
+        ("scale_to_zero_worker_seconds_floor1", ws[0].into()),
+        ("scale_to_zero_worker_seconds_floor0", ws[1].into()),
+        ("rows", Json::Arr(rows)),
+        ("scale_to_zero_rows", Json::Arr(z_rows)),
+    ]);
+    let path = "BENCH_dispatch.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

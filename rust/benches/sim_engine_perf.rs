@@ -304,6 +304,21 @@ fn main() {
         record(&mut rows, 100_000, "closed", "least-connections", "calendar-sampled", &m, wall);
     }
 
+    // Dispatch-protocol overhead: hiku under `dispatch.mode = "pull"` at
+    // the 10k closed-loop point (1k in quick mode) — pending-queue,
+    // deadline-event and pull-bind machinery measured against the plain
+    // push rows at the same scale. Like `calendar-sampled`, the distinct
+    // core tag keeps the row out of the push-vs-reference speedup
+    // aggregates (pull changes the event stream by design).
+    {
+        let (workers, dur, vus_mult) =
+            if quick { (1_000, 4.0, 8) } else { (10_000, 12.0, 24) };
+        let mut cfg = scale_cfg(workers, "hiku", dur, vus_mult);
+        cfg.dispatch.mode = "pull".into();
+        let (m, wall) = run_closed(&cfg, false);
+        record(&mut rows, workers, "closed", "hiku", "calendar-pull", &m, wall);
+    }
+
     // Per-scale aggregate speedups (the acceptance gate reads speedup_10k).
     let mut summary: Vec<(&'static str, Json)> = vec![
         ("bench", "sim_engine".into()),

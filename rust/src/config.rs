@@ -193,6 +193,41 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Dispatch-protocol parameters (the `dispatch` section): how the router
+/// turns a scheduler's [`crate::scheduler::Decision`] into work.
+///
+/// `mode = "push"` (default) routes every request synchronously through
+/// the push adapter — bit-identical to the pre-protocol engine.
+/// `mode = "pull"` activates the paper's pull loop as a first-class
+/// protocol: requests with a warm prospect park in the router's pending
+/// queue, idle workers claim them (`on_worker_idle`), a wait deadline
+/// force-places stragglers, and `queue_cap` bounds admission
+/// (DESIGN.md §8).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchConfig {
+    /// `"push"` (synchronous assignment, the default) or `"pull"`
+    /// (late binding through the pending queue).
+    pub mode: String,
+    /// Admission bound on parked requests across all functions; an
+    /// `Enqueue` decision against a full queue becomes a reject.
+    /// 0 = unbounded. The bound is per router instance — in sharded runs
+    /// each shard owns a pending queue, so the global bound is
+    /// `shards × queue_cap`.
+    pub queue_cap: usize,
+    /// Longest a parked request may wait for a warm worker before the
+    /// router force-places it via the scheduler's fallback, in seconds.
+    pub max_wait_s: f64,
+    /// Sharded runs: most parked requests one shard hands off to another
+    /// per epoch barrier (`ShardMsg::Handoff`); 0 disables stealing.
+    pub steal_batch: usize,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        Self { mode: "push".into(), queue_cap: 0, max_wait_s: 0.5, steal_batch: 8 }
+    }
+}
+
 /// Simulation-engine execution parameters (the `sim` section).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -243,6 +278,8 @@ pub struct Config {
     pub scheduler: SchedulerConfig,
     /// Elastic-scaling control loop.
     pub autoscale: AutoscaleConfig,
+    /// Dispatch protocol (push/pull, admission, steal batch).
+    pub dispatch: DispatchConfig,
     /// Simulation-engine execution (shards, barrier period).
     pub sim: SimConfig,
     /// PJRT runtime settings (real-time serving mode).
@@ -303,6 +340,15 @@ impl Config {
                     ("target_util", self.autoscale.target_util.into()),
                     ("prewarm_max_per_tick", self.autoscale.prewarm_max_per_tick.into()),
                     ("ewma_alpha", self.autoscale.ewma_alpha.into()),
+                ]),
+            ),
+            (
+                "dispatch",
+                obj(vec![
+                    ("mode", self.dispatch.mode.as_str().into()),
+                    ("queue_cap", self.dispatch.queue_cap.into()),
+                    ("max_wait_s", self.dispatch.max_wait_s.into()),
+                    ("steal_batch", self.dispatch.steal_batch.into()),
                 ]),
             ),
             (
@@ -452,6 +498,24 @@ impl Config {
                     v.as_f64().ok_or_else(|| missing("autoscale.ewma_alpha"))?;
             }
         }
+        if let Some(d) = j.get("dispatch") {
+            if let Some(v) = d.get("mode") {
+                cfg.dispatch.mode =
+                    v.as_str().ok_or_else(|| missing("dispatch.mode"))?.to_string();
+            }
+            if let Some(v) = d.get("queue_cap") {
+                cfg.dispatch.queue_cap =
+                    v.as_u64().ok_or_else(|| missing("dispatch.queue_cap"))? as usize;
+            }
+            if let Some(v) = d.get("max_wait_s") {
+                cfg.dispatch.max_wait_s =
+                    v.as_f64().ok_or_else(|| missing("dispatch.max_wait_s"))?;
+            }
+            if let Some(v) = d.get("steal_batch") {
+                cfg.dispatch.steal_batch =
+                    v.as_u64().ok_or_else(|| missing("dispatch.steal_batch"))? as usize;
+            }
+        }
         if let Some(s) = j.get("sim") {
             if let Some(v) = s.get("shards") {
                 cfg.sim.shards = v.as_u64().ok_or_else(|| missing("sim.shards"))? as usize;
@@ -545,6 +609,16 @@ impl Config {
             "sim.barrier_s" => {
                 self.sim.barrier_s = value.parse().map_err(|_| bad(path, value))?
             }
+            "dispatch.mode" => self.dispatch.mode = value.to_string(),
+            "dispatch.queue_cap" => {
+                self.dispatch.queue_cap = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.max_wait_s" => {
+                self.dispatch.max_wait_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.steal_batch" => {
+                self.dispatch.steal_batch = value.parse().map_err(|_| bad(path, value))?
+            }
             "autoscale.policy" => self.autoscale.policy = value.to_string(),
             "autoscale.interval_s" => {
                 self.autoscale.interval_s = value.parse().map_err(|_| bad(path, value))?
@@ -631,8 +705,15 @@ impl Config {
         if self.autoscale.interval_s <= 0.0 {
             return e("autoscale.interval_s must be > 0");
         }
-        if self.autoscale.min_workers == 0 {
-            return e("autoscale.min_workers must be >= 1");
+        if self.autoscale.min_workers == 0 && !self.pull_dispatch() {
+            // Scale-to-zero parks arrivals in the pending queue until the
+            // wake event restores capacity; push mode has nowhere to put
+            // a request while the cluster is empty.
+            return e("autoscale.min_workers = 0 (scale-to-zero) requires dispatch.mode = pull");
+        }
+        if self.autoscale.min_workers == 0 && self.sim.shards > 1 {
+            // The sharded coordinator enforces one worker per shard.
+            return e("autoscale.min_workers = 0 requires the serial engine (sim.shards = 1)");
         }
         if self.autoscale.max_workers < self.autoscale.min_workers {
             return e("autoscale.max_workers must be >= autoscale.min_workers");
@@ -660,6 +741,17 @@ impl Config {
             // the same warm supply and corrupt the prewarm hit-rate metric.
             return e("autoscale.policy=predictive replaces cluster.prewarm; disable one");
         }
+        match self.dispatch.mode.as_str() {
+            "push" | "pull" => {}
+            other => {
+                return Err(ConfigError(format!(
+                    "unknown dispatch.mode '{other}' (expected push or pull)"
+                )))
+            }
+        }
+        if self.dispatch.max_wait_s <= 0.0 {
+            return e("dispatch.max_wait_s must be > 0");
+        }
         if self.sim.shards == 0 {
             return e("sim.shards must be >= 1");
         }
@@ -680,6 +772,12 @@ impl Config {
     /// Total distinct function types in the workload.
     pub fn num_functions(&self) -> usize {
         self.workload.base_functions * self.workload.copies
+    }
+
+    /// Whether the pull dispatch protocol is active
+    /// (`dispatch.mode = "pull"`).
+    pub fn pull_dispatch(&self) -> bool {
+        self.dispatch.mode == "pull"
     }
 }
 
@@ -790,6 +888,39 @@ mod tests {
         assert!(c.validate().is_err());
         c.autoscale.policy = "reactive".into();
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn dispatch_section_roundtrip_and_validation() {
+        let c = Config::default();
+        assert_eq!(c.dispatch.mode, "push", "push dispatch by default");
+        assert!(!c.pull_dispatch());
+        let mut c = Config::default();
+        c.apply_override("dispatch.mode=pull").unwrap();
+        c.apply_override("dispatch.queue_cap=256").unwrap();
+        c.apply_override("dispatch.max_wait_s=0.25").unwrap();
+        c.apply_override("dispatch.steal_batch=4").unwrap();
+        assert!(c.pull_dispatch());
+        assert_eq!(c.dispatch.queue_cap, 256);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        // Bad mode / bad wait rejected.
+        let mut c = Config::default();
+        c.dispatch.mode = "lazy".into();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.dispatch.max_wait_s = 0.0;
+        assert!(c.validate().is_err());
+        // Scale-to-zero needs pull dispatch and the serial engine.
+        let mut c = Config::default();
+        c.autoscale.min_workers = 0;
+        assert!(c.validate().is_err(), "min_workers=0 under push must fail");
+        c.dispatch.mode = "pull".into();
+        assert!(c.validate().is_ok());
+        c.cluster.workers = 8;
+        c.sim.shards = 2;
+        assert!(c.validate().is_err(), "min_workers=0 sharded must fail");
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Router-side dispatch-protocol infrastructure: the pending queue behind
+//! [`crate::scheduler::Decision::Enqueue`] (DESIGN.md §8).
+//!
+//! The queue is **router-owned** (one per engine or server instance, not
+//! per scheduler): schedulers only answer `decide()`; parking, admission,
+//! wait deadlines, pulls and cross-shard steals are the router's job.
+//! Ordering is deterministic by construction — per-function FIFO for
+//! pulls, global arrival FIFO for deadline flushes and steals, no hashing
+//! and no ambient state — so a run under a fixed (config, seed) replays
+//! bit-for-bit.
+//!
+//! Representation: one `VecDeque` per function (the pull order) plus a
+//! global arrival-ordered mirror, lazily invalidated through a
+//! per-request waiting flag. Pops skip stale mirror entries, so both
+//! views stay amortized O(1) per operation without cross-linked nodes.
+
+use std::collections::VecDeque;
+
+use crate::workload::spec::FunctionId;
+
+/// Per-function FIFO pending queues with a global arrival-order view.
+/// Requests are identified by the router's dense request id.
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    /// Per-function FIFO of waiting request ids (pull order).
+    queues: Vec<VecDeque<u64>>,
+    /// Global arrival-ordered (rid, function) mirror (flush/steal order).
+    order: VecDeque<(u64, FunctionId)>,
+    /// `waiting[rid]`: the request is currently parked. Entries in the
+    /// queues above whose flag is false are stale and skipped on pop.
+    waiting: Vec<bool>,
+    /// Parked requests right now (live entries only).
+    len: usize,
+    /// Parked requests per function (live entries only).
+    len_f: Vec<usize>,
+}
+
+impl PendingQueue {
+    /// An empty pending queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parked requests across all functions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is parked.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Parked requests waiting for function `f`.
+    pub fn len_fn(&self, f: FunctionId) -> usize {
+        self.len_f.get(f).copied().unwrap_or(0)
+    }
+
+    /// Whether request `rid` is currently parked.
+    pub fn is_waiting(&self, rid: u64) -> bool {
+        self.waiting.get(rid as usize).copied().unwrap_or(false)
+    }
+
+    /// Park request `rid` (a request for function `f`). Ids must be
+    /// unique per queue lifetime (the router's dense request ids are).
+    pub fn push(&mut self, rid: u64, f: FunctionId) {
+        let i = rid as usize;
+        if i >= self.waiting.len() {
+            self.waiting.resize(i + 1, false);
+        }
+        debug_assert!(!self.waiting[i], "request {rid} parked twice");
+        self.waiting[i] = true;
+        if f >= self.queues.len() {
+            self.queues.resize_with(f + 1, VecDeque::new);
+            self.len_f.resize(f + 1, 0);
+        }
+        self.queues[f].push_back(rid);
+        self.order.push_back((rid, f));
+        self.len += 1;
+        self.len_f[f] += 1;
+    }
+
+    /// Claim the oldest request parked for `f` (an idle worker's pull).
+    pub fn pop_fn(&mut self, f: FunctionId) -> Option<u64> {
+        let q = self.queues.get_mut(f)?;
+        while let Some(rid) = q.pop_front() {
+            if self.waiting[rid as usize] {
+                self.waiting[rid as usize] = false;
+                self.len -= 1;
+                self.len_f[f] -= 1;
+                return Some(rid);
+            }
+            // Stale mirror entry (cancelled or claimed globally): skip.
+        }
+        None
+    }
+
+    /// Claim the globally oldest parked request, any function (the
+    /// deadline-flush and steal order).
+    pub fn pop_oldest(&mut self) -> Option<(u64, FunctionId)> {
+        while let Some((rid, f)) = self.order.pop_front() {
+            if self.waiting[rid as usize] {
+                self.waiting[rid as usize] = false;
+                self.len -= 1;
+                self.len_f[f] -= 1;
+                return Some((rid, f));
+            }
+        }
+        None
+    }
+
+    /// Un-park request `rid` for `f` without claiming it (deadline fired,
+    /// request stolen, …). Returns false when it was not parked.
+    pub fn cancel(&mut self, rid: u64, f: FunctionId) -> bool {
+        let i = rid as usize;
+        if !self.waiting.get(i).copied().unwrap_or(false) {
+            return false;
+        }
+        self.waiting[i] = false;
+        self.len -= 1;
+        self.len_f[f] -= 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_function_fifo_and_counts() {
+        let mut pq = PendingQueue::new();
+        assert!(pq.is_empty());
+        pq.push(0, 2);
+        pq.push(1, 0);
+        pq.push(2, 2);
+        assert_eq!(pq.len(), 3);
+        assert_eq!(pq.len_fn(2), 2);
+        assert!(pq.is_waiting(0) && pq.is_waiting(1) && pq.is_waiting(2));
+        assert_eq!(pq.pop_fn(2), Some(0), "oldest of f=2 first");
+        assert_eq!(pq.pop_fn(2), Some(2));
+        assert_eq!(pq.pop_fn(2), None);
+        assert_eq!(pq.len(), 1);
+        assert!(!pq.is_waiting(0));
+        assert_eq!(pq.pop_fn(7), None, "unknown function is empty");
+    }
+
+    #[test]
+    fn global_order_interleaves_functions() {
+        let mut pq = PendingQueue::new();
+        pq.push(10, 1);
+        pq.push(11, 0);
+        pq.push(12, 1);
+        assert_eq!(pq.pop_oldest(), Some((10, 1)));
+        assert_eq!(pq.pop_oldest(), Some((11, 0)));
+        assert_eq!(pq.pop_oldest(), Some((12, 1)));
+        assert_eq!(pq.pop_oldest(), None);
+        assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn cancel_and_stale_entries_are_skipped() {
+        let mut pq = PendingQueue::new();
+        pq.push(0, 3);
+        pq.push(1, 3);
+        pq.push(2, 3);
+        assert!(pq.cancel(1, 3), "cancel a parked request");
+        assert!(!pq.cancel(1, 3), "double-cancel is a no-op");
+        assert_eq!(pq.len(), 2);
+        assert_eq!(pq.len_fn(3), 2);
+        // The per-function pop skips the cancelled id.
+        assert_eq!(pq.pop_fn(3), Some(0));
+        assert_eq!(pq.pop_fn(3), Some(2));
+        // The global mirror's stale entries are skipped too.
+        pq.push(4, 1);
+        assert_eq!(pq.pop_oldest(), Some((4, 1)));
+        assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn cross_view_claims_invalidate_each_other() {
+        let mut pq = PendingQueue::new();
+        pq.push(0, 0);
+        pq.push(1, 1);
+        // Claimed through the per-function view; the global mirror must
+        // not hand it out again.
+        assert_eq!(pq.pop_fn(0), Some(0));
+        assert_eq!(pq.pop_oldest(), Some((1, 1)));
+        assert_eq!(pq.pop_oldest(), None);
+        // And the other way around.
+        pq.push(2, 1);
+        assert_eq!(pq.pop_oldest(), Some((2, 1)));
+        assert_eq!(pq.pop_fn(1), None);
+        assert_eq!(pq.len(), 0);
+    }
+}

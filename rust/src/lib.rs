@@ -7,7 +7,10 @@
 //! `EXPERIMENTS.md` the paper-vs-measured results and bench commands.
 //!
 //! - [`scheduler`] — the paper's contribution: Hiku (Algorithm 1) plus all
-//!   baseline scheduling algorithms.
+//!   baseline scheduling algorithms, behind the decision-based dispatch
+//!   protocol (`decide -> Assign | Enqueue | Reject`).
+//! - [`dispatch`] — router-owned dispatch infrastructure: the pending
+//!   queue behind `Enqueue` (per-function FIFO, deterministic ordering).
 //! - [`platform`] — the FaaS substrate: workers, sandboxes, keep-alive.
 //! - [`autoscale`] — policy-driven elastic scaling and predictive
 //!   pre-warming (closes the §II-C auto-scaling loop).
@@ -30,6 +33,7 @@
 pub mod autoscale;
 pub mod bench;
 pub mod config;
+pub mod dispatch;
 pub mod logging;
 pub mod metrics;
 pub mod platform;

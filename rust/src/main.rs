@@ -11,6 +11,7 @@
 //! Examples:
 //!   hiku sim --scheduler hiku --vus 100 --duration 300 --seed 42
 //!   hiku sim --scheduler hiku --autoscale reactive --workers 2
+//!   hiku sim --scheduler hiku --dispatch pull --vus 100
 //!   hiku sim --workers 100000 --vus 100000 --shards 4 --duration 10
 //!   hiku sweep --runs 5 --vu-levels 20,50,100
 //!   hiku trace --universe 10000 --minutes 30
@@ -61,6 +62,7 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("autoscale", None, "autoscale policy (none|scheduled|reactive|predictive)")
         .opt("scale-events", None, "scheduled-policy events, e.g. '60;120;-150'")
         .opt("shards", None, "event-core shards (OS threads; 1 = serial engine)")
+        .opt("dispatch", None, "dispatch protocol mode (push|pull)")
         .opt("seed", None, "experiment seed")
 }
 
@@ -94,6 +96,9 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     }
     if let Some(v) = args.get("shards") {
         cfg.sim.shards = v.parse().map_err(|_| "--shards: integer expected".to_string())?;
+    }
+    if let Some(m) = args.get("dispatch") {
+        cfg.dispatch.mode = m.to_string();
     }
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;
@@ -300,6 +305,7 @@ fn cmd_export(argv: &[String]) -> i32 {
         ("fig14_cv_series.csv", export::cv_series_csv(&all)),
         ("fig16_cumulative.csv", export::cumulative_csv(&all)),
         ("autoscale_timeline.csv", export::scaling_timeline_csv(&all)),
+        ("pending_depth.csv", export::pending_depth_csv(&all)),
         ("summary.csv", export::summary_csv(&mut all)),
     ];
     for (name, content) in files {

@@ -30,6 +30,25 @@ pub struct RunMetrics {
     pub cold_series: TimeSeries,
     /// Worker-queue delay (scheduling quality diagnostic).
     pub queue_delay_ms: OnlineStats,
+    /// Requests refused by admission control (`Decision::Reject`). Counted
+    /// separately from `issued`/`completed` so rejects never silently
+    /// vanish from the latency percentiles.
+    pub rejected: u64,
+    /// Requests that were parked in the router's pending queue
+    /// (`Decision::Enqueue`, pull dispatch).
+    pub enqueued: u64,
+    /// Parked requests handed off across shards at epoch barriers
+    /// (`ShardMsg::Handoff`), counted at the receiving shard.
+    pub stolen: u64,
+    /// Pending-queue wait per parked request, ms (arrival → worker bind).
+    pub pending_wait_ms: Samples,
+    /// Pending-queue depth timeline, sampled at the keep-alive sweep tick
+    /// (pull dispatch only; empty otherwise).
+    pub pending_timeline: Vec<(f64, usize)>,
+    /// High-water mark of the pending queue. Sharded runs sum the
+    /// per-shard peaks (like `peak_event_queue`): an upper-bound proxy
+    /// for the global backlog, not an exact simultaneous maximum.
+    pub peak_pending: usize,
     /// Autoscale timeline: (time, active workers after the event). The
     /// first entry is the initial worker count at t=0; a static run has
     /// exactly one entry.
@@ -70,6 +89,12 @@ impl RunMetrics {
             throughput: TimeSeries::new(1.0),
             cold_series: TimeSeries::new(1.0),
             queue_delay_ms: OnlineStats::new(),
+            rejected: 0,
+            enqueued: 0,
+            stolen: 0,
+            pending_wait_ms: Samples::new(),
+            pending_timeline: Vec::new(),
+            peak_pending: 0,
             scaling_timeline: Vec::new(),
             worker_seconds: 0.0,
             prewarm_spawned: 0,
@@ -105,6 +130,30 @@ impl RunMetrics {
     pub fn record_assignment(&mut self, worker: usize, t: f64) {
         self.imbalance.record_assignment(worker, t);
         self.issued += 1;
+    }
+
+    /// One request was refused by admission control.
+    pub fn record_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// One request was parked in the pending queue, which now holds
+    /// `depth` requests.
+    pub fn record_enqueue(&mut self, depth: usize) {
+        self.enqueued += 1;
+        if depth > self.peak_pending {
+            self.peak_pending = depth;
+        }
+    }
+
+    /// A parked request was bound to a worker after waiting `wait_s`.
+    pub fn record_pending_wait(&mut self, wait_s: f64) {
+        self.pending_wait_ms.push(wait_s * 1000.0);
+    }
+
+    /// Pending-queue depth sample at time `t` (1 Hz in pull mode).
+    pub fn record_pending_depth(&mut self, t: f64, depth: usize) {
+        self.pending_timeline.push((t, depth));
     }
 
     /// One request completed: record its end-to-end latency, cold/warm
@@ -178,6 +227,27 @@ impl RunMetrics {
         }
     }
 
+    /// Fraction of admission attempts that were refused: rejected over
+    /// (issued + rejected). 0 when nothing arrived.
+    pub fn reject_rate(&self) -> f64 {
+        let total = self.issued + self.rejected;
+        if total == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / total as f64
+        }
+    }
+
+    /// Mean pending-queue wait in ms over parked requests (0 when nothing
+    /// was parked — push mode, or a pull run that never enqueued).
+    pub fn mean_pending_wait_ms(&self) -> f64 {
+        if self.pending_wait_ms.is_empty() {
+            0.0
+        } else {
+            self.pending_wait_ms.mean()
+        }
+    }
+
     /// Fold another run's raw measurements into this one — the shard-merge
     /// reduction over disjoint worker sets and request streams sharing one
     /// virtual clock. Samples are unioned (derived percentiles/rates are
@@ -185,8 +255,10 @@ impl RunMetrics {
     /// order, the scaling timelines are added as step functions (so
     /// `worker_seconds` stays the integral of the *global* active-worker
     /// count), and counters sum. `scheduler`, `vus` and `duration_s` keep
-    /// `self`'s values; `peak_event_queue` sums (total pending events
-    /// across shard queues is the meaningful high-water proxy).
+    /// `self`'s values; `peak_event_queue` and `peak_pending` sum (total
+    /// backlog across shard queues is the meaningful high-water proxy —
+    /// per-shard peaks need not be simultaneous, so the sum is an upper
+    /// bound, not an exact global maximum).
     pub fn merge(&mut self, other: &RunMetrics) {
         self.latency_ms.merge_from(&other.latency_ms);
         self.latency_cold_ms.merge_from(&other.latency_cold_ms);
@@ -197,6 +269,12 @@ impl RunMetrics {
         self.throughput.merge_add(&other.throughput);
         self.cold_series.merge_add(&other.cold_series);
         self.queue_delay_ms.merge(&other.queue_delay_ms);
+        self.rejected += other.rejected;
+        self.enqueued += other.enqueued;
+        self.stolen += other.stolen;
+        self.pending_wait_ms.merge_from(&other.pending_wait_ms);
+        self.pending_timeline = merge_timelines(&self.pending_timeline, &other.pending_timeline);
+        self.peak_pending += other.peak_pending;
         self.scaling_timeline = merge_timelines(&self.scaling_timeline, &other.scaling_timeline);
         self.worker_seconds += other.worker_seconds;
         self.prewarm_spawned += other.prewarm_spawned;
@@ -234,6 +312,12 @@ impl RunMetrics {
             ("scale_events", self.scale_event_count().into()),
             ("prewarm_spawned", self.prewarm_spawned.into()),
             ("prewarm_hit_rate", self.prewarm_hit_rate().into()),
+            ("rejected", self.rejected.into()),
+            ("reject_rate", self.reject_rate().into()),
+            ("enqueued", self.enqueued.into()),
+            ("stolen", self.stolen.into()),
+            ("mean_pending_wait_ms", self.mean_pending_wait_ms().into()),
+            ("peak_pending", self.peak_pending.into()),
         ])
     }
 }
@@ -282,6 +366,8 @@ pub struct Aggregate {
     pub p99_ms: OnlineStats,
     /// Cold-start rate across runs.
     pub cold_rate: OnlineStats,
+    /// Admission reject rate across runs.
+    pub reject_rate: OnlineStats,
     /// Load-imbalance CV across runs.
     pub mean_cv: OnlineStats,
     /// Completed requests across runs.
@@ -307,6 +393,7 @@ impl Aggregate {
         self.p95_ms.push(run.latency_percentile_ms(95.0));
         self.p99_ms.push(run.latency_percentile_ms(99.0));
         self.cold_rate.push(run.cold_rate());
+        self.reject_rate.push(run.reject_rate());
         self.mean_cv.push(run.mean_cv());
         self.completed.push(run.completed as f64);
         self.rps.push(run.rps());
@@ -358,6 +445,42 @@ mod tests {
         m.prewarm_spawned = 4;
         m.prewarm_hits = 3;
         assert!((m.prewarm_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reject_accounting() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 10.0);
+        assert_eq!(m.reject_rate(), 0.0, "no traffic -> rate 0");
+        m.record_assignment(0, 0.5);
+        m.record_response(0.1, false, 0.0, 1.0);
+        m.record_reject();
+        m.record_reject();
+        m.record_enqueue(1);
+        m.record_enqueue(3);
+        m.record_pending_wait(0.2);
+        m.record_pending_depth(1.0, 3);
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.enqueued, 2);
+        assert_eq!(m.peak_pending, 3);
+        assert!((m.reject_rate() - 2.0 / 3.0).abs() < 1e-12);
+        // Rejects never contaminate the latency samples.
+        assert_eq!(m.latency_ms.len(), 1);
+        let j = m.summary_json();
+        assert_eq!(j.get("rejected").unwrap().as_u64(), Some(2));
+        assert!(j.get("reject_rate").unwrap().as_f64().unwrap() > 0.6);
+        assert_eq!(j.get("peak_pending").unwrap().as_u64(), Some(3));
+        // Merge sums the new counters and unions the wait samples.
+        let mut b = RunMetrics::new("hiku", 2, 10, 10.0);
+        b.record_reject();
+        b.record_enqueue(5);
+        b.record_pending_wait(0.4);
+        b.stolen = 1;
+        m.merge(&b);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.enqueued, 3);
+        assert_eq!(m.stolen, 1);
+        assert_eq!(m.peak_pending, 8);
+        assert_eq!(m.pending_wait_ms.len(), 2);
     }
 
     #[test]

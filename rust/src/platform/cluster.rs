@@ -180,11 +180,13 @@ impl Cluster {
 
     /// Grow or shrink the active prefix, moving boundary workers'
     /// contributions (running, queued, warm counts, load-index membership)
-    /// in or out of the aggregates.
+    /// in or out of the aggregates. `n = 0` parks the whole cluster
+    /// (scale-to-zero; the engine only drains that far under pull
+    /// dispatch, where arrivals park in the pending queue).
     pub fn set_active(&mut self, n: usize) {
         assert!(
-            (1..=self.workers.len()).contains(&n),
-            "active {n} out of range 1..={}",
+            n <= self.workers.len(),
+            "active {n} out of range 0..={}",
             self.workers.len()
         );
         while self.active < n {

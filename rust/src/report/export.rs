@@ -85,7 +85,10 @@ pub fn scaling_timeline_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
     to_csv(&["scheduler", "time_s", "active_workers"], &rows)
 }
 
-/// Summary table (Figs 11/12/13/15/17 scalars) — one row per run.
+/// Summary table (Figs 11/12/13/15/17 scalars plus the dispatch-protocol
+/// admission columns) — one row per run. Rejected requests are reported
+/// explicitly: they are excluded from the latency percentiles by
+/// construction, so the rate column is the only place they surface.
 pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
     let mut rows = Vec::new();
     for (sched, ms) in runs.iter_mut() {
@@ -102,16 +105,36 @@ pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
                 format!("{:.4}", m.mean_cv()),
                 m.completed.to_string(),
                 format!("{:.2}", m.rps()),
+                m.rejected.to_string(),
+                format!("{:.4}", m.reject_rate()),
+                m.enqueued.to_string(),
+                format!("{:.2}", m.mean_pending_wait_ms()),
             ]);
         }
     }
     to_csv(
         &[
             "scheduler", "run", "vus", "mean_ms", "p90_ms", "p95_ms", "p99_ms", "cold_rate",
-            "mean_cv", "completed", "rps",
+            "mean_cv", "completed", "rps", "rejected", "reject_rate", "enqueued",
+            "mean_pending_wait_ms",
         ],
         &rows,
     )
+}
+
+/// Dispatch-protocol pending-depth timeline — columns
+/// (scheduler, time_s, pending). One series per scheduler (first run);
+/// push-mode runs contribute no rows (the timeline is pull-only).
+pub fn pending_depth_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs {
+        if let Some(m) = ms.first() {
+            for &(t, depth) in &m.pending_timeline {
+                rows.push(vec![sched.clone(), format!("{t:.3}"), depth.to_string()]);
+            }
+        }
+    }
+    to_csv(&["scheduler", "time_s", "pending"], &rows)
 }
 
 #[cfg(test)]
@@ -161,6 +184,21 @@ mod tests {
         let csv = summary_csv(&mut runs);
         assert_eq!(csv.lines().count(), 1 + 4, "2 schedulers x 2 runs + header");
         assert!(csv.contains("mean_ms"));
+        assert!(csv.contains("reject_rate"), "admission columns must export");
+        // Push-mode runs: zero rejects, zero enqueues, but the columns
+        // are present (no silent vanishing).
+        let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row.len(), 15);
+        assert_eq!(row[11], "0", "rejected count column");
+        assert_eq!(row[13], "0", "enqueued column");
+    }
+
+    #[test]
+    fn pending_depth_csv_empty_for_push_runs() {
+        let runs = tiny_runs();
+        let csv = pending_depth_csv(&runs);
+        assert_eq!(csv.lines().count(), 1, "push mode has no pending timeline");
+        assert_eq!(csv.lines().next().unwrap(), "scheduler,time_s,pending");
     }
 
     #[test]

@@ -50,14 +50,15 @@ pub fn evaluation_report(
         runs
     ));
     out.push_str(&format!(
-        "{:<20} {:>4} {:>10} {:>8} {:>8} {:>8} {:>8} {:>7} {:>9} {:>8}\n",
-        "scheduler", "VUs", "mean(ms)", "p90(ms)", "p95(ms)", "p99(ms)", "cold%", "CV", "completed", "rps"
+        "{:<20} {:>4} {:>10} {:>8} {:>8} {:>8} {:>8} {:>6} {:>7} {:>9} {:>8}\n",
+        "scheduler", "VUs", "mean(ms)", "p90(ms)", "p95(ms)", "p99(ms)", "cold%", "rej%", "CV",
+        "completed", "rps"
     ));
     for &vus in vu_levels {
         for sched in schedulers {
             let (agg, _) = run_cell(base, sched, vus, runs)?;
             out.push_str(&format!(
-                "{:<20} {:>4} {:>10.1} {:>8.1} {:>8.1} {:>8.1} {:>6.1}% {:>7.3} {:>9.0} {:>8.1}\n",
+                "{:<20} {:>4} {:>10.1} {:>8.1} {:>8.1} {:>8.1} {:>6.1}% {:>5.1}% {:>7.3} {:>9.0} {:>8.1}\n",
                 sched,
                 vus,
                 agg.mean_latency_ms.mean(),
@@ -65,6 +66,7 @@ pub fn evaluation_report(
                 agg.p95_ms.mean(),
                 agg.p99_ms.mean(),
                 agg.cold_rate.mean() * 100.0,
+                agg.reject_rate.mean() * 100.0,
                 agg.mean_cv.mean(),
                 agg.completed.mean(),
                 agg.rps.mean(),

@@ -32,7 +32,7 @@
 //! which the algorithm leaves unspecified; under a fixed seed the choice
 //! is still fully deterministic.
 
-use super::{SchedCtx, Scheduler, WorkerId};
+use super::{Decision, SchedCtx, Scheduler, WorkerId};
 use crate::workload::spec::FunctionId;
 
 /// The pull-based scheduler (Algorithm 1). See the module docs.
@@ -54,6 +54,11 @@ pub struct Hiku {
     pub pulls: u64,
     /// Requests served through the fallback mechanism.
     pub fallbacks: u64,
+    /// `Enqueue` decisions returned (pull dispatch). Counts what the
+    /// scheduler *asked for*: the router may still convert an enqueue
+    /// into a reject at `dispatch.queue_cap`, so this can exceed the
+    /// router's metered `RunMetrics::enqueued` by the reject count.
+    pub enqueues: u64,
     /// Eviction notifications received.
     pub evict_notifications: u64,
 }
@@ -68,6 +73,7 @@ impl Hiku {
             sample_d: 0,
             pulls: 0,
             fallbacks: 0,
+            enqueues: 0,
             evict_notifications: 0,
         }
     }
@@ -112,6 +118,19 @@ impl Hiku {
         }
         Some(q.swap_remove(best))
     }
+
+    /// The fallback mechanism (Algorithm 1, lines 7-11): least
+    /// connections with random tie-breaking by default, a custom
+    /// scheduler or the sampled variant per configuration (§IV-B).
+    fn fallback_select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId {
+        match &mut self.fallback {
+            Some(fb) => fb.select(f, ctx),
+            None if self.sample_d > 0 => {
+                super::sampled_least_loaded(ctx.loads, ctx.rng, self.sample_d)
+            }
+            None => ctx.least_loaded_random_tie(),
+        }
+    }
 }
 
 impl Scheduler for Hiku {
@@ -129,13 +148,28 @@ impl Scheduler for Hiku {
         // by default; configurable per §IV-B. The ctx helper uses the
         // router's incremental min-load index when one is attached.
         self.fallbacks += 1;
-        match &mut self.fallback {
-            Some(fb) => fb.select(f, ctx),
-            None if self.sample_d > 0 => {
-                super::sampled_least_loaded(ctx.loads, ctx.rng, self.sample_d)
-            }
-            None => ctx.least_loaded_random_tie(),
+        self.fallback_select(f, ctx)
+    }
+
+    /// The pull protocol: dequeue from `PQ_f` when a warm worker is
+    /// advertised; otherwise park the request if an execution of `f` is
+    /// in flight (a warm instance will free up soon — the late-binding
+    /// window); otherwise fall back immediately, exactly like push mode.
+    /// Without dispatch context this *is* the push adapter.
+    fn decide(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> Decision {
+        let Some(d) = ctx.dispatch else {
+            return Decision::Assign(self.select(f, ctx));
+        };
+        if let Some(w) = self.dequeue_least_loaded(f, ctx.loads) {
+            self.pulls += 1;
+            return Decision::Assign(w);
         }
+        if d.inflight_f > 0 {
+            self.enqueues += 1;
+            return Decision::Enqueue;
+        }
+        self.fallbacks += 1;
+        Decision::Assign(self.fallback_select(f, ctx))
     }
 
     fn on_complete(&mut self, w: WorkerId, f: FunctionId, _ctx: &mut SchedCtx) {
@@ -273,6 +307,39 @@ mod tests {
         assert_eq!(h.select(4, &mut ctx(&loads, &mut rng)), 1);
         assert_eq!(h.select(4, &mut ctx(&loads, &mut rng)), 2);
         assert_eq!(h.fallbacks, 0);
+    }
+
+    #[test]
+    fn decide_pulls_parks_or_falls_back() {
+        use crate::scheduler::DispatchCtx;
+        let mut h = Hiku::new(3);
+        let mut rng = Pcg64::new(8);
+        let loads = [1u32, 0, 2];
+        // Warm worker advertised: the pull wins regardless of inflight.
+        h.on_complete(2, 4, &mut ctx(&loads, &mut rng));
+        let d = {
+            let mut c = ctx(&loads, &mut rng)
+                .with_dispatch(DispatchCtx { inflight_f: 1, pending_f: 0 });
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::Assign(2));
+        assert_eq!(h.pulls, 1);
+        // PQ_f empty + an execution of f in flight: park the request.
+        let d = {
+            let mut c = ctx(&loads, &mut rng)
+                .with_dispatch(DispatchCtx { inflight_f: 1, pending_f: 0 });
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::Enqueue);
+        assert_eq!(h.enqueues, 1);
+        // PQ_f empty + nothing in flight: immediate fallback, like push.
+        let d = {
+            let mut c = ctx(&loads, &mut rng).with_dispatch(DispatchCtx::default());
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::Assign(1), "fallback must be least-connections");
+        // No dispatch context at all: the push adapter.
+        assert_eq!(h.decide(4, &mut ctx(&loads, &mut rng)), Decision::Assign(1));
     }
 
     /// Property: a pull never returns a worker that is not enqueued, the

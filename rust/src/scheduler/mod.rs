@@ -11,9 +11,20 @@
 //! response returns — this is the paper's "number of active connections".
 //! Schedulers are notified of lifecycle events:
 //!
+//! - [`Scheduler::decide`] — the dispatch-protocol entry point: answer a
+//!   request with a [`Decision`] — assign a worker now, park the request
+//!   in the router's pending queue, or refuse it. The default
+//!   implementation is the *push adapter*: it assigns synchronously via
+//!   [`Scheduler::select`], so every legacy algorithm participates in the
+//!   protocol with bit-identical behavior (DESIGN.md §8).
 //! - [`Scheduler::select`] — choose a worker for a request (the decision
 //!   whose overhead §V-B reports: 0.0023 ms for random .. 0.0149 ms for
-//!   pull-based on the paper's testbed).
+//!   pull-based on the paper's testbed). Under the dispatch protocol this
+//!   doubles as the *forced placement* rule the router uses when a parked
+//!   request's wait deadline expires.
+//! - [`Scheduler::on_worker_idle`] — pull hook: a worker just became idle
+//!   holding a warm instance of `f`; the scheduler names the pending
+//!   queue it should claim from (the paper's pull loop made first-class).
 //! - [`Scheduler::on_complete`] — a worker finished executing `f` and now
 //!   holds an idle instance (Hiku enqueues the worker in `PQ_f`).
 //! - [`Scheduler::on_evict`] — a worker evicted an idle instance of `f`
@@ -35,6 +46,58 @@ pub use ring::{ChBl, Consistent, RjCh};
 /// Dense worker index (see [`crate::platform::worker::WorkerId`]).
 pub type WorkerId = usize;
 
+/// A dispatch decision — the answer to [`Scheduler::decide`]. Replaces
+/// the implicit `select -> WorkerId` contract: task assignment is no
+/// longer forced to happen at request arrival (late binding, DESIGN.md §8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Bind the request to this worker immediately (push semantics).
+    Assign(WorkerId),
+    /// Park the request in the router's pending queue: an idle worker
+    /// will pull it ([`Scheduler::on_worker_idle`]) or the router's wait
+    /// deadline will force-place it via [`Scheduler::select`].
+    Enqueue,
+    /// Refuse the request (admission control). The router records it in
+    /// the reject metrics; the client moves on.
+    Reject(RejectReason),
+}
+
+/// Why a request was refused ([`Decision::Reject`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The router's pending queue is at `dispatch.queue_cap`.
+    QueueFull,
+}
+
+/// What an idle worker claims from the router's pending queues — the
+/// answer to [`Scheduler::on_worker_idle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pull {
+    /// Claim the oldest pending request of this function type (a warm
+    /// start on the idle instance).
+    Function(FunctionId),
+    /// Claim nothing; the idle instance is advertised through
+    /// [`Scheduler::on_complete`] instead.
+    Skip,
+}
+
+/// Router-side dispatch state handed to [`Scheduler::decide`] when the
+/// pull protocol is active (`dispatch.mode = "pull"`). `None` in the
+/// [`SchedCtx`] means push semantics: `decide` must assign synchronously.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DispatchCtx {
+    /// Executions of the requested function currently running across the
+    /// active workers — when > 0 a warm instance will free up soon, so
+    /// parking the request has a prospect of a warm start.
+    pub inflight_f: usize,
+    /// Requests already waiting in the router's pending queue for the
+    /// requested function. The built-in Hiku ignores it (it parks purely
+    /// on `inflight_f`); it is provided so custom `decide` /
+    /// `on_worker_idle` implementations can bound their own waiting
+    /// lines without a side channel to the router.
+    pub pending_f: usize,
+}
+
 /// Router-maintained state handed to every scheduler call.
 pub struct SchedCtx<'a> {
     /// Active connections per worker (outstanding routed requests).
@@ -47,12 +110,21 @@ pub struct SchedCtx<'a> {
     pub min_index: Option<&'a MinLoadIndex>,
     /// Scheduler-owned RNG stream (tie-breaking, random selection).
     pub rng: &'a mut Pcg64,
+    /// Pull-dispatch context; `None` (push mode) makes [`Scheduler::decide`]
+    /// behave exactly like [`Scheduler::select`].
+    pub dispatch: Option<DispatchCtx>,
 }
 
 impl<'a> SchedCtx<'a> {
     /// Context without an index (tests, the real-time server).
     pub fn new(loads: &'a [u32], rng: &'a mut Pcg64) -> Self {
-        Self { loads, min_index: None, rng }
+        Self { loads, min_index: None, rng, dispatch: None }
+    }
+
+    /// Attach pull-dispatch context (router pending-queue state).
+    pub fn with_dispatch(mut self, d: DispatchCtx) -> Self {
+        self.dispatch = Some(d);
+        self
     }
 
     /// Least-loaded worker, uniform random among ties — Algorithm 1's
@@ -110,6 +182,30 @@ pub trait Scheduler: Send {
 
     /// Route a request for function type `f` to a worker.
     fn select(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> WorkerId;
+
+    /// Dispatch-protocol entry point: assign, park, or refuse the request.
+    ///
+    /// The default is the **push adapter**: assign synchronously via
+    /// [`Scheduler::select`], consuming the identical RNG stream — so
+    /// every algorithm participates in the Decision protocol and
+    /// `dispatch.mode = "push"` is bit-identical to the pre-protocol
+    /// engine (enforced by `tests/determinism.rs`). Schedulers that
+    /// understand late binding (Hiku) override this to return
+    /// [`Decision::Enqueue`] when waiting briefly is likely to yield a
+    /// warm start.
+    fn decide(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> Decision {
+        Decision::Assign(self.select(f, ctx))
+    }
+
+    /// Pull hook: worker `w` just became idle holding a warm instance of
+    /// `f`. The return value names the pending queue the router should
+    /// let it claim from; [`Pull::Skip`] declines and the instance is
+    /// advertised through [`Scheduler::on_complete`] instead. Only called
+    /// under `dispatch.mode = "pull"`. The default claims the worker's
+    /// own last function — a guaranteed warm start.
+    fn on_worker_idle(&mut self, _w: WorkerId, f: FunctionId, _ctx: &mut SchedCtx) -> Pull {
+        Pull::Function(f)
+    }
 
     /// Worker `w` finished an execution of `f` (its sandbox is now idle).
     fn on_complete(&mut self, _w: WorkerId, _f: FunctionId, _ctx: &mut SchedCtx) {}
@@ -215,6 +311,10 @@ pub const ALL_SCHEDULERS: [&str; 9] = [
     "jsq",
     "power-of-d",
 ];
+/// Composite (`hiku+<fallback>`) registry names covered by the ablation
+/// configs — regression-guarded alongside [`ALL_SCHEDULERS`] in the
+/// registry and determinism tests.
+pub const COMPOSITE_SCHEDULERS: [&str; 2] = ["hiku+random", "hiku+ch-bl"];
 
 #[cfg(test)]
 mod tests {
@@ -222,13 +322,43 @@ mod tests {
 
     #[test]
     fn registry_constructs_all() {
-        for name in ALL_SCHEDULERS {
-            let cfg = SchedulerConfig { name: name.into(), ..Default::default() };
+        for name in ALL_SCHEDULERS.iter().chain(COMPOSITE_SCHEDULERS.iter()) {
+            let cfg = SchedulerConfig { name: (*name).into(), ..Default::default() };
             let s = make_scheduler(&cfg, 5).unwrap();
             assert!(!s.name().is_empty());
         }
         let bad = SchedulerConfig { name: "bogus".into(), ..Default::default() };
         assert!(make_scheduler(&bad, 5).is_err());
+        // Composite fallbacks must not recurse.
+        let rec = SchedulerConfig { name: "hiku+hiku".into(), ..Default::default() };
+        assert!(make_scheduler(&rec, 5).is_err());
+    }
+
+    /// The default `decide` is the push adapter: for every registry entry
+    /// it must return `Assign` with the exact worker `select` would pick,
+    /// consuming the identical RNG stream.
+    #[test]
+    fn decide_default_is_push_adapter() {
+        for name in ALL_SCHEDULERS.iter().chain(COMPOSITE_SCHEDULERS.iter()) {
+            let cfg = SchedulerConfig { name: (*name).into(), ..Default::default() };
+            let mut a = make_scheduler(&cfg, 6).unwrap();
+            let mut b = make_scheduler(&cfg, 6).unwrap();
+            let mut rng_a = Pcg64::new(17);
+            let mut rng_b = Pcg64::new(17);
+            let loads = [2u32, 0, 1, 0, 3, 1];
+            for f in 0..30 {
+                let d = {
+                    let mut ctx = SchedCtx::new(&loads, &mut rng_a);
+                    a.decide(f, &mut ctx)
+                };
+                let w = {
+                    let mut ctx = SchedCtx::new(&loads, &mut rng_b);
+                    b.select(f, &mut ctx)
+                };
+                assert_eq!(d, Decision::Assign(w), "{name}: decide != push adapter");
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{name}: RNG streams diverged");
+        }
     }
 
     #[test]
@@ -270,7 +400,8 @@ mod tests {
         let mut rng_a = Pcg64::new(11);
         let mut rng_b = Pcg64::new(11);
         for _ in 0..200 {
-            let mut with_idx = SchedCtx { loads: &loads, min_index: Some(&idx), rng: &mut rng_a };
+            let mut with_idx =
+                SchedCtx { loads: &loads, min_index: Some(&idx), rng: &mut rng_a, dispatch: None };
             let a = with_idx.least_loaded_random_tie();
             let ta = with_idx.total_load();
             let ja = with_idx.least_loaded_lowest_id();

@@ -18,9 +18,10 @@
 
 use crate::autoscale::{make_policy, AutoscaleObs, AutoscalePolicy as _};
 use crate::config::Config;
+use crate::dispatch::PendingQueue;
 use crate::metrics::RunMetrics;
 use crate::runtime::{Engine, Manifest};
-use crate::scheduler::{make_scheduler, SchedCtx};
+use crate::scheduler::{make_scheduler, Decision, DispatchCtx, Pull, SchedCtx};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::Workload;
 use crate::workload::spec::FunctionRegistry;
@@ -85,9 +86,36 @@ fn spawn_worker(
     })
 }
 
+/// Dispatch one execution message to worker `w`.
+fn send_to(
+    work_tx: &[mpsc::Sender<ExecMsg>],
+    payload_of: &[String],
+    rid: u64,
+    f: usize,
+    w: usize,
+) -> Result<(), String> {
+    work_tx[w]
+        .send(ExecMsg {
+            rid,
+            payload: payload_of[f].clone(),
+            function: f,
+            seed: (rid as u32).wrapping_mul(2654435761),
+        })
+        .map_err(|_| "worker channel closed".to_string())
+}
+
 /// Serve `n_requests` through the real-time cluster, closed-loop over the
 /// configured VUs, and return the usual metrics. Think times come from the
 /// workload config (scale them down for demos — wall-clock!).
+///
+/// The dispatch protocol applies here too: under `dispatch.mode = "pull"`
+/// requests with a warm prospect park in the router's pending queue,
+/// completing workers claim them, and wall-clock wait deadlines
+/// force-place stragglers; `dispatch.queue_cap` rejects are metered in
+/// the same metrics as the simulator's. A request then counts as
+/// *resolved* when it completes or is rejected — the run serves
+/// `n_requests` resolutions. (Scale-to-zero stays sim-only: the PJRT
+/// worker pool never drops below one active worker.)
 pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
     let manifest = Manifest::load(&cfg.runtime.artifacts_dir)?;
     let registry = FunctionRegistry::functionbench(cfg.workload.copies);
@@ -162,17 +190,25 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     metrics.record_scale(0.0, active);
     let start = Instant::now();
     let mut loads = vec![0u32; workers];
+    // Dispatch attempts (assigned, parked, or rejected) — gates issuing.
     let mut issued = 0usize;
     let mut completed = 0usize;
+    let mut rejected = 0usize;
     // Per-request bookkeeping.
     let mut arrival: Vec<Instant> = Vec::new();
     let mut vu_of: Vec<usize> = Vec::new();
     let mut step_of: Vec<usize> = Vec::new();
+    let mut fn_of: Vec<usize> = Vec::new();
     // VU cursors and wake times.
     let mut vu_step = vec![0usize; vus];
     let mut wake: Vec<(Instant, usize)> = (0..vus).map(|v| (start, v)).collect();
+    // Pull dispatch: router pending queue + wall-clock wait deadlines.
+    let pull = cfg.pull_dispatch();
+    let mut pending_q = PendingQueue::new();
+    let mut deadlines: Vec<(Instant, u64)> = Vec::new();
+    let mut inflight_f = vec![0usize; registry.len()];
 
-    while completed < n_requests {
+    while completed + rejected < n_requests {
         // Autoscale control tick (wall clock). The policy only ever moves
         // the active boundary; threads beyond it sit idle on their channel.
         if autoscaling && last_tick.elapsed().as_secs_f64() >= cfg.autoscale.interval_s {
@@ -209,6 +245,33 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 }
             }
         }
+        // Pull dispatch: force-place parked requests whose wait deadline
+        // passed (warm if the completing workers re-advertised, fallback
+        // placement otherwise).
+        if pull && !deadlines.is_empty() {
+            let now = Instant::now();
+            let mut i = 0;
+            while i < deadlines.len() {
+                if deadlines[i].0 > now {
+                    i += 1;
+                    continue;
+                }
+                let (_, rid) = deadlines.swap_remove(i);
+                let f = fn_of[rid as usize];
+                if !pending_q.cancel(rid, f) {
+                    continue; // already claimed by an idle worker
+                }
+                let w = {
+                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                    scheduler.select(f, &mut ctx)
+                };
+                loads[w] += 1;
+                inflight_f[f] += 1;
+                metrics.record_assignment(w, start.elapsed().as_secs_f64());
+                metrics.record_pending_wait(arrival[rid as usize].elapsed().as_secs_f64());
+                send_to(&work_tx, &payload_of, rid, f, w)?;
+            }
+        }
         // Wake any due VUs (issue their next request).
         let now = Instant::now();
         let mut i = 0;
@@ -224,38 +287,76 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 let f = workload.vus[vu].steps[step].function;
                 let rid = arrival.len() as u64;
                 policy.on_arrival(f, start.elapsed().as_secs_f64());
-                let w = {
+                let decision = {
                     let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                    scheduler.select(f, &mut ctx)
+                    if pull {
+                        ctx.dispatch = Some(DispatchCtx {
+                            inflight_f: inflight_f[f],
+                            pending_f: pending_q.len_fn(f),
+                        });
+                    }
+                    scheduler.decide(f, &mut ctx)
                 };
-                loads[w] += 1;
-                metrics.record_assignment(w, start.elapsed().as_secs_f64());
-                arrival.push(Instant::now());
-                vu_of.push(vu);
-                step_of.push(step);
-                work_tx[w]
-                    .send(ExecMsg {
-                        rid,
-                        payload: payload_of[f].clone(),
-                        function: f,
-                        seed: (rid as u32).wrapping_mul(2654435761),
-                    })
-                    .map_err(|_| "worker channel closed".to_string())?;
+                let refuse = match decision {
+                    Decision::Reject(_) => true,
+                    // An Enqueue against a full queue (or outside the
+                    // pull protocol) is an admission refusal.
+                    Decision::Enqueue => {
+                        !pull
+                            || (cfg.dispatch.queue_cap > 0
+                                && pending_q.len() >= cfg.dispatch.queue_cap)
+                    }
+                    Decision::Assign(_) => false,
+                };
+                if refuse {
+                    metrics.record_reject();
+                    rejected += 1;
+                    // The VU observes the refusal and thinks on.
+                    let think = workload.vus[vu].steps[step].think_s;
+                    vu_step[vu] = step + 1;
+                    wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
+                } else {
+                    arrival.push(Instant::now());
+                    vu_of.push(vu);
+                    step_of.push(step);
+                    fn_of.push(f);
+                    match decision {
+                        Decision::Assign(w) => {
+                            loads[w] += 1;
+                            inflight_f[f] += 1;
+                            metrics.record_assignment(w, start.elapsed().as_secs_f64());
+                            send_to(&work_tx, &payload_of, rid, f, w)?;
+                        }
+                        _ => {
+                            pending_q.push(rid, f);
+                            metrics.record_enqueue(pending_q.len());
+                            deadlines.push((
+                                Instant::now()
+                                    + Duration::from_secs_f64(cfg.dispatch.max_wait_s),
+                                rid,
+                            ));
+                        }
+                    }
+                }
                 issued += 1;
             } else {
                 i += 1;
             }
         }
-        // Wait for a response (or the next VU wake time).
-        let timeout = wake
+        // Wait for a response (or the next VU wake / pull deadline).
+        let mut timeout = wake
             .iter()
             .map(|(t, _)| t.saturating_duration_since(now))
             .min()
-            .unwrap_or(Duration::from_millis(5))
-            .max(Duration::from_micros(100));
+            .unwrap_or(Duration::from_millis(5));
+        for (t, _) in &deadlines {
+            timeout = timeout.min(t.saturating_duration_since(now));
+        }
+        let timeout = timeout.max(Duration::from_micros(100));
         match resp_rx.recv_timeout(timeout) {
             Ok(Ok(r)) => {
                 loads[r.worker] -= 1;
+                inflight_f[r.function] -= 1;
                 // Eviction notifications: every function copy whose payload
                 // was evicted from this worker's cache.
                 for p in &r.evicted_payloads {
@@ -268,8 +369,37 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 // Drained workers (beyond the active boundary) must not
                 // re-advertise idle capacity.
                 if r.worker < active {
-                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                    scheduler.on_complete(r.worker, r.function, &mut ctx);
+                    // Pull dispatch: the now-idle worker claims a parked
+                    // request first (a warm start); it only advertises
+                    // through on_complete when nothing is waiting.
+                    let mut claimed = false;
+                    if pull && !pending_q.is_empty() {
+                        let p = {
+                            let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng)
+                                .with_dispatch(DispatchCtx {
+                                    inflight_f: inflight_f[r.function],
+                                    pending_f: pending_q.len_fn(r.function),
+                                });
+                            scheduler.on_worker_idle(r.worker, r.function, &mut ctx)
+                        };
+                        if let Pull::Function(pf) = p {
+                            if let Some(rid2) = pending_q.pop_fn(pf) {
+                                let w = r.worker;
+                                loads[w] += 1;
+                                inflight_f[pf] += 1;
+                                metrics.record_assignment(w, start.elapsed().as_secs_f64());
+                                metrics.record_pending_wait(
+                                    arrival[rid2 as usize].elapsed().as_secs_f64(),
+                                );
+                                send_to(&work_tx, &payload_of, rid2, pf, w)?;
+                                claimed = true;
+                            }
+                        }
+                    }
+                    if !claimed {
+                        let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                        scheduler.on_complete(r.worker, r.function, &mut ctx);
+                    }
                 }
                 let rid = r.rid as usize;
                 let lat = arrival[rid].elapsed().as_secs_f64();

@@ -7,6 +7,19 @@
 //! Everything is deterministic under (config, seed): scripts, service-time
 //! streams and scheduler tie-breaking derive from split PRNG streams.
 //!
+//! ## Dispatch protocol
+//!
+//! Requests route through [`crate::scheduler::Scheduler::decide`]:
+//! `dispatch.mode = "push"` (default) takes the adapter path — an
+//! immediate `Assign` with the identical RNG stream, bit-identical to the
+//! pre-protocol engine — while `"pull"` makes the paper's pull loop
+//! first-class: requests with a warm prospect park in the router-owned
+//! [`crate::dispatch::PendingQueue`], idle workers claim them via `on_worker_idle`, a
+//! `PullDeadline` event force-places stragglers, `dispatch.queue_cap`
+//! bounds admission (rejects are metered, never silently dropped), and
+//! `autoscale.min_workers = 0` lets the cluster park entirely with a
+//! queue-triggered `Wake` event (DESIGN.md §8).
+//!
 //! Beyond the paper's base protocol the engine supports three extensions
 //! used by the ablation benches:
 //! - **auto-scaling** (the [`crate::autoscale`] subsystem): a recurring
@@ -64,9 +77,10 @@
 use super::events::{Event, EventQueue};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
 use crate::config::Config;
+use crate::dispatch::PendingQueue;
 use crate::metrics::RunMetrics;
 use crate::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId, StartInfo, WorkerId};
-use crate::scheduler::{SchedCtx, Scheduler};
+use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, Scheduler};
 use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
@@ -79,10 +93,28 @@ struct RequestMeta {
     vu: usize,
     step: usize,
     function: usize,
+    /// Bound worker; `usize::MAX` while parked in the pending queue.
     worker: WorkerId,
     /// Scheduler instance that routed this request.
     sched: usize,
     arrival: f64,
+}
+
+/// A parked request handed off across shards at an epoch barrier — the
+/// `ShardMsg::Handoff` payload. Carries everything the receiving shard
+/// needs to re-issue the request locally; for closed-loop requests the
+/// VU's continuation migrates with it (its next arrival issues from the
+/// receiving shard).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct StolenTask {
+    /// Requested function type.
+    pub(crate) function: usize,
+    /// Original arrival time (latency and queue-wait keep accruing).
+    pub(crate) arrival: f64,
+    /// Issuing VU (`usize::MAX` for open-loop trace arrivals).
+    pub(crate) vu: usize,
+    /// Script step (closed loop) or trace index (open loop).
+    pub(crate) step: usize,
 }
 
 /// One simulation run: scheduler instance(s) against the workload.
@@ -139,6 +171,20 @@ pub struct Simulation<'a> {
     batch_buf: Vec<(SandboxId, u64)>,
     /// Scratch sandbox-id list handed to `Cluster::complete_batch`.
     batch_ids: Vec<SandboxId>,
+    /// Pull dispatch protocol active (`dispatch.mode = "pull"`). Push
+    /// mode leaves every field below untouched and is bit-identical to
+    /// the pre-protocol engine.
+    pull: bool,
+    /// Router-owned pending queue behind `Decision::Enqueue`.
+    pending: PendingQueue,
+    /// Executions of each function currently running (the warm-prospect
+    /// signal handed to `decide` via `DispatchCtx`). Pull mode only.
+    inflight_f: Vec<usize>,
+    /// A scale-to-zero wake event is already scheduled.
+    wake_armed: bool,
+    /// Scale-down floor: 0 only for scale-to-zero configs
+    /// (`autoscale.min_workers = 0` under pull dispatch), else 1.
+    min_active: usize,
     metrics: RunMetrics,
 }
 
@@ -200,6 +246,11 @@ impl<'a> Simulation<'a> {
             track_rates: false,
             batch_buf: Vec::new(),
             batch_ids: Vec::new(),
+            pull: cfg.pull_dispatch(),
+            pending: PendingQueue::new(),
+            inflight_f: vec![0; registry.len()],
+            wake_armed: false,
+            min_active: if cfg.pull_dispatch() && cfg.autoscale.min_workers == 0 { 0 } else { 1 },
             metrics: RunMetrics::new(
                 &name,
                 cfg.cluster.workers,
@@ -282,6 +333,11 @@ impl<'a> Simulation<'a> {
     /// Copy prewarm speculation counters into the metrics and close the
     /// worker-seconds integral once the event loop has drained.
     fn finalize_metrics(&mut self) {
+        debug_assert!(
+            self.pending.is_empty(),
+            "{} requests still parked at run end (leaked from the pull protocol)",
+            self.pending.len()
+        );
         let end = self.queue.now().max(self.cfg.workload.duration_s);
         self.metrics.finalize_scaling(end);
         let totals = self.cluster.totals();
@@ -460,6 +516,71 @@ impl<'a> Simulation<'a> {
         self.spawn_prewarm(f, n, t);
     }
 
+    /// Parked requests in this shard's pending queue (the barrier
+    /// digest the coordinator's steal rule reads).
+    pub(crate) fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Extract up to `k` parked requests, oldest first, for a cross-shard
+    /// handoff (`ShardMsg::Handoff`). The local bookkeeping forgets them:
+    /// their deadline events become no-ops and the receiving shard
+    /// re-issues them under its own request ids.
+    pub(crate) fn extract_stolen(&mut self, k: usize) -> Vec<StolenTask> {
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let Some((rid, f)) = self.pending.pop_oldest() else { break };
+            let meta = self.requests[rid as usize];
+            debug_assert_eq!(meta.function, f);
+            out.push(StolenTask {
+                function: f,
+                arrival: meta.arrival,
+                vu: meta.vu,
+                step: meta.step,
+            });
+        }
+        out
+    }
+
+    /// Ingest a stolen task at the epoch boundary (the clock is already
+    /// advanced to the barrier): allocate a local request id and place it
+    /// immediately through the scheduler's synchronous path — a warm pull
+    /// from `PQ_f` when this shard advertises one, fallback placement
+    /// otherwise. For closed-loop requests the VU's continuation migrates
+    /// here: its next arrival issues from this shard.
+    pub(crate) fn ingest_stolen(&mut self, task: StolenTask) {
+        let t = self.queue.now();
+        let rid = self.requests.len() as u64;
+        let si = if task.vu == usize::MAX {
+            task.step % self.schedulers.len()
+        } else {
+            task.vu % self.schedulers.len()
+        };
+        self.requests.push(RequestMeta {
+            vu: task.vu,
+            step: task.step,
+            function: task.function,
+            worker: usize::MAX,
+            sched: si,
+            arrival: task.arrival,
+        });
+        self.cold_flags.push(false);
+        self.queue_delays.push(0.0);
+        self.metrics.stolen += 1;
+        let active = self.cluster.active_workers();
+        debug_assert!(active > 0, "stolen task handed to an empty shard");
+        let w = {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: None,
+            };
+            self.schedulers[si].select(task.function, &mut ctx)
+        };
+        self.bind_pending(rid, w, t);
+    }
+
     fn dispatch(&mut self, ev: Event, t: f64) {
         match ev {
             Event::Arrival { vu, step } => self.on_arrival(vu, step, t),
@@ -484,6 +605,8 @@ impl<'a> Simulation<'a> {
                     .1;
                 self.issue(usize::MAX, index, f, t);
             }
+            Event::PullDeadline { request } => self.on_pull_deadline(request, t),
+            Event::Wake => self.on_wake(),
         }
     }
 
@@ -527,7 +650,8 @@ impl<'a> Simulation<'a> {
         self.batch_buf = batch;
     }
 
-    /// Periodic keep-alive sweep across all workers.
+    /// Periodic keep-alive sweep across all workers. In pull mode the
+    /// sweep doubles as the pending-depth sampler (1 Hz timeline).
     fn on_sweep(&mut self, t: f64) {
         let cutoff = t - self.cfg.cluster.keep_alive_s;
         for w in 0..self.cluster.len() {
@@ -535,6 +659,9 @@ impl<'a> Simulation<'a> {
             for f in evicted {
                 self.notify_evict(w, f);
             }
+        }
+        if self.pull {
+            self.metrics.record_pending_depth(t, self.pending.len());
         }
         let next = t + self.sweep_dt();
         // Stop sweeping once no more work can arrive and drain completes.
@@ -571,6 +698,9 @@ impl<'a> Simulation<'a> {
                     s.on_worker_added(id);
                 }
                 self.metrics.record_scale(self.queue.now(), self.cluster.active_workers());
+                if self.pull && active == 0 {
+                    self.flush_pending();
+                }
                 return;
             }
             let id =
@@ -584,8 +714,10 @@ impl<'a> Simulation<'a> {
                 s.on_worker_added(id);
             }
         } else {
-            if active <= 1 {
-                return; // never drain the last worker
+            if active <= self.min_active {
+                // Never drain below the floor: the last worker in push
+                // mode, nothing at all for scale-to-zero configs.
+                return;
             }
             let id = active - 1;
             self.set_active(id);
@@ -629,6 +761,10 @@ impl<'a> Simulation<'a> {
                 self.cluster.warm_supply_into(&mut self.warm_scratch);
                 (self.cluster.total_running(), self.cluster.total_queued())
             };
+            // Autoscale-aware admission: the router's parked backlog is
+            // queued demand the policy must see (always empty in push
+            // mode, so the observation is unchanged there).
+            let total_queued = total_queued + self.pending.len();
             let obs = AutoscaleObs {
                 now: t,
                 active_workers: active,
@@ -762,19 +898,27 @@ impl<'a> Simulation<'a> {
             let active = self.cluster.active_workers();
             if w < active {
                 let si = f % self.schedulers.len();
-                let mut ctx = SchedCtx {
-                    loads: &self.loads[si].loads()[..active],
-                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                    rng: &mut self.sched_rng,
-                };
-                self.schedulers[si].on_complete(w, f, &mut ctx);
+                // Pull dispatch: a freshly warmed instance claims a
+                // parked request before it is advertised.
+                if !self.pull || !self.try_pull(w, f, si, t) {
+                    let mut ctx = SchedCtx {
+                        loads: &self.loads[si].loads()[..active],
+                        min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                        rng: &mut self.sched_rng,
+                        dispatch: None,
+                    };
+                    self.schedulers[si].on_complete(w, f, &mut ctx);
+                }
                 // Keep-alive expiry handled by the periodic SweepTick.
                 let _ = (sandbox, epoch);
             }
         }
     }
 
-    /// Route and start/queue one request (closed- or open-loop).
+    /// Route one request (closed- or open-loop) through the dispatch
+    /// protocol. Push mode always assigns synchronously via the adapter
+    /// (bit-identical to the pre-protocol engine); pull mode may park the
+    /// request in the pending queue or refuse it at the admission bound.
     fn issue(&mut self, vu: usize, step: usize, f: usize, t: f64) {
         let rid = self.requests.len() as u64;
         if self.cfg.cluster.prewarm || self.track_rates {
@@ -787,24 +931,73 @@ impl<'a> Simulation<'a> {
             if vu == usize::MAX { step % self.schedulers.len() } else { vu % self.schedulers.len() };
         let active = self.cluster.active_workers();
 
-        // --- the scheduling decision (Algorithm 1 entry point) ---
-        let w = {
+        // Scale-to-zero: an arrival against an empty cluster parks and
+        // triggers a wake event (pull dispatch only — the config
+        // validator guarantees `min_active == 0` implies pull mode).
+        if self.pull && active == 0 {
+            if !self.admit() {
+                self.on_reject(vu, step, t);
+                return;
+            }
+            self.park(rid, vu, step, f, si, t);
+            if !self.wake_armed {
+                self.wake_armed = true;
+                self.queue.push_at(t, Event::Wake);
+            }
+            return;
+        }
+
+        // --- the dispatch decision (Algorithm 1 entry point) ---
+        let decision = {
+            let dispatch = if self.pull {
+                Some(DispatchCtx {
+                    inflight_f: self.inflight_f[f],
+                    pending_f: self.pending.len_fn(f),
+                })
+            } else {
+                None
+            };
             let mut ctx = SchedCtx {
                 loads: &self.loads[si].loads()[..active],
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
+                dispatch,
             };
-            self.schedulers[si].select(f, &mut ctx)
+            self.schedulers[si].decide(f, &mut ctx)
         };
-        debug_assert!(w < active, "scheduler picked drained worker {w}");
-        self.loads[si].inc(w);
-        self.metrics.record_assignment(w, t);
-        self.requests.push(RequestMeta { vu, step, function: f, worker: w, sched: si, arrival: t });
-        // Per-request tables grow in lockstep with `requests` so
-        // handle_start never resizes on the hot path.
-        self.cold_flags.push(false);
-        self.queue_delays.push(0.0);
+        match decision {
+            Decision::Assign(w) => {
+                debug_assert!(w < active, "scheduler picked drained worker {w}");
+                self.loads[si].inc(w);
+                self.metrics.record_assignment(w, t);
+                self.requests.push(RequestMeta {
+                    vu,
+                    step,
+                    function: f,
+                    worker: w,
+                    sched: si,
+                    arrival: t,
+                });
+                // Per-request tables grow in lockstep with `requests` so
+                // handle_start never resizes on the hot path.
+                self.cold_flags.push(false);
+                self.queue_delays.push(0.0);
+                self.start_on(w, rid, f, t);
+            }
+            Decision::Enqueue => {
+                if self.admit() {
+                    self.park(rid, vu, step, f, si, t);
+                } else {
+                    self.on_reject(vu, step, t);
+                }
+            }
+            Decision::Reject(_) => self.on_reject(vu, step, t),
+        }
+    }
 
+    /// Start (elastic) or queue (hard-admission) request `rid` on its
+    /// bound worker — the tail every assignment path shares.
+    fn start_on(&mut self, w: WorkerId, rid: u64, f: usize, t: f64) {
         let mem = self.registry.mem_mb(f);
         if self.cfg.cluster.elastic {
             let info = self.cluster.assign_elastic(w, rid, f, mem, t);
@@ -817,6 +1010,165 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    /// Admission control: room in the pending queue for one more parked
+    /// request? (`dispatch.queue_cap`; 0 = unbounded.)
+    fn admit(&self) -> bool {
+        let cap = self.cfg.dispatch.queue_cap;
+        cap == 0 || self.pending.len() < cap
+    }
+
+    /// Park request `rid` in the pending queue with a wait deadline.
+    fn park(&mut self, rid: u64, vu: usize, step: usize, f: usize, si: usize, t: f64) {
+        debug_assert!(self.pull);
+        self.requests.push(RequestMeta {
+            vu,
+            step,
+            function: f,
+            worker: usize::MAX,
+            sched: si,
+            arrival: t,
+        });
+        self.cold_flags.push(false);
+        self.queue_delays.push(0.0);
+        self.pending.push(rid, f);
+        self.metrics.record_enqueue(self.pending.len());
+        self.queue
+            .push_at(t + self.cfg.dispatch.max_wait_s, Event::PullDeadline { request: rid });
+    }
+
+    /// Record a refused request ([`Decision::Reject`] or a full pending
+    /// queue) and keep the closed loop alive: the VU observes the
+    /// rejection immediately and thinks before its next step. Rejected
+    /// requests never enter the latency samples.
+    fn on_reject(&mut self, vu: usize, step: usize, t: f64) {
+        self.metrics.record_reject();
+        if vu != usize::MAX {
+            let think = self.workload.vus[vu].steps[step].think_s;
+            let next_t = t + think;
+            if next_t < self.cfg.workload.duration_s {
+                self.queue.push_at(next_t, Event::Arrival { vu, step: step + 1 });
+            }
+        }
+    }
+
+    /// Bind a parked request to worker `w` at time `t` (a pull, a
+    /// deadline flush, a wake flush or a cross-shard steal). Never binds
+    /// to a drained worker — the pull protocol's safety invariant,
+    /// enforced unconditionally (property-tested in tests/dispatch.rs).
+    fn bind_pending(&mut self, rid: u64, w: WorkerId, t: f64) {
+        assert!(
+            w < self.cluster.active_workers(),
+            "pull dispatch bound request {rid} to drained worker {w}"
+        );
+        let meta = &mut self.requests[rid as usize];
+        debug_assert_eq!(meta.worker, usize::MAX, "request {rid} bound twice");
+        meta.worker = w;
+        let (si, f, arrival) = (meta.sched, meta.function, meta.arrival);
+        self.loads[si].inc(w);
+        self.metrics.record_assignment(w, t);
+        self.metrics.record_pending_wait(t - arrival);
+        self.start_on(w, rid, f, t);
+    }
+
+    /// A parked request's wait deadline expired: force-place it through
+    /// the scheduler's synchronous path (warm if `PQ_f` gained an entry
+    /// in the meantime, fallback placement otherwise). Against an empty
+    /// cluster the deadline re-arms — the wake event flushes the queue as
+    /// soon as capacity returns.
+    fn on_pull_deadline(&mut self, rid: u64, t: f64) {
+        if !self.pending.is_waiting(rid) {
+            return; // already pulled, flushed, or stolen
+        }
+        let meta = self.requests[rid as usize];
+        let active = self.cluster.active_workers();
+        if active == 0 {
+            // The cluster drained to zero while this request was parked
+            // (possible under the scheduled policy): make sure a wake is
+            // coming, then re-arm — the wake's flush will claim the
+            // request and turn this deadline into a no-op.
+            if !self.wake_armed {
+                self.wake_armed = true;
+                self.queue.push_at(t, Event::Wake);
+            }
+            self.queue
+                .push_at(t + self.cfg.dispatch.max_wait_s, Event::PullDeadline { request: rid });
+            return;
+        }
+        let removed = self.pending.cancel(rid, meta.function);
+        debug_assert!(removed);
+        let w = {
+            let si = meta.sched;
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: None,
+            };
+            self.schedulers[si].select(meta.function, &mut ctx)
+        };
+        self.bind_pending(rid, w, t);
+    }
+
+    /// Scale-to-zero wake: restore one worker (which flushes the pending
+    /// queue). No-op when the autoscaler already restored capacity.
+    fn on_wake(&mut self) {
+        self.wake_armed = false;
+        if self.cluster.active_workers() == 0 {
+            self.on_scale(true);
+        }
+    }
+
+    /// Force-place every parked request in global arrival order — the
+    /// cluster just regained capacity after scale-to-zero, and the
+    /// backlog must not wait out its deadlines against a live worker.
+    fn flush_pending(&mut self) {
+        let t = self.queue.now();
+        while let Some((rid, f)) = self.pending.pop_oldest() {
+            let active = self.cluster.active_workers();
+            debug_assert!(active > 0, "flush_pending on an empty cluster");
+            let si = self.requests[rid as usize].sched;
+            let w = {
+                let mut ctx = SchedCtx {
+                    loads: &self.loads[si].loads()[..active],
+                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                    rng: &mut self.sched_rng,
+                    dispatch: None,
+                };
+                self.schedulers[si].select(f, &mut ctx)
+            };
+            self.bind_pending(rid, w, t);
+        }
+    }
+
+    /// The first-class pull loop: worker `w` idles holding a warm
+    /// instance of `f`; ask the scheduler which pending queue it claims
+    /// from and bind the oldest waiting request. Returns true when a
+    /// request was bound (the instance is busy again and must not be
+    /// advertised through `on_complete`).
+    fn try_pull(&mut self, w: WorkerId, f: usize, si: usize, t: f64) -> bool {
+        debug_assert!(self.pull);
+        if self.pending.is_empty() {
+            return false;
+        }
+        let active = self.cluster.active_workers();
+        let pull = {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: Some(DispatchCtx {
+                    inflight_f: self.inflight_f[f],
+                    pending_f: self.pending.len_fn(f),
+                }),
+            };
+            self.schedulers[si].on_worker_idle(w, f, &mut ctx)
+        };
+        let Pull::Function(pf) = pull else { return false };
+        let Some(rid) = self.pending.pop_fn(pf) else { return false };
+        self.bind_pending(rid, w, t);
+        true
+    }
+
     /// An execution actually starts on `w`: sample its service time,
     /// schedule completion, and deliver eviction notifications.
     fn handle_start(&mut self, w: WorkerId, info: StartInfo, t: f64) {
@@ -824,6 +1176,10 @@ impl<'a> Simulation<'a> {
             self.notify_evict(w, f);
         }
         let meta = self.requests[info.request_id as usize];
+        if self.pull {
+            // Warm-prospect signal for `decide`: executions of f running.
+            self.inflight_f[meta.function] += 1;
+        }
         let mut dur = self.registry.sample_exec_s(meta.function, &mut self.service_rng);
         if info.cold {
             dur += self.registry.sample_init_s(meta.function, &mut self.service_rng);
@@ -870,6 +1226,10 @@ impl<'a> Simulation<'a> {
         let meta = self.requests[rid as usize];
         debug_assert_eq!(meta.worker, w);
         self.loads[meta.sched].dec(w);
+        if self.pull {
+            debug_assert!(self.inflight_f[meta.function] > 0);
+            self.inflight_f[meta.function] -= 1;
+        }
         for f in outcome.evicted {
             self.notify_evict(w, f);
         }
@@ -878,17 +1238,23 @@ impl<'a> Simulation<'a> {
         // is actually idle after completion (if it was immediately reused
         // or reclaimed, there is nothing to advertise). The advertisement
         // goes to the scheduler instance that served the request — the
-        // distributed-JIQ reporting rule [21].
+        // distributed-JIQ reporting rule [21]. Under pull dispatch the
+        // idle worker first gets to *claim a parked request*
+        // ([`crate::scheduler::Scheduler::on_worker_idle`]); only when
+        // nothing is waiting does it advertise.
         if let Some((sb, epoch)) = outcome.expiry {
             let active = self.cluster.active_workers();
             if w < active {
                 let si = meta.sched;
-                let mut ctx = SchedCtx {
-                    loads: &self.loads[si].loads()[..active],
-                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                    rng: &mut self.sched_rng,
-                };
-                self.schedulers[si].on_complete(w, meta.function, &mut ctx);
+                if !self.pull || !self.try_pull(w, meta.function, si, t) {
+                    let mut ctx = SchedCtx {
+                        loads: &self.loads[si].loads()[..active],
+                        min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                        rng: &mut self.sched_rng,
+                        dispatch: None,
+                    };
+                    self.schedulers[si].on_complete(w, meta.function, &mut ctx);
+                }
                 // Keep-alive expiry handled by the periodic SweepTick.
             } else if let Some(f) = self.cluster.expire_keepalive(w, sb, epoch) {
                 // Drained worker: reclaim the sandbox instead of

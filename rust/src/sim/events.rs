@@ -74,6 +74,12 @@ pub enum Event {
     PreWarmTick,
     /// A speculative sandbox finished initializing.
     PreWarmDone { worker: WorkerId, sandbox: SandboxId },
+    /// Pull dispatch: a parked request's wait deadline expired — the
+    /// router force-places it if it is still waiting (no-op otherwise).
+    PullDeadline { request: u64 },
+    /// Scale-to-zero: an arrival hit an empty cluster; restore one worker
+    /// and flush the pending queue (pull dispatch only).
+    Wake,
 }
 
 /// One scheduled event. `key` is the event time's IEEE bit pattern (times

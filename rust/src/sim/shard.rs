@@ -8,11 +8,26 @@
 //! open-loop trace arrival `i` → shard `i mod N`). Each shard runs its own
 //! serial [`Simulation`] — its own calendar-queue [`super::EventQueue`],
 //! its own `Cluster` slice, scheduler instance(s), load views and split
-//! RNG streams — on its own thread. Workloads are therefore
+//! RNG streams — on its own thread. Under push dispatch workloads are
 //! *partition-closed*: every request routes to a worker of the shard that
 //! issued it, which is exactly the paper's synchronization-free
 //! distributed-scheduler deployment (§I; the engine's
 //! `scheduler.instances` ablation, now with real parallelism).
+//!
+//! ## Cross-shard task stealing (pull dispatch)
+//!
+//! `dispatch.mode = "pull"` lifts the partition-closed restriction for
+//! *parked* requests: at each epoch barrier the coordinator reads every
+//! shard's pending-queue digest and orders backlogged donors — visited in
+//! shard order — to hand up to `dispatch.steal_batch` of their oldest
+//! parked requests to the least-loaded pending-free shard
+//! ([`ShardMsg::Handoff`]). Payloads move through a `handoff[to][from]`
+//! buffer behind one extra transfer barrier and are ingested in (donor
+//! shard, arrival) order, so the migration is deterministic under
+//! (seed, shards). The determinism rule: **steal in shard order, at
+//! epoch boundaries only** — mid-epoch requests never cross shards
+//! (DESIGN.md §8). Bound (and running) requests never migrate; for a
+//! stolen closed-loop request the VU's continuation migrates with it.
 //!
 //! ## The event-time barrier
 //!
@@ -76,7 +91,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Barrier, Mutex};
 
-use super::engine::Simulation;
+use super::engine::{Simulation, StolenTask};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy};
 use crate::config::Config;
 use crate::metrics::RunMetrics;
@@ -104,6 +119,19 @@ pub enum ShardMsg {
         /// Sandboxes to initialize.
         n: usize,
     },
+    /// Cross-shard task stealing (pull dispatch): this shard — the donor
+    /// — moves up to `n` of its oldest parked requests to shard `to`.
+    /// The donor deposits payloads in the coordinator's handoff buffer at
+    /// the epoch boundary; the recipient ingests them after the transfer
+    /// barrier, in (donor shard, arrival) order. This is what lifts the
+    /// partition-closed restriction — the documented determinism rule is
+    /// *steal in shard order, at epoch boundaries only* (DESIGN.md §8).
+    Handoff {
+        /// Receiving shard.
+        to: usize,
+        /// Most parked requests to move.
+        n: usize,
+    },
 }
 
 /// What one shard publishes at each barrier: the whole cross-thread
@@ -121,6 +149,9 @@ struct ShardReport {
     queued: usize,
     /// O(1) digest of the shard's worker loads.
     load: LoadSummary,
+    /// Requests parked in the shard's pending queue (pull dispatch; the
+    /// steal rule's input — always 0 in push mode).
+    pending: usize,
     /// Per-function warm supply (idle + initializing).
     warm: Vec<usize>,
     /// Per-function pre-warm deficits from the shard-local rate EWMAs.
@@ -142,6 +173,9 @@ struct Coord {
     rng: Pcg64,
     /// Global pre-warm heuristic on (`cluster.prewarm`).
     prewarm_global: bool,
+    /// Cross-shard steal cap per donor per epoch (`dispatch.steal_batch`;
+    /// 0 — always in push mode — disables stealing).
+    steal_batch: usize,
     duration_s: f64,
     concurrency: usize,
     shards: usize,
@@ -149,6 +183,15 @@ struct Coord {
     warm_scratch: Vec<usize>,
     reports: Vec<ShardReport>,
     mailboxes: Vec<Vec<ShardMsg>>,
+    /// Handoff payload buffers: `handoff[to][from]`, written by donors in
+    /// the mailbox phase, drained by recipients after the transfer
+    /// barrier. Indexed by both shards so ingest order is (donor shard,
+    /// arrival) regardless of thread timing.
+    handoff: Vec<Vec<Vec<StolenTask>>>,
+    /// A handoff was ordered this epoch: every shard takes the transfer
+    /// barrier (all read this flag after the coordination barrier, so
+    /// they agree).
+    stole: bool,
     done: bool,
 }
 
@@ -177,7 +220,9 @@ impl Coord {
         for r in &self.reports {
             active += r.active;
             running += r.running;
-            queued += r.queued;
+            // Parked requests are queued demand the policy must see
+            // (autoscale-aware admission; always 0 in push mode).
+            queued += r.queued + r.pending;
             all_drained &= r.drained;
             for (acc, w) in self.warm_scratch.iter_mut().zip(&r.warm) {
                 *acc += *w;
@@ -185,6 +230,7 @@ impl Coord {
         }
 
         let mut sent = false;
+        self.stole = false;
         if limit < self.duration_s {
             // 1) Global worker target: scheduled events due this epoch,
             //    then the tick-driven policy over the merged observation.
@@ -262,6 +308,40 @@ impl Coord {
                         sent = true;
                     }
                 }
+            }
+        }
+
+        // 3) Cross-shard stealing (pull dispatch): each donor with a
+        //    backlog, visited in shard order, hands up to `steal_batch`
+        //    of its oldest parked requests to the least-loaded shard with
+        //    an empty pending queue — and only if that shard is actually
+        //    less loaded. Pure function of the epoch's reports, so the
+        //    decision is identical regardless of which thread leads.
+        if self.steal_batch > 0 {
+            for donor in 0..self.shards {
+                if self.reports[donor].pending == 0 {
+                    continue;
+                }
+                let mut best: Option<usize> = None;
+                for r in 0..self.shards {
+                    if r == donor || self.reports[r].pending > 0 {
+                        continue;
+                    }
+                    best = match best {
+                        Some(b) if !self.reports[r].load.less_loaded_than(&self.reports[b].load) => {
+                            Some(b)
+                        }
+                        _ => Some(r),
+                    };
+                }
+                let Some(to) = best else { continue };
+                if !self.reports[to].load.less_loaded_than(&self.reports[donor].load) {
+                    continue; // never move work to a busier shard
+                }
+                let n = self.reports[donor].pending.min(self.steal_batch);
+                self.mailboxes[donor].push(ShardMsg::Handoff { to, n });
+                sent = true;
+                self.stole = true;
             }
         }
 
@@ -398,6 +478,7 @@ pub fn run_sharded_with(
         next_event: 0,
         rng: Pcg64::new(seed ^ 0x5AAD_C0DE),
         prewarm_global,
+        steal_batch: if cfg.pull_dispatch() { cfg.dispatch.steal_batch } else { 0 },
         duration_s: cfg.workload.duration_s,
         concurrency: cfg.cluster.concurrency,
         shards: n,
@@ -405,6 +486,8 @@ pub fn run_sharded_with(
         warm_scratch: vec![0; registry.len()],
         reports: vec![ShardReport::default(); n],
         mailboxes: vec![Vec::new(); n],
+        handoff: vec![vec![Vec::new(); n]; n],
+        stole: false,
         done: false,
     });
     let barrier = Barrier::new(n);
@@ -497,6 +580,7 @@ fn shard_main(
             r.running = running;
             r.queued = queued;
             r.load = sim.cluster_load_summary();
+            r.pending = sim.pending_len();
             r.warm.resize(registry.len(), 0);
             r.warm.fill(0);
             sim.cluster_warm_supply_into(&mut r.warm);
@@ -513,9 +597,9 @@ fn shard_main(
         barrier.wait();
         // Phase 3: apply this shard's mailbox at the epoch boundary, then
         // check termination.
-        let (msgs, done) = {
+        let (msgs, done, stole) = {
             let mut c = coord.lock().unwrap();
-            (std::mem::take(&mut c.mailboxes[s]), c.done)
+            (std::mem::take(&mut c.mailboxes[s]), c.done, c.stole)
         };
         if !msgs.is_empty() {
             sim.advance_clock_to(limit);
@@ -523,6 +607,31 @@ fn shard_main(
                 match m {
                     ShardMsg::ScaleTo { target } => sim.apply_scale_target(target),
                     ShardMsg::SpawnPrewarm { f, n } => sim.apply_prewarm(f, n),
+                    ShardMsg::Handoff { to, n } => {
+                        // Donor side: deposit payloads for the recipient.
+                        let tasks = sim.extract_stolen(n);
+                        if !tasks.is_empty() {
+                            coord.lock().unwrap().handoff[to][s] = tasks;
+                        }
+                    }
+                }
+            }
+        }
+        if stole {
+            // Transfer barrier: every donor has deposited its payloads.
+            // All shards agree on `stole` (read between the same pair of
+            // barriers), so the rendezvous count always matches.
+            barrier.wait();
+            let incoming: Vec<Vec<StolenTask>> = {
+                let mut c = coord.lock().unwrap();
+                c.handoff[s].iter_mut().map(std::mem::take).collect()
+            };
+            if incoming.iter().any(|v| !v.is_empty()) {
+                sim.advance_clock_to(limit);
+                for from in incoming {
+                    for task in from {
+                        sim.ingest_stolen(task);
+                    }
                 }
             }
         }

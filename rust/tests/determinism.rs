@@ -27,7 +27,7 @@ use hiku::config::{ClusterConfig, Config};
 use hiku::metrics::RunMetrics;
 use hiku::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId};
 use hiku::prop_assert;
-use hiku::scheduler::{make_scheduler, ALL_SCHEDULERS, PAPER_SCHEDULERS};
+use hiku::scheduler::{make_scheduler, ALL_SCHEDULERS, COMPOSITE_SCHEDULERS, PAPER_SCHEDULERS};
 use hiku::sim::shard::{partition_config, shard_seed};
 use hiku::sim::{run_once, run_once_reference, run_trace, run_trace_reference, Simulation};
 use hiku::util::prop::{check, PropConfig};
@@ -70,9 +70,33 @@ fn assert_equiv(c: &Config, seed: u64, label: &str) {
 
 #[test]
 fn all_schedulers_elastic_static() {
-    for sched in ALL_SCHEDULERS {
+    // Composite (hiku+fallback) registry names ride along so the
+    // ablation configs are regression-guarded too.
+    for sched in ALL_SCHEDULERS.iter().chain(COMPOSITE_SCHEDULERS.iter()) {
         for seed in SEEDS {
             assert_equiv(&cfg(sched, 10, 20.0), seed, sched);
+        }
+    }
+}
+
+#[test]
+fn push_mode_decision_api_is_bit_identical() {
+    // The dispatch redesign's acceptance contract: an explicit
+    // `dispatch.mode = "push"` routes every scheduler through the
+    // Decision push adapter and must be bit-identical to both the
+    // default config and the pre-redesign reference engine, for the
+    // whole registry (composites included).
+    for sched in ALL_SCHEDULERS.iter().chain(COMPOSITE_SCHEDULERS.iter()) {
+        for seed in SEEDS {
+            let base = cfg(sched, 10, 20.0);
+            assert!(!base.pull_dispatch(), "push must stay the default dispatch mode");
+            let mut push = base.clone();
+            push.dispatch.mode = "push".into();
+            let mut a = run_once(&push, seed).unwrap_or_else(|e| panic!("{sched}: {e}"));
+            let mut b = run_once(&base, seed).unwrap();
+            let mut r = run_once_reference(&push, seed).unwrap();
+            assert_equiv_metrics(&mut a, &mut b, &format!("{sched}/push-vs-default/seed{seed}"));
+            assert_equiv_metrics(&mut a, &mut r, &format!("{sched}/push-vs-reference/seed{seed}"));
         }
     }
 }
@@ -134,15 +158,9 @@ fn multi_instance_equivalent() {
     }
 }
 
-#[test]
-fn hiku_fallback_variants_equivalent() {
-    // Custom fallbacks route through the same ctx helpers.
-    for sched in ["hiku+random", "hiku+ch-bl"] {
-        for seed in SEEDS {
-            assert_equiv(&cfg(sched, 10, 15.0), seed, sched);
-        }
-    }
-}
+// (The old `hiku_fallback_variants_equivalent` test folded into
+// `all_schedulers_elastic_static`, which now chains COMPOSITE_SCHEDULERS
+// through the identical engine-vs-reference check.)
 
 #[test]
 fn open_loop_trace_equivalent() {
@@ -203,8 +221,9 @@ fn sharded_matches_partitioned_reference() {
     // parallel sharded run must equal the merge, in shard order, of N
     // independent serial runs of its partitions — run here on the
     // *reference* engine, which transitively pins the sharded engine all
-    // the way back to the seed event core.
-    for sched in ALL_SCHEDULERS {
+    // the way back to the seed event core. Composite registry names ride
+    // along (the push adapter covers them too).
+    for sched in ALL_SCHEDULERS.iter().chain(COMPOSITE_SCHEDULERS.iter()) {
         for &shards in &[2usize, 4] {
             for seed in SEEDS {
                 let mut c = cfg(sched, 12, 20.0);

@@ -1,0 +1,233 @@
+//! Dispatch-protocol integration suite (DESIGN.md §8).
+//!
+//! Push-mode bit-identity against the pre-redesign engine lives in
+//! `tests/determinism.rs` (`push_mode_decision_api_is_bit_identical`);
+//! this file covers the pull protocol's behavioral contracts:
+//!
+//! - conservation: every arrival is bound-and-completed or metered as a
+//!   reject — nothing is silently dropped;
+//! - drained-worker safety: a parked request is never bound to a worker
+//!   outside the active set, under arbitrary autoscale churn (the bind
+//!   path enforces this with a hard assert, so the property run fails
+//!   loudly on any violation);
+//! - admission: `dispatch.queue_cap` rejects surface in the metrics and
+//!   never contaminate the latency percentiles;
+//! - scale-to-zero: `autoscale.min_workers = 0` parks the cluster, a
+//!   queue-triggered wake restores capacity, the first request after
+//!   idle pays its cold start, and worker-seconds beat the min=1 run;
+//! - the headline scenario: pull dispatch does not cold-start more than
+//!   push on the bursty workload (the full comparison table is
+//!   `cargo bench --bench ablation_dispatch`);
+//! - sharded pull runs are bit-reproducible and actually hand off tasks
+//!   across shards at epoch barriers.
+
+use hiku::config::Config;
+use hiku::prop_assert;
+use hiku::report::bursty_trace;
+use hiku::sim::{run_once, run_trace};
+use hiku::util::prop::{check, PropConfig};
+use hiku::workload::loadgen::OpenLoopTrace;
+
+fn pull_cfg(sched: &str, vus: usize, dur: f64) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = sched.into();
+    c.workload.vus = vus;
+    c.workload.duration_s = dur;
+    c.dispatch.mode = "pull".into();
+    c
+}
+
+#[test]
+fn pull_mode_conserves_and_parks() {
+    // Few function types + many VUs per worker => executions of the same
+    // function overlap, so the enqueue path genuinely fires.
+    let mut c = pull_cfg("hiku", 30, 30.0);
+    c.workload.copies = 1; // 8 function types
+    for seed in [1u64, 2, 3] {
+        let m = run_once(&c, seed).unwrap();
+        assert_eq!(m.issued, m.completed, "closed loop must drain (seed {seed})");
+        assert_eq!(m.rejected, 0, "unbounded queue never rejects");
+        assert_eq!(m.cold_starts + m.warm_starts, m.completed);
+        assert!(m.enqueued > 0, "pull mode never parked a request (seed {seed})");
+        assert_eq!(
+            m.pending_wait_ms.seen(),
+            m.enqueued,
+            "every parked request must bind exactly once"
+        );
+        assert!(m.peak_pending >= 1);
+        assert!(!m.pending_timeline.is_empty(), "pull mode samples the pending depth");
+        assert_eq!(
+            m.pending_timeline.last().map(|&(_, d)| d),
+            Some(0),
+            "the queue must drain by the end of the run"
+        );
+    }
+}
+
+#[test]
+fn pull_mode_is_deterministic() {
+    let mut c = pull_cfg("hiku", 20, 25.0);
+    c.workload.copies = 1;
+    let mut a = run_once(&c, 7).unwrap();
+    let mut b = run_once(&c, 7).unwrap();
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "pull runs must be bit-reproducible under a fixed seed"
+    );
+}
+
+/// Property: under aggressive reactive churn (short cooldown, wide
+/// bounds) the pull protocol conserves every request and never binds a
+/// parked one to a drained worker — `Simulation::bind_pending` enforces
+/// the latter with a hard assert, so a violation panics the case.
+#[test]
+fn prop_pull_never_binds_drained_workers() {
+    check("pull-vs-drain", PropConfig { cases: 20, ..Default::default() }, |rng, _size| {
+        let mut c = pull_cfg("hiku", 8 + rng.index(16), 12.0 + rng.next_f64() * 8.0);
+        c.workload.copies = 1;
+        c.cluster.workers = 2 + rng.index(4);
+        c.dispatch.max_wait_s = 0.1 + rng.next_f64();
+        c.autoscale.policy = "reactive".into();
+        c.autoscale.min_workers = 1;
+        c.autoscale.max_workers = c.cluster.workers + 3;
+        c.autoscale.cooldown_s = 0.5;
+        c.autoscale.scale_up_util = 0.9;
+        c.autoscale.scale_down_util = 0.4;
+        let seed = rng.next_u64();
+        let m = run_once(&c, seed).map_err(|e| format!("run failed: {e}"))?;
+        prop_assert!(
+            m.issued == m.completed,
+            "issued {} != completed {} (seed {})",
+            m.issued,
+            m.completed,
+            seed
+        );
+        prop_assert!(
+            m.cold_starts + m.warm_starts == m.completed,
+            "start accounting leaked (seed {})",
+            seed
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn queue_cap_rejects_are_metered_not_swallowed() {
+    let trace = bursty_trace(40, 30.0, 9);
+    let mut c = pull_cfg("hiku", 1, 30.0);
+    c.cluster.workers = 2;
+    c.dispatch.queue_cap = 4;
+    c.dispatch.max_wait_s = 5.0; // long waits keep the tiny queue full
+    let mut m = run_trace(&c, &trace, 3).unwrap();
+    assert!(m.rejected > 0, "a 4-slot queue must reject under 40 req/s bursts");
+    assert!(m.reject_rate() > 0.0);
+    assert_eq!(m.issued, m.completed, "every admitted request still completes");
+    assert!(
+        m.latency_percentile_ms(99.0).is_finite(),
+        "rejects must not poison the latency percentiles"
+    );
+    let j = m.summary_json();
+    assert_eq!(j.get("rejected").unwrap().as_u64(), Some(m.rejected));
+    assert!(j.get("reject_rate").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn scale_to_zero_parks_wakes_and_saves_cost() {
+    // A short burst, a long idle gap, one straggler arrival: the
+    // reactive policy drains the cluster to zero during the gap, the
+    // straggler parks and wakes one worker, and its start is cold (the
+    // drain reclaimed every sandbox).
+    let mut arr: Vec<(f64, usize)> = (0..20).map(|i| (0.5 + i as f64 * 0.1, i % 8)).collect();
+    arr.push((25.0, 0));
+    let trace = OpenLoopTrace::from_synthetic(&arr, 40);
+    let mut c = pull_cfg("hiku", 1, 30.0);
+    c.cluster.workers = 2;
+    c.autoscale.policy = "reactive".into();
+    c.autoscale.min_workers = 0;
+    c.autoscale.max_workers = 4;
+    c.autoscale.cooldown_s = 2.0;
+    let m = run_trace(&c, &trace, 7).unwrap();
+    assert_eq!(m.completed, 21, "every arrival must resolve, including the post-idle one");
+    assert_eq!(m.issued, m.completed);
+    assert!(
+        m.scaling_timeline.iter().any(|&(_, w)| w == 0),
+        "cluster never parked to zero: {:?}",
+        m.scaling_timeline
+    );
+    assert!(m.cold_starts >= 1, "the wake's first request must pay a cold start");
+    // Cost: parking to zero must beat holding the min=1 floor.
+    let mut floor1 = c.clone();
+    floor1.autoscale.min_workers = 1;
+    let m1 = run_trace(&floor1, &trace, 7).unwrap();
+    assert!(
+        m.worker_seconds < m1.worker_seconds,
+        "scale-to-zero saved nothing: {} vs {}",
+        m.worker_seconds,
+        m1.worker_seconds
+    );
+}
+
+#[test]
+fn pull_does_not_cold_start_more_than_push_on_bursty_workload() {
+    // The headline scenario (quantified by benches/ablation_dispatch.rs):
+    // letting a request wait briefly for a warm worker instead of
+    // forcing an immediate fallback placement. Deterministic per seed,
+    // so this is a stable regression guard, not a statistical claim.
+    let trace = bursty_trace(40, 60.0, 42);
+    let mut push = pull_cfg("hiku", 1, 60.0);
+    push.dispatch.mode = "push".into();
+    let mut pull = push.clone();
+    pull.dispatch.mode = "pull".into();
+    for seed in [1u64, 2] {
+        let a = run_trace(&push, &trace, seed).unwrap();
+        let b = run_trace(&pull, &trace, seed).unwrap();
+        assert!(b.enqueued > 0, "pull must actually park requests (seed {seed})");
+        assert!(
+            b.cold_rate() <= a.cold_rate(),
+            "pull increased the cold-start fraction: push {:.4} vs pull {:.4} (seed {seed})",
+            a.cold_rate(),
+            b.cold_rate()
+        );
+        assert_eq!(b.issued, b.completed);
+    }
+}
+
+#[test]
+fn sharded_pull_steals_at_barriers_and_reproduces() {
+    // Constructed imbalance: worker split over 2 shards is 2 + 1; the
+    // even-indexed (shard 0) arrivals are a light, cheap stream while
+    // the odd-indexed (shard 1) arrivals hammer one function at ~16/s —
+    // beyond a single 4-core worker's capacity for chameleon (~392 ms
+    // warm), so shard 1 parks continuously while shard 0 idles. The
+    // coordinator must hand tasks across at the epoch barriers.
+    let mut arr: Vec<(f64, usize)> = Vec::new();
+    for k in 0..240 {
+        let t = 0.05 + k as f64 * 0.0625; // both streams span 0.05..15.05 s
+        arr.push((t, 5)); // even index -> shard 0, linpack (58 ms warm)
+        arr.push((t, 0)); // odd index -> shard 1, chameleon (392 ms warm)
+    }
+    let trace = OpenLoopTrace::from_synthetic(&arr, 40);
+    let mut c = pull_cfg("hiku", 1, 20.0);
+    c.cluster.workers = 3;
+    c.sim.shards = 2;
+    c.dispatch.max_wait_s = 1.0; // parked requests span a whole epoch
+    let mut a = run_trace(&c, &trace, 5).unwrap();
+    let mut b = run_trace(&c, &trace, 5).unwrap();
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "sharded pull runs must be bit-reproducible"
+    );
+    assert_eq!(a.issued, a.completed, "handoffs must not lose requests");
+    assert_eq!(a.completed, 480);
+    assert!(a.enqueued > 0);
+    assert!(a.stolen > 0, "the overloaded shard never handed off a task");
+    // Stealing is off in push mode: same setup, no handoffs, and the
+    // partition-closed contract still conserves everything.
+    let mut p = c.clone();
+    p.dispatch.mode = "push".into();
+    let mp = run_trace(&p, &trace, 5).unwrap();
+    assert_eq!(mp.stolen, 0);
+    assert_eq!(mp.issued, mp.completed);
+}
