@@ -1,18 +1,30 @@
 //! L2 ablation: the dispatch protocol — hiku under `dispatch.mode =
 //! "push"` vs `"pull"` on the bursty open-loop workload.
 //!
-//! The pull rows sweep the wait deadline (`dispatch.max_wait_s`): how
-//! long a request with a warm prospect may park in the router's pending
-//! queue before it is force-placed. The push row is the pre-redesign
-//! behavior (immediate fallback placement when `PQ_f` is empty). The
-//! headline number is the cold-start fraction: parked requests that get
-//! pulled are warm by construction, so pull should trade a bounded queue
-//! wait for a lower cold rate on bursts.
+//! The pull rows sweep the wait deadline (`dispatch.max_wait_s`, with
+//! `adaptive_wait` pinned off so the sweep actually varies the
+//! deadline): how long a request with a warm prospect may park in the
+//! router's pending queue before it is force-placed. The push row is
+//! the pre-redesign behavior (immediate fallback placement when `PQ_f`
+//! is empty), and the `pull+a` row is cost-aware waiting — per-function
+//! `min(max_wait_s, ewma cold penalty)` deadlines. The headline number
+//! is the cold-start fraction: parked requests that get pulled are warm
+//! by construction, so pull should trade a bounded queue wait for a
+//! lower cold rate on bursts.
 //!
 //! A second section prices scale-to-zero: the same trace with a 60 s
 //! idle tail, reactive autoscaling with `min_workers` 1 vs 0 — the
 //! worker-seconds delta is the cost of holding the floor, and the cold
 //! rate shows what the queue-triggered wake pays for it.
+//!
+//! A third section is the **fairness ablation** (`dispatch.fair` DRR vs
+//! the PR 4 arrival-order FIFO): a hot function monopolizes a donor
+//! shard's pending queue while a background function parks alongside it;
+//! cross-shard steal donation in DRR order gives the background its
+//! share of every handoff, while FIFO donation lets the hot backlog
+//! crowd it out until its wait deadline. Reported per function: p99
+//! pending wait and the admission-reject split under per-function caps
+//! (the background function must never be the one rejecting).
 //!
 //! Emits machine-readable **`BENCH_dispatch.json`** (one row per run +
 //! aggregate cold-rate/cost keys) — the committed experiment recipe is
@@ -26,7 +38,7 @@
 //!   cargo bench --bench ablation_dispatch -- --quick # CI smoke
 
 use hiku::config::Config;
-use hiku::report::bursty_trace;
+use hiku::report::{bursty_trace, monopoly_trace};
 use hiku::sim::run_trace;
 use hiku::util::json::{obj, Json};
 
@@ -35,6 +47,25 @@ fn base_cfg(dur: f64) -> Config {
     cfg.scheduler.name = "hiku".into();
     cfg.workload.vus = 1; // open loop ignores the VU scripts
     cfg.workload.duration_s = dur;
+    cfg
+}
+
+/// The fairness-ablation config: 3 workers over 2 shards (donor shard 1
+/// owns a single worker), short epochs, per-function admission caps and
+/// a small steal batch so drain order decides who a handoff serves.
+/// `adaptive_wait` is pinned off so the fair-vs-FIFO axis is the only
+/// difference between the two rows.
+fn fairness_cfg(dur: f64, fair: bool) -> Config {
+    let mut cfg = base_cfg(dur);
+    cfg.cluster.workers = 3;
+    cfg.sim.shards = 2;
+    cfg.sim.barrier_s = 0.25;
+    cfg.dispatch.mode = "pull".into();
+    cfg.dispatch.max_wait_s = 1.0;
+    cfg.dispatch.adaptive_wait = false;
+    cfg.dispatch.queue_cap = 10;
+    cfg.dispatch.steal_batch = 2;
+    cfg.dispatch.fair = fair;
     cfg
 }
 
@@ -58,57 +89,68 @@ fn main() {
 
     let mut rows: Vec<Json> = Vec::new();
     let mut cold_push = 0.0f64;
-    let mut cold_pull = 0.0f64; // at the default 0.5 s deadline
-    let mut run_cell = |mode: &str, wait: f64, seed: u64, rows: &mut Vec<Json>| -> (f64, f64) {
-        let mut cfg = base_cfg(dur);
-        cfg.dispatch.mode = mode.into();
-        if wait > 0.0 {
-            cfg.dispatch.max_wait_s = wait;
-        }
-        let mut m = run_trace(&cfg, &trace, seed).expect("dispatch ablation run");
-        let cold = m.cold_rate();
-        let mean = m.mean_latency_ms();
-        let p95 = m.latency_percentile_ms(95.0);
-        println!(
-            "{:<6} {:>6.2} {:>5} {:>9} {:>6.1}% {:>9.1} {:>9.1} {:>9.1} {:>9} {:>7}",
-            mode,
-            wait,
-            seed,
-            m.completed,
-            cold * 100.0,
-            mean,
-            p95,
-            m.mean_pending_wait_ms(),
-            m.enqueued,
-            m.rejected
-        );
-        rows.push(obj(vec![
-            ("mode", mode.into()),
-            ("max_wait_s", wait.into()),
-            ("seed", seed.into()),
-            ("completed", m.completed.into()),
-            ("cold_rate", cold.into()),
-            ("mean_ms", mean.into()),
-            ("p95_ms", p95.into()),
-            ("mean_pending_wait_ms", m.mean_pending_wait_ms().into()),
-            ("enqueued", m.enqueued.into()),
-            ("rejected", m.rejected.into()),
-            ("worker_seconds", m.worker_seconds.into()),
-        ]));
-        (cold, m.worker_seconds)
-    };
+    let mut cold_pull = 0.0f64; // at the fixed 0.5 s deadline
+    let mut cold_adaptive = 0.0f64; // cost-aware deadlines
+    // Fixed-wait rows pin `adaptive_wait = false` so the sweep actually
+    // varies the deadline; the `pull+a` row is the cost-aware variant
+    // (per-function `min(max_wait_s, ewma cold penalty)` deadlines).
+    let mut run_cell =
+        |mode: &str, wait: f64, adaptive: bool, seed: u64, rows: &mut Vec<Json>| -> (f64, f64) {
+            let mut cfg = base_cfg(dur);
+            cfg.dispatch.mode = mode.trim_end_matches("+a").into();
+            cfg.dispatch.adaptive_wait = adaptive;
+            if wait > 0.0 {
+                cfg.dispatch.max_wait_s = wait;
+            }
+            let mut m = run_trace(&cfg, &trace, seed).expect("dispatch ablation run");
+            let cold = m.cold_rate();
+            let mean = m.mean_latency_ms();
+            let p95 = m.latency_percentile_ms(95.0);
+            println!(
+                "{:<6} {:>6.2} {:>5} {:>9} {:>6.1}% {:>9.1} {:>9.1} {:>9.1} {:>9} {:>7}",
+                mode,
+                wait,
+                seed,
+                m.completed,
+                cold * 100.0,
+                mean,
+                p95,
+                m.mean_pending_wait_ms(),
+                m.enqueued,
+                m.rejected
+            );
+            rows.push(obj(vec![
+                ("mode", mode.into()),
+                ("max_wait_s", wait.into()),
+                ("adaptive_wait", adaptive.into()),
+                ("seed", seed.into()),
+                ("completed", m.completed.into()),
+                ("cold_rate", cold.into()),
+                ("mean_ms", mean.into()),
+                ("p95_ms", p95.into()),
+                ("mean_pending_wait_ms", m.mean_pending_wait_ms().into()),
+                ("enqueued", m.enqueued.into()),
+                ("rejected", m.rejected.into()),
+                ("worker_seconds", m.worker_seconds.into()),
+            ]));
+            (cold, m.worker_seconds)
+        };
 
     for &seed in seeds {
-        let (c, _) = run_cell("push", 0.0, seed, &mut rows);
+        let (c, _) = run_cell("push", 0.0, false, seed, &mut rows);
         cold_push += c / seeds.len() as f64;
     }
     for &wait in waits {
         for &seed in seeds {
-            let (c, _) = run_cell("pull", wait, seed, &mut rows);
+            let (c, _) = run_cell("pull", wait, false, seed, &mut rows);
             if (wait - 0.5).abs() < 1e-9 {
                 cold_pull += c / seeds.len() as f64;
             }
         }
+    }
+    for &seed in seeds {
+        let (c, _) = run_cell("pull+a", 0.5, true, seed, &mut rows);
+        cold_adaptive += c / seeds.len() as f64;
     }
 
     // ---- scale-to-zero pricing: the trace plus a 60 s idle tail ----
@@ -141,6 +183,48 @@ fn main() {
         ]));
     }
 
+    // ---- fairness ablation: DRR vs arrival-order FIFO draining ----
+    println!(
+        "# fairness: hot-function monopoly vs background, DRR (fair) vs FIFO steal donation"
+    );
+    let fdur = if quick { 15.0 } else { 40.0 };
+    // The shared hot-monopoly scenario — exactly what
+    // tests/dispatch.rs::fair_drr_bounds_starved_function_wait_vs_fifo
+    // proves, so the CI gate and the test cannot drift apart.
+    let ftrace = monopoly_trace(24.0, fdur, true);
+    let mut f_rows: Vec<Json> = Vec::new();
+    // [fair, fifo] × (hot p99 wait, bg p99 wait, hot rejects, bg rejects)
+    let mut fairness = [(0.0f64, 0.0f64, 0u64, 0u64); 2];
+    for (i, &fair) in [true, false].iter().enumerate() {
+        let cfg = fairness_cfg(fdur, fair);
+        let mut m = run_trace(&cfg, &ftrace, 1).expect("fairness ablation run");
+        let hot_p99 = m.pending_wait_p99_fn_ms(0);
+        let bg_p99 = m.pending_wait_p99_fn_ms(1);
+        let hot_rej = m.reject_count_fn(0);
+        let bg_rej = m.reject_count_fn(1);
+        fairness[i] = (hot_p99, bg_p99, hot_rej, bg_rej);
+        println!(
+            "{:<5} -> hot p99 wait {:>8.1} ms, bg p99 wait {:>8.1} ms, rejects hot/bg {}/{}, \
+             stolen {}",
+            if fair { "fair" } else { "fifo" },
+            hot_p99,
+            bg_p99,
+            hot_rej,
+            bg_rej,
+            m.stolen
+        );
+        f_rows.push(obj(vec![
+            ("fair", fair.into()),
+            ("hot_p99_wait_ms", hot_p99.into()),
+            ("bg_p99_wait_ms", bg_p99.into()),
+            ("hot_rejects", hot_rej.into()),
+            ("bg_rejects", bg_rej.into()),
+            ("stolen", m.stolen.into()),
+            ("enqueued", m.enqueued.into()),
+            ("completed", m.completed.into()),
+        ]));
+    }
+
     let reduction =
         if cold_push > 0.0 { (cold_push - cold_pull) / cold_push * 100.0 } else { 0.0 };
     println!(
@@ -153,11 +237,19 @@ fn main() {
         ("quick", quick.into()),
         ("cold_rate_push", cold_push.into()),
         ("cold_rate_pull_wait0_5", cold_pull.into()),
+        ("cold_rate_pull_adaptive", cold_adaptive.into()),
         ("cold_reduction_pct", reduction.into()),
         ("scale_to_zero_worker_seconds_floor1", ws[0].into()),
         ("scale_to_zero_worker_seconds_floor0", ws[1].into()),
+        ("fairness_hot_p99_wait_ms_fair", fairness[0].0.into()),
+        ("fairness_bg_p99_wait_ms_fair", fairness[0].1.into()),
+        ("fairness_hot_p99_wait_ms_fifo", fairness[1].0.into()),
+        ("fairness_bg_p99_wait_ms_fifo", fairness[1].1.into()),
+        ("fairness_hot_rejects_fair", fairness[0].2.into()),
+        ("fairness_bg_rejects_fair", fairness[0].3.into()),
         ("rows", Json::Arr(rows)),
         ("scale_to_zero_rows", Json::Arr(z_rows)),
+        ("fairness_rows", Json::Arr(f_rows)),
     ]);
     let path = "BENCH_dispatch.json";
     std::fs::write(path, out.to_string_pretty()).expect("write bench json");

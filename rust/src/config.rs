@@ -200,23 +200,47 @@ impl Default for AutoscaleConfig {
 /// the push adapter — bit-identical to the pre-protocol engine.
 /// `mode = "pull"` activates the paper's pull loop as a first-class
 /// protocol: requests with a warm prospect park in the router's pending
-/// queue, idle workers claim them (`on_worker_idle`), a wait deadline
-/// force-places stragglers, and `queue_cap` bounds admission
-/// (DESIGN.md §8).
+/// queue, idle workers claim them (`on_worker_idle`), a per-function
+/// wait deadline force-places stragglers, `queue_cap`/`queue_caps` bound
+/// admission per function, and backlogs drain fairly via deficit-round-
+/// robin over the function queues (DESIGN.md §8).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DispatchConfig {
     /// `"push"` (synchronous assignment, the default) or `"pull"`
     /// (late binding through the pending queue).
     pub mode: String,
-    /// Admission bound on parked requests across all functions; an
-    /// `Enqueue` decision against a full queue becomes a reject.
-    /// 0 = unbounded. The bound is per router instance — in sharded runs
-    /// each shard owns a pending queue, so the global bound is
-    /// `shards × queue_cap`.
+    /// Default **per-function** admission bound on parked requests; an
+    /// `Enqueue` decision against a full per-function queue becomes a
+    /// reject, so one hot function cannot crowd every other function out
+    /// of admission. 0 = unbounded. The bound is per router instance —
+    /// in sharded runs each shard owns a pending queue, so the global
+    /// bound per function is `shards × queue_cap`.
     pub queue_cap: usize,
-    /// Longest a parked request may wait for a warm worker before the
-    /// router force-places it via the scheduler's fallback, in seconds.
+    /// Per-function overrides of `queue_cap`: comma-separated
+    /// `function:cap` pairs, e.g. `"0:4,7:64"`. Entries for function ids
+    /// outside the workload are ignored.
+    pub queue_caps: String,
+    /// Upper bound on how long a parked request may wait for a warm
+    /// worker before the router force-places it via the scheduler's
+    /// fallback, in seconds. With `adaptive_wait` the effective
+    /// per-function deadline is `min(max_wait_s, ewma_cold_penalty_f)`.
     pub max_wait_s: f64,
+    /// Cost-aware waiting: size each request's pull deadline from the
+    /// observed per-function cold−warm start delta (an EWMA maintained by
+    /// the router) instead of the single global `max_wait_s` knob —
+    /// waiting is only worth as long as the cold start it might avoid
+    /// (DESIGN.md §8). Default true; false pins the PR 4 fixed deadline.
+    pub adaptive_wait: bool,
+    /// Deficit-round-robin weights for fair backlog draining:
+    /// comma-separated `function:weight` pairs (weights >= 1, default 1
+    /// for every function), e.g. `"0:4"` gives function 0 four credits
+    /// per DRR visit.
+    pub weights: String,
+    /// Fair draining on (default): wake flushes, cross-shard steal
+    /// donation and idle-capacity claims pop in deficit-round-robin
+    /// order. false restores the PR 4 global arrival-order FIFO (the
+    /// fairness-ablation baseline).
+    pub fair: bool,
     /// Sharded runs: most parked requests one shard hands off to another
     /// per epoch barrier (`ShardMsg::Handoff`); 0 disables stealing.
     pub steal_batch: usize,
@@ -224,7 +248,66 @@ pub struct DispatchConfig {
 
 impl Default for DispatchConfig {
     fn default() -> Self {
-        Self { mode: "push".into(), queue_cap: 0, max_wait_s: 0.5, steal_batch: 8 }
+        Self {
+            mode: "push".into(),
+            queue_cap: 0,
+            queue_caps: String::new(),
+            max_wait_s: 0.5,
+            adaptive_wait: true,
+            weights: String::new(),
+            fair: true,
+            steal_batch: 8,
+        }
+    }
+}
+
+/// Parse a `function:value` map string (pairs separated by `,` or `;`,
+/// e.g. `"0:4,7:2"`; use `;` inside `--set` overrides, whose list syntax
+/// reserves the comma; whitespace around entries is ignored; empty
+/// string = empty map). Shared by `dispatch.queue_caps` and
+/// `dispatch.weights`.
+pub fn parse_fn_map(s: &str) -> Result<Vec<(usize, u64)>, String> {
+    let mut out = Vec::new();
+    for entry in s.split([',', ';']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (f, v) = entry
+            .split_once(':')
+            .ok_or_else(|| format!("bad map entry '{entry}' (expected function:value)"))?;
+        let f: usize =
+            f.trim().parse().map_err(|_| format!("bad function id in map entry '{entry}'"))?;
+        let v: u64 = v.trim().parse().map_err(|_| format!("bad value in map entry '{entry}'"))?;
+        out.push((f, v));
+    }
+    Ok(out)
+}
+
+impl DispatchConfig {
+    /// Dense per-function admission caps over `n` function types:
+    /// `queue_cap` everywhere, overridden by `queue_caps` entries
+    /// (0 = unbounded). Panics on a malformed map — run
+    /// [`Config::validate`] first (every entry point does).
+    pub fn caps_dense(&self, n: usize) -> Vec<usize> {
+        let mut caps = vec![self.queue_cap; n];
+        for (f, cap) in parse_fn_map(&self.queue_caps).expect("validated dispatch.queue_caps") {
+            if f < n {
+                caps[f] = cap as usize;
+            }
+        }
+        caps
+    }
+
+    /// Sparse `(function, weight)` DRR overrides from `weights` (the
+    /// [`crate::dispatch::PendingQueue`] layout input). Panics on a
+    /// malformed map — run [`Config::validate`] first.
+    pub fn weights_sparse(&self) -> Vec<(usize, u32)> {
+        parse_fn_map(&self.weights)
+            .expect("validated dispatch.weights")
+            .into_iter()
+            .map(|(f, w)| (f, w as u32))
+            .collect()
     }
 }
 
@@ -347,7 +430,11 @@ impl Config {
                 obj(vec![
                     ("mode", self.dispatch.mode.as_str().into()),
                     ("queue_cap", self.dispatch.queue_cap.into()),
+                    ("queue_caps", self.dispatch.queue_caps.as_str().into()),
                     ("max_wait_s", self.dispatch.max_wait_s.into()),
+                    ("adaptive_wait", self.dispatch.adaptive_wait.into()),
+                    ("weights", self.dispatch.weights.as_str().into()),
+                    ("fair", self.dispatch.fair.into()),
                     ("steal_batch", self.dispatch.steal_batch.into()),
                 ]),
             ),
@@ -507,9 +594,24 @@ impl Config {
                 cfg.dispatch.queue_cap =
                     v.as_u64().ok_or_else(|| missing("dispatch.queue_cap"))? as usize;
             }
+            if let Some(v) = d.get("queue_caps") {
+                cfg.dispatch.queue_caps =
+                    v.as_str().ok_or_else(|| missing("dispatch.queue_caps"))?.to_string();
+            }
             if let Some(v) = d.get("max_wait_s") {
                 cfg.dispatch.max_wait_s =
                     v.as_f64().ok_or_else(|| missing("dispatch.max_wait_s"))?;
+            }
+            if let Some(v) = d.get("adaptive_wait") {
+                cfg.dispatch.adaptive_wait =
+                    v.as_bool().ok_or_else(|| missing("dispatch.adaptive_wait"))?;
+            }
+            if let Some(v) = d.get("weights") {
+                cfg.dispatch.weights =
+                    v.as_str().ok_or_else(|| missing("dispatch.weights"))?.to_string();
+            }
+            if let Some(v) = d.get("fair") {
+                cfg.dispatch.fair = v.as_bool().ok_or_else(|| missing("dispatch.fair"))?;
             }
             if let Some(v) = d.get("steal_batch") {
                 cfg.dispatch.steal_batch =
@@ -613,8 +715,16 @@ impl Config {
             "dispatch.queue_cap" => {
                 self.dispatch.queue_cap = value.parse().map_err(|_| bad(path, value))?
             }
+            "dispatch.queue_caps" => self.dispatch.queue_caps = value.to_string(),
             "dispatch.max_wait_s" => {
                 self.dispatch.max_wait_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.adaptive_wait" => {
+                self.dispatch.adaptive_wait = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.weights" => self.dispatch.weights = value.to_string(),
+            "dispatch.fair" => {
+                self.dispatch.fair = value.parse().map_err(|_| bad(path, value))?
             }
             "dispatch.steal_batch" => {
                 self.dispatch.steal_batch = value.parse().map_err(|_| bad(path, value))?
@@ -751,6 +861,17 @@ impl Config {
         }
         if self.dispatch.max_wait_s <= 0.0 {
             return e("dispatch.max_wait_s must be > 0");
+        }
+        if let Err(m) = parse_fn_map(&self.dispatch.queue_caps) {
+            return Err(ConfigError(format!("dispatch.queue_caps: {m}")));
+        }
+        match parse_fn_map(&self.dispatch.weights) {
+            Err(m) => return Err(ConfigError(format!("dispatch.weights: {m}"))),
+            Ok(pairs) => {
+                if pairs.iter().any(|&(_, w)| w == 0 || w > u32::MAX as u64) {
+                    return e("dispatch.weights entries must be in 1..=u32::MAX");
+                }
+            }
         }
         if self.sim.shards == 0 {
             return e("sim.shards must be >= 1");
@@ -895,13 +1016,20 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.dispatch.mode, "push", "push dispatch by default");
         assert!(!c.pull_dispatch());
+        assert!(c.dispatch.fair, "fair (DRR) draining is the default");
+        assert!(c.dispatch.adaptive_wait, "cost-aware waiting is the default");
         let mut c = Config::default();
         c.apply_override("dispatch.mode=pull").unwrap();
         c.apply_override("dispatch.queue_cap=256").unwrap();
+        c.apply_override("dispatch.queue_caps=0:4,7:64").unwrap();
         c.apply_override("dispatch.max_wait_s=0.25").unwrap();
+        c.apply_override("dispatch.adaptive_wait=false").unwrap();
+        c.apply_override("dispatch.weights=0:4").unwrap();
+        c.apply_override("dispatch.fair=false").unwrap();
         c.apply_override("dispatch.steal_batch=4").unwrap();
         assert!(c.pull_dispatch());
         assert_eq!(c.dispatch.queue_cap, 256);
+        assert!(!c.dispatch.adaptive_wait && !c.dispatch.fair);
         let j = c.to_json();
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c, c2);
@@ -921,6 +1049,34 @@ mod tests {
         c.cluster.workers = 8;
         c.sim.shards = 2;
         assert!(c.validate().is_err(), "min_workers=0 sharded must fail");
+    }
+
+    #[test]
+    fn dispatch_fn_maps_parse_and_validate() {
+        assert_eq!(parse_fn_map("").unwrap(), vec![]);
+        assert_eq!(parse_fn_map("0:4, 7:2").unwrap(), vec![(0, 4), (7, 2)]);
+        assert!(parse_fn_map("0=4").is_err(), "colon separator required");
+        assert!(parse_fn_map("x:4").is_err());
+        assert!(parse_fn_map("0:y").is_err());
+        // Malformed maps are rejected at validation.
+        let mut c = Config::default();
+        c.dispatch.queue_caps = "nope".into();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.dispatch.weights = "0:0".into(); // weight 0 is meaningless in DRR
+        assert!(c.validate().is_err());
+        c.dispatch.weights = "0:3".into();
+        assert!(c.validate().is_ok());
+        // Dense caps: default everywhere, overrides where given, ids
+        // beyond the workload ignored.
+        let mut c = Config::default();
+        c.dispatch.queue_cap = 16;
+        c.dispatch.queue_caps = "1:4,99:8".into();
+        let caps = c.dispatch.caps_dense(3);
+        assert_eq!(caps, vec![16, 4, 16]);
+        assert_eq!(c.dispatch.weights_sparse(), vec![]);
+        c.dispatch.weights = "2:5".into();
+        assert_eq!(c.dispatch.weights_sparse(), vec![(2, 5)]);
     }
 
     #[test]

@@ -5,27 +5,46 @@
 //! per scheduler): schedulers only answer `decide()`; parking, admission,
 //! wait deadlines, pulls and cross-shard steals are the router's job.
 //! Ordering is deterministic by construction — per-function FIFO for
-//! pulls, global arrival FIFO for deadline flushes and steals, no hashing
-//! and no ambient state — so a run under a fixed (config, seed) replays
-//! bit-for-bit.
+//! pulls, and **deficit-round-robin (DRR) over the function queues** for
+//! every multi-request drain (wake flushes, cross-shard steal donation,
+//! idle-capacity claims) — no hashing and no ambient state — so a run
+//! under a fixed (config, seed) replays bit-for-bit.
 //!
-//! Representation: one `VecDeque` per function (the pull order) plus a
-//! global arrival-ordered mirror, lazily invalidated through a
-//! per-request waiting flag. Pops skip stale mirror entries, so both
-//! views stay amortized O(1) per operation without cross-linked nodes.
+//! ## Fair draining (DRR)
+//!
+//! PR 4 drained the backlog in global arrival order, which lets one hot
+//! function monopolize every flush and steal (the per-function-granularity
+//! fairness problem of Kaffes et al.). [`PendingQueue::pop_fair`] replaces
+//! that with deficit-round-robin: a cursor walks the function queues in
+//! **fixed function-id order**; a visited non-empty queue is recharged
+//! with `weight_f` credits (config `dispatch.weights`, default 1) when its
+//! deficit is zero, serves one request per call, and keeps the cursor
+//! until its credits are spent or it empties; empty (or filtered-out)
+//! queues forfeit nothing but their turn, and an *emptied* queue resets
+//! its deficit to zero (inactive queues accumulate no credit — standard
+//! DRR). The cursor/deficit state is part of the router, so the drain
+//! order is a pure function of the push/pop history — the determinism
+//! rule documented in DESIGN.md §8. The PR 4 arrival order survives as
+//! [`PendingQueue::pop_arrival`] for the `dispatch.fair = false` ablation
+//! baseline (request ids are dense and allocated in arrival order, so the
+//! globally oldest request is the minimum live id across queue heads).
+//!
+//! Representation: one `VecDeque` per function (FIFO in arrival order)
+//! plus a per-request waiting flag; `cancel` marks entries stale in place
+//! and pops skip them, so every operation stays amortized O(1) (pops
+//! O(active functions) at worst for the cursor walk / head scan).
 
 use std::collections::VecDeque;
 
 use crate::workload::spec::FunctionId;
 
-/// Per-function FIFO pending queues with a global arrival-order view.
-/// Requests are identified by the router's dense request id.
+/// Per-function FIFO pending queues drained fairly (DRR) or in global
+/// arrival order. Requests are identified by the router's dense request
+/// id, which is allocated in arrival order.
 #[derive(Debug, Default)]
 pub struct PendingQueue {
     /// Per-function FIFO of waiting request ids (pull order).
     queues: Vec<VecDeque<u64>>,
-    /// Global arrival-ordered (rid, function) mirror (flush/steal order).
-    order: VecDeque<(u64, FunctionId)>,
     /// `waiting[rid]`: the request is currently parked. Entries in the
     /// queues above whose flag is false are stale and skipped on pop.
     waiting: Vec<bool>,
@@ -33,12 +52,52 @@ pub struct PendingQueue {
     len: usize,
     /// Parked requests per function (live entries only).
     len_f: Vec<usize>,
+    /// DRR weight per function (`dispatch.weights`; default 1 — plain
+    /// round-robin). Grows in lockstep with `queues`.
+    weights: Vec<u32>,
+    /// DRR credits left for the cursor's current visit of each queue.
+    deficit: Vec<u32>,
+    /// Next function id the DRR cursor visits (fixed-id-order walk).
+    cursor: usize,
 }
 
 impl PendingQueue {
-    /// An empty pending queue.
+    /// An empty pending queue (every function weighted 1).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty pending queue pre-sized for `functions` function types
+    /// with the given `(function, weight)` DRR overrides (weights default
+    /// to 1; entries beyond `functions` are ignored — they can never be
+    /// parked).
+    pub fn with_layout(functions: usize, weights: &[(usize, u32)]) -> Self {
+        let mut q = Self {
+            queues: Vec::new(),
+            waiting: Vec::new(),
+            len: 0,
+            len_f: Vec::new(),
+            weights: Vec::new(),
+            deficit: Vec::new(),
+            cursor: 0,
+        };
+        q.grow_functions(functions);
+        for &(f, w) in weights {
+            if f < functions {
+                q.weights[f] = w.max(1);
+            }
+        }
+        q
+    }
+
+    /// Ensure the per-function tables cover function ids `< n`.
+    fn grow_functions(&mut self, n: usize) {
+        if n > self.queues.len() {
+            self.queues.resize_with(n, VecDeque::new);
+            self.len_f.resize(n, 0);
+            self.weights.resize(n, 1);
+            self.deficit.resize(n, 0);
+        }
     }
 
     /// Parked requests across all functions.
@@ -70,43 +129,139 @@ impl PendingQueue {
         }
         debug_assert!(!self.waiting[i], "request {rid} parked twice");
         self.waiting[i] = true;
-        if f >= self.queues.len() {
-            self.queues.resize_with(f + 1, VecDeque::new);
-            self.len_f.resize(f + 1, 0);
-        }
+        self.grow_functions(f + 1);
         self.queues[f].push_back(rid);
-        self.order.push_back((rid, f));
         self.len += 1;
         self.len_f[f] += 1;
     }
 
-    /// Claim the oldest request parked for `f` (an idle worker's pull).
-    pub fn pop_fn(&mut self, f: FunctionId) -> Option<u64> {
-        let q = self.queues.get_mut(f)?;
-        while let Some(rid) = q.pop_front() {
+    /// Pop the oldest *live* entry of `f`'s queue. Caller guarantees
+    /// `len_f[f] > 0`; stale (cancelled) heads are dropped on the way.
+    /// Enforces the DRR invariant on every exit path: an emptied queue
+    /// forfeits its remaining deficit (inactive queues hold no credit),
+    /// whether it was emptied by a fair pop, a warm pull (`pop_fn`) or a
+    /// deadline drain.
+    fn pop_live(&mut self, f: FunctionId) -> u64 {
+        loop {
+            let rid = self.queues[f].pop_front().expect("len_f > 0 implies a live entry");
             if self.waiting[rid as usize] {
                 self.waiting[rid as usize] = false;
                 self.len -= 1;
                 self.len_f[f] -= 1;
+                if self.len_f[f] == 0 {
+                    self.deficit[f] = 0;
+                }
+                return rid;
+            }
+        }
+    }
+
+    /// The oldest live request id parked for `f`, without claiming it
+    /// (stale heads are dropped on the way).
+    fn front_live(&mut self, f: FunctionId) -> Option<u64> {
+        if self.len_f.get(f).copied().unwrap_or(0) == 0 {
+            return None;
+        }
+        loop {
+            let &rid = self.queues[f].front().expect("len_f > 0 implies a live entry");
+            if self.waiting[rid as usize] {
                 return Some(rid);
             }
-            // Stale mirror entry (cancelled or claimed globally): skip.
+            self.queues[f].pop_front();
+        }
+    }
+
+    /// Advance the DRR cursor one step in fixed function-id order.
+    fn advance_cursor(&mut self) {
+        self.cursor = if self.cursor + 1 >= self.queues.len() { 0 } else { self.cursor + 1 };
+    }
+
+    /// Claim the oldest request parked for `f` (an idle worker's pull).
+    pub fn pop_fn(&mut self, f: FunctionId) -> Option<u64> {
+        if self.len_f.get(f).copied().unwrap_or(0) == 0 {
+            return None;
+        }
+        Some(self.pop_live(f))
+    }
+
+    /// Claim the next request in deficit-round-robin order — the fair
+    /// drain used by wake flushes, steal donation and idle-capacity
+    /// claims (`dispatch.fair = true`, the default). See the module docs
+    /// for the determinism rule.
+    pub fn pop_fair(&mut self) -> Option<(u64, FunctionId)> {
+        self.pop_fair_where(|_| true)
+    }
+
+    /// [`PendingQueue::pop_fair`] restricted to functions for which
+    /// `eligible` holds (e.g. "no warm prospect in flight"). Ineligible
+    /// queues keep their deficit and are skipped; returns `None` when no
+    /// eligible function has a parked request.
+    pub fn pop_fair_where(
+        &mut self,
+        mut eligible: impl FnMut(FunctionId) -> bool,
+    ) -> Option<(u64, FunctionId)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.queues.len();
+        for _ in 0..n {
+            let f = self.cursor;
+            if self.len_f[f] == 0 {
+                // Inactive queues accumulate no credit (standard DRR).
+                self.deficit[f] = 0;
+                self.advance_cursor();
+                continue;
+            }
+            if !eligible(f) {
+                self.advance_cursor();
+                continue;
+            }
+            if self.deficit[f] == 0 {
+                self.deficit[f] = self.weights[f];
+            }
+            self.deficit[f] -= 1;
+            let rid = self.pop_live(f); // resets the deficit if f emptied
+            if self.len_f[f] == 0 || self.deficit[f] == 0 {
+                self.advance_cursor();
+            }
+            return Some((rid, f));
         }
         None
     }
 
-    /// Claim the globally oldest parked request, any function (the
-    /// deadline-flush and steal order).
-    pub fn pop_oldest(&mut self) -> Option<(u64, FunctionId)> {
-        while let Some((rid, f)) = self.order.pop_front() {
-            if self.waiting[rid as usize] {
-                self.waiting[rid as usize] = false;
-                self.len -= 1;
-                self.len_f[f] -= 1;
-                return Some((rid, f));
+    /// Claim the globally oldest parked request — the PR 4 drain order,
+    /// kept as the `dispatch.fair = false` ablation baseline. Request ids
+    /// are dense and allocated in arrival order, so "oldest" is the
+    /// minimum live id across queue heads (O(functions) per pop).
+    pub fn pop_arrival(&mut self) -> Option<(u64, FunctionId)> {
+        self.pop_arrival_where(|_| true)
+    }
+
+    /// [`PendingQueue::pop_arrival`] restricted to functions for which
+    /// `eligible` holds.
+    pub fn pop_arrival_where(
+        &mut self,
+        mut eligible: impl FnMut(FunctionId) -> bool,
+    ) -> Option<(u64, FunctionId)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut best: Option<(u64, FunctionId)> = None;
+        for f in 0..self.queues.len() {
+            if self.len_f[f] == 0 || !eligible(f) {
+                continue;
+            }
+            let head = self.front_live(f).expect("len_f > 0 implies a live entry");
+            let older = match best {
+                Some((rid, _)) => head < rid,
+                None => true,
+            };
+            if older {
+                best = Some((head, f));
             }
         }
-        None
+        let (_, f) = best?;
+        Some((self.pop_live(f), f))
     }
 
     /// Un-park request `rid` for `f` without claiming it (deadline fired,
@@ -119,6 +274,9 @@ impl PendingQueue {
         self.waiting[i] = false;
         self.len -= 1;
         self.len_f[f] -= 1;
+        if self.len_f[f] == 0 {
+            self.deficit[f] = 0; // an emptied queue forfeits its credit
+        }
         true
     }
 }
@@ -146,16 +304,60 @@ mod tests {
     }
 
     #[test]
-    fn global_order_interleaves_functions() {
+    fn arrival_order_interleaves_functions() {
         let mut pq = PendingQueue::new();
         pq.push(10, 1);
         pq.push(11, 0);
         pq.push(12, 1);
-        assert_eq!(pq.pop_oldest(), Some((10, 1)));
-        assert_eq!(pq.pop_oldest(), Some((11, 0)));
-        assert_eq!(pq.pop_oldest(), Some((12, 1)));
-        assert_eq!(pq.pop_oldest(), None);
+        assert_eq!(pq.pop_arrival(), Some((10, 1)));
+        assert_eq!(pq.pop_arrival(), Some((11, 0)));
+        assert_eq!(pq.pop_arrival(), Some((12, 1)));
+        assert_eq!(pq.pop_arrival(), None);
         assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn fair_pop_round_robins_across_functions() {
+        // Function 0 monopolizes the arrival order; DRR still alternates.
+        let mut pq = PendingQueue::with_layout(3, &[]);
+        for rid in 0..4 {
+            pq.push(rid, 0);
+        }
+        pq.push(4, 2);
+        pq.push(5, 2);
+        let order: Vec<(u64, FunctionId)> = std::iter::from_fn(|| pq.pop_fair()).collect();
+        assert_eq!(order, vec![(0, 0), (4, 2), (1, 0), (5, 2), (2, 0), (3, 0)]);
+        assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn fair_pop_honors_weights() {
+        // Weight 2 on function 1: it serves two per visit.
+        let mut pq = PendingQueue::with_layout(2, &[(1, 2)]);
+        for rid in 0..3 {
+            pq.push(rid, 0);
+        }
+        for rid in 3..7 {
+            pq.push(rid, 1);
+        }
+        let order: Vec<FunctionId> =
+            std::iter::from_fn(|| pq.pop_fair()).map(|(_, f)| f).collect();
+        assert_eq!(order, vec![0, 1, 1, 0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn fair_pop_filter_skips_ineligible_functions() {
+        let mut pq = PendingQueue::with_layout(3, &[]);
+        pq.push(0, 0);
+        pq.push(1, 1);
+        pq.push(2, 2);
+        // Only function 1 is eligible.
+        assert_eq!(pq.pop_fair_where(|f| f == 1), Some((1, 1)));
+        assert_eq!(pq.pop_fair_where(|f| f == 1), None, "nothing eligible left");
+        assert_eq!(pq.len(), 2, "ineligible requests stay parked");
+        // Arrival-order variant honors the same filter.
+        assert_eq!(pq.pop_arrival_where(|f| f == 2), Some((2, 2)));
+        assert_eq!(pq.pop_arrival(), Some((0, 0)));
     }
 
     #[test]
@@ -171,9 +373,11 @@ mod tests {
         // The per-function pop skips the cancelled id.
         assert_eq!(pq.pop_fn(3), Some(0));
         assert_eq!(pq.pop_fn(3), Some(2));
-        // The global mirror's stale entries are skipped too.
+        // Both drain orders skip stale entries too.
         pq.push(4, 1);
-        assert_eq!(pq.pop_oldest(), Some((4, 1)));
+        pq.push(5, 1);
+        assert!(pq.cancel(4, 1));
+        assert_eq!(pq.pop_fair(), Some((5, 1)));
         assert!(pq.is_empty());
     }
 
@@ -182,15 +386,35 @@ mod tests {
         let mut pq = PendingQueue::new();
         pq.push(0, 0);
         pq.push(1, 1);
-        // Claimed through the per-function view; the global mirror must
-        // not hand it out again.
+        // Claimed through the per-function view; the drains must not hand
+        // it out again.
         assert_eq!(pq.pop_fn(0), Some(0));
-        assert_eq!(pq.pop_oldest(), Some((1, 1)));
-        assert_eq!(pq.pop_oldest(), None);
+        assert_eq!(pq.pop_fair(), Some((1, 1)));
+        assert_eq!(pq.pop_fair(), None);
         // And the other way around.
         pq.push(2, 1);
-        assert_eq!(pq.pop_oldest(), Some((2, 1)));
+        assert_eq!(pq.pop_arrival(), Some((2, 1)));
         assert_eq!(pq.pop_fn(1), None);
         assert_eq!(pq.len(), 0);
+    }
+
+    #[test]
+    fn emptied_queue_forfeits_deficit() {
+        // Weight 3 on function 0, but only one request: after it drains,
+        // the unused credit must not leak into the next burst.
+        let mut pq = PendingQueue::with_layout(2, &[(0, 3)]);
+        pq.push(0, 0);
+        pq.push(1, 1);
+        assert_eq!(pq.pop_fair(), Some((0, 0)));
+        assert_eq!(pq.pop_fair(), Some((1, 1)));
+        // New burst: function 0 recharges from zero (3 credits), serving
+        // three in a row before yielding.
+        for rid in 2..6 {
+            pq.push(rid, 0);
+        }
+        pq.push(6, 1);
+        let order: Vec<FunctionId> =
+            std::iter::from_fn(|| pq.pop_fair()).map(|(_, f)| f).collect();
+        assert_eq!(order, vec![0, 0, 0, 1, 0]);
     }
 }

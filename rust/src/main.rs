@@ -63,6 +63,9 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("scale-events", None, "scheduled-policy events, e.g. '60;120;-150'")
         .opt("shards", None, "event-core shards (OS threads; 1 = serial engine)")
         .opt("dispatch", None, "dispatch protocol mode (push|pull)")
+        .opt("queue-cap", None, "per-function pending-queue admission cap (0 = unbounded)")
+        .opt("queue-caps", None, "per-function cap overrides, e.g. '0:4;7:64'")
+        .opt("max-wait", None, "pull wait-deadline upper bound in seconds")
         .opt("seed", None, "experiment seed")
 }
 
@@ -99,6 +102,17 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     }
     if let Some(m) = args.get("dispatch") {
         cfg.dispatch.mode = m.to_string();
+    }
+    if let Some(v) = args.get("queue-cap") {
+        cfg.dispatch.queue_cap =
+            v.parse().map_err(|_| "--queue-cap: integer expected".to_string())?;
+    }
+    if let Some(v) = args.get("queue-caps") {
+        cfg.dispatch.queue_caps = v.to_string();
+    }
+    if let Some(v) = args.get("max-wait") {
+        cfg.dispatch.max_wait_s =
+            v.parse().map_err(|_| "--max-wait: number expected".to_string())?;
     }
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;
@@ -306,6 +320,7 @@ fn cmd_export(argv: &[String]) -> i32 {
         ("fig16_cumulative.csv", export::cumulative_csv(&all)),
         ("autoscale_timeline.csv", export::scaling_timeline_csv(&all)),
         ("pending_depth.csv", export::pending_depth_csv(&all)),
+        ("dispatch_fairness.csv", export::per_function_csv(&mut all)),
         ("summary.csv", export::summary_csv(&mut all)),
     ];
     for (name, content) in files {

@@ -34,6 +34,11 @@ pub struct RunMetrics {
     /// separately from `issued`/`completed` so rejects never silently
     /// vanish from the latency percentiles.
     pub rejected: u64,
+    /// Admission rejects split by function (indexed by `FunctionId`,
+    /// grown on demand): per-function caps isolate rejects to the
+    /// function that overflows, and this is where that shows. Sums to
+    /// `rejected`.
+    pub rejected_by_fn: Vec<u64>,
     /// Requests that were parked in the router's pending queue
     /// (`Decision::Enqueue`, pull dispatch).
     pub enqueued: u64,
@@ -42,6 +47,11 @@ pub struct RunMetrics {
     pub stolen: u64,
     /// Pending-queue wait per parked request, ms (arrival → worker bind).
     pub pending_wait_ms: Samples,
+    /// Pending-queue waits split by function (indexed by `FunctionId`,
+    /// grown on demand) — the fairness diagnostic: a starved function
+    /// shows up as a heavy per-function tail long before it moves the
+    /// pooled percentiles.
+    pub pending_wait_by_fn_ms: Vec<Samples>,
     /// Pending-queue depth timeline, sampled at the keep-alive sweep tick
     /// (pull dispatch only; empty otherwise).
     pub pending_timeline: Vec<(f64, usize)>,
@@ -90,9 +100,11 @@ impl RunMetrics {
             cold_series: TimeSeries::new(1.0),
             queue_delay_ms: OnlineStats::new(),
             rejected: 0,
+            rejected_by_fn: Vec::new(),
             enqueued: 0,
             stolen: 0,
             pending_wait_ms: Samples::new(),
+            pending_wait_by_fn_ms: Vec::new(),
             pending_timeline: Vec::new(),
             peak_pending: 0,
             scaling_timeline: Vec::new(),
@@ -132,9 +144,18 @@ impl RunMetrics {
         self.issued += 1;
     }
 
-    /// One request was refused by admission control.
-    pub fn record_reject(&mut self) {
+    /// One request for function `f` was refused by admission control.
+    pub fn record_reject(&mut self, f: usize) {
         self.rejected += 1;
+        if f >= self.rejected_by_fn.len() {
+            self.rejected_by_fn.resize(f + 1, 0);
+        }
+        self.rejected_by_fn[f] += 1;
+    }
+
+    /// Admission rejects recorded for function `f`.
+    pub fn reject_count_fn(&self, f: usize) -> u64 {
+        self.rejected_by_fn.get(f).copied().unwrap_or(0)
     }
 
     /// One request was parked in the pending queue, which now holds
@@ -146,9 +167,22 @@ impl RunMetrics {
         }
     }
 
-    /// A parked request was bound to a worker after waiting `wait_s`.
-    pub fn record_pending_wait(&mut self, wait_s: f64) {
+    /// A parked request for function `f` was bound to a worker after
+    /// waiting `wait_s`.
+    pub fn record_pending_wait(&mut self, f: usize, wait_s: f64) {
         self.pending_wait_ms.push(wait_s * 1000.0);
+        if f >= self.pending_wait_by_fn_ms.len() {
+            self.pending_wait_by_fn_ms.resize_with(f + 1, Samples::new);
+        }
+        self.pending_wait_by_fn_ms[f].push(wait_s * 1000.0);
+    }
+
+    /// p99 pending wait in ms for function `f` (0 when it never parked).
+    pub fn pending_wait_p99_fn_ms(&mut self, f: usize) -> f64 {
+        match self.pending_wait_by_fn_ms.get_mut(f) {
+            Some(s) if !s.is_empty() => s.percentile(99.0),
+            _ => 0.0,
+        }
     }
 
     /// Pending-queue depth sample at time `t` (1 Hz in pull mode).
@@ -270,9 +304,22 @@ impl RunMetrics {
         self.cold_series.merge_add(&other.cold_series);
         self.queue_delay_ms.merge(&other.queue_delay_ms);
         self.rejected += other.rejected;
+        if other.rejected_by_fn.len() > self.rejected_by_fn.len() {
+            self.rejected_by_fn.resize(other.rejected_by_fn.len(), 0);
+        }
+        for (acc, &c) in self.rejected_by_fn.iter_mut().zip(&other.rejected_by_fn) {
+            *acc += c;
+        }
         self.enqueued += other.enqueued;
         self.stolen += other.stolen;
         self.pending_wait_ms.merge_from(&other.pending_wait_ms);
+        if other.pending_wait_by_fn_ms.len() > self.pending_wait_by_fn_ms.len() {
+            self.pending_wait_by_fn_ms
+                .resize_with(other.pending_wait_by_fn_ms.len(), Samples::new);
+        }
+        for (acc, s) in self.pending_wait_by_fn_ms.iter_mut().zip(&other.pending_wait_by_fn_ms) {
+            acc.merge_from(s);
+        }
         self.pending_timeline = merge_timelines(&self.pending_timeline, &other.pending_timeline);
         self.peak_pending += other.peak_pending;
         self.scaling_timeline = merge_timelines(&self.scaling_timeline, &other.scaling_timeline);
@@ -292,6 +339,23 @@ impl RunMetrics {
         let p90 = self.latency_percentile_ms(90.0);
         let p95 = self.latency_percentile_ms(95.0);
         let p99 = self.latency_percentile_ms(99.0);
+        // Per-function admission/wait breakdowns as sparse [id, value]
+        // pairs (functions with nothing to report are omitted, so push
+        // runs emit empty arrays).
+        let rejects_by_fn: Vec<Json> = self
+            .rejected_by_fn
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(f, &c)| Json::Arr(vec![(f as u64).into(), c.into()]))
+            .collect();
+        let mut p99_wait_by_fn: Vec<Json> = Vec::new();
+        for f in 0..self.pending_wait_by_fn_ms.len() {
+            if !self.pending_wait_by_fn_ms[f].is_empty() {
+                let p = self.pending_wait_by_fn_ms[f].percentile(99.0);
+                p99_wait_by_fn.push(Json::Arr(vec![(f as u64).into(), p.into()]));
+            }
+        }
         obj(vec![
             ("scheduler", self.scheduler.as_str().into()),
             ("vus", self.vus.into()),
@@ -318,6 +382,8 @@ impl RunMetrics {
             ("stolen", self.stolen.into()),
             ("mean_pending_wait_ms", self.mean_pending_wait_ms().into()),
             ("peak_pending", self.peak_pending.into()),
+            ("rejects_by_fn", Json::Arr(rejects_by_fn)),
+            ("p99_pending_wait_by_fn_ms", Json::Arr(p99_wait_by_fn)),
         ])
     }
 }
@@ -453,34 +519,46 @@ mod tests {
         assert_eq!(m.reject_rate(), 0.0, "no traffic -> rate 0");
         m.record_assignment(0, 0.5);
         m.record_response(0.1, false, 0.0, 1.0);
-        m.record_reject();
-        m.record_reject();
+        m.record_reject(4);
+        m.record_reject(4);
         m.record_enqueue(1);
         m.record_enqueue(3);
-        m.record_pending_wait(0.2);
+        m.record_pending_wait(7, 0.2);
         m.record_pending_depth(1.0, 3);
         assert_eq!(m.rejected, 2);
+        assert_eq!(m.reject_count_fn(4), 2, "rejects attribute to their function");
+        assert_eq!(m.reject_count_fn(0), 0);
         assert_eq!(m.enqueued, 2);
         assert_eq!(m.peak_pending, 3);
         assert!((m.reject_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.pending_wait_p99_fn_ms(7) - 200.0).abs() < 1e-9);
+        assert_eq!(m.pending_wait_p99_fn_ms(0), 0.0, "never-parked function reports 0");
         // Rejects never contaminate the latency samples.
         assert_eq!(m.latency_ms.len(), 1);
         let j = m.summary_json();
         assert_eq!(j.get("rejected").unwrap().as_u64(), Some(2));
         assert!(j.get("reject_rate").unwrap().as_f64().unwrap() > 0.6);
         assert_eq!(j.get("peak_pending").unwrap().as_u64(), Some(3));
-        // Merge sums the new counters and unions the wait samples.
+        // Per-function breakdowns surface as sparse [id, value] pairs.
+        let rej = j.get("rejects_by_fn").unwrap();
+        assert_eq!(rej.to_string_compact(), "[[4,2]]");
+        assert!(j.get("p99_pending_wait_by_fn_ms").is_some());
+        // Merge sums the new counters and unions the wait samples,
+        // per-function tables included.
         let mut b = RunMetrics::new("hiku", 2, 10, 10.0);
-        b.record_reject();
+        b.record_reject(9);
         b.record_enqueue(5);
-        b.record_pending_wait(0.4);
+        b.record_pending_wait(7, 0.4);
         b.stolen = 1;
         m.merge(&b);
         assert_eq!(m.rejected, 3);
+        assert_eq!(m.reject_count_fn(4), 2);
+        assert_eq!(m.reject_count_fn(9), 1);
         assert_eq!(m.enqueued, 3);
         assert_eq!(m.stolen, 1);
         assert_eq!(m.peak_pending, 8);
         assert_eq!(m.pending_wait_ms.len(), 2);
+        assert_eq!(m.pending_wait_by_fn_ms[7].len(), 2);
     }
 
     #[test]

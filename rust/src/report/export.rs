@@ -122,6 +122,51 @@ pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
     )
 }
 
+/// Dispatch-fairness breakdown — columns (scheduler, run, function,
+/// rejected, parked, mean_wait_ms, p99_wait_ms), one row per function
+/// that was rejected or parked at least once. This is the per-function
+/// view behind the pooled `rejected`/`mean_pending_wait_ms` scalars: a
+/// monopolizing function shows up as a single heavy row instead of
+/// disappearing into the pool, and per-function caps show their reject
+/// isolation here. Push-mode runs contribute no rows.
+pub fn per_function_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
+    let mut rows = Vec::new();
+    for (sched, ms) in runs.iter_mut() {
+        for (i, m) in ms.iter_mut().enumerate() {
+            let functions =
+                m.rejected_by_fn.len().max(m.pending_wait_by_fn_ms.len());
+            for f in 0..functions {
+                let rejected = m.reject_count_fn(f);
+                let parked =
+                    m.pending_wait_by_fn_ms.get(f).map(|s| s.seen()).unwrap_or(0);
+                if rejected == 0 && parked == 0 {
+                    continue;
+                }
+                let mean = m
+                    .pending_wait_by_fn_ms
+                    .get(f)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.mean())
+                    .unwrap_or(0.0);
+                let p99 = m.pending_wait_p99_fn_ms(f);
+                rows.push(vec![
+                    sched.clone(),
+                    i.to_string(),
+                    f.to_string(),
+                    rejected.to_string(),
+                    parked.to_string(),
+                    format!("{mean:.2}"),
+                    format!("{p99:.2}"),
+                ]);
+            }
+        }
+    }
+    to_csv(
+        &["scheduler", "run", "function", "rejected", "parked", "mean_wait_ms", "p99_wait_ms"],
+        &rows,
+    )
+}
+
 /// Dispatch-protocol pending-depth timeline — columns
 /// (scheduler, time_s, pending). One series per scheduler (first run);
 /// push-mode runs contribute no rows (the timeline is pull-only).
@@ -199,6 +244,29 @@ mod tests {
         let csv = pending_depth_csv(&runs);
         assert_eq!(csv.lines().count(), 1, "push mode has no pending timeline");
         assert_eq!(csv.lines().next().unwrap(), "scheduler,time_s,pending");
+    }
+
+    #[test]
+    fn per_function_csv_reports_only_active_functions() {
+        // Push runs have nothing per-function to report.
+        let mut runs = tiny_runs();
+        let csv = per_function_csv(&mut runs);
+        assert_eq!(csv.lines().count(), 1, "push mode has no per-function rows");
+        // Synthetic pull-run metrics: one rejecting function, one parked.
+        let mut m = RunMetrics::new("hiku", 2, 5, 10.0);
+        m.record_reject(3);
+        m.record_reject(3);
+        m.record_pending_wait(1, 0.25);
+        let mut runs = vec![("hiku".to_string(), vec![m])];
+        let csv = per_function_csv(&mut runs);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(
+            lines[0],
+            "scheduler,run,function,rejected,parked,mean_wait_ms,p99_wait_ms"
+        );
+        assert_eq!(lines.len(), 3, "one row per active function");
+        assert_eq!(lines[1], "hiku,0,1,0,1,250.00,250.00");
+        assert_eq!(lines[2], "hiku,0,3,2,0,0.00,0.00");
     }
 
     #[test]

@@ -150,6 +150,45 @@ pub fn bursty_trace(num_functions: usize, duration_s: f64, seed: u64) -> OpenLoo
     OpenLoopTrace::from_synthetic(&invocations, num_functions)
 }
 
+/// Hot-function monopoly trace for the dispatch fairness experiments
+/// (shared by `benches/ablation_dispatch.rs` and `tests/dispatch.rs` so
+/// the CI bench gate measures exactly the scenario the tests prove):
+/// chameleon (f=0, 392 ms warm) at `hot_rate` req/s plus a pair of dd
+/// arrivals (f=1, 549 ms warm) every 0.5 s whose second member parks
+/// behind the first.
+///
+/// With `sharded = true` every load arrival is preceded by a light
+/// filler arrival (four linpack copies round-robin — non-overlapping,
+/// so the filler shard never parks), making arrival-index parity the
+/// 2-shard assignment: even indices feed the pending-free recipient
+/// shard 0, odd indices overload the donor shard 1. Deterministic; no
+/// RNG involved.
+pub fn monopoly_trace(hot_rate: f64, duration_s: f64, sharded: bool) -> OpenLoopTrace {
+    const FILLER: [usize; 4] = [5, 13, 21, 29]; // linpack copies, 58 ms warm
+    let mut arr: Vec<(f64, usize)> = Vec::new();
+    let mut k = 0usize;
+    let push = |arr: &mut Vec<(f64, usize)>, k: &mut usize, t: f64, f: usize| {
+        if sharded {
+            arr.push((t, FILLER[*k % FILLER.len()]));
+            *k += 1;
+        }
+        arr.push((t, f));
+    };
+    let dt = 1.0 / hot_rate;
+    let mut t = 0.05;
+    let mut next_bg = 0.30;
+    while t < duration_s {
+        push(&mut arr, &mut k, t, 0);
+        if t >= next_bg {
+            push(&mut arr, &mut k, t, 1);
+            push(&mut arr, &mut k, t, 1);
+            next_bg += 0.5;
+        }
+        t += dt;
+    }
+    OpenLoopTrace::from_synthetic(&arr, 40)
+}
+
 /// Autoscale policy comparison: policies x schedulers on the bursty trace,
 /// reporting the cost/quality trade-off — cold-start rate and latency
 /// against worker-seconds (the cost proxy) and pre-warm speculation

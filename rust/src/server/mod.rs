@@ -86,6 +86,33 @@ fn spawn_worker(
     })
 }
 
+/// Bind a parked request `rid` (function `f`) to worker `w`: load and
+/// inflight bookkeeping, assignment/wait metrics, the dispatch stamp the
+/// adaptive-wait EWMAs read, and the send. The single definition keeps
+/// the three claim paths — deadline drain, warm claim, idle-capacity
+/// claim — from drifting apart.
+#[allow(clippy::too_many_arguments)]
+fn bind_parked(
+    rid: u64,
+    f: usize,
+    w: usize,
+    loads: &mut [u32],
+    inflight_f: &mut [usize],
+    dispatched: &mut [Instant],
+    arrival: &[Instant],
+    metrics: &mut RunMetrics,
+    start: Instant,
+    work_tx: &[mpsc::Sender<ExecMsg>],
+    payload_of: &[String],
+) -> Result<(), String> {
+    loads[w] += 1;
+    inflight_f[f] += 1;
+    metrics.record_assignment(w, start.elapsed().as_secs_f64());
+    metrics.record_pending_wait(f, arrival[rid as usize].elapsed().as_secs_f64());
+    dispatched[rid as usize] = Instant::now();
+    send_to(work_tx, payload_of, rid, f, w)
+}
+
 /// Dispatch one execution message to worker `w`.
 fn send_to(
     work_tx: &[mpsc::Sender<ExecMsg>],
@@ -111,9 +138,15 @@ fn send_to(
 /// The dispatch protocol applies here too: under `dispatch.mode = "pull"`
 /// requests with a warm prospect park in the router's pending queue,
 /// completing workers claim them, and wall-clock wait deadlines
-/// force-place stragglers; `dispatch.queue_cap` rejects are metered in
-/// the same metrics as the simulator's. A request then counts as
-/// *resolved* when it completes or is rejected — the run serves
+/// force-place stragglers. The fair-dispatcher semantics match the
+/// simulator's: admission caps are per function (`dispatch.queue_cap` +
+/// `dispatch.queue_caps`, rejects metered per function), idle capacity
+/// claims prospect-less backlog in deficit-round-robin order
+/// (`dispatch.fair`/`dispatch.weights`), and with
+/// `dispatch.adaptive_wait` each function's wall-clock deadline is
+/// `min(max_wait_s, ewma_cold_latency − ewma_warm_latency)` — the
+/// observed cost of the cold start waiting might avoid. A request counts
+/// as *resolved* when it completes or is rejected — the run serves
 /// `n_requests` resolutions. (Scale-to-zero stays sim-only: the PJRT
 /// worker pool never drops below one active worker.)
 pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
@@ -196,6 +229,12 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     let mut rejected = 0usize;
     // Per-request bookkeeping.
     let mut arrival: Vec<Instant> = Vec::new();
+    // When the request was handed to a worker (== arrival for immediate
+    // assigns; re-stamped when a parked request is claimed or
+    // force-placed). The adaptive-wait EWMAs read dispatch -> response,
+    // NOT arrival -> response: end-to-end latency would include the
+    // pending wait itself and self-inflate the cold-warm delta.
+    let mut dispatched: Vec<Instant> = Vec::new();
     let mut vu_of: Vec<usize> = Vec::new();
     let mut step_of: Vec<usize> = Vec::new();
     let mut fn_of: Vec<usize> = Vec::new();
@@ -204,9 +243,27 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     let mut wake: Vec<(Instant, usize)> = (0..vus).map(|v| (start, v)).collect();
     // Pull dispatch: router pending queue + wall-clock wait deadlines.
     let pull = cfg.pull_dispatch();
-    let mut pending_q = PendingQueue::new();
+    let fair = cfg.dispatch.fair;
+    let mut pending_q =
+        PendingQueue::with_layout(registry.len(), &cfg.dispatch.weights_sparse());
+    let cap_f = cfg.dispatch.caps_dense(registry.len());
     let mut deadlines: Vec<(Instant, u64)> = Vec::new();
     let mut inflight_f = vec![0usize; registry.len()];
+    // Adaptive waiting: per-function EWMAs of observed cold and warm
+    // response latency; their delta is the cold penalty waiting can
+    // avoid, and it caps the wall-clock wait deadline.
+    let mut cold_lat_ewma = vec![0.0f64; registry.len()];
+    let mut warm_lat_ewma = vec![0.0f64; registry.len()];
+    let adaptive = cfg.dispatch.adaptive_wait;
+    let wait_for = |f: usize, cold: &[f64], warm: &[f64]| -> f64 {
+        let base = cfg.dispatch.max_wait_s;
+        if !adaptive || cold[f] <= 0.0 || warm[f] <= 0.0 {
+            return base;
+        }
+        // Floor at 1 ms: a noisy non-positive delta means "no observed
+        // cold penalty", i.e. waiting cannot pay — place almost at once.
+        base.min((cold[f] - warm[f]).max(0.001))
+    };
 
     while completed + rejected < n_requests {
         // Autoscale control tick (wall clock). The policy only ever moves
@@ -247,7 +304,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
         }
         // Pull dispatch: force-place parked requests whose wait deadline
         // passed (warm if the completing workers re-advertised, fallback
-        // placement otherwise).
+        // placement otherwise). Like the simulator, an expired deadline
+        // drains its function's queue oldest-first up to the expired
+        // request, so adaptive deadlines never reorder a function's line.
         if pull && !deadlines.is_empty() {
             let now = Instant::now();
             let mut i = 0;
@@ -258,18 +317,32 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 }
                 let (_, rid) = deadlines.swap_remove(i);
                 let f = fn_of[rid as usize];
-                if !pending_q.cancel(rid, f) {
+                if !pending_q.is_waiting(rid) {
                     continue; // already claimed by an idle worker
                 }
-                let w = {
-                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                    scheduler.select(f, &mut ctx)
-                };
-                loads[w] += 1;
-                inflight_f[f] += 1;
-                metrics.record_assignment(w, start.elapsed().as_secs_f64());
-                metrics.record_pending_wait(arrival[rid as usize].elapsed().as_secs_f64());
-                send_to(&work_tx, &payload_of, rid, f, w)?;
+                loop {
+                    let Some(head) = pending_q.pop_fn(f) else { break };
+                    let w = {
+                        let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                        scheduler.select(f, &mut ctx)
+                    };
+                    bind_parked(
+                        head,
+                        f,
+                        w,
+                        &mut loads,
+                        &mut inflight_f,
+                        &mut dispatched,
+                        &arrival,
+                        &mut metrics,
+                        start,
+                        &work_tx,
+                        &payload_of,
+                    )?;
+                    if head == rid {
+                        break;
+                    }
+                }
             }
         }
         // Wake any due VUs (issue their next request).
@@ -299,24 +372,25 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 };
                 let refuse = match decision {
                     Decision::Reject(_) => true,
-                    // An Enqueue against a full queue (or outside the
-                    // pull protocol) is an admission refusal.
+                    // An Enqueue against a full per-function queue (or
+                    // outside the pull protocol) is an admission refusal
+                    // — the cap isolates the overflow to this function.
                     Decision::Enqueue => {
-                        !pull
-                            || (cfg.dispatch.queue_cap > 0
-                                && pending_q.len() >= cfg.dispatch.queue_cap)
+                        !pull || (cap_f[f] > 0 && pending_q.len_fn(f) >= cap_f[f])
                     }
                     Decision::Assign(_) => false,
                 };
                 if refuse {
-                    metrics.record_reject();
+                    metrics.record_reject(f);
                     rejected += 1;
                     // The VU observes the refusal and thinks on.
                     let think = workload.vus[vu].steps[step].think_s;
                     vu_step[vu] = step + 1;
                     wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
                 } else {
-                    arrival.push(Instant::now());
+                    let now = Instant::now();
+                    arrival.push(now);
+                    dispatched.push(now);
                     vu_of.push(vu);
                     step_of.push(step);
                     fn_of.push(f);
@@ -330,11 +404,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         _ => {
                             pending_q.push(rid, f);
                             metrics.record_enqueue(pending_q.len());
-                            deadlines.push((
-                                Instant::now()
-                                    + Duration::from_secs_f64(cfg.dispatch.max_wait_s),
-                                rid,
-                            ));
+                            let wait = wait_for(f, &cold_lat_ewma, &warm_lat_ewma);
+                            deadlines
+                                .push((Instant::now() + Duration::from_secs_f64(wait), rid));
                         }
                     }
                 }
@@ -384,25 +456,78 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         };
                         if let Pull::Function(pf) = p {
                             if let Some(rid2) = pending_q.pop_fn(pf) {
-                                let w = r.worker;
-                                loads[w] += 1;
-                                inflight_f[pf] += 1;
-                                metrics.record_assignment(w, start.elapsed().as_secs_f64());
-                                metrics.record_pending_wait(
-                                    arrival[rid2 as usize].elapsed().as_secs_f64(),
-                                );
-                                send_to(&work_tx, &payload_of, rid2, pf, w)?;
+                                bind_parked(
+                                    rid2,
+                                    pf,
+                                    r.worker,
+                                    &mut loads,
+                                    &mut inflight_f,
+                                    &mut dispatched,
+                                    &arrival,
+                                    &mut metrics,
+                                    start,
+                                    &work_tx,
+                                    &payload_of,
+                                )?;
                                 claimed = true;
                             }
                         }
                     }
                     if !claimed {
-                        let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                        scheduler.on_complete(r.worker, r.function, &mut ctx);
+                        {
+                            let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                            scheduler.on_complete(r.worker, r.function, &mut ctx);
+                        }
+                        // Idle-capacity fairness claim (same rule as the
+                        // simulator): serve the backlog's next request
+                        // among functions whose warm prospect is gone, in
+                        // DRR order — the advertisement above survives.
+                        if pull && !pending_q.is_empty() {
+                            let eligible = |g: usize| inflight_f[g] == 0;
+                            let got = if fair {
+                                pending_q.pop_fair_where(eligible)
+                            } else {
+                                pending_q.pop_arrival_where(eligible)
+                            };
+                            if let Some((rid2, pf)) = got {
+                                bind_parked(
+                                    rid2,
+                                    pf,
+                                    r.worker,
+                                    &mut loads,
+                                    &mut inflight_f,
+                                    &mut dispatched,
+                                    &arrival,
+                                    &mut metrics,
+                                    start,
+                                    &work_tx,
+                                    &payload_of,
+                                )?;
+                            }
+                        }
                     }
                 }
                 let rid = r.rid as usize;
                 let lat = arrival[rid].elapsed().as_secs_f64();
+                if pull {
+                    // Feed the adaptive-deadline EWMAs from the
+                    // dispatch -> response latency: the cold−warm delta
+                    // of the *service* is the observed cold penalty.
+                    // (End-to-end latency would include the pending wait
+                    // and self-inflate the delta.)
+                    const WAIT_ALPHA: f64 = 0.2;
+                    let service_lat = dispatched[rid].elapsed().as_secs_f64();
+                    let e = if r.cold {
+                        &mut cold_lat_ewma[r.function]
+                    } else {
+                        &mut warm_lat_ewma[r.function]
+                    };
+                    *e = if *e > 0.0 {
+                        WAIT_ALPHA * service_lat + (1.0 - WAIT_ALPHA) * *e
+                    } else {
+                        service_lat
+                    };
+                }
                 metrics.record_response(lat, r.cold, 0.0, start.elapsed().as_secs_f64());
                 debug_assert!(r.digest.iter().all(|d| d.is_finite()));
                 completed += 1;

@@ -15,10 +15,26 @@
 //! pre-protocol engine — while `"pull"` makes the paper's pull loop
 //! first-class: requests with a warm prospect park in the router-owned
 //! [`crate::dispatch::PendingQueue`], idle workers claim them via `on_worker_idle`, a
-//! `PullDeadline` event force-places stragglers, `dispatch.queue_cap`
-//! bounds admission (rejects are metered, never silently dropped), and
+//! `PullDeadline` event force-places stragglers, and
 //! `autoscale.min_workers = 0` lets the cluster park entirely with a
 //! queue-triggered `Wake` event (DESIGN.md §8).
+//!
+//! The pull router is a **per-function fair dispatcher**:
+//! - admission is bounded *per function* (`dispatch.queue_cap` default +
+//!   `dispatch.queue_caps` overrides), so one hot function's overflow
+//!   rejects only itself (rejects are metered per function, never
+//!   silently dropped);
+//! - backlog drains (wake flushes, cross-shard steal donation, and
+//!   idle-capacity claims of prospect-less requests) pop in
+//!   deficit-round-robin order over the function queues
+//!   (`dispatch.weights`; `dispatch.fair = false` restores the PR 4
+//!   arrival-order FIFO as the ablation baseline);
+//! - wait deadlines are cost-aware per function
+//!   (`dispatch.adaptive_wait`): `min(max_wait_s, ewma cold penalty)`,
+//!   where the EWMA tracks the observed cold−warm start delta;
+//! - a scale-to-zero `Wake` restores `⌈backlog / concurrency⌉` workers
+//!   at once before flushing, so bursts into an empty cluster do not
+//!   serialize behind a single woken worker.
 //!
 //! Beyond the paper's base protocol the engine supports three extensions
 //! used by the ablation benches:
@@ -175,8 +191,22 @@ pub struct Simulation<'a> {
     /// mode leaves every field below untouched and is bit-identical to
     /// the pre-protocol engine.
     pull: bool,
-    /// Router-owned pending queue behind `Decision::Enqueue`.
+    /// Router-owned pending queue behind `Decision::Enqueue` (DRR state
+    /// seeded from `dispatch.weights`).
     pending: PendingQueue,
+    /// Fair (DRR) backlog draining on (`dispatch.fair`); false restores
+    /// the PR 4 global arrival-order FIFO for flushes/steals/claims.
+    fair: bool,
+    /// Cost-aware deadlines on (`dispatch.adaptive_wait`).
+    adaptive_wait: bool,
+    /// Per-function admission caps on the pending queue
+    /// (`dispatch.queue_cap` default + `dispatch.queue_caps` overrides;
+    /// 0 = unbounded).
+    cap_f: Vec<usize>,
+    /// EWMA of the observed per-function cold-start penalty (the init
+    /// sample added to cold executions), seconds; 0 = no observation yet.
+    /// Sizes the adaptive pull deadline `min(max_wait_s, ewma)`.
+    cold_penalty_ewma: Vec<f64>,
     /// Executions of each function currently running (the warm-prospect
     /// signal handed to `decide` via `DispatchCtx`). Pull mode only.
     inflight_f: Vec<usize>,
@@ -247,7 +277,14 @@ impl<'a> Simulation<'a> {
             batch_buf: Vec::new(),
             batch_ids: Vec::new(),
             pull: cfg.pull_dispatch(),
-            pending: PendingQueue::new(),
+            pending: PendingQueue::with_layout(
+                registry.len(),
+                &cfg.dispatch.weights_sparse(),
+            ),
+            fair: cfg.dispatch.fair,
+            adaptive_wait: cfg.dispatch.adaptive_wait,
+            cap_f: cfg.dispatch.caps_dense(registry.len()),
+            cold_penalty_ewma: vec![0.0; registry.len()],
             inflight_f: vec![0; registry.len()],
             wake_armed: false,
             min_active: if cfg.pull_dispatch() && cfg.autoscale.min_workers == 0 { 0 } else { 1 },
@@ -522,14 +559,17 @@ impl<'a> Simulation<'a> {
         self.pending.len()
     }
 
-    /// Extract up to `k` parked requests, oldest first, for a cross-shard
-    /// handoff (`ShardMsg::Handoff`). The local bookkeeping forgets them:
-    /// their deadline events become no-ops and the receiving shard
-    /// re-issues them under its own request ids.
+    /// Extract up to `k` parked requests for a cross-shard handoff
+    /// (`ShardMsg::Handoff`), in deficit-round-robin order over the
+    /// function queues (`dispatch.fair`, the default) so a hot function
+    /// cannot monopolize every donation — arrival order with
+    /// `dispatch.fair = false`. The local bookkeeping forgets them: their
+    /// deadline events become no-ops and the receiving shard re-issues
+    /// them under its own request ids.
     pub(crate) fn extract_stolen(&mut self, k: usize) -> Vec<StolenTask> {
         let mut out = Vec::with_capacity(k);
         for _ in 0..k {
-            let Some((rid, f)) = self.pending.pop_oldest() else { break };
+            let Some((rid, f)) = self.pop_next_pending() else { break };
             let meta = self.requests[rid as usize];
             debug_assert_eq!(meta.function, f);
             out.push(StolenTask {
@@ -588,6 +628,16 @@ impl<'a> Simulation<'a> {
                 self.on_completion_coalesced(worker, sandbox, request, t)
             }
             Event::SweepTick => self.on_sweep(t),
+            Event::Scale { up } => {
+                // Pull dispatch: a scripted scale event that restores the
+                // first worker after scale-to-zero must flush the parked
+                // backlog (the wake path does the same after batching).
+                let was_empty = self.cluster.active_workers() == 0;
+                self.on_scale(up);
+                if self.pull && was_empty && self.cluster.active_workers() > 0 {
+                    self.flush_pending();
+                }
+            }
             Event::KeepAlive { worker, sandbox, epoch } => {
                 // Precise per-sandbox expiry (unused by the default sweep
                 // mode, kept for API completeness).
@@ -595,7 +645,6 @@ impl<'a> Simulation<'a> {
                     self.notify_evict(worker, f);
                 }
             }
-            Event::Scale { up } => self.on_scale(up),
             Event::AutoscaleTick => self.on_autoscale_tick(t),
             Event::PreWarmTick => self.on_prewarm_tick(t),
             Event::PreWarmDone { worker, sandbox } => self.on_prewarm_done(worker, sandbox, t),
@@ -691,16 +740,15 @@ impl<'a> Simulation<'a> {
         );
         if up {
             if active < self.cluster.len() {
-                // Re-activate a previously drained worker slot.
+                // Re-activate a previously drained worker slot. (A 0 -> k
+                // transition's backlog flush is the *caller's* job — wake
+                // batching must restore every worker before flushing.)
                 let id = active;
                 self.set_active(active + 1);
                 for s in &mut self.schedulers {
                     s.on_worker_added(id);
                 }
                 self.metrics.record_scale(self.queue.now(), self.cluster.active_workers());
-                if self.pull && active == 0 {
-                    self.flush_pending();
-                }
                 return;
             }
             let id =
@@ -784,6 +832,7 @@ impl<'a> Simulation<'a> {
                 target,
                 self.cluster.active_workers()
             );
+            let was_empty = self.cluster.active_workers() == 0;
             while self.cluster.active_workers() < target {
                 self.on_scale(true);
             }
@@ -793,6 +842,11 @@ impl<'a> Simulation<'a> {
                 if self.cluster.active_workers() == before {
                     break; // the last worker never drains
                 }
+            }
+            // The policy restored capacity after scale-to-zero: flush the
+            // parked backlog over the *full* restored set.
+            if self.pull && was_empty && self.cluster.active_workers() > 0 {
+                self.flush_pending();
             }
         }
         for (f, n) in decision.prewarm {
@@ -899,16 +953,9 @@ impl<'a> Simulation<'a> {
             if w < active {
                 let si = f % self.schedulers.len();
                 // Pull dispatch: a freshly warmed instance claims a
-                // parked request before it is advertised.
-                if !self.pull || !self.try_pull(w, f, si, t) {
-                    let mut ctx = SchedCtx {
-                        loads: &self.loads[si].loads()[..active],
-                        min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                        rng: &mut self.sched_rng,
-                        dispatch: None,
-                    };
-                    self.schedulers[si].on_complete(w, f, &mut ctx);
-                }
+                // parked request before it is advertised; the freed
+                // capacity then serves prospect-less backlog fairly.
+                self.worker_idle(w, f, si, t);
                 // Keep-alive expiry handled by the periodic SweepTick.
                 let _ = (sandbox, epoch);
             }
@@ -935,8 +982,8 @@ impl<'a> Simulation<'a> {
         // triggers a wake event (pull dispatch only — the config
         // validator guarantees `min_active == 0` implies pull mode).
         if self.pull && active == 0 {
-            if !self.admit() {
-                self.on_reject(vu, step, t);
+            if !self.admit(f) {
+                self.on_reject(vu, step, f, t);
                 return;
             }
             self.park(rid, vu, step, f, si, t);
@@ -985,13 +1032,13 @@ impl<'a> Simulation<'a> {
                 self.start_on(w, rid, f, t);
             }
             Decision::Enqueue => {
-                if self.admit() {
+                if self.admit(f) {
                     self.park(rid, vu, step, f, si, t);
                 } else {
-                    self.on_reject(vu, step, t);
+                    self.on_reject(vu, step, f, t);
                 }
             }
-            Decision::Reject(_) => self.on_reject(vu, step, t),
+            Decision::Reject(_) => self.on_reject(vu, step, f, t),
         }
     }
 
@@ -1010,11 +1057,33 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Admission control: room in the pending queue for one more parked
-    /// request? (`dispatch.queue_cap`; 0 = unbounded.)
-    fn admit(&self) -> bool {
-        let cap = self.cfg.dispatch.queue_cap;
-        cap == 0 || self.pending.len() < cap
+    /// Admission control: room in function `f`'s pending queue for one
+    /// more parked request? The cap is **per function**
+    /// (`dispatch.queue_cap` default, `dispatch.queue_caps` overrides;
+    /// 0 = unbounded), so a hot function overflowing its line cannot
+    /// crowd any other function out of admission.
+    fn admit(&self, f: usize) -> bool {
+        let cap = self.cap_f[f];
+        cap == 0 || self.pending.len_fn(f) < cap
+    }
+
+    /// The wait deadline for a request of `f`: `dispatch.max_wait_s`
+    /// capped by the observed per-function cold-start penalty EWMA when
+    /// `dispatch.adaptive_wait` is on — waiting only pays while the
+    /// expected queue wait is below the cold start it might avoid, so
+    /// the deadline self-tunes per function instead of using one global
+    /// knob (DESIGN.md §8).
+    fn pull_wait_s(&self, f: usize) -> f64 {
+        let base = self.cfg.dispatch.max_wait_s;
+        if !self.adaptive_wait {
+            return base;
+        }
+        let penalty = self.cold_penalty_ewma[f];
+        if penalty > 0.0 {
+            base.min(penalty)
+        } else {
+            base
+        }
     }
 
     /// Park request `rid` in the pending queue with a wait deadline.
@@ -1031,17 +1100,20 @@ impl<'a> Simulation<'a> {
         self.cold_flags.push(false);
         self.queue_delays.push(0.0);
         self.pending.push(rid, f);
+        debug_assert!(
+            self.cap_f[f] == 0 || self.pending.len_fn(f) <= self.cap_f[f],
+            "function {f} parked past its cap"
+        );
         self.metrics.record_enqueue(self.pending.len());
-        self.queue
-            .push_at(t + self.cfg.dispatch.max_wait_s, Event::PullDeadline { request: rid });
+        self.queue.push_at(t + self.pull_wait_s(f), Event::PullDeadline { request: rid });
     }
 
     /// Record a refused request ([`Decision::Reject`] or a full pending
     /// queue) and keep the closed loop alive: the VU observes the
     /// rejection immediately and thinks before its next step. Rejected
     /// requests never enter the latency samples.
-    fn on_reject(&mut self, vu: usize, step: usize, t: f64) {
-        self.metrics.record_reject();
+    fn on_reject(&mut self, vu: usize, step: usize, f: usize, t: f64) {
+        self.metrics.record_reject(f);
         if vu != usize::MAX {
             let think = self.workload.vus[vu].steps[step].think_s;
             let next_t = t + think;
@@ -1066,15 +1138,37 @@ impl<'a> Simulation<'a> {
         let (si, f, arrival) = (meta.sched, meta.function, meta.arrival);
         self.loads[si].inc(w);
         self.metrics.record_assignment(w, t);
-        self.metrics.record_pending_wait(t - arrival);
+        self.metrics.record_pending_wait(f, t - arrival);
         self.start_on(w, rid, f, t);
     }
 
-    /// A parked request's wait deadline expired: force-place it through
-    /// the scheduler's synchronous path (warm if `PQ_f` gained an entry
-    /// in the meantime, fallback placement otherwise). Against an empty
-    /// cluster the deadline re-arms — the wake event flushes the queue as
-    /// soon as capacity returns.
+    /// Force-place one parked request of `f` through the scheduler's
+    /// synchronous path (warm if `PQ_f` gained an entry in the meantime,
+    /// fallback placement otherwise) — the shared tail of the deadline
+    /// drain below.
+    fn force_place_fn(&mut self, rid: u64, f: usize, t: f64) {
+        let active = self.cluster.active_workers();
+        let si = self.requests[rid as usize].sched;
+        let w = {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: None,
+            };
+            self.schedulers[si].select(f, &mut ctx)
+        };
+        self.bind_pending(rid, w, t);
+    }
+
+    /// A parked request's wait deadline expired: force-place function
+    /// `f`'s queue **oldest-first up to and including** the expired
+    /// request. Usually that is exactly the expired request; when
+    /// adaptive deadlines shrink mid-run, a later park can expire first,
+    /// and draining oldest-first preserves within-function FIFO (no
+    /// request overtakes an older sibling). Against an empty cluster the
+    /// deadline re-arms — the wake event flushes the queue as soon as
+    /// capacity returns.
     fn on_pull_deadline(&mut self, rid: u64, t: f64) {
         if !self.pending.is_waiting(rid) {
             return; // already pulled, flushed, or stolen
@@ -1091,52 +1185,98 @@ impl<'a> Simulation<'a> {
                 self.queue.push_at(t, Event::Wake);
             }
             self.queue
-                .push_at(t + self.cfg.dispatch.max_wait_s, Event::PullDeadline { request: rid });
+                .push_at(t + self.pull_wait_s(meta.function), Event::PullDeadline {
+                    request: rid,
+                });
             return;
         }
-        let removed = self.pending.cancel(rid, meta.function);
-        debug_assert!(removed);
-        let w = {
-            let si = meta.sched;
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: None,
-            };
-            self.schedulers[si].select(meta.function, &mut ctx)
-        };
-        self.bind_pending(rid, w, t);
-    }
-
-    /// Scale-to-zero wake: restore one worker (which flushes the pending
-    /// queue). No-op when the autoscaler already restored capacity.
-    fn on_wake(&mut self) {
-        self.wake_armed = false;
-        if self.cluster.active_workers() == 0 {
-            self.on_scale(true);
+        loop {
+            let Some(head) = self.pending.pop_fn(meta.function) else { break };
+            self.force_place_fn(head, meta.function, t);
+            if head == rid {
+                break;
+            }
         }
     }
 
-    /// Force-place every parked request in global arrival order — the
-    /// cluster just regained capacity after scale-to-zero, and the
-    /// backlog must not wait out its deadlines against a live worker.
+    /// Scale-to-zero wake: restore `⌈backlog / concurrency⌉` workers in
+    /// one step, then flush the backlog over the whole restored set — a
+    /// burst into an empty cluster no longer serializes behind a single
+    /// woken worker. Bounded by `autoscale.max_workers` when a
+    /// tick-driven policy manages capacity (it will right-size later);
+    /// without one, only previously-provisioned slots are restored —
+    /// the wake must never *grow* a cluster nothing will ever shrink.
+    /// No-op when the autoscaler already restored capacity.
+    fn on_wake(&mut self) {
+        self.wake_armed = false;
+        if self.cluster.active_workers() > 0 {
+            return;
+        }
+        let conc = self.cfg.cluster.concurrency.max(1);
+        let backlog = self.pending.len().max(1);
+        let managed =
+            self.autoscaler.as_ref().map(|p| p.tick_driven()).unwrap_or(false);
+        let bound = if managed {
+            self.cfg.autoscale.max_workers.max(1)
+        } else {
+            self.cluster.len().max(1)
+        };
+        let target = ((backlog + conc - 1) / conc).clamp(1, bound);
+        while self.cluster.active_workers() < target {
+            let before = self.cluster.active_workers();
+            self.on_scale(true);
+            if self.cluster.active_workers() == before {
+                break;
+            }
+        }
+        self.flush_pending();
+    }
+
+    /// Force-place every parked request — the cluster just regained
+    /// capacity after scale-to-zero, and the backlog must not wait out
+    /// its deadlines against a live worker. Drains in deficit-round-robin
+    /// order over the function queues (`dispatch.fair`, the default;
+    /// DESIGN.md §8), arrival order otherwise.
     fn flush_pending(&mut self) {
         let t = self.queue.now();
-        while let Some((rid, f)) = self.pending.pop_oldest() {
-            let active = self.cluster.active_workers();
-            debug_assert!(active > 0, "flush_pending on an empty cluster");
-            let si = self.requests[rid as usize].sched;
-            let w = {
-                let mut ctx = SchedCtx {
-                    loads: &self.loads[si].loads()[..active],
-                    min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                    rng: &mut self.sched_rng,
-                    dispatch: None,
-                };
-                self.schedulers[si].select(f, &mut ctx)
-            };
-            self.bind_pending(rid, w, t);
+        while let Some((rid, f)) = self.pop_next_pending() {
+            debug_assert!(
+                self.cluster.active_workers() > 0,
+                "flush_pending on an empty cluster"
+            );
+            self.force_place_fn(rid, f, t);
+        }
+    }
+
+    /// Claim the next parked request in the configured drain order
+    /// (DRR when `dispatch.fair`, global arrival order otherwise).
+    fn pop_next_pending(&mut self) -> Option<(u64, usize)> {
+        if self.fair {
+            self.pending.pop_fair()
+        } else {
+            self.pending.pop_arrival()
+        }
+    }
+
+    /// Idle-capacity fairness claim: worker `w` has no warm work of its
+    /// own to pull, so it serves the backlog's next request **among
+    /// functions with no execution in flight** — their warm prospect is
+    /// gone, so waiting longer cannot pay, and draining them in DRR
+    /// order keeps a hot function from monopolizing reclaimed capacity.
+    /// Functions with in-flight work stay parked (a warm pull is still
+    /// coming). Returns true when a request was bound.
+    fn claim_stale_pending(&mut self, w: WorkerId, t: f64) -> bool {
+        let fair = self.fair;
+        let (pending, inflight_f) = (&mut self.pending, &self.inflight_f);
+        let eligible = |g: usize| inflight_f.get(g).copied().unwrap_or(0) == 0;
+        let got =
+            if fair { pending.pop_fair_where(eligible) } else { pending.pop_arrival_where(eligible) };
+        match got {
+            Some((rid, _f)) => {
+                self.bind_pending(rid, w, t);
+                true
+            }
+            None => false,
         }
     }
 
@@ -1169,6 +1309,32 @@ impl<'a> Simulation<'a> {
         true
     }
 
+    /// Everything that happens when worker `w` becomes idle holding a
+    /// warm instance of `f`: (1) a warm pull from the scheduler's named
+    /// queue; failing that, (2) the idle instance is advertised through
+    /// `on_complete`, and (3) the idle *capacity* claims a parked request
+    /// whose warm prospect died (`claim_stale_pending`) — the
+    /// advertisement survives, so a later pull of `f` can still win a
+    /// warm start on `w`.
+    fn worker_idle(&mut self, w: WorkerId, f: usize, si: usize, t: f64) {
+        if self.pull && self.try_pull(w, f, si, t) {
+            return;
+        }
+        let active = self.cluster.active_workers();
+        {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: None,
+            };
+            self.schedulers[si].on_complete(w, f, &mut ctx);
+        }
+        if self.pull && !self.pending.is_empty() {
+            self.claim_stale_pending(w, t);
+        }
+    }
+
     /// An execution actually starts on `w`: sample its service time,
     /// schedule completion, and deliver eviction notifications.
     fn handle_start(&mut self, w: WorkerId, info: StartInfo, t: f64) {
@@ -1182,7 +1348,20 @@ impl<'a> Simulation<'a> {
         }
         let mut dur = self.registry.sample_exec_s(meta.function, &mut self.service_rng);
         if info.cold {
-            dur += self.registry.sample_init_s(meta.function, &mut self.service_rng);
+            let init = self.registry.sample_init_s(meta.function, &mut self.service_rng);
+            if self.pull {
+                // Observed cold−warm start delta: feeds the adaptive
+                // per-function wait deadline (DESIGN.md §8). The sample
+                // order is untouched, so push mode stays bit-identical.
+                const WAIT_ALPHA: f64 = 0.2;
+                let prev = self.cold_penalty_ewma[meta.function];
+                self.cold_penalty_ewma[meta.function] = if prev > 0.0 {
+                    WAIT_ALPHA * init + (1.0 - WAIT_ALPHA) * prev
+                } else {
+                    init
+                };
+            }
+            dur += init;
         }
         if self.cfg.cluster.elastic {
             // vCPU time-sharing: executions beyond the core count slow all
@@ -1246,15 +1425,7 @@ impl<'a> Simulation<'a> {
             let active = self.cluster.active_workers();
             if w < active {
                 let si = meta.sched;
-                if !self.pull || !self.try_pull(w, meta.function, si, t) {
-                    let mut ctx = SchedCtx {
-                        loads: &self.loads[si].loads()[..active],
-                        min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                        rng: &mut self.sched_rng,
-                        dispatch: None,
-                    };
-                    self.schedulers[si].on_complete(w, meta.function, &mut ctx);
-                }
+                self.worker_idle(w, meta.function, si, t);
                 // Keep-alive expiry handled by the periodic SweepTick.
             } else if let Some(f) = self.cluster.expire_keepalive(w, sb, epoch) {
                 // Drained worker: reclaim the sandbox instead of

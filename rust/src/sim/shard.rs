@@ -19,15 +19,19 @@
 //! `dispatch.mode = "pull"` lifts the partition-closed restriction for
 //! *parked* requests: at each epoch barrier the coordinator reads every
 //! shard's pending-queue digest and orders backlogged donors — visited in
-//! shard order — to hand up to `dispatch.steal_batch` of their oldest
-//! parked requests to the least-loaded pending-free shard
-//! ([`ShardMsg::Handoff`]). Payloads move through a `handoff[to][from]`
+//! shard order — to hand up to `dispatch.steal_batch` parked requests to
+//! the least-loaded pending-free shard ([`ShardMsg::Handoff`]). The donor
+//! extracts its payload in **deficit-round-robin order over its function
+//! queues** (`dispatch.fair`, the default — a hot function cannot
+//! monopolize every donation; `dispatch.fair = false` restores the PR 4
+//! oldest-first order). Payloads move through a `handoff[to][from]`
 //! buffer behind one extra transfer barrier and are ingested in (donor
-//! shard, arrival) order, so the migration is deterministic under
+//! shard, donor drain) order, so the migration is deterministic under
 //! (seed, shards). The determinism rule: **steal in shard order, at
-//! epoch boundaries only** — mid-epoch requests never cross shards
-//! (DESIGN.md §8). Bound (and running) requests never migrate; for a
-//! stolen closed-loop request the VU's continuation migrates with it.
+//! epoch boundaries only** — mid-epoch requests never cross shards, and
+//! each donor's DRR cursor state is shard-local (DESIGN.md §8). Bound
+//! (and running) requests never migrate; for a stolen closed-loop
+//! request the VU's continuation migrates with it.
 //!
 //! ## The event-time barrier
 //!
@@ -120,10 +124,12 @@ pub enum ShardMsg {
         n: usize,
     },
     /// Cross-shard task stealing (pull dispatch): this shard — the donor
-    /// — moves up to `n` of its oldest parked requests to shard `to`.
-    /// The donor deposits payloads in the coordinator's handoff buffer at
-    /// the epoch boundary; the recipient ingests them after the transfer
-    /// barrier, in (donor shard, arrival) order. This is what lifts the
+    /// — moves up to `n` of its parked requests to shard `to`, extracted
+    /// in deficit-round-robin order over its function queues
+    /// (`dispatch.fair`; arrival order otherwise). The donor deposits
+    /// payloads in the coordinator's handoff buffer at the epoch
+    /// boundary; the recipient ingests them after the transfer barrier,
+    /// in (donor shard, donor drain) order. This is what lifts the
     /// partition-closed restriction — the documented determinism rule is
     /// *steal in shard order, at epoch boundaries only* (DESIGN.md §8).
     Handoff {

@@ -27,6 +27,7 @@ use hiku::config::{ClusterConfig, Config};
 use hiku::metrics::RunMetrics;
 use hiku::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId};
 use hiku::prop_assert;
+use hiku::report::monopoly_trace;
 use hiku::scheduler::{make_scheduler, ALL_SCHEDULERS, COMPOSITE_SCHEDULERS, PAPER_SCHEDULERS};
 use hiku::sim::shard::{partition_config, shard_seed};
 use hiku::sim::{run_once, run_once_reference, run_trace, run_trace_reference, Simulation};
@@ -300,6 +301,59 @@ fn sharded_runs_reproducible_with_full_coordination() {
         assert_equiv_metrics(&mut a, &mut b, &format!("coordinated/shards{shards}"));
         assert_eq!(a.completed, a.issued, "closed loop must drain");
         assert!(a.completed > 100, "suspiciously few requests");
+    }
+}
+
+#[test]
+fn fair_pull_mode_reproducible_serial_and_sharded() {
+    // The fair dispatcher's determinism contract (DESIGN.md §8): with
+    // DRR draining, per-function caps, weights and adaptive deadlines
+    // all active, pull mode stays bit-reproducible per (seed, shards) —
+    // the DRR cursor/deficit state is router-local and a pure function
+    // of the push/pop history. Serial first:
+    let mut c = cfg("hiku", 20, 25.0);
+    c.workload.copies = 1;
+    c.dispatch.mode = "pull".into();
+    c.dispatch.queue_cap = 16;
+    c.dispatch.queue_caps = "0:8".into();
+    c.dispatch.weights = "0:2".into();
+    for seed in SEEDS {
+        let mut a = run_once(&c, seed).unwrap();
+        let mut b = run_once(&c, seed).unwrap();
+        assert_eq!(
+            a.summary_json().to_string_compact(),
+            b.summary_json().to_string_compact(),
+            "serial fair pull diverged (seed {seed})"
+        );
+        assert!(a.enqueued > 0, "fair pull must actually park (seed {seed})");
+    }
+    // Sharded, with cross-shard handoff live: the shared hot-monopoly
+    // trace overloads the odd-index donor shard(s) with 24/s of
+    // chameleon (+ background dd pairs) while even indices carry a
+    // light round-robin filler (so recipient shards stay pending-free
+    // and eligible), and the coordinator steals at barriers; the DRR
+    // donation order must reproduce bit-for-bit at 2 and 4 shards
+    // (4 workers split 2+2 and 1+1+1+1).
+    let trace = monopoly_trace(24.0, 20.0, true);
+    for &shards in &[2usize, 4] {
+        let mut c = cfg("hiku", 1, 20.0);
+        c.cluster.workers = 4;
+        c.sim.shards = shards;
+        c.dispatch.mode = "pull".into();
+        c.dispatch.max_wait_s = 1.0;
+        c.dispatch.queue_cap = 32;
+        c.dispatch.weights = "0:2".into();
+        let mut a = run_trace(&c, &trace, 5).expect("sharded fair pull run");
+        let mut b = run_trace(&c, &trace, 5).expect("sharded fair pull run");
+        assert_eq!(
+            a.summary_json().to_string_compact(),
+            b.summary_json().to_string_compact(),
+            "sharded fair pull diverged (shards {shards})"
+        );
+        assert_eq!(a.issued, a.completed, "handoffs must not lose requests");
+        if shards == 2 {
+            assert!(a.stolen > 0, "the imbalance trace must trigger handoffs");
+        }
     }
 }
 

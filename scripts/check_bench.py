@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare quick-mode bench JSON against a baseline.
+
+Usage:
+    python3 scripts/check_bench.py [--baseline ci/bench_baseline.json]
+                                   [--dir rust] [--update]
+
+Reads the baseline's check list, extracts the measured value for each
+check from the named bench output file (BENCH_sim_engine.json /
+BENCH_dispatch.json, produced by `cargo bench --bench ... -- --quick`),
+and fails (exit 1) on any regression.
+
+Baseline schema (ci/bench_baseline.json):
+
+    {
+      "tolerance_pct": 20.0,          # default tolerance, +/- percent
+      "checks": [
+        {
+          "file": "BENCH_dispatch.json",
+          "key": "cold_rate_push",    # top-level key, or with "row":
+          "row": {"workers": 1000},   # optional: match a rows[] entry by
+                                      # these fields, then read "key"
+          "value": 0.31,              # null => unseeded: record-only
+          "op": "range",              # range | min | max  (default range)
+          "tolerance_pct": 20.0       # optional per-check override
+        },
+        ...
+      ]
+    }
+
+Semantics per op (tol = tolerance_pct / 100):
+    range  fail if measured outside [value*(1-tol), value*(1+tol)]
+    min    fail if measured <  value*(1-tol)   (throughput floors)
+    max    fail if measured >  value*(1+tol)   (cold-rate ceilings)
+
+A check whose baseline value is null is *unseeded*: it passes and only
+prints the measured value. Run with --update to write every measured
+value back into the baseline file (seeding nulls and refreshing stale
+values) — commit the result to tighten the gate.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_json(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def find_row(rows, spec):
+    """First element of `rows` whose fields match every key in `spec`."""
+    for row in rows:
+        if all(row.get(k) == v for k, v in spec.items()):
+            return row
+    return None
+
+
+def measured_value(bench, check):
+    """Extract the measured value a check refers to, or (None, reason)."""
+    if "row" in check:
+        rows = bench.get("rows")
+        if not isinstance(rows, list):
+            return None, "bench file has no rows[] array"
+        row = find_row(rows, check["row"])
+        if row is None:
+            return None, f"no row matches {check['row']}"
+        if check["key"] not in row:
+            return None, f"row lacks key '{check['key']}'"
+        return row[check["key"]], None
+    if check["key"] not in bench:
+        return None, f"missing key '{check['key']}'"
+    return bench[check["key"]], None
+
+
+def check_one(check, measured, default_tol_pct):
+    """Return (ok, message) for one seeded check."""
+    value = check["value"]
+    op = check.get("op", "range")
+    tol = check.get("tolerance_pct", default_tol_pct) / 100.0
+    lo, hi = value * (1.0 - tol), value * (1.0 + tol)
+    if op == "min":
+        ok = measured >= lo
+        bound = f">= {lo:.6g}"
+    elif op == "max":
+        ok = measured <= hi
+        bound = f"<= {hi:.6g}"
+    elif op == "range":
+        ok = lo <= measured <= hi
+        bound = f"in [{lo:.6g}, {hi:.6g}]"
+    else:
+        return False, f"unknown op '{op}'"
+    return ok, f"measured {measured:.6g}, want {bound} (baseline {value:.6g})"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument("--dir", default=".", help="directory holding the BENCH_*.json files")
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="write measured values back into the baseline (seed/refresh), then exit 0",
+    )
+    args = ap.parse_args()
+
+    baseline = load_json(args.baseline)
+    default_tol = baseline.get("tolerance_pct", 20.0)
+    checks = baseline.get("checks", [])
+    if not checks:
+        print("bench gate: baseline has no checks — nothing to do")
+        return 0
+
+    benches = {}  # file name -> parsed json (or None when unreadable)
+    failures = 0
+    unseeded = 0
+    for check in checks:
+        fname = check["file"]
+        if fname not in benches:
+            path = os.path.join(args.dir, fname)
+            try:
+                benches[fname] = load_json(path)
+            except (OSError, ValueError) as err:
+                benches[fname] = None
+                print(f"FAIL {fname}: unreadable ({err})")
+        bench = benches[fname]
+        label = f"{fname}:{check['key']}"
+        if "row" in check:
+            sel = ",".join(f"{k}={v}" for k, v in sorted(check["row"].items()))
+            label += f"[{sel}]"
+        if bench is None:
+            failures += 1
+            continue
+        measured, err = measured_value(bench, check)
+        if err is not None:
+            print(f"FAIL {label}: {err}")
+            failures += 1
+            continue
+        if args.update:
+            check["value"] = measured
+            print(f"seed {label}: {measured:.6g}")
+            continue  # unreachable-key/file failures still count above
+        if check["value"] is None:
+            unseeded += 1
+            print(f"---- {label}: unseeded baseline, measured {measured:.6g} (record-only)")
+            continue
+        ok, msg = check_one(check, measured, default_tol)
+        print(f"{'ok  ' if ok else 'FAIL'} {label}: {msg}")
+        if not ok:
+            failures += 1
+
+    if args.update:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(baseline, fh, indent=2)
+            fh.write("\n")
+        if failures:
+            # Values that could be measured were refreshed, but some
+            # checks stayed unseeded/stale (missing file or key) — exit
+            # nonzero so the operator doesn't commit a half-armed gate.
+            print(
+                f"bench gate: baseline updated ({args.baseline}) but {failures} "
+                "check(s) could not be measured — rerun the quick benches first"
+            )
+            return 1
+        print(f"bench gate: baseline updated ({args.baseline})")
+        return 0
+    if unseeded:
+        print(
+            f"bench gate: {unseeded} unseeded check(s) — run "
+            "`python3 scripts/check_bench.py --update --dir rust` locally and "
+            "commit ci/bench_baseline.json to arm them"
+        )
+    if failures:
+        print(f"bench gate: {failures} check(s) failed")
+        return 1
+    print("bench gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
