@@ -55,7 +55,8 @@ fn main() {
                 .collect()
         };
         let mut pooled = Samples::new();
-        for &v in m.latency_ms.values() {
+        let samples = m.latency_ms.as_samples_mut().expect("bench runs in exact mode");
+        for &v in samples.values() {
             pooled.push(v);
         }
         println!(

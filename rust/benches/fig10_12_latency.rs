@@ -30,7 +30,8 @@ fn main() {
         let wall = t0.elapsed().as_secs_f64();
         let mut pooled = Samples::new();
         for m in &mut all {
-            for &v in m.latency_ms.values() {
+            let samples = m.latency_ms.as_samples_mut().expect("bench runs in exact mode");
+            for &v in samples.values() {
                 pooled.push(v);
             }
         }

@@ -319,6 +319,40 @@ fn main() {
         record(&mut rows, workers, "closed", "hiku", "calendar-pull", &m, wall);
     }
 
+    // Engine phase profile: one profiled sharded pull run so the bench
+    // JSON carries the phase breakdown (`phase_*_frac` — event pop,
+    // decide, barrier merge, handoff, autoscale tick as fractions of the
+    // profiled wall time) plus process peak RSS. The distinct core tag
+    // keeps the row out of every speedup aggregate: the phase timers add
+    // measurement overhead by design.
+    let profile: Option<(hiku::metrics::PhaseProfile, f64)> = {
+        let (workers, dur, vus_mult) =
+            if quick { (1_000, 4.0, 8) } else { (10_000, 12.0, 24) };
+        let mut cfg = scale_cfg(workers, "hiku", dur, vus_mult);
+        cfg.dispatch.mode = "pull".into();
+        cfg.sim.shards = 2;
+        cfg.telemetry.phase_profile = true;
+        let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+        let workload = Workload::generate(&cfg.workload, registry.len(), SEED);
+        let t0 = Instant::now();
+        let m =
+            run_sharded_with(&cfg, &registry, &workload, None, SEED).expect("profiled run");
+        let wall = t0.elapsed().as_secs_f64();
+        record_sharded(&mut rows, workers, "closed", "hiku", "calendar-profiled", 2, &m, wall);
+        println!(
+            "phase profile @ {workers} workers x2 shards: pop {:.1}% decide {:.1}% \
+             barrier {:.1}% handoff {:.1}% autoscale {:.1}% of {:.2} s profiled wall",
+            m.phases.frac(m.phases.pop_s) * 100.0,
+            m.phases.frac(m.phases.decide_s) * 100.0,
+            m.phases.frac(m.phases.barrier_s) * 100.0,
+            m.phases.frac(m.phases.handoff_s) * 100.0,
+            m.phases.frac(m.phases.autoscale_s) * 100.0,
+            m.phases.wall_s,
+        );
+        let eps = m.events_processed as f64 / wall.max(1e-9);
+        Some((m.phases.clone(), eps))
+    };
+
     // Per-scale aggregate speedups (the acceptance gate reads speedup_10k).
     let mut summary: Vec<(&'static str, Json)> = vec![
         ("bench", "sim_engine".into()),
@@ -367,6 +401,21 @@ fn main() {
                 summary.push((key, s.into()));
             }
         }
+    }
+    if let Some((p, eps)) = profile {
+        summary.push(("phase_pop_frac", p.frac(p.pop_s).into()));
+        summary.push(("phase_decide_frac", p.frac(p.decide_s).into()));
+        summary.push(("phase_barrier_frac", p.frac(p.barrier_s).into()));
+        summary.push(("phase_handoff_frac", p.frac(p.handoff_s).into()));
+        summary.push(("phase_autoscale_frac", p.frac(p.autoscale_s).into()));
+        summary.push(("profiled_events_per_s", eps.into()));
+        summary.push((
+            "peak_rss_mb",
+            match hiku::util::sysinfo::peak_rss_mb() {
+                Some(v) => v.into(),
+                None => Json::Null,
+            },
+        ));
     }
     summary.push(("rows", Json::Arr(rows.iter().map(Row::json).collect())));
 

@@ -350,6 +350,48 @@ impl Default for RuntimeConfig {
     }
 }
 
+/// Observability settings (the `telemetry` section): metric storage mode,
+/// request-lifecycle trace sampling and engine phase profiling. All off by
+/// default — the default summary output stays byte-identical to the
+/// pre-telemetry engine, and none of these knobs may touch the simulation's
+/// RNG streams or event order (DESIGN.md §9).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Store latency/wait distributions as mergeable quantile sketches
+    /// (bounded memory, `sketch_alpha` relative error) instead of exact
+    /// per-request sample vectors. Off by default: exact mode is the
+    /// determinism/ablation baseline.
+    pub sketch: bool,
+    /// Relative accuracy of the quantile sketch (DDSketch-style): any
+    /// reported quantile is within `sketch_alpha * value` of the truth.
+    pub sketch_alpha: f64,
+    /// Request-lifecycle tracing: sample 1 of every `trace_sample`
+    /// requests (hash-gated by request id, deterministic per seed/shards)
+    /// and record arrival → decide → pending → bind → cold-init →
+    /// service → complete spans. 0 (default) disables tracing.
+    pub trace_sample: u64,
+    /// Hard cap on traced requests per router instance (bounds trace
+    /// memory on huge runs; sampling stops at the cap).
+    pub trace_max: usize,
+    /// Engine phase profiling: wall-clock timers around event pop,
+    /// decide, barrier merge, handoff and the autoscale tick, surfaced as
+    /// a `phases` block in `summary_json` (plus peak RSS). Wall-clock
+    /// readings never feed back into simulation state.
+    pub phase_profile: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            sketch: false,
+            sketch_alpha: 0.005,
+            trace_sample: 0,
+            trace_max: 10_000,
+            phase_profile: false,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
@@ -367,6 +409,8 @@ pub struct Config {
     pub sim: SimConfig,
     /// PJRT runtime settings (real-time serving mode).
     pub runtime: RuntimeConfig,
+    /// Observability: sketch metrics, trace sampling, phase profiling.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Config {
@@ -450,6 +494,16 @@ impl Config {
                 obj(vec![
                     ("artifacts_dir", self.runtime.artifacts_dir.as_str().into()),
                     ("cold_extra_ms", self.runtime.cold_extra_ms.into()),
+                ]),
+            ),
+            (
+                "telemetry",
+                obj(vec![
+                    ("sketch", self.telemetry.sketch.into()),
+                    ("sketch_alpha", self.telemetry.sketch_alpha.into()),
+                    ("trace_sample", self.telemetry.trace_sample.into()),
+                    ("trace_max", self.telemetry.trace_max.into()),
+                    ("phase_profile", self.telemetry.phase_profile.into()),
                 ]),
             ),
         ])
@@ -636,6 +690,27 @@ impl Config {
                     v.as_f64().ok_or_else(|| missing("runtime.cold_extra_ms"))?;
             }
         }
+        if let Some(t) = j.get("telemetry") {
+            if let Some(v) = t.get("sketch") {
+                cfg.telemetry.sketch = v.as_bool().ok_or_else(|| missing("telemetry.sketch"))?;
+            }
+            if let Some(v) = t.get("sketch_alpha") {
+                cfg.telemetry.sketch_alpha =
+                    v.as_f64().ok_or_else(|| missing("telemetry.sketch_alpha"))?;
+            }
+            if let Some(v) = t.get("trace_sample") {
+                cfg.telemetry.trace_sample =
+                    v.as_u64().ok_or_else(|| missing("telemetry.trace_sample"))?;
+            }
+            if let Some(v) = t.get("trace_max") {
+                cfg.telemetry.trace_max =
+                    v.as_u64().ok_or_else(|| missing("telemetry.trace_max"))? as usize;
+            }
+            if let Some(v) = t.get("phase_profile") {
+                cfg.telemetry.phase_profile =
+                    v.as_bool().ok_or_else(|| missing("telemetry.phase_profile"))?;
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -766,6 +841,21 @@ impl Config {
             "runtime.cold_extra_ms" => {
                 self.runtime.cold_extra_ms = value.parse().map_err(|_| bad(path, value))?
             }
+            "telemetry.sketch" => {
+                self.telemetry.sketch = value.parse().map_err(|_| bad(path, value))?
+            }
+            "telemetry.sketch_alpha" => {
+                self.telemetry.sketch_alpha = value.parse().map_err(|_| bad(path, value))?
+            }
+            "telemetry.trace_sample" => {
+                self.telemetry.trace_sample = value.parse().map_err(|_| bad(path, value))?
+            }
+            "telemetry.trace_max" => {
+                self.telemetry.trace_max = value.parse().map_err(|_| bad(path, value))?
+            }
+            "telemetry.phase_profile" => {
+                self.telemetry.phase_profile = value.parse().map_err(|_| bad(path, value))?
+            }
             _ => return Err(ConfigError(format!("unknown config path '{path}'"))),
         }
         self.validate()
@@ -886,6 +976,12 @@ impl Config {
             // The predictive policy consumes the per-arrival stream; the
             // sharded coordinator only sees epoch summaries (DESIGN.md §6).
             return e("autoscale.policy=predictive requires the serial engine (sim.shards=1)");
+        }
+        if self.telemetry.sketch_alpha <= 0.0 || self.telemetry.sketch_alpha >= 0.5 {
+            return e("telemetry.sketch_alpha must be in (0, 0.5)");
+        }
+        if self.telemetry.trace_sample > 0 && self.telemetry.trace_max == 0 {
+            return e("telemetry.trace_max must be >= 1 when tracing is on");
         }
         Ok(())
     }
@@ -1077,6 +1173,38 @@ mod tests {
         assert_eq!(c.dispatch.weights_sparse(), vec![]);
         c.dispatch.weights = "2:5".into();
         assert_eq!(c.dispatch.weights_sparse(), vec![(2, 5)]);
+    }
+
+    #[test]
+    fn telemetry_section_roundtrip_and_validation() {
+        let c = Config::default();
+        assert!(!c.telemetry.sketch, "exact metrics by default");
+        assert_eq!(c.telemetry.trace_sample, 0, "tracing off by default");
+        assert!(!c.telemetry.phase_profile, "profiling off by default");
+        let mut c = Config::default();
+        c.apply_override("telemetry.sketch=true").unwrap();
+        c.apply_override("telemetry.sketch_alpha=0.01").unwrap();
+        c.apply_override("telemetry.trace_sample=16").unwrap();
+        c.apply_override("telemetry.trace_max=500").unwrap();
+        c.apply_override("telemetry.phase_profile=true").unwrap();
+        assert!(c.telemetry.sketch && c.telemetry.phase_profile);
+        assert_eq!(c.telemetry.trace_sample, 16);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        // Bad accuracy / trace cap rejected.
+        let mut c = Config::default();
+        c.telemetry.sketch_alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.telemetry.sketch_alpha = 0.7;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.telemetry.trace_sample = 8;
+        c.telemetry.trace_max = 0;
+        assert!(c.validate().is_err());
+        c.telemetry.trace_max = 100;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

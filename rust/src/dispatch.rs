@@ -59,6 +59,10 @@ pub struct PendingQueue {
     deficit: Vec<u32>,
     /// Next function id the DRR cursor visits (fixed-id-order walk).
     cursor: usize,
+    /// Telemetry: requests ever parked (monotone; survives pops).
+    pushed: u64,
+    /// Telemetry: high-water mark of the live queue depth.
+    peak: usize,
 }
 
 impl PendingQueue {
@@ -80,6 +84,8 @@ impl PendingQueue {
             weights: Vec::new(),
             deficit: Vec::new(),
             cursor: 0,
+            pushed: 0,
+            peak: 0,
         };
         q.grow_functions(functions);
         for &(f, w) in weights {
@@ -133,6 +139,21 @@ impl PendingQueue {
         self.queues[f].push_back(rid);
         self.len += 1;
         self.len_f[f] += 1;
+        self.pushed += 1;
+        if self.len > self.peak {
+            self.peak = self.len;
+        }
+    }
+
+    /// Requests ever parked over the queue's lifetime (telemetry; never
+    /// decremented by pops or cancels).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// High-water mark of the live queue depth (telemetry).
+    pub fn peak_len(&self) -> usize {
+        self.peak
     }
 
     /// Pop the oldest *live* entry of `f`'s queue. Caller guarantees
@@ -396,6 +417,25 @@ mod tests {
         assert_eq!(pq.pop_arrival(), Some((2, 1)));
         assert_eq!(pq.pop_fn(1), None);
         assert_eq!(pq.len(), 0);
+    }
+
+    #[test]
+    fn telemetry_counters_track_pushes_and_peak() {
+        let mut pq = PendingQueue::new();
+        assert_eq!(pq.pushed(), 0);
+        assert_eq!(pq.peak_len(), 0);
+        pq.push(0, 0);
+        pq.push(1, 1);
+        pq.push(2, 0);
+        assert_eq!(pq.peak_len(), 3);
+        assert_eq!(pq.pop_fair(), Some((0, 0)));
+        pq.push(3, 1);
+        // Depth never re-reached 3+1, so the peak stays at 3; pushes are
+        // monotone regardless of pops/cancels.
+        assert_eq!(pq.peak_len(), 3);
+        assert!(pq.cancel(1, 1));
+        assert_eq!(pq.pushed(), 4);
+        assert_eq!(pq.peak_len(), 3);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!   hiku sim --scheduler hiku --autoscale reactive --workers 2
 //!   hiku sim --scheduler hiku --dispatch pull --vus 100
 //!   hiku sim --workers 100000 --vus 100000 --shards 4 --duration 10
+//!   hiku sim --sketch --trace-sample 100 --profile --trace-out traces
 //!   hiku sweep --runs 5 --vu-levels 20,50,100
 //!   hiku trace --universe 10000 --minutes 30
 //!   hiku autoscale --policies none,reactive,predictive --schedulers hiku,lc
@@ -67,6 +68,9 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("queue-caps", None, "per-function cap overrides, e.g. '0:4;7:64'")
         .opt("max-wait", None, "pull wait-deadline upper bound in seconds")
         .opt("seed", None, "experiment seed")
+        .flag("sketch", "bounded-memory quantile sketches instead of exact sample vectors")
+        .opt("trace-sample", None, "lifecycle tracing: record every Nth request (0 = off)")
+        .flag("profile", "engine phase profiling (pop/decide/barrier/handoff/autoscale)")
 }
 
 fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
@@ -117,12 +121,41 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;
     }
+    if args.has_flag("sketch") {
+        cfg.telemetry.sketch = true;
+    }
+    if let Some(v) = args.get("trace-sample") {
+        cfg.telemetry.trace_sample =
+            v.parse().map_err(|_| "--trace-sample: integer expected".to_string())?;
+    }
+    if args.has_flag("profile") {
+        cfg.telemetry.phase_profile = true;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
 
+/// Write the lifecycle-trace artifacts — `trace.csv` plus the Chrome-trace
+/// document `trace.chrome.json` (load it in `chrome://tracing` or
+/// Perfetto) — into `dir`.
+fn write_trace(dir: &str, cfg: &Config, m: &hiku::metrics::RunMetrics) -> Result<(), String> {
+    if cfg.telemetry.trace_sample == 0 {
+        eprintln!("note: --trace-out without --trace-sample N records no spans");
+    }
+    std::fs::create_dir_all(dir).map_err(|e| format!("creating {dir}: {e}"))?;
+    let csv_path = format!("{dir}/trace.csv");
+    std::fs::write(&csv_path, hiku::report::export::trace_csv(m))
+        .map_err(|e| format!("writing {csv_path}: {e}"))?;
+    let json_path = format!("{dir}/trace.chrome.json");
+    std::fs::write(&json_path, hiku::report::export::chrome_trace_json(m).to_string_compact())
+        .map_err(|e| format!("writing {json_path}: {e}"))?;
+    eprintln!("wrote {csv_path} and {json_path} ({} spans)", m.trace.len());
+    Ok(())
+}
+
 fn cmd_sim(argv: &[String]) -> i32 {
-    let cli = config_cli(Cli::new("hiku sim", "run one simulated experiment"));
+    let cli = config_cli(Cli::new("hiku sim", "run one simulated experiment"))
+        .opt("trace-out", None, "directory for trace.csv + trace.chrome.json");
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -140,6 +173,12 @@ fn cmd_sim(argv: &[String]) -> i32 {
     match hiku::sim::run_once(&cfg, cfg.workload.seed) {
         Ok(mut m) => {
             println!("{}", m.summary_json().to_string_pretty());
+            if let Some(dir) = args.get("trace-out") {
+                if let Err(e) = write_trace(dir, &cfg, &m) {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            }
             0
         }
         Err(e) => {
@@ -250,7 +289,8 @@ fn cmd_autoscale(argv: &[String]) -> i32 {
 
 fn cmd_serve(argv: &[String]) -> i32 {
     let cli = config_cli(Cli::new("hiku serve", "real-time PJRT serving demo"))
-        .opt("requests", Some("100"), "requests to issue");
+        .opt("requests", Some("100"), "requests to issue")
+        .opt("trace-out", None, "directory for trace.csv + trace.chrome.json");
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -269,6 +309,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
     match hiku::server::serve_n_requests(&cfg, requests) {
         Ok(mut m) => {
             println!("{}", m.summary_json().to_string_pretty());
+            if let Some(dir) = args.get("trace-out") {
+                if let Err(e) = write_trace(dir, &cfg, &m) {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            }
             0
         }
         Err(e) => {

@@ -1,8 +1,237 @@
 //! Per-run metric collection and summaries — one struct per experiment run,
 //! producing exactly the quantities the paper's figures report.
 
-use crate::stats::{LoadImbalance, OnlineStats, Samples, TimeSeries};
+use crate::config::TelemetryConfig;
+use crate::stats::{Dist, LoadImbalance, OnlineStats, TimeSeries};
+use crate::util::hashing::mix64;
 use crate::util::json::{obj, Json};
+
+/// A finite number as JSON, `null` otherwise — NaN (empty-stream
+/// percentiles/means) and ±∞ (empty-stream min/max) must never leak
+/// into exported JSON, where they would not even parse.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        x.into()
+    } else {
+        Json::Null
+    }
+}
+
+/// One timed phase of a sampled request's lifecycle.
+///
+/// Times are in the run's native clock — virtual seconds for the
+/// simulator, wall seconds since server start for real-time runs.
+/// Instantaneous events (arrival, decide, complete) have
+/// `start_s == end_s`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpan {
+    /// Request id: the per-shard dense request counter.
+    pub request: u64,
+    /// Function the request invoked.
+    pub function: usize,
+    /// Shard that processed the request (0 for serial runs).
+    pub shard: usize,
+    /// Phase name: one of `arrival`, `decide`, `pending`, `bind`,
+    /// `cold_init`, `service`, `complete`.
+    pub phase: &'static str,
+    /// Span start in seconds.
+    pub start_s: f64,
+    /// Span end in seconds (equal to `start_s` for instant events).
+    pub end_s: f64,
+    /// Worker involved, when one is known for the phase.
+    pub worker: Option<usize>,
+    /// Phase-specific detail: the decision outcome for `decide`
+    /// (`assign`/`enqueue`/`reject`), the bind kind for `bind`
+    /// (`pull`/`idle`/`deadline`/`flush`/`steal`), cold/warm for
+    /// `service` and `complete`, empty otherwise.
+    pub detail: String,
+}
+
+/// Request-lifecycle trace with deterministic sampling.
+///
+/// A request with id `rid` is traced iff `mix64(rid) % sample == 0` —
+/// a pure function of the request id, so the same (config, seed,
+/// shards) triple always traces the same requests and the trace output
+/// is bit-reproducible. Sampling never consumes scheduler or service
+/// RNG draws and never changes event order, so enabling tracing leaves
+/// every other metric bit-identical.
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    sample: u64,
+    max: usize,
+    shard: usize,
+    spans: Vec<TraceSpan>,
+    truncated: u64,
+}
+
+impl TraceLog {
+    /// A trace collecting every `sample`-th request (by hash gate), at
+    /// most `max` spans. `sample == 0` disables tracing entirely.
+    pub fn new(sample: u64, max: usize) -> Self {
+        Self { sample, max, shard: 0, spans: Vec::new(), truncated: 0 }
+    }
+
+    /// A disabled trace (the default for plain runs).
+    pub fn off() -> Self {
+        Self::new(0, 0)
+    }
+
+    /// Whether tracing is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.sample != 0
+    }
+
+    /// Tag subsequently recorded spans with `shard` (sharded engines
+    /// set this from their shard index; serial runs stay at 0).
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    /// Whether request `rid` is in the deterministic sample.
+    pub fn sampled(&self, rid: u64) -> bool {
+        self.sample != 0 && mix64(rid) % self.sample == 0
+    }
+
+    /// Record one span for request `rid` if it is sampled and the span
+    /// cap has not been reached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        rid: u64,
+        function: usize,
+        phase: &'static str,
+        start_s: f64,
+        end_s: f64,
+        worker: Option<usize>,
+        detail: &str,
+    ) {
+        if !self.sampled(rid) {
+            return;
+        }
+        if self.spans.len() >= self.max {
+            self.truncated += 1;
+            return;
+        }
+        self.spans.push(TraceSpan {
+            request: rid,
+            function,
+            shard: self.shard,
+            phase,
+            start_s,
+            end_s,
+            worker,
+            detail: detail.to_string(),
+        });
+    }
+
+    /// The recorded spans, in recording order (shard order after merge).
+    pub fn spans(&self) -> &[TraceSpan] {
+        &self.spans
+    }
+
+    /// Number of recorded spans.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Whether no spans were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans dropped after the cap was hit (sampled but not stored).
+    pub fn truncated(&self) -> u64 {
+        self.truncated
+    }
+
+    /// Append another shard's spans (shard-merge reduction; spans stay
+    /// grouped by shard, ordered by the merge call order).
+    pub fn merge_append(&mut self, other: &TraceLog) {
+        self.spans.extend(other.spans.iter().cloned());
+        self.truncated += other.truncated;
+        if other.sample != 0 && self.sample == 0 {
+            self.sample = other.sample;
+            self.max = other.max;
+        }
+    }
+}
+
+/// Wall-clock accounting of where the engine's hot loop spends time.
+///
+/// Timers use `std::time::Instant` and only ever write into this
+/// struct — they never feed back into simulation state, so profiling
+/// cannot perturb virtual time or event order. All fields are real
+/// (wall) seconds, even for virtual-time runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Whether profiling was on for the run (gates the summary block).
+    pub enabled: bool,
+    /// Seconds popping events off the calendar/heap.
+    pub pop_s: f64,
+    /// Seconds dispatching events (scheduler decide + handlers).
+    pub decide_s: f64,
+    /// Seconds blocked at epoch barriers (sharded runs only).
+    pub barrier_s: f64,
+    /// Seconds extracting/ingesting cross-shard handoffs.
+    pub handoff_s: f64,
+    /// Seconds in autoscale ticks.
+    pub autoscale_s: f64,
+    /// Total wall seconds in the event loop (the `*_frac` denominator).
+    pub wall_s: f64,
+}
+
+impl PhaseProfile {
+    /// An empty profile; `enabled` gates both timing and reporting.
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, ..Default::default() }
+    }
+
+    /// Sum another shard's phase times into this one (phase fractions
+    /// then describe the aggregate across shard threads).
+    pub fn merge_add(&mut self, other: &PhaseProfile) {
+        self.enabled |= other.enabled;
+        self.pop_s += other.pop_s;
+        self.decide_s += other.decide_s;
+        self.barrier_s += other.barrier_s;
+        self.handoff_s += other.handoff_s;
+        self.autoscale_s += other.autoscale_s;
+        self.wall_s += other.wall_s;
+    }
+
+    /// `x` as a fraction of total loop wall time (0 when nothing ran).
+    pub fn frac(&self, x: f64) -> f64 {
+        if self.wall_s > 0.0 {
+            x / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The profile as JSON: absolute seconds, fractions of loop wall
+    /// time, and the process peak RSS (null off Linux).
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("pop_s", self.pop_s.into()),
+            ("decide_s", self.decide_s.into()),
+            ("barrier_s", self.barrier_s.into()),
+            ("handoff_s", self.handoff_s.into()),
+            ("autoscale_s", self.autoscale_s.into()),
+            ("wall_s", self.wall_s.into()),
+            ("pop_frac", self.frac(self.pop_s).into()),
+            ("decide_frac", self.frac(self.decide_s).into()),
+            ("barrier_frac", self.frac(self.barrier_s).into()),
+            ("handoff_frac", self.frac(self.handoff_s).into()),
+            ("autoscale_frac", self.frac(self.autoscale_s).into()),
+            (
+                "peak_rss_mb",
+                match crate::util::sysinfo::peak_rss_mb() {
+                    Some(mb) => mb.into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
 
 /// Collected during a run (sim or real-time).
 #[derive(Clone, Debug)]
@@ -11,12 +240,14 @@ pub struct RunMetrics {
     pub scheduler: String,
     /// Virtual users the run was configured with.
     pub vus: usize,
-    /// Response latencies in ms (arrival -> response), all completed requests.
-    pub latency_ms: Samples,
+    /// Response latencies in ms (arrival -> response), all completed
+    /// requests — exact samples by default, a mergeable quantile sketch
+    /// under `[telemetry] sketch = true`.
+    pub latency_ms: Dist,
     /// Response latencies split by cold/warm (Table I reproduction).
-    pub latency_cold_ms: Samples,
+    pub latency_cold_ms: Dist,
     /// Warm-start response latencies in ms.
-    pub latency_warm_ms: Samples,
+    pub latency_warm_ms: Dist,
     /// Requests whose execution required creating a sandbox.
     pub cold_starts: u64,
     /// Requests served by an existing warm sandbox.
@@ -46,12 +277,12 @@ pub struct RunMetrics {
     /// (`ShardMsg::Handoff`), counted at the receiving shard.
     pub stolen: u64,
     /// Pending-queue wait per parked request, ms (arrival → worker bind).
-    pub pending_wait_ms: Samples,
+    pub pending_wait_ms: Dist,
     /// Pending-queue waits split by function (indexed by `FunctionId`,
     /// grown on demand) — the fairness diagnostic: a starved function
     /// shows up as a heavy per-function tail long before it moves the
     /// pooled percentiles.
-    pub pending_wait_by_fn_ms: Vec<Samples>,
+    pub pending_wait_by_fn_ms: Vec<Dist>,
     /// Pending-queue depth timeline, sampled at the keep-alive sweep tick
     /// (pull dispatch only; empty otherwise).
     pub pending_timeline: Vec<(f64, usize)>,
@@ -81,18 +312,41 @@ pub struct RunMetrics {
     pub completed: u64,
     /// Requests that were issued (routed).
     pub issued: u64,
+    /// Sampled request-lifecycle spans (disabled unless
+    /// `telemetry.trace_sample > 0`).
+    pub trace: TraceLog,
+    /// Engine phase profile (zeroed unless `telemetry.phase_profile`).
+    pub phases: PhaseProfile,
+    // Distribution mode memo, so lazily grown per-function tables get
+    // the same storage mode as the pooled distributions they merge with.
+    sketch: bool,
+    sketch_alpha: f64,
 }
 
 impl RunMetrics {
     /// An empty collector for one run of `scheduler` over `workers`
     /// workers, `vus` virtual users and `duration_s` seconds.
     pub fn new(scheduler: &str, workers: usize, vus: usize, duration_s: f64) -> Self {
+        Self::with_telemetry(scheduler, workers, vus, duration_s, &TelemetryConfig::default())
+    }
+
+    /// An empty collector whose storage mode, trace sampling and phase
+    /// profiling follow `[telemetry]` config. `RunMetrics::new` is the
+    /// all-defaults (exact, untraced, unprofiled) special case.
+    pub fn with_telemetry(
+        scheduler: &str,
+        workers: usize,
+        vus: usize,
+        duration_s: f64,
+        tel: &TelemetryConfig,
+    ) -> Self {
+        let dist = || Dist::for_mode(tel.sketch, tel.sketch_alpha);
         Self {
             scheduler: scheduler.to_string(),
             vus,
-            latency_ms: Samples::new(),
-            latency_cold_ms: Samples::new(),
-            latency_warm_ms: Samples::new(),
+            latency_ms: dist(),
+            latency_cold_ms: dist(),
+            latency_warm_ms: dist(),
             cold_starts: 0,
             warm_starts: 0,
             imbalance: LoadImbalance::new(workers, 1.0),
@@ -103,7 +357,7 @@ impl RunMetrics {
             rejected_by_fn: Vec::new(),
             enqueued: 0,
             stolen: 0,
-            pending_wait_ms: Samples::new(),
+            pending_wait_ms: dist(),
             pending_wait_by_fn_ms: Vec::new(),
             pending_timeline: Vec::new(),
             peak_pending: 0,
@@ -116,6 +370,10 @@ impl RunMetrics {
             duration_s,
             completed: 0,
             issued: 0,
+            trace: TraceLog::new(tel.trace_sample, tel.trace_max),
+            phases: PhaseProfile::new(tel.phase_profile),
+            sketch: tel.sketch,
+            sketch_alpha: tel.sketch_alpha,
         }
     }
 
@@ -172,7 +430,9 @@ impl RunMetrics {
     pub fn record_pending_wait(&mut self, f: usize, wait_s: f64) {
         self.pending_wait_ms.push(wait_s * 1000.0);
         if f >= self.pending_wait_by_fn_ms.len() {
-            self.pending_wait_by_fn_ms.resize_with(f + 1, Samples::new);
+            let (sketch, alpha) = (self.sketch, self.sketch_alpha);
+            self.pending_wait_by_fn_ms
+                .resize_with(f + 1, || Dist::for_mode(sketch, alpha));
         }
         self.pending_wait_by_fn_ms[f].push(wait_s * 1000.0);
     }
@@ -314,8 +574,9 @@ impl RunMetrics {
         self.stolen += other.stolen;
         self.pending_wait_ms.merge_from(&other.pending_wait_ms);
         if other.pending_wait_by_fn_ms.len() > self.pending_wait_by_fn_ms.len() {
+            let (sketch, alpha) = (self.sketch, self.sketch_alpha);
             self.pending_wait_by_fn_ms
-                .resize_with(other.pending_wait_by_fn_ms.len(), Samples::new);
+                .resize_with(other.pending_wait_by_fn_ms.len(), || Dist::for_mode(sketch, alpha));
         }
         for (acc, s) in self.pending_wait_by_fn_ms.iter_mut().zip(&other.pending_wait_by_fn_ms) {
             acc.merge_from(s);
@@ -330,6 +591,8 @@ impl RunMetrics {
         self.peak_event_queue += other.peak_event_queue;
         self.completed += other.completed;
         self.issued += other.issued;
+        self.trace.merge_append(&other.trace);
+        self.phases.merge_add(&other.phases);
     }
 
     /// Summary as JSON (dumped by the CLI for external plotting).
@@ -356,22 +619,22 @@ impl RunMetrics {
                 p99_wait_by_fn.push(Json::Arr(vec![(f as u64).into(), p.into()]));
             }
         }
-        obj(vec![
+        let mut pairs = vec![
             ("scheduler", self.scheduler.as_str().into()),
             ("vus", self.vus.into()),
             ("completed", self.completed.into()),
             ("issued", self.issued.into()),
-            ("mean_latency_ms", mean.into()),
-            ("p50_ms", p50.into()),
-            ("p90_ms", p90.into()),
-            ("p95_ms", p95.into()),
-            ("p99_ms", p99.into()),
+            ("mean_latency_ms", num_or_null(mean)),
+            ("p50_ms", num_or_null(p50)),
+            ("p90_ms", num_or_null(p90)),
+            ("p95_ms", num_or_null(p95)),
+            ("p99_ms", num_or_null(p99)),
             ("cold_rate", self.cold_rate().into()),
             ("cold_starts", self.cold_starts.into()),
             ("warm_starts", self.warm_starts.into()),
-            ("mean_cv", self.mean_cv().into()),
+            ("mean_cv", num_or_null(self.mean_cv())),
             ("rps", self.rps().into()),
-            ("mean_queue_delay_ms", self.queue_delay_ms.mean().into()),
+            ("mean_queue_delay_ms", num_or_null(self.queue_delay_ms.mean())),
             ("worker_seconds", self.worker_seconds.into()),
             ("scale_events", self.scale_event_count().into()),
             ("prewarm_spawned", self.prewarm_spawned.into()),
@@ -384,7 +647,21 @@ impl RunMetrics {
             ("peak_pending", self.peak_pending.into()),
             ("rejects_by_fn", Json::Arr(rejects_by_fn)),
             ("p99_pending_wait_by_fn_ms", Json::Arr(p99_wait_by_fn)),
-        ])
+        ];
+        // Non-default telemetry surfaces extra keys; the default path
+        // emits exactly the historical key set so summaries stay
+        // byte-identical run-to-run and release-to-release.
+        if self.latency_ms.is_sketch() {
+            pairs.push(("sketch", true.into()));
+        }
+        if self.trace.enabled() {
+            pairs.push(("trace_spans", (self.trace.len() as u64).into()));
+            pairs.push(("trace_truncated", self.trace.truncated().into()));
+        }
+        if self.phases.enabled {
+            pairs.push(("phases", self.phases.json()));
+        }
+        obj(pairs)
     }
 }
 
@@ -534,7 +811,7 @@ mod tests {
         assert!((m.pending_wait_p99_fn_ms(7) - 200.0).abs() < 1e-9);
         assert_eq!(m.pending_wait_p99_fn_ms(0), 0.0, "never-parked function reports 0");
         // Rejects never contaminate the latency samples.
-        assert_eq!(m.latency_ms.len(), 1);
+        assert_eq!(m.latency_ms.seen(), 1);
         let j = m.summary_json();
         assert_eq!(j.get("rejected").unwrap().as_u64(), Some(2));
         assert!(j.get("reject_rate").unwrap().as_f64().unwrap() > 0.6);
@@ -557,8 +834,8 @@ mod tests {
         assert_eq!(m.enqueued, 3);
         assert_eq!(m.stolen, 1);
         assert_eq!(m.peak_pending, 8);
-        assert_eq!(m.pending_wait_ms.len(), 2);
-        assert_eq!(m.pending_wait_by_fn_ms[7].len(), 2);
+        assert_eq!(m.pending_wait_ms.seen(), 2);
+        assert_eq!(m.pending_wait_by_fn_ms[7].seen(), 2);
     }
 
     #[test]
@@ -592,6 +869,73 @@ mod tests {
         // Worker series appended: shard 0's workers then shard 1's.
         assert_eq!(a.imbalance.totals().len(), 3);
         assert_eq!(a.imbalance.totals(), vec![1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_run_summary_emits_null_not_nan() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 10.0);
+        let j = m.summary_json();
+        assert_eq!(j.get("mean_latency_ms"), Some(&Json::Null));
+        assert_eq!(j.get("p50_ms"), Some(&Json::Null));
+        assert_eq!(j.get("p99_ms"), Some(&Json::Null));
+        assert_eq!(j.get("mean_queue_delay_ms"), Some(&Json::Null));
+        // The serialized summary must be valid JSON — NaN/inf are not.
+        let s = j.to_string_compact();
+        assert!(Json::parse(&s).is_ok(), "summary must round-trip: {s}");
+        // Default telemetry adds no extra keys.
+        assert!(j.get("sketch").is_none());
+        assert!(j.get("phases").is_none());
+        assert!(j.get("trace_spans").is_none());
+    }
+
+    #[test]
+    fn sketch_mode_summary_marks_itself() {
+        let tel = TelemetryConfig { sketch: true, ..Default::default() };
+        let mut m = RunMetrics::with_telemetry("hiku", 2, 10, 10.0, &tel);
+        m.record_response(0.1, false, 0.0, 1.0);
+        m.record_pending_wait(3, 0.2);
+        let j = m.summary_json();
+        assert_eq!(j.get("sketch").and_then(|v| v.as_bool()), Some(true));
+        assert!(m.latency_ms.is_sketch());
+        assert!(m.pending_wait_by_fn_ms[3].is_sketch(), "lazy tables inherit the mode");
+    }
+
+    #[test]
+    fn trace_sampling_is_deterministic_and_capped() {
+        let tel = TelemetryConfig { trace_sample: 2, trace_max: 4, ..Default::default() };
+        let mut a = RunMetrics::with_telemetry("hiku", 1, 1, 1.0, &tel);
+        let mut b = RunMetrics::with_telemetry("hiku", 1, 1, 1.0, &tel);
+        for rid in 0..100u64 {
+            a.trace.record(rid, 0, "arrival", 0.1, 0.1, None, "");
+            b.trace.record(rid, 0, "arrival", 0.1, 0.1, None, "");
+        }
+        assert_eq!(a.trace.len(), 4, "span cap bounds memory");
+        assert!(a.trace.truncated() > 0);
+        assert_eq!(a.trace.spans(), b.trace.spans(), "hash gate is deterministic");
+        // An untraced collector records nothing and costs nothing.
+        let mut off = RunMetrics::new("hiku", 1, 1, 1.0);
+        off.trace.record(0, 0, "arrival", 0.0, 0.0, None, "");
+        assert!(off.trace.is_empty());
+    }
+
+    #[test]
+    fn phase_profile_merges_and_reports_fractions() {
+        let mut p = PhaseProfile::new(true);
+        p.pop_s = 1.0;
+        p.decide_s = 2.0;
+        p.wall_s = 4.0;
+        let mut q = PhaseProfile::new(true);
+        q.pop_s = 1.0;
+        q.barrier_s = 2.0;
+        q.wall_s = 4.0;
+        p.merge_add(&q);
+        assert!((p.frac(p.pop_s) - 0.25).abs() < 1e-12);
+        assert!((p.frac(p.decide_s) - 0.25).abs() < 1e-12);
+        let j = p.json();
+        assert!(j.get("pop_frac").unwrap().as_f64().unwrap() > 0.0);
+        // Zero wall time never divides by zero.
+        let z = PhaseProfile::new(true);
+        assert_eq!(z.frac(z.pop_s), 0.0);
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! writes the same series the figure plots.
 
 use crate::metrics::RunMetrics;
-use crate::stats::Samples;
+use crate::stats::Dist;
+use crate::util::json::{obj, Json};
 use std::fmt::Write as _;
 
 /// Escape a CSV cell (quotes + commas).
@@ -28,15 +29,20 @@ pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
 }
 
 /// Fig 10: latency CDF — columns (scheduler, latency_ms, cum_prob).
+/// Works in both storage modes: exact runs pool the raw samples (the
+/// pre-telemetry output, bit for bit); sketch runs merge the sketches and
+/// read the quantile grid within the configured relative error.
 pub fn latency_cdf_csv(runs: &mut [(String, Vec<RunMetrics>)], points: usize) -> String {
     let mut rows = Vec::new();
     for (sched, ms) in runs.iter_mut() {
-        let mut pooled = Samples::new();
-        for m in ms.iter_mut() {
-            for &v in m.latency_ms.values() {
-                pooled.push(v);
+        let mut pooled: Option<Dist> = None;
+        for m in ms.iter() {
+            match pooled.as_mut() {
+                None => pooled = Some(m.latency_ms.clone()),
+                Some(p) => p.merge_from(&m.latency_ms),
             }
         }
+        let Some(mut pooled) = pooled else { continue };
         for (v, q) in pooled.cdf(points) {
             rows.push(vec![sched.clone(), format!("{v:.3}"), format!("{q:.4}")]);
         }
@@ -85,10 +91,22 @@ pub fn scaling_timeline_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
     to_csv(&["scheduler", "time_s", "active_workers"], &rows)
 }
 
+/// Format a float cell, or an empty cell for a non-finite value (an empty
+/// run has NaN percentiles — `NaN` must never leak into the CSV, where it
+/// silently poisons downstream column parsers).
+fn num(x: f64, prec: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.prec$}")
+    } else {
+        String::new()
+    }
+}
+
 /// Summary table (Figs 11/12/13/15/17 scalars plus the dispatch-protocol
 /// admission columns) — one row per run. Rejected requests are reported
 /// explicitly: they are excluded from the latency percentiles by
 /// construction, so the rate column is the only place they surface.
+/// Non-finite scalars (an empty run) export as empty cells, not `NaN`.
 pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
     let mut rows = Vec::new();
     for (sched, ms) in runs.iter_mut() {
@@ -97,18 +115,18 @@ pub fn summary_csv(runs: &mut [(String, Vec<RunMetrics>)]) -> String {
                 sched.clone(),
                 i.to_string(),
                 m.vus.to_string(),
-                format!("{:.2}", m.mean_latency_ms()),
-                format!("{:.2}", m.latency_percentile_ms(90.0)),
-                format!("{:.2}", m.latency_percentile_ms(95.0)),
-                format!("{:.2}", m.latency_percentile_ms(99.0)),
-                format!("{:.4}", m.cold_rate()),
-                format!("{:.4}", m.mean_cv()),
+                num(m.mean_latency_ms(), 2),
+                num(m.latency_percentile_ms(90.0), 2),
+                num(m.latency_percentile_ms(95.0), 2),
+                num(m.latency_percentile_ms(99.0), 2),
+                num(m.cold_rate(), 4),
+                num(m.mean_cv(), 4),
                 m.completed.to_string(),
-                format!("{:.2}", m.rps()),
+                num(m.rps(), 2),
                 m.rejected.to_string(),
-                format!("{:.4}", m.reject_rate()),
+                num(m.reject_rate(), 4),
                 m.enqueued.to_string(),
-                format!("{:.2}", m.mean_pending_wait_ms()),
+                num(m.mean_pending_wait_ms(), 2),
             ]);
         }
     }
@@ -180,6 +198,70 @@ pub fn pending_depth_csv(runs: &[(String, Vec<RunMetrics>)]) -> String {
         }
     }
     to_csv(&["scheduler", "time_s", "pending"], &rows)
+}
+
+/// Request-lifecycle trace — columns (request, function, shard, phase,
+/// start_s, end_s, worker, detail), one row per recorded span in (shard,
+/// record) order. The `worker` cell is empty for spans not bound to a
+/// worker (arrival, pending). Times are virtual seconds under the
+/// simulator and wall-clock seconds since start under the server; the
+/// span taxonomy is identical (DESIGN.md §9).
+pub fn trace_csv(m: &RunMetrics) -> String {
+    let rows: Vec<Vec<String>> = m
+        .trace
+        .spans()
+        .iter()
+        .map(|s| {
+            vec![
+                s.request.to_string(),
+                s.function.to_string(),
+                s.shard.to_string(),
+                s.phase.to_string(),
+                format!("{:.6}", s.start_s),
+                format!("{:.6}", s.end_s),
+                s.worker.map(|w| w.to_string()).unwrap_or_default(),
+                s.detail.clone(),
+            ]
+        })
+        .collect();
+    to_csv(
+        &["request", "function", "shard", "phase", "start_s", "end_s", "worker", "detail"],
+        &rows,
+    )
+}
+
+/// The same trace as a Chrome-trace document (the `chrome://tracing` /
+/// Perfetto "traceEvents" JSON array format): one complete (`"ph": "X"`)
+/// event per span with `ts`/`dur` in microseconds, `pid` = shard and
+/// `tid` = function, so tracks group by shard and lane by function type.
+/// Instant spans (arrival, decide, bind, complete) render as zero-width
+/// slices, which the viewers draw as ticks.
+pub fn chrome_trace_json(m: &RunMetrics) -> Json {
+    let events: Vec<Json> = m
+        .trace
+        .spans()
+        .iter()
+        .map(|s| {
+            let mut args = vec![("request", Json::from(s.request))];
+            if let Some(w) = s.worker {
+                args.push(("worker", w.into()));
+            }
+            if !s.detail.is_empty() {
+                args.push(("detail", s.detail.as_str().into()));
+            }
+            obj(vec![
+                ("name", s.phase.into()),
+                ("cat", "request".into()),
+                ("ph", "X".into()),
+                ("ts", (s.start_s * 1e6).into()),
+                ("dur", ((s.end_s - s.start_s).max(0.0) * 1e6).into()),
+                ("pid", s.shard.into()),
+                ("tid", s.function.into()),
+                ("args", obj(args)),
+            ])
+        })
+        .collect();
+    obj(vec![("traceEvents", events.into()), ("displayTimeUnit", "ms".into())])
 }
 
 #[cfg(test)]
@@ -274,6 +356,42 @@ mod tests {
         let runs = tiny_runs();
         assert!(cv_series_csv(&runs).lines().count() > 5);
         assert!(cumulative_csv(&runs).lines().count() > 5);
+    }
+
+    #[test]
+    fn trace_exports_render_spans() {
+        use crate::config::TelemetryConfig;
+        let tel = TelemetryConfig { trace_sample: 1, trace_max: 16, ..Default::default() };
+        let mut m = RunMetrics::with_telemetry("hiku", 2, 1, 10.0, &tel);
+        m.trace.record(0, 3, "arrival", 0.5, 0.5, None, "");
+        m.trace.record(0, 3, "service", 0.6, 0.9, Some(1), "cold");
+        let csv = trace_csv(&m);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "request,function,shard,phase,start_s,end_s,worker,detail");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1], "0,3,0,arrival,0.500000,0.500000,,");
+        assert_eq!(lines[2], "0,3,0,service,0.600000,0.900000,1,cold");
+        // The Chrome-trace document round-trips through the JSON parser
+        // and carries one complete event per span.
+        let doc = chrome_trace_json(&m);
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        let dur = events[1].get("dur").unwrap().as_f64().unwrap();
+        assert!((dur - 3.0e5).abs() < 1.0, "dur should be ~300ms in us: {dur}");
+        assert_eq!(events[1].at(&["args", "detail"]).unwrap().as_str(), Some("cold"));
+    }
+
+    #[test]
+    fn summary_csv_empty_run_has_no_nan_cells() {
+        let m = RunMetrics::new("hiku", 2, 1, 10.0);
+        let mut runs = vec![("hiku".to_string(), vec![m])];
+        let csv = summary_csv(&mut runs);
+        assert!(!csv.contains("NaN"), "non-finite scalars must export empty:\n{csv}");
+        let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row.len(), 15, "empty cells must not drop columns");
+        assert_eq!(row[3], "", "mean_ms of an empty run is an empty cell");
     }
 
     #[test]

@@ -253,17 +253,21 @@ pub fn latency_cdf_report(base: &Config, schedulers: &[String], runs: u64, point
     let mut out = String::new();
     out.push_str("# Fig 10 — response latency CDF per scheduler\n");
     for sched in schedulers {
-        let (_, mut all) = run_cell(base, sched, base.workload.vus, runs)?;
-        // Pool latencies across runs for the CDF.
-        let mut pooled = crate::stats::Samples::new();
-        for m in &mut all {
-            for &v in m.latency_ms.values() {
-                pooled.push(v);
+        let (_, all) = run_cell(base, sched, base.workload.vus, runs)?;
+        // Pool latencies across runs for the CDF (mode-agnostic: exact
+        // runs merge sample vectors, sketch runs merge sketches).
+        let mut pooled: Option<crate::stats::Dist> = None;
+        for m in &all {
+            match pooled.as_mut() {
+                None => pooled = Some(m.latency_ms.clone()),
+                Some(p) => p.merge_from(&m.latency_ms),
             }
         }
         out.push_str(&format!("\n## {sched}\n"));
-        for (val, q) in pooled.cdf(points) {
-            out.push_str(&format!("  {:>8.1} ms  p={:.3}\n", val, q));
+        if let Some(mut pooled) = pooled {
+            for (val, q) in pooled.cdf(points) {
+                out.push_str(&format!("  {:>8.1} ms  p={:.3}\n", val, q));
+            }
         }
     }
     Ok(out)

@@ -96,6 +96,7 @@ fn bind_parked(
     rid: u64,
     f: usize,
     w: usize,
+    kind: &'static str,
     loads: &mut [u32],
     inflight_f: &mut [usize],
     dispatched: &mut [Instant],
@@ -107,8 +108,12 @@ fn bind_parked(
 ) -> Result<(), String> {
     loads[w] += 1;
     inflight_f[f] += 1;
-    metrics.record_assignment(w, start.elapsed().as_secs_f64());
-    metrics.record_pending_wait(f, arrival[rid as usize].elapsed().as_secs_f64());
+    let now_s = start.elapsed().as_secs_f64();
+    let arr_s = arrival[rid as usize].duration_since(start).as_secs_f64();
+    metrics.record_assignment(w, now_s);
+    metrics.record_pending_wait(f, now_s - arr_s);
+    metrics.trace.record(rid, f, "pending", arr_s, now_s, None, "");
+    metrics.trace.record(rid, f, "bind", now_s, now_s, Some(w), kind);
     dispatched[rid as usize] = Instant::now();
     send_to(work_tx, payload_of, rid, f, w)
 }
@@ -212,12 +217,16 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
     let vus = cfg.workload.vus.min(n_requests.max(1));
 
     // Imbalance columns track workers that have ever been active (the
-    // simulator's add_worker convention) — not the idle thread pool.
-    let mut metrics = RunMetrics::new(
+    // simulator's add_worker convention) — not the idle thread pool. The
+    // telemetry surface matches the simulator's: sketch mode, lifecycle
+    // tracing (span times are wall-clock seconds since server start), and
+    // the same deterministic hash-gate sampling by request id.
+    let mut metrics = RunMetrics::with_telemetry(
         &cfg.scheduler.name,
         active,
         vus,
         1.0, // duration finalized after the run (wall-clock)
+        &cfg.telemetry,
     );
     let mut imbalance_cols = active;
     metrics.record_scale(0.0, active);
@@ -330,6 +339,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         head,
                         f,
                         w,
+                        "deadline",
                         &mut loads,
                         &mut inflight_f,
                         &mut dispatched,
@@ -359,7 +369,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 // ---- issue the VU's next request ----
                 let f = workload.vus[vu].steps[step].function;
                 let rid = arrival.len() as u64;
-                policy.on_arrival(f, start.elapsed().as_secs_f64());
+                let t_s = start.elapsed().as_secs_f64();
+                metrics.trace.record(rid, f, "arrival", t_s, t_s, None, "");
+                policy.on_arrival(f, t_s);
                 let decision = {
                     let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
                     if pull {
@@ -381,6 +393,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     Decision::Assign(_) => false,
                 };
                 if refuse {
+                    metrics.trace.record(rid, f, "decide", t_s, t_s, None, "reject");
                     metrics.record_reject(f);
                     rejected += 1;
                     // The VU observes the refusal and thinks on.
@@ -396,12 +409,14 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     fn_of.push(f);
                     match decision {
                         Decision::Assign(w) => {
+                            metrics.trace.record(rid, f, "decide", t_s, t_s, Some(w), "assign");
                             loads[w] += 1;
                             inflight_f[f] += 1;
                             metrics.record_assignment(w, start.elapsed().as_secs_f64());
                             send_to(&work_tx, &payload_of, rid, f, w)?;
                         }
                         _ => {
+                            metrics.trace.record(rid, f, "decide", t_s, t_s, None, "enqueue");
                             pending_q.push(rid, f);
                             metrics.record_enqueue(pending_q.len());
                             let wait = wait_for(f, &cold_lat_ewma, &warm_lat_ewma);
@@ -460,6 +475,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                                     rid2,
                                     pf,
                                     r.worker,
+                                    "pull",
                                     &mut loads,
                                     &mut inflight_f,
                                     &mut dispatched,
@@ -494,6 +510,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                                     rid2,
                                     pf,
                                     r.worker,
+                                    "idle",
                                     &mut loads,
                                     &mut inflight_f,
                                     &mut dispatched,
@@ -528,7 +545,22 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         service_lat
                     };
                 }
-                metrics.record_response(lat, r.cold, 0.0, start.elapsed().as_secs_f64());
+                let resp_s = start.elapsed().as_secs_f64();
+                metrics.record_response(lat, r.cold, 0.0, resp_s);
+                if metrics.trace.sampled(r.rid) {
+                    // No observable init boundary on the real workers
+                    // (PJRT compilation happens inside execute), so the
+                    // whole dispatch -> response window is one `service`
+                    // span; its `cold`/`warm` detail carries the split.
+                    let disp_s = dispatched[rid].duration_since(start).as_secs_f64();
+                    let kind = if r.cold { "cold" } else { "warm" };
+                    metrics.trace.record(
+                        r.rid, r.function, "service", disp_s, resp_s, Some(r.worker), kind,
+                    );
+                    metrics.trace.record(
+                        r.rid, r.function, "complete", resp_s, resp_s, Some(r.worker), kind,
+                    );
+                }
                 debug_assert!(r.digest.iter().all(|d| d.is_finite()));
                 completed += 1;
                 // Closed loop: schedule the VU's next step.

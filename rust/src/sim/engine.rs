@@ -101,6 +101,7 @@ use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
 use crate::workload::spec::FunctionRegistry;
+use std::time::Instant;
 
 /// Per-request bookkeeping.
 #[derive(Clone, Copy, Debug)]
@@ -288,11 +289,12 @@ impl<'a> Simulation<'a> {
             inflight_f: vec![0; registry.len()],
             wake_armed: false,
             min_active: if cfg.pull_dispatch() && cfg.autoscale.min_workers == 0 { 0 } else { 1 },
-            metrics: RunMetrics::new(
+            metrics: RunMetrics::with_telemetry(
                 &name,
                 cfg.cluster.workers,
                 cfg.workload.vus,
                 cfg.workload.duration_s,
+                &cfg.telemetry,
             ),
         }
     }
@@ -344,7 +346,22 @@ impl<'a> Simulation<'a> {
         assert!(stride >= 1 && offset < stride, "bad VU slice {offset}/{stride}");
         self.vu_offset = offset;
         self.vu_stride = stride;
+        // Sampled trace spans carry the shard index so a merged trace
+        // stays attributable (serial runs keep shard 0).
+        self.metrics.trace.set_shard(offset);
         self
+    }
+
+    /// Mutable access to the phase profile, for the sharded driver's
+    /// barrier/handoff timers (no-op accumulators unless
+    /// `telemetry.phase_profile` is on).
+    pub(crate) fn phases_mut(&mut self) -> &mut crate::metrics::PhaseProfile {
+        &mut self.metrics.phases
+    }
+
+    /// Whether phase profiling is enabled for this run.
+    pub(crate) fn phases_enabled(&self) -> bool {
+        self.metrics.phases.enabled
     }
 
     /// Track per-function arrival rates even without the local pre-warm
@@ -374,6 +391,18 @@ impl<'a> Simulation<'a> {
             self.pending.is_empty(),
             "{} requests still parked at run end (leaked from the pull protocol)",
             self.pending.len()
+        );
+        // The router's own telemetry counters and the metrics layer must
+        // agree — they observe the same pushes from opposite sides.
+        debug_assert_eq!(
+            self.metrics.enqueued,
+            self.pending.pushed(),
+            "pending-queue push telemetry drifted from RunMetrics.enqueued"
+        );
+        debug_assert_eq!(
+            self.metrics.peak_pending,
+            self.pending.peak_len(),
+            "pending-queue peak telemetry drifted from RunMetrics.peak_pending"
         );
         let end = self.queue.now().max(self.cfg.workload.duration_s);
         self.metrics.finalize_scaling(end);
@@ -449,8 +478,36 @@ impl<'a> Simulation<'a> {
     }
 
     fn event_loop(&mut self) {
-        while let Some((t, ev)) = self.queue.pop() {
-            self.dispatch(ev, t);
+        if self.metrics.phases.enabled {
+            let loop0 = Instant::now();
+            loop {
+                let t0 = Instant::now();
+                let popped = self.queue.pop();
+                self.metrics.phases.pop_s += t0.elapsed().as_secs_f64();
+                let Some((t, ev)) = popped else { break };
+                self.dispatch_timed(ev, t);
+            }
+            self.metrics.phases.wall_s += loop0.elapsed().as_secs_f64();
+        } else {
+            while let Some((t, ev)) = self.queue.pop() {
+                self.dispatch(ev, t);
+            }
+        }
+    }
+
+    /// Dispatch one event under the phase profiler: autoscale ticks are
+    /// metered separately from ordinary decide/handler work. Wall-clock
+    /// only — timers never touch simulation state, so a profiled run is
+    /// bit-identical to an unprofiled one.
+    fn dispatch_timed(&mut self, ev: Event, t: f64) {
+        let autoscale = matches!(ev, Event::AutoscaleTick);
+        let t0 = Instant::now();
+        self.dispatch(ev, t);
+        let dt = t0.elapsed().as_secs_f64();
+        if autoscale {
+            self.metrics.phases.autoscale_s += dt;
+        } else {
+            self.metrics.phases.decide_s += dt;
         }
     }
 
@@ -461,8 +518,20 @@ impl<'a> Simulation<'a> {
     /// limits this pops the exact sequence `run()`'s drain would — the
     /// barrier only re-chunks it.
     pub(crate) fn step_until(&mut self, limit: f64) -> bool {
-        while let Some((t, ev)) = self.queue.pop_before(limit) {
-            self.dispatch(ev, t);
+        if self.metrics.phases.enabled {
+            let loop0 = Instant::now();
+            loop {
+                let t0 = Instant::now();
+                let popped = self.queue.pop_before(limit);
+                self.metrics.phases.pop_s += t0.elapsed().as_secs_f64();
+                let Some((t, ev)) = popped else { break };
+                self.dispatch_timed(ev, t);
+            }
+            self.metrics.phases.wall_s += loop0.elapsed().as_secs_f64();
+        } else {
+            while let Some((t, ev)) = self.queue.pop_before(limit) {
+                self.dispatch(ev, t);
+            }
         }
         self.queue.is_empty()
     }
@@ -618,7 +687,7 @@ impl<'a> Simulation<'a> {
             };
             self.schedulers[si].select(task.function, &mut ctx)
         };
-        self.bind_pending(rid, w, t);
+        self.bind_pending(rid, w, t, "steal");
     }
 
     fn dispatch(&mut self, ev: Event, t: f64) {
@@ -968,6 +1037,7 @@ impl<'a> Simulation<'a> {
     /// request in the pending queue or refuse it at the admission bound.
     fn issue(&mut self, vu: usize, step: usize, f: usize, t: f64) {
         let rid = self.requests.len() as u64;
+        self.metrics.trace.record(rid, f, "arrival", t, t, None, "");
         if self.cfg.cluster.prewarm || self.track_rates {
             self.track_arrival(f, t);
         }
@@ -983,9 +1053,11 @@ impl<'a> Simulation<'a> {
         // validator guarantees `min_active == 0` implies pull mode).
         if self.pull && active == 0 {
             if !self.admit(f) {
+                self.metrics.trace.record(rid, f, "decide", t, t, None, "reject");
                 self.on_reject(vu, step, f, t);
                 return;
             }
+            self.metrics.trace.record(rid, f, "decide", t, t, None, "enqueue");
             self.park(rid, vu, step, f, si, t);
             if !self.wake_armed {
                 self.wake_armed = true;
@@ -1015,6 +1087,7 @@ impl<'a> Simulation<'a> {
         match decision {
             Decision::Assign(w) => {
                 debug_assert!(w < active, "scheduler picked drained worker {w}");
+                self.metrics.trace.record(rid, f, "decide", t, t, Some(w), "assign");
                 self.loads[si].inc(w);
                 self.metrics.record_assignment(w, t);
                 self.requests.push(RequestMeta {
@@ -1033,12 +1106,17 @@ impl<'a> Simulation<'a> {
             }
             Decision::Enqueue => {
                 if self.admit(f) {
+                    self.metrics.trace.record(rid, f, "decide", t, t, None, "enqueue");
                     self.park(rid, vu, step, f, si, t);
                 } else {
+                    self.metrics.trace.record(rid, f, "decide", t, t, None, "reject");
                     self.on_reject(vu, step, f, t);
                 }
             }
-            Decision::Reject(_) => self.on_reject(vu, step, f, t),
+            Decision::Reject(_) => {
+                self.metrics.trace.record(rid, f, "decide", t, t, None, "reject");
+                self.on_reject(vu, step, f, t);
+            }
         }
     }
 
@@ -1127,7 +1205,9 @@ impl<'a> Simulation<'a> {
     /// deadline flush, a wake flush or a cross-shard steal). Never binds
     /// to a drained worker — the pull protocol's safety invariant,
     /// enforced unconditionally (property-tested in tests/dispatch.rs).
-    fn bind_pending(&mut self, rid: u64, w: WorkerId, t: f64) {
+    /// `kind` labels the bind path for the lifecycle trace
+    /// (`pull`/`idle`/`deadline`/`flush`/`steal`).
+    fn bind_pending(&mut self, rid: u64, w: WorkerId, t: f64, kind: &'static str) {
         assert!(
             w < self.cluster.active_workers(),
             "pull dispatch bound request {rid} to drained worker {w}"
@@ -1139,14 +1219,16 @@ impl<'a> Simulation<'a> {
         self.loads[si].inc(w);
         self.metrics.record_assignment(w, t);
         self.metrics.record_pending_wait(f, t - arrival);
+        self.metrics.trace.record(rid, f, "pending", arrival, t, None, "");
+        self.metrics.trace.record(rid, f, "bind", t, t, Some(w), kind);
         self.start_on(w, rid, f, t);
     }
 
     /// Force-place one parked request of `f` through the scheduler's
     /// synchronous path (warm if `PQ_f` gained an entry in the meantime,
     /// fallback placement otherwise) — the shared tail of the deadline
-    /// drain below.
-    fn force_place_fn(&mut self, rid: u64, f: usize, t: f64) {
+    /// drain below. `kind` labels the trigger for the lifecycle trace.
+    fn force_place_fn(&mut self, rid: u64, f: usize, t: f64, kind: &'static str) {
         let active = self.cluster.active_workers();
         let si = self.requests[rid as usize].sched;
         let w = {
@@ -1158,7 +1240,7 @@ impl<'a> Simulation<'a> {
             };
             self.schedulers[si].select(f, &mut ctx)
         };
-        self.bind_pending(rid, w, t);
+        self.bind_pending(rid, w, t, kind);
     }
 
     /// A parked request's wait deadline expired: force-place function
@@ -1192,7 +1274,7 @@ impl<'a> Simulation<'a> {
         }
         loop {
             let Some(head) = self.pending.pop_fn(meta.function) else { break };
-            self.force_place_fn(head, meta.function, t);
+            self.force_place_fn(head, meta.function, t, "deadline");
             if head == rid {
                 break;
             }
@@ -1244,7 +1326,7 @@ impl<'a> Simulation<'a> {
                 self.cluster.active_workers() > 0,
                 "flush_pending on an empty cluster"
             );
-            self.force_place_fn(rid, f, t);
+            self.force_place_fn(rid, f, t, "flush");
         }
     }
 
@@ -1273,7 +1355,7 @@ impl<'a> Simulation<'a> {
             if fair { pending.pop_fair_where(eligible) } else { pending.pop_arrival_where(eligible) };
         match got {
             Some((rid, _f)) => {
-                self.bind_pending(rid, w, t);
+                self.bind_pending(rid, w, t, "idle");
                 true
             }
             None => false,
@@ -1305,7 +1387,7 @@ impl<'a> Simulation<'a> {
         };
         let Pull::Function(pf) = pull else { return false };
         let Some(rid) = self.pending.pop_fn(pf) else { return false };
-        self.bind_pending(rid, w, t);
+        self.bind_pending(rid, w, t, "pull");
         true
     }
 
@@ -1347,8 +1429,10 @@ impl<'a> Simulation<'a> {
             self.inflight_f[meta.function] += 1;
         }
         let mut dur = self.registry.sample_exec_s(meta.function, &mut self.service_rng);
+        let mut init_s = 0.0;
         if info.cold {
             let init = self.registry.sample_init_s(meta.function, &mut self.service_rng);
+            init_s = init;
             if self.pull {
                 // Observed cold−warm start delta: feeds the adaptive
                 // per-function wait deadline (DESIGN.md §8). The sample
@@ -1377,6 +1461,30 @@ impl<'a> Simulation<'a> {
         // Cold/warm and queue delay resolved at start time, kept per rid.
         self.cold_flags[info.request_id as usize] = info.cold;
         self.queue_delays[info.request_id as usize] = info.queue_delay_s;
+        if self.metrics.trace.sampled(info.request_id) {
+            // Split the execution span at the (unscaled) init boundary;
+            // congestion stretch lands in the service portion.
+            if info.cold {
+                self.metrics.trace.record(
+                    info.request_id,
+                    meta.function,
+                    "cold_init",
+                    t,
+                    t + init_s,
+                    Some(w),
+                    "",
+                );
+            }
+            self.metrics.trace.record(
+                info.request_id,
+                meta.function,
+                "service",
+                t + init_s.min(dur),
+                t + dur,
+                Some(w),
+                if info.cold { "cold" } else { "warm" },
+            );
+        }
         self.queue.push_at(
             t + dur,
             Event::Completion { worker: w, sandbox: info.sandbox, request: info.request_id },
@@ -1442,6 +1550,15 @@ impl<'a> Simulation<'a> {
         let cold = self.cold_flags[rid as usize];
         let qd = self.queue_delays[rid as usize];
         self.metrics.record_response(t - meta.arrival, cold, qd, t);
+        self.metrics.trace.record(
+            rid,
+            meta.function,
+            "complete",
+            t,
+            t,
+            Some(w),
+            if cold { "cold" } else { "warm" },
+        );
 
         // Closed loop: the VU thinks, then issues its next step.
         if meta.vu != usize::MAX {

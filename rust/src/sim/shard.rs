@@ -94,6 +94,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Barrier, Mutex};
+use std::time::Instant;
 
 use super::engine::{Simulation, StolenTask};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy};
@@ -571,11 +572,19 @@ fn shard_main(
         Some(tr) => sim.prepare_open(tr),
         None => sim.prepare_closed(),
     }
+    // Phase profiling (`telemetry.phase_profile`): wall-clock timers
+    // around the barrier rendezvous and the handoff transfer, write-only
+    // into the metrics — a profiled run is bit-identical to an unprofiled
+    // one. `step_until` meters its own pop/decide/autoscale time; the
+    // sections below are exactly the time a shard spends *not* draining
+    // its own events.
+    let profiled = sim.phases_enabled();
     let mut epoch = 0u64;
     loop {
         epoch += 1;
         let limit = epoch as f64 * barrier_dt;
         let drained = sim.step_until(limit);
+        let bar0 = profiled.then(Instant::now);
         // Phase 1: publish this shard's report.
         {
             let mut c = coord.lock().unwrap();
@@ -607,9 +616,17 @@ fn shard_main(
             let mut c = coord.lock().unwrap();
             (std::mem::take(&mut c.mailboxes[s]), c.done, c.stole)
         };
+        if let Some(t0) = bar0 {
+            let dt = t0.elapsed().as_secs_f64();
+            let p = sim.phases_mut();
+            p.barrier_s += dt;
+            p.wall_s += dt;
+        }
         if !msgs.is_empty() {
             sim.advance_clock_to(limit);
             for m in msgs {
+                let t0 = profiled.then(Instant::now);
+                let is_handoff = matches!(m, ShardMsg::Handoff { .. });
                 match m {
                     ShardMsg::ScaleTo { target } => sim.apply_scale_target(target),
                     ShardMsg::SpawnPrewarm { f, n } => sim.apply_prewarm(f, n),
@@ -621,9 +638,20 @@ fn shard_main(
                         }
                     }
                 }
+                if let Some(t0) = t0 {
+                    let dt = t0.elapsed().as_secs_f64();
+                    let p = sim.phases_mut();
+                    if is_handoff {
+                        p.handoff_s += dt;
+                    } else {
+                        p.autoscale_s += dt;
+                    }
+                    p.wall_s += dt;
+                }
             }
         }
         if stole {
+            let t0 = profiled.then(Instant::now);
             // Transfer barrier: every donor has deposited its payloads.
             // All shards agree on `stole` (read between the same pair of
             // barriers), so the rendezvous count always matches.
@@ -639,6 +667,12 @@ fn shard_main(
                         sim.ingest_stolen(task);
                     }
                 }
+            }
+            if let Some(t0) = t0 {
+                let dt = t0.elapsed().as_secs_f64();
+                let p = sim.phases_mut();
+                p.handoff_s += dt;
+                p.wall_s += dt;
             }
         }
         if done {

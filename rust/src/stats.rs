@@ -230,6 +230,314 @@ impl Samples {
     }
 }
 
+/// Mergeable streaming quantile sketch (DDSketch-style, Masson et al.,
+/// VLDB 2019): logarithmic buckets with relative accuracy `alpha`, so any
+/// reported quantile `v̂` satisfies `|v̂ - v| <= alpha * v` for the true
+/// quantile value `v`. Memory is bounded by the *value range*, not the
+/// stream length — `O(log(max/min) / alpha)` buckets — which is what lets
+/// `RunMetrics` drop its per-request sample vectors on huge runs
+/// (`[telemetry] sketch = true`).
+///
+/// Determinism: buckets live in a `BTreeMap` keyed by integer bucket
+/// index, inserts/merges are pure integer-count arithmetic, and two
+/// sketches with the same `alpha` have the same bucket geometry — so a
+/// merge (the shard-barrier reduction) is an exact count addition and the
+/// merged sketch is *bit-identical* to one sketch fed the pooled stream,
+/// in any merge order.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    alpha: f64,
+    /// ln(gamma) with gamma = (1 + alpha) / (1 - alpha).
+    ln_gamma: f64,
+    /// Counts per logarithmic bucket: index `i` covers `(γ^(i-1), γ^i]`.
+    bins: std::collections::BTreeMap<i32, u64>,
+    /// Observations at or below [`QuantileSketch::MIN_VALUE`] (zeros).
+    zeros: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl QuantileSketch {
+    /// Values at or below this threshold land in the exact zeros bucket
+    /// (latencies are non-negative; 1 ns in the engine's ms unit).
+    pub const MIN_VALUE: f64 = 1e-9;
+    /// Hard cap on live buckets; beyond it the lowest-index buckets
+    /// collapse together (DDSketch's bound — it only coarsens the extreme
+    /// low tail, which no reported percentile reads).
+    pub const MAX_BINS: usize = 4096;
+
+    /// An empty sketch with relative accuracy `alpha` (e.g. 0.005 = 0.5%).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 0.5, "alpha out of range: {alpha}");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        Self {
+            alpha,
+            ln_gamma: gamma.ln(),
+            bins: std::collections::BTreeMap::new(),
+            zeros: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The configured relative accuracy.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Bucket index for a value above `MIN_VALUE`.
+    #[inline]
+    fn index_of(&self, x: f64) -> i32 {
+        (x.ln() / self.ln_gamma).ceil() as i32
+    }
+
+    /// Representative value of bucket `i`: the midpoint `2γ^i/(γ+1)`,
+    /// whose relative distance to every value in the bucket is ≤ alpha.
+    #[inline]
+    fn value_of(&self, i: i32) -> f64 {
+        let gamma_i = (self.ln_gamma * i as f64).exp();
+        2.0 * gamma_i / ((self.ln_gamma.exp()) + 1.0)
+    }
+
+    /// Fold one observation into the sketch.
+    pub fn push(&mut self, x: f64) {
+        assert!(x.is_finite() && x >= 0.0, "sketch values must be finite and >= 0: {x}");
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if x <= Self::MIN_VALUE {
+            self.zeros += 1;
+            return;
+        }
+        *self.bins.entry(self.index_of(x)).or_insert(0) += 1;
+        if self.bins.len() > Self::MAX_BINS {
+            self.collapse_lowest();
+        }
+    }
+
+    /// Merge the two lowest buckets (bounds memory; coarsens only the
+    /// extreme low tail).
+    fn collapse_lowest(&mut self) {
+        let mut it = self.bins.keys().copied();
+        if let (Some(lo), Some(next)) = (it.next(), it.next()) {
+            let c = self.bins.remove(&lo).unwrap_or(0);
+            *self.bins.entry(next).or_insert(0) += c;
+        }
+    }
+
+    /// Observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing was pushed yet.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact arithmetic mean of the stream (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (`+inf` when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum (`-inf` when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Live bucket count (memory diagnostic; bounded by `MAX_BINS`).
+    pub fn bin_count(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Quantile estimate for `p` in [0, 100] (NaN when empty). The exact
+    /// min/max are returned at the extremes; interior quantiles carry the
+    /// `alpha` relative-error guarantee.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if p == 0.0 {
+            return self.min;
+        }
+        if p == 100.0 {
+            return self.max;
+        }
+        let rank = (p / 100.0 * (self.count - 1) as f64).floor() as u64;
+        let mut cum = self.zeros;
+        if rank < cum {
+            return 0.0;
+        }
+        for (&i, &c) in &self.bins {
+            cum += c;
+            if rank < cum {
+                return self.value_of(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// CDF sampled at `points` evenly spaced quantiles: Vec<(value, prob)>
+    /// — the sketch-mode backing of the latency-CDF exports.
+    pub fn cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        if self.count == 0 {
+            return Vec::new();
+        }
+        (0..points)
+            .map(|i| {
+                let q = (i + 1) as f64 / points as f64;
+                (self.percentile(q * 100.0), q)
+            })
+            .collect()
+    }
+
+    /// Merge another sketch (the shard barrier reduction). Requires the
+    /// same `alpha` (identical bucket geometry); the result is identical
+    /// to a single sketch fed both streams, in any merge order.
+    pub fn merge_from(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "merging sketches with different accuracies ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        for (&i, &c) in &other.bins {
+            *self.bins.entry(i).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        while self.bins.len() > Self::MAX_BINS {
+            self.collapse_lowest();
+        }
+    }
+}
+
+/// A latency/wait distribution in one of two storage modes: exact sample
+/// vectors (the determinism/ablation baseline — every figure-grade run)
+/// or a bounded-memory [`QuantileSketch`] (`[telemetry] sketch = true`,
+/// the million-worker tier). The engine pushes through one API and the
+/// summary/export layers query percentiles without caring which backing
+/// is live; exact mode is bit-identical to the pre-telemetry layout.
+#[derive(Clone, Debug)]
+pub enum Dist {
+    /// Exact per-sample storage ([`Samples`]).
+    Exact(Samples),
+    /// Bounded-memory streaming sketch ([`QuantileSketch`]).
+    Sketch(QuantileSketch),
+}
+
+impl Dist {
+    /// An exact (uncapped) sample store.
+    pub fn exact() -> Self {
+        Dist::Exact(Samples::new())
+    }
+
+    /// A streaming sketch with relative accuracy `alpha`.
+    pub fn sketch(alpha: f64) -> Self {
+        Dist::Sketch(QuantileSketch::new(alpha))
+    }
+
+    /// Build the mode the telemetry config asks for.
+    pub fn for_mode(sketch: bool, alpha: f64) -> Self {
+        if sketch {
+            Self::sketch(alpha)
+        } else {
+            Self::exact()
+        }
+    }
+
+    /// True when the sketch backing is live.
+    pub fn is_sketch(&self) -> bool {
+        matches!(self, Dist::Sketch(_))
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, x: f64) {
+        match self {
+            Dist::Exact(s) => s.push(x),
+            Dist::Sketch(k) => k.push(x),
+        }
+    }
+
+    /// Observations ever pushed.
+    pub fn seen(&self) -> u64 {
+        match self {
+            Dist::Exact(s) => s.seen(),
+            Dist::Sketch(k) => k.count(),
+        }
+    }
+
+    /// True when nothing was pushed yet.
+    pub fn is_empty(&self) -> bool {
+        self.seen() == 0
+    }
+
+    /// Percentile in [0, 100]: exact (linear interpolation) or within the
+    /// sketch's `alpha` relative error. NaN when empty.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        match self {
+            Dist::Exact(s) => s.percentile(p),
+            Dist::Sketch(k) => k.percentile(p),
+        }
+    }
+
+    /// Mean of the stream (exact in both modes; NaN when empty).
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Exact(s) => s.mean(),
+            Dist::Sketch(k) => k.mean(),
+        }
+    }
+
+    /// CDF sampled at `points` evenly spaced quantiles.
+    pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
+        match self {
+            Dist::Exact(s) => s.cdf(points),
+            Dist::Sketch(k) => k.cdf(points),
+        }
+    }
+
+    /// The exact sample store, when that mode is live (the raw-value CSV
+    /// export paths are exact-only).
+    pub fn as_samples_mut(&mut self) -> Option<&mut Samples> {
+        match self {
+            Dist::Exact(s) => Some(s),
+            Dist::Sketch(_) => None,
+        }
+    }
+
+    /// Merge another distribution of the same mode (the shard reduction).
+    pub fn merge_from(&mut self, other: &Dist) {
+        match (self, other) {
+            (Dist::Exact(a), Dist::Exact(b)) => a.merge_from(b),
+            (Dist::Sketch(a), Dist::Sketch(b)) => a.merge_from(b),
+            _ => panic!("merging Dist values with different storage modes"),
+        }
+    }
+}
+
 /// Fixed-width time binning: accumulate per-bin counts/sums over virtual
 /// time. Backs the tasks-per-second series (Fig 14), the cumulative
 /// throughput curve (Fig 16) and requests/s (Fig 17).
@@ -583,5 +891,115 @@ mod tests {
         let mut e = Samples::new();
         assert!(e.percentile(50.0).is_nan());
         assert!(TimeSeries::new(1.0).mean_rate() == 0.0);
+        let k = QuantileSketch::new(0.01);
+        assert!(k.percentile(50.0).is_nan());
+        assert!(k.mean().is_nan());
+        assert!(k.min().is_infinite() && k.max().is_infinite());
+        let mut d = Dist::sketch(0.01);
+        assert!(d.is_empty());
+        assert!(d.percentile(99.0).is_nan());
+    }
+
+    /// A lognormal-ish heavy-tailed stream (the latency shape): every
+    /// interior percentile must sit within the advertised relative error
+    /// of the exact value.
+    #[test]
+    fn sketch_relative_error_bound() {
+        let alpha = 0.005;
+        let mut exact = Samples::new();
+        let mut sk = QuantileSketch::new(alpha);
+        let mut rng = crate::util::rng::Pcg64::new(42);
+        for _ in 0..100_000 {
+            // exp(N(0,1)-ish via sum of uniforms) scaled into ms.
+            let z = (0..4).map(|_| rng.next_f64()).sum::<f64>() - 2.0;
+            let x = 40.0 * (z * 1.2).exp();
+            exact.push(x);
+            sk.push(x);
+        }
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let e = exact.percentile(p);
+            let s = sk.percentile(p);
+            let rel = (s - e).abs() / e;
+            assert!(rel <= 2.0 * alpha, "p{p}: exact {e}, sketch {s}, rel err {rel}");
+        }
+        assert!((sk.mean() - exact.mean()).abs() / exact.mean() < 1e-9, "mean is exact");
+        assert_eq!(sk.percentile(0.0), exact.percentile(0.0), "min is exact");
+        assert_eq!(sk.percentile(100.0), exact.percentile(100.0), "max is exact");
+        assert!(sk.bin_count() <= QuantileSketch::MAX_BINS);
+    }
+
+    /// Shard-merge contract: merging K sub-sketches is *identical* to one
+    /// sketch over the pooled stream (pure integer count addition), in
+    /// any merge order.
+    #[test]
+    fn sketch_merge_equals_pooled() {
+        let mut pooled = QuantileSketch::new(0.005);
+        let mut parts: Vec<QuantileSketch> = (0..4).map(|_| QuantileSketch::new(0.005)).collect();
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        for i in 0..20_000 {
+            let x = rng.next_f64() * 500.0;
+            pooled.push(x);
+            parts[i % 4].push(x);
+        }
+        let mut merged = parts[0].clone();
+        for p in &parts[1..] {
+            merged.merge_from(p);
+        }
+        assert_eq!(merged.count(), pooled.count());
+        for p in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(p), pooled.percentile(p), "p{p} diverged");
+        }
+        assert_eq!(merged.min(), pooled.min());
+        assert_eq!(merged.max(), pooled.max());
+    }
+
+    /// Memory bound: a huge stream over a wide value range keeps the live
+    /// bucket count under the cap (no per-request growth).
+    #[test]
+    fn sketch_memory_bounded() {
+        let mut sk = QuantileSketch::new(0.005);
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        for _ in 0..200_000 {
+            sk.push(rng.next_f64().powi(6) * 1e7 + 1e-6);
+        }
+        assert_eq!(sk.count(), 200_000);
+        assert!(sk.bin_count() <= QuantileSketch::MAX_BINS, "bins: {}", sk.bin_count());
+    }
+
+    #[test]
+    fn sketch_zeros_bucket() {
+        let mut sk = QuantileSketch::new(0.01);
+        for _ in 0..90 {
+            sk.push(0.0);
+        }
+        for _ in 0..10 {
+            sk.push(100.0);
+        }
+        assert_eq!(sk.percentile(50.0), 0.0);
+        assert!((sk.percentile(95.0) - 100.0).abs() / 100.0 < 0.01);
+    }
+
+    #[test]
+    fn dist_exact_mode_matches_samples() {
+        let mut d = Dist::exact();
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            let x = ((i * 131) % 997) as f64;
+            d.push(x);
+            s.push(x);
+        }
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(d.percentile(p), s.percentile(p));
+        }
+        assert_eq!(d.seen(), s.seen());
+        assert!(d.as_samples_mut().is_some());
+        assert!(Dist::sketch(0.01).as_samples_mut().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "different storage modes")]
+    fn dist_merge_rejects_mode_mismatch() {
+        let mut a = Dist::exact();
+        a.merge_from(&Dist::sketch(0.01));
     }
 }

@@ -7,3 +7,4 @@ pub mod json;
 pub mod loadidx;
 pub mod prop;
 pub mod rng;
+pub mod sysinfo;

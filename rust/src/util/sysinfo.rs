@@ -1,0 +1,49 @@
+//! Process self-inspection without external crates: peak RSS from
+//! `/proc/self/status` (Linux only; `None` elsewhere).
+
+/// Peak resident set size of this process in MiB, read from the
+/// kernel's `VmHWM` high-water mark. Returns `None` off Linux or if
+/// `/proc` is unavailable — callers should report `null`, not 0, so a
+/// missing measurement is never mistaken for a tiny one.
+pub fn peak_rss_mb() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        parse_vm_hwm_kb(&status).map(|kb| kb / 1024.0)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Extract the `VmHWM` value in kB from `/proc/self/status` text.
+#[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+fn parse_vm_hwm_kb(status: &str) -> Option<f64> {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let num = rest.trim().split_whitespace().next()?;
+            return num.parse::<f64>().ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vm_hwm_line() {
+        let status = "Name:\thiku\nVmPeak:\t  999 kB\nVmHWM:\t   2048 kB\nThreads:\t1\n";
+        assert_eq!(parse_vm_hwm_kb(status), Some(2048.0));
+        assert_eq!(parse_vm_hwm_kb("Name:\thiku\n"), None);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_is_positive_on_linux() {
+        let mb = peak_rss_mb().expect("/proc/self/status should parse");
+        assert!(mb > 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Telemetry-layer integration tests (ISSUE 6 acceptance):
+//! - sketch-mode percentiles within 1% of exact mode on a 100k-request run
+//!   (the DDSketch alpha = 0.005 guarantee, observed end to end);
+//! - merged shard sketches/timelines match a single pooled collector;
+//! - telemetry outputs (sketch summaries, lifecycle traces) are
+//!   bit-reproducible for a fixed (seed, shards);
+//! - phase profiling surfaces sane fractions in `summary_json`.
+
+use hiku::config::{Config, TelemetryConfig};
+use hiku::metrics::RunMetrics;
+use hiku::report::export::{chrome_trace_json, trace_csv};
+use hiku::sim::{run_once, run_trace};
+use hiku::util::rng::Pcg64;
+use hiku::workload::loadgen::OpenLoopTrace;
+
+/// Deterministic open-loop trace: `n` arrivals uniformly spaced over
+/// `duration_s`, round-robin over `functions` types.
+fn uniform_trace(n: usize, duration_s: f64, functions: usize) -> OpenLoopTrace {
+    let dt = duration_s / n as f64;
+    let arr: Vec<(f64, usize)> = (0..n).map(|i| (i as f64 * dt, i % functions)).collect();
+    OpenLoopTrace::from_synthetic(&arr, functions)
+}
+
+#[test]
+fn sketch_percentiles_within_one_percent_of_exact_on_100k_requests() {
+    let mut cfg = Config::default();
+    cfg.cluster.workers = 1_000;
+    cfg.workload.duration_s = 30.0;
+    let trace = uniform_trace(100_500, 30.0, 40);
+    let mut exact = run_trace(&cfg, &trace, 42).expect("exact run");
+    cfg.telemetry.sketch = true;
+    let mut sketch = run_trace(&cfg, &trace, 42).expect("sketch run");
+    assert!(exact.completed >= 100_000, "need a 100k-request run, got {}", exact.completed);
+    assert_eq!(
+        exact.completed, sketch.completed,
+        "metric storage mode must not change the simulation"
+    );
+    for p in [50.0, 99.0] {
+        let e = exact.latency_percentile_ms(p);
+        let s = sketch.latency_percentile_ms(p);
+        assert!(e.is_finite() && e > 0.0, "degenerate exact p{p}: {e}");
+        assert!(
+            (s - e).abs() <= 0.01 * e,
+            "p{p} relative error over 1%: exact {e:.3} ms vs sketch {s:.3} ms"
+        );
+    }
+    // Sketch mode marks itself in the summary; exact mode stays silent.
+    assert!(sketch.summary_json().get("sketch").is_some());
+    assert!(exact.summary_json().get("sketch").is_none());
+}
+
+#[test]
+fn merged_collectors_match_one_pooled_collector() {
+    // Property: for a stream split across shard-local collectors, the
+    // shard-merge reduction reproduces a single collector fed the pooled
+    // stream — percentiles bit-identical (count arithmetic in both
+    // storage modes), throughput step-sums exact.
+    for sketch in [false, true] {
+        let tel = TelemetryConfig { sketch, ..Default::default() };
+        let mut pooled = RunMetrics::with_telemetry("hiku", 4, 4, 10.0, &tel);
+        let mut parts: Vec<RunMetrics> =
+            (0..4).map(|_| RunMetrics::with_telemetry("hiku", 1, 1, 10.0, &tel)).collect();
+        let mut rng = Pcg64::new(99);
+        for i in 0..20_000u64 {
+            let lat_s = rng.next_f64().powi(3) * 2.0; // heavy-tailed
+            let cold = i % 7 == 0;
+            let t = (i % 10) as f64;
+            pooled.record_response(lat_s, cold, 0.0, t);
+            let k = rng.index(4);
+            parts[k].record_response(lat_s, cold, 0.0, t);
+        }
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.completed, pooled.completed);
+        for q in [50.0, 90.0, 99.0] {
+            assert_eq!(
+                merged.latency_percentile_ms(q),
+                pooled.latency_percentile_ms(q),
+                "sketch={sketch} p{q} diverged after merge"
+            );
+        }
+        assert!((merged.mean_latency_ms() - pooled.mean_latency_ms()).abs() < 1e-6);
+        let (mc, pc) = (merged.throughput.cumulative(), pooled.throughput.cumulative());
+        assert_eq!(mc.last(), pc.last(), "sketch={sketch} throughput step-sum diverged");
+    }
+}
+
+#[test]
+fn sharded_sketch_and_trace_outputs_are_bit_reproducible() {
+    let mut cfg = Config::default();
+    cfg.cluster.workers = 8;
+    cfg.workload.vus = 24;
+    cfg.workload.duration_s = 20.0;
+    cfg.sim.shards = 2;
+    cfg.dispatch.mode = "pull".into();
+    cfg.telemetry.sketch = true;
+    cfg.telemetry.trace_sample = 4;
+    cfg.validate().expect("valid telemetry config");
+    let mut a = run_once(&cfg, 7).expect("run a");
+    let mut b = run_once(&cfg, 7).expect("run b");
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "sketch summary must be bit-reproducible per (seed, shards)"
+    );
+    assert_eq!(trace_csv(&a), trace_csv(&b), "trace.csv must be bit-reproducible");
+    assert_eq!(
+        chrome_trace_json(&a).to_string_compact(),
+        chrome_trace_json(&b).to_string_compact()
+    );
+    assert!(!a.trace.is_empty(), "sampling 1 in 4 requests must record spans");
+    assert!(a.summary_json().get("trace_spans").is_some());
+    // Arrival spans exist for sampled requests and phases come from the
+    // documented taxonomy.
+    let taxonomy =
+        ["arrival", "decide", "pending", "bind", "cold_init", "service", "complete"];
+    assert!(a.trace.spans().iter().any(|s| s.phase == "arrival"));
+    for s in a.trace.spans() {
+        assert!(taxonomy.contains(&s.phase), "unknown span phase {}", s.phase);
+        assert!(s.end_s >= s.start_s, "negative span {}..{}", s.start_s, s.end_s);
+        assert!(s.shard < 2, "shard tag out of range");
+    }
+}
+
+#[test]
+fn tracing_and_profiling_leave_the_run_bit_identical() {
+    // Telemetry must be write-only: the same (config, seed) with tracing
+    // and phase profiling enabled reproduces the plain run's metrics
+    // exactly (summaries compare equal once the gated telemetry keys are
+    // ignored — easiest checked field by field on the scalars).
+    let mut cfg = Config::default();
+    cfg.cluster.workers = 6;
+    cfg.workload.vus = 20;
+    cfg.workload.duration_s = 15.0;
+    cfg.dispatch.mode = "pull".into();
+    let mut plain = run_once(&cfg, 3).expect("plain run");
+    cfg.telemetry.trace_sample = 2;
+    cfg.telemetry.phase_profile = true;
+    let mut traced = run_once(&cfg, 3).expect("traced run");
+    assert_eq!(plain.completed, traced.completed);
+    assert_eq!(plain.events_processed, traced.events_processed);
+    assert_eq!(plain.enqueued, traced.enqueued);
+    assert_eq!(plain.mean_latency_ms(), traced.mean_latency_ms());
+    assert_eq!(plain.latency_percentile_ms(99.0), traced.latency_percentile_ms(99.0));
+    // And the profile itself is sane: fractions in [0, 1] of positive wall.
+    let j = traced.summary_json();
+    let ph = j.get("phases").expect("phases object in profiled summary");
+    assert!(ph.get("wall_s").unwrap().as_f64().unwrap() > 0.0);
+    for k in
+        ["pop_frac", "decide_frac", "barrier_frac", "handoff_frac", "autoscale_frac"]
+    {
+        let v = ph.get(k).unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&v), "{k} = {v} out of range");
+    }
+    assert!(plain.summary_json().get("phases").is_none(), "profile keys must be gated");
+}
