@@ -1,0 +1,179 @@
+//! Robustness ablation: fault injection & recovery — pull-mode hiku vs
+//! push-mode baselines under a deterministic kill-and-recover schedule.
+//!
+//! Section 1 kills two workers mid-run (`faults.crashes`, explicit
+//! schedule, recovering after `mttr_s`) and compares three arms on the
+//! same closed-loop workload:
+//!
+//!   hiku / pull    — parked work re-routes around the dead workers
+//!                    (liveness-aware late binding), in-flight work
+//!                    re-enqueues into the pending queue on crash
+//!   lc / push      — least-connections steers via the avoid mask but
+//!                    binds immediately; in-flight losses burn retries
+//!   hash-mod / push — address-based placement cannot observe liveness:
+//!                    every arrival hashed to a dead worker bounces off
+//!                    it until the retry budget fails the request
+//!
+//! The headline is the `failed` column: requests whose bounded retry
+//! budget (`faults.max_retries`) ran out. The pull router should fail
+//! strictly fewer than push-mode hash-mod — that delta is what
+//! liveness-aware pull dispatch buys during partial outages.
+//!
+//! Section 2 is a chaos run (random crash/recover churn + stragglers +
+//! cold-init failures) on pull-mode hiku, reporting the recovery
+//! machinery: crash/recovery counts, mean recovery latency, straggler
+//! hedges, warm-state migrations, and the conservation identity
+//! `arrivals == completed + rejected + failed`.
+//!
+//! Emits machine-readable **`BENCH_faults.json`** — the committed
+//! experiment recipe is in EXPERIMENTS.md §Faults; determinism and
+//! conservation are enforced by `tests/faults.rs`.
+//!
+//! Usage:
+//!   cargo bench --bench ablation_faults            # full table
+//!   cargo bench --bench ablation_faults -- --quick # CI smoke
+
+use hiku::config::Config;
+use hiku::sim::run_once;
+use hiku::util::json::{obj, Json};
+
+fn base_cfg(dur: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.vus = 40;
+    cfg.workload.duration_s = dur;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dur = if quick { 30.0 } else { 90.0 };
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+
+    // Two explicit mid-run kills, each down for 20% of the run.
+    let kill_a = 0.3 * dur;
+    let kill_b = 0.5 * dur;
+    let crashes = format!("{kill_a}:1;{kill_b}:2");
+    let mttr = 0.2 * dur;
+
+    println!(
+        "# fault ablation: kill workers 1,2 at t={kill_a:.0}s,{kill_b:.0}s (mttr {mttr:.0}s), \
+         {} workers, {} VUs, {dur:.0} s",
+        Config::default().cluster.workers,
+        base_cfg(dur).workload.vus,
+    );
+    println!(
+        "{:<10} {:<5} {:>5} {:>9} {:>7} {:>8} {:>8} {:>7} {:>8} {:>9}",
+        "sched", "mode", "seed", "completed", "failed", "retried", "rerouted", "hedged",
+        "migrated", "p95(ms)"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut failed_by_arm = [0u64; 3]; // [hiku/pull, lc/push, hash/push]
+    let arms: [(&str, &str); 3] =
+        [("hiku", "pull"), ("least-connections", "push"), ("hash-mod", "push")];
+    for (i, &(sched, mode)) in arms.iter().enumerate() {
+        for &seed in seeds {
+            let mut cfg = base_cfg(dur);
+            cfg.scheduler.name = sched.into();
+            cfg.dispatch.mode = mode.into();
+            cfg.faults.enabled = true;
+            cfg.faults.crashes = crashes.clone();
+            cfg.faults.mttr_s = mttr;
+            let mut m = run_once(&cfg, seed).expect("fault ablation run");
+            assert_eq!(
+                m.arrivals,
+                m.completed + m.rejected + m.failed,
+                "conservation violated: {sched}/{mode} seed {seed}"
+            );
+            failed_by_arm[i] += m.failed;
+            let p95 = m.latency_percentile_ms(95.0);
+            println!(
+                "{:<10} {:<5} {:>5} {:>9} {:>7} {:>8} {:>8} {:>7} {:>8} {:>9.1}",
+                sched, mode, seed, m.completed, m.failed, m.retried, m.re_routed, m.hedged,
+                m.migrated, p95
+            );
+            rows.push(obj(vec![
+                ("scheduler", sched.into()),
+                ("mode", mode.into()),
+                ("seed", seed.into()),
+                ("arrivals", m.arrivals.into()),
+                ("completed", m.completed.into()),
+                ("rejected", m.rejected.into()),
+                ("failed", m.failed.into()),
+                ("retried", m.retried.into()),
+                ("re_routed", m.re_routed.into()),
+                ("hedged", m.hedged.into()),
+                ("migrated", m.migrated.into()),
+                ("worker_crashes", m.worker_crashes.into()),
+                ("worker_recoveries", m.worker_recoveries.into()),
+                ("p95_ms", p95.into()),
+            ]));
+        }
+    }
+
+    // ---- chaos run: random churn + stragglers + init failures ----
+    println!("# chaos: pull-mode hiku, random crash/recover + stragglers + init failures");
+    let mut chaos_rows: Vec<Json> = Vec::new();
+    for &seed in seeds {
+        let mut cfg = base_cfg(dur);
+        cfg.scheduler.name = "hiku".into();
+        cfg.dispatch.mode = "pull".into();
+        cfg.faults.enabled = true;
+        cfg.faults.crash_rate = 0.5; // per worker per minute
+        cfg.faults.mttr_s = 0.1 * dur;
+        cfg.faults.straggler_frac = 0.25;
+        cfg.faults.straggler_slowdown = 4.0;
+        cfg.faults.init_fail_prob = 0.02;
+        let mut m = run_once(&cfg, seed).expect("chaos run");
+        assert_eq!(m.arrivals, m.completed + m.rejected + m.failed, "chaos conservation");
+        let mean_recovery = if m.recovery_latency_ms.is_empty() {
+            0.0
+        } else {
+            m.recovery_latency_ms.mean()
+        };
+        println!(
+            "seed {seed}: crashes {} recoveries {} (mean down {:>6.0} ms), hedged {}, \
+             migrated {}, init_fail {}, failed {}/{}",
+            m.worker_crashes,
+            m.worker_recoveries,
+            mean_recovery,
+            m.hedged,
+            m.migrated,
+            m.init_failures,
+            m.failed,
+            m.arrivals
+        );
+        chaos_rows.push(obj(vec![
+            ("seed", seed.into()),
+            ("worker_crashes", m.worker_crashes.into()),
+            ("worker_recoveries", m.worker_recoveries.into()),
+            ("mean_recovery_ms", mean_recovery.into()),
+            ("hedged", m.hedged.into()),
+            ("migrated", m.migrated.into()),
+            ("init_failures", m.init_failures.into()),
+            ("failed", m.failed.into()),
+            ("completed", m.completed.into()),
+            ("arrivals", m.arrivals.into()),
+        ]));
+    }
+
+    let [f_pull, f_lc, f_hash] = failed_by_arm;
+    println!(
+        "failed (sum over seeds): hiku/pull {f_pull}  lc/push {f_lc}  hash-mod/push {f_hash}  \
+         (pull beats hash: {})",
+        f_pull < f_hash
+    );
+    let out = obj(vec![
+        ("bench", "faults".into()),
+        ("quick", quick.into()),
+        ("failed_pull_hiku", f_pull.into()),
+        ("failed_push_lc", f_lc.into()),
+        ("failed_push_hash", f_hash.into()),
+        ("pull_beats_push_hash", (f_pull < f_hash).into()),
+        ("rows", Json::Arr(rows)),
+        ("chaos_rows", Json::Arr(chaos_rows)),
+    ]);
+    let path = "BENCH_faults.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -244,6 +244,12 @@ pub struct DispatchConfig {
     /// Sharded runs: most parked requests one shard hands off to another
     /// per epoch barrier (`ShardMsg::Handoff`); 0 disables stealing.
     pub steal_batch: usize,
+    /// Floor on the adaptive per-function pull deadline, in seconds. A
+    /// string of warm hits drives the cold-penalty EWMA toward 0, which
+    /// would collapse `adaptive_wait` deadlines to immediate force-place;
+    /// the floor keeps a minimum parking window so the pull path stays
+    /// live. 0 (default) preserves the PR 5 formula exactly.
+    pub min_wait_s: f64,
 }
 
 impl Default for DispatchConfig {
@@ -257,8 +263,128 @@ impl Default for DispatchConfig {
             weights: String::new(),
             fair: true,
             steal_batch: 8,
+            min_wait_s: 0.0,
         }
     }
+}
+
+/// Deterministic fault injection (the `faults` section): worker crashes
+/// and recoveries, straggler slowdowns, and sandbox cold-init failures,
+/// all derived from the run seed into a precomputed [`crate::faults`]
+/// plan. Disabled by default — with `enabled = false` no fault events are
+/// scheduled, no extra RNG streams are created, and every run is
+/// byte-identical to the fault-free engine (DESIGN.md §10).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Master switch. false (default) = zero-overhead, bit-identical to
+    /// the pre-fault engine.
+    pub enabled: bool,
+    /// Expected worker crashes per worker per minute (Poisson process per
+    /// worker, seed-derived). 0 disables random crashes.
+    pub crash_rate: f64,
+    /// Mean time to recover after a crash, in seconds (random crashes
+    /// jitter this deterministically; explicit `crashes` entries use it
+    /// verbatim).
+    pub mttr_s: f64,
+    /// Explicit kill schedule: `time:worker` pairs separated by `,` or
+    /// `;` (use `;` inside `--set` overrides), e.g. `"10:1;40:0"`. Each
+    /// entry crashes the worker at `time` and recovers it `mttr_s` later.
+    pub crashes: String,
+    /// Fraction of workers that become stragglers for a seed-derived
+    /// episode of the run (0..=1).
+    pub straggler_frac: f64,
+    /// Service-time multiplier applied to executions started on a
+    /// straggling worker (>= 1).
+    pub straggler_slowdown: f64,
+    /// Probability that a cold sandbox initialization fails (the request
+    /// is retried; the failed sandbox is destroyed). Pure hash of
+    /// (seed, request, attempt) — no RNG stream.
+    pub init_fail_prob: f64,
+    /// Retry budget per request: a request that loses more than this many
+    /// executions (crash, init failure, no-capacity bounce) is metered as
+    /// `failed` — never silently dropped.
+    pub max_retries: u32,
+    /// Base re-enqueue backoff after a lost execution, in seconds. The
+    /// actual delay is deterministically jittered in [1x, 2x) by a pure
+    /// hash of (seed, request, attempt).
+    pub retry_backoff_s: f64,
+    /// Straggler hedging: a request still running on a slowed worker
+    /// after `hedge_factor x` the function's EWMA runtime is duplicated
+    /// onto the pull path (first completion wins). 0 disables hedging.
+    pub hedge_factor: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            crash_rate: 0.0,
+            mttr_s: 10.0,
+            crashes: String::new(),
+            straggler_frac: 0.0,
+            straggler_slowdown: 4.0,
+            init_fail_prob: 0.0,
+            max_retries: 3,
+            retry_backoff_s: 0.05,
+            hedge_factor: 3.0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Apply a compact `--faults` CLI spec: `key:value` pairs separated
+    /// by `,` or `;`, e.g. `"crash:0.1"` or `"crash:0.2;straggle:0.25;slow:4"`.
+    /// Keys: `crash` (crash_rate), `mttr`, `straggle` (straggler_frac),
+    /// `slow` (straggler_slowdown), `init_fail`, `retries`, `backoff`,
+    /// `hedge`. Any spec (even empty) sets `enabled = true`.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<(), String> {
+        self.enabled = true;
+        for entry in spec.split([',', ';']) {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (k, v) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("bad faults entry '{entry}' (expected key:value)"))?;
+            let bad = || format!("bad value in faults entry '{entry}'");
+            match k.trim() {
+                "crash" => self.crash_rate = v.trim().parse().map_err(|_| bad())?,
+                "mttr" => self.mttr_s = v.trim().parse().map_err(|_| bad())?,
+                "straggle" => self.straggler_frac = v.trim().parse().map_err(|_| bad())?,
+                "slow" => self.straggler_slowdown = v.trim().parse().map_err(|_| bad())?,
+                "init_fail" => self.init_fail_prob = v.trim().parse().map_err(|_| bad())?,
+                "retries" => self.max_retries = v.trim().parse().map_err(|_| bad())?,
+                "backoff" => self.retry_backoff_s = v.trim().parse().map_err(|_| bad())?,
+                "hedge" => self.hedge_factor = v.trim().parse().map_err(|_| bad())?,
+                other => return Err(format!("unknown faults key '{other}'")),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse an explicit crash schedule: `time:worker` pairs separated by `,`
+/// or `;` (whitespace ignored, empty string = no entries).
+pub fn parse_crash_list(s: &str) -> Result<Vec<(f64, usize)>, String> {
+    let mut out = Vec::new();
+    for entry in s.split([',', ';']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (t, w) = entry
+            .split_once(':')
+            .ok_or_else(|| format!("bad crash entry '{entry}' (expected time:worker)"))?;
+        let t: f64 = t.trim().parse().map_err(|_| format!("bad time in crash entry '{entry}'"))?;
+        let w: usize =
+            w.trim().parse().map_err(|_| format!("bad worker in crash entry '{entry}'"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("crash time must be finite and >= 0 in '{entry}'"));
+        }
+        out.push((t, w));
+    }
+    Ok(out)
 }
 
 /// Parse a `function:value` map string (pairs separated by `,` or `;`,
@@ -411,6 +537,8 @@ pub struct Config {
     pub runtime: RuntimeConfig,
     /// Observability: sketch metrics, trace sampling, phase profiling.
     pub telemetry: TelemetryConfig,
+    /// Deterministic fault injection (crashes, stragglers, init failures).
+    pub faults: FaultsConfig,
 }
 
 impl Config {
@@ -480,6 +608,7 @@ impl Config {
                     ("weights", self.dispatch.weights.as_str().into()),
                     ("fair", self.dispatch.fair.into()),
                     ("steal_batch", self.dispatch.steal_batch.into()),
+                    ("min_wait_s", self.dispatch.min_wait_s.into()),
                 ]),
             ),
             (
@@ -504,6 +633,21 @@ impl Config {
                     ("trace_sample", self.telemetry.trace_sample.into()),
                     ("trace_max", self.telemetry.trace_max.into()),
                     ("phase_profile", self.telemetry.phase_profile.into()),
+                ]),
+            ),
+            (
+                "faults",
+                obj(vec![
+                    ("enabled", self.faults.enabled.into()),
+                    ("crash_rate", self.faults.crash_rate.into()),
+                    ("mttr_s", self.faults.mttr_s.into()),
+                    ("crashes", self.faults.crashes.as_str().into()),
+                    ("straggler_frac", self.faults.straggler_frac.into()),
+                    ("straggler_slowdown", self.faults.straggler_slowdown.into()),
+                    ("init_fail_prob", self.faults.init_fail_prob.into()),
+                    ("max_retries", (self.faults.max_retries as u64).into()),
+                    ("retry_backoff_s", self.faults.retry_backoff_s.into()),
+                    ("hedge_factor", self.faults.hedge_factor.into()),
                 ]),
             ),
         ])
@@ -671,6 +815,10 @@ impl Config {
                 cfg.dispatch.steal_batch =
                     v.as_u64().ok_or_else(|| missing("dispatch.steal_batch"))? as usize;
             }
+            if let Some(v) = d.get("min_wait_s") {
+                cfg.dispatch.min_wait_s =
+                    v.as_f64().ok_or_else(|| missing("dispatch.min_wait_s"))?;
+            }
         }
         if let Some(s) = j.get("sim") {
             if let Some(v) = s.get("shards") {
@@ -688,6 +836,45 @@ impl Config {
             if let Some(v) = r.get("cold_extra_ms") {
                 cfg.runtime.cold_extra_ms =
                     v.as_f64().ok_or_else(|| missing("runtime.cold_extra_ms"))?;
+            }
+        }
+        if let Some(f) = j.get("faults") {
+            if let Some(v) = f.get("enabled") {
+                cfg.faults.enabled = v.as_bool().ok_or_else(|| missing("faults.enabled"))?;
+            }
+            if let Some(v) = f.get("crash_rate") {
+                cfg.faults.crash_rate = v.as_f64().ok_or_else(|| missing("faults.crash_rate"))?;
+            }
+            if let Some(v) = f.get("mttr_s") {
+                cfg.faults.mttr_s = v.as_f64().ok_or_else(|| missing("faults.mttr_s"))?;
+            }
+            if let Some(v) = f.get("crashes") {
+                cfg.faults.crashes =
+                    v.as_str().ok_or_else(|| missing("faults.crashes"))?.to_string();
+            }
+            if let Some(v) = f.get("straggler_frac") {
+                cfg.faults.straggler_frac =
+                    v.as_f64().ok_or_else(|| missing("faults.straggler_frac"))?;
+            }
+            if let Some(v) = f.get("straggler_slowdown") {
+                cfg.faults.straggler_slowdown =
+                    v.as_f64().ok_or_else(|| missing("faults.straggler_slowdown"))?;
+            }
+            if let Some(v) = f.get("init_fail_prob") {
+                cfg.faults.init_fail_prob =
+                    v.as_f64().ok_or_else(|| missing("faults.init_fail_prob"))?;
+            }
+            if let Some(v) = f.get("max_retries") {
+                cfg.faults.max_retries =
+                    v.as_u64().ok_or_else(|| missing("faults.max_retries"))? as u32;
+            }
+            if let Some(v) = f.get("retry_backoff_s") {
+                cfg.faults.retry_backoff_s =
+                    v.as_f64().ok_or_else(|| missing("faults.retry_backoff_s"))?;
+            }
+            if let Some(v) = f.get("hedge_factor") {
+                cfg.faults.hedge_factor =
+                    v.as_f64().ok_or_else(|| missing("faults.hedge_factor"))?;
             }
         }
         if let Some(t) = j.get("telemetry") {
@@ -803,6 +990,35 @@ impl Config {
             }
             "dispatch.steal_batch" => {
                 self.dispatch.steal_batch = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.min_wait_s" => {
+                self.dispatch.min_wait_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.enabled" => {
+                self.faults.enabled = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.crash_rate" => {
+                self.faults.crash_rate = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.mttr_s" => self.faults.mttr_s = value.parse().map_err(|_| bad(path, value))?,
+            "faults.crashes" => self.faults.crashes = value.to_string(),
+            "faults.straggler_frac" => {
+                self.faults.straggler_frac = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.straggler_slowdown" => {
+                self.faults.straggler_slowdown = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.init_fail_prob" => {
+                self.faults.init_fail_prob = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.max_retries" => {
+                self.faults.max_retries = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.retry_backoff_s" => {
+                self.faults.retry_backoff_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "faults.hedge_factor" => {
+                self.faults.hedge_factor = value.parse().map_err(|_| bad(path, value))?
             }
             "autoscale.policy" => self.autoscale.policy = value.to_string(),
             "autoscale.interval_s" => {
@@ -952,6 +1168,9 @@ impl Config {
         if self.dispatch.max_wait_s <= 0.0 {
             return e("dispatch.max_wait_s must be > 0");
         }
+        if self.dispatch.min_wait_s < 0.0 || self.dispatch.min_wait_s > self.dispatch.max_wait_s {
+            return e("dispatch.min_wait_s must satisfy 0 <= min_wait_s <= max_wait_s");
+        }
         if let Err(m) = parse_fn_map(&self.dispatch.queue_caps) {
             return Err(ConfigError(format!("dispatch.queue_caps: {m}")));
         }
@@ -982,6 +1201,33 @@ impl Config {
         }
         if self.telemetry.trace_sample > 0 && self.telemetry.trace_max == 0 {
             return e("telemetry.trace_max must be >= 1 when tracing is on");
+        }
+        if !(self.faults.crash_rate.is_finite() && self.faults.crash_rate >= 0.0) {
+            return e("faults.crash_rate must be finite and >= 0");
+        }
+        if !(self.faults.mttr_s.is_finite() && self.faults.mttr_s > 0.0) {
+            return e("faults.mttr_s must be finite and > 0");
+        }
+        if !(0.0..=1.0).contains(&self.faults.straggler_frac) {
+            return e("faults.straggler_frac must be in [0, 1]");
+        }
+        if !(self.faults.straggler_slowdown.is_finite() && self.faults.straggler_slowdown >= 1.0) {
+            return e("faults.straggler_slowdown must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.faults.init_fail_prob) {
+            return e("faults.init_fail_prob must be in [0, 1)");
+        }
+        if self.faults.max_retries == 0 {
+            return e("faults.max_retries must be >= 1 (a retry budget of 0 drops work)");
+        }
+        if !(self.faults.retry_backoff_s.is_finite() && self.faults.retry_backoff_s >= 0.0) {
+            return e("faults.retry_backoff_s must be finite and >= 0");
+        }
+        if !(self.faults.hedge_factor.is_finite() && self.faults.hedge_factor >= 0.0) {
+            return e("faults.hedge_factor must be finite and >= 0");
+        }
+        if let Err(m) = parse_crash_list(&self.faults.crashes) {
+            return Err(ConfigError(format!("faults.crashes: {m}")));
         }
         Ok(())
     }
@@ -1048,6 +1294,64 @@ mod tests {
         let mut c = Config::default();
         c.workload.think_max_s = 0.01;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_config_roundtrip_and_overrides() {
+        let mut c = Config::default();
+        c.apply_override("faults.enabled=true").unwrap();
+        c.apply_override("faults.crash_rate=0.2").unwrap();
+        c.apply_override("faults.crashes=10:1;40:0").unwrap();
+        c.apply_override("faults.max_retries=5").unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.crash_rate, 0.2);
+        assert_eq!(c.faults.max_retries, 5);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn faults_validation_rejects_bad_values() {
+        let mut c = Config::default();
+        c.faults.straggler_slowdown = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.faults.init_fail_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.faults.max_retries = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.faults.crashes = "ten:1".into();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.dispatch.min_wait_s = 1.0; // > max_wait_s (0.5)
+        assert!(c.validate().is_err());
+        c.dispatch.min_wait_s = 0.1;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn faults_spec_parsing() {
+        let mut f = FaultsConfig::default();
+        f.apply_spec("crash:0.1;straggle:0.25;slow:4;retries:2").unwrap();
+        assert!(f.enabled);
+        assert_eq!(f.crash_rate, 0.1);
+        assert_eq!(f.straggler_frac, 0.25);
+        assert_eq!(f.straggler_slowdown, 4.0);
+        assert_eq!(f.max_retries, 2);
+        assert!(FaultsConfig::default().apply_spec("bogus:1").is_err());
+        assert!(FaultsConfig::default().apply_spec("crash").is_err());
+        let mut empty = FaultsConfig::default();
+        empty.apply_spec("").unwrap();
+        assert!(empty.enabled);
+
+        let list = parse_crash_list("10:1; 40.5:0").unwrap();
+        assert_eq!(list, vec![(10.0, 1), (40.5, 0)]);
+        assert!(parse_crash_list("-1:0").is_err());
+        assert!(parse_crash_list("5").is_err());
+        assert!(parse_crash_list("").unwrap().is_empty());
     }
 
     #[test]

@@ -33,6 +33,19 @@
 //! plus a per-request waiting flag; `cancel` marks entries stale in place
 //! and pops skip them, so every operation stays amortized O(1) (pops
 //! O(active functions) at worst for the cursor walk / head scan).
+//!
+//! ## Fault re-parking
+//!
+//! The failure model (DESIGN.md §10) re-enters the queue through plain
+//! `push`: a request displaced by a worker crash, a failed cold init, or
+//! a straggler hedge is re-parked at the **tail** of its function queue —
+//! it lost its original slot along with its worker. That is exactly the
+//! FIFO contract for `pop_fn`/`pop_fair` (per-function order is
+//! push order), but it relaxes `pop_arrival`'s "globally oldest first"
+//! to per-queue-head oldest: a re-pushed old id sits behind younger
+//! siblings until they drain, so the head scan may briefly prefer a
+//! younger head elsewhere. Ordering stays a pure function of the
+//! push/pop history either way — fault runs replay bit-for-bit.
 
 use std::collections::VecDeque;
 

@@ -1,0 +1,224 @@
+//! Deterministic fault-injection plans: worker crashes/recoveries,
+//! straggler slowdown episodes, and pure-hash draws for retry backoff
+//! jitter and sandbox cold-init failures.
+//!
+//! # Determinism contract (DESIGN.md §10)
+//!
+//! Fault schedules are a pure function of `(FaultsConfig, workers,
+//! duration, seed)`. The plan generator uses its **own** per-worker
+//! [`Pcg64`] instances seeded by hashing the run seed with the worker id
+//! — it never touches (or splits from) the engine's scheduler/service
+//! streams, so enabling faults leaves every fault-free random draw
+//! bit-identical, and disabling them restores the exact pre-fault event
+//! stream. Per-request draws (backoff jitter, init-failure coins) are
+//! stateless hashes of `(seed, request, attempt)` so they are immune to
+//! event-interleaving order.
+//!
+//! In the sharded engine each shard generates a plan over its own local
+//! worker slice using its shard seed, which makes failure runs
+//! bit-reproducible per `(seed, shards)` — the same contract the rest of
+//! the engine keeps.
+
+use crate::config::{parse_crash_list, FaultsConfig};
+use crate::util::hashing::mix64;
+use crate::util::rng::Pcg64;
+
+/// Salt folded into the run seed for fault streams, so fault draws can
+/// never collide with the engine's `^ 0x51D0_C0DE` scheduler/service
+/// streams or the coordinator's `^ 0x5AAD_C0DE` stream.
+const FAULT_SALT: u64 = 0xFA17_0BAD_5EED_0001;
+
+/// Per-worker stream separation (golden-ratio stride, same idiom as the
+/// shard-seed derivation).
+const WORKER_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A precomputed, immutable schedule of fault injections for one engine
+/// (or one shard). Timestamps are simulation seconds; worker ids are
+/// local to the engine that generated the plan. Each list is sorted by
+/// `(time, worker)` so event scheduling order is deterministic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// `(time, worker)` — worker crashes: all sandboxes (busy included)
+    /// are destroyed and in-flight work is re-enqueued by the engine.
+    pub crashes: Vec<(f64, usize)>,
+    /// `(time, worker)` — a crashed worker rejoins, cold.
+    pub recoveries: Vec<(f64, usize)>,
+    /// `(time, worker, multiplier)` — set the worker's service-time
+    /// multiplier (`1.0` ends a straggler episode).
+    pub stragglers: Vec<(f64, usize, f64)>,
+}
+
+impl FaultPlan {
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.recoveries.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Generate the schedule for `workers` workers over `[0, duration_s)`.
+    ///
+    /// Random crashes follow an independent Poisson process per worker
+    /// (rate `crash_rate` per minute); each crash recovers after a
+    /// deterministically jittered `mttr_s` in `[0.5x, 1.5x)`. Recoveries
+    /// that would land past `duration_s` are dropped — the worker simply
+    /// stays dead to the end of the run, and the retry budget (not a
+    /// recovery) bounds how long parked work waits. Explicit
+    /// [`FaultsConfig::crashes`] entries use `mttr_s` verbatim. Straggler
+    /// episodes pick `straggler_frac` of workers (an independent coin per
+    /// worker) and slow them by `straggler_slowdown` for a seed-derived
+    /// window in the middle of the run.
+    pub fn generate(cfg: &FaultsConfig, workers: usize, duration_s: f64, seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if !cfg.enabled {
+            return plan;
+        }
+        for w in 0..workers {
+            let mut rng =
+                Pcg64::new(seed ^ FAULT_SALT ^ (w as u64).wrapping_mul(WORKER_STRIDE));
+            if cfg.crash_rate > 0.0 {
+                let rate_per_s = cfg.crash_rate / 60.0;
+                let mut t = rng.exponential(rate_per_s);
+                while t < duration_s {
+                    plan.crashes.push((t, w));
+                    let down = cfg.mttr_s * (0.5 + rng.next_f64());
+                    let up_at = t + down;
+                    if up_at < duration_s {
+                        plan.recoveries.push((up_at, w));
+                    } else {
+                        // Dead to the end; no more crashes for this worker.
+                        break;
+                    }
+                    t = up_at + rng.exponential(rate_per_s);
+                }
+            }
+            if cfg.straggler_frac > 0.0 && rng.next_f64() < cfg.straggler_frac {
+                let start = duration_s * (0.1 + 0.4 * rng.next_f64());
+                let end = start + duration_s * (0.2 + 0.3 * rng.next_f64());
+                plan.stragglers.push((start, w, cfg.straggler_slowdown));
+                if end < duration_s {
+                    plan.stragglers.push((end, w, 1.0));
+                }
+            }
+        }
+        // Explicit kill schedule (already validated by Config::validate;
+        // entries addressing workers outside this engine are skipped,
+        // which is how sharded runs partition a global schedule).
+        for (t, w) in parse_crash_list(&cfg.crashes).unwrap_or_default() {
+            if w < workers && t < duration_s {
+                plan.crashes.push((t, w));
+                let up_at = t + cfg.mttr_s;
+                if up_at < duration_s {
+                    plan.recoveries.push((up_at, w));
+                }
+            }
+        }
+        plan.crashes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        plan.recoveries.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        plan.stragglers.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        plan
+    }
+}
+
+/// Stateless uniform draw in `[0, 1)` for per-request fault decisions
+/// (init-failure coins). Hashing `(seed, request, attempt)` makes the
+/// draw independent of event interleaving: the same request's attempt
+/// sees the same coin at any shard count.
+#[inline]
+pub fn fault_coin(seed: u64, request: u64, attempt: u32) -> f64 {
+    let h = mix64(seed ^ FAULT_SALT ^ mix64(request).wrapping_add(attempt as u64));
+    // 53-bit mantissa, same construction as Pcg64::next_f64.
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Deterministically jittered retry backoff: `base * [1, 2)`, keyed by
+/// `(seed, request, attempt)` so colliding retries de-synchronize without
+/// consuming any RNG stream. Returns 0 when `base` is 0.
+#[inline]
+pub fn retry_backoff(base: f64, seed: u64, request: u64, attempt: u32) -> f64 {
+    base * (1.0 + fault_coin(seed ^ 0xB0FF, request, attempt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(f: impl FnOnce(&mut FaultsConfig)) -> FaultsConfig {
+        let mut c = FaultsConfig { enabled: true, ..FaultsConfig::default() };
+        f(&mut c);
+        c
+    }
+
+    #[test]
+    fn disabled_plan_is_empty() {
+        let c = FaultsConfig::default();
+        assert!(FaultPlan::generate(&c, 8, 300.0, 42).is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_seed_sensitive() {
+        let c = cfg_with(|c| {
+            c.crash_rate = 1.0;
+            c.straggler_frac = 0.5;
+        });
+        let a = FaultPlan::generate(&c, 8, 300.0, 42);
+        let b = FaultPlan::generate(&c, 8, 300.0, 42);
+        let d = FaultPlan::generate(&c, 8, 300.0, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, d);
+        assert!(!a.crashes.is_empty());
+    }
+
+    #[test]
+    fn plan_respects_duration_and_ordering() {
+        let c = cfg_with(|c| {
+            c.crash_rate = 2.0;
+            c.straggler_frac = 1.0;
+        });
+        let p = FaultPlan::generate(&c, 16, 120.0, 7);
+        for &(t, w) in &p.crashes {
+            assert!((0.0..120.0).contains(&t));
+            assert!(w < 16);
+        }
+        for &(t, _) in &p.recoveries {
+            assert!(t < 120.0);
+        }
+        assert!(p.crashes.windows(2).all(|v| v[0].0 <= v[1].0), "crashes unsorted");
+        assert!(p.recoveries.windows(2).all(|v| v[0].0 <= v[1].0), "recoveries unsorted");
+        assert!(p.stragglers.windows(2).all(|v| v[0].0 <= v[1].0), "stragglers unsorted");
+        // Every recovery follows a crash of the same worker.
+        for &(rt, rw) in &p.recoveries {
+            assert!(p.crashes.iter().any(|&(ct, cw)| cw == rw && ct < rt));
+        }
+        // straggler_frac = 1.0 => every worker gets an episode.
+        let slowed: std::collections::BTreeSet<usize> =
+            p.stragglers.iter().map(|&(_, w, _)| w).collect();
+        assert_eq!(slowed.len(), 16);
+    }
+
+    #[test]
+    fn explicit_crash_schedule() {
+        let c = cfg_with(|c| {
+            c.crashes = "10:1;40:0".into();
+            c.mttr_s = 5.0;
+        });
+        let p = FaultPlan::generate(&c, 4, 100.0, 1);
+        assert_eq!(p.crashes, vec![(10.0, 1), (40.0, 0)]);
+        assert_eq!(p.recoveries, vec![(15.0, 1), (45.0, 0)]);
+        // Out-of-range worker ids are skipped (sharded partitioning).
+        let p2 = FaultPlan::generate(&c, 1, 100.0, 1);
+        assert_eq!(p2.crashes, vec![(40.0, 0)]);
+    }
+
+    #[test]
+    fn hash_draws_are_stable_and_uniformish() {
+        assert_eq!(fault_coin(42, 7, 0), fault_coin(42, 7, 0));
+        assert_ne!(fault_coin(42, 7, 0), fault_coin(42, 7, 1));
+        assert_ne!(fault_coin(42, 7, 0), fault_coin(43, 7, 0));
+        let n = 10_000;
+        let mean: f64 =
+            (0..n).map(|i| fault_coin(9, i, 0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        let b = retry_backoff(0.05, 42, 7, 1);
+        assert!((0.05..0.10).contains(&b), "backoff {b}");
+        assert_eq!(retry_backoff(0.0, 42, 7, 1), 0.0);
+    }
+}

@@ -11,6 +11,9 @@
 //!   protocol (`decide -> Assign | Enqueue | Reject`).
 //! - [`dispatch`] — router-owned dispatch infrastructure: the pending
 //!   queue behind `Enqueue` (per-function FIFO, deterministic ordering).
+//! - [`faults`] — deterministic fault injection: seed-derived crash /
+//!   straggler / init-failure plans driving the recovery path
+//!   (re-enqueue + retry budget + warm-state handoff, DESIGN.md §10).
 //! - [`platform`] — the FaaS substrate: workers, sandboxes, keep-alive.
 //! - [`autoscale`] — policy-driven elastic scaling and predictive
 //!   pre-warming (closes the §II-C auto-scaling loop).
@@ -34,6 +37,7 @@ pub mod autoscale;
 pub mod bench;
 pub mod config;
 pub mod dispatch;
+pub mod faults;
 pub mod logging;
 pub mod metrics;
 pub mod platform;

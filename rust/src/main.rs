@@ -12,6 +12,7 @@
 //!   hiku sim --scheduler hiku --vus 100 --duration 300 --seed 42
 //!   hiku sim --scheduler hiku --autoscale reactive --workers 2
 //!   hiku sim --scheduler hiku --dispatch pull --vus 100
+//!   hiku sim --dispatch pull --faults crash:0.1 --shards 2
 //!   hiku sim --workers 100000 --vus 100000 --shards 4 --duration 10
 //!   hiku sim --sketch --trace-sample 100 --profile --trace-out traces
 //!   hiku sweep --runs 5 --vu-levels 20,50,100
@@ -67,6 +68,7 @@ fn config_cli(cli: Cli) -> Cli {
         .opt("queue-cap", None, "per-function pending-queue admission cap (0 = unbounded)")
         .opt("queue-caps", None, "per-function cap overrides, e.g. '0:4;7:64'")
         .opt("max-wait", None, "pull wait-deadline upper bound in seconds")
+        .opt("faults", None, "enable fault injection, e.g. 'crash:0.1;straggle:0.25;slow:4'")
         .opt("seed", None, "experiment seed")
         .flag("sketch", "bounded-memory quantile sketches instead of exact sample vectors")
         .opt("trace-sample", None, "lifecycle tracing: record every Nth request (0 = off)")
@@ -117,6 +119,9 @@ fn build_config(args: &hiku::util::cli::Args) -> Result<Config, String> {
     if let Some(v) = args.get("max-wait") {
         cfg.dispatch.max_wait_s =
             v.parse().map_err(|_| "--max-wait: number expected".to_string())?;
+    }
+    if let Some(spec) = args.get("faults") {
+        cfg.faults.apply_spec(spec).map_err(|e| format!("--faults: {e}"))?;
     }
     if let Some(v) = args.get("seed") {
         cfg.workload.seed = v.parse().map_err(|_| "--seed: integer expected".to_string())?;

@@ -310,8 +310,42 @@ pub struct RunMetrics {
     pub duration_s: f64,
     /// Requests that completed.
     pub completed: u64,
-    /// Requests that were issued (routed).
+    /// Requests that were issued (routed). Under fault injection a
+    /// retried request is re-issued on every re-bind, so `issued` counts
+    /// binds (assignment-rate semantics), not distinct requests — use
+    /// `arrivals` for the conservation identity.
     pub issued: u64,
+    /// Whether fault injection was active for the run (gates the `faults`
+    /// summary block; OR-ed by [`RunMetrics::merge`]).
+    pub faults_enabled: bool,
+    /// Distinct requests that arrived (admitted or rejected at issue
+    /// time; maintained in every run). The conservation identity is
+    /// `arrivals == completed + rejected + failed`, plus `stolen` when
+    /// shards are merged (a cross-shard handoff counts the request at
+    /// both ends and the donor's copy resolves as the donation).
+    pub arrivals: u64,
+    /// Injected worker crashes that fired.
+    pub worker_crashes: u64,
+    /// Crashed workers that rejoined the cluster.
+    pub worker_recoveries: u64,
+    /// Requests whose retry budget was exhausted — terminally failed,
+    /// never silently dropped.
+    pub failed: u64,
+    /// Executions lost to a fault and re-enqueued with backoff.
+    pub retried: u64,
+    /// Straggler-held requests duplicated onto the pull path.
+    pub hedged: u64,
+    /// Selections that landed on a dead worker and were re-routed to a
+    /// live one at bind time (late binding's recovery advantage).
+    pub re_routed: u64,
+    /// Re-routed requests that carried warm sandbox state with them
+    /// (warm-state handoff within the keep-alive window).
+    pub migrated: u64,
+    /// Sandbox cold-init failures injected.
+    pub init_failures: u64,
+    /// Worker downtime per recovery in ms (crash -> rejoin) — how long
+    /// the cluster ran degraded each time a worker died.
+    pub recovery_latency_ms: Dist,
     /// Sampled request-lifecycle spans (disabled unless
     /// `telemetry.trace_sample > 0`).
     pub trace: TraceLog,
@@ -370,6 +404,17 @@ impl RunMetrics {
             duration_s,
             completed: 0,
             issued: 0,
+            faults_enabled: false,
+            arrivals: 0,
+            worker_crashes: 0,
+            worker_recoveries: 0,
+            failed: 0,
+            retried: 0,
+            hedged: 0,
+            re_routed: 0,
+            migrated: 0,
+            init_failures: 0,
+            recovery_latency_ms: dist(),
             trace: TraceLog::new(tel.trace_sample, tel.trace_max),
             phases: PhaseProfile::new(tel.phase_profile),
             sketch: tel.sketch,
@@ -591,6 +636,17 @@ impl RunMetrics {
         self.peak_event_queue += other.peak_event_queue;
         self.completed += other.completed;
         self.issued += other.issued;
+        self.faults_enabled |= other.faults_enabled;
+        self.arrivals += other.arrivals;
+        self.worker_crashes += other.worker_crashes;
+        self.worker_recoveries += other.worker_recoveries;
+        self.failed += other.failed;
+        self.retried += other.retried;
+        self.hedged += other.hedged;
+        self.re_routed += other.re_routed;
+        self.migrated += other.migrated;
+        self.init_failures += other.init_failures;
+        self.recovery_latency_ms.merge_from(&other.recovery_latency_ms);
         self.trace.merge_append(&other.trace);
         self.phases.merge_add(&other.phases);
     }
@@ -660,6 +716,31 @@ impl RunMetrics {
         }
         if self.phases.enabled {
             pairs.push(("phases", self.phases.json()));
+        }
+        // Fault-free runs (the default) emit no fault keys at all, so
+        // their summaries stay byte-identical to the pre-fault engine.
+        if self.faults_enabled {
+            let (rec_mean, rec_p99) = if self.recovery_latency_ms.is_empty() {
+                (f64::NAN, f64::NAN)
+            } else {
+                (self.recovery_latency_ms.mean(), self.recovery_latency_ms.percentile(99.0))
+            };
+            pairs.push((
+                "faults",
+                obj(vec![
+                    ("arrivals", self.arrivals.into()),
+                    ("worker_crashes", self.worker_crashes.into()),
+                    ("worker_recoveries", self.worker_recoveries.into()),
+                    ("failed", self.failed.into()),
+                    ("retried", self.retried.into()),
+                    ("hedged", self.hedged.into()),
+                    ("re_routed", self.re_routed.into()),
+                    ("migrated", self.migrated.into()),
+                    ("init_failures", self.init_failures.into()),
+                    ("recovery_mean_ms", num_or_null(rec_mean)),
+                    ("recovery_p99_ms", num_or_null(rec_p99)),
+                ]),
+            ));
         }
         obj(pairs)
     }
@@ -886,6 +967,45 @@ mod tests {
         assert!(j.get("sketch").is_none());
         assert!(j.get("phases").is_none());
         assert!(j.get("trace_spans").is_none());
+        // Fault-free runs emit no fault keys (byte-identity contract).
+        assert!(j.get("faults").is_none());
+    }
+
+    #[test]
+    fn faults_block_gated_and_merged() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 10.0);
+        m.faults_enabled = true;
+        m.arrivals = 10;
+        m.worker_crashes = 1;
+        m.failed = 2;
+        m.retried = 3;
+        m.recovery_latency_ms.push(120.0);
+        let j = m.summary_json();
+        let fb = j.get("faults").expect("faults block present when enabled");
+        assert_eq!(fb.get("failed").unwrap().as_u64(), Some(2));
+        assert_eq!(fb.get("retried").unwrap().as_u64(), Some(3));
+        assert_eq!(fb.get("arrivals").unwrap().as_u64(), Some(10));
+        assert!(fb.get("recovery_p99_ms").unwrap().as_f64().unwrap() > 100.0);
+        // Merge sums counters and ORs the gate (sharded fault runs).
+        let mut b = RunMetrics::new("hiku", 2, 10, 10.0);
+        b.failed = 1;
+        b.retried = 2;
+        b.arrivals = 5;
+        b.hedged = 1;
+        b.migrated = 4;
+        m.merge(&b);
+        assert!(m.faults_enabled);
+        assert_eq!(m.failed, 3);
+        assert_eq!(m.retried, 5);
+        assert_eq!(m.arrivals, 15);
+        assert_eq!(m.hedged, 1);
+        assert_eq!(m.migrated, 4);
+        // An empty recovery distribution reports null, not NaN.
+        let mut e = RunMetrics::new("hiku", 1, 1, 1.0);
+        e.faults_enabled = true;
+        let je = e.summary_json();
+        assert_eq!(je.get("faults").unwrap().get("recovery_p99_ms"), Some(&Json::Null));
+        assert!(Json::parse(&je.to_string_compact()).is_ok());
     }
 
     #[test]

@@ -385,6 +385,22 @@ impl Cluster {
         out
     }
 
+    /// Fault injection: worker `w` crashes — every sandbox (busy
+    /// included) is destroyed and the admission queue dropped, with the
+    /// aggregates kept exact through the usual snapshot/journal sync.
+    /// Returns what [`crate::platform::worker::Worker::crash`] returns:
+    /// the lost queued requests and the `(function, idle_since)` warm
+    /// state that died (for the router's warm-handoff bank).
+    pub fn crash(
+        &mut self,
+        w: WorkerId,
+    ) -> (Vec<super::worker::QueuedRequest>, Vec<(FunctionId, f64)>) {
+        let before = self.snapshot(w);
+        let out = self.workers[w].crash();
+        self.sync_after(w, before);
+        out
+    }
+
     /// Precise per-sandbox keep-alive expiry (ignores stale epochs).
     pub fn expire_keepalive(
         &mut self,
@@ -502,6 +518,27 @@ mod tests {
         assert_eq!(c.least_loaded_fitting(256), Some(0));
         // Nothing fits a huge footprint.
         assert_eq!(c.least_loaded_fitting(4096), None);
+    }
+
+    #[test]
+    fn crash_keeps_aggregates_exact() {
+        let mut c = Cluster::new(&ClusterConfig { workers: 2, ..Default::default() });
+        // Worker 0: one idle (f=7), one busy (f=8). Worker 1: one busy.
+        let a = c.assign_elastic(0, 1, 7, 256, 0.0);
+        c.complete_elastic(0, a.sandbox, 1.0);
+        c.assign_elastic(0, 2, 8, 256, 2.0);
+        c.assign_elastic(1, 3, 9, 256, 2.0);
+        assert_eq!(c.total_running(), 2);
+        assert_eq!(c.warm_nonbusy(7), 1);
+        let (queued, warm) = c.crash(0);
+        assert!(queued.is_empty());
+        assert_eq!(warm, vec![(7, 1.0)]);
+        // Aggregates match a full rescan: only worker 1's execution left.
+        assert_eq!(c.total_running(), 1);
+        assert_eq!(c.total_queued(), 0);
+        assert_eq!(c.warm_nonbusy(7), 0);
+        assert_eq!(c.loads(), vec![0, 1]);
+        assert_eq!(c.least_loaded_fitting(256), Some(0));
     }
 
     /// Property: after arbitrary wrapped-op sequences with scale events,

@@ -160,6 +160,15 @@ impl Worker {
         self.sandboxes.len()
     }
 
+    /// The next sandbox id this worker will hand out. Every sandbox that
+    /// has ever existed here has a strictly smaller id (ids are never
+    /// reused, even across [`Worker::crash`]), so callers can treat the
+    /// watermark as a crash epoch: a completion whose sandbox id is below
+    /// the watermark recorded at crash time refers to destroyed state.
+    pub fn sandbox_watermark(&self) -> SandboxId {
+        self.next_sandbox_id
+    }
+
     /// Look up a sandbox by id.
     pub fn sandbox(&self, id: SandboxId) -> Option<&Sandbox> {
         self.sandboxes.iter().find(|s| s.id == id)
@@ -534,6 +543,32 @@ impl Worker {
         evicted
     }
 
+    /// Fault injection: the worker crashes. Every sandbox is destroyed
+    /// regardless of state (busy executions die with it), the admission
+    /// queue is dropped, and memory/slot accounting zeroes out. Returns
+    /// the queued requests that were lost (the router re-enqueues them
+    /// with the in-flight ones) and the `(function, idle_since)` pairs of
+    /// the idle sandboxes that died — the router's warm bank uses these
+    /// for warm-state handoff within the keep-alive window (DESIGN.md
+    /// §10). `next_sandbox_id` is deliberately *not* reset: sandbox ids
+    /// never recycle within a worker, which is what lets the engine drop
+    /// stale `Completion` events from before the crash.
+    pub fn crash(&mut self) -> (Vec<QueuedRequest>, Vec<(FunctionId, f64)>) {
+        let mut warm = Vec::new();
+        for sb in std::mem::take(&mut self.sandboxes) {
+            if sb.is_idle() {
+                warm.push((sb.function, sb.idle_since));
+                self.note_warm_down(sb.function);
+            } else if sb.state == super::sandbox::SandboxState::Initializing {
+                self.note_warm_down(sb.function);
+            }
+        }
+        self.mem_used_mb = 0;
+        self.running = 0;
+        let queued = std::mem::take(&mut self.queue).into_iter().collect();
+        (queued, warm)
+    }
+
     /// Keep-alive expiry for (sandbox, epoch) fires at `_now`. Evicts only
     /// if the sandbox is still idle in the same epoch (otherwise the event
     /// is stale — the sandbox was reused or already evicted). Returns the
@@ -822,6 +857,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn crash_destroys_everything_but_keeps_id_monotonic() {
+        let mut w = Worker::new(0, 1024, 1);
+        let a = w.assign_elastic(1, 1, 128, 0.0);
+        w.complete_elastic(a.sandbox, 1.0); // idle f=1
+        let b = w.assign_elastic(2, 2, 128, 2.0); // busy f=2
+        w.prewarm(3, 128, 2.5); // initializing f=3
+        assert!(matches!(w.assign(4, 2, 128, 3.0), AssignOutcome::Queued));
+        let (queued, warm) = w.crash();
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].request_id, 4);
+        assert_eq!(warm, vec![(1, 1.0)], "only idle sandboxes carry warm state");
+        assert_eq!(w.running(), 0);
+        assert_eq!(w.num_sandboxes(), 0);
+        assert_eq!(w.mem_used_mb, 0);
+        assert_eq!(w.queue_len(), 0);
+        // Warm counters hit zero (crash journals the downs).
+        let mut recount = vec![0usize; 4];
+        w.warm_counts_into(&mut recount);
+        assert_eq!(recount, vec![0; 4]);
+        for f in 0..4 {
+            assert_eq!(w.warm_by_fn().get(f).copied().unwrap_or(0), 0);
+        }
+        // Sandbox ids never recycle: a post-crash cold start gets a fresh id.
+        let c = w.assign_elastic(5, 2, 128, 4.0);
+        assert!(c.cold);
+        assert!(c.sandbox > b.sandbox, "sandbox ids must stay monotonic across crashes");
     }
 
     #[test]

@@ -113,12 +113,20 @@ pub struct SchedCtx<'a> {
     /// Pull-dispatch context; `None` (push mode) makes [`Scheduler::decide`]
     /// behave exactly like [`Scheduler::select`].
     pub dispatch: Option<DispatchCtx>,
+    /// Workers the router wants selections to avoid: crash-marked (fault
+    /// injection, DESIGN.md §10) or drain-marked (autoscale scale-down in
+    /// progress), indexed like `loads`. `None` means every active worker
+    /// is eligible. This is advisory steering for force-places and stale
+    /// idle-claims — the router re-routes any selection that lands on an
+    /// avoided worker, so schedulers that ignore it stay correct (and
+    /// keep their RNG streams unchanged).
+    pub avoid: Option<&'a [bool]>,
 }
 
 impl<'a> SchedCtx<'a> {
     /// Context without an index (tests, the real-time server).
     pub fn new(loads: &'a [u32], rng: &'a mut Pcg64) -> Self {
-        Self { loads, min_index: None, rng, dispatch: None }
+        Self { loads, min_index: None, rng, dispatch: None, avoid: None }
     }
 
     /// Attach pull-dispatch context (router pending-queue state).
@@ -127,11 +135,39 @@ impl<'a> SchedCtx<'a> {
         self
     }
 
+    /// Attach the router's avoid set (dead ∪ draining workers).
+    pub fn with_avoid(mut self, avoid: &'a [bool]) -> Self {
+        self.avoid = Some(avoid);
+        self
+    }
+
+    /// Whether worker `w` is eligible (not crash- or drain-marked).
+    #[inline]
+    pub fn allowed(&self, w: WorkerId) -> bool {
+        match self.avoid {
+            Some(mask) => !mask.get(w).copied().unwrap_or(false),
+            None => true,
+        }
+    }
+
     /// Least-loaded worker, uniform random among ties — Algorithm 1's
     /// fallback rule and the whole of least-connections. With an index the
     /// reservoir runs over just the tie set (in ascending worker order, so
     /// the RNG stream and the winner match the linear scan exactly).
+    ///
+    /// When the router attached an [`SchedCtx::avoid`] mask, the rule is
+    /// computed over eligible workers only (a crashed worker sits at load
+    /// 0 and would otherwise soak up every fallback force-place). The
+    /// masked scan draws the identical RNG sequence as the plain rule
+    /// whenever the mask excludes nobody, and falls back to the
+    /// unfiltered rule when it excludes everybody — the router re-routes
+    /// or retries such doomed picks.
     pub fn least_loaded_random_tie(&mut self) -> WorkerId {
+        if let Some(mask) = self.avoid {
+            if let Some(w) = least_loaded_random_tie_avoiding(self.loads, mask, self.rng) {
+                return w;
+            }
+        }
         match self.min_index {
             Some(idx) => {
                 debug_assert_eq!(idx.active(), self.loads.len());
@@ -248,6 +284,39 @@ pub fn sampled_least_loaded(loads: &[u32], rng: &mut Pcg64, d: usize) -> WorkerI
     best
 }
 
+/// Avoid-aware variant of [`least_loaded_random_tie`]: least-loaded among
+/// workers the mask permits, uniform among ties. Returns `None` when the
+/// mask excludes every worker (the caller falls back to the unfiltered
+/// rule). Draws the identical RNG sequence as the plain rule when the
+/// mask excludes nobody.
+pub fn least_loaded_random_tie_avoiding(
+    loads: &[u32],
+    mask: &[bool],
+    rng: &mut Pcg64,
+) -> Option<WorkerId> {
+    let blocked = |w: usize| mask.get(w).copied().unwrap_or(false);
+    let mut min = u32::MAX;
+    for (w, &l) in loads.iter().enumerate() {
+        if !blocked(w) && l < min {
+            min = l;
+        }
+    }
+    if min == u32::MAX {
+        return None;
+    }
+    let mut chosen = 0usize;
+    let mut seen = 0u64;
+    for (w, &l) in loads.iter().enumerate() {
+        if l == min && !blocked(w) {
+            seen += 1;
+            if rng.next_bounded(seen) == 0 {
+                chosen = w;
+            }
+        }
+    }
+    Some(chosen)
+}
+
 /// Least-loaded worker with uniform random tie-breaking — the fallback rule
 /// of Algorithm 1 (lines 8-11) and the whole of least-connections.
 pub fn least_loaded_random_tie(loads: &[u32], rng: &mut Pcg64) -> WorkerId {
@@ -319,6 +388,33 @@ pub const COMPOSITE_SCHEDULERS: [&str; 2] = ["hiku+random", "hiku+ch-bl"];
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn avoid_mask_steers_fallback_rule() {
+        // Worker 0 is dead at load 0 — without the mask it wins every
+        // time; with the mask the rule must pick among the living.
+        let loads = [0u32, 2, 1, 1];
+        let mut rng = Pcg64::new(7);
+        let mask = [true, false, false, false];
+        for _ in 0..32 {
+            let w = least_loaded_random_tie_avoiding(&loads, &mask, &mut rng).unwrap();
+            assert!(w == 2 || w == 3, "picked avoided or overloaded worker {w}");
+        }
+        // All-blocked mask: None, so callers can fall back.
+        assert_eq!(
+            least_loaded_random_tie_avoiding(&loads, &[true; 4], &mut rng),
+            None
+        );
+        // Empty mask draws the identical stream as the plain rule.
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        for _ in 0..16 {
+            assert_eq!(
+                least_loaded_random_tie_avoiding(&loads, &[false; 4], &mut a),
+                Some(least_loaded_random_tie(&loads, &mut b))
+            );
+        }
+    }
 
     #[test]
     fn registry_constructs_all() {
@@ -400,8 +496,13 @@ mod tests {
         let mut rng_a = Pcg64::new(11);
         let mut rng_b = Pcg64::new(11);
         for _ in 0..200 {
-            let mut with_idx =
-                SchedCtx { loads: &loads, min_index: Some(&idx), rng: &mut rng_a, dispatch: None };
+            let mut with_idx = SchedCtx {
+                loads: &loads,
+                min_index: Some(&idx),
+                rng: &mut rng_a,
+                dispatch: None,
+                avoid: None,
+            };
             let a = with_idx.least_loaded_random_tie();
             let ta = with_idx.total_load();
             let ja = with_idx.least_loaded_lowest_id();

@@ -19,6 +19,7 @@
 use crate::autoscale::{make_policy, AutoscaleObs, AutoscalePolicy as _};
 use crate::config::Config;
 use crate::dispatch::PendingQueue;
+use crate::faults::{fault_coin, retry_backoff, FaultPlan};
 use crate::metrics::RunMetrics;
 use crate::runtime::{Engine, Manifest};
 use crate::scheduler::{make_scheduler, Decision, DispatchCtx, Pull, SchedCtx};
@@ -36,6 +37,11 @@ struct ExecMsg {
     /// Function type id (for eviction notifications).
     function: usize,
     seed: u32,
+    /// Injected straggler delay (`faults.straggler_slowdown`): the worker
+    /// sleeps this long before executing, inflating its service time the
+    /// way the simulator multiplies execution durations. Zero when fault
+    /// injection is off.
+    delay: Duration,
 }
 
 /// Worker -> router response.
@@ -67,6 +73,9 @@ fn spawn_worker(
             }
         };
         while let Ok(msg) = rx.recv() {
+            if !msg.delay.is_zero() {
+                std::thread::sleep(msg.delay);
+            }
             match engine.execute(&msg.payload, msg.seed) {
                 Ok(r) => {
                     let _ = tx.send(Ok(Response {
@@ -105,6 +114,7 @@ fn bind_parked(
     start: Instant,
     work_tx: &[mpsc::Sender<ExecMsg>],
     payload_of: &[String],
+    delay: Duration,
 ) -> Result<(), String> {
     loads[w] += 1;
     inflight_f[f] += 1;
@@ -115,7 +125,7 @@ fn bind_parked(
     metrics.trace.record(rid, f, "pending", arr_s, now_s, None, "");
     metrics.trace.record(rid, f, "bind", now_s, now_s, Some(w), kind);
     dispatched[rid as usize] = Instant::now();
-    send_to(work_tx, payload_of, rid, f, w)
+    send_to(work_tx, payload_of, rid, f, w, delay)
 }
 
 /// Dispatch one execution message to worker `w`.
@@ -125,6 +135,7 @@ fn send_to(
     rid: u64,
     f: usize,
     w: usize,
+    delay: Duration,
 ) -> Result<(), String> {
     work_tx[w]
         .send(ExecMsg {
@@ -132,8 +143,63 @@ fn send_to(
             payload: payload_of[f].clone(),
             function: f,
             seed: (rid as u32).wrapping_mul(2654435761),
+            delay,
         })
         .map_err(|_| "worker channel closed".to_string())
+}
+
+/// The straggler delay injected for one execution on worker `w`: the
+/// extra service time a `slowdown`× multiplier adds on top of the
+/// function's nominal warm latency. Zero for non-stragglers (the
+/// faults-off fast path — every worker's multiplier is 1).
+fn straggler_delay(slow: &[f64], w: usize, warm_ms: f64) -> Duration {
+    let m = slow.get(w).copied().unwrap_or(1.0);
+    if m > 1.0 {
+        Duration::from_secs_f64(warm_ms / 1000.0 * (m - 1.0))
+    } else {
+        Duration::ZERO
+    }
+}
+
+/// Consume one retry attempt for request `rid` after a fault loss (a
+/// crashed worker's lost result, a cold-init failure, or a dead-worker
+/// bind). Either schedules a deterministically jittered backoff
+/// re-dispatch or — budget exhausted — meters the request as `failed` and
+/// wakes its VU, so no admitted request is ever silently dropped.
+#[allow(clippy::too_many_arguments)]
+fn fault_retry_wallclock(
+    rid: u64,
+    cfg: &Config,
+    attempts: &mut [u32],
+    retry_at: &mut Vec<(Instant, u64)>,
+    failed: &mut usize,
+    metrics: &mut RunMetrics,
+    start: Instant,
+    workload: &Workload,
+    vu_of: &[usize],
+    step_of: &[usize],
+    fn_of: &[usize],
+    vu_step: &mut [usize],
+    wake: &mut Vec<(Instant, usize)>,
+) {
+    let i = rid as usize;
+    let att = attempts[i];
+    let now_s = start.elapsed().as_secs_f64();
+    if att >= cfg.faults.max_retries {
+        *failed += 1;
+        metrics.failed += 1;
+        metrics.trace.record(rid, fn_of[i], "failed", now_s, now_s, None, "budget");
+        let vu = vu_of[i];
+        let think = workload.vus[vu].steps[step_of[i]].think_s;
+        vu_step[vu] = step_of[i] + 1;
+        wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
+        return;
+    }
+    attempts[i] = att + 1;
+    metrics.retried += 1;
+    let backoff = retry_backoff(cfg.faults.retry_backoff_s, cfg.workload.seed, rid, att + 1);
+    metrics.trace.record(rid, fn_of[i], "retry", now_s, now_s, None, "backoff");
+    retry_at.push((Instant::now() + Duration::from_secs_f64(backoff), rid));
 }
 
 /// Serve `n_requests` through the real-time cluster, closed-loop over the
@@ -151,9 +217,17 @@ fn send_to(
 /// `dispatch.adaptive_wait` each function's wall-clock deadline is
 /// `min(max_wait_s, ewma_cold_latency − ewma_warm_latency)` — the
 /// observed cost of the cold start waiting might avoid. A request counts
-/// as *resolved* when it completes or is rejected — the run serves
-/// `n_requests` resolutions. (Scale-to-zero stays sim-only: the PJRT
-/// worker pool never drops below one active worker.)
+/// as *resolved* when it completes, is rejected, or exhausts its fault
+/// retry budget — the run serves `n_requests` resolutions. (Scale-to-zero
+/// stays sim-only: the PJRT worker pool never drops below one active
+/// worker.)
+///
+/// With `faults.enabled` the seed-derived fault plan replays against wall
+/// clock: crash-marked workers are routed around and their in-flight
+/// results discarded on arrival (consuming the request's retry budget),
+/// stragglers execute behind an injected service delay, and recoveries
+/// restore routing — the wall-clock mirror of the simulator's fault
+/// events.
 pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
     let manifest = Manifest::load(&cfg.runtime.artifacts_dir)?;
     let registry = FunctionRegistry::functionbench(cfg.workload.copies);
@@ -271,10 +345,37 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
         }
         // Floor at 1 ms: a noisy non-positive delta means "no observed
         // cold penalty", i.e. waiting cannot pay — place almost at once.
-        base.min((cold[f] - warm[f]).max(0.001))
+        // `dispatch.min_wait_s` then floors the adaptive deadline so a
+        // transiently tiny cold-penalty estimate cannot collapse the
+        // wait to an instant force-place.
+        base.min((cold[f] - warm[f]).max(0.001)).max(cfg.dispatch.min_wait_s)
     };
 
-    while completed + rejected < n_requests {
+    // ---- wall-clock fault injection (`[faults]`) ----
+    // The same seed-derived plan the simulator installs, replayed against
+    // wall-clock seconds since server start. A "crashed" worker thread is
+    // not killed (it may be mid-execute); instead the router marks it
+    // dead, routes around it (the scheduler avoid mask), and treats any
+    // response whose dispatch predates the crash as lost — the request
+    // consumes a retry attempt exactly like the simulator's re-enqueue.
+    let faults_on = cfg.faults.enabled;
+    let plan = if faults_on {
+        FaultPlan::generate(&cfg.faults, workers, cfg.workload.duration_s, cfg.workload.seed)
+    } else {
+        FaultPlan::default()
+    };
+    let (mut next_crash, mut next_recover, mut next_strag) = (0usize, 0usize, 0usize);
+    let mut dead = vec![false; workers];
+    // Most recent crash instant per worker (never cleared): a response
+    // dispatched before it refers to state the crash destroyed.
+    let mut last_crash: Vec<Option<Instant>> = vec![None; workers];
+    let mut slow = vec![1.0f64; workers];
+    let mut attempts: Vec<u32> = Vec::new();
+    let mut retry_at: Vec<(Instant, u64)> = Vec::new();
+    let mut failed = 0usize;
+    metrics.faults_enabled = faults_on;
+
+    while completed + rejected + failed < n_requests {
         // Autoscale control tick (wall clock). The policy only ever moves
         // the active boundary; threads beyond it sit idle on their channel.
         if autoscaling && last_tick.elapsed().as_secs_f64() >= cfg.autoscale.interval_s {
@@ -311,6 +412,82 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 }
             }
         }
+        // Apply fault-plan events whose wall-clock time has passed, then
+        // re-dispatch retries whose backoff elapsed.
+        if faults_on {
+            let now_s = start.elapsed().as_secs_f64();
+            while next_crash < plan.crashes.len() && plan.crashes[next_crash].0 <= now_s {
+                let (_, w) = plan.crashes[next_crash];
+                next_crash += 1;
+                if !dead[w] {
+                    dead[w] = true;
+                    last_crash[w] = Some(Instant::now());
+                    metrics.worker_crashes += 1;
+                    crate::log_info!("server", "fault: worker {} crashed at t={:.2}s", w, now_s);
+                }
+            }
+            while next_recover < plan.recoveries.len()
+                && plan.recoveries[next_recover].0 <= now_s
+            {
+                let (_, w) = plan.recoveries[next_recover];
+                next_recover += 1;
+                if dead[w] {
+                    dead[w] = false;
+                    metrics.worker_recoveries += 1;
+                    if let Some(c) = last_crash[w] {
+                        metrics.recovery_latency_ms.push(c.elapsed().as_secs_f64() * 1000.0);
+                    }
+                    crate::log_info!("server", "fault: worker {} recovered at t={:.2}s", w, now_s);
+                }
+            }
+            while next_strag < plan.stragglers.len() && plan.stragglers[next_strag].0 <= now_s {
+                let (_, w, m) = plan.stragglers[next_strag];
+                next_strag += 1;
+                slow[w] = m.max(1.0);
+            }
+            let now = Instant::now();
+            let mut i = 0;
+            while i < retry_at.len() {
+                if retry_at[i].0 > now {
+                    i += 1;
+                    continue;
+                }
+                let (_, rid) = retry_at.swap_remove(i);
+                let f = fn_of[rid as usize];
+                let w = {
+                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng)
+                        .with_avoid(&dead[..active]);
+                    scheduler.select(f, &mut ctx)
+                };
+                if dead[w] {
+                    // No live worker took it — the avoid mask is advisory
+                    // and every candidate was dead. Burn another attempt;
+                    // the budget bounds how long the request can wait for
+                    // a recovery.
+                    let t_s = start.elapsed().as_secs_f64();
+                    metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "dead-bind");
+                    fault_retry_wallclock(
+                        rid, cfg, &mut attempts, &mut retry_at, &mut failed, &mut metrics,
+                        start, &workload, &vu_of, &step_of, &fn_of, &mut vu_step, &mut wake,
+                    );
+                    continue;
+                }
+                loads[w] += 1;
+                inflight_f[f] += 1;
+                let t_s = start.elapsed().as_secs_f64();
+                metrics.record_assignment(w, t_s);
+                metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "retry");
+                dispatched[rid as usize] = Instant::now();
+                send_to(
+                    &work_tx,
+                    &payload_of,
+                    rid,
+                    f,
+                    w,
+                    straggler_delay(&slow, w, registry.app(f).warm_ms),
+                )?;
+            }
+        }
         // Pull dispatch: force-place parked requests whose wait deadline
         // passed (warm if the completing workers re-advertised, fallback
         // placement otherwise). Like the simulator, an expired deadline
@@ -333,6 +510,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     let Some(head) = pending_q.pop_fn(f) else { break };
                     let w = {
                         let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                        if faults_on {
+                            ctx = ctx.with_avoid(&dead[..active]);
+                        }
                         scheduler.select(f, &mut ctx)
                     };
                     bind_parked(
@@ -348,6 +528,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         start,
                         &work_tx,
                         &payload_of,
+                        straggler_delay(&slow, w, registry.app(f).warm_ms),
                     )?;
                     if head == rid {
                         break;
@@ -374,6 +555,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                 policy.on_arrival(f, t_s);
                 let decision = {
                     let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                    if faults_on {
+                        ctx = ctx.with_avoid(&dead[..active]);
+                    }
                     if pull {
                         ctx.dispatch = Some(DispatchCtx {
                             inflight_f: inflight_f[f],
@@ -407,13 +591,21 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     vu_of.push(vu);
                     step_of.push(step);
                     fn_of.push(f);
+                    attempts.push(0);
                     match decision {
                         Decision::Assign(w) => {
                             metrics.trace.record(rid, f, "decide", t_s, t_s, Some(w), "assign");
                             loads[w] += 1;
                             inflight_f[f] += 1;
                             metrics.record_assignment(w, start.elapsed().as_secs_f64());
-                            send_to(&work_tx, &payload_of, rid, f, w)?;
+                            send_to(
+                                &work_tx,
+                                &payload_of,
+                                rid,
+                                f,
+                                w,
+                                straggler_delay(&slow, w, registry.app(f).warm_ms),
+                            )?;
                         }
                         _ => {
                             metrics.trace.record(rid, f, "decide", t_s, t_s, None, "enqueue");
@@ -439,6 +631,18 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
         for (t, _) in &deadlines {
             timeout = timeout.min(t.saturating_duration_since(now));
         }
+        for (t, _) in &retry_at {
+            timeout = timeout.min(t.saturating_duration_since(now));
+        }
+        // Pending fault-plan events are wall-clock scheduled outside the
+        // wake/deadline lists — poll often enough to apply them promptly.
+        if faults_on
+            && (next_crash < plan.crashes.len()
+                || next_recover < plan.recoveries.len()
+                || next_strag < plan.stragglers.len())
+        {
+            timeout = timeout.min(Duration::from_millis(20));
+        }
         let timeout = timeout.max(Duration::from_micros(100));
         match resp_rx.recv_timeout(timeout) {
             Ok(Ok(r)) => {
@@ -453,9 +657,10 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                         }
                     }
                 }
-                // Drained workers (beyond the active boundary) must not
-                // re-advertise idle capacity.
-                if r.worker < active {
+                // Drained workers (beyond the active boundary) and
+                // crash-marked workers must not re-advertise idle
+                // capacity or claim parked work.
+                if r.worker < active && !dead[r.worker] {
                     // Pull dispatch: the now-idle worker claims a parked
                     // request first (a warm start); it only advertises
                     // through on_complete when nothing is waiting.
@@ -467,6 +672,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                                     inflight_f: inflight_f[r.function],
                                     pending_f: pending_q.len_fn(r.function),
                                 });
+                            if faults_on {
+                                ctx = ctx.with_avoid(&dead[..active]);
+                            }
                             scheduler.on_worker_idle(r.worker, r.function, &mut ctx)
                         };
                         if let Pull::Function(pf) = p {
@@ -484,6 +692,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                                     start,
                                     &work_tx,
                                     &payload_of,
+                                    straggler_delay(&slow, r.worker, registry.app(pf).warm_ms),
                                 )?;
                                 claimed = true;
                             }
@@ -492,6 +701,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     if !claimed {
                         {
                             let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
+                            if faults_on {
+                                ctx = ctx.with_avoid(&dead[..active]);
+                            }
                             scheduler.on_complete(r.worker, r.function, &mut ctx);
                         }
                         // Idle-capacity fairness claim (same rule as the
@@ -519,9 +731,45 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                                     start,
                                     &work_tx,
                                     &payload_of,
+                                    straggler_delay(&slow, r.worker, registry.app(pf).warm_ms),
                                 )?;
                             }
                         }
+                    }
+                }
+                // Fault injection: a response whose dispatch predates the
+                // worker's most recent crash refers to state the crash
+                // destroyed — the result is lost. A cold execution may
+                // also fail initialization (seed-derived coin, same
+                // construction as the simulator). Either way the request
+                // is not resolved; it consumes a retry attempt. Worker
+                // bookkeeping above already ran: the slot is genuinely
+                // free, only the result is discarded.
+                if faults_on {
+                    let i = r.rid as usize;
+                    let crashed = last_crash[r.worker].is_some_and(|c| dispatched[i] < c);
+                    let init_fail = !crashed
+                        && r.cold
+                        && cfg.faults.init_fail_prob > 0.0
+                        && fault_coin(cfg.workload.seed, r.rid, attempts[i])
+                            < cfg.faults.init_fail_prob;
+                    if crashed || init_fail {
+                        let now_s = start.elapsed().as_secs_f64();
+                        if crashed {
+                            metrics.trace.record(
+                                r.rid, r.function, "crash", now_s, now_s, Some(r.worker), "lost",
+                            );
+                        } else {
+                            metrics.init_failures += 1;
+                            metrics.trace.record(
+                                r.rid, r.function, "init_fail", now_s, now_s, Some(r.worker), "",
+                            );
+                        }
+                        fault_retry_wallclock(
+                            r.rid, cfg, &mut attempts, &mut retry_at, &mut failed, &mut metrics,
+                            start, &workload, &vu_of, &step_of, &fn_of, &mut vu_step, &mut wake,
+                        );
+                        continue;
                     }
                 }
                 let rid = r.rid as usize;
@@ -579,6 +827,10 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
 
     metrics.duration_s = start.elapsed().as_secs_f64();
     metrics.finalize_scaling(metrics.duration_s);
+    // Conservation surface (same identity as the simulator): every
+    // admitted request resolved as completed or failed; refusals never
+    // entered `arrival`.
+    metrics.arrivals = arrival.len() as u64 + rejected as u64;
     // Drop senders so workers exit; join them.
     drop(work_tx);
     drop(resp_tx);

@@ -94,6 +94,7 @@ use super::events::{Event, EventQueue};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
 use crate::config::Config;
 use crate::dispatch::PendingQueue;
+use crate::faults::{fault_coin, retry_backoff, FaultPlan};
 use crate::metrics::RunMetrics;
 use crate::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId, StartInfo, WorkerId};
 use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, Scheduler};
@@ -132,6 +133,122 @@ pub(crate) struct StolenTask {
     pub(crate) vu: usize,
     /// Script step (closed loop) or trace index (open loop).
     pub(crate) step: usize,
+    /// Retry attempts already consumed on the donating shard — the retry
+    /// budget travels with the request (0 when faults are off).
+    pub(crate) retries: u32,
+}
+
+/// Mutable fault-injection state for one engine (or one shard). Present
+/// only when `[faults].enabled`; `None` keeps every fault check
+/// short-circuited so a fault-free run is byte-identical to the
+/// pre-fault engine (no extra events, RNG draws, or metric pushes).
+struct FaultRuntime {
+    /// The run seed — fault-salted pure-hash draws key off it
+    /// ([`crate::faults::fault_coin`] / [`crate::faults::retry_backoff`]).
+    seed: u64,
+    /// Crash-marked workers. Dead workers stay in the active prefix (so
+    /// worker ids never renumber); the router re-routes around them.
+    dead: Vec<bool>,
+    /// Per-worker service-time multiplier (1.0 = healthy; a straggler
+    /// episode raises it for new starts until the episode ends).
+    slow: Vec<f64>,
+    /// Crash timestamp per worker, for the recovery-latency metric.
+    crashed_at: Vec<f64>,
+    /// Executions in flight per worker as `(request, sandbox)`, so a
+    /// crash can harvest and re-enqueue its victims in O(running).
+    running_on: Vec<Vec<(u64, SandboxId)>>,
+    /// Sandbox-id watermark recorded at each worker's last crash: a
+    /// completion whose sandbox id is below the floor refers to state the
+    /// crash destroyed and is dropped (ids are never reused).
+    crash_floor: Vec<SandboxId>,
+    /// Retry attempts consumed per request (lazily grown with `requests`).
+    attempts: Vec<u32>,
+    /// Request reached a terminal state (completed / failed / donated to
+    /// another shard): duplicate completions from hedges and stray
+    /// retry/hedge events become no-ops — every arrival resolves once.
+    resolved: Vec<bool>,
+    /// A hedge duplicate was already issued for this request (at most one).
+    hedged: Vec<bool>,
+    /// The current execution's cold init failed (fault coin): its
+    /// completion evicts the broken sandbox and retries instead of
+    /// resolving the request.
+    init_failed: Vec<bool>,
+    /// Per-function EWMA of the sampled (pre-straggler) execution time —
+    /// the runtime estimate behind the hedge deadline.
+    runtime_ewma: Vec<f64>,
+    /// Warm state harvested from crashed workers: `(function, expiry)`.
+    /// Consumed by retried requests at re-bind while the original
+    /// keep-alive window still allows — the warm-state handoff.
+    warm_bank: Vec<(usize, f64)>,
+    /// Requests donated to another shard (conservation accounting:
+    /// `requests.len() == completed + failed + donated` per shard).
+    donated: u64,
+}
+
+impl FaultRuntime {
+    fn new(seed: u64, workers: usize, functions: usize) -> Self {
+        Self {
+            seed,
+            dead: vec![false; workers],
+            slow: vec![1.0; workers],
+            crashed_at: vec![0.0; workers],
+            running_on: vec![Vec::new(); workers],
+            crash_floor: vec![0; workers],
+            attempts: Vec::new(),
+            resolved: Vec::new(),
+            hedged: Vec::new(),
+            init_failed: Vec::new(),
+            runtime_ewma: vec![0.0; functions],
+            warm_bank: Vec::new(),
+            donated: 0,
+        }
+    }
+
+    /// Grow the per-worker tables to cover `w` (scale-up adds workers).
+    fn ensure_worker(&mut self, w: WorkerId) {
+        if w >= self.dead.len() {
+            self.dead.resize(w + 1, false);
+            self.slow.resize(w + 1, 1.0);
+            self.crashed_at.resize(w + 1, 0.0);
+            self.running_on.resize(w + 1, Vec::new());
+            self.crash_floor.resize(w + 1, 0);
+        }
+    }
+
+    /// Grow the per-request tables to cover `rid`.
+    fn ensure_request(&mut self, rid: u64) {
+        let n = rid as usize + 1;
+        if n > self.attempts.len() {
+            self.attempts.resize(n, 0);
+            self.resolved.resize(n, false);
+            self.hedged.resize(n, false);
+            self.init_failed.resize(n, false);
+        }
+    }
+
+    fn is_dead(&self, w: WorkerId) -> bool {
+        self.dead.get(w).copied().unwrap_or(false)
+    }
+
+    fn is_resolved(&self, rid: u64) -> bool {
+        self.resolved.get(rid as usize).copied().unwrap_or(false)
+    }
+
+    /// Least-loaded live worker in the active prefix — the re-route
+    /// target when a selection landed on a crashed worker. O(active),
+    /// paid only on the (rare) re-route path.
+    fn best_live(&self, loads: &[u32], active: usize) -> Option<WorkerId> {
+        let mut best: Option<WorkerId> = None;
+        for w in 0..active {
+            if self.is_dead(w) {
+                continue;
+            }
+            if best.map_or(true, |b| loads[w] < loads[b]) {
+                best = Some(w);
+            }
+        }
+        best
+    }
 }
 
 /// One simulation run: scheduler instance(s) against the workload.
@@ -216,6 +333,12 @@ pub struct Simulation<'a> {
     /// Scale-down floor: 0 only for scale-to-zero configs
     /// (`autoscale.min_workers = 0` under pull dispatch), else 1.
     min_active: usize,
+    /// The run seed (fault plans and per-request fault hashes key off it;
+    /// the RNG streams above were already split from a salted copy).
+    run_seed: u64,
+    /// Fault-injection runtime (`[faults].enabled`); `None` short-circuits
+    /// every fault check — byte-identical to the pre-fault engine.
+    faults: Option<FaultRuntime>,
     metrics: RunMetrics,
 }
 
@@ -289,13 +412,23 @@ impl<'a> Simulation<'a> {
             inflight_f: vec![0; registry.len()],
             wake_armed: false,
             min_active: if cfg.pull_dispatch() && cfg.autoscale.min_workers == 0 { 0 } else { 1 },
-            metrics: RunMetrics::with_telemetry(
-                &name,
-                cfg.cluster.workers,
-                cfg.workload.vus,
-                cfg.workload.duration_s,
-                &cfg.telemetry,
-            ),
+            run_seed: seed,
+            faults: if cfg.faults.enabled {
+                Some(FaultRuntime::new(seed, cfg.cluster.workers, registry.len()))
+            } else {
+                None
+            },
+            metrics: {
+                let mut m = RunMetrics::with_telemetry(
+                    &name,
+                    cfg.cluster.workers,
+                    cfg.workload.vus,
+                    cfg.workload.duration_s,
+                    &cfg.telemetry,
+                );
+                m.faults_enabled = cfg.faults.enabled;
+                m
+            },
         }
     }
 
@@ -411,6 +544,20 @@ impl<'a> Simulation<'a> {
         self.metrics.prewarm_hits = totals.prewarm_hits;
         self.metrics.events_processed = self.queue.popped();
         self.metrics.peak_event_queue = self.queue.peak_len();
+        // Conservation accounting: every arrival (admitted request or
+        // issue-time rejection) ends exactly once. Donations to other
+        // shards are balanced globally by the receiver's `stolen` count,
+        // so the merged identity is
+        // `arrivals == completed + rejected + failed + stolen`.
+        self.metrics.arrivals = self.requests.len() as u64 + self.metrics.rejected;
+        if let Some(fr) = self.faults.as_ref() {
+            debug_assert_eq!(
+                self.metrics.completed + self.metrics.failed + fr.donated,
+                self.requests.len() as u64,
+                "fault conservation violated: an admitted request leaked \
+                 without resolving as completed, failed, or donated"
+            );
+        }
     }
 
     /// Seed the initial event set for a closed-loop run. The push order is
@@ -431,6 +578,33 @@ impl<'a> Simulation<'a> {
             self.queue.push_at(1.0, Event::PreWarmTick);
         }
         self.queue.push_at(self.sweep_dt(), Event::SweepTick);
+        self.install_fault_plan();
+    }
+
+    /// Append the fault plan's events (crashes, recoveries, straggler
+    /// episodes) to the initial event set. A disabled `[faults]` section
+    /// pushes nothing, so fault-free runs keep the exact pre-fault event
+    /// stream; when enabled, the plan is appended *after* every other
+    /// initial push so fault-free seq numbers are undisturbed.
+    fn install_fault_plan(&mut self) {
+        if self.faults.is_none() {
+            return;
+        }
+        let plan = FaultPlan::generate(
+            &self.cfg.faults,
+            self.cluster.len(),
+            self.cfg.workload.duration_s,
+            self.run_seed,
+        );
+        for &(t, w) in &plan.crashes {
+            self.queue.push_at(t, Event::WorkerFail { worker: w });
+        }
+        for &(t, w) in &plan.recoveries {
+            self.queue.push_at(t, Event::WorkerRecover { worker: w });
+        }
+        for &(t, w, m) in &plan.stragglers {
+            self.queue.push_at(t, Event::StragglerSet { worker: w, mult: m });
+        }
     }
 
     /// Run the closed-loop VU workload to completion.
@@ -464,6 +638,7 @@ impl<'a> Simulation<'a> {
             }
         }
         self.queue.push_at(self.sweep_dt(), Event::SweepTick);
+        self.install_fault_plan();
         // Steal the arrivals for dispatch (cheap copy of (f64, usize)).
         self.open_arrivals = Some(trace.arrivals.clone());
     }
@@ -553,6 +728,18 @@ impl<'a> Simulation<'a> {
         self.cluster.active_workers()
     }
 
+    /// Active workers not currently crash-marked — the failure digest a
+    /// shard publishes at each epoch barrier so cross-shard stealing
+    /// never routes work toward a dead partition. Equals
+    /// [`Self::active_workers`] when fault injection is disabled.
+    pub(crate) fn live_workers(&self) -> usize {
+        let active = self.cluster.active_workers();
+        match self.faults.as_ref() {
+            Some(fr) => (0..active).filter(|&w| !fr.is_dead(w)).count(),
+            None => active,
+        }
+    }
+
     /// (running, queued) totals over this shard's active workers.
     pub(crate) fn cluster_running_queued(&self) -> (usize, usize) {
         (self.cluster.total_running(), self.cluster.total_queued())
@@ -639,6 +826,22 @@ impl<'a> Simulation<'a> {
         let mut out = Vec::with_capacity(k);
         for _ in 0..k {
             let Some((rid, f)) = self.pop_next_pending() else { break };
+            let mut retries = 0;
+            if let Some(fr) = self.faults.as_mut() {
+                fr.ensure_request(rid);
+                let i = rid as usize;
+                if fr.hedged[i] || fr.resolved[i] {
+                    // A hedge duplicate (its original execution stays
+                    // here) or an already-terminal request must not
+                    // migrate: re-park it and stop donating this round.
+                    self.pending.push(rid, f);
+                    self.metrics.record_enqueue(self.pending.len());
+                    break;
+                }
+                fr.resolved[i] = true; // terminal on this shard: donated
+                fr.donated += 1;
+                retries = fr.attempts[i];
+            }
             let meta = self.requests[rid as usize];
             debug_assert_eq!(meta.function, f);
             out.push(StolenTask {
@@ -646,6 +849,7 @@ impl<'a> Simulation<'a> {
                 arrival: meta.arrival,
                 vu: meta.vu,
                 step: meta.step,
+                retries,
             });
         }
         out
@@ -675,6 +879,11 @@ impl<'a> Simulation<'a> {
         });
         self.cold_flags.push(false);
         self.queue_delays.push(0.0);
+        if let Some(fr) = self.faults.as_mut() {
+            // The retry budget travels with the request across shards.
+            fr.ensure_request(rid);
+            fr.attempts[rid as usize] = task.retries;
+        }
         self.metrics.stolen += 1;
         let active = self.cluster.active_workers();
         debug_assert!(active > 0, "stolen task handed to an empty shard");
@@ -684,6 +893,7 @@ impl<'a> Simulation<'a> {
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
                 dispatch: None,
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
             };
             self.schedulers[si].select(task.function, &mut ctx)
         };
@@ -694,7 +904,18 @@ impl<'a> Simulation<'a> {
         match ev {
             Event::Arrival { vu, step } => self.on_arrival(vu, step, t),
             Event::Completion { worker, sandbox, request } => {
-                self.on_completion_coalesced(worker, sandbox, request, t)
+                // With faults on, completions bypass coalescing (a batch
+                // could straddle a crash's stale entries) and drop events
+                // whose sandbox a crash destroyed. Faults off keeps the
+                // coalesced fast path untouched.
+                if let Some(fr) = self.faults.as_ref() {
+                    let floor = fr.crash_floor.get(worker).copied().unwrap_or(0);
+                    if sandbox >= floor {
+                        self.on_completion(worker, sandbox, request, t);
+                    }
+                } else {
+                    self.on_completion_coalesced(worker, sandbox, request, t)
+                }
             }
             Event::SweepTick => self.on_sweep(t),
             Event::Scale { up } => {
@@ -725,6 +946,11 @@ impl<'a> Simulation<'a> {
             }
             Event::PullDeadline { request } => self.on_pull_deadline(request, t),
             Event::Wake => self.on_wake(),
+            Event::WorkerFail { worker } => self.on_worker_fail(worker, t),
+            Event::WorkerRecover { worker } => self.on_worker_recover(worker, t),
+            Event::StragglerSet { worker, mult } => self.on_straggler_set(worker, mult),
+            Event::RetryEnqueue { request } => self.on_retry_enqueue(request, t),
+            Event::HedgeCheck { request } => self.on_hedge_check(request, t),
         }
     }
 
@@ -943,6 +1169,9 @@ impl<'a> Simulation<'a> {
                 self.cluster.least_loaded_fitting(mem)
             };
             let Some(w) = target else { return };
+            if self.faults.as_ref().map_or(false, |fr| fr.is_dead(w)) {
+                continue; // never pre-warm a crashed worker
+            }
             if let Some(sb) = self.cluster.prewarm(w, f, mem, t) {
                 let init = self.registry.sample_init_s(f, &mut self.service_rng);
                 self.queue.push_at(t + init, Event::PreWarmDone { worker: w, sandbox: sb });
@@ -1081,12 +1310,37 @@ impl<'a> Simulation<'a> {
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
                 dispatch,
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
             };
             self.schedulers[si].decide(f, &mut ctx)
         };
         match decision {
             Decision::Assign(w) => {
                 debug_assert!(w < active, "scheduler picked drained worker {w}");
+                if self.faults.as_ref().map_or(false, |fr| fr.is_dead(w)) {
+                    // The pick landed on a crashed worker the scheduler
+                    // didn't (or couldn't) avoid.
+                    self.metrics.trace.record(rid, f, "decide", t, t, Some(w), "dead-assign");
+                    self.requests.push(RequestMeta {
+                        vu,
+                        step,
+                        function: f,
+                        worker: usize::MAX,
+                        sched: si,
+                        arrival: t,
+                    });
+                    self.cold_flags.push(false);
+                    self.queue_delays.push(0.0);
+                    if self.pull {
+                        // The pull router observes liveness: re-route.
+                        self.bind_pending(rid, w, t, "reroute");
+                    } else {
+                        // Push mode cannot — the bind bounces off the dead
+                        // node and burns a retry (the ablation's contrast).
+                        self.fault_retry(rid, t);
+                    }
+                    return;
+                }
                 self.metrics.trace.record(rid, f, "decide", t, t, Some(w), "assign");
                 self.loads[si].inc(w);
                 self.metrics.record_assignment(w, t);
@@ -1151,6 +1405,9 @@ impl<'a> Simulation<'a> {
     /// expected queue wait is below the cold start it might avoid, so
     /// the deadline self-tunes per function instead of using one global
     /// knob (DESIGN.md §8).
+    /// The adaptive deadline is floored by `dispatch.min_wait_s` so a
+    /// near-zero cold-penalty EWMA (tiny init times) cannot collapse the
+    /// wait to 0 and turn every park into an immediate force-place.
     fn pull_wait_s(&self, f: usize) -> f64 {
         let base = self.cfg.dispatch.max_wait_s;
         if !self.adaptive_wait {
@@ -1158,7 +1415,7 @@ impl<'a> Simulation<'a> {
         }
         let penalty = self.cold_penalty_ewma[f];
         if penalty > 0.0 {
-            base.min(penalty)
+            base.min(penalty).max(self.cfg.dispatch.min_wait_s)
         } else {
             base
         }
@@ -1208,12 +1465,42 @@ impl<'a> Simulation<'a> {
     /// `kind` labels the bind path for the lifecycle trace
     /// (`pull`/`idle`/`deadline`/`flush`/`steal`).
     fn bind_pending(&mut self, rid: u64, w: WorkerId, t: f64, kind: &'static str) {
+        let mut w = w;
+        if let Some(fr) = self.faults.as_ref() {
+            if fr.is_resolved(rid) {
+                // A hedge duplicate whose sibling already resolved the
+                // request (or a donated/failed request): nothing to run.
+                return;
+            }
+            let active = self.cluster.active_workers();
+            if w >= active || fr.is_dead(w) {
+                // The selection landed on a crashed (or stale) worker: the
+                // router observes liveness and re-routes to the
+                // least-loaded live worker. With no live capacity at all
+                // the request burns a retry instead of re-arming forever
+                // (the budget bounds the run).
+                let si = self.requests[rid as usize].sched;
+                match fr.best_live(self.loads[si].loads(), active) {
+                    Some(b) => {
+                        w = b;
+                        self.metrics.re_routed += 1;
+                    }
+                    None => {
+                        self.fault_retry(rid, t);
+                        return;
+                    }
+                }
+            }
+        }
         assert!(
             w < self.cluster.active_workers(),
             "pull dispatch bound request {rid} to drained worker {w}"
         );
         let meta = &mut self.requests[rid as usize];
-        debug_assert_eq!(meta.worker, usize::MAX, "request {rid} bound twice");
+        debug_assert!(
+            self.faults.is_some() || meta.worker == usize::MAX,
+            "request {rid} bound twice"
+        );
         meta.worker = w;
         let (si, f, arrival) = (meta.sched, meta.function, meta.arrival);
         self.loads[si].inc(w);
@@ -1221,7 +1508,40 @@ impl<'a> Simulation<'a> {
         self.metrics.record_pending_wait(f, t - arrival);
         self.metrics.trace.record(rid, f, "pending", arrival, t, None, "");
         self.metrics.trace.record(rid, f, "bind", t, t, Some(w), kind);
+        if self.faults.is_some() {
+            self.try_migrate_warm(rid, w, f, t);
+        }
         self.start_on(w, rid, f, t);
+    }
+
+    /// Warm-state handoff: a *retried* request of `f` landing on `w`
+    /// consumes one unexpired entry from the crash warm bank — the
+    /// sandbox state a crashed worker held for `f` migrates with the
+    /// re-routed request (modeled as an instant pre-warm, so the assign
+    /// below wins a warm start). No-op when `w` is already warm for `f`,
+    /// when the bank holds no live entry, or when memory is tight.
+    fn try_migrate_warm(&mut self, rid: u64, w: WorkerId, f: usize, t: f64) {
+        {
+            let fr = self.faults.as_mut().unwrap();
+            fr.warm_bank.retain(|&(_, exp)| exp > t);
+            if fr.attempts.get(rid as usize).copied().unwrap_or(0) == 0 {
+                return;
+            }
+            if self.cluster.worker(w).idle_count(f) > 0 {
+                return;
+            }
+            let Some(pos) = fr.warm_bank.iter().position(|&(g, _)| g == f) else {
+                return;
+            };
+            fr.warm_bank.swap_remove(pos);
+        }
+        let mem = self.registry.mem_mb(f);
+        if let Some(sb) = self.cluster.prewarm(w, f, mem, t) {
+            if self.cluster.finish_prewarm(w, sb, t).is_some() {
+                self.metrics.migrated += 1;
+                self.metrics.trace.record(rid, f, "migrate", t, t, Some(w), "warm-state");
+            }
+        }
     }
 
     /// Force-place one parked request of `f` through the scheduler's
@@ -1237,6 +1557,7 @@ impl<'a> Simulation<'a> {
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
                 dispatch: None,
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
             };
             self.schedulers[si].select(f, &mut ctx)
         };
@@ -1314,6 +1635,244 @@ impl<'a> Simulation<'a> {
         self.flush_pending();
     }
 
+    // ---- fault injection & recovery ([`crate::faults`]) ------------------
+
+    /// Continue a closed-loop VU after its request terminated without a
+    /// normal completion (budget-exhausted failure): think, then next
+    /// step — the same continuation a rejection takes.
+    fn vu_next(&mut self, vu: usize, step: usize, t: f64) {
+        if vu == usize::MAX {
+            return;
+        }
+        let think = self.workload.vus[vu].steps[step].think_s;
+        let next_t = t + think;
+        if next_t < self.cfg.workload.duration_s {
+            self.queue.push_at(next_t, Event::Arrival { vu, step: step + 1 });
+        }
+    }
+
+    /// Send request `rid` around the retry loop: consume one attempt and
+    /// schedule a deterministically jittered `RetryEnqueue` — or, budget
+    /// exhausted, meter it as `failed` (never silently dropped) and let
+    /// the issuing VU continue.
+    fn fault_retry(&mut self, rid: u64, t: f64) {
+        let max_retries = self.cfg.faults.max_retries;
+        let backoff = self.cfg.faults.retry_backoff_s;
+        let (seed, att) = {
+            let fr = self.faults.as_mut().unwrap();
+            fr.ensure_request(rid);
+            if fr.resolved[rid as usize] {
+                return;
+            }
+            (fr.seed, fr.attempts[rid as usize])
+        };
+        let i = rid as usize;
+        if att >= max_retries {
+            self.faults.as_mut().unwrap().resolved[i] = true;
+            self.metrics.failed += 1;
+            let meta = self.requests[i];
+            self.requests[i].worker = usize::MAX;
+            self.metrics.trace.record(rid, meta.function, "failed", t, t, None, "budget");
+            self.vu_next(meta.vu, meta.step, t);
+            return;
+        }
+        self.faults.as_mut().unwrap().attempts[i] = att + 1;
+        self.metrics.retried += 1;
+        self.requests[i].worker = usize::MAX;
+        let delay = retry_backoff(backoff, seed, rid, att + 1);
+        self.queue.push_at(t + delay, Event::RetryEnqueue { request: rid });
+    }
+
+    /// A crash destroyed `rid`'s execution or queue slot. If a hedge
+    /// duplicate is already parked in the pending queue, that copy *is*
+    /// the retry; otherwise go around the retry loop.
+    fn fault_requeue(&mut self, rid: u64, t: f64) {
+        if self.pull && self.pending.is_waiting(rid) {
+            return;
+        }
+        self.fault_retry(rid, t);
+    }
+
+    /// `WorkerFail`: destroy the worker's entire state (sandboxes, queue,
+    /// load), bank its warm inventory for migration, and re-enqueue every
+    /// in-flight and queued request under the bounded retry budget. The
+    /// dead worker stays in the active prefix — worker ids never renumber
+    /// — and the router re-routes around it until `WorkerRecover`.
+    fn on_worker_fail(&mut self, w: WorkerId, t: f64) {
+        if self.faults.is_none() || w >= self.cluster.len() {
+            return;
+        }
+        {
+            let fr = self.faults.as_mut().unwrap();
+            fr.ensure_worker(w);
+            if fr.dead[w] {
+                return;
+            }
+            fr.dead[w] = true;
+            fr.crashed_at[w] = t;
+        }
+        self.metrics.worker_crashes += 1;
+        crate::log_debug!("faults", "worker {w} crashed at t={t:.2}s");
+        let (queued, warm) = self.cluster.crash(w);
+        let watermark = self.cluster.worker(w).sandbox_watermark();
+        let inflight = {
+            let fr = self.faults.as_mut().unwrap();
+            fr.crash_floor[w] = watermark;
+            std::mem::take(&mut fr.running_on[w])
+        };
+        // Bank the warm inventory for handoff while keep-alive allows,
+        // and tell the schedulers those advertisements are gone.
+        let ka = self.cfg.cluster.keep_alive_s;
+        for &(f, idle_since) in &warm {
+            let expires = idle_since + ka;
+            if expires > t {
+                self.faults.as_mut().unwrap().warm_bank.push((f, expires));
+            }
+            self.notify_evict(w, f);
+        }
+        // In-flight executions: their completions are now stale (below
+        // the crash floor); undo the per-execution bookkeeping and retry.
+        for (rid, _sb) in inflight {
+            let meta = self.requests[rid as usize];
+            self.loads[meta.sched].dec(w);
+            if self.pull {
+                debug_assert!(self.inflight_f[meta.function] > 0);
+                self.inflight_f[meta.function] -= 1;
+            }
+            self.metrics.trace.record(rid, meta.function, "crash", t, t, Some(w), "inflight");
+            self.fault_requeue(rid, t);
+        }
+        // Worker-queue requests never started; rebind them too.
+        for q in queued {
+            let rid = q.request_id;
+            let meta = self.requests[rid as usize];
+            self.loads[meta.sched].dec(w);
+            self.metrics.trace.record(rid, meta.function, "crash", t, t, Some(w), "queued");
+            self.fault_requeue(rid, t);
+        }
+    }
+
+    /// `WorkerRecover`: the worker rejoins, cold. Pull mode immediately
+    /// lets the restored capacity claim prospect-less backlog (up to its
+    /// concurrency), exactly like any other idle-capacity return.
+    fn on_worker_recover(&mut self, w: WorkerId, t: f64) {
+        {
+            let Some(fr) = self.faults.as_mut() else { return };
+            if w >= fr.dead.len() || !fr.dead[w] {
+                return;
+            }
+            fr.dead[w] = false;
+            let down_ms = (t - fr.crashed_at[w]) * 1000.0;
+            self.metrics.worker_recoveries += 1;
+            self.metrics.recovery_latency_ms.push(down_ms);
+        }
+        crate::log_debug!("faults", "worker {w} recovered at t={t:.2}s");
+        if self.pull && w < self.cluster.active_workers() {
+            let conc = self.cfg.cluster.concurrency.max(1);
+            for _ in 0..conc {
+                if self.pending.is_empty() || !self.claim_stale_pending(w, t) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// `StragglerSet`: set the worker's service-time multiplier. New
+    /// starts only — in-flight executions keep their sampled times.
+    fn on_straggler_set(&mut self, w: WorkerId, mult: f64) {
+        if let Some(fr) = self.faults.as_mut() {
+            fr.ensure_worker(w);
+            fr.slow[w] = mult.max(1.0);
+        }
+    }
+
+    /// `RetryEnqueue`: the backoff elapsed — re-enter dispatch. Pull mode
+    /// re-parks the request in the pending queue (admission was already
+    /// paid at arrival, so retries never re-face the cap); push mode
+    /// re-runs the synchronous decision, and a pick that lands on a
+    /// crashed worker burns another retry — the push protocol cannot
+    /// observe liveness, which is the fault ablation's central contrast.
+    fn on_retry_enqueue(&mut self, rid: u64, t: f64) {
+        if self.faults.is_none() || self.faults.as_ref().unwrap().is_resolved(rid) {
+            return;
+        }
+        if self.pull && self.pending.is_waiting(rid) {
+            return;
+        }
+        let meta = self.requests[rid as usize];
+        let f = meta.function;
+        if self.pull {
+            self.pending.push(rid, f);
+            self.metrics.record_enqueue(self.pending.len());
+            self.metrics.trace.record(rid, f, "retry", t, t, None, "park");
+            self.queue.push_at(t + self.pull_wait_s(f), Event::PullDeadline { request: rid });
+            if self.cluster.active_workers() == 0 && !self.wake_armed {
+                self.wake_armed = true;
+                self.queue.push_at(t, Event::Wake);
+            }
+            return;
+        }
+        let active = self.cluster.active_workers();
+        if active == 0 {
+            self.fault_retry(rid, t);
+            return;
+        }
+        let si = meta.sched;
+        let w = {
+            let mut ctx = SchedCtx {
+                loads: &self.loads[si].loads()[..active],
+                min_index: if self.reference { None } else { Some(&self.loads[si]) },
+                rng: &mut self.sched_rng,
+                dispatch: None,
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+            };
+            self.schedulers[si].select(f, &mut ctx)
+        };
+        if w >= active || self.faults.as_ref().unwrap().is_dead(w) {
+            self.metrics.trace.record(rid, f, "retry", t, t, Some(w), "dead-bind");
+            self.fault_retry(rid, t);
+            return;
+        }
+        self.requests[rid as usize].worker = w;
+        self.loads[si].inc(w);
+        self.metrics.record_assignment(w, t);
+        self.metrics.trace.record(rid, f, "bind", t, t, Some(w), "retry");
+        self.start_on(w, rid, f, t);
+    }
+
+    /// `HedgeCheck`: the request has been running on a straggler past
+    /// `hedge_factor x` its function's runtime EWMA. Issue one duplicate
+    /// into the pull path; whichever execution completes first resolves
+    /// the request (the loser only cleans up worker-side).
+    fn on_hedge_check(&mut self, rid: u64, t: f64) {
+        let meta = self.requests[rid as usize];
+        {
+            let Some(fr) = self.faults.as_mut() else { return };
+            let i = rid as usize;
+            if i >= fr.resolved.len() || fr.resolved[i] || fr.hedged[i] {
+                return;
+            }
+            // Only hedge an execution still held by a live straggler; a
+            // crash-retried or re-parked request is already in recovery.
+            if meta.worker == usize::MAX
+                || fr.is_dead(meta.worker)
+                || fr.slow.get(meta.worker).copied().unwrap_or(1.0) <= 1.0
+                || fr.running_on
+                    .get(meta.worker)
+                    .map_or(true, |v| v.iter().all(|&(r, _)| r != rid))
+            {
+                return;
+            }
+            fr.hedged[i] = true;
+        }
+        self.metrics.hedged += 1;
+        self.metrics.trace.record(rid, meta.function, "hedge", t, t, Some(meta.worker), "");
+        self.pending.push(rid, meta.function);
+        self.metrics.record_enqueue(self.pending.len());
+        self.queue
+            .push_at(t + self.pull_wait_s(meta.function), Event::PullDeadline { request: rid });
+    }
+
     /// Force-place every parked request — the cluster just regained
     /// capacity after scale-to-zero, and the backlog must not wait out
     /// its deadlines against a live worker. Drains in deficit-round-robin
@@ -1382,6 +1941,7 @@ impl<'a> Simulation<'a> {
                     inflight_f: self.inflight_f[f],
                     pending_f: self.pending.len_fn(f),
                 }),
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
             };
             self.schedulers[si].on_worker_idle(w, f, &mut ctx)
         };
@@ -1409,6 +1969,7 @@ impl<'a> Simulation<'a> {
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
                 dispatch: None,
+                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
             };
             self.schedulers[si].on_complete(w, f, &mut ctx);
         }
@@ -1458,6 +2019,9 @@ impl<'a> Simulation<'a> {
             let congestion = (running / cores).max(1.0);
             dur *= congestion;
         }
+        if self.faults.is_some() {
+            dur = self.fault_start(info.request_id, w, info.sandbox, meta.function, info.cold, init_s, dur, t);
+        }
         // Cold/warm and queue delay resolved at start time, kept per rid.
         self.cold_flags[info.request_id as usize] = info.cold;
         self.queue_delays[info.request_id as usize] = info.queue_delay_s;
@@ -1491,7 +2055,72 @@ impl<'a> Simulation<'a> {
         );
     }
 
+    /// Fault hooks at execution start, returning the (possibly adjusted)
+    /// duration. All randomness is pure-hash (`fault_coin`), so the
+    /// engine's RNG streams — and with them every fault-free draw — stay
+    /// untouched:
+    /// - a cold start's init may fail (`faults.init_fail_prob`): the
+    ///   execution burns only the init time and its completion retries
+    ///   the request instead of resolving it;
+    /// - a straggler episode stretches the service time by the worker's
+    ///   current multiplier, and (pull mode) arms a `HedgeCheck` at
+    ///   `hedge_factor x` the function's runtime EWMA so requests held by
+    ///   stragglers get hedged to the pull path;
+    /// - the `(request, sandbox)` pair is journaled per worker so a crash
+    ///   can harvest its in-flight victims.
+    #[allow(clippy::too_many_arguments)]
+    fn fault_start(
+        &mut self,
+        rid: u64,
+        w: WorkerId,
+        sb: SandboxId,
+        f: usize,
+        cold: bool,
+        init_s: f64,
+        mut dur: f64,
+        t: f64,
+    ) -> f64 {
+        let init_fail_prob = self.cfg.faults.init_fail_prob;
+        let hedge_factor = self.cfg.faults.hedge_factor;
+        let pull = self.pull;
+        let fr = self.faults.as_mut().unwrap();
+        fr.ensure_request(rid);
+        fr.ensure_worker(w);
+        let i = rid as usize;
+        let failed_init = cold
+            && init_fail_prob > 0.0
+            && fault_coin(fr.seed, rid, fr.attempts[i]) < init_fail_prob;
+        if failed_init {
+            fr.init_failed[i] = true;
+            dur = init_s;
+        } else {
+            // Nominal-runtime EWMA (hedge deadline input), updated from
+            // the sampled duration before any straggler stretch.
+            const ALPHA: f64 = 0.2;
+            let prev = fr.runtime_ewma[f];
+            fr.runtime_ewma[f] = if prev > 0.0 { ALPHA * dur + (1.0 - ALPHA) * prev } else { dur };
+        }
+        let slow = fr.slow[w];
+        if slow > 1.0 {
+            dur *= slow;
+            if pull && hedge_factor > 0.0 && !failed_init && !fr.hedged[i] {
+                let deadline = hedge_factor * fr.runtime_ewma[f].max(1e-3);
+                self.queue.push_at(t + deadline, Event::HedgeCheck { request: rid });
+            }
+        }
+        fr.running_on[w].push((rid, sb));
+        dur
+    }
+
     fn on_completion(&mut self, w: WorkerId, sandbox: SandboxId, rid: u64, t: f64) {
+        // Faults: this execution is no longer crash-harvestable.
+        if let Some(fr) = self.faults.as_mut() {
+            if let Some(v) = fr.running_on.get_mut(w) {
+                if let Some(p) = v.iter().position(|&(r, s)| r == rid && s == sandbox) {
+                    v.swap_remove(p);
+                }
+            }
+        }
         // Worker-side: sandbox idles; (queue mode) a queued request may
         // start; (elastic mode) the idle pool is trimmed to capacity.
         let outcome = if self.cfg.cluster.elastic {
@@ -1511,7 +2140,10 @@ impl<'a> Simulation<'a> {
     /// two paths cannot drift.
     fn post_completion(&mut self, w: WorkerId, rid: u64, outcome: BatchCompletion, t: f64) {
         let meta = self.requests[rid as usize];
-        debug_assert_eq!(meta.worker, w);
+        // Under faults a hedge duplicate can complete on a worker other
+        // than the latest-bound one; the per-execution bookkeeping below
+        // still balances (inc at bind, dec here, per execution).
+        debug_assert!(self.faults.is_some() || meta.worker == w);
         self.loads[meta.sched].dec(w);
         if self.pull {
             debug_assert!(self.inflight_f[meta.function] > 0);
@@ -1529,9 +2161,19 @@ impl<'a> Simulation<'a> {
         // idle worker first gets to *claim a parked request*
         // ([`crate::scheduler::Scheduler::on_worker_idle`]); only when
         // nothing is waiting does it advertise.
+        let init_failed_now = self
+            .faults
+            .as_ref()
+            .map_or(false, |fr| fr.init_failed.get(rid as usize).copied().unwrap_or(false));
         if let Some((sb, epoch)) = outcome.expiry {
             let active = self.cluster.active_workers();
-            if w < active {
+            if init_failed_now {
+                // The sandbox's init failed: never advertise it warm —
+                // reclaim it immediately.
+                if let Some(f) = self.cluster.expire_keepalive(w, sb, epoch) {
+                    self.notify_evict(w, f);
+                }
+            } else if w < active {
                 let si = meta.sched;
                 self.worker_idle(w, meta.function, si, t);
                 // Keep-alive expiry handled by the periodic SweepTick.
@@ -1544,6 +2186,29 @@ impl<'a> Simulation<'a> {
 
         if let Some(info) = outcome.started {
             self.handle_start(w, info, t);
+        }
+
+        if init_failed_now {
+            // The execution only burned its (failed) init: the request is
+            // not done — meter the failure and send it around the retry
+            // loop instead of resolving it.
+            let fr = self.faults.as_mut().unwrap();
+            fr.init_failed[rid as usize] = false;
+            self.metrics.init_failures += 1;
+            self.metrics.trace.record(rid, meta.function, "init_fail", t, t, Some(w), "");
+            self.requests[rid as usize].worker = usize::MAX;
+            self.fault_retry(rid, t);
+            return;
+        }
+        if let Some(fr) = self.faults.as_mut() {
+            fr.ensure_request(rid);
+            let i = rid as usize;
+            if fr.resolved[i] {
+                // A hedge duplicate lost the race: the request already
+                // resolved; only the worker-side cleanup above applies.
+                return;
+            }
+            fr.resolved[i] = true;
         }
 
         // Metrics: response latency for the completed request.

@@ -80,6 +80,22 @@ pub enum Event {
     /// Scale-to-zero: an arrival hit an empty cluster; restore one worker
     /// and flush the pending queue (pull dispatch only).
     Wake,
+    /// Fault injection: the worker crashes — every sandbox (busy included)
+    /// is destroyed and in-flight work is re-enqueued with a retry budget
+    /// ([`crate::faults`], DESIGN.md §10).
+    WorkerFail { worker: WorkerId },
+    /// Fault injection: a crashed worker rejoins the cluster, cold.
+    WorkerRecover { worker: WorkerId },
+    /// Fault injection: set the worker's service-time multiplier
+    /// (`mult = 1.0` ends a straggler episode).
+    StragglerSet { worker: WorkerId, mult: f64 },
+    /// Fault recovery: a lost request's jittered backoff elapsed —
+    /// re-enqueue it (pull) or re-select a worker (push).
+    RetryEnqueue { request: u64 },
+    /// Straggler hedging: if the request is still held by a slowed worker
+    /// past its EWMA-runtime deadline, duplicate it onto the pull path
+    /// (first completion wins).
+    HedgeCheck { request: u64 },
 }
 
 /// One scheduled event. `key` is the event time's IEEE bit pattern (times

@@ -98,7 +98,7 @@ use std::time::Instant;
 
 use super::engine::{Simulation, StolenTask};
 use crate::autoscale::{AutoscaleObs, AutoscalePolicy};
-use crate::config::Config;
+use crate::config::{parse_crash_list, Config};
 use crate::metrics::RunMetrics;
 use crate::scheduler::{make_scheduler, Scheduler};
 use crate::util::loadidx::LoadSummary;
@@ -150,6 +150,11 @@ struct ShardReport {
     drained: bool,
     /// Active workers in the shard.
     active: usize,
+    /// Failure digest: active workers not currently crash-marked
+    /// (`faults` section; equals `active` with fault injection off). The
+    /// steal rule never routes work toward a shard with `live == 0`, so
+    /// cross-shard handoffs cannot bind to an all-dead partition.
+    live: usize,
     /// Executions running across the shard's active workers.
     running: usize,
     /// Requests queued at the shard's active workers.
@@ -331,7 +336,11 @@ impl Coord {
                 }
                 let mut best: Option<usize> = None;
                 for r in 0..self.shards {
-                    if r == donor || self.reports[r].pending > 0 {
+                    // Failure digest: a shard whose active slice is
+                    // entirely crash-marked can run nothing — stealing
+                    // toward it would park the payload behind dead
+                    // workers until the retry budget burns out.
+                    if r == donor || self.reports[r].pending > 0 || self.reports[r].live == 0 {
                         continue;
                     }
                     best = match best {
@@ -342,8 +351,13 @@ impl Coord {
                     };
                 }
                 let Some(to) = best else { continue };
-                if !self.reports[to].load.less_loaded_than(&self.reports[donor].load) {
-                    continue; // never move work to a busier shard
+                // Never move work to a busier shard — unless the donor
+                // has zero live workers, in which case its backlog can
+                // only make progress by escaping (crash recovery).
+                if self.reports[donor].live > 0
+                    && !self.reports[to].load.less_loaded_than(&self.reports[donor].load)
+                {
+                    continue;
                 }
                 let n = self.reports[donor].pending.min(self.steal_batch);
                 self.mailboxes[donor].push(ShardMsg::Handoff { to, n });
@@ -367,12 +381,33 @@ pub fn shard_workers(total: usize, s: usize, n: usize) -> usize {
 /// disabled (the coordinator owns autoscale and pre-warm placement), and
 /// `shards` reset to 1. VU slicing is applied separately via
 /// [`Simulation::with_vu_slice`].
+///
+/// An explicit `faults.crashes` schedule addresses *global* worker ids;
+/// since the partition is contiguous slices, entries are remapped to the
+/// shard-local id space here and out-of-slice entries dropped, so
+/// `"10:3"` kills the same physical worker at any shard count. Rate-based
+/// faults (`crash_rate`, `straggler_frac`, `init_fail_prob`) need no
+/// remapping: each shard draws them from per-worker streams salted with
+/// its own shard seed.
 pub fn partition_config(cfg: &Config, s: usize, n: usize) -> Config {
     let mut c = cfg.clone();
     c.cluster.workers = shard_workers(cfg.cluster.workers, s, n);
     c.sim.shards = 1;
     c.cluster.prewarm = false;
     c.autoscale.policy = "none".into();
+    if c.faults.enabled && !c.faults.crashes.is_empty() {
+        let base: usize = (0..s).map(|i| shard_workers(cfg.cluster.workers, i, n)).sum();
+        let local = c.cluster.workers;
+        // The list was validated by Config::validate before any shard
+        // config is derived, so a parse error here is unreachable.
+        let kept: Vec<String> = parse_crash_list(&c.faults.crashes)
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|&(_, w)| (base..base + local).contains(&w))
+            .map(|(t, w)| format!("{t}:{}", w - base))
+            .collect();
+        c.faults.crashes = kept.join(";");
+    }
     c
 }
 
@@ -591,6 +626,7 @@ fn shard_main(
             let r = &mut c.reports[s];
             r.drained = drained;
             r.active = sim.active_workers();
+            r.live = sim.live_workers();
             let (running, queued) = sim.cluster_running_queued();
             r.running = running;
             r.queued = queued;
@@ -722,6 +758,20 @@ mod tests {
             assert_eq!(p.autoscale.policy, "none");
             assert_eq!(p.workload, cfg.workload, "workload section must stay global");
         }
+    }
+
+    #[test]
+    fn partition_config_remaps_explicit_crashes() {
+        let mut cfg = Config::default();
+        cfg.cluster.workers = 5; // slices: {0,1,2} and {3,4}
+        cfg.sim.shards = 2;
+        cfg.faults.enabled = true;
+        cfg.faults.crashes = "10:1;40:3;50:4".into();
+        let p0 = partition_config(&cfg, 0, 2);
+        let p1 = partition_config(&cfg, 1, 2);
+        assert_eq!(p0.faults.crashes, "10:1", "global id 1 is local 1 of shard 0");
+        assert_eq!(p1.faults.crashes, "40:0;50:1", "global ids 3,4 are local 0,1 of shard 1");
+        assert!(p0.faults.enabled && p1.faults.enabled, "faults section must stay armed");
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Chaos suite for the fault-injection & recovery subsystem (DESIGN.md
+//! §10): determinism under churn + crashes, the conservation identity,
+//! the pull-vs-push outage contrast, warm-state migration, and the
+//! adaptive wait floor.
+//!
+//! The contracts pinned here:
+//! - **Determinism**: for a fixed (seed, shards) a chaos run — random
+//!   crash/recover churn, stragglers, cold-init failures, reactive
+//!   autoscaling, cross-shard stealing — is bit-reproducible.
+//! - **Conservation**: every admitted request resolves exactly once:
+//!   `arrivals == completed + rejected + failed + stolen` (a stolen
+//!   request is counted at both its donor and its recipient, and the
+//!   donor's copy resolves as the donation).
+//! - **Recovery beats address-based push**: on a mid-run kill, pull-mode
+//!   hiku fails strictly fewer requests than push-mode hash-mod, which
+//!   keeps re-hashing onto the dead worker until budgets burn out.
+//! - **Zero-overhead off switch**: `faults.enabled = false` (default)
+//!   schedules nothing and meters nothing (byte-identity to the
+//!   pre-fault engine is enforced by tests/determinism.rs against the
+//!   reference core, which has no fault path at all).
+
+use hiku::config::Config;
+use hiku::metrics::RunMetrics;
+use hiku::sim::run_once;
+
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+fn chaos_cfg(shards: usize) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = "hiku".into();
+    c.workload.vus = 24;
+    c.workload.duration_s = 25.0;
+    c.cluster.workers = 6;
+    c.sim.shards = shards;
+    c.dispatch.mode = "pull".into();
+    // Reactive churn so the active boundary moves while workers die.
+    c.autoscale.policy = "reactive".into();
+    c.autoscale.max_workers = 10;
+    c.autoscale.cooldown_s = 2.0;
+    // The whole fault surface at once.
+    c.faults.enabled = true;
+    // Per worker per minute: ~1.7 expected kills per worker over 25 s,
+    // so every (seed, shards) combo sees crashes with near-certainty.
+    c.faults.crash_rate = 4.0;
+    c.faults.mttr_s = 4.0;
+    c.faults.straggler_frac = 0.25;
+    c.faults.straggler_slowdown = 4.0;
+    c.faults.init_fail_prob = 0.02;
+    c
+}
+
+/// The conservation identity over a (possibly merged) run: every arrival
+/// resolves exactly once. `stolen` appears because a cross-shard handoff
+/// counts the request at both ends — the donor's copy resolves as the
+/// donation, the recipient's as completed/failed.
+fn assert_conserved(m: &RunMetrics, label: &str) {
+    assert_eq!(
+        m.arrivals,
+        m.completed + m.rejected + m.failed + m.stolen,
+        "{label}: conservation violated (arrivals {} != completed {} + rejected {} + \
+         failed {} + stolen {})",
+        m.arrivals,
+        m.completed,
+        m.rejected,
+        m.failed,
+        m.stolen
+    );
+}
+
+#[test]
+fn chaos_runs_reproducible_and_conserving() {
+    // shards 1/2/4 × 3 seeds: bit-reproducible summaries, conservation
+    // green, and the fault machinery actually firing.
+    for &shards in &[1usize, 2, 4] {
+        for seed in SEEDS {
+            let c = chaos_cfg(shards);
+            let mut a = run_once(&c, seed).expect("chaos run");
+            let mut b = run_once(&c, seed).expect("chaos rerun");
+            assert_eq!(
+                a.summary_json().to_string_compact(),
+                b.summary_json().to_string_compact(),
+                "chaos run diverged (shards {shards}, seed {seed})"
+            );
+            assert_conserved(&a, &format!("shards{shards}/seed{seed}"));
+            assert!(
+                a.worker_crashes > 0,
+                "crash_rate 1.0/min over 25 s x 6 workers must kill someone \
+                 (shards {shards}, seed {seed})"
+            );
+            assert!(a.completed > 0, "the cluster must still serve requests");
+        }
+    }
+}
+
+#[test]
+fn faults_off_meters_nothing() {
+    let mut c = Config::default();
+    c.workload.vus = 10;
+    c.workload.duration_s = 10.0;
+    assert!(!c.faults.enabled, "faults must default off");
+    let m = run_once(&c, 1).expect("baseline run");
+    assert!(!m.faults_enabled);
+    assert_eq!(
+        (m.worker_crashes, m.failed, m.retried, m.hedged, m.re_routed, m.migrated),
+        (0, 0, 0, 0, 0, 0),
+        "a faults-off run must not meter any fault activity"
+    );
+    // `arrivals` is maintained regardless — the identity holds trivially.
+    assert_conserved(&m, "faults-off");
+}
+
+#[test]
+fn pull_hiku_fails_less_than_push_hash_on_mid_run_kill() {
+    // Kill worker 1 at t=6 for 10 s. Push-mode hash-mod keeps hashing
+    // arrivals onto the corpse until their retry budgets burn out; the
+    // pull router observes liveness, re-routes the binds, and should
+    // fail strictly fewer requests.
+    let mut failed_pull = 0u64;
+    let mut failed_hash = 0u64;
+    let mut retried_pull = 0u64;
+    for seed in SEEDS {
+        let mut mk = |sched: &str, mode: &str| -> RunMetrics {
+            let mut c = Config::default();
+            c.scheduler.name = sched.into();
+            c.dispatch.mode = mode.into();
+            c.workload.vus = 20;
+            c.workload.duration_s = 20.0;
+            c.faults.enabled = true;
+            c.faults.crashes = "6:1".into();
+            c.faults.mttr_s = 10.0;
+            let m = run_once(&c, seed).expect("kill run");
+            assert_conserved(&m, &format!("{sched}/{mode}/seed{seed}"));
+            assert_eq!(m.worker_crashes, 1, "{sched}: the explicit kill must fire");
+            assert_eq!(m.worker_recoveries, 1, "{sched}: the recovery must fire");
+            m
+        };
+        let pull = mk("hiku", "pull");
+        let hash = mk("hash-mod", "push");
+        failed_pull += pull.failed;
+        failed_hash += hash.failed;
+        retried_pull += pull.retried;
+    }
+    assert!(retried_pull > 0, "in-flight work on the corpse must be retried");
+    assert!(
+        failed_pull < failed_hash,
+        "pull-mode hiku must fail strictly fewer than push-mode hash-mod \
+         ({failed_pull} vs {failed_hash})"
+    );
+    assert!(failed_hash > 0, "hash-mod must actually lose requests to the dead worker");
+}
+
+#[test]
+fn warm_state_migrates_with_retried_requests() {
+    // Killing a worker banks its idle warm inventory (within keep-alive);
+    // a *retried* request whose new worker holds no idle sandbox of its
+    // function consumes a banked entry as an instant pre-warm — metered
+    // as `migrated`. Two staggered kills on a small hot cluster make
+    // bank-hit opportunities plentiful; summed over seeds so a single
+    // unlucky sandbox layout cannot flake the assertion.
+    let mut migrated = 0u64;
+    let mut retried = 0u64;
+    for seed in [1u64, 2, 3, 4] {
+        let mut c = Config::default();
+        c.scheduler.name = "hiku".into();
+        c.dispatch.mode = "pull".into();
+        c.workload.vus = 24;
+        c.workload.duration_s = 20.0;
+        c.cluster.workers = 3;
+        c.faults.enabled = true;
+        c.faults.crashes = "8:0;10:1".into();
+        c.faults.mttr_s = 6.0;
+        let m = run_once(&c, seed).expect("migration run");
+        assert_conserved(&m, &format!("migration/seed{seed}"));
+        migrated += m.migrated;
+        retried += m.retried;
+    }
+    assert!(retried > 0, "the kills must displace in-flight work");
+    assert!(
+        migrated > 0,
+        "across 4 seeds, at least one retried request must inherit a \
+         harvested warm sandbox (migrated = 0, retried = {retried})"
+    );
+}
+
+#[test]
+fn min_wait_floor_pins_adaptive_deadlines() {
+    // With the floor raised to the cap, the adaptive deadline
+    // `min(max_wait_s, penalty).max(min_wait_s)` is constantly
+    // `max_wait_s` — so an adaptive run must be bit-identical to a
+    // non-adaptive one. (This is exactly the satellite's guarantee: the
+    // EWMA can never collapse the wait below the floor.)
+    for seed in SEEDS {
+        let mut base = Config::default();
+        base.scheduler.name = "hiku".into();
+        base.dispatch.mode = "pull".into();
+        base.workload.vus = 16;
+        base.workload.duration_s = 15.0;
+        base.dispatch.max_wait_s = 0.5;
+
+        let mut floored = base.clone();
+        floored.dispatch.adaptive_wait = true;
+        floored.dispatch.min_wait_s = 0.5;
+
+        let mut fixed = base.clone();
+        fixed.dispatch.adaptive_wait = false;
+
+        let mut a = run_once(&floored, seed).expect("floored adaptive run");
+        let mut b = run_once(&fixed, seed).expect("fixed-wait run");
+        assert_eq!(
+            a.summary_json().to_string_compact(),
+            b.summary_json().to_string_compact(),
+            "min_wait_s == max_wait_s must pin adaptive deadlines to the cap (seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn recovery_latency_is_metered() {
+    let mut c = Config::default();
+    c.workload.vus = 8;
+    c.workload.duration_s = 15.0;
+    c.faults.enabled = true;
+    c.faults.crashes = "5:0".into();
+    c.faults.mttr_s = 3.0;
+    let mut m = run_once(&c, 2).expect("recovery run");
+    assert_eq!(m.worker_crashes, 1);
+    assert_eq!(m.worker_recoveries, 1);
+    assert!(!m.recovery_latency_ms.is_empty());
+    let down = m.recovery_latency_ms.percentile(50.0);
+    assert!(
+        (down - 3000.0).abs() < 1.0,
+        "explicit-schedule recovery must take exactly mttr_s (got {down} ms)"
+    );
+}
