@@ -1,0 +1,137 @@
+//! Core-granularity ablation: worker-granular vs core-granular pull
+//! dispatch (and push with a bounded rebind window) on a mixed
+//! short/long trace.
+//!
+//! The scenario is head-of-line blocking by construction: every 2 s a
+//! burst of 24 long `chameleon` calls (~392 ms warm) saturates the
+//! cluster's 16 execution slots, then 6 short `linpack` calls (~58 ms
+//! warm) trail in 50-110 ms later. Under worker-granular accounting
+//! (`cores_per_worker = 1`, `concurrency = 4`) least-connections must
+//! bind each short immediately, so it lands in some worker's FIFO
+//! behind queued longs and waits multiple long service times. Under
+//! core-granular accounting (`cores_per_worker = 4`) the scheduler sees
+//! zero free slots and the engine parks the short centrally instead —
+//! late binding — so the first slot to free anywhere in the cluster
+//! claims it. The push row keeps eager binding but re-routes queued
+//! requests to idle slots within `dispatch.rebind_window_s`.
+//!
+//! The money metric is the **p99 arrival-to-start wait of the short
+//! class** (`slots.hol_short_p99_ms` in the summary): core-granular
+//! pull must beat worker-granular, which `tests/dispatch.rs::
+//! core_granular_pull_beats_worker_granular_on_short_p99` enforces on
+//! the same trace.
+//!
+//! Emits machine-readable **`BENCH_cores.json`** (one row per run +
+//! headline scalars) — the committed experiment recipe is in
+//! EXPERIMENTS.md §Core granularity.
+//!
+//! Usage:
+//!   cargo bench --bench ablation_cores            # full table
+//!   cargo bench --bench ablation_cores -- --quick # CI smoke
+
+use hiku::config::Config;
+use hiku::report::mixed_class_trace;
+use hiku::sim::run_trace;
+use hiku::util::json::{obj, Json};
+
+/// Shared base: least-connections (the baselines' default `decide`
+/// always binds, so the worker-vs-core contrast is purely the slot
+/// model, not hiku's own parking policy), 4 workers, hard admission
+/// (`elastic = false`, required by the slot model) with 4 execution
+/// slots per worker either way — capacity is identical across arms,
+/// only the granularity the scheduler sees differs.
+fn base_cfg(dur: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.name = "least-connections".into();
+    cfg.workload.vus = 1; // open loop ignores the VU scripts
+    cfg.workload.duration_s = dur;
+    cfg.cluster.workers = 4;
+    cfg.cluster.concurrency = 4;
+    cfg.cluster.elastic = false;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dur = if quick { 20.0 } else { 60.0 };
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+    let trace = mixed_class_trace(dur);
+    println!(
+        "# cores ablation: worker-granular vs core-granular, mixed trace ({} arrivals / {:.0} s), \
+         4 workers x 4 slots",
+        trace.len(),
+        dur
+    );
+    println!(
+        "{:<12} {:>5} {:>9} {:>12} {:>11} {:>9} {:>9} {:>8} {:>8}",
+        "arm", "seed", "completed", "p99short(ms)", "p99long(ms)", "mean(ms)", "p95(ms)",
+        "enqueued", "rebound"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    // Seed-averaged p99 short wait per arm: [worker, cores, rebind].
+    let mut p99_short = [0.0f64; 3];
+    let mut rebound_push = 0u64;
+    let arms: [(&str, usize, &str, f64); 3] = [
+        ("pull/worker", 1, "pull", 0.0),
+        ("pull/cores", 4, "pull", 0.0),
+        ("push/rebind", 4, "push", 0.25),
+    ];
+    for (i, &(arm, cores, mode, rebind)) in arms.iter().enumerate() {
+        for &seed in seeds {
+            let mut cfg = base_cfg(dur);
+            cfg.sim.cores_per_worker = cores;
+            cfg.dispatch.mode = mode.into();
+            cfg.dispatch.rebind_window_s = rebind;
+            let mut m = run_trace(&cfg, &trace, seed).expect("cores ablation run");
+            let short = m.hol_wait_p99_ms(true);
+            let long = m.hol_wait_p99_ms(false);
+            let mean = m.mean_latency_ms();
+            let p95 = m.latency_percentile_ms(95.0);
+            println!(
+                "{:<12} {:>5} {:>9} {:>12.1} {:>11.1} {:>9.1} {:>9.1} {:>8} {:>8}",
+                arm, seed, m.completed, short, long, mean, p95, m.enqueued, m.rebound
+            );
+            p99_short[i] += short / seeds.len() as f64;
+            if mode == "push" {
+                rebound_push += m.rebound;
+            }
+            rows.push(obj(vec![
+                ("arm", arm.into()),
+                ("cores_per_worker", cores.into()),
+                ("mode", mode.into()),
+                ("rebind_window_s", rebind.into()),
+                ("seed", seed.into()),
+                ("completed", m.completed.into()),
+                ("p99_short_wait_ms", short.into()),
+                ("p99_long_wait_ms", long.into()),
+                ("mean_ms", mean.into()),
+                ("p95_ms", p95.into()),
+                ("enqueued", m.enqueued.into()),
+                ("rebound", m.rebound.into()),
+                ("cold_rate", m.cold_rate().into()),
+            ]));
+        }
+    }
+
+    let speedup =
+        if p99_short[1] > 0.0 { p99_short[0] / p99_short[1] } else { f64::INFINITY };
+    println!(
+        "p99 short wait: worker-granular {:.1} ms -> core-granular {:.1} ms ({speedup:.2}x), \
+         push+rebind {:.1} ms ({rebound_push} rebinds)",
+        p99_short[0], p99_short[1], p99_short[2]
+    );
+    let out = obj(vec![
+        ("bench", "cores".into()),
+        ("quick", quick.into()),
+        ("p99_short_wait_ms_worker", p99_short[0].into()),
+        ("p99_short_wait_ms_cores", p99_short[1].into()),
+        ("p99_short_wait_ms_rebind", p99_short[2].into()),
+        ("short_wait_speedup", speedup.into()),
+        ("rebound_push", rebound_push.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_cores.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

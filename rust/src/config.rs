@@ -250,6 +250,13 @@ pub struct DispatchConfig {
     /// the floor keeps a minimum parking window so the pull path stays
     /// live. 0 (default) preserves the PR 5 formula exactly.
     pub min_wait_s: f64,
+    /// Push-mode re-route window in seconds (DESIGN.md §11): a request
+    /// queued behind a busy worker is re-offered to another worker whose
+    /// slot frees within this window after the queuing (the bounded
+    /// rebind hook — push mode's partial answer to pull's late binding).
+    /// 0 (default) disables rebinding entirely, byte-identical to the
+    /// pre-slot engine. Requires `mode = "push"` when > 0.
+    pub rebind_window_s: f64,
 }
 
 impl Default for DispatchConfig {
@@ -264,6 +271,7 @@ impl Default for DispatchConfig {
             fair: true,
             steal_batch: 8,
             min_wait_s: 0.0,
+            rebind_window_s: 0.0,
         }
     }
 }
@@ -452,11 +460,19 @@ pub struct SimConfig {
     /// (`autoscale.interval_s`) is the barrier period instead, so global
     /// control fires exactly at barriers.
     pub barrier_s: f64,
+    /// Explicit core slots per worker (DESIGN.md §11). 1 (default) keeps
+    /// the legacy slot-agnostic semantics — byte-identical to the
+    /// pre-slot engine; ≥ 2 switches worker capacity from
+    /// `cluster.concurrency` to this slot count, tracks per-slot busy
+    /// state and warm affinity, and turns pull dispatch core-granular
+    /// (parked requests bind when a *slot* frees, schedulers may pin a
+    /// `(worker, slot)` pair). Incompatible with `cluster.elastic`.
+    pub cores_per_worker: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        Self { shards: 1, barrier_s: 1.0 }
+        Self { shards: 1, barrier_s: 1.0, cores_per_worker: 1 }
     }
 }
 
@@ -609,6 +625,7 @@ impl Config {
                     ("fair", self.dispatch.fair.into()),
                     ("steal_batch", self.dispatch.steal_batch.into()),
                     ("min_wait_s", self.dispatch.min_wait_s.into()),
+                    ("rebind_window_s", self.dispatch.rebind_window_s.into()),
                 ]),
             ),
             (
@@ -616,6 +633,7 @@ impl Config {
                 obj(vec![
                     ("shards", self.sim.shards.into()),
                     ("barrier_s", self.sim.barrier_s.into()),
+                    ("cores_per_worker", self.sim.cores_per_worker.into()),
                 ]),
             ),
             (
@@ -819,6 +837,10 @@ impl Config {
                 cfg.dispatch.min_wait_s =
                     v.as_f64().ok_or_else(|| missing("dispatch.min_wait_s"))?;
             }
+            if let Some(v) = d.get("rebind_window_s") {
+                cfg.dispatch.rebind_window_s =
+                    v.as_f64().ok_or_else(|| missing("dispatch.rebind_window_s"))?;
+            }
         }
         if let Some(s) = j.get("sim") {
             if let Some(v) = s.get("shards") {
@@ -826,6 +848,10 @@ impl Config {
             }
             if let Some(v) = s.get("barrier_s") {
                 cfg.sim.barrier_s = v.as_f64().ok_or_else(|| missing("sim.barrier_s"))?;
+            }
+            if let Some(v) = s.get("cores_per_worker") {
+                cfg.sim.cores_per_worker =
+                    v.as_u64().ok_or_else(|| missing("sim.cores_per_worker"))? as usize;
             }
         }
         if let Some(r) = j.get("runtime") {
@@ -973,6 +999,9 @@ impl Config {
             "sim.barrier_s" => {
                 self.sim.barrier_s = value.parse().map_err(|_| bad(path, value))?
             }
+            "sim.cores_per_worker" => {
+                self.sim.cores_per_worker = value.parse().map_err(|_| bad(path, value))?
+            }
             "dispatch.mode" => self.dispatch.mode = value.to_string(),
             "dispatch.queue_cap" => {
                 self.dispatch.queue_cap = value.parse().map_err(|_| bad(path, value))?
@@ -993,6 +1022,9 @@ impl Config {
             }
             "dispatch.min_wait_s" => {
                 self.dispatch.min_wait_s = value.parse().map_err(|_| bad(path, value))?
+            }
+            "dispatch.rebind_window_s" => {
+                self.dispatch.rebind_window_s = value.parse().map_err(|_| bad(path, value))?
             }
             "faults.enabled" => {
                 self.faults.enabled = value.parse().map_err(|_| bad(path, value))?
@@ -1190,6 +1222,22 @@ impl Config {
         }
         if self.sim.barrier_s <= 0.0 {
             return e("sim.barrier_s must be > 0");
+        }
+        if self.sim.cores_per_worker == 0 || self.sim.cores_per_worker > 64 {
+            return e("sim.cores_per_worker must be in 1..=64");
+        }
+        if self.sim.cores_per_worker > 1 && self.cluster.elastic {
+            // Elastic workers have no fixed slot vector to bind against;
+            // the slot model requires a hard per-worker capacity.
+            return e("sim.cores_per_worker > 1 requires cluster.elastic = false");
+        }
+        if !self.dispatch.rebind_window_s.is_finite() || self.dispatch.rebind_window_s < 0.0 {
+            return e("dispatch.rebind_window_s must be finite and >= 0");
+        }
+        if self.dispatch.rebind_window_s > 0.0 && self.dispatch.mode != "push" {
+            // Pull mode already late-binds through parking; the rebind hook
+            // is push mode's bounded approximation of it (DESIGN.md §11).
+            return e("dispatch.rebind_window_s > 0 requires dispatch.mode = push");
         }
         if self.sim.shards > 1 && self.autoscale.policy == "predictive" {
             // The predictive policy consumes the per-arrival stream; the
@@ -1408,6 +1456,48 @@ mod tests {
         c.autoscale.policy = "predictive".into();
         assert!(c.validate().is_err());
         c.autoscale.policy = "reactive".into();
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn slot_config_roundtrip_and_validation() {
+        let c = Config::default();
+        assert_eq!(c.sim.cores_per_worker, 1, "slot-agnostic by default");
+        assert_eq!(c.dispatch.rebind_window_s, 0.0, "rebind off by default");
+        let mut c = Config::default();
+        c.apply_override("sim.cores_per_worker=4").unwrap();
+        c.apply_override("dispatch.rebind_window_s=0.25").unwrap();
+        assert_eq!(c.sim.cores_per_worker, 4);
+        assert_eq!(c.dispatch.rebind_window_s, 0.25);
+        assert!(c.validate().is_ok(), "push + rebind + cores is valid");
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        // Bounds: 0 and > 64 cores rejected.
+        let mut c = Config::default();
+        c.sim.cores_per_worker = 0;
+        assert!(c.validate().is_err());
+        c.sim.cores_per_worker = 65;
+        assert!(c.validate().is_err());
+        c.sim.cores_per_worker = 64;
+        assert!(c.validate().is_ok());
+        // Slots need a hard per-worker capacity: elastic must be off.
+        let mut c = Config::default();
+        c.sim.cores_per_worker = 2;
+        c.cluster.elastic = true;
+        assert!(c.validate().is_err(), "cores > 1 under elastic must fail");
+        c.cluster.elastic = false;
+        assert!(c.validate().is_ok());
+        // Rebind window: finite, non-negative, push-only.
+        let mut c = Config::default();
+        c.dispatch.rebind_window_s = -0.1;
+        assert!(c.validate().is_err());
+        c.dispatch.rebind_window_s = f64::NAN;
+        assert!(c.validate().is_err());
+        c.dispatch.rebind_window_s = 0.5;
+        c.dispatch.mode = "pull".into();
+        assert!(c.validate().is_err(), "rebind under pull must fail");
+        c.dispatch.mode = "push".into();
         assert!(c.validate().is_ok());
     }
 

@@ -51,6 +51,22 @@ use std::collections::VecDeque;
 
 use crate::workload::spec::FunctionId;
 
+/// Runtime-class split for the head-of-line-blocking breakdown
+/// (DESIGN.md §11): a function whose registry `warm_ms` is at or below
+/// this threshold is "short". Short functions are the ones core-granular
+/// scheduling protects — at worker granularity they queue behind long
+/// executions on a busy node even while sibling cores idle. The 200 ms
+/// line splits the base app suite cleanly (linpack 58 / float_operation
+/// 94 / json 105 / matmul 125 / pyaes 149 vs gzip 303 / chameleon 392 /
+/// dd 549).
+pub const SHORT_CLASS_WARM_MS: f64 = 200.0;
+
+/// Whether a function with the given registry `warm_ms` is short-class.
+#[inline]
+pub fn is_short_class(warm_ms: f64) -> bool {
+    warm_ms <= SHORT_CLASS_WARM_MS
+}
+
 /// Per-function FIFO pending queues drained fairly (DRR) or in global
 /// arrival order. Requests are identified by the router's dense request
 /// id, which is allocated in arrival order.

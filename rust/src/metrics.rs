@@ -346,6 +346,26 @@ pub struct RunMetrics {
     /// Worker downtime per recovery in ms (crash -> rejoin) — how long
     /// the cluster ran degraded each time a worker died.
     pub recovery_latency_ms: Dist,
+    /// Whether the run was core-granular (`sim.cores_per_worker > 1`) or
+    /// had a push rebind window armed — gates the `slots` summary block
+    /// (OR-ed by [`RunMetrics::merge`]). Default runs emit no slot keys,
+    /// keeping their summaries byte-identical to the pre-slot engine.
+    pub slots_enabled: bool,
+    /// Push-mode rebinds: queued requests re-offered to a better slot
+    /// that freed within `dispatch.rebind_window_s` (DESIGN.md §11).
+    pub rebound: u64,
+    /// Arrival → execution-start wait of short-class functions, ms
+    /// (`dispatch::is_short_class`). The head-of-line-blocking money
+    /// metric: at worker granularity short functions queue behind long
+    /// ones; core granularity should collapse this tail. Recorded in
+    /// every run (Dist pushes perturb nothing); only *reported* when
+    /// `slots_enabled`.
+    pub hol_wait_short_ms: Dist,
+    /// Arrival → execution-start wait of long-class functions, ms.
+    pub hol_wait_long_ms: Dist,
+    /// Busy-slot timeline (time, busy core slots across active workers),
+    /// sampled at the keep-alive sweep tick in core-granular runs only.
+    pub slot_timeline: Vec<(f64, usize)>,
     /// Sampled request-lifecycle spans (disabled unless
     /// `telemetry.trace_sample > 0`).
     pub trace: TraceLog,
@@ -415,6 +435,11 @@ impl RunMetrics {
             migrated: 0,
             init_failures: 0,
             recovery_latency_ms: dist(),
+            slots_enabled: false,
+            rebound: 0,
+            hol_wait_short_ms: dist(),
+            hol_wait_long_ms: dist(),
+            slot_timeline: Vec::new(),
             trace: TraceLog::new(tel.trace_sample, tel.trace_max),
             phases: PhaseProfile::new(tel.phase_profile),
             sketch: tel.sketch,
@@ -493,6 +518,32 @@ impl RunMetrics {
     /// Pending-queue depth sample at time `t` (1 Hz in pull mode).
     pub fn record_pending_depth(&mut self, t: f64, depth: usize) {
         self.pending_timeline.push((t, depth));
+    }
+
+    /// A request started executing `wait_s` after arrival; attribute the
+    /// wait to its runtime class (head-of-line-blocking breakdown).
+    pub fn record_hol_wait(&mut self, short: bool, wait_s: f64) {
+        if short {
+            self.hol_wait_short_ms.push(wait_s * 1000.0);
+        } else {
+            self.hol_wait_long_ms.push(wait_s * 1000.0);
+        }
+    }
+
+    /// p99 arrival → start wait in ms for one runtime class (0 when the
+    /// class never ran).
+    pub fn hol_wait_p99_ms(&mut self, short: bool) -> f64 {
+        let d = if short { &mut self.hol_wait_short_ms } else { &mut self.hol_wait_long_ms };
+        if d.is_empty() {
+            0.0
+        } else {
+            d.percentile(99.0)
+        }
+    }
+
+    /// Busy-slot sample at time `t` (core-granular runs, sweep tick).
+    pub fn record_slot_depth(&mut self, t: f64, busy: usize) {
+        self.slot_timeline.push((t, busy));
     }
 
     /// One request completed: record its end-to-end latency, cold/warm
@@ -647,6 +698,11 @@ impl RunMetrics {
         self.migrated += other.migrated;
         self.init_failures += other.init_failures;
         self.recovery_latency_ms.merge_from(&other.recovery_latency_ms);
+        self.slots_enabled |= other.slots_enabled;
+        self.rebound += other.rebound;
+        self.hol_wait_short_ms.merge_from(&other.hol_wait_short_ms);
+        self.hol_wait_long_ms.merge_from(&other.hol_wait_long_ms);
+        self.slot_timeline = merge_timelines(&self.slot_timeline, &other.slot_timeline);
         self.trace.merge_append(&other.trace);
         self.phases.merge_add(&other.phases);
     }
@@ -739,6 +795,26 @@ impl RunMetrics {
                     ("init_failures", self.init_failures.into()),
                     ("recovery_mean_ms", num_or_null(rec_mean)),
                     ("recovery_p99_ms", num_or_null(rec_p99)),
+                ]),
+            ));
+        }
+        // Slot-agnostic runs (the default) emit no slot keys, so their
+        // summaries stay byte-identical to the pre-slot engine.
+        if self.slots_enabled {
+            let short_n = self.hol_wait_short_ms.seen();
+            let long_n = self.hol_wait_long_ms.seen();
+            let short_p99 = self.hol_wait_p99_ms(true);
+            let long_p99 = self.hol_wait_p99_ms(false);
+            let peak_busy = self.slot_timeline.iter().map(|&(_, b)| b).max().unwrap_or(0);
+            pairs.push((
+                "slots",
+                obj(vec![
+                    ("rebound", self.rebound.into()),
+                    ("hol_short_n", short_n.into()),
+                    ("hol_long_n", long_n.into()),
+                    ("hol_short_p99_ms", num_or_null(short_p99)),
+                    ("hol_long_p99_ms", num_or_null(long_p99)),
+                    ("peak_busy_slots", (peak_busy as u64).into()),
                 ]),
             ));
         }
@@ -969,6 +1045,44 @@ mod tests {
         assert!(j.get("trace_spans").is_none());
         // Fault-free runs emit no fault keys (byte-identity contract).
         assert!(j.get("faults").is_none());
+        // Slot-agnostic runs emit no slot keys either.
+        assert!(j.get("slots").is_none());
+    }
+
+    #[test]
+    fn slots_block_gated_and_merged() {
+        let mut m = RunMetrics::new("hiku", 2, 10, 10.0);
+        // HoL waits are recorded unconditionally (cheap, perturbs nothing)
+        // but reported only when the slot gate is set.
+        m.record_hol_wait(true, 0.050);
+        m.record_hol_wait(false, 0.400);
+        assert!(m.summary_json().get("slots").is_none(), "gate off: no slot keys");
+        m.slots_enabled = true;
+        m.rebound = 2;
+        m.record_slot_depth(1.0, 3);
+        m.record_slot_depth(2.0, 5);
+        let j = m.summary_json();
+        let sb = j.get("slots").expect("slots block present when enabled");
+        assert_eq!(sb.get("rebound").unwrap().as_u64(), Some(2));
+        assert_eq!(sb.get("hol_short_n").unwrap().as_u64(), Some(1));
+        assert_eq!(sb.get("hol_long_n").unwrap().as_u64(), Some(1));
+        assert!((sb.get("hol_short_p99_ms").unwrap().as_f64().unwrap() - 50.0).abs() < 1e-9);
+        assert_eq!(sb.get("peak_busy_slots").unwrap().as_u64(), Some(5));
+        assert!((m.hol_wait_p99_ms(false) - 400.0).abs() < 1e-9);
+        assert!(m.hol_wait_p99_ms(true) > 0.0);
+        // Merge ORs the gate, sums rebinds, unions waits, sums timelines.
+        let mut b = RunMetrics::new("hiku", 2, 10, 10.0);
+        b.slots_enabled = true;
+        b.rebound = 1;
+        b.record_hol_wait(true, 0.010);
+        b.record_slot_depth(1.0, 2);
+        let mut c = RunMetrics::new("hiku", 2, 10, 10.0);
+        c.merge(&m);
+        c.merge(&b);
+        assert!(c.slots_enabled);
+        assert_eq!(c.rebound, 3);
+        assert_eq!(c.hol_wait_short_ms.seen(), 2);
+        assert!(c.slot_timeline.contains(&(1.0, 5)), "timelines sum as step functions");
     }
 
     #[test]

@@ -65,14 +65,29 @@ pub struct Cluster {
     /// Non-busy (idle + initializing) sandboxes per function across active
     /// workers. i64 so transient delta application can never underflow.
     warm_agg: Vec<i64>,
+    /// Core slots per worker (1 = legacy slot-agnostic mode); every worker
+    /// in the cluster shares the same value.
+    cores: usize,
+    /// Free execution slots across active workers, maintained
+    /// incrementally in `sync_after` / `set_active` (per-worker
+    /// `cap().saturating_sub(running)`, summed).
+    agg_free_slots: usize,
 }
 
 impl Cluster {
     /// A cluster of `cfg.workers` identical workers, all active.
     pub fn new(cfg: &ClusterConfig) -> Self {
-        let workers = (0..cfg.workers)
-            .map(|id| Worker::new(id, cfg.mem_mb, cfg.concurrency))
+        Self::new_with_cores(cfg, 1)
+    }
+
+    /// A cluster whose workers each expose `cores` explicit core slots
+    /// (DESIGN.md §11). `cores = 1` is [`Cluster::new`] exactly.
+    pub fn new_with_cores(cfg: &ClusterConfig, cores: usize) -> Self {
+        let cores = cores.max(1);
+        let workers: Vec<Worker> = (0..cfg.workers)
+            .map(|id| Worker::new(id, cfg.mem_mb, cfg.concurrency).with_cores(cores))
             .collect();
+        let agg_free_slots = workers.iter().map(|w| w.free_slots()).sum();
         Self {
             workers,
             active: cfg.workers,
@@ -80,6 +95,8 @@ impl Cluster {
             agg_running: 0,
             agg_queued: 0,
             warm_agg: Vec::new(),
+            cores,
+            agg_free_slots,
         }
     }
 
@@ -165,15 +182,40 @@ impl Cluster {
     }
 
     /// O(1) digest of the active workers' load state — the shard barrier
-    /// payload ([`LoadSummary`] merges across disjoint worker sets).
+    /// payload ([`LoadSummary`] merges across disjoint worker sets). The
+    /// index tracks loads, not slots, so the free-slot field is stamped
+    /// here from the cluster's incremental aggregate.
     pub fn load_summary(&self) -> LoadSummary {
-        self.load_index.summary()
+        let mut s = self.load_index.summary();
+        s.free_slots = self.agg_free_slots as u64;
+        s
+    }
+
+    /// Core slots per worker (1 = legacy slot-agnostic mode).
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    /// Free execution slots across active workers (O(1)).
+    pub fn total_free_slots(&self) -> usize {
+        self.agg_free_slots
+    }
+
+    /// Free execution slots on worker `w` right now.
+    pub fn worker_free_slots(&self, w: WorkerId) -> usize {
+        self.workers[w].free_slots()
+    }
+
+    /// Lowest-index free slot on `w` warm-affine to `f` (`None` at
+    /// `cores = 1` or when no such slot is free).
+    pub fn warm_free_slot(&self, w: WorkerId, f: FunctionId) -> Option<u32> {
+        self.workers[w].warm_free_slot(f)
     }
 
     /// Append a new (inactive) worker; activate it with `set_active`.
     pub fn push_worker(&mut self, mem_mb: u64, concurrency: usize) -> WorkerId {
         let id = self.workers.len();
-        self.workers.push(Worker::new(id, mem_mb, concurrency));
+        self.workers.push(Worker::new(id, mem_mb, concurrency).with_cores(self.cores));
         self.load_index.add_worker();
         id
     }
@@ -196,6 +238,7 @@ impl Cluster {
             self.workers[w].warm_deltas.clear();
             self.agg_running += self.workers[w].running();
             self.agg_queued += self.workers[w].queue_len();
+            self.agg_free_slots += self.workers[w].free_slots();
             self.apply_worker_warm(w, 1);
             self.active += 1;
         }
@@ -204,6 +247,7 @@ impl Cluster {
             self.workers[w].warm_deltas.clear();
             self.agg_running -= self.workers[w].running();
             self.agg_queued -= self.workers[w].queue_len();
+            self.agg_free_slots -= self.workers[w].free_slots();
             self.apply_worker_warm(w, -1);
             self.active -= 1;
         }
@@ -231,6 +275,13 @@ impl Cluster {
         let (run_after, q_after) = self.snapshot(w);
         self.load_index.set_load(w, (run_after + q_after) as u32);
         let is_active = w < self.active;
+        if is_active {
+            // Free-slot delta follows the running delta (per-worker
+            // saturating form so elastic busy-overflow stays exact).
+            let cap = self.workers[w].cap();
+            self.agg_free_slots = self.agg_free_slots + cap.saturating_sub(run_after)
+                - cap.saturating_sub(run_before);
+        }
         let mut deltas = std::mem::take(&mut self.workers[w].warm_deltas);
         if is_active {
             for &(f, d) in &deltas {
@@ -267,6 +318,38 @@ impl Cluster {
     ) -> AssignOutcome {
         let before = self.snapshot(w);
         let out = self.workers[w].assign(request_id, f, mem_mb, now);
+        self.sync_after(w, before);
+        out
+    }
+
+    /// Slot-granular queue-mode assignment: like [`Cluster::assign`] but
+    /// forwarding a preferred core slot (best-effort; see
+    /// [`crate::platform::worker::Worker::assign_with_slot`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn assign_slot(
+        &mut self,
+        w: WorkerId,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+        preferred_slot: Option<u32>,
+    ) -> AssignOutcome {
+        let before = self.snapshot(w);
+        let out = self.workers[w].assign_with_slot(request_id, f, mem_mb, now, preferred_slot);
+        self.sync_after(w, before);
+        out
+    }
+
+    /// Pull a specific request back out of `w`'s admission queue
+    /// (push-mode rebind), with aggregate accounting.
+    pub fn remove_queued(
+        &mut self,
+        w: WorkerId,
+        request_id: u64,
+    ) -> Option<super::worker::QueuedRequest> {
+        let before = self.snapshot(w);
+        let out = self.workers[w].remove_queued(request_id);
         self.sync_after(w, before);
         out
     }
@@ -541,6 +624,33 @@ mod tests {
         assert_eq!(c.least_loaded_fitting(256), Some(0));
     }
 
+    #[test]
+    fn cores_cluster_tracks_free_slots() {
+        let cfg = ClusterConfig { workers: 2, mem_mb: 2048, concurrency: 1, ..Default::default() };
+        let mut c = Cluster::new_with_cores(&cfg, 2);
+        assert_eq!(c.cores(), 2);
+        assert_eq!(c.total_free_slots(), 4);
+        assert_eq!(c.load_summary().free_slots, 4);
+        let info = match c.assign_slot(1, 1, 3, 256, 0.0, Some(1)) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(info.slot, Some(1));
+        assert_eq!(c.total_free_slots(), 3);
+        assert_eq!(c.worker_free_slots(1), 1);
+        c.complete(1, info.sandbox, 1.0);
+        assert_eq!(c.total_free_slots(), 4);
+        assert_eq!(c.warm_free_slot(1, 3), Some(1), "affinity survives completion");
+        // Drained workers leave the aggregate; pushed workers join on
+        // activation with the configured core count.
+        c.set_active(1);
+        assert_eq!(c.total_free_slots(), 2);
+        let id = c.push_worker(2048, 1);
+        assert_eq!(c.worker(id).cores(), 2);
+        c.set_active(3);
+        assert_eq!(c.total_free_slots(), 6);
+    }
+
     /// Property: after arbitrary wrapped-op sequences with scale events,
     /// every aggregate equals the seed's full scan over the active prefix.
     #[test]
@@ -617,6 +727,19 @@ mod tests {
                     "queued {} != {}",
                     c.total_queued(),
                     queued
+                );
+                let free: usize = (0..active).map(|w| c.worker(w).free_slots()).sum();
+                prop_assert!(
+                    c.total_free_slots() == free,
+                    "free slots {} != {}",
+                    c.total_free_slots(),
+                    free
+                );
+                prop_assert!(
+                    c.load_summary().free_slots == free as u64,
+                    "summary free_slots {} != {}",
+                    c.load_summary().free_slots,
+                    free
                 );
                 for (f, &want) in warm.iter().enumerate() {
                     prop_assert!(

@@ -49,6 +49,9 @@ pub struct StartInfo {
     pub request_id: u64,
     /// Queue delay experienced at the worker (0 for immediate starts).
     pub queue_delay_s: f64,
+    /// Core slot the execution occupies (`None` at `cores = 1`, where the
+    /// worker is slot-agnostic and capacity is plain `concurrency`).
+    pub slot: Option<u32>,
 }
 
 /// Why an eviction happened (metrics/ablation).
@@ -71,6 +74,20 @@ pub struct Worker {
     pub mem_used_mb: u64,
     /// Maximum concurrent executions (vCPU slots).
     pub concurrency: usize,
+    /// Explicit core slots (DESIGN.md §11). `1` keeps the legacy
+    /// slot-agnostic semantics where capacity is `concurrency`; `> 1`
+    /// switches capacity to `cores` and tracks per-slot busy state plus
+    /// a per-slot warm-affinity memory (the function that last ran there).
+    cores: usize,
+    /// `slot_busy[s]` = an execution currently occupies core slot `s`.
+    /// Empty at `cores = 1`.
+    slot_busy: Vec<bool>,
+    /// Function that last occupied slot `s` (`usize::MAX` = never used).
+    /// Deliberately *not* cleared on release: it is the warm-affinity
+    /// signal `decide` uses to route a function back to "its" core.
+    slot_fn: Vec<usize>,
+    /// Busy sandbox -> occupied slot (only while executing; `cores > 1`).
+    sandbox_slot: Vec<(SandboxId, u32)>,
     running: usize,
     sandboxes: Vec<Sandbox>,
     queue: VecDeque<QueuedRequest>,
@@ -106,6 +123,10 @@ impl Worker {
             mem_capacity_mb,
             mem_used_mb: 0,
             concurrency,
+            cores: 1,
+            slot_busy: Vec::new(),
+            slot_fn: Vec::new(),
+            sandbox_slot: Vec::new(),
             running: 0,
             sandboxes: Vec::new(),
             queue: VecDeque::new(),
@@ -121,11 +142,59 @@ impl Worker {
         }
     }
 
+    /// Builder: give the worker `cores` explicit core slots. At `cores = 1`
+    /// (or 0, clamped) the worker keeps the legacy slot-agnostic semantics;
+    /// at `cores > 1` capacity becomes `cores` and per-slot state is live.
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        if self.cores > 1 {
+            self.slot_busy = vec![false; self.cores];
+            self.slot_fn = vec![usize::MAX; self.cores];
+        }
+        self
+    }
+
     // ---- inspection -------------------------------------------------------
 
     /// Executions currently running.
     pub fn running(&self) -> usize {
         self.running
+    }
+
+    /// Configured core slots (1 = legacy slot-agnostic mode).
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    /// Execution capacity: `cores` when slot-granular, else `concurrency`.
+    pub fn cap(&self) -> usize {
+        if self.cores > 1 {
+            self.cores
+        } else {
+            self.concurrency
+        }
+    }
+
+    /// Free execution slots right now.
+    pub fn free_slots(&self) -> usize {
+        self.cap().saturating_sub(self.running)
+    }
+
+    /// Lowest-index free slot whose last occupant was `f` (warm affinity),
+    /// if any. `None` at `cores = 1`.
+    pub fn warm_free_slot(&self, f: FunctionId) -> Option<u32> {
+        if self.cores <= 1 {
+            return None;
+        }
+        (0..self.cores)
+            .find(|&s| !self.slot_busy[s] && self.slot_fn[s] == f)
+            .map(|s| s as u32)
+    }
+
+    /// Per-slot view for invariant checks: (busy flags, last-function memory).
+    /// Both empty at `cores = 1`.
+    pub fn slot_state(&self) -> (&[bool], &[usize]) {
+        (&self.slot_busy, &self.slot_fn)
     }
 
     /// Requests waiting in the FIFO admission queue.
@@ -218,17 +287,81 @@ impl Worker {
         mem_mb: u64,
         now: f64,
     ) -> AssignOutcome {
+        self.assign_with_slot(request_id, f, mem_mb, now, None)
+    }
+
+    /// Slot-granular assignment: like [`Worker::assign`] but with an
+    /// optional preferred core slot (from a scheduler `AssignSlot`
+    /// decision). The preference is best-effort — if the slot is busy by
+    /// the time the request lands, the worker falls back to its own
+    /// deterministic pick (lowest free warm-affine slot, else lowest free
+    /// index). Ignored at `cores = 1`.
+    pub fn assign_with_slot(
+        &mut self,
+        request_id: u64,
+        f: FunctionId,
+        mem_mb: u64,
+        now: f64,
+        preferred_slot: Option<u32>,
+    ) -> AssignOutcome {
         assert!(
-            mem_mb * self.concurrency as u64 <= self.mem_capacity_mb,
+            mem_mb * self.cap() as u64 <= self.mem_capacity_mb,
             "worker {} cannot ever fit {} x {mem_mb} MB",
             self.id,
-            self.concurrency
+            self.cap()
         );
-        if self.running >= self.concurrency {
+        if self.running >= self.cap() {
             self.queue.push_back(QueuedRequest { request_id, function: f, mem_mb, queued_at: now });
             return AssignOutcome::Queued;
         }
-        AssignOutcome::Started(self.start_execution(request_id, f, mem_mb, now, 0.0))
+        AssignOutcome::Started(self.start_execution(request_id, f, mem_mb, now, 0.0, preferred_slot))
+    }
+
+    /// Claim a core slot for `f` (`cores > 1` only). Determinism rule
+    /// (DESIGN.md §11): honor the preferred slot if free, else the
+    /// lowest-index free slot whose last occupant was `f`, else the lowest
+    /// free index. Records the warm-affinity memory.
+    fn occupy_slot(&mut self, f: FunctionId, preferred: Option<u32>) -> Option<u32> {
+        if self.cores <= 1 {
+            return None;
+        }
+        let pick = match preferred {
+            Some(p) if (p as usize) < self.cores && !self.slot_busy[p as usize] => p as usize,
+            _ => {
+                let mut first_free = None;
+                let mut chosen = None;
+                for s in 0..self.cores {
+                    if self.slot_busy[s] {
+                        continue;
+                    }
+                    if self.slot_fn[s] == f {
+                        chosen = Some(s);
+                        break;
+                    }
+                    if first_free.is_none() {
+                        first_free = Some(s);
+                    }
+                }
+                chosen
+                    .or(first_free)
+                    .expect("occupy_slot: no free slot despite running < cores")
+            }
+        };
+        self.slot_busy[pick] = true;
+        self.slot_fn[pick] = f;
+        Some(pick as u32)
+    }
+
+    /// Release the slot held by `sandbox`, keeping the warm-affinity memory.
+    fn release_slot(&mut self, sandbox: SandboxId) {
+        if self.cores <= 1 {
+            return;
+        }
+        if let Some(pos) = self.sandbox_slot.iter().position(|&(sb, _)| sb == sandbox) {
+            let (_, slot) = self.sandbox_slot.swap_remove(pos);
+            debug_assert!(self.slot_busy[slot as usize], "releasing a free slot");
+            self.slot_busy[slot as usize] = false;
+        }
     }
 
     /// Start executing `f`, reusing an idle sandbox (warm) or creating one
@@ -240,9 +373,11 @@ impl Worker {
         mem_mb: u64,
         now: f64,
         queue_delay_s: f64,
+        preferred_slot: Option<u32>,
     ) -> StartInfo {
-        debug_assert!(self.running < self.concurrency);
+        debug_assert!(self.running < self.cap());
         self.running += 1;
+        let slot = self.occupy_slot(f, preferred_slot);
 
         // Warm path: most-recently-idle sandbox of this type (stack reuse
         // keeps the hottest sandbox warm, like OpenLambda's handler cache).
@@ -265,12 +400,16 @@ impl Worker {
             }
             self.total_warm += 1;
             self.note_warm_down(f);
+            if let Some(s) = slot {
+                self.sandbox_slot.push((sandbox, s));
+            }
             return StartInfo {
                 sandbox,
                 cold: false,
                 evicted: Vec::new(),
                 request_id,
                 queue_delay_s,
+                slot,
             };
         }
 
@@ -285,7 +424,10 @@ impl Worker {
         debug_assert!(self.mem_used_mb <= self.mem_capacity_mb);
         self.sandboxes.push(sb);
         self.total_cold += 1;
-        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s }
+        if let Some(s) = slot {
+            self.sandbox_slot.push((id, s));
+        }
+        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s, slot }
     }
 
     /// Evict idle sandboxes (LRU: least-recently-idle first) until `mem_mb`
@@ -332,12 +474,19 @@ impl Worker {
         let epoch = sb.finish_execution(now).expect("completing non-busy sandbox");
         debug_assert!(self.running > 0);
         self.running -= 1;
+        self.release_slot(sandbox);
         self.note_warm_up(f_done);
 
         let mut started = None;
         if let Some(q) = self.queue.pop_front() {
-            let info =
-                self.start_execution(q.request_id, q.function, q.mem_mb, now, now - q.queued_at);
+            let info = self.start_execution(
+                q.request_id,
+                q.function,
+                q.mem_mb,
+                now,
+                now - q.queued_at,
+                None,
+            );
             started = Some(info);
         }
         // If the sandbox we just idled got reused by the queued start, no
@@ -391,6 +540,7 @@ impl Worker {
                 evicted: Vec::new(),
                 request_id,
                 queue_delay_s: 0.0,
+                slot: None,
             };
         }
 
@@ -405,7 +555,7 @@ impl Worker {
         self.mem_used_mb += mem_mb;
         self.sandboxes.push(sb);
         self.total_cold += 1;
-        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s: 0.0 }
+        StartInfo { sandbox: id, cold: true, evicted, request_id, queue_delay_s: 0.0, slot: None }
     }
 
     /// Evict idle LRU sandboxes while admitting `incoming_mb` would exceed
@@ -565,8 +715,22 @@ impl Worker {
         }
         self.mem_used_mb = 0;
         self.running = 0;
+        // Slot state dies with the node: busy slots free, and the
+        // warm-affinity memory is wiped (a replacement node shares nothing
+        // with its predecessor's cores).
+        self.slot_busy.iter_mut().for_each(|b| *b = false);
+        self.slot_fn.iter_mut().for_each(|f| *f = usize::MAX);
+        self.sandbox_slot.clear();
         let queued = std::mem::take(&mut self.queue).into_iter().collect();
         (queued, warm)
+    }
+
+    /// Remove a specific request from the admission queue (push-mode
+    /// rebind, DESIGN.md §11), preserving FIFO order of the rest. Returns
+    /// the queued record so the caller can re-place it elsewhere.
+    pub fn remove_queued(&mut self, request_id: u64) -> Option<QueuedRequest> {
+        let pos = self.queue.iter().position(|q| q.request_id == request_id)?;
+        self.queue.remove(pos)
     }
 
     /// Keep-alive expiry for (sandbox, epoch) fires at `_now`. Evicts only
@@ -886,6 +1050,107 @@ mod tests {
         let c = w.assign_elastic(5, 2, 128, 4.0);
         assert!(c.cold);
         assert!(c.sandbox > b.sandbox, "sandbox ids must stay monotonic across crashes");
+    }
+
+    // ---- core slots (DESIGN.md §11) --------------------------------------
+
+    #[test]
+    fn cores_switch_capacity_and_track_slots() {
+        let mut w = Worker::new(0, 2048, 1).with_cores(3);
+        assert_eq!(w.cap(), 3, "cores > 1 overrides concurrency as capacity");
+        assert_eq!(w.free_slots(), 3);
+        let i1 = match w.assign(1, 7, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i1.slot, Some(0), "first start takes the lowest free slot");
+        let i2 = match w.assign(2, 8, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i2.slot, Some(1));
+        assert_eq!(w.free_slots(), 1);
+        // Completion frees the slot but keeps the affinity memory.
+        w.complete(i1.sandbox, 1.0);
+        assert_eq!(w.free_slots(), 2);
+        assert_eq!(w.warm_free_slot(7), Some(0));
+        assert_eq!(w.warm_free_slot(9), None);
+        // Same function returns to "its" core even though slot 2 is free too.
+        let i3 = match w.assign(3, 7, 256, 2.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i3.slot, Some(0), "warm-affine slot wins over lowest free index");
+        assert!(!i3.cold);
+    }
+
+    #[test]
+    fn preferred_slot_honored_and_falls_back_when_busy() {
+        let mut w = Worker::new(0, 2048, 1).with_cores(4);
+        let i1 = match w.assign_with_slot(1, 5, 256, 0.0, Some(2)) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i1.slot, Some(2), "free preferred slot is honored");
+        let i2 = match w.assign_with_slot(2, 6, 256, 0.0, Some(2)) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert_eq!(i2.slot, Some(0), "busy preference falls back to lowest free index");
+        let (busy, fns) = w.slot_state();
+        assert_eq!(busy, &[true, false, true, false]);
+        assert_eq!(fns[2], 5);
+        assert_eq!(fns[0], 6);
+    }
+
+    #[test]
+    fn slot_capacity_queues_and_queued_start_takes_freed_slot() {
+        let mut w = Worker::new(0, 2048, 8).with_cores(2);
+        let i1 = match w.assign(1, 1, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        assert!(matches!(w.assign(2, 2, 256, 0.0), AssignOutcome::Started(_)));
+        // Concurrency is 8 but cores = 2: third request queues.
+        assert!(matches!(w.assign(3, 3, 256, 0.0), AssignOutcome::Queued));
+        let (_, started) = w.complete(i1.sandbox, 1.0);
+        let s = started.expect("queued request binds to the freed slot");
+        assert_eq!(s.slot, Some(0));
+        assert_eq!(w.free_slots(), 0);
+    }
+
+    #[test]
+    fn crash_wipes_slot_state() {
+        let mut w = Worker::new(0, 2048, 1).with_cores(2);
+        let i1 = match w.assign(1, 4, 256, 0.0) {
+            AssignOutcome::Started(i) => i,
+            _ => panic!(),
+        };
+        w.complete(i1.sandbox, 1.0); // slot 0 free, affinity f=4
+        w.assign(2, 5, 256, 2.0); // no warm match for 5: lowest free index = slot 0
+        w.crash();
+        assert_eq!(w.free_slots(), 2);
+        let (busy, fns) = w.slot_state();
+        assert!(busy.iter().all(|&b| !b));
+        assert!(fns.iter().all(|&f| f == usize::MAX), "affinity memory dies with the node");
+        assert_eq!(w.warm_free_slot(4), None);
+    }
+
+    #[test]
+    fn remove_queued_preserves_order() {
+        let mut w = Worker::new(0, 2048, 1).with_cores(1);
+        assert!(matches!(w.assign(1, 1, 256, 0.0), AssignOutcome::Started(_)));
+        for rid in 2..=4 {
+            assert!(matches!(w.assign(rid, 1, 256, 0.0), AssignOutcome::Queued));
+        }
+        let q = w.remove_queued(3).expect("rid 3 is queued");
+        assert_eq!(q.request_id, 3);
+        assert_eq!(w.remove_queued(3), None, "second removal finds nothing");
+        assert_eq!(w.queue_len(), 2);
+        // Remaining FIFO order intact: 2 then 4.
+        let q2 = w.remove_queued(2).unwrap();
+        let q4 = w.remove_queued(4).unwrap();
+        assert_eq!((q2.request_id, q4.request_id), (2, 4));
     }
 
     #[test]

@@ -189,6 +189,33 @@ pub fn monopoly_trace(hot_rate: f64, duration_s: f64, sharded: bool) -> OpenLoop
     OpenLoopTrace::from_synthetic(&arr, 40)
 }
 
+/// Mixed short/long trace for the core-granularity experiments (shared by
+/// `benches/ablation_cores.rs` and `tests/dispatch.rs`, DESIGN.md §11):
+/// every 2 s a burst of 24 chameleon arrivals (f=0, 392 ms warm) saturates
+/// a 4-worker × 4-slot cluster (16 slots, ~8 waiting), and 50 ms later six
+/// linpack arrivals (f=5, 58 ms warm) land in the saturated window.
+///
+/// Worker-granular dispatch assigns those shorts into per-worker FIFO
+/// queues *behind* the overflow longs — head-of-line blocking worth
+/// multiple long service times. Core-granular dispatch parks them
+/// centrally (late binding): the first freed slot claims them, bounding
+/// the short-function p99 wait near one long service time. Deterministic;
+/// no RNG involved.
+pub fn mixed_class_trace(duration_s: f64) -> OpenLoopTrace {
+    let mut arr: Vec<(f64, usize)> = Vec::new();
+    let mut t = 0.05;
+    while t < duration_s {
+        for _ in 0..24 {
+            arr.push((t, 0)); // chameleon burst: saturates 16 slots
+        }
+        for j in 0..6 {
+            arr.push((t + 0.05 + 0.01 * j as f64, 5)); // linpack tail
+        }
+        t += 2.0;
+    }
+    OpenLoopTrace::from_synthetic(&arr, 40)
+}
+
 /// Autoscale policy comparison: policies x schedulers on the bursty trace,
 /// reporting the cost/quality trade-off — cold-start rate and latency
 /// against worker-seconds (the cost proxy) and pre-warm speculation

@@ -300,4 +300,31 @@ mod tests {
         let mut ctx = SchedCtx::new(&loads, &mut rng);
         assert_eq!(pod.select(0, &mut ctx), 1);
     }
+
+    /// Baselines never override `decide`, so they inherit the slot-aware
+    /// push adapter: under a core-granular router the pick is upgraded to
+    /// `AssignSlot` when (and only when) the chosen worker has a free
+    /// warm-affine core — no per-baseline slot logic required.
+    #[test]
+    fn baselines_inherit_slot_upgrade_through_default_decide() {
+        use crate::scheduler::{Decision, SlotCtx};
+        let mut s = Jsq::new();
+        let mut rng = Pcg64::new(8);
+        let loads = [2u32, 1, 1, 5]; // JSQ picks worker 1 (lowest id tie)
+        let free = [1u32, 2, 2, 0];
+        let warm_free = [-1i32, 3, -1, -1];
+        let d = {
+            let mut ctx = SchedCtx::new(&loads, &mut rng)
+                .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+            s.decide(0, &mut ctx)
+        };
+        assert_eq!(d, Decision::AssignSlot(1, 3));
+        let warm_free = [-1i32; 4];
+        let d = {
+            let mut ctx = SchedCtx::new(&loads, &mut rng)
+                .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+            s.decide(0, &mut ctx)
+        };
+        assert_eq!(d, Decision::Assign(1), "no warm core anywhere: plain Assign");
+    }
 }

@@ -156,20 +156,27 @@ impl Scheduler for Hiku {
     /// in flight (a warm instance will free up soon — the late-binding
     /// window); otherwise fall back immediately, exactly like push mode.
     /// Without dispatch context this *is* the push adapter.
+    /// Every assignment funnels through [`SchedCtx::slotted`], so under a
+    /// core-granular router (slot view attached) a pick with a free
+    /// warm-affine core is pinned via [`Decision::AssignSlot`]; without
+    /// the view the behavior is byte-identical to the worker-granular
+    /// protocol.
     fn decide(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> Decision {
         let Some(d) = ctx.dispatch else {
-            return Decision::Assign(self.select(f, ctx));
+            let w = self.select(f, ctx);
+            return ctx.slotted(w);
         };
         if let Some(w) = self.dequeue_least_loaded(f, ctx.loads) {
             self.pulls += 1;
-            return Decision::Assign(w);
+            return ctx.slotted(w);
         }
         if d.inflight_f > 0 {
             self.enqueues += 1;
             return Decision::Enqueue;
         }
         self.fallbacks += 1;
-        Decision::Assign(self.fallback_select(f, ctx))
+        let w = self.fallback_select(f, ctx);
+        ctx.slotted(w)
     }
 
     fn on_complete(&mut self, w: WorkerId, f: FunctionId, _ctx: &mut SchedCtx) {
@@ -340,6 +347,43 @@ mod tests {
         assert_eq!(d, Decision::Assign(1), "fallback must be least-connections");
         // No dispatch context at all: the push adapter.
         assert_eq!(h.decide(4, &mut ctx(&loads, &mut rng)), Decision::Assign(1));
+    }
+
+    /// With a slot view attached, both the pull path and the fallback pin
+    /// a free warm-affine core via `AssignSlot`; `Enqueue` is unaffected.
+    #[test]
+    fn decide_pins_warm_core_with_slot_view() {
+        use crate::scheduler::{DispatchCtx, SlotCtx};
+        let mut h = Hiku::new(3);
+        let mut rng = Pcg64::new(12);
+        let loads = [1u32, 0, 2];
+        let free = [2u32, 2, 2];
+        // Pull path: worker 2 advertised with a warm core at slot 1.
+        h.on_complete(2, 4, &mut ctx(&loads, &mut rng));
+        let warm_free = [-1i32, -1, 1];
+        let d = {
+            let mut c = ctx(&loads, &mut rng)
+                .with_dispatch(DispatchCtx { inflight_f: 1, pending_f: 0 })
+                .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::AssignSlot(2, 1), "pulled worker's warm core pinned");
+        // Parking is unchanged by the slot view.
+        let d = {
+            let mut c = ctx(&loads, &mut rng)
+                .with_dispatch(DispatchCtx { inflight_f: 1, pending_f: 0 })
+                .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::Enqueue);
+        // Fallback lands on worker 1 (least loaded); no warm core there.
+        let d = {
+            let mut c = ctx(&loads, &mut rng)
+                .with_dispatch(DispatchCtx::default())
+                .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+            h.decide(4, &mut c)
+        };
+        assert_eq!(d, Decision::Assign(1), "no warm core: plain Assign");
     }
 
     /// Property: a pull never returns a worker that is not enqueued, the

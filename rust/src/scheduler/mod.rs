@@ -53,6 +53,13 @@ pub type WorkerId = usize;
 pub enum Decision {
     /// Bind the request to this worker immediately (push semantics).
     Assign(WorkerId),
+    /// Bind the request to a specific core slot of this worker
+    /// (core-granular scheduling, DESIGN.md §11). The slot preference is
+    /// best-effort: if it is busy by the time the request lands, the
+    /// worker falls back to its own deterministic pick. Routers that do
+    /// not track slots (`cores_per_worker = 1`, the real-time server)
+    /// treat this exactly like [`Decision::Assign`].
+    AssignSlot(WorkerId, u32),
     /// Park the request in the router's pending queue: an idle worker
     /// will pull it ([`Scheduler::on_worker_idle`]) or the router's wait
     /// deadline will force-place it via [`Scheduler::select`].
@@ -98,6 +105,22 @@ pub struct DispatchCtx {
     pub pending_f: usize,
 }
 
+/// Slot-level load view handed to [`Scheduler::decide`] when the router
+/// runs core-granular (`sim.cores_per_worker > 1`, DESIGN.md §11). Both
+/// slices are indexed like [`SchedCtx::loads`] (active workers only) and
+/// are computed by the router *for the function being decided*, so
+/// schedulers stay function-agnostic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlotCtx<'a> {
+    /// Free core slots per active worker.
+    pub free: &'a [u32],
+    /// Per worker: the lowest-index free slot whose last occupant was the
+    /// requested function (warm affinity), or -1 when no such slot is
+    /// free. A scheduler that lands on worker `w` with `warm_free[w] >= 0`
+    /// should return [`Decision::AssignSlot`] to pin the warm core.
+    pub warm_free: &'a [i32],
+}
+
 /// Router-maintained state handed to every scheduler call.
 pub struct SchedCtx<'a> {
     /// Active connections per worker (outstanding routed requests).
@@ -121,12 +144,17 @@ pub struct SchedCtx<'a> {
     /// avoided worker, so schedulers that ignore it stay correct (and
     /// keep their RNG streams unchanged).
     pub avoid: Option<&'a [bool]>,
+    /// Slot-level load view (`None` unless the router runs core-granular).
+    /// Schedulers that ignore it stay correct: an [`Decision::Assign`] on
+    /// a slot-tracking router lets the worker pick the slot itself under
+    /// the same deterministic rule.
+    pub slots: Option<SlotCtx<'a>>,
 }
 
 impl<'a> SchedCtx<'a> {
     /// Context without an index (tests, the real-time server).
     pub fn new(loads: &'a [u32], rng: &'a mut Pcg64) -> Self {
-        Self { loads, min_index: None, rng, dispatch: None, avoid: None }
+        Self { loads, min_index: None, rng, dispatch: None, avoid: None, slots: None }
     }
 
     /// Attach pull-dispatch context (router pending-queue state).
@@ -139,6 +167,27 @@ impl<'a> SchedCtx<'a> {
     pub fn with_avoid(mut self, avoid: &'a [bool]) -> Self {
         self.avoid = Some(avoid);
         self
+    }
+
+    /// Attach the slot-level load view (core-granular routers).
+    pub fn with_slots(mut self, slots: SlotCtx<'a>) -> Self {
+        self.slots = Some(slots);
+        self
+    }
+
+    /// Upgrade an `Assign`-style pick to [`Decision::AssignSlot`] when the
+    /// slot view says worker `w` has a free warm-affine core for the
+    /// decided function. The shared post-selection rule, so every
+    /// scheduler pins warm cores identically.
+    pub fn slotted(&self, w: WorkerId) -> Decision {
+        if let Some(s) = self.slots {
+            if let Some(&wf) = s.warm_free.get(w) {
+                if wf >= 0 {
+                    return Decision::AssignSlot(w, wf as u32);
+                }
+            }
+        }
+        Decision::Assign(w)
     }
 
     /// Whether worker `w` is eligible (not crash- or drain-marked).
@@ -229,8 +278,14 @@ pub trait Scheduler: Send {
     /// understand late binding (Hiku) override this to return
     /// [`Decision::Enqueue`] when waiting briefly is likely to yield a
     /// warm start.
+    ///
+    /// When the router attaches a slot view ([`SchedCtx::slots`], only at
+    /// `cores_per_worker > 1`), the adapter upgrades the pick to
+    /// [`Decision::AssignSlot`] via [`SchedCtx::slotted`] — with the view
+    /// absent it returns plain `Assign`, byte-identical to before.
     fn decide(&mut self, f: FunctionId, ctx: &mut SchedCtx) -> Decision {
-        Decision::Assign(self.select(f, ctx))
+        let w = self.select(f, ctx);
+        ctx.slotted(w)
     }
 
     /// Pull hook: worker `w` just became idle holding a warm instance of
@@ -457,6 +512,45 @@ mod tests {
         }
     }
 
+    /// With a slot view attached, the default adapter upgrades its pick to
+    /// `AssignSlot` exactly when the selected worker has a free warm-affine
+    /// core — and the selection itself (worker + RNG stream) is unchanged.
+    #[test]
+    fn decide_upgrades_to_assign_slot_with_slot_view() {
+        let loads = [2u32, 0, 1, 0, 3, 1];
+        let free = [1u32, 2, 0, 2, 1, 1];
+        for name in ALL_SCHEDULERS {
+            let cfg = SchedulerConfig { name: name.into(), ..Default::default() };
+            let mut a = make_scheduler(&cfg, 6).unwrap();
+            let mut b = make_scheduler(&cfg, 6).unwrap();
+            let mut rng_a = Pcg64::new(23);
+            let mut rng_b = Pcg64::new(23);
+            for f in 0..30 {
+                let w = {
+                    let mut ctx = SchedCtx::new(&loads, &mut rng_b);
+                    b.select(f, &mut ctx)
+                };
+                // Warm view: every worker has slot 1 warm-affine and free.
+                let warm_free = [1i32; 6];
+                let d = {
+                    let mut ctx = SchedCtx::new(&loads, &mut rng_a)
+                        .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+                    a.decide(f, &mut ctx)
+                };
+                assert_eq!(d, Decision::AssignSlot(w, 1), "{name}: warm core not pinned");
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{name}: RNG streams diverged");
+            // No warm-affine slot anywhere: plain Assign.
+            let warm_free = [-1i32; 6];
+            let d = {
+                let mut ctx = SchedCtx::new(&loads, &mut rng_a)
+                    .with_slots(SlotCtx { free: &free, warm_free: &warm_free });
+                a.decide(0, &mut ctx)
+            };
+            assert!(matches!(d, Decision::Assign(_)), "{name}: expected plain Assign");
+        }
+    }
+
     #[test]
     fn least_loaded_picks_min() {
         let mut rng = Pcg64::new(1);
@@ -502,6 +596,7 @@ mod tests {
                 rng: &mut rng_a,
                 dispatch: None,
                 avoid: None,
+                slots: None,
             };
             let a = with_idx.least_loaded_random_tie();
             let ta = with_idx.total_load();

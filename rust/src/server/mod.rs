@@ -574,7 +574,9 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     Decision::Enqueue => {
                         !pull || (cap_f[f] > 0 && pending_q.len_fn(f) >= cap_f[f])
                     }
-                    Decision::Assign(_) => false,
+                    // The real-time server does not track core slots: a
+                    // slot pin degrades to a plain worker assignment.
+                    Decision::Assign(_) | Decision::AssignSlot(_, _) => false,
                 };
                 if refuse {
                     metrics.trace.record(rid, f, "decide", t_s, t_s, None, "reject");
@@ -593,7 +595,7 @@ pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, S
                     fn_of.push(f);
                     attempts.push(0);
                     match decision {
-                        Decision::Assign(w) => {
+                        Decision::Assign(w) | Decision::AssignSlot(w, _) => {
                             metrics.trace.record(rid, f, "decide", t_s, t_s, Some(w), "assign");
                             loads[w] += 1;
                             inflight_f[f] += 1;

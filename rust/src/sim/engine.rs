@@ -97,11 +97,12 @@ use crate::dispatch::PendingQueue;
 use crate::faults::{fault_coin, retry_backoff, FaultPlan};
 use crate::metrics::RunMetrics;
 use crate::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId, StartInfo, WorkerId};
-use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, Scheduler};
+use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, Scheduler, SlotCtx};
 use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
 use crate::workload::spec::FunctionRegistry;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 /// Per-request bookkeeping.
@@ -339,6 +340,22 @@ pub struct Simulation<'a> {
     /// Fault-injection runtime (`[faults].enabled`); `None` short-circuits
     /// every fault check — byte-identical to the pre-fault engine.
     faults: Option<FaultRuntime>,
+    /// Core-granular scheduling active (`sim.cores_per_worker > 1`,
+    /// DESIGN.md §11). Off (the default) leaves every slot field below
+    /// untouched — byte-identical to the slot-agnostic engine.
+    slot_mode: bool,
+    /// Push-mode bounded re-route window (`dispatch.rebind_window_s`);
+    /// 0 disables the rebind hook entirely.
+    rebind_window_s: f64,
+    /// Requests queued behind a busy worker that may still re-route:
+    /// `(request, bound worker, window expiry)` in queueing order.
+    /// Expired and stale entries are dropped lazily.
+    rebind_q: VecDeque<(u64, WorkerId, f64)>,
+    /// Scratch for the per-decide slot view (free slots per worker).
+    slot_free_scratch: Vec<u32>,
+    /// Scratch for the per-decide slot view (lowest free warm-affine
+    /// slot per worker, -1 = none).
+    slot_warm_scratch: Vec<i32>,
     metrics: RunMetrics,
 }
 
@@ -378,7 +395,7 @@ impl<'a> Simulation<'a> {
             registry,
             workload,
             schedulers,
-            cluster: Cluster::new(&cfg.cluster),
+            cluster: Cluster::new_with_cores(&cfg.cluster, cfg.sim.cores_per_worker),
             queue: EventQueue::new(),
             loads: (0..n).map(|_| MinLoadIndex::new(cfg.cluster.workers)).collect(),
             sched_rng,
@@ -418,6 +435,11 @@ impl<'a> Simulation<'a> {
             } else {
                 None
             },
+            slot_mode: cfg.sim.cores_per_worker > 1,
+            rebind_window_s: cfg.dispatch.rebind_window_s,
+            rebind_q: VecDeque::new(),
+            slot_free_scratch: Vec::new(),
+            slot_warm_scratch: Vec::new(),
             metrics: {
                 let mut m = RunMetrics::with_telemetry(
                     &name,
@@ -427,6 +449,8 @@ impl<'a> Simulation<'a> {
                     &cfg.telemetry,
                 );
                 m.faults_enabled = cfg.faults.enabled;
+                m.slots_enabled =
+                    cfg.sim.cores_per_worker > 1 || cfg.dispatch.rebind_window_s > 0.0;
                 m
             },
         }
@@ -894,6 +918,7 @@ impl<'a> Simulation<'a> {
                 rng: &mut self.sched_rng,
                 dispatch: None,
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots: None,
             };
             self.schedulers[si].select(task.function, &mut ctx)
         };
@@ -1006,6 +1031,13 @@ impl<'a> Simulation<'a> {
         }
         if self.pull {
             self.metrics.record_pending_depth(t, self.pending.len());
+        }
+        if self.slot_mode {
+            // Slot-occupancy timeline (1 Hz with the sweep): busy slots =
+            // active capacity minus the cluster's free-slot aggregate.
+            let cap = self.cluster.active_workers() * self.cluster.cores();
+            let busy = cap.saturating_sub(self.cluster.total_free_slots());
+            self.metrics.record_slot_depth(t, busy);
         }
         let next = t + self.sweep_dt();
         // Stop sweeping once no more work can arrive and drain completes.
@@ -1296,6 +1328,24 @@ impl<'a> Simulation<'a> {
         }
 
         // --- the dispatch decision (Algorithm 1 entry point) ---
+        // Slot mode: expose the slot-granular load view (free-slot count
+        // and lowest free warm-affine slot per worker). The view iterates
+        // worker ids ascending — the determinism rule of DESIGN.md §11 —
+        // and is rebuilt per decision from the cluster's incremental
+        // aggregates (O(active)).
+        let mut slot_free = std::mem::take(&mut self.slot_free_scratch);
+        let mut slot_warm = std::mem::take(&mut self.slot_warm_scratch);
+        if self.slot_mode {
+            slot_free.clear();
+            slot_warm.clear();
+            for w in 0..active {
+                slot_free.push(self.cluster.worker_free_slots(w) as u32);
+                slot_warm.push(match self.cluster.warm_free_slot(w, f) {
+                    Some(s) => s as i32,
+                    None => -1,
+                });
+            }
+        }
         let decision = {
             let dispatch = if self.pull {
                 Some(DispatchCtx {
@@ -1305,17 +1355,30 @@ impl<'a> Simulation<'a> {
             } else {
                 None
             };
+            let slots = if self.slot_mode {
+                Some(SlotCtx { free: &slot_free, warm_free: &slot_warm })
+            } else {
+                None
+            };
             let mut ctx = SchedCtx {
                 loads: &self.loads[si].loads()[..active],
                 min_index: if self.reference { None } else { Some(&self.loads[si]) },
                 rng: &mut self.sched_rng,
                 dispatch,
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots,
             };
             self.schedulers[si].decide(f, &mut ctx)
         };
+        self.slot_free_scratch = slot_free;
+        self.slot_warm_scratch = slot_warm;
         match decision {
-            Decision::Assign(w) => {
+            Decision::Assign(_) | Decision::AssignSlot(_, _) => {
+                let (w, preferred_slot) = match decision {
+                    Decision::Assign(w) => (w, None),
+                    Decision::AssignSlot(w, s) => (w, Some(s)),
+                    _ => unreachable!(),
+                };
                 debug_assert!(w < active, "scheduler picked drained worker {w}");
                 if self.faults.as_ref().map_or(false, |fr| fr.is_dead(w)) {
                     // The pick landed on a crashed worker the scheduler
@@ -1341,6 +1404,22 @@ impl<'a> Simulation<'a> {
                     }
                     return;
                 }
+                // Core-granular late binding (pull + slot mode): an
+                // assignment that would queue behind a fully busy worker
+                // parks centrally instead — the request binds to whichever
+                // *slot* frees first (a pull, an idle claim, or the wait
+                // deadline), not to a worker picked now. Admission is
+                // still per-function; past the cap the request falls
+                // through to the worker queue like the slot-agnostic path.
+                if self.pull
+                    && self.slot_mode
+                    && self.cluster.worker_free_slots(w) == 0
+                    && self.admit(f)
+                {
+                    self.metrics.trace.record(rid, f, "decide", t, t, Some(w), "late-bind");
+                    self.park(rid, vu, step, f, si, t);
+                    return;
+                }
                 self.metrics.trace.record(rid, f, "decide", t, t, Some(w), "assign");
                 self.loads[si].inc(w);
                 self.metrics.record_assignment(w, t);
@@ -1356,7 +1435,7 @@ impl<'a> Simulation<'a> {
                 // handle_start never resizes on the hot path.
                 self.cold_flags.push(false);
                 self.queue_delays.push(0.0);
-                self.start_on(w, rid, f, t);
+                self.start_on(w, rid, f, t, preferred_slot);
             }
             Decision::Enqueue => {
                 if self.admit(f) {
@@ -1376,15 +1455,25 @@ impl<'a> Simulation<'a> {
 
     /// Start (elastic) or queue (hard-admission) request `rid` on its
     /// bound worker — the tail every assignment path shares.
-    fn start_on(&mut self, w: WorkerId, rid: u64, f: usize, t: f64) {
+    /// `preferred_slot` is the scheduler's core pin (slot mode only;
+    /// best-effort — the worker falls back to its own deterministic pick
+    /// when the pinned slot is busy).
+    fn start_on(&mut self, w: WorkerId, rid: u64, f: usize, t: f64, preferred_slot: Option<u32>) {
         let mem = self.registry.mem_mb(f);
         if self.cfg.cluster.elastic {
             let info = self.cluster.assign_elastic(w, rid, f, mem, t);
             self.handle_start(w, info, t);
         } else {
-            match self.cluster.assign(w, rid, f, mem, t) {
+            match self.cluster.assign_slot(w, rid, f, mem, t, preferred_slot) {
                 AssignOutcome::Started(info) => self.handle_start(w, info, t),
-                AssignOutcome::Queued => {}
+                AssignOutcome::Queued => {
+                    // Push-mode bounded rebind (DESIGN.md §11): remember
+                    // the queued request so a slot freeing elsewhere
+                    // within the window can claim it.
+                    if self.rebind_window_s > 0.0 {
+                        self.rebind_q.push_back((rid, w, t + self.rebind_window_s));
+                    }
+                }
             }
         }
     }
@@ -1511,7 +1600,9 @@ impl<'a> Simulation<'a> {
         if self.faults.is_some() {
             self.try_migrate_warm(rid, w, f, t);
         }
-        self.start_on(w, rid, f, t);
+        // Late binding's slot choice: the worker's own deterministic
+        // warm-affine pick at the moment the request lands (no pin).
+        self.start_on(w, rid, f, t, None);
     }
 
     /// Warm-state handoff: a *retried* request of `f` landing on `w`
@@ -1558,6 +1649,7 @@ impl<'a> Simulation<'a> {
                 rng: &mut self.sched_rng,
                 dispatch: None,
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots: None,
             };
             self.schedulers[si].select(f, &mut ctx)
         };
@@ -1825,6 +1917,7 @@ impl<'a> Simulation<'a> {
                 rng: &mut self.sched_rng,
                 dispatch: None,
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots: None,
             };
             self.schedulers[si].select(f, &mut ctx)
         };
@@ -1837,7 +1930,7 @@ impl<'a> Simulation<'a> {
         self.loads[si].inc(w);
         self.metrics.record_assignment(w, t);
         self.metrics.trace.record(rid, f, "bind", t, t, Some(w), "retry");
-        self.start_on(w, rid, f, t);
+        self.start_on(w, rid, f, t, None);
     }
 
     /// `HedgeCheck`: the request has been running on a straggler past
@@ -1942,6 +2035,7 @@ impl<'a> Simulation<'a> {
                     pending_f: self.pending.len_fn(f),
                 }),
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots: None,
             };
             self.schedulers[si].on_worker_idle(w, f, &mut ctx)
         };
@@ -1970,6 +2064,7 @@ impl<'a> Simulation<'a> {
                 rng: &mut self.sched_rng,
                 dispatch: None,
                 avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
+                slots: None,
             };
             self.schedulers[si].on_complete(w, f, &mut ctx);
         }
@@ -1985,6 +2080,14 @@ impl<'a> Simulation<'a> {
             self.notify_evict(w, f);
         }
         let meta = self.requests[info.request_id as usize];
+        // Head-of-line-blocking breakdown: arrival→start wait, split by
+        // runtime class (short functions are the ones a long execution
+        // blocks). Recorded for every start; *reported* only when the
+        // slots summary block is enabled, so default summaries are
+        // untouched.
+        let warm_ms = self.registry.app(meta.function).warm_ms;
+        self.metrics
+            .record_hol_wait(crate::dispatch::is_short_class(warm_ms), t - meta.arrival);
         if self.pull {
             // Warm-prospect signal for `decide`: executions of f running.
             self.inflight_f[meta.function] += 1;
@@ -2133,6 +2236,60 @@ impl<'a> Simulation<'a> {
         self.post_completion(w, rid, outcome, t);
     }
 
+    /// Push-mode bounded rebind (`dispatch.rebind_window_s`): worker `w`
+    /// just freed capacity with no local queued work to absorb it. Scan
+    /// the rebind queue (oldest first) for a request still waiting in
+    /// another worker's admission queue whose window is open, pull it
+    /// back out, and start it here — push mode's bounded approximation
+    /// of pull's late binding. At most one request re-routes per freed
+    /// slot; expired and stale entries are dropped as they are passed.
+    fn try_rebind(&mut self, w: WorkerId, t: f64) {
+        if self.faults.as_ref().map_or(false, |fr| fr.is_dead(w)) {
+            return;
+        }
+        let mut i = 0;
+        while i < self.rebind_q.len() {
+            let (rid, v, expiry) = self.rebind_q[i];
+            if expiry < t {
+                let _ = self.rebind_q.remove(i);
+                continue;
+            }
+            if v == w {
+                // Rebinding to the worker it already queues on is a no-op.
+                i += 1;
+                continue;
+            }
+            let Some(q) = self.cluster.remove_queued(v, rid) else {
+                // Stale: already started, crash-harvested, or rebound.
+                let _ = self.rebind_q.remove(i);
+                continue;
+            };
+            let _ = self.rebind_q.remove(i);
+            let meta = self.requests[rid as usize];
+            self.loads[meta.sched].dec(v);
+            self.loads[meta.sched].inc(w);
+            self.requests[rid as usize].worker = w;
+            self.metrics.rebound += 1;
+            self.metrics.record_assignment(w, t);
+            self.metrics.trace.record(rid, meta.function, "rebind", t, t, Some(w), "requeue");
+            let mem = self.registry.mem_mb(meta.function);
+            match self.cluster.assign_slot(w, rid, meta.function, mem, t, None) {
+                AssignOutcome::Started(mut info) => {
+                    // The wait accrued on the donor's queue counts.
+                    info.queue_delay_s = t - q.queued_at;
+                    self.handle_start(w, info, t);
+                }
+                AssignOutcome::Queued => {
+                    // The freed capacity was taken concurrently (cannot
+                    // happen on this single-threaded path, but stay safe):
+                    // keep the original window on the new queue.
+                    self.rebind_q.push_back((rid, w, expiry));
+                }
+            }
+            return;
+        }
+    }
+
     /// Everything after the worker-side completion transition: load-view
     /// decrement, eviction notifications, the pull advertisement, the
     /// queued start, response metrics, and the VU's next arrival. Shared
@@ -2186,6 +2343,11 @@ impl<'a> Simulation<'a> {
 
         if let Some(info) = outcome.started {
             self.handle_start(w, info, t);
+        } else if self.rebind_window_s > 0.0 && w < self.cluster.active_workers() {
+            // The completion freed capacity and no locally queued request
+            // took it: re-offer the slot to a request queued behind a
+            // *busy* worker whose rebind window is still open.
+            self.try_rebind(w, t);
         }
 
         if init_failed_now {

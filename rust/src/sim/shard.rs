@@ -188,6 +188,11 @@ struct Coord {
     /// Cross-shard steal cap per donor per epoch (`dispatch.steal_batch`;
     /// 0 — always in push mode — disables stealing).
     steal_batch: usize,
+    /// Core-granular mode (`sim.cores_per_worker > 1`): the steal rule
+    /// reads the slot digest in the barrier load summaries — a recipient
+    /// must advertise free slots, and a handoff never exceeds them. Off
+    /// (the default) leaves the worker-granular rule byte-identical.
+    slot_mode: bool,
     duration_s: f64,
     concurrency: usize,
     shards: usize,
@@ -343,6 +348,12 @@ impl Coord {
                     if r == donor || self.reports[r].pending > 0 || self.reports[r].live == 0 {
                         continue;
                     }
+                    // Slot digest: a recipient with no free core slot
+                    // cannot start anything — handing work over would
+                    // only park it behind saturated workers.
+                    if self.slot_mode && self.reports[r].load.free_slots == 0 {
+                        continue;
+                    }
                     best = match best {
                         Some(b) if !self.reports[r].load.less_loaded_than(&self.reports[b].load) => {
                             Some(b)
@@ -359,7 +370,14 @@ impl Coord {
                 {
                     continue;
                 }
-                let n = self.reports[donor].pending.min(self.steal_batch);
+                let mut n = self.reports[donor].pending.min(self.steal_batch);
+                if self.slot_mode {
+                    // Never hand over more than the recipient can start.
+                    n = n.min(self.reports[to].load.free_slots as usize);
+                }
+                if n == 0 {
+                    continue;
+                }
                 self.mailboxes[donor].push(ShardMsg::Handoff { to, n });
                 sent = true;
                 self.stole = true;
@@ -521,6 +539,7 @@ pub fn run_sharded_with(
         rng: Pcg64::new(seed ^ 0x5AAD_C0DE),
         prewarm_global,
         steal_batch: if cfg.pull_dispatch() { cfg.dispatch.steal_batch } else { 0 },
+        slot_mode: cfg.sim.cores_per_worker > 1,
         duration_s: cfg.workload.duration_s,
         concurrency: cfg.cluster.concurrency,
         shards: n,

@@ -49,6 +49,14 @@ pub struct LoadSummary {
     pub min_count: usize,
     /// Sum of loads over the active workers.
     pub total_load: u64,
+    /// Free execution slots over the active workers (core-granular
+    /// scheduling, DESIGN.md §11). The index itself tracks loads, not
+    /// slots, so [`MinLoadIndex::summary`] reports 0 and the cluster
+    /// overwrites the field from its incremental slot aggregate before
+    /// the summary crosses a shard barrier. Deliberately *not* part of
+    /// [`LoadSummary::less_loaded_than`]: placement comparisons must stay
+    /// bit-identical to the pre-slot engine at `cores_per_worker = 1`.
+    pub free_slots: u64,
 }
 
 impl Default for LoadSummary {
@@ -60,7 +68,7 @@ impl Default for LoadSummary {
 impl LoadSummary {
     /// Summary of the empty worker set: the identity of [`LoadSummary::merge`].
     pub fn empty() -> Self {
-        Self { active: 0, min_load: u32::MAX, min_count: 0, total_load: 0 }
+        Self { active: 0, min_load: u32::MAX, min_count: 0, total_load: 0, free_slots: 0 }
     }
 
     /// Combine the summaries of two disjoint worker sets. Associative and
@@ -78,6 +86,7 @@ impl LoadSummary {
             min_load,
             min_count,
             total_load: self.total_load + other.total_load,
+            free_slots: self.free_slots + other.free_slots,
         }
     }
 
@@ -291,6 +300,7 @@ impl MinLoadIndex {
                 min_load: l as u32,
                 min_count: self.buckets[l].len(),
                 total_load: self.active_total,
+                free_slots: 0,
             },
         }
     }
@@ -388,15 +398,15 @@ mod tests {
         a.inc(0);
         a.inc(1); // loads [2, 1, 0]
         let sa = a.summary();
-        assert_eq!(sa, LoadSummary { active: 3, min_load: 0, min_count: 1, total_load: 3 });
+        assert_eq!(sa, LoadSummary { active: 3, min_load: 0, min_count: 1, total_load: 3, free_slots: 0 });
         let mut b = MinLoadIndex::new(2);
         b.inc(0);
         b.inc(1); // loads [1, 1]
         let sb = b.summary();
-        assert_eq!(sb, LoadSummary { active: 2, min_load: 1, min_count: 2, total_load: 2 });
+        assert_eq!(sb, LoadSummary { active: 2, min_load: 1, min_count: 2, total_load: 2, free_slots: 0 });
         // Merge over disjoint sets: global min/tie-set/total, any grouping.
         let m = sa.merge(&sb);
-        assert_eq!(m, LoadSummary { active: 5, min_load: 0, min_count: 1, total_load: 5 });
+        assert_eq!(m, LoadSummary { active: 5, min_load: 0, min_count: 1, total_load: 5, free_slots: 0 });
         assert_eq!(m, sb.merge(&sa), "merge must be commutative");
         assert_eq!(m, sa.merge(&LoadSummary::empty()).merge(&sb), "empty is the identity");
         assert_eq!(LoadSummary::empty().mean_load(), f64::INFINITY);
@@ -470,7 +480,7 @@ mod tests {
                 let s = idx.summary();
                 let ties = view.iter().filter(|&&l| l == min).count();
                 prop_assert!(
-                    s == LoadSummary { active, min_load: min, min_count: ties, total_load: total },
+                    s == LoadSummary { active, min_load: min, min_count: ties, total_load: total, free_slots: 0 },
                     "summary {:?} != scan (active {}, min {}, ties {}, total {})",
                     s,
                     active,

@@ -1,0 +1,448 @@
+//! Slot-invariant suite for core-granular scheduling (DESIGN.md §11).
+//!
+//! The contracts pinned here:
+//! - **cores=1 bit-identity**: `sim.cores_per_worker = 1` (the default)
+//!   is byte-identical to the pre-slot engine for the whole scheduler
+//!   registry × {push, pull} × 3 seeds × shards {1, 2, 4} — serial runs
+//!   against the seed reference core, sharded runs against the merge of
+//!   independent reference-engine partition runs (the same transitive
+//!   chain tests/determinism.rs uses). Default summaries must not even
+//!   contain the `slots` block.
+//! - **Slot conservation**: driving the public `Cluster` API with random
+//!   assign/complete/crash churn, `busy + free == cores` holds per
+//!   worker after every operation, and the aggregate free-slot count
+//!   equals the per-worker sum.
+//! - **Slot exclusivity**: no core slot ever hosts two in-flight
+//!   executions — every `StartInfo.slot` (immediate or queued start)
+//!   lands on a slot the shadow model says is free.
+//! - **Chaos with slots**: a full sim run with `cores_per_worker > 1`,
+//!   fault injection, autoscaling and sharding stays bit-reproducible
+//!   and conserves `arrivals == completed + rejected + failed + stolen`.
+
+use hiku::config::{ClusterConfig, Config};
+use hiku::platform::{AssignOutcome, Cluster, SandboxId};
+use hiku::prop_assert;
+use hiku::sim::run_once;
+use hiku::util::prop::{check, PropConfig};
+
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+#[cfg(feature = "ref-heap")]
+fn cfg(sched: &str, mode: &str, shards: usize) -> Config {
+    let mut c = Config::default();
+    c.scheduler.name = sched.into();
+    c.workload.vus = 8;
+    c.workload.duration_s = 10.0;
+    c.cluster.workers = 6;
+    c.sim.shards = shards;
+    c.dispatch.mode = mode.into();
+    // The tentpole's off-switch, spelled out: slot granularity and the
+    // rebind window both at their defaults.
+    c.sim.cores_per_worker = 1;
+    c.dispatch.rebind_window_s = 0.0;
+    c
+}
+
+#[cfg(feature = "ref-heap")]
+fn assert_no_slot_surface(m: &mut hiku::metrics::RunMetrics, label: &str) {
+    assert!(!m.slots_enabled, "{label}: slots must be off at cores = 1");
+    assert_eq!(m.rebound, 0, "{label}: no rebinds without a rebind window");
+    assert!(
+        m.summary_json().get("slots").is_none(),
+        "{label}: cores = 1 summary must not grow a slots block"
+    );
+}
+
+/// cores=1 × ALL_SCHEDULERS × {push, pull} × 3 seeds, serial engine:
+/// bit-identical to the seed reference core, and the summary JSON is
+/// byte-for-byte free of slot-era keys.
+#[cfg(feature = "ref-heap")]
+#[test]
+fn cores1_serial_is_bit_identical_to_reference() {
+    use hiku::scheduler::ALL_SCHEDULERS;
+    use hiku::sim::run_once_reference;
+    for sched in ALL_SCHEDULERS {
+        for mode in ["push", "pull"] {
+            for seed in SEEDS {
+                let c = cfg(sched, mode, 1);
+                let label = format!("{sched}/{mode}/seed{seed}");
+                let mut a = run_once(&c, seed).unwrap_or_else(|e| panic!("{label}: {e}"));
+                let mut r = run_once_reference(&c, seed).unwrap();
+                assert_eq!(
+                    a.events_processed, r.events_processed,
+                    "{label}: event counts diverged"
+                );
+                assert_eq!(
+                    a.summary_json().to_string_compact(),
+                    r.summary_json().to_string_compact(),
+                    "{label}: summaries diverged from the reference engine"
+                );
+                assert_no_slot_surface(&mut a, &label);
+            }
+        }
+    }
+}
+
+/// cores=1 × ALL_SCHEDULERS × {push, pull} × 3 seeds × shards {2, 4}:
+/// the sharded engine still equals the merge, in shard order, of
+/// independent reference-engine runs of its partitions — the slot
+/// fields riding in the shard load digests must be inert at cores = 1.
+#[cfg(feature = "ref-heap")]
+#[test]
+fn cores1_sharded_matches_partitioned_reference() {
+    use hiku::metrics::RunMetrics;
+    use hiku::scheduler::{make_scheduler, ALL_SCHEDULERS};
+    use hiku::sim::shard::{partition_config, shard_seed};
+    use hiku::sim::Simulation;
+    use hiku::workload::loadgen::Workload;
+    use hiku::workload::spec::FunctionRegistry;
+
+    let run_partition = |base: &Config, seed: u64, s: usize, n: usize| -> RunMetrics {
+        let pc = partition_config(base, s, n);
+        let registry = FunctionRegistry::functionbench(pc.workload.copies);
+        let workload = Workload::generate(&pc.workload, registry.len(), seed);
+        let sched = make_scheduler(&pc.scheduler, pc.cluster.workers).expect("scheduler");
+        Simulation::new(&pc, &registry, &workload, sched, shard_seed(seed, s))
+            .with_vu_slice(s, n)
+            .with_reference_core()
+            .run()
+    };
+    for sched in ALL_SCHEDULERS {
+        for mode in ["push", "pull"] {
+            for &shards in &[2usize, 4] {
+                for seed in SEEDS {
+                    let c = cfg(sched, mode, shards);
+                    let label = format!("{sched}/{mode}/shards{shards}/seed{seed}");
+                    let mut a = run_once(&c, seed).unwrap_or_else(|e| panic!("{label}: {e}"));
+                    let mut merged: Option<RunMetrics> = None;
+                    for s in 0..shards {
+                        let m = run_partition(&c, seed, s, shards);
+                        match &mut merged {
+                            None => merged = Some(m),
+                            Some(acc) => acc.merge(&m),
+                        }
+                    }
+                    let mut b = merged.unwrap();
+                    assert_eq!(
+                        a.summary_json().to_string_compact(),
+                        b.summary_json().to_string_compact(),
+                        "{label}: sharded run diverged from partitioned reference"
+                    );
+                    assert_no_slot_surface(&mut a, &label);
+                }
+            }
+        }
+    }
+}
+
+/// Shadow model for the slot property tests: per-worker slot occupancy
+/// (`Some(request_id)` = in flight) plus the sandbox → (worker, slot)
+/// map needed to free the right slot on completion.
+struct Shadow {
+    slots: Vec<Vec<Option<u64>>>,
+    by_sandbox: Vec<(usize, SandboxId, u32, u64)>,
+}
+
+impl Shadow {
+    fn new(workers: usize, cores: usize) -> Self {
+        Self { slots: vec![vec![None; cores]; workers], by_sandbox: Vec::new() }
+    }
+
+    /// Occupy the slot a start landed on; errors on double-booking.
+    fn start(&mut self, w: usize, info: &hiku::platform::StartInfo) -> Result<(), String> {
+        let Some(slot) = info.slot else {
+            return Err(format!("start on worker {w} carried no slot in slot mode"));
+        };
+        let cell = &mut self.slots[w][slot as usize];
+        if let Some(prev) = *cell {
+            return Err(format!(
+                "slot exclusivity violated: worker {w} slot {slot} already runs request \
+                 {prev}, now also {}",
+                info.request_id
+            ));
+        }
+        *cell = Some(info.request_id);
+        self.by_sandbox.push((w, info.sandbox, slot, info.request_id));
+        Ok(())
+    }
+
+    fn complete(&mut self, w: usize, sb: SandboxId) -> Result<u32, String> {
+        let Some(pos) = self.by_sandbox.iter().position(|&(pw, ps, _, _)| pw == w && ps == sb)
+        else {
+            return Err(format!("completed sandbox {sb} unknown to the shadow on worker {w}"));
+        };
+        let (_, _, slot, _) = self.by_sandbox.swap_remove(pos);
+        self.slots[w][slot as usize] = None;
+        Ok(slot)
+    }
+
+    fn crash(&mut self, w: usize) {
+        for cell in &mut self.slots[w] {
+            *cell = None;
+        }
+        self.by_sandbox.retain(|&(pw, _, _, _)| pw != w);
+    }
+
+    fn busy(&self, w: usize) -> usize {
+        self.slots[w].iter().filter(|s| s.is_some()).count()
+    }
+}
+
+/// The conservation + exclusivity invariant after every operation:
+/// `busy + free == cores` per worker, the aggregate equals the sum, and
+/// the load index's per-worker view agrees with the shadow.
+fn check_invariant(cluster: &Cluster, shadow: &Shadow, cores: usize) -> Result<(), String> {
+    let mut sum_free = 0usize;
+    for w in 0..cluster.active_workers() {
+        let free = cluster.worker_free_slots(w);
+        let busy = shadow.busy(w);
+        prop_assert!(
+            busy + free == cores,
+            "conservation violated on worker {w}: busy {busy} + free {free} != cores {cores}"
+        );
+        // Ground truth straight off the worker's slot vector.
+        let (flags, _) = cluster.worker(w).slot_state();
+        let flagged = flags.iter().filter(|&&b| b).count();
+        prop_assert!(
+            flagged == busy,
+            "worker {w} slot flags say {flagged} busy, shadow says {busy}"
+        );
+        sum_free += free;
+    }
+    prop_assert!(
+        cluster.total_free_slots() == sum_free,
+        "aggregate free slots {} != per-worker sum {sum_free}",
+        cluster.total_free_slots()
+    );
+    Ok(())
+}
+
+/// Random assign/complete/crash churn against the public `Cluster` API:
+/// slot conservation holds after **every** operation, crashes included
+/// (a crash zeroes the worker's busy set and the aggregates follow).
+#[test]
+fn prop_slot_conservation_under_churn_and_crashes() {
+    check("slot-conservation", PropConfig { cases: 90, ..Default::default() }, |rng, size| {
+        let workers = 2 + rng.index(3);
+        let cores = 2 + rng.index(3);
+        let ccfg = ClusterConfig {
+            workers,
+            mem_mb: 4096,
+            concurrency: cores,
+            elastic: false,
+            ..Default::default()
+        };
+        let mut cluster = Cluster::new_with_cores(&ccfg, cores);
+        let mut shadow = Shadow::new(workers, cores);
+        let mut rid = 0u64;
+        let mut t = 0.0;
+        for _ in 0..size * 4 {
+            t += 0.2;
+            match rng.index(8) {
+                // Assign dominates so queues actually form.
+                0..=4 => {
+                    let w = rng.index(workers);
+                    let f = rng.index(4);
+                    // Exercise both the warm-affine default and explicit
+                    // slot pins (the scheduler's AssignSlot path).
+                    let preferred = if rng.index(3) == 0 {
+                        Some(rng.index(cores) as u32)
+                    } else {
+                        None
+                    };
+                    rid += 1;
+                    match cluster.assign_slot(w, rid, f, 256, t, preferred) {
+                        AssignOutcome::Started(info) => shadow.start(w, &info)?,
+                        AssignOutcome::Queued => {
+                            prop_assert!(
+                                shadow.busy(w) == cores,
+                                "worker {w} queued a request with {} free slots",
+                                cores - shadow.busy(w)
+                            );
+                        }
+                    }
+                }
+                5 | 6 => {
+                    // Complete a random in-flight execution; a queued
+                    // request may start on the freed slot.
+                    if shadow.by_sandbox.is_empty() {
+                        continue;
+                    }
+                    let (w, sb, _, _) =
+                        shadow.by_sandbox[rng.index(shadow.by_sandbox.len())];
+                    let (_expiry, started) = cluster.complete(w, sb, t);
+                    let freed = shadow.complete(w, sb)?;
+                    if let Some(info) = started {
+                        prop_assert!(
+                            info.slot == Some(freed),
+                            "queued start took slot {:?}, expected the freed slot {freed}",
+                            info.slot
+                        );
+                        shadow.start(w, &info)?;
+                    }
+                }
+                _ => {
+                    // Crash: busy slots vanish, the queue drops, and the
+                    // aggregates must stay exact (snapshot/journal sync).
+                    let w = rng.index(workers);
+                    let _ = cluster.crash(w);
+                    shadow.crash(w);
+                    prop_assert!(
+                        cluster.worker_free_slots(w) == cores,
+                        "crashed worker {w} reports {} free slots, want all {cores}",
+                        cluster.worker_free_slots(w)
+                    );
+                }
+            }
+            check_invariant(&cluster, &shadow, cores)?;
+        }
+        Ok(())
+    });
+}
+
+/// Warm-affinity agreement: `warm_free_slot` must name a slot that is
+/// (a) free and (b) last ran the function — checked against the raw
+/// slot vectors after every start/complete.
+#[test]
+fn prop_warm_free_slot_agrees_with_slot_state() {
+    check("warm-free-slot", PropConfig { cases: 60, ..Default::default() }, |rng, size| {
+        let cores = 2 + rng.index(3);
+        let ccfg = ClusterConfig {
+            workers: 2,
+            mem_mb: 4096,
+            concurrency: cores,
+            elastic: false,
+            ..Default::default()
+        };
+        let mut cluster = Cluster::new_with_cores(&ccfg, cores);
+        let mut shadow = Shadow::new(2, cores);
+        let mut rid = 0u64;
+        let mut t = 0.0;
+        for _ in 0..size * 3 {
+            t += 0.3;
+            let w = rng.index(2);
+            if rng.index(2) == 0 || shadow.by_sandbox.is_empty() {
+                let f = rng.index(3);
+                rid += 1;
+                if let AssignOutcome::Started(info) = cluster.assign_slot(w, rid, f, 256, t, None)
+                {
+                    shadow.start(w, &info)?;
+                }
+            } else {
+                let (cw, sb, _, _) = shadow.by_sandbox[rng.index(shadow.by_sandbox.len())];
+                let (_expiry, started) = cluster.complete(cw, sb, t);
+                shadow.complete(cw, sb)?;
+                if let Some(info) = started {
+                    shadow.start(cw, &info)?;
+                }
+            }
+            for wk in 0..2 {
+                let (flags, last_fn) = cluster.worker(wk).slot_state();
+                for f in 0..3 {
+                    match cluster.warm_free_slot(wk, f) {
+                        Some(s) => {
+                            let s = s as usize;
+                            prop_assert!(
+                                !flags[s] && last_fn[s] == f,
+                                "warm_free_slot({wk}, {f}) = {s} but busy={} last_fn={}",
+                                flags[s],
+                                last_fn[s]
+                            );
+                        }
+                        None => {
+                            let exists = (0..flags.len())
+                                .any(|s| !flags[s] && last_fn[s] == f);
+                            prop_assert!(
+                                !exists,
+                                "warm_free_slot({wk}, {f}) = None but a warm free slot exists"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-sim chaos with the slot model on: crashes, stragglers, reactive
+/// autoscaling and sharding — bit-reproducible per (seed, shards), the
+/// conservation identity holds, and the slots summary block appears.
+#[test]
+fn slot_mode_chaos_reproducible_and_conserving() {
+    for &shards in &[1usize, 2] {
+        for seed in SEEDS {
+            let mut c = Config::default();
+            c.scheduler.name = "hiku".into();
+            c.workload.vus = 16;
+            c.workload.duration_s = 20.0;
+            c.cluster.workers = 6;
+            c.cluster.elastic = false; // required by the slot model
+            c.sim.shards = shards;
+            c.sim.cores_per_worker = 2;
+            c.dispatch.mode = "pull".into();
+            c.autoscale.policy = "reactive".into();
+            c.autoscale.max_workers = 10;
+            c.faults.enabled = true;
+            c.faults.crash_rate = 3.0;
+            c.faults.mttr_s = 4.0;
+            c.faults.straggler_frac = 0.2;
+            c.faults.straggler_slowdown = 3.0;
+            let label = format!("slot-chaos/shards{shards}/seed{seed}");
+            let mut a = run_once(&c, seed).unwrap_or_else(|e| panic!("{label}: {e}"));
+            let mut b = run_once(&c, seed).unwrap();
+            assert_eq!(
+                a.summary_json().to_string_compact(),
+                b.summary_json().to_string_compact(),
+                "{label}: chaos run not reproducible"
+            );
+            assert!(a.slots_enabled, "{label}: slots block must be on");
+            assert_eq!(
+                a.arrivals,
+                a.completed + a.rejected + a.failed + a.stolen,
+                "{label}: conservation violated (arrivals {} completed {} rejected {} \
+                 failed {} stolen {})",
+                a.arrivals,
+                a.completed,
+                a.rejected,
+                a.failed,
+                a.stolen
+            );
+            assert!(a.completed > 0, "{label}: the cluster must still serve requests");
+            assert!(a.worker_crashes > 0, "{label}: the fault machinery must fire");
+        }
+    }
+}
+
+/// Push-mode rebind conserves too, and actually fires on a config built
+/// to queue: more offered load than slots, a generous rebind window.
+#[test]
+fn rebind_conserves_and_meters() {
+    let mut c = Config::default();
+    c.scheduler.name = "random".into(); // eager binder, no load awareness
+    c.workload.vus = 24;
+    c.workload.duration_s = 15.0;
+    c.cluster.workers = 4;
+    c.cluster.elastic = false;
+    c.sim.cores_per_worker = 2;
+    c.dispatch.mode = "push".into();
+    c.dispatch.rebind_window_s = 1.0;
+    let mut a = run_once(&c, 1).expect("rebind run");
+    let mut b = run_once(&c, 1).expect("rebind rerun");
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "rebind run not reproducible"
+    );
+    assert_eq!(
+        a.arrivals,
+        a.completed + a.rejected + a.failed + a.stolen,
+        "rebind conservation violated"
+    );
+    assert!(
+        a.rebound > 0,
+        "random placement over 4x2 slots at 24 VUs must queue somewhere while \
+         another worker idles — the rebind window never fired"
+    );
+    assert!(a.slots_enabled, "rebind window must enable the slots summary block");
+}

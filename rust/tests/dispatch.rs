@@ -28,11 +28,16 @@
 //!   push on the bursty workload (the full comparison table is
 //!   `cargo bench --bench ablation_dispatch`);
 //! - sharded pull runs are bit-reproducible and actually hand off tasks
-//!   across shards at epoch barriers.
+//!   across shards at epoch barriers;
+//! - head-of-line blocking (DESIGN.md §11): core-granular pull
+//!   (`sim.cores_per_worker > 1`, late binding through the pending
+//!   queue) keeps the short class's p99 arrival→start wait strictly
+//!   below worker-granular pull on the mixed short/long trace, and the
+//!   conservation identity survives the slot model.
 
 use hiku::config::Config;
 use hiku::prop_assert;
-use hiku::report::{bursty_trace, monopoly_trace};
+use hiku::report::{bursty_trace, mixed_class_trace, monopoly_trace};
 use hiku::sim::{run_once, run_trace};
 use hiku::util::prop::{check, PropConfig};
 use hiku::workload::loadgen::OpenLoopTrace;
@@ -383,4 +388,78 @@ fn sharded_pull_steals_at_barriers_and_reproduces() {
     let mp = run_trace(&p, &trace, 5).unwrap();
     assert_eq!(mp.stolen, 0);
     assert_eq!(mp.issued, mp.completed);
+}
+
+/// The slot model's headline regression (DESIGN.md §11, `cargo bench
+/// --bench ablation_cores` for the full table): on the mixed short/long
+/// trace, core-granular pull must cut the short class's p99
+/// arrival→start wait strictly below worker-granular pull.
+///
+/// Both arms are least-connections (the baselines' `decide` always
+/// binds, so the contrast is purely the slot model) over 4 workers × 4
+/// execution slots. Worker-granular: a trailing short binds eagerly and
+/// queues in some worker's FIFO behind burst-overflow longs, waiting
+/// multiple long service times. Core-granular: the scheduler sees zero
+/// free slots cluster-wide, the engine parks the short instead (late
+/// binding), and the first completion anywhere claims it via
+/// `claim_stale_pending` — one partial long service time.
+#[test]
+fn core_granular_pull_beats_worker_granular_on_short_p99() {
+    let dur = 20.0;
+    let trace = mixed_class_trace(dur);
+    let base = || {
+        let mut c = pull_cfg("least-connections", 1, dur);
+        c.cluster.workers = 4;
+        c.cluster.concurrency = 4;
+        c.cluster.elastic = false;
+        c
+    };
+    let mut worker_granular = base();
+    worker_granular.sim.cores_per_worker = 1;
+    let mut core_granular = base();
+    core_granular.sim.cores_per_worker = 4;
+    let mut a = run_trace(&worker_granular, &trace, 1).expect("worker-granular run");
+    let mut b = run_trace(&core_granular, &trace, 1).expect("core-granular run");
+    let (p99_worker, p99_cores) = (a.hol_wait_p99_ms(true), b.hol_wait_p99_ms(true));
+    assert!(a.completed > 0 && b.completed > 0, "both arms must serve the trace");
+    assert!(
+        p99_worker > 0.0,
+        "worker-granular must actually queue shorts behind longs (p99 {p99_worker} ms)"
+    );
+    assert!(
+        p99_cores < p99_worker,
+        "core-granular pull must beat worker-granular on short p99 wait: \
+         {p99_cores:.1} ms vs {p99_worker:.1} ms"
+    );
+    assert!(!a.slots_enabled, "cores = 1 must not enable the slots block");
+    assert!(b.slots_enabled, "cores = 4 must enable the slots block");
+}
+
+/// The conservation identity (`arrivals == completed + rejected +
+/// failed + stolen`) holds with the slot model on, for both dispatch
+/// modes — late binding parks and the rebind window re-routes, but
+/// every arrival still resolves exactly once.
+#[test]
+fn slot_mode_conserves_arrivals() {
+    for (mode, rebind) in [("pull", 0.0), ("push", 0.5)] {
+        let mut c = pull_cfg("least-connections", 20, 15.0);
+        c.cluster.workers = 4;
+        c.cluster.elastic = false;
+        c.sim.cores_per_worker = 4;
+        c.dispatch.mode = mode.into();
+        c.dispatch.rebind_window_s = rebind;
+        let m = run_once(&c, 2).expect("slot-mode run");
+        assert_eq!(
+            m.arrivals,
+            m.completed + m.rejected + m.failed + m.stolen,
+            "{mode}: slot-mode conservation violated (arrivals {} completed {} \
+             rejected {} failed {} stolen {})",
+            m.arrivals,
+            m.completed,
+            m.rejected,
+            m.failed,
+            m.stolen
+        );
+        assert!(m.completed > 0, "{mode}: the cluster must serve requests");
+    }
 }

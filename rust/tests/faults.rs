@@ -159,6 +159,9 @@ fn warm_state_migrates_with_retried_requests() {
     // unlucky sandbox layout cannot flake the assertion.
     let mut migrated = 0u64;
     let mut retried = 0u64;
+    let mut bank_spawned = 0u64;
+    let mut bank_hits = 0u64;
+    let mut cold_starts = 0u64;
     for seed in [1u64, 2, 3, 4] {
         let mut c = Config::default();
         c.scheduler.name = "hiku".into();
@@ -169,10 +172,15 @@ fn warm_state_migrates_with_retried_requests() {
         c.faults.enabled = true;
         c.faults.crashes = "8:0;10:1".into();
         c.faults.mttr_s = 6.0;
+        assert!(!c.cluster.prewarm, "the prewarm policy must stay off so every \
+             prewarm counter below belongs to the migration bank");
         let m = run_once(&c, seed).expect("migration run");
         assert_conserved(&m, &format!("migration/seed{seed}"));
         migrated += m.migrated;
         retried += m.retried;
+        bank_spawned += m.prewarm_spawned;
+        bank_hits += m.prewarm_hits;
+        cold_starts += m.cold_starts;
     }
     assert!(retried > 0, "the kills must displace in-flight work");
     assert!(
@@ -180,6 +188,52 @@ fn warm_state_migrates_with_retried_requests() {
         "across 4 seeds, at least one retried request must inherit a \
          harvested warm sandbox (migrated = 0, retried = {retried})"
     );
+    // The cold-start delta, pinned exactly: with the prewarm policy off,
+    // every prewarm in these runs is a bank migration, and each migrated
+    // request's start consumes it warm on first use — i.e. migration
+    // really skipped that request's cold init rather than just metering
+    // an event.
+    assert_eq!(
+        bank_spawned, migrated,
+        "every migration is exactly one banked prewarm (spawned {bank_spawned}, \
+         migrated {migrated})"
+    );
+    assert_eq!(
+        bank_hits, migrated,
+        "every migrated request must start warm on its banked sandbox — a miss \
+         means the retry paid the cold init migration claims to skip"
+    );
+    assert!(
+        cold_starts > 0,
+        "the kills must still force cold starts elsewhere, or the delta is vacuous"
+    );
+}
+
+/// Conservation is a counter identity, not a sample identity — it must
+/// hold bit-for-bit even when the latency/wait distributions are stored
+/// as quantile sketches (`telemetry.sketch = true`), whose summaries
+/// are approximate.
+#[test]
+fn chaos_conserves_in_sketch_mode() {
+    for &shards in &[1usize, 2] {
+        let mut c = chaos_cfg(shards);
+        c.telemetry.sketch = true;
+        for seed in SEEDS {
+            let mut a = run_once(&c, seed).expect("sketch chaos run");
+            let mut b = run_once(&c, seed).expect("sketch chaos rerun");
+            assert_eq!(
+                a.summary_json().to_string_compact(),
+                b.summary_json().to_string_compact(),
+                "sketch-mode chaos diverged (shards {shards}, seed {seed})"
+            );
+            assert_conserved(&a, &format!("sketch/shards{shards}/seed{seed}"));
+            assert!(
+                a.summary_json().get("sketch").is_some(),
+                "sketch mode must stamp the summary"
+            );
+            assert!(a.completed > 0 && a.worker_crashes > 0);
+        }
+    }
 }
 
 #[test]
