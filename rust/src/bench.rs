@@ -81,6 +81,7 @@ impl Bench {
     /// `std::hint::black_box` inside to defeat DCE.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
         // Warmup + per-iteration estimate.
+        // detlint:allow(R2) -- bench harness measures real elapsed time by definition
         let wstart = Instant::now();
         let mut warm_iters = 0u64;
         while wstart.elapsed() < self.warmup_time || warm_iters == 0 {
@@ -99,6 +100,7 @@ impl Bench {
         let mut stats = OnlineStats::new();
         let mut total_iters = 0u64;
         for _ in 0..self.samples {
+            // detlint:allow(R2) -- bench harness measures real elapsed time by definition
             let t0 = Instant::now();
             for _ in 0..batch {
                 f();

@@ -29,8 +29,14 @@
 //! of (config, seed) — including autoscaled, pre-warmed and sharded runs
 //! (per shard count) — which turns every figure into a regression test.
 //! See `DESIGN.md` §3 for the rules and `tests/determinism.rs` for the
-//! enforcement.
+//! enforcement. The rulebook itself is machine-checked: `tools/detlint`
+//! (DESIGN.md §12) lints the tree for unordered iteration, wall-clock
+//! reads, and ambient randomness, and CI runs it as a blocking job.
 
+// The tree has never needed `unsafe` (the sharded engine uses std sync
+// primitives only); forbid locks that in — `allow` can't re-enable it.
+#![forbid(unsafe_code)]
+// Promoted to `-D missing_docs` in CI (job `rust`, docs gate step).
 #![warn(missing_docs)]
 
 pub mod autoscale;

@@ -678,8 +678,10 @@ impl<'a> Simulation<'a> {
 
     fn event_loop(&mut self) {
         if self.metrics.phases.enabled {
+            // detlint:allow(R2) -- phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
             let loop0 = Instant::now();
             loop {
+                // detlint:allow(R2) -- phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
                 let t0 = Instant::now();
                 let popped = self.queue.pop();
                 self.metrics.phases.pop_s += t0.elapsed().as_secs_f64();
@@ -700,6 +702,7 @@ impl<'a> Simulation<'a> {
     /// bit-identical to an unprofiled one.
     fn dispatch_timed(&mut self, ev: Event, t: f64) {
         let autoscale = matches!(ev, Event::AutoscaleTick);
+        // detlint:allow(R2) -- phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
         let t0 = Instant::now();
         self.dispatch(ev, t);
         let dt = t0.elapsed().as_secs_f64();
@@ -718,8 +721,10 @@ impl<'a> Simulation<'a> {
     /// barrier only re-chunks it.
     pub(crate) fn step_until(&mut self, limit: f64) -> bool {
         if self.metrics.phases.enabled {
+            // detlint:allow(R2) -- phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
             let loop0 = Instant::now();
             loop {
+                // detlint:allow(R2) -- phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
                 let t0 = Instant::now();
                 let popped = self.queue.pop_before(limit);
                 self.metrics.phases.pop_s += t0.elapsed().as_secs_f64();

@@ -638,6 +638,7 @@ fn shard_main(
         epoch += 1;
         let limit = epoch as f64 * barrier_dt;
         let drained = sim.step_until(limit);
+        // detlint:allow(R2) -- barrier-phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
         let bar0 = profiled.then(Instant::now);
         // Phase 1: publish this shard's report.
         {
@@ -680,6 +681,7 @@ fn shard_main(
         if !msgs.is_empty() {
             sim.advance_clock_to(limit);
             for m in msgs {
+                // detlint:allow(R2) -- mailbox-phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
                 let t0 = profiled.then(Instant::now);
                 let is_handoff = matches!(m, ShardMsg::Handoff { .. });
                 match m {
@@ -706,6 +708,7 @@ fn shard_main(
             }
         }
         if stole {
+            // detlint:allow(R2) -- handoff-phase profiler wall-clock; write-only telemetry (DESIGN.md §12)
             let t0 = profiled.then(Instant::now);
             // Transfer barrier: every donor has deposited its payloads.
             // All shards agree on `stole` (read between the same pair of

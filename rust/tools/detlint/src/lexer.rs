@@ -1,0 +1,268 @@
+//! Line-level source splitter for the rule scanners.
+//!
+//! `detlint` is deliberately not a full Rust parser (no `syn` is vendored
+//! in this image): every rule in the determinism rulebook (DESIGN.md §12)
+//! is expressible as a token match over *code* text, provided literals and
+//! comments cannot alias tokens. This module does exactly that separation:
+//! each physical line is split into a `code` half — with string and char
+//! literal *contents* blanked but their delimiters kept — and a `comment`
+//! half that [`crate::rules`] reads for `detlint:allow` waivers.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! plain strings with escapes (including `\`-continued and raw-newline
+//! multi-line strings), byte strings, raw strings `r"…"` / `r#"…"#` (any
+//! hash depth, `br` too), char literals (escape and plain form), and the
+//! char-literal-vs-lifetime ambiguity (`'a'` vs `<'a>` / `&'static`).
+
+/// One physical source line, split into scannable halves.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Line {
+    /// Code text with string/char-literal contents blanked (delimiters kept).
+    pub code: String,
+    /// Comment text on the line, including the `//` / `/*` markers.
+    pub comment: String,
+}
+
+/// Is `c` an identifier character (`[A-Za-z0-9_]`)?
+pub fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Byte-level twin of [`is_ident`] for token boundary checks.
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lexer state that survives newlines.
+enum St {
+    /// Ordinary code.
+    Code,
+    /// Inside a block comment at the given nesting depth (Rust block
+    /// comments nest).
+    Block(usize),
+    /// Inside a plain (or byte) string literal.
+    Str,
+    /// Inside a raw string literal opened with this many `#`s.
+    RawStr(usize),
+}
+
+/// Split `src` into per-line code/comment halves. Line numbering is
+/// 1-based in the scanners: `lines[i]` is source line `i + 1`.
+pub fn split_lines(src: &str) -> Vec<Line> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Block(depth) => {
+                if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    st = St::Block(depth + 1);
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    cur.comment.push_str("*/");
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if cs.get(i + 1) == Some(&'\n') {
+                        // `\`-continued string: the physical line still ends.
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2; // skip the escaped character
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && closes_raw(&cs, i + 1, hashes) {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Code => {
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    while i < n && cs[i] != '\n' {
+                        cur.comment.push(cs[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if let Some((skip, hashes)) = raw_str_intro(&cs, i, &cur.code) {
+                    cur.code.push_str("r\"");
+                    st = St::RawStr(hashes);
+                    i += skip;
+                } else if c == '\'' {
+                    i = consume_quote(&cs, i, &mut cur.code);
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Does `hashes`-many `#`s follow position `from`? (Raw string closer.)
+fn closes_raw(cs: &[char], from: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| cs.get(from + k) == Some(&'#'))
+}
+
+/// Match a raw-string opener `[b]r#*"` at `i`. The char before must not be
+/// an identifier character (so the `r` in `for` never opens a string).
+/// Returns (chars consumed, hash depth).
+fn raw_str_intro(cs: &[char], i: usize, code_so_far: &str) -> Option<(usize, usize)> {
+    if code_so_far.chars().last().is_some_and(is_ident) {
+        return None;
+    }
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) != Some(&'"') {
+        return None;
+    }
+    Some((j + 1 - i, hashes))
+}
+
+/// Consume a `'` at position `i`: a char literal is blanked to `' '`, a
+/// lifetime keeps its quote. Returns the position after the consumed text.
+fn consume_quote(cs: &[char], i: usize, code: &mut String) -> usize {
+    let n = cs.len();
+    if cs.get(i + 1) == Some(&'\\') {
+        // Escape form: '\n', '\'', '\u{…}' — scan to the closing quote.
+        code.push_str("' '");
+        let mut j = i + 1;
+        while j < n && cs[j] != '\n' {
+            if cs[j] == '\\' {
+                j += 2;
+                continue;
+            }
+            if cs[j] == '\'' {
+                j += 1;
+                break;
+            }
+            j += 1;
+        }
+        j
+    } else if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\n' {
+        // Plain form 'x'.
+        code.push_str("' '");
+        i + 3
+    } else {
+        // Lifetime ('a, 'static) or stray quote.
+        code.push('\'');
+        i + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        split_lines(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let lines = split_lines("let x = 1; // trailing note\n// full line\nlet y = 2;\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert_eq!(lines[0].comment, "// trailing note");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[1].comment, "// full line");
+        assert_eq!(lines[2].comment, "");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = codes("let s = \"Instant::now() HashMap\";\n");
+        assert_eq!(c[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let c = codes("let s = r#\"thread_rng \"quoted\" inside\"#;\n");
+        assert_eq!(c[0], "let s = r\"\";");
+        // Unbalanced quote inside the raw string must not leak state.
+        let c = codes("let s = r\"SystemTime::now\"; let t = 1;\n");
+        assert_eq!(c[0], "let s = r\"\"; let t = 1;");
+    }
+
+    #[test]
+    fn multi_line_string_keeps_line_count() {
+        let lines = split_lines("let s = \"a\nb\";\nlet x = 1;\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].code, "let x = 1;");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("let c = 'r'; let d: &'static str = x; let e = '\\'';\n");
+        assert_eq!(c[0], "let c = ' '; let d: &'static str = x; let e = ' ';");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = split_lines("a /* one /* two */ still */ b\n");
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert!(lines[0].comment.contains("two"));
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let lines = split_lines("x /* start\nmiddle Instant::now()\nend */ y\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].comment.contains("Instant::now"));
+        assert_eq!(lines[2].code.trim(), "y");
+    }
+
+    #[test]
+    fn raw_intro_requires_non_ident_boundary() {
+        // The `r` in `for` must not open a raw string.
+        let c = codes("for x in xs { f(x) }\n");
+        assert_eq!(c[0], "for x in xs { f(x) }");
+    }
+}

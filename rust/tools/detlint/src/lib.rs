@@ -1,0 +1,86 @@
+//! detlint — determinism & data-race static analysis for the hiku core.
+//!
+//! Enforces the determinism rulebook of DESIGN.md §12 over the Rust source
+//! tree: no unordered-container iteration in the deterministic core (R1),
+//! no wall-clock reads outside the allowlist (R2), no ambient randomness
+//! (R3), no float accumulation over unordered iteration in metrics merge
+//! paths (R4), and a counted, justified waiver grammar (R5). Run it as
+//!
+//! ```text
+//! cargo run -p detlint -- src
+//! ```
+//!
+//! from `rust/` (CI runs exactly this and uploads `detlint_report.json`).
+//! The lint is static and heuristic; the nightly ThreadSanitizer and Miri
+//! CI jobs are its dynamic complement (see EXPERIMENTS.md).
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use report::Report;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Scan one already-loaded source file into `report`.
+pub fn scan_source(path: &str, src: &str, report: &mut Report) {
+    let (findings, waivers, lines) = rules::scan_file(path, src);
+    report.files += 1;
+    report.lines += lines;
+    report.findings.extend(findings);
+    report.waivers.extend(waivers);
+}
+
+/// Scan every `.rs` file under the given roots (files are accepted too).
+/// The walk order, finding order, and waiver order are all sorted, so the
+/// report bytes are a pure function of the tree contents.
+pub fn scan_paths(roots: &[PathBuf]) -> io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = Report {
+        roots: roots.iter().map(|r| r.display().to_string()).collect(),
+        ..Report::default()
+    };
+    for file in &files {
+        let src = std::fs::read_to_string(file)?;
+        scan_source(&file.display().to_string(), &src, &mut report);
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report.waivers.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+/// Recursively gather `.rs` files, skipping `target/` and dot-directories.
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = std::fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(path)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for entry in entries {
+        let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name == "target" || name.starts_with('.') {
+            continue;
+        }
+        if entry.is_dir() {
+            collect_rs(&entry, out)?;
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! detlint CLI: scan source roots, print findings, write the JSON report.
+//!
+//! Exit codes: 0 — clean (every finding waived); 1 — unwaived findings;
+//! 2 — usage or I/O error. The report file is written in both the 0 and 1
+//! cases so CI can upload it as an artifact either way.
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: detlint [--report FILE] [--quiet] PATH...\n\
+  Scans every .rs file under each PATH against the determinism rulebook\n\
+  (DESIGN.md §12) and writes a machine-readable report.\n\
+    --report FILE  report path (default: detlint_report.json)\n\
+    --quiet, -q    suppress per-finding output; print the summary only\n\
+    --help, -h     show this help\n";
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut report_path = PathBuf::from("detlint_report.json");
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            "--quiet" | "-q" => quiet = true,
+            "--report" => {
+                let Some(p) = args.next() else {
+                    eprintln!("detlint: --report requires a file argument\n{USAGE}");
+                    return ExitCode::from(2);
+                };
+                report_path = PathBuf::from(p);
+            }
+            other if other.starts_with('-') => {
+                eprintln!("detlint: unknown option '{other}'\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            other => roots.push(PathBuf::from(other)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("detlint: no paths given\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    let report = match detlint::scan_paths(&roots) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let json = report.to_json().to_string_pretty() + "\n";
+    if let Err(e) = std::fs::write(&report_path, json) {
+        eprintln!("detlint: cannot write {}: {e}", report_path.display());
+        return ExitCode::from(2);
+    }
+
+    if quiet {
+        // Summary is the last line of the full rendering.
+        let text = report.render_text();
+        if let Some(last) = text.lines().last() {
+            println!("{last}");
+        }
+    } else {
+        print!("{}", report.render_text());
+    }
+    println!("detlint: report written to {}", report_path.display());
+
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,217 @@
+//! Aggregated scan results and the `detlint_report.json` schema.
+//!
+//! The JSON report is the machine-readable contract consumed by CI (the
+//! `rust-detlint` job uploads it as an artifact) and by EXPERIMENTS.md
+//! readers auditing the waiver inventory. It is rendered through
+//! `hiku::util::json` — objects are BTreeMap-backed, so the byte output is
+//! a pure function of the scan results.
+
+use crate::rules::{Finding, Waiver, RULES};
+use hiku::util::json::{obj, Json};
+
+/// The result of scanning a set of roots.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Root paths as passed on the command line.
+    pub roots: Vec<String>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Total physical lines scanned.
+    pub lines: usize,
+    /// Every finding, waived or not, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Every well-formed waiver encountered, sorted by (file, line).
+    pub waivers: Vec<Waiver>,
+}
+
+impl Report {
+    /// (total, waived, unwaived) counts for one rule.
+    pub fn rule_counts(&self, rule: &str) -> (usize, usize, usize) {
+        let total = self.findings.iter().filter(|f| f.rule == rule).count();
+        let waived = self.findings.iter().filter(|f| f.rule == rule && f.waived).count();
+        (total, waived, total - waived)
+    }
+
+    /// Findings not covered by a waiver — the failure set.
+    pub fn unwaived(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| !f.waived).collect()
+    }
+
+    /// True when nothing unwaived remains (exit code 0).
+    pub fn clean(&self) -> bool {
+        self.findings.iter().all(|f| f.waived)
+    }
+
+    /// Waivers no finding consumed. Reported (not failing): an unused
+    /// waiver means the code it excused was fixed or moved, and the
+    /// comment is now drift to clean up.
+    pub fn unused_waivers(&self) -> Vec<&Waiver> {
+        self.waivers.iter().filter(|w| !w.used).collect()
+    }
+
+    /// Build the `detlint_report.json` document.
+    pub fn to_json(&self) -> Json {
+        let rules = RULES
+            .iter()
+            .map(|r| {
+                let (total, waived, unwaived) = self.rule_counts(r);
+                (
+                    *r,
+                    obj(vec![
+                        ("total", total.into()),
+                        ("waived", waived.into()),
+                        ("unwaived", unwaived.into()),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut pairs = vec![
+                    ("rule", f.rule.into()),
+                    ("file", f.file.as_str().into()),
+                    ("line", f.line.into()),
+                    ("message", f.message.as_str().into()),
+                    ("snippet", f.snippet.as_str().into()),
+                    ("waived", f.waived.into()),
+                ];
+                if f.waived {
+                    pairs.push(("justification", f.justification.as_str().into()));
+                }
+                obj(pairs)
+            })
+            .collect::<Vec<Json>>();
+        let unused = self
+            .unused_waivers()
+            .iter()
+            .map(|w| {
+                obj(vec![("file", w.file.as_str().into()), ("line", w.line.into())])
+            })
+            .collect::<Vec<Json>>();
+        obj(vec![
+            ("version", 1u64.into()),
+            ("tool", "detlint".into()),
+            (
+                "roots",
+                Json::Arr(self.roots.iter().map(|r| r.as_str().into()).collect()),
+            ),
+            ("files_scanned", self.files.into()),
+            ("lines_scanned", self.lines.into()),
+            ("clean", self.clean().into()),
+            ("rules", obj(rules)),
+            (
+                "waivers",
+                obj(vec![
+                    ("valid", self.waivers.len().into()),
+                    (
+                        "used",
+                        self.waivers.iter().filter(|w| w.used).count().into(),
+                    ),
+                    ("unused", Json::Arr(unused)),
+                ]),
+            ),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Human-readable rendering for the terminal.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.waived {
+                out.push_str(&format!(
+                    "waived  {} {}:{} {} ({})\n",
+                    f.rule, f.file, f.line, f.message, f.justification
+                ));
+            } else {
+                out.push_str(&format!(
+                    "FAIL    {} {}:{} {}\n        {}\n",
+                    f.rule, f.file, f.line, f.message, f.snippet
+                ));
+            }
+        }
+        for w in self.unused_waivers() {
+            out.push_str(&format!(
+                "unused  waiver at {}:{} ({}) — no finding consumed it; remove the comment\n",
+                w.file,
+                w.line,
+                w.rules.join(",")
+            ));
+        }
+        let mut counts = Vec::new();
+        for r in RULES {
+            let (total, waived, _) = self.rule_counts(r);
+            if total > 0 {
+                counts.push(format!("{r} {total} ({waived} waived)"));
+            }
+        }
+        let summary =
+            if counts.is_empty() { "no findings".to_string() } else { counts.join(", ") };
+        let unwaived = self.unwaived().len();
+        out.push_str(&format!(
+            "detlint: {} files, {} lines scanned; {summary}; {unwaived} unwaived finding(s)\n",
+            self.files, self.lines
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, waived: bool) -> Finding {
+        Finding {
+            rule,
+            file: "f.rs".to_string(),
+            line: 3,
+            message: "m".to_string(),
+            snippet: "s".to_string(),
+            waived,
+            justification: if waived { "because tested".to_string() } else { String::new() },
+        }
+    }
+
+    #[test]
+    fn counts_and_clean() {
+        let mut r = Report::default();
+        assert!(r.clean());
+        r.findings.push(finding("R1", true));
+        r.findings.push(finding("R1", false));
+        r.findings.push(finding("R3", false));
+        assert_eq!(r.rule_counts("R1"), (2, 1, 1));
+        assert_eq!(r.rule_counts("R2"), (0, 0, 0));
+        assert_eq!(r.unwaived().len(), 2);
+        assert!(!r.clean());
+    }
+
+    #[test]
+    fn json_shape_is_stable_and_parseable() {
+        let mut r = Report {
+            roots: vec!["src".to_string()],
+            files: 2,
+            lines: 40,
+            ..Report::default()
+        };
+        r.findings.push(finding("R2", true));
+        let text = r.to_json().to_string_pretty();
+        let j = Json::parse(&text).expect("report must round-trip through the parser");
+        assert_eq!(j.get("version").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("tool").unwrap().as_str(), Some("detlint"));
+        assert_eq!(j.get("clean").unwrap().as_bool(), Some(true));
+        assert_eq!(j.at(&["rules", "R2", "waived"]).unwrap().as_u64(), Some(1));
+        assert_eq!(j.at(&["rules", "R5", "total"]).unwrap().as_u64(), Some(0));
+        assert_eq!(
+            j.at(&["findings", "0", "justification"]).unwrap().as_str(),
+            Some("because tested")
+        );
+        // Unwaived findings must not carry a justification key.
+        let mut r2 = Report::default();
+        r2.findings.push(finding("R1", false));
+        let j2 = Json::parse(&r2.to_json().to_string_pretty()).unwrap();
+        assert!(j2.at(&["findings", "0", "justification"]).is_none());
+        assert_eq!(j2.get("clean").unwrap().as_bool(), Some(false));
+    }
+}

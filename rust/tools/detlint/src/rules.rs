@@ -1,0 +1,628 @@
+//! The determinism rulebook (R1–R5) as token-level checks.
+//!
+//! Every headline number this reproduction reports — cold-start ratios,
+//! load-balance gains, bit-identity per (seed, shards) — rests on the
+//! determinism rules that DESIGN.md §12 writes down. This module enforces
+//! them mechanically over [`crate::lexer`] output:
+//!
+//! - **R1** — no `HashMap`/`HashSet` (or `BinaryHeap`) *iteration*
+//!   (`iter`/`keys`/`values`/`into_iter`/`drain`/`retain`/for-loops) in
+//!   the deterministic core. Map iteration order must come from `BTreeMap`
+//!   or an explicit sort.
+//! - **R2** — no `Instant::now`/`SystemTime::now` outside the wall-clock
+//!   allowlist (`server/`, `logging.rs`). Phase-profiling timers in the
+//!   sim engine carry inline waivers instead, so every site is visible in
+//!   the report.
+//! - **R3** — no ambient randomness anywhere (`thread_rng`,
+//!   `from_entropy`, `OsRng`, `getrandom`, `RandomState`, `rand::random`);
+//!   all RNG derives from `util/rng` seeded streams.
+//! - **R4** — no `f64` accumulation over unordered iteration in the
+//!   metrics merge paths (`stats.rs`, `metrics.rs`, `report/`): float
+//!   addition does not commute in rounding, so unordered sums break
+//!   bit-identity even when the set of addends is fixed.
+//! - **R5** — every waiver is `// detlint:allow(<rules>) -- <reason>`;
+//!   a malformed waiver (bad grammar, unknown rule, missing or trivial
+//!   justification) is itself a finding and waives nothing.
+//!
+//! The checks are heuristic by design (no type inference): container
+//! bindings are tracked per file from `name: HashMap<…>` ascriptions and
+//! `name = HashMap::new()` initializers, and iteration is matched against
+//! those names. A binding the heuristic cannot see escapes R1/R4 — the
+//! nightly TSan/Miri jobs are the dynamic backstop — but a finding it
+//! *does* report is precise enough to act on.
+
+use crate::lexer::{is_ident, is_ident_byte, split_lines, Line};
+use std::collections::BTreeMap;
+
+/// All rule identifiers, in report order.
+pub const RULES: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
+
+/// Rules a waiver may name. R5 findings are about waivers themselves and
+/// cannot be waived away.
+pub const WAIVABLE: [&str; 4] = ["R1", "R2", "R3", "R4"];
+
+/// The waiver marker scanned for inside comments.
+pub const WAIVER_MARK: &str = "detlint:allow";
+
+/// Unordered containers whose iteration order is not a pure function of
+/// the inserted data.
+const UNORDERED: [&str; 3] = ["HashMap", "HashSet", "BinaryHeap"];
+
+/// Iteration-shaped methods on the tracked containers.
+const ITER_METHODS: [&str; 11] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+    "extract_if",
+];
+
+/// Wall-clock tokens (R2).
+const R2_TOKENS: [&str; 2] = ["Instant::now", "SystemTime::now"];
+
+/// Ambient-randomness tokens (R3).
+const R3_TOKENS: [&str; 6] = [
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+    "getrandom",
+    "RandomState",
+    "rand::random",
+];
+
+/// Accumulation markers that upgrade an unordered iteration to R4 when
+/// found within three lines of the iteration site.
+const R4_ACCUM: [&str; 5] = ["+=", ".sum(", ".sum::<", ".fold(", ".product("];
+
+/// One diagnostic.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id (`"R1"`..`"R5"`).
+    pub rule: &'static str,
+    /// Path as given to the scanner.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+    /// Trimmed code (or comment text, for R5) from the offending line.
+    pub snippet: String,
+    /// True when covered by a valid `detlint:allow` waiver.
+    pub waived: bool,
+    /// The covering waiver's justification (empty when unwaived).
+    pub justification: String,
+}
+
+/// A parsed, well-formed waiver comment.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    /// Path of the file the waiver sits in.
+    pub file: String,
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// Rules it waives.
+    pub rules: Vec<String>,
+    /// Text after `--`.
+    pub justification: String,
+    /// Set once a finding consumes it (an unused waiver is drift).
+    pub used: bool,
+    /// True when the comment is the only thing on its line, in which case
+    /// it covers the next line instead of its own.
+    pub standalone: bool,
+}
+
+/// Which rule families apply to a file, derived from its module path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scope {
+    /// R1 (unordered iteration) applies: the deterministic core.
+    pub r1: bool,
+    /// R2 wall-clock reads are allowlisted here (`server/`, `logging.rs`).
+    pub r2_allowed: bool,
+    /// R4 (metrics merge float accumulation) applies.
+    pub r4: bool,
+}
+
+/// Classify `path` into rule scopes.
+///
+/// The module-relative path is whatever follows the last `src/` (or, for
+/// the self-test fixtures, `fixtures/`) component; its first segment —
+/// with any `.rs` suffix stripped — picks the scope:
+///
+/// - wall-clock-native modules (`server`, `runtime`, `logging`, `bench`,
+///   `main`) are exempt from R1; of those, only `server` and `logging`
+///   are also allowlisted for R2 (the runtime and the bench harness keep
+///   per-site waivers so their timers stay visible in the report);
+/// - `stats`, `metrics`, `report` are the metrics merge paths (R4);
+/// - everything else is deterministic core: R1 applies, R2 needs waivers.
+pub fn classify(path: &str) -> Scope {
+    let norm = path.replace('\\', "/");
+    let rel = if let Some((_, r)) = norm.rsplit_once("src/") {
+        r.to_string()
+    } else if let Some((_, r)) = norm.rsplit_once("fixtures/") {
+        r.to_string()
+    } else if let Some((_, f)) = norm.rsplit_once('/') {
+        f.to_string()
+    } else {
+        norm
+    };
+    let first = rel.split('/').next().unwrap_or("");
+    let first = first.strip_suffix(".rs").unwrap_or(first);
+    let wall_clock_native = matches!(first, "server" | "runtime" | "logging" | "bench" | "main");
+    Scope {
+        r1: !wall_clock_native,
+        r2_allowed: matches!(first, "server" | "logging"),
+        r4: matches!(first, "stats" | "metrics" | "report"),
+    }
+}
+
+/// Scan one file's source. Returns (findings, waivers, line count).
+/// Findings are in line order; waiver application has already run.
+pub fn scan_file(path: &str, src: &str) -> (Vec<Finding>, Vec<Waiver>, usize) {
+    let lines = split_lines(src);
+    let scope = classify(path);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waivers: Vec<Waiver> = Vec::new();
+
+    // Pass 1: waivers (and R5 findings for malformed ones).
+    for (idx, ln) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        match parse_waiver(&ln.comment) {
+            None => {}
+            Some(Ok((rules, justification))) => waivers.push(Waiver {
+                file: path.to_string(),
+                line: lineno,
+                rules,
+                justification,
+                used: false,
+                standalone: ln.code.trim().is_empty(),
+            }),
+            Some(Err(msg)) => findings.push(Finding {
+                rule: "R5",
+                file: path.to_string(),
+                line: lineno,
+                message: msg,
+                snippet: snip(ln.comment.trim()),
+                waived: false,
+                justification: String::new(),
+            }),
+        }
+    }
+
+    // Pass 2: container bindings, whole file (fields bind before methods).
+    let mut bindings: BTreeMap<String, &'static str> = BTreeMap::new();
+    for ln in &lines {
+        collect_bindings(&ln.code, &mut bindings);
+    }
+
+    // Pass 3: per-line rule checks.
+    for (idx, ln) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = &ln.code;
+        let mut push = |rule: &'static str, message: String| {
+            findings.push(Finding {
+                rule,
+                file: path.to_string(),
+                line: lineno,
+                message,
+                snippet: snip(code.trim()),
+                waived: false,
+                justification: String::new(),
+            });
+        };
+
+        // R1 / R4: iteration over tracked unordered containers.
+        let mut iters: Vec<(String, String)> = iter_calls(code);
+        if let Some(recv) = for_loop_receiver(code) {
+            iters.push((recv, "for-loop".to_string()));
+        }
+        for (recv, how) in iters {
+            let Some(kind) = bindings.get(recv.as_str()).copied() else { continue };
+            if scope.r1 {
+                push(
+                    "R1",
+                    format!(
+                        "{kind} iteration via {how} on `{recv}`: unordered iteration in the \
+                         deterministic core (use BTreeMap/BTreeSet or sort first)"
+                    ),
+                );
+            }
+            if scope.r4 {
+                let window: Vec<&str> = lines[idx..(idx + 3).min(lines.len())]
+                    .iter()
+                    .map(|l| l.code.as_str())
+                    .collect();
+                let window = window.join("\n");
+                if R4_ACCUM.iter().any(|m| window.contains(m)) {
+                    push(
+                        "R4",
+                        format!(
+                            "f64 accumulation over unordered {kind} iteration on `{recv}` in a \
+                             metrics merge path: float addition is order-sensitive in rounding"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // R2: wall-clock reads outside the allowlist.
+        if !scope.r2_allowed {
+            for tok in R2_TOKENS {
+                for _ in 0..count_tokens(code, tok) {
+                    push(
+                        "R2",
+                        format!(
+                            "`{tok}` outside the wall-clock allowlist (server/, logging.rs): \
+                             sim-path time must be virtual"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // R3: ambient randomness, banned tree-wide.
+        for tok in R3_TOKENS {
+            for _ in 0..count_tokens(code, tok) {
+                push(
+                    "R3",
+                    format!(
+                        "`{tok}`: ambient randomness; derive all RNG from util/rng seeded streams"
+                    ),
+                );
+            }
+        }
+    }
+
+    // Pass 4: apply waivers. A waiver covers findings on its own line, or
+    // — when it is a standalone comment — on the line directly below.
+    for f in &mut findings {
+        if f.rule == "R5" {
+            continue;
+        }
+        for w in &mut waivers {
+            if !w.rules.iter().any(|r| r == f.rule) {
+                continue;
+            }
+            if w.line == f.line || (w.standalone && w.line + 1 == f.line) {
+                f.waived = true;
+                f.justification = w.justification.clone();
+                w.used = true;
+                break;
+            }
+        }
+    }
+
+    (findings, waivers, lines.len())
+}
+
+/// Truncate a snippet to a bounded width for the report.
+fn snip(s: &str) -> String {
+    const MAX: usize = 160;
+    if s.chars().count() <= MAX {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(MAX).collect();
+        format!("{cut}…")
+    }
+}
+
+/// Parse a waiver out of a comment. `None`: no marker present. `Some(Err)`:
+/// marker present but malformed (an R5 finding). `Some(Ok)`: rules + reason.
+pub fn parse_waiver(comment: &str) -> Option<Result<(Vec<String>, String), String>> {
+    let p = comment.find(WAIVER_MARK)?;
+    let rest = comment[p + WAIVER_MARK.len()..].trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some(Err(format!("waiver is missing '(<rules>)' after {WAIVER_MARK}")));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(Err("waiver rule list is missing the closing ')'".to_string()));
+    };
+    let mut rules = Vec::new();
+    for raw in rest[..close].split(',') {
+        let r = raw.trim().to_string();
+        if !WAIVABLE.contains(&r.as_str()) {
+            return Some(Err(format!("waiver names unknown or unwaivable rule '{r}'")));
+        }
+        rules.push(r);
+    }
+    let tail = rest[close + 1..].trim_start();
+    let Some(just) = tail.strip_prefix("--") else {
+        return Some(Err("waiver is missing '-- <justification>'".to_string()));
+    };
+    let just = just.trim().to_string();
+    if just.len() < 8 {
+        return Some(Err(
+            "waiver justification is missing or too short (min 8 chars)".to_string(),
+        ));
+    }
+    Some(Ok((rules, just)))
+}
+
+/// Count whole-token occurrences of `tok` in `code` (neighbors must not be
+/// identifier characters, so `rand::random` does not match `random_range`).
+fn count_tokens(code: &str, tok: &str) -> usize {
+    let bytes = code.as_bytes();
+    let mut n = 0usize;
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(tok) {
+        let at = from + p;
+        let end = at + tok.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            n += 1;
+        }
+        from = end;
+    }
+    n
+}
+
+/// Find `.method(` iteration calls and resolve each receiver's last path
+/// segment (`self.index.iter()` → `index`). Chained-call receivers
+/// (`f().iter()`) are unresolvable and skipped.
+fn iter_calls(code: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for m in ITER_METHODS {
+        let needle = format!(".{m}(");
+        let mut from = 0usize;
+        while let Some(p) = code[from..].find(needle.as_str()) {
+            let at = from + p;
+            if let Some(recv) = last_ident_before(code, at) {
+                out.push((recv, format!(".{m}()")));
+            }
+            from = at + needle.len();
+        }
+    }
+    out
+}
+
+/// `for <pat> in <expr> {`: when `<expr>` is a bare identifier chain
+/// (optionally `&`/`&mut`-prefixed), return its last segment. Method-call
+/// expressions are left to [`iter_calls`] so nothing double-counts.
+fn for_loop_receiver(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    if !t.starts_with("for ") {
+        return None;
+    }
+    let pos = t.find(" in ")?;
+    let mut expr = t[pos + 4..].trim();
+    if let Some(brace) = expr.find('{') {
+        expr = expr[..brace].trim();
+    }
+    while let Some(rest) = expr.strip_prefix('&') {
+        expr = rest.trim_start();
+    }
+    if let Some(rest) = expr.strip_prefix("mut ") {
+        expr = rest.trim_start();
+    }
+    if expr.is_empty() || !expr.chars().all(|c| is_ident(c) || c == '.') {
+        return None;
+    }
+    let last = expr.rsplit('.').next().unwrap_or("");
+    if last.is_empty() || last.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(last.to_string())
+}
+
+/// The identifier immediately before byte position `at` (skipping spaces).
+fn last_ident_before(code: &str, at: usize) -> Option<String> {
+    let pre: Vec<char> = code[..at].chars().collect();
+    let mut i = pre.len();
+    while i > 0 && pre[i - 1].is_whitespace() {
+        i -= 1;
+    }
+    let start = ident_start(&pre, i);
+    if start == i {
+        return None;
+    }
+    let s: String = pre[start..i].iter().collect();
+    if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(s)
+}
+
+/// Start index of the identifier ending at `end` (== `end` when none).
+fn ident_start(pre: &[char], end: usize) -> usize {
+    let mut s = end;
+    while s > 0 && is_ident(pre[s - 1]) {
+        s -= 1;
+    }
+    s
+}
+
+/// Record container bindings on this line: `name: HashMap<…>` ascriptions
+/// (let/field/param, through `&`/`mut` and path-qualified types) and
+/// `name = HashMap::new()`-style initializers.
+fn collect_bindings(code: &str, out: &mut BTreeMap<String, &'static str>) {
+    let bytes = code.as_bytes();
+    for kind in UNORDERED {
+        let mut from = 0usize;
+        while let Some(p) = code[from..].find(kind) {
+            let at = from + p;
+            let end = at + kind.len();
+            let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+            let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+            if before_ok && after_ok {
+                if let Some(name) = binding_name_before(code, at) {
+                    out.insert(name, kind);
+                }
+            }
+            from = end;
+        }
+    }
+}
+
+/// Walk backwards from a container token to the identifier it is bound to,
+/// through `&`, `mut`, `dyn`, and `path::` qualifiers. `None` when the
+/// token is not in binding position (imports, return types, generics of a
+/// wrapper type, enum payloads, …).
+fn binding_name_before(code: &str, at: usize) -> Option<String> {
+    let pre: Vec<char> = code[..at].chars().collect();
+    let mut i = pre.len();
+    loop {
+        while i > 0 && pre[i - 1].is_whitespace() {
+            i -= 1;
+        }
+        if i == 0 {
+            return None;
+        }
+        let c = pre[i - 1];
+        if c == '&' {
+            i -= 1;
+            continue;
+        }
+        if c == ':' {
+            if i >= 2 && pre[i - 2] == ':' {
+                // `::` path separator — step over it and its leading segment.
+                i -= 2;
+                while i > 0 && pre[i - 1].is_whitespace() {
+                    i -= 1;
+                }
+                let s = ident_start(&pre, i);
+                if s == i {
+                    return None;
+                }
+                i = s;
+                continue;
+            }
+            // Type-ascription colon: the name is the identifier before it.
+            i -= 1;
+            while i > 0 && pre[i - 1].is_whitespace() {
+                i -= 1;
+            }
+            let s = ident_start(&pre, i);
+            if s == i {
+                return None;
+            }
+            return filter_name(pre[s..i].iter().collect());
+        }
+        if c == '=' {
+            // Assignment — but not `==`, `=>` (seen as '>' first), `+=`, ….
+            if i >= 2 && "=+-*/!<>&|^".contains(pre[i - 2]) {
+                return None;
+            }
+            i -= 1;
+            while i > 0 && pre[i - 1].is_whitespace() {
+                i -= 1;
+            }
+            let s = ident_start(&pre, i);
+            if s == i {
+                return None;
+            }
+            return filter_name(pre[s..i].iter().collect());
+        }
+        if is_ident(c) {
+            let s = ident_start(&pre, i);
+            let word: String = pre[s..i].iter().collect();
+            if word == "mut" || word == "dyn" || word == "ref" {
+                i = s;
+                continue;
+            }
+            return None;
+        }
+        return None;
+    }
+}
+
+/// Reject keywords and digit-leading captures as binding names.
+fn filter_name(name: String) -> Option<String> {
+    const KEYWORDS: [&str; 8] = ["let", "mut", "in", "if", "fn", "impl", "use", "return"];
+    if name.is_empty() || KEYWORDS.contains(&name.as_str()) {
+        return None;
+    }
+    if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_maps_modules_to_scopes() {
+        let core = classify("rust/src/sim/engine.rs");
+        assert!(core.r1 && !core.r2_allowed && !core.r4);
+        let server = classify("rust/src/server/mod.rs");
+        assert!(!server.r1 && server.r2_allowed && !server.r4);
+        let logging = classify("rust/src/logging.rs");
+        assert!(!logging.r1 && logging.r2_allowed);
+        let runtime = classify("rust/src/runtime/engine.rs");
+        assert!(!runtime.r1 && !runtime.r2_allowed, "runtime timers need waivers");
+        let stats = classify("rust/src/stats.rs");
+        assert!(stats.r1 && stats.r4);
+        let fixture = classify("tests/fixtures/sim/r1_bad.rs");
+        assert!(fixture.r1 && !fixture.r2_allowed);
+    }
+
+    fn bindings_of(code: &str) -> BTreeMap<String, &'static str> {
+        let mut b = BTreeMap::new();
+        collect_bindings(code, &mut b);
+        b
+    }
+
+    #[test]
+    fn binding_extraction_positive_cases() {
+        assert_eq!(bindings_of("pub index: HashMap<u64, u64>,").get("index"), Some(&"HashMap"));
+        assert_eq!(bindings_of("fn f(m: &mut HashMap<K, V>) {}").get("m"), Some(&"HashMap"));
+        assert_eq!(
+            bindings_of("let seen = HashSet::new();").get("seen"),
+            Some(&"HashSet"),
+        );
+        assert_eq!(
+            bindings_of("let m: std::collections::HashMap<K, V> = init();").get("m"),
+            Some(&"HashMap"),
+        );
+    }
+
+    #[test]
+    fn binding_extraction_negative_cases() {
+        assert!(bindings_of("use std::collections::HashMap;").is_empty());
+        assert!(bindings_of("use std::collections::{HashMap, HashSet};").is_empty());
+        assert!(bindings_of("fn f() -> HashMap<K, V> {").is_empty());
+        assert!(bindings_of("Heap(BinaryHeap<Entry>),").is_empty());
+        assert!(bindings_of("store: Store::Heap(BinaryHeap::new()),").is_empty());
+        assert!(bindings_of("if x == HashMap::new() {}").is_empty());
+    }
+
+    #[test]
+    fn iteration_detection_matches_bound_receivers_only() {
+        let calls = iter_calls("self.index.iter() ; plain.iter() ; f().keys()");
+        let names: Vec<&str> = calls.iter().map(|(r, _)| r.as_str()).collect();
+        assert_eq!(names, ["index", "plain"]);
+        assert_eq!(for_loop_receiver("for x in &self.seen {"), Some("seen".to_string()));
+        assert_eq!(for_loop_receiver("for x in self.seen.drain() {"), None);
+        assert_eq!(for_loop_receiver("for i in 0..n {"), Some("n".to_string()));
+        assert_eq!(for_loop_receiver("let x = y;"), None);
+    }
+
+    #[test]
+    fn waiver_grammar() {
+        assert!(parse_waiver("// ordinary comment").is_none());
+        let ok = parse_waiver("// detlint:allow(R1, R4) -- commutative u64 sum");
+        let (rules, just) = ok.unwrap().unwrap();
+        assert_eq!(rules, ["R1", "R4"]);
+        assert_eq!(just, "commutative u64 sum");
+        assert!(parse_waiver("// detlint:allow(R2)").unwrap().is_err());
+        assert!(parse_waiver("// detlint:allow(R9) -- not a rule").unwrap().is_err());
+        assert!(parse_waiver("// detlint:allow(R5) -- unwaivable").unwrap().is_err());
+        assert!(parse_waiver("// detlint:allow R2 -- no parens").unwrap().is_err());
+        assert!(parse_waiver("// detlint:allow(R2) -- short").unwrap().is_err());
+    }
+
+    #[test]
+    fn token_counting_respects_boundaries() {
+        assert_eq!(count_tokens("let t = Instant::now();", "Instant::now"), 1);
+        assert_eq!(count_tokens("xInstant::nowy", "Instant::now"), 0);
+        assert_eq!(count_tokens("rand::random_range(..)", "rand::random"), 0);
+        assert_eq!(count_tokens("a.then(Instant::now)", "Instant::now"), 1);
+    }
+}

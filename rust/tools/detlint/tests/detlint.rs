@@ -1,0 +1,239 @@
+//! Fixture-based self-tests for detlint.
+//!
+//! Acceptance contract (ISSUE 9): each of R1–R5 demonstrably trips on a
+//! known-bad fixture, waived fixtures count as waived, clean fixtures
+//! produce nothing, the JSON report shape is pinned, and the real `src/`
+//! tree scans clean (every finding waived, every waiver used).
+
+use detlint::report::Report;
+use detlint::scan_paths;
+use hiku::util::json::Json;
+use std::path::PathBuf;
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
+}
+
+fn scan(rel: &str) -> Report {
+    scan_paths(&[fixture(rel)]).expect("fixture scan must succeed")
+}
+
+#[test]
+fn r1_trips_on_every_iteration_form() {
+    let r = scan("sim/r1_bad.rs");
+    assert_eq!(r.rule_counts("R1"), (6, 0, 6), "iter/keys/values/for-in/retain/drain");
+    assert_eq!(r.findings.len(), 6);
+    assert!(!r.clean());
+}
+
+#[test]
+fn r1_waiver_is_counted_and_consumed() {
+    let r = scan("sim/r1_waived.rs");
+    assert_eq!(r.rule_counts("R1"), (1, 1, 0));
+    assert!(r.clean());
+    assert_eq!(r.waivers.len(), 1);
+    assert!(r.waivers[0].used);
+    assert!(r.unused_waivers().is_empty());
+}
+
+#[test]
+fn r1_clean_fixture_is_silent() {
+    let r = scan("sim/r1_clean.rs");
+    assert!(r.findings.is_empty(), "BTreeMap iteration and HashMap lookups are fine");
+}
+
+#[test]
+fn r2_trips_on_wall_clock_reads() {
+    let r = scan("sim/r2_bad.rs");
+    assert_eq!(r.rule_counts("R2"), (2, 0, 2), "Instant::now and SystemTime::now");
+}
+
+#[test]
+fn r2_waivers_cover_standalone_and_trailing_forms() {
+    let r = scan("sim/r2_waived.rs");
+    assert_eq!(r.rule_counts("R2"), (2, 2, 0));
+    assert!(r.clean());
+    assert_eq!(r.waivers.len(), 2);
+    assert!(r.waivers.iter().all(|w| w.used));
+}
+
+#[test]
+fn r2_is_allowlisted_in_server_scope() {
+    let r = scan("server/r2_clean.rs");
+    assert!(r.findings.is_empty(), "server/ owns real wall-clock time");
+}
+
+#[test]
+fn r3_trips_on_ambient_randomness() {
+    let r = scan("util/r3_bad.rs");
+    assert_eq!(r.rule_counts("R3"), (3, 0, 3), "thread_rng, from_entropy, RandomState");
+}
+
+#[test]
+fn r3_waiver_and_seeded_stream() {
+    let r = scan("util/r3_waived.rs");
+    assert_eq!(r.rule_counts("R3"), (1, 1, 0));
+    assert!(r.clean());
+    let r = scan("util/r3_clean.rs");
+    assert!(r.findings.is_empty(), "Pcg64::new(seed) is the sanctioned source");
+}
+
+#[test]
+fn r4_trips_alongside_r1_in_merge_paths() {
+    let r = scan("stats/r4_bad.rs");
+    assert_eq!(r.rule_counts("R1"), (1, 0, 1));
+    assert_eq!(r.rule_counts("R4"), (1, 0, 1), "float accumulation over unordered iter");
+    assert_eq!(r.findings.len(), 2);
+}
+
+#[test]
+fn r4_multi_rule_waiver_covers_both_findings() {
+    let r = scan("stats/r4_waived.rs");
+    assert_eq!(r.rule_counts("R1"), (1, 1, 0));
+    assert_eq!(r.rule_counts("R4"), (1, 1, 0));
+    assert!(r.clean());
+    assert_eq!(r.waivers.len(), 1, "one allow(R1,R4) comment covers both");
+    let r = scan("stats/r4_clean.rs");
+    assert!(r.findings.is_empty(), "the same loop over BTreeMap is fine");
+}
+
+#[test]
+fn r5_trips_on_malformed_waivers_which_waive_nothing() {
+    let r = scan("sim/r5_bad.rs");
+    assert_eq!(r.rule_counts("R5"), (2, 0, 2), "missing justification; unknown rule");
+    assert_eq!(r.rule_counts("R2"), (2, 0, 2), "malformed waivers must not excuse");
+    assert!(r.waivers.is_empty(), "malformed waivers are findings, not waivers");
+}
+
+#[test]
+fn r5_good_and_clean_fixtures() {
+    let r = scan("sim/r5_good.rs");
+    assert_eq!(r.rule_counts("R2"), (1, 1, 0));
+    assert!(r.clean());
+    let r = scan("sim/r5_clean.rs");
+    assert!(r.findings.is_empty());
+    assert!(r.waivers.is_empty());
+}
+
+#[test]
+fn masked_tokens_in_literals_and_comments_do_not_trip() {
+    let r = scan("sim/masked_clean.rs");
+    assert!(
+        r.findings.is_empty(),
+        "strings, raw strings, char literals, and comments must be invisible"
+    );
+}
+
+#[test]
+fn fixture_tree_aggregate_counts_are_exact() {
+    let r = scan_paths(&[fixture("")]).expect("fixture tree scan");
+    assert_eq!(r.files, 16);
+    assert!(r.lines > 100);
+    assert_eq!(r.rule_counts("R1"), (9, 2, 7));
+    assert_eq!(r.rule_counts("R2"), (7, 3, 4));
+    assert_eq!(r.rule_counts("R3"), (4, 1, 3));
+    assert_eq!(r.rule_counts("R4"), (2, 1, 1));
+    assert_eq!(r.rule_counts("R5"), (2, 0, 2));
+    assert_eq!(r.findings.len(), 24);
+    assert_eq!(r.waivers.len(), 6);
+    assert!(r.waivers.iter().all(|w| w.used), "every valid fixture waiver is consumed");
+    assert!(r.unused_waivers().is_empty());
+    // Findings are sorted by (file, line, rule) so the report is stable.
+    let keys: Vec<_> = r.findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+}
+
+#[test]
+fn json_report_shape_is_pinned() {
+    let r = scan_paths(&[fixture("")]).expect("fixture tree scan");
+    let text = r.to_json().to_string_pretty();
+    let j = Json::parse(&text).expect("report JSON must parse with the in-tree parser");
+    assert_eq!(j.get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(j.get("tool").unwrap().as_str(), Some("detlint"));
+    assert_eq!(j.get("clean").unwrap().as_bool(), Some(false));
+    assert_eq!(j.get("files_scanned").unwrap().as_u64(), Some(16));
+    assert_eq!(j.at(&["rules", "R1", "total"]).unwrap().as_u64(), Some(9));
+    assert_eq!(j.at(&["rules", "R1", "waived"]).unwrap().as_u64(), Some(2));
+    assert_eq!(j.at(&["rules", "R1", "unwaived"]).unwrap().as_u64(), Some(7));
+    assert_eq!(j.at(&["rules", "R5", "unwaived"]).unwrap().as_u64(), Some(2));
+    assert_eq!(j.at(&["waivers", "valid"]).unwrap().as_u64(), Some(6));
+    assert_eq!(j.at(&["waivers", "used"]).unwrap().as_u64(), Some(6));
+    assert_eq!(j.at(&["waivers", "unused"]).unwrap().as_arr().unwrap().len(), 0);
+    let findings = j.get("findings").unwrap().as_arr().unwrap();
+    assert_eq!(findings.len(), 24);
+    for f in findings {
+        assert!(f.get("rule").is_some());
+        assert!(f.get("file").is_some());
+        assert!(f.get("line").is_some());
+        assert!(f.get("message").is_some());
+        let waived = f.get("waived").unwrap().as_bool().unwrap();
+        assert_eq!(
+            f.get("justification").is_some(),
+            waived,
+            "justification key present iff waived"
+        );
+    }
+}
+
+#[test]
+fn repo_src_tree_scans_clean_with_every_waiver_used() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let r = scan_paths(&[src]).expect("src tree scan");
+    assert!(r.files > 20, "the whole library tree is in scope");
+    let unwaived = r.unwaived();
+    assert!(
+        unwaived.is_empty(),
+        "src/ must be detlint-clean; unwaived: {:?}",
+        unwaived
+            .iter()
+            .map(|f| format!("{} {}:{}", f.rule, f.file, f.line))
+            .collect::<Vec<_>>()
+    );
+    // The only sanctioned wall-clock reads outside server/logging are the
+    // phase-profiling and bench/runtime timers, each carrying a waiver.
+    let (r2_total, r2_waived, r2_unwaived) = r.rule_counts("R2");
+    assert!(r2_total >= 12, "the known profiler/bench/runtime timer sites");
+    assert_eq!(r2_waived, r2_total);
+    assert_eq!(r2_unwaived, 0);
+    assert_eq!(r.rule_counts("R1"), (0, 0, 0), "no unordered iteration in the core");
+    assert_eq!(r.rule_counts("R3"), (0, 0, 0), "no ambient randomness anywhere");
+    assert_eq!(r.rule_counts("R5"), (0, 0, 0), "no malformed waivers");
+    assert!(r.unused_waivers().is_empty(), "stale waivers are drift; remove them");
+}
+
+#[test]
+fn cli_exit_codes_and_report_file() {
+    let bin = env!("CARGO_BIN_EXE_detlint");
+    let bad_report = std::env::temp_dir().join("detlint_selftest_bad.json");
+    let out = std::process::Command::new(bin)
+        .arg("--report")
+        .arg(&bad_report)
+        .arg(fixture("sim/r1_bad.rs"))
+        .output()
+        .expect("run detlint on a bad fixture");
+    assert_eq!(out.status.code(), Some(1), "unwaived findings exit 1");
+    let j = Json::parse(&std::fs::read_to_string(&bad_report).unwrap()).unwrap();
+    assert_eq!(j.get("clean").unwrap().as_bool(), Some(false));
+    assert_eq!(j.at(&["rules", "R1", "unwaived"]).unwrap().as_u64(), Some(6));
+    let _ = std::fs::remove_file(&bad_report);
+
+    let clean_report = std::env::temp_dir().join("detlint_selftest_clean.json");
+    let out = std::process::Command::new(bin)
+        .arg("--report")
+        .arg(&clean_report)
+        .arg("--quiet")
+        .arg(fixture("sim/r1_clean.rs"))
+        .output()
+        .expect("run detlint on a clean fixture");
+    assert_eq!(out.status.code(), Some(0), "clean tree exits 0");
+    let j = Json::parse(&std::fs::read_to_string(&clean_report).unwrap()).unwrap();
+    assert_eq!(j.get("clean").unwrap().as_bool(), Some(true));
+    let _ = std::fs::remove_file(&clean_report);
+
+    let out = std::process::Command::new(bin)
+        .output()
+        .expect("run detlint with no paths");
+    assert_eq!(out.status.code(), Some(2), "usage error exits 2");
+}

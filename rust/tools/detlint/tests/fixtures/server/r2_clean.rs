@@ -1,0 +1,9 @@
+// Fixture: the server scope is allowlisted for wall-clock reads
+// (0 findings).
+
+use std::time::Instant;
+
+pub fn request_timer() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().subsec_nanos() as u64
+}

@@ -1,0 +1,11 @@
+// Fixture: banned tokens inside literals and comments must not trip
+// (0 findings). A real stray Instant::now() would, but this comment must
+// not, and neither must any of the masked occurrences below.
+
+pub fn masked() -> String {
+    let s = "Instant::now() thread_rng HashMap";
+    let raw = r#"SystemTime::now "from_entropy" RandomState"#;
+    let c = 'r';
+    /* block comment: OsRng rand::random getrandom */
+    format!("{s}{raw}{c}")
+}

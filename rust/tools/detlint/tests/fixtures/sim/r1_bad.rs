@@ -1,0 +1,30 @@
+// Fixture: unordered-container iteration in the deterministic core.
+// Every iteration site below must trip R1 (6 findings).
+
+use std::collections::{HashMap, HashSet};
+
+pub struct State {
+    pub index: HashMap<u64, u64>,
+    pub seen: HashSet<u64>,
+}
+
+impl State {
+    pub fn churn(&mut self) -> u64 {
+        let mut acc = 0u64;
+        for (k, v) in self.index.iter() {
+            acc = acc.wrapping_add(k ^ v);
+        }
+        for k in self.index.keys() {
+            acc = acc.wrapping_add(*k);
+        }
+        for v in self.index.values() {
+            acc = acc.wrapping_add(*v);
+        }
+        for x in &self.seen {
+            acc = acc.wrapping_add(*x);
+        }
+        self.seen.retain(|x| x % 2 == 0);
+        self.index.drain();
+        acc
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: ordered iteration and non-iterating HashMap use are fine
+// (0 findings).
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn sum_ordered(m: &BTreeMap<u64, u64>) -> u64 {
+    let mut acc = 0u64;
+    for (_, v) in m.iter() {
+        acc = acc.wrapping_add(*v);
+    }
+    acc
+}
+
+pub fn lookup(cache: &mut HashMap<u64, u64>, k: u64) -> u64 {
+    let hit = cache.get(&k).copied().unwrap_or(0);
+    cache.insert(k, hit + 1);
+    cache.len() as u64
+}

@@ -1,0 +1,13 @@
+// Fixture: a justified waiver covering an unordered iteration (1 finding,
+// waived).
+
+use std::collections::HashMap;
+
+pub fn total(counts: &HashMap<u64, u64>) -> u64 {
+    let mut acc = 0u64;
+    // detlint:allow(R1) -- u64 addition is commutative; order cannot leak
+    for v in counts.values() {
+        acc = acc.wrapping_add(*v);
+    }
+    acc
+}

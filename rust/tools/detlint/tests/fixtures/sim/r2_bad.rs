@@ -1,0 +1,10 @@
+// Fixture: wall-clock reads in the deterministic core (2 findings).
+
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> u128 {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    let _ = wall;
+    t0.elapsed().as_nanos()
+}

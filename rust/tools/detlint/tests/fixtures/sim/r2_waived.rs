@@ -1,0 +1,12 @@
+// Fixture: both waiver placements — standalone line covering the line
+// below, and a trailing comment covering its own line (2 findings, both
+// waived).
+
+use std::time::Instant;
+
+pub fn profile_block() -> u64 {
+    // detlint:allow(R2) -- fixture: phase profiler wall-clock, write-only
+    let t0 = Instant::now();
+    let t1 = Instant::now(); // detlint:allow(R2) -- fixture: same timer pair
+    t1.duration_since(t0).subsec_nanos() as u64
+}

@@ -1,0 +1,12 @@
+// Fixture: malformed waivers are findings themselves (2 × R5) and waive
+// nothing, so the wall-clock reads stay unwaived too (2 × R2).
+
+use std::time::Instant;
+
+pub fn bad_waivers() -> u64 {
+    // detlint:allow(R2)
+    let t0 = Instant::now();
+    // detlint:allow(R9) -- R9 is not a rule in the book
+    let t1 = Instant::now();
+    t1.duration_since(t0).subsec_nanos() as u64
+}

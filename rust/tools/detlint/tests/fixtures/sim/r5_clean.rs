@@ -1,0 +1,5 @@
+// Fixture: nothing to waive, nothing to find (0 findings, 0 waivers).
+
+pub fn pure(a: u64, b: u64) -> u64 {
+    a.wrapping_mul(31).wrapping_add(b)
+}

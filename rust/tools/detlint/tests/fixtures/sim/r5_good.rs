@@ -1,0 +1,10 @@
+// Fixture: a well-formed waiver with a real justification (1 finding,
+// waived).
+
+use std::time::Instant;
+
+pub fn good_waiver() -> u64 {
+    // detlint:allow(R2) -- fixture: demonstrates the valid waiver grammar
+    let t0 = Instant::now();
+    t0.elapsed().subsec_nanos() as u64
+}

@@ -1,0 +1,13 @@
+// Fixture: float accumulation over unordered iteration in a metrics merge
+// path. One site, two findings: R1 (unordered iteration) and R4 (order-
+// sensitive f64 accumulation).
+
+use std::collections::HashMap;
+
+pub fn merge_mean(bins: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0f64;
+    for v in bins.values() {
+        total += *v;
+    }
+    total
+}

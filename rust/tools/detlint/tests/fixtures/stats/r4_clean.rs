@@ -1,0 +1,12 @@
+// Fixture: ordered merge — the deterministic way to accumulate floats
+// (0 findings).
+
+use std::collections::BTreeMap;
+
+pub fn merge_mean(bins: &BTreeMap<u64, f64>) -> f64 {
+    let mut total = 0.0f64;
+    for v in bins.values() {
+        total += *v;
+    }
+    total
+}

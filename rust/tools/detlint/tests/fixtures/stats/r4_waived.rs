@@ -1,0 +1,13 @@
+// Fixture: one waiver naming two rules covers both findings on the line
+// below (R1 + R4, both waived).
+
+use std::collections::HashMap;
+
+pub fn merge_sum(bins: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0f64;
+    // detlint:allow(R1,R4) -- fixture: merge proven order-insensitive by test
+    for v in bins.values() {
+        total += *v;
+    }
+    total
+}

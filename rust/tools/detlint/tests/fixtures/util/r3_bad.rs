@@ -1,0 +1,8 @@
+// Fixture: ambient randomness, banned tree-wide (3 findings).
+
+pub fn entropy_soup() -> u64 {
+    let mut rng = rand::thread_rng();
+    let fast = SmallRng::from_entropy();
+    let hasher = RandomState::new();
+    seed_of(&mut rng, &fast, &hasher)
+}

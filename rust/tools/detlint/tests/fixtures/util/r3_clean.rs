@@ -1,0 +1,9 @@
+// Fixture: all randomness derives from the seeded in-tree streams
+// (0 findings).
+
+use hiku::util::rng::Pcg64;
+
+pub fn draw(seed: u64) -> u64 {
+    let mut rng = Pcg64::new(seed);
+    rng.next_u64()
+}

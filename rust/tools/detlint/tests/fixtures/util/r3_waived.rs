@@ -1,0 +1,7 @@
+// Fixture: a waived ambient-randomness site (1 finding, waived).
+
+pub fn jitter_seed() -> u64 {
+    // detlint:allow(R3) -- fixture: nondeterministic jitter is the point here
+    let x = rand::thread_rng().next_u64();
+    x
+}
