@@ -1,0 +1,122 @@
+//! End-to-end HTTP front-door bench: the in-tree ingress
+//! (`server::http::HttpIngress`) under the open-loop loadgen
+//! (`workload::loadgen::run_http_loadgen`) over real sockets on
+//! localhost — the full client → parser → router → stub-worker →
+//! response path, DESIGN.md §13.
+//!
+//! Runs on the stub runtime backend (`runtime.backend = "stub"`), so no
+//! AOT artifacts are needed: workers replay Table-I cold/warm latencies
+//! scaled down by `runtime.stub_speedup`. The headline numbers are
+//! sustained throughput and end-to-end latency percentiles, plus the
+//! conservation identity on both sides of the socket: every issued
+//! request is accounted for by the loadgen (completed + rejected +
+//! failed + transport errors) AND by the server (arrivals == completed
+//! + rejected + failed once drained).
+//!
+//! Emits machine-readable **`BENCH_http.json`** — the committed
+//! experiment recipe is in EXPERIMENTS.md §HTTP.
+//!
+//! Usage:
+//!   cargo bench --bench http_ingress            # 10k requests @ 1000 rps
+//!   cargo bench --bench http_ingress -- --quick # CI smoke: 1k @ 500 rps
+
+use hiku::config::Config;
+use hiku::server::http::HttpIngress;
+use hiku::util::json::{obj, Json};
+use hiku::workload::loadgen::{run_http_loadgen, LoadgenOpts};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (requests, rate_rps) = if quick { (1_000usize, 500.0) } else { (10_000usize, 1_000.0) };
+
+    let mut cfg = Config::default();
+    cfg.runtime.backend = "stub".into();
+    cfg.scheduler.name = "hiku".into();
+    cfg.dispatch.mode = "pull".into();
+    cfg.cluster.workers = 4;
+    cfg.http.io_threads = 16;
+    cfg.validate().expect("bench config");
+
+    let ingress = HttpIngress::start(&cfg, "127.0.0.1:0").expect("start ingress");
+    let addr = ingress.local_addr().to_string();
+    println!(
+        "# http ingress bench: {requests} requests @ {rate_rps:.0} rps open-loop on {addr} \
+         ({} stub workers, pull dispatch)",
+        cfg.cluster.workers
+    );
+
+    let opts = LoadgenOpts {
+        addr,
+        requests,
+        rate_rps,
+        connections: 8,
+        num_functions: cfg.num_functions(),
+        seed: 42,
+        ..Default::default()
+    };
+    let report = run_http_loadgen(&opts).expect("loadgen run");
+    let mut m = ingress.stop().expect("ingress stop");
+
+    // Conservation, client side: every scheduled request is accounted.
+    assert!(report.accounted(), "loadgen accounting must balance");
+    assert_eq!(report.sent, requests, "loadgen must issue the whole schedule");
+    assert_eq!(report.transport_errors, 0, "no dropped connections expected on localhost");
+    // Conservation, server side: after drain, every admitted arrival
+    // resolved (completed, rejected at admission, or failed).
+    assert_eq!(
+        m.arrivals,
+        m.completed + m.rejected + m.failed,
+        "server-side conservation identity must hold after drain"
+    );
+    assert_eq!(m.completed, report.completed, "both sides must agree on completions");
+
+    println!(
+        "loadgen : {} sent, {} completed, {} rejected, {} failed in {:.2} s -> {:.0} rps",
+        report.sent,
+        report.completed,
+        report.rejected,
+        report.failed,
+        report.duration_s,
+        report.throughput_rps()
+    );
+    println!(
+        "latency : mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        report.mean_ms(),
+        report.percentile_ms(50.0),
+        report.percentile_ms(95.0),
+        report.percentile_ms(99.0)
+    );
+    println!(
+        "server  : {} arrivals, cold rate {:.1}%, prewarm spawned/hit {}/{}",
+        m.arrivals,
+        m.cold_rate() * 100.0,
+        m.prewarm_spawned,
+        m.prewarm_hits
+    );
+
+    let out = obj(vec![
+        ("bench", "http".into()),
+        ("quick", quick.into()),
+        ("requests", requests.into()),
+        ("rate_rps", rate_rps.into()),
+        ("connections", opts.connections.into()),
+        ("workers", cfg.cluster.workers.into()),
+        ("io_threads", cfg.http.io_threads.into()),
+        ("throughput_rps", report.throughput_rps().into()),
+        ("duration_s", report.duration_s.into()),
+        ("mean_ms", report.mean_ms().into()),
+        ("p50_ms", report.percentile_ms(50.0).into()),
+        ("p95_ms", report.percentile_ms(95.0).into()),
+        ("p99_ms", report.percentile_ms(99.0).into()),
+        ("completed", report.completed.into()),
+        ("rejected", report.rejected.into()),
+        ("failed", report.failed.into()),
+        ("transport_errors", report.transport_errors.into()),
+        ("server_arrivals", m.arrivals.into()),
+        ("server_cold_rate", m.cold_rate().into()),
+        ("loadgen", report.to_json()),
+    ]);
+    let path = "BENCH_http.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -1,10 +1,10 @@
 //! The inert policy and the explicit-event-list policy.
 //!
 //! `Scheduled` is the closed-loop home of the repo's original
-//! externally-scripted scaling (`run_scaled` / `run_scale_events`): the
-//! event list is pre-scheduled at run start at its *exact* times (not
-//! quantized to the control tick), so replays are bit-identical to the
-//! legacy entry points.
+//! externally-scripted scaling (the long-removed `run_scaled` /
+//! `run_scale_events` entry points): the event list is pre-scheduled at
+//! run start at its *exact* times (not quantized to the control tick),
+//! so replays were bit-identical to the legacy entry points.
 
 use super::{AutoscaleObs, AutoscalePolicy, ScaleDecision};
 

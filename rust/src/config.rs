@@ -484,11 +484,66 @@ pub struct RuntimeConfig {
     /// Extra sandbox-initialization latency added to a real cold start, in
     /// ms (models container/runtime startup on top of XLA compilation).
     pub cold_extra_ms: f64,
+    /// Execution backend for the real-time server: `"pjrt"` (default)
+    /// runs the AOT-compiled payloads and needs the artifact set;
+    /// `"stub"` models each execution as a sleep of the function's
+    /// Table-I cold/warm latency (scaled by `stub_speedup`) behind the
+    /// same per-worker LRU payload cache — no artifacts required, so
+    /// the HTTP smoke tests and benches run on a bare checkout.
+    pub backend: String,
+    /// Divisor applied to the stub backend's cold/warm sleep times
+    /// (`backend = "stub"` only). 1.0 replays Table-I latencies in real
+    /// time; the default 100 keeps smoke tests and CI fast while
+    /// preserving the cold/warm ratio the scheduler reacts to.
+    pub stub_speedup: f64,
 }
 
 impl Default for RuntimeConfig {
     fn default() -> Self {
-        Self { artifacts_dir: "artifacts".into(), cold_extra_ms: 0.0 }
+        Self {
+            artifacts_dir: "artifacts".into(),
+            cold_extra_ms: 0.0,
+            backend: "pjrt".into(),
+            stub_speedup: 100.0,
+        }
+    }
+}
+
+/// HTTP front-door settings (the `[http]` section): the in-tree
+/// HTTP/1.1 ingress that `hiku serve --http ADDR` binds in front of the
+/// router (DESIGN.md §13). Entirely `std::net` — no external crates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpConfig {
+    /// Default listen address for `hiku serve --http` when the flag is
+    /// given without a value. Port 0 binds an ephemeral port (tests).
+    pub addr: String,
+    /// Connection-handler thread pool size. Each keep-alive connection
+    /// occupies one handler until it closes, so this bounds concurrent
+    /// connections; excess accepted connections wait in the hand-off
+    /// queue until a handler frees up.
+    pub io_threads: usize,
+    /// Honor HTTP keep-alive (default). `false` forces
+    /// `Connection: close` on every response — one request per
+    /// connection, useful when debugging with one-shot clients.
+    pub keep_alive: bool,
+    /// Maximum accepted request body size in bytes; larger requests are
+    /// refused with `413 Payload Too Large`.
+    pub max_body_bytes: usize,
+    /// Socket read timeout in ms for idle keep-alive connections. A
+    /// handler whose connection stays silent this long closes it and
+    /// returns to the pool (prevents dead peers from pinning handlers).
+    pub read_timeout_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".into(),
+            io_threads: 32,
+            keep_alive: true,
+            max_body_bytes: 65_536,
+            read_timeout_ms: 5_000,
+        }
     }
 }
 
@@ -551,6 +606,8 @@ pub struct Config {
     pub sim: SimConfig,
     /// PJRT runtime settings (real-time serving mode).
     pub runtime: RuntimeConfig,
+    /// HTTP front-door ingress (real-time serving mode).
+    pub http: HttpConfig,
     /// Observability: sketch metrics, trace sampling, phase profiling.
     pub telemetry: TelemetryConfig,
     /// Deterministic fault injection (crashes, stragglers, init failures).
@@ -641,6 +698,18 @@ impl Config {
                 obj(vec![
                     ("artifacts_dir", self.runtime.artifacts_dir.as_str().into()),
                     ("cold_extra_ms", self.runtime.cold_extra_ms.into()),
+                    ("backend", self.runtime.backend.as_str().into()),
+                    ("stub_speedup", self.runtime.stub_speedup.into()),
+                ]),
+            ),
+            (
+                "http",
+                obj(vec![
+                    ("addr", self.http.addr.as_str().into()),
+                    ("io_threads", self.http.io_threads.into()),
+                    ("keep_alive", self.http.keep_alive.into()),
+                    ("max_body_bytes", self.http.max_body_bytes.into()),
+                    ("read_timeout_ms", self.http.read_timeout_ms.into()),
                 ]),
             ),
             (
@@ -862,6 +931,34 @@ impl Config {
             if let Some(v) = r.get("cold_extra_ms") {
                 cfg.runtime.cold_extra_ms =
                     v.as_f64().ok_or_else(|| missing("runtime.cold_extra_ms"))?;
+            }
+            if let Some(v) = r.get("backend") {
+                cfg.runtime.backend =
+                    v.as_str().ok_or_else(|| missing("runtime.backend"))?.to_string();
+            }
+            if let Some(v) = r.get("stub_speedup") {
+                cfg.runtime.stub_speedup =
+                    v.as_f64().ok_or_else(|| missing("runtime.stub_speedup"))?;
+            }
+        }
+        if let Some(h) = j.get("http") {
+            if let Some(v) = h.get("addr") {
+                cfg.http.addr = v.as_str().ok_or_else(|| missing("http.addr"))?.to_string();
+            }
+            if let Some(v) = h.get("io_threads") {
+                cfg.http.io_threads =
+                    v.as_u64().ok_or_else(|| missing("http.io_threads"))? as usize;
+            }
+            if let Some(v) = h.get("keep_alive") {
+                cfg.http.keep_alive = v.as_bool().ok_or_else(|| missing("http.keep_alive"))?;
+            }
+            if let Some(v) = h.get("max_body_bytes") {
+                cfg.http.max_body_bytes =
+                    v.as_u64().ok_or_else(|| missing("http.max_body_bytes"))? as usize;
+            }
+            if let Some(v) = h.get("read_timeout_ms") {
+                cfg.http.read_timeout_ms =
+                    v.as_u64().ok_or_else(|| missing("http.read_timeout_ms"))?;
             }
         }
         if let Some(f) = j.get("faults") {
@@ -1089,6 +1186,23 @@ impl Config {
             "runtime.cold_extra_ms" => {
                 self.runtime.cold_extra_ms = value.parse().map_err(|_| bad(path, value))?
             }
+            "runtime.backend" => self.runtime.backend = value.to_string(),
+            "runtime.stub_speedup" => {
+                self.runtime.stub_speedup = value.parse().map_err(|_| bad(path, value))?
+            }
+            "http.addr" => self.http.addr = value.to_string(),
+            "http.io_threads" => {
+                self.http.io_threads = value.parse().map_err(|_| bad(path, value))?
+            }
+            "http.keep_alive" => {
+                self.http.keep_alive = value.parse().map_err(|_| bad(path, value))?
+            }
+            "http.max_body_bytes" => {
+                self.http.max_body_bytes = value.parse().map_err(|_| bad(path, value))?
+            }
+            "http.read_timeout_ms" => {
+                self.http.read_timeout_ms = value.parse().map_err(|_| bad(path, value))?
+            }
             "telemetry.sketch" => {
                 self.telemetry.sketch = value.parse().map_err(|_| bad(path, value))?
             }
@@ -1244,6 +1358,26 @@ impl Config {
             // sharded coordinator only sees epoch summaries (DESIGN.md §6).
             return e("autoscale.policy=predictive requires the serial engine (sim.shards=1)");
         }
+        match self.runtime.backend.as_str() {
+            "pjrt" | "stub" => {}
+            other => {
+                return Err(ConfigError(format!(
+                    "unknown runtime.backend '{other}' (expected pjrt or stub)"
+                )))
+            }
+        }
+        if !(self.runtime.stub_speedup.is_finite() && self.runtime.stub_speedup > 0.0) {
+            return e("runtime.stub_speedup must be finite and > 0");
+        }
+        if self.http.io_threads == 0 {
+            return e("http.io_threads must be >= 1");
+        }
+        if self.http.max_body_bytes == 0 {
+            return e("http.max_body_bytes must be >= 1");
+        }
+        if self.http.read_timeout_ms == 0 {
+            return e("http.read_timeout_ms must be >= 1");
+        }
         if self.telemetry.sketch_alpha <= 0.0 || self.telemetry.sketch_alpha >= 0.5 {
             return e("telemetry.sketch_alpha must be in (0, 0.5)");
         }
@@ -1329,6 +1463,40 @@ mod tests {
         assert!(c.apply_override("nope=1").is_err());
         assert!(c.apply_override("cluster.workers=abc").is_err());
         assert!(c.apply_override("cluster.workers").is_err());
+    }
+
+    #[test]
+    fn http_and_backend_roundtrip_and_validation() {
+        let mut c = Config::default();
+        c.apply_override("runtime.backend=stub").unwrap();
+        c.apply_override("runtime.stub_speedup=50").unwrap();
+        c.apply_override("http.addr=0.0.0.0:9000").unwrap();
+        c.apply_override("http.io_threads=8").unwrap();
+        c.apply_override("http.keep_alive=false").unwrap();
+        c.apply_override("http.max_body_bytes=1024").unwrap();
+        c.apply_override("http.read_timeout_ms=250").unwrap();
+        assert_eq!(c.runtime.backend, "stub");
+        assert_eq!(c.runtime.stub_speedup, 50.0);
+        assert_eq!(c.http.addr, "0.0.0.0:9000");
+        assert_eq!(c.http.io_threads, 8);
+        assert!(!c.http.keep_alive);
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+
+        assert!(c.apply_override("runtime.backend=fpga").is_err());
+        let mut c = Config::default();
+        c.runtime.stub_speedup = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.http.io_threads = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.http.max_body_bytes = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.http.read_timeout_ms = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!   sweep      run the paper's evaluation sweep (schedulers x seeds x VUs)
 //!   trace      synthesize + analyze an Azure-like trace (Figs 4-6)
 //!   autoscale  compare autoscale policies x schedulers on the bursty trace
-//!   serve      real-time serving demo on the PJRT runtime (AOT artifacts)
+//!   serve      real-time serving demo (PJRT or stub runtime; --http for ingress)
+//!   loadgen    open-loop HTTP load generator against a running ingress
 //!   config     print the default config as JSON
 //!
 //! Examples:
@@ -19,6 +20,8 @@
 //!   hiku trace --universe 10000 --minutes 30
 //!   hiku autoscale --policies none,reactive,predictive --schedulers hiku,lc
 //!   hiku serve --scheduler hiku --requests 200
+//!   hiku serve --http 127.0.0.1:8080 --set runtime.backend=stub --dispatch pull
+//!   hiku loadgen --addr 127.0.0.1:8080 --requests 10000 --rate 1000
 
 use hiku::config::Config;
 use hiku::logging;
@@ -35,12 +38,13 @@ fn main() {
         "trace" => cmd_trace(rest),
         "autoscale" => cmd_autoscale(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "config" => cmd_config(rest),
         "export" => cmd_export(rest),
         "" | "--help" | "-h" | "help" => {
             eprintln!(
                 "hiku — pull-based scheduling for serverless computing (CCGRID'25 reproduction)\n\n\
-                 USAGE:\n  hiku <sim|sweep|trace|autoscale|serve|config|export> [OPTIONS]\n\n\
+                 USAGE:\n  hiku <sim|sweep|trace|autoscale|serve|loadgen|config|export> [OPTIONS]\n\n\
                  Run `hiku <subcommand> --help` for options."
             );
             0
@@ -293,8 +297,9 @@ fn cmd_autoscale(argv: &[String]) -> i32 {
 }
 
 fn cmd_serve(argv: &[String]) -> i32 {
-    let cli = config_cli(Cli::new("hiku serve", "real-time PJRT serving demo"))
-        .opt("requests", Some("100"), "requests to issue")
+    let cli = config_cli(Cli::new("hiku serve", "real-time serving demo (add --http for ingress)"))
+        .opt("requests", Some("100"), "requests to issue (closed-loop mode)")
+        .opt("http", None, "bind the HTTP front door on ADDR and serve until killed")
         .opt("trace-out", None, "directory for trace.csv + trace.chrome.json");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -310,6 +315,23 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    if let Some(addr) = args.get("http") {
+        // Ingress mode: bind the front door and serve until the process
+        // is killed. `[http]` keys (io_threads, keep-alive, body cap,
+        // read timeout) come from the config / --set overrides.
+        let ingress = match hiku::server::http::HttpIngress::start(&cfg, addr) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        println!("listening on http://{}", ingress.local_addr());
+        println!("routes: POST /invoke/{{id}}  POST /prewarm/{{id}}  GET /summary  GET /healthz");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     let requests = args.parse_u64("requests").unwrap_or(100) as usize;
     match hiku::server::serve_n_requests(&cfg, requests) {
         Ok(mut m) => {
@@ -319,6 +341,61 @@ fn cmd_serve(argv: &[String]) -> i32 {
                     eprintln!("error: {e}");
                     return 1;
                 }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_loadgen(argv: &[String]) -> i32 {
+    let cli = Cli::new("hiku loadgen", "open-loop HTTP load generator (k6-style)")
+        .opt("addr", Some("127.0.0.1:8080"), "ingress address to hammer")
+        .opt("requests", Some("1000"), "total requests to issue")
+        .opt("rate", Some("200"), "mean arrival rate in requests/second")
+        .opt("connections", Some("8"), "concurrent keep-alive connections")
+        .opt("functions", Some("40"), "function-id universe (must match the server)")
+        .opt("zipf", Some("2.05"), "Zipf skew for function popularity")
+        .opt("seed", Some("42"), "schedule seed (same seed = same schedule)")
+        .flag("trace", "pace arrivals from the bursty Azure-like trace instead of Poisson")
+        .opt("json", None, "also write the report JSON to this file");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.0.contains("USAGE") { 0 } else { 2 };
+        }
+    };
+    let opts = hiku::workload::loadgen::LoadgenOpts {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        requests: args.parse_usize("requests").unwrap_or(1000),
+        rate_rps: args.parse_f64("rate").unwrap_or(200.0),
+        connections: args.parse_usize("connections").unwrap_or(8),
+        num_functions: args.parse_usize("functions").unwrap_or(40),
+        zipf_s: args.parse_f64("zipf").unwrap_or(2.05),
+        seed: args.parse_u64("seed").unwrap_or(42),
+        use_trace: args.has_flag("trace"),
+    };
+    match hiku::workload::loadgen::run_http_loadgen(&opts) {
+        Ok(report) => {
+            let json = report.to_json();
+            println!("{}", json.to_string_pretty());
+            if let Some(path) = args.get("json") {
+                if let Err(e) = std::fs::write(path, json.to_string_pretty()) {
+                    eprintln!("error: writing {path}: {e}");
+                    return 1;
+                }
+            }
+            if !report.accounted() {
+                eprintln!("error: request accounting does not balance");
+                return 1;
+            }
+            if report.transport_errors > 0 {
+                eprintln!("error: {} transport errors", report.transport_errors);
+                return 1;
             }
             0
         }

@@ -151,10 +151,82 @@ pub struct SchedCtx<'a> {
     pub slots: Option<SlotCtx<'a>>,
 }
 
+/// Builder for [`SchedCtx`]: the one construction path shared by the
+/// sim engine, the sharded engine and the real-time server router.
+///
+/// `SchedCtx` accreted optional router signals across releases
+/// (`min_index`, `dispatch`, `avoid`, `slots`) and every construction
+/// site spelled the full struct literal — so each new signal touched
+/// all of them. The builder takes each optional signal as an `Option`
+/// (routers usually hold one conditionally), so adding a future signal
+/// means one new method here, defaulted everywhere else.
+///
+/// ```
+/// # use hiku::scheduler::SchedCtx;
+/// # use hiku::util::rng::Pcg64;
+/// let loads = [0u32, 2, 1];
+/// let mut rng = Pcg64::new(7);
+/// let ctx = SchedCtx::builder(&loads, &mut rng).avoid(None).build();
+/// assert!(ctx.min_index.is_none() && ctx.dispatch.is_none());
+/// ```
+pub struct SchedCtxBuilder<'a> {
+    loads: &'a [u32],
+    min_index: Option<&'a MinLoadIndex>,
+    rng: &'a mut Pcg64,
+    dispatch: Option<DispatchCtx>,
+    avoid: Option<&'a [bool]>,
+    slots: Option<SlotCtx<'a>>,
+}
+
+impl<'a> SchedCtxBuilder<'a> {
+    /// Attach the router's incremental min-load index (`None` keeps the
+    /// linear-scan fallback — bit-identical semantics, different cost).
+    pub fn min_index(mut self, idx: Option<&'a MinLoadIndex>) -> Self {
+        self.min_index = idx;
+        self
+    }
+
+    /// Attach pull-dispatch context (`None` means push semantics).
+    pub fn dispatch(mut self, d: Option<DispatchCtx>) -> Self {
+        self.dispatch = d;
+        self
+    }
+
+    /// Attach the router's avoid mask (dead ∪ draining workers).
+    pub fn avoid(mut self, mask: Option<&'a [bool]>) -> Self {
+        self.avoid = mask;
+        self
+    }
+
+    /// Attach the slot-level load view (core-granular routers).
+    pub fn slots(mut self, s: Option<SlotCtx<'a>>) -> Self {
+        self.slots = s;
+        self
+    }
+
+    /// Finish: every unset signal stays `None`.
+    pub fn build(self) -> SchedCtx<'a> {
+        SchedCtx {
+            loads: self.loads,
+            min_index: self.min_index,
+            rng: self.rng,
+            dispatch: self.dispatch,
+            avoid: self.avoid,
+            slots: self.slots,
+        }
+    }
+}
+
 impl<'a> SchedCtx<'a> {
     /// Context without an index (tests, the real-time server).
     pub fn new(loads: &'a [u32], rng: &'a mut Pcg64) -> Self {
         Self { loads, min_index: None, rng, dispatch: None, avoid: None, slots: None }
+    }
+
+    /// Start a [`SchedCtxBuilder`] over the mandatory state (the active
+    /// load slice and the scheduler RNG stream).
+    pub fn builder(loads: &'a [u32], rng: &'a mut Pcg64) -> SchedCtxBuilder<'a> {
+        SchedCtxBuilder { loads, min_index: None, rng, dispatch: None, avoid: None, slots: None }
     }
 
     /// Attach pull-dispatch context (router pending-queue state).

@@ -1,0 +1,371 @@
+//! In-tree HTTP/1.1 front door for the real-time server (DESIGN.md §13):
+//! a `std::net::TcpListener` ingress routing real traffic through the
+//! [`Server`](super::Server) lifecycle API. Zero external dependencies —
+//! no tokio, no hyper; the request parser, the connection pool and the
+//! response writer all live in this file.
+//!
+//! Threading model: one acceptor thread pushes accepted connections onto
+//! a `Mutex<VecDeque> + Condvar` hand-off queue; `http.io_threads`
+//! handler threads pop connections and own them until close (keep-alive
+//! loop with a read timeout so dead peers cannot pin a handler). Each
+//! in-flight request blocks its handler on [`ServerClient::invoke`], so
+//! `io_threads` bounds both concurrent connections and concurrent
+//! HTTP-admitted requests.
+//!
+//! Routes:
+//!
+//! | method & path        | reply                                          |
+//! |----------------------|------------------------------------------------|
+//! | `POST /invoke/{id}`  | `200` completed / `429` rejected / `500` failed |
+//! | `POST /prewarm/{id}` | `202` speculative warmup queued                |
+//! | `GET /summary`       | `200` live run summary (JSON)                  |
+//! | `GET /healthz`       | `200 {"ok":true}`                              |
+//!
+//! plus `400` (malformed request), `404` (unknown route or function id),
+//! `413` (body over `http.max_body_bytes`) and `503` (server shut down).
+
+use super::{InvokeOutcome, Server, ServerClient};
+use crate::config::{Config, HttpConfig};
+use crate::metrics::RunMetrics;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A running HTTP ingress: the listener, its acceptor + handler threads,
+/// and the [`Server`] they front. Binding an ephemeral port
+/// (`"127.0.0.1:0"`) and reading [`HttpIngress::local_addr`] makes the
+/// ingress directly usable from in-process tests and benches.
+pub struct HttpIngress {
+    server: Option<Server>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    pool: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// The connection hand-off queue between the acceptor and the handlers.
+type ConnQueue = Arc<(Mutex<VecDeque<TcpStream>>, Condvar)>;
+
+impl HttpIngress {
+    /// Start a [`Server`] for `cfg` and bind the HTTP front door on
+    /// `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an ephemeral
+    /// port). Handler-pool size, keep-alive, body cap and read timeout
+    /// come from `cfg.http`.
+    pub fn start(cfg: &Config, addr: &str) -> Result<HttpIngress, String> {
+        let server = Server::start(cfg)?;
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: ConnQueue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+
+        let mut pool = Vec::new();
+        for i in 0..cfg.http.io_threads.max(1) {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            let client = server.client();
+            let hcfg = cfg.http.clone();
+            pool.push(
+                std::thread::Builder::new()
+                    .name(format!("http-io-{i}"))
+                    .spawn(move || handler_loop(&queue, &stop, &client, &hcfg))
+                    .map_err(|e| format!("spawn handler: {e}"))?,
+            );
+        }
+        let acceptor = {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("http-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if let Ok(stream) = conn {
+                            let (lock, cv) = &*queue;
+                            lock.lock().expect("conn queue poisoned").push_back(stream);
+                            cv.notify_one();
+                        }
+                    }
+                })
+                .map_err(|e| format!("spawn acceptor: {e}"))?
+        };
+        crate::log_info!(
+            "server",
+            "http ingress listening on {} ({} handler threads)",
+            local,
+            cfg.http.io_threads.max(1)
+        );
+        Ok(HttpIngress { server: Some(server), addr: local, stop, acceptor: Some(acceptor), pool })
+    }
+
+    /// The bound listen address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A new client handle into the fronted [`Server`] (for in-process
+    /// callers that want to bypass the socket).
+    pub fn client(&self) -> ServerClient {
+        self.server.as_ref().expect("ingress active").client()
+    }
+
+    /// Stop accepting, join the handler pool, drain outstanding requests
+    /// and shut the fronted server down, returning the run's metrics.
+    pub fn stop(mut self) -> Result<RunMetrics, String> {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor with a wake-up connection to ourselves;
+        // handlers drain it (instant EOF) and observe the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.pool.drain(..) {
+            let _ = h.join();
+        }
+        let server = self.server.take().ok_or_else(|| "ingress already stopped".to_string())?;
+        server.drain()?;
+        server.shutdown()
+    }
+}
+
+impl Drop for HttpIngress {
+    fn drop(&mut self) {
+        // Best-effort: release the acceptor so its thread can exit even
+        // if `stop()` was never called. The fronted `Server` tears itself
+        // down via its own Drop.
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Handler thread body: pop connections off the hand-off queue and own
+/// each until it closes. Exits when the stop flag is set and the queue
+/// is empty.
+fn handler_loop(queue: &ConnQueue, stop: &AtomicBool, client: &ServerClient, cfg: &HttpConfig) {
+    let (lock, cv) = &**queue;
+    loop {
+        let conn = {
+            let mut q = lock.lock().expect("conn queue poisoned");
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break Some(c);
+                }
+                if stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (guard, _) =
+                    cv.wait_timeout(q, Duration::from_millis(100)).expect("conn queue poisoned");
+                q = guard;
+            }
+        };
+        let Some(stream) = conn else { return };
+        let _ = handle_connection(stream, client, cfg, stop);
+    }
+}
+
+/// One parsed HTTP request (the subset the front door understands).
+struct Request {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    /// The request body. Admission/invoke routes ignore it today, but
+    /// the parser must consume it to keep the keep-alive stream framed.
+    #[allow(dead_code)]
+    body: Vec<u8>,
+}
+
+enum ReadError {
+    /// Socket error or read timeout — close the connection silently.
+    Io,
+    /// Syntactically invalid request — answer 400 and close.
+    Malformed(&'static str),
+    /// Body over `http.max_body_bytes` — answer 413 and close.
+    TooLarge,
+}
+
+/// Serve one connection: keep-alive request loop with per-read timeout.
+fn handle_connection(
+    stream: TcpStream,
+    client: &ServerClient,
+    cfg: &HttpConfig,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms.max(1))))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    loop {
+        let req = match read_request(&mut reader, cfg.max_body_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close (EOF between requests)
+            Err(ReadError::Io) => return Ok(()), // timeout/reset: drop quietly
+            Err(ReadError::Malformed(why)) => {
+                let body = format!("{{\"error\":\"{why}\"}}");
+                let _ = write_response(&mut out, 400, "Bad Request", body.as_bytes(), false);
+                return Ok(());
+            }
+            Err(ReadError::TooLarge) => {
+                let body = b"{\"error\":\"body too large\"}";
+                let _ = write_response(&mut out, 413, "Payload Too Large", body, false);
+                return Ok(());
+            }
+        };
+        let keep = cfg.keep_alive && req.keep_alive && !stop.load(Ordering::SeqCst);
+        let (status, reason, body) = route(client, &req);
+        write_response(&mut out, status, reason, body.as_bytes(), keep)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+/// Read and parse one HTTP/1.x request off the connection. `Ok(None)`
+/// means the peer closed cleanly between requests.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    max_body: usize,
+) -> Result<Option<Request>, ReadError> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(_) => return Err(ReadError::Io),
+    }
+    let line = line.trim_end();
+    if line.is_empty() {
+        return Err(ReadError::Malformed("empty request line"));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = match parts.next() {
+        Some(p) => p.to_string(),
+        None => return Err(ReadError::Malformed("missing path")),
+    };
+    let version = match parts.next() {
+        Some(v) => v,
+        None => return Err(ReadError::Malformed("missing version")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Malformed("unsupported protocol version"));
+    }
+    let http10 = version == "HTTP/1.0";
+    // HTTP/1.1 defaults to keep-alive; 1.0 must opt in.
+    let mut keep_alive = !http10;
+    let mut content_length = 0usize;
+    for _ in 0..128 {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) => return Err(ReadError::Malformed("truncated headers")),
+            Ok(_) => {}
+            Err(_) => return Err(ReadError::Io),
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            if content_length > max_body {
+                return Err(ReadError::TooLarge);
+            }
+            let mut body = vec![0u8; content_length];
+            if reader.read_exact(&mut body).is_err() {
+                return Err(ReadError::Io);
+            }
+            return Ok(Some(Request { method, path, keep_alive, body }));
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = match value.parse() {
+                    Ok(n) => n,
+                    Err(_) => return Err(ReadError::Malformed("bad content-length")),
+                };
+            } else if name.eq_ignore_ascii_case("connection") {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+        }
+    }
+    Err(ReadError::Malformed("too many headers"))
+}
+
+/// Dispatch one parsed request to the router API and render the reply.
+fn route(client: &ServerClient, req: &Request) -> (u16, &'static str, String) {
+    let path = req.path.split('?').next().unwrap_or("");
+    match req.method.as_str() {
+        "GET" if path == "/healthz" => (200, "OK", "{\"ok\":true}".to_string()),
+        "GET" if path == "/summary" => match client.summary() {
+            Ok(j) => (200, "OK", j.to_string_compact()),
+            Err(e) => (503, "Service Unavailable", err_body(&e)),
+        },
+        "POST" => {
+            if let Some(id) = path.strip_prefix("/invoke/") {
+                match parse_fn(client, id) {
+                    None => (404, "Not Found", err_body("unknown function")),
+                    Some(f) => match client.invoke(f) {
+                        Ok(InvokeOutcome::Completed { worker, cold, latency_s }) => (
+                            200,
+                            "OK",
+                            format!(
+                                "{{\"outcome\":\"completed\",\"function\":{f},\"worker\":{worker},\
+                                 \"cold\":{cold},\"latency_ms\":{:.3}}}",
+                                latency_s * 1000.0
+                            ),
+                        ),
+                        Ok(InvokeOutcome::Rejected) => {
+                            (429, "Too Many Requests", "{\"outcome\":\"rejected\"}".to_string())
+                        }
+                        Ok(InvokeOutcome::Failed) => {
+                            (500, "Internal Server Error", "{\"outcome\":\"failed\"}".to_string())
+                        }
+                        Err(e) => (503, "Service Unavailable", err_body(&e)),
+                    },
+                }
+            } else if let Some(id) = path.strip_prefix("/prewarm/") {
+                match parse_fn(client, id) {
+                    None => (404, "Not Found", err_body("unknown function")),
+                    Some(f) => match client.prewarm(f) {
+                        Ok(()) => (202, "Accepted", "{\"outcome\":\"prewarm\"}".to_string()),
+                        Err(e) => (503, "Service Unavailable", err_body(&e)),
+                    },
+                }
+            } else {
+                (404, "Not Found", err_body("no such route"))
+            }
+        }
+        _ => (404, "Not Found", err_body("no such route")),
+    }
+}
+
+/// Parse a path segment as an in-range function id.
+fn parse_fn(client: &ServerClient, seg: &str) -> Option<usize> {
+    seg.parse::<usize>().ok().filter(|&f| f < client.num_functions())
+}
+
+/// A minimal JSON error body (the message is always internal text —
+/// no user input is echoed, so no escaping is needed).
+fn err_body(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", msg.replace('"', "'"))
+}
+
+/// Write one HTTP/1.1 response with a JSON body.
+fn write_response(
+    out: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        out,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        body.len()
+    )?;
+    out.write_all(body)?;
+    out.flush()
+}

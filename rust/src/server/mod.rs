@@ -1,32 +1,57 @@
 //! Real-time serving backend: scheduler (router) thread + worker threads
-//! executing the AOT-compiled PJRT payloads. This is the end-to-end
-//! validation path — the same Scheduler trait and metrics as the simulator,
-//! but with wall-clock time and real XLA compilation as the cold start.
+//! executing the AOT-compiled PJRT payloads (or their latency-model
+//! stubs). This is the end-to-end validation path — the same Scheduler
+//! trait and metrics as the simulator, but with wall-clock time and real
+//! XLA compilation as the cold start.
 //!
 //! Topology (vLLM-router-like leader/worker):
 //!
 //! ```text
-//!   router thread ──ExecMsg──▶ worker 0 thread (PJRT engine + LRU cache)
-//!        ▲  │                  worker 1 thread
-//!        │  └─────ExecMsg────▶ ...
-//!        └──Response(+evictions)─────────────┘
+//!   clients ──RouterMsg::Invoke──▶ router thread ──ExecMsg──▶ worker 0 (engine + LRU cache)
+//!   (HTTP ingress, [`ServerClient`])     ▲  │                 worker 1
+//!                                        │  └──────ExecMsg──▶ ...
+//!                                        └─RouterMsg::Worker(Response)──┘
 //! ```
 //!
 //! Workers are OS threads with `std::sync::mpsc` channels (no tokio is
 //! vendored in this image; the request path is compute-bound so a
-//! thread-per-worker model is the right shape anyway).
+//! thread-per-worker model is the right shape anyway). The router owns
+//! one unified [`RouterMsg`] receiver multiplexing client commands and
+//! worker responses — `std::sync::mpsc` has no `select`, so a single
+//! channel is the only way to block on both.
+//!
+//! The public surface is the [`Server`] lifecycle API: `Server::start`
+//! brings the cluster up, [`ServerClient`] handles issue requests from
+//! any thread (the HTTP front door in [`http`] is one such client), and
+//! `Server::shutdown` tears the cluster down and returns the run's
+//! [`RunMetrics`]. [`serve_n_requests`] survives as a thin closed-loop
+//! compatibility wrapper over that API.
+//!
+//! Execution backends (`runtime.backend`): `"pjrt"` runs the AOT
+//! artifact set; `"stub"` models each execution as a sleep of the
+//! function's Table-I cold/warm latency (scaled by
+//! `runtime.stub_speedup`) behind the same per-worker LRU payload
+//! cache — no artifacts required, so HTTP smoke tests, benches and CI
+//! run on a bare checkout.
 
-use crate::autoscale::{make_policy, AutoscaleObs, AutoscalePolicy as _};
+pub mod http;
+
+use crate::autoscale::{make_policy, AutoscaleObs, AutoscalePolicy};
 use crate::config::Config;
 use crate::dispatch::PendingQueue;
 use crate::faults::{fault_coin, retry_backoff, FaultPlan};
 use crate::metrics::RunMetrics;
 use crate::runtime::{Engine, Manifest};
-use crate::scheduler::{make_scheduler, Decision, DispatchCtx, Pull, SchedCtx};
+use crate::scheduler::{
+    make_scheduler, Decision, DispatchCtx, Pull, SchedCtx, SchedCtxBuilder, Scheduler,
+};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::Workload;
 use crate::workload::spec::FunctionRegistry;
-use std::sync::mpsc;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Request sent to a worker thread.
@@ -42,6 +67,9 @@ struct ExecMsg {
     /// way the simulator multiplies execution durations. Zero when fault
     /// injection is off.
     delay: Duration,
+    /// Speculative pre-warm: execute purely to populate the worker's
+    /// cache. No request is waiting on the result.
+    prewarm: bool,
 }
 
 /// Worker -> router response.
@@ -51,9 +79,347 @@ struct Response {
     function: usize,
     cold: bool,
     digest: [f32; 2],
-    /// Function ids evicted from this worker's cache (by payload name
-    /// mapping; see `payload_to_functions`).
+    /// Payload names evicted from this worker's cache.
     evicted_payloads: Vec<String>,
+    /// Echo of [`ExecMsg::prewarm`].
+    prewarm: bool,
+}
+
+/// Everything the router thread can receive: client commands and worker
+/// responses share one channel (`std::sync::mpsc` has no `select`).
+enum RouterMsg {
+    /// Admit-and-execute one request for `function`; the outcome is sent
+    /// on `reply` when the request resolves.
+    Invoke { function: usize, reply: mpsc::Sender<InvokeOutcome> },
+    /// Speculatively warm `function` on one worker (anti-affinity spread).
+    Prewarm { function: usize },
+    /// Snapshot the live metrics as a summary JSON object.
+    Summary { reply: mpsc::Sender<Json> },
+    /// Reply (with `()`) once no admitted request is outstanding.
+    Drain { reply: mpsc::Sender<()> },
+    /// Stop the router loop; workers are joined and metrics finalized.
+    Shutdown,
+    /// A worker's execution result (or its fatal error).
+    Worker(Box<Result<Response, String>>),
+}
+
+/// How one admitted-or-refused request resolved, as observed by the
+/// issuing client.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InvokeOutcome {
+    /// The request executed to completion.
+    Completed {
+        /// Worker that produced the result.
+        worker: usize,
+        /// Whether the execution was a cold start.
+        cold: bool,
+        /// End-to-end latency (arrival at the router to response), seconds.
+        latency_s: f64,
+    },
+    /// Admission refused (queue-cap overflow or scheduler reject).
+    Rejected,
+    /// The request exhausted its fault retry budget.
+    Failed,
+}
+
+/// Cloneable handle issuing requests into a running [`Server`]'s router.
+/// Every method is synchronous: it blocks the calling thread until the
+/// router answers, so each concurrent in-flight request needs its own
+/// thread (the HTTP handler pool, the loadgen connections, a VU thread).
+#[derive(Clone)]
+pub struct ServerClient {
+    cmd_tx: mpsc::Sender<RouterMsg>,
+    functions: usize,
+}
+
+impl ServerClient {
+    /// Issue one request for `function` and block until it resolves.
+    ///
+    /// Errors only on lifecycle misuse: an out-of-range function id or a
+    /// server that shut down mid-request. Scheduling refusals and fault
+    /// losses are values ([`InvokeOutcome::Rejected`] /
+    /// [`InvokeOutcome::Failed`]), not errors.
+    pub fn invoke(&self, function: usize) -> Result<InvokeOutcome, String> {
+        if function >= self.functions {
+            return Err(format!(
+                "unknown function id {function} (workload has {})",
+                self.functions
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.cmd_tx
+            .send(RouterMsg::Invoke { function, reply: tx })
+            .map_err(|_| "server is shut down".to_string())?;
+        rx.recv().map_err(|_| "server closed before the request resolved".to_string())
+    }
+
+    /// Ask the router to speculatively warm `function` on one worker
+    /// (placement-aware: least-loaded live worker not already warm for
+    /// its payload). Fire-and-forget; a no-op when every live worker is
+    /// already warm or warming.
+    pub fn prewarm(&self, function: usize) -> Result<(), String> {
+        if function >= self.functions {
+            return Err(format!(
+                "unknown function id {function} (workload has {})",
+                self.functions
+            ));
+        }
+        self.cmd_tx
+            .send(RouterMsg::Prewarm { function })
+            .map_err(|_| "server is shut down".to_string())
+    }
+
+    /// Snapshot the run's live summary (the simulator's summary keys plus
+    /// `arrivals`, `failed` and `outstanding`).
+    pub fn summary(&self) -> Result<Json, String> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd_tx
+            .send(RouterMsg::Summary { reply: tx })
+            .map_err(|_| "server is shut down".to_string())?;
+        rx.recv().map_err(|_| "server closed before answering".to_string())
+    }
+
+    /// Block until no admitted request is outstanding.
+    pub fn drain(&self) -> Result<(), String> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd_tx
+            .send(RouterMsg::Drain { reply: tx })
+            .map_err(|_| "server is shut down".to_string())?;
+        rx.recv().map_err(|_| "server closed before draining".to_string())
+    }
+
+    /// Number of functions in the served workload (valid ids are
+    /// `0..num_functions()`).
+    pub fn num_functions(&self) -> usize {
+        self.functions
+    }
+}
+
+/// A running real-time cluster: router thread + worker threads, brought
+/// up by [`Server::start`] and torn down by [`Server::shutdown`] (which
+/// returns the run's [`RunMetrics`]). Requests come in through
+/// [`ServerClient`] handles — `Server`'s own `invoke`/`drain`/`summary`
+/// are conveniences over an internal client.
+pub struct Server {
+    client: ServerClient,
+    router: Option<std::thread::JoinHandle<Result<RunMetrics, String>>>,
+}
+
+impl Server {
+    /// Start the cluster described by `cfg`: spawn the worker pool (PJRT
+    /// or stub per `runtime.backend`), the router thread, and return the
+    /// running server. Fails fast if the PJRT artifact set is missing.
+    pub fn start(cfg: &Config) -> Result<Server, String> {
+        let registry = FunctionRegistry::functionbench(cfg.workload.copies);
+        // Each function copy maps to its base app's payload artifact.
+        let payload_of: Vec<String> =
+            (0..registry.len()).map(|f| registry.app(f).name.to_string()).collect();
+        let stub = cfg.runtime.backend == "stub";
+        if !stub {
+            let manifest = Manifest::load(&cfg.runtime.artifacts_dir)?;
+            for p in &payload_of {
+                if manifest.get(p).is_none() {
+                    return Err(format!(
+                        "artifact for payload '{p}' missing; run `make artifacts`"
+                    ));
+                }
+            }
+        }
+
+        // Autoscaling (reactive/predictive): spawn the full `max_workers`
+        // thread pool up front but only route to the `active` prefix; the
+        // policy moves the boundary. The `scheduled` policy is sim-only
+        // (its exact-time replay has no meaning against wall clock) and
+        // behaves like `none` here.
+        let autoscaling = matches!(cfg.autoscale.policy.as_str(), "reactive" | "predictive");
+        let workers = if autoscaling {
+            cfg.autoscale.max_workers.max(cfg.cluster.workers)
+        } else {
+            cfg.cluster.workers
+        };
+        let active = cfg.cluster.workers.min(workers);
+        // Cache capacity from the memory pool: one executable per ~256 MB
+        // of configured sandbox memory (same pressure model as the
+        // simulator).
+        let capacity = ((cfg.cluster.mem_mb / 256).max(1) as usize).min(registry.len());
+
+        // Distinct payload latency specs for the stub backend.
+        let payload_specs: Vec<(String, f64, f64)> = {
+            let mut v: Vec<(String, f64, f64)> = Vec::new();
+            for f in 0..registry.len() {
+                let app = registry.app(f);
+                if !v.iter().any(|(n, _, _)| n == app.name) {
+                    v.push((app.name.to_string(), app.cold_ms, app.warm_ms));
+                }
+            }
+            v
+        };
+
+        let (tx, rx) = mpsc::channel::<RouterMsg>();
+        let mut work_tx = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let (wtx, wrx) = mpsc::channel::<ExecMsg>();
+            handles.push(if stub {
+                spawn_stub_worker(
+                    w,
+                    capacity,
+                    payload_specs.clone(),
+                    cfg.runtime.cold_extra_ms,
+                    cfg.runtime.stub_speedup,
+                    wrx,
+                    tx.clone(),
+                )
+            } else {
+                spawn_worker(w, cfg.runtime.artifacts_dir.clone(), capacity, wrx, tx.clone())
+            });
+            work_tx.push(wtx);
+        }
+
+        crate::log_info!(
+            "server",
+            "starting {} {} workers ({} active, cache capacity {}), scheduler {}, autoscale {}",
+            workers,
+            cfg.runtime.backend,
+            active,
+            capacity,
+            cfg.scheduler.name,
+            cfg.autoscale.policy
+        );
+        let scheduler = make_scheduler(&cfg.scheduler, active)?;
+        let policy = make_policy(&cfg.autoscale)?;
+        let mean_exec_s: Vec<f64> =
+            (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect();
+
+        // Imbalance columns track workers that have ever been active (the
+        // simulator's add_worker convention) — not the idle thread pool.
+        // The telemetry surface matches the simulator's: sketch mode,
+        // lifecycle tracing (span times are wall-clock seconds since
+        // server start), and deterministic hash-gate sampling by rid.
+        let mut metrics = RunMetrics::with_telemetry(
+            &cfg.scheduler.name,
+            active,
+            cfg.workload.vus,
+            1.0, // duration finalized at shutdown (wall-clock)
+            &cfg.telemetry,
+        );
+        metrics.record_scale(0.0, active);
+        metrics.faults_enabled = cfg.faults.enabled;
+        let faults_on = cfg.faults.enabled;
+        let plan = if faults_on {
+            FaultPlan::generate(&cfg.faults, workers, cfg.workload.duration_s, cfg.workload.seed)
+        } else {
+            FaultPlan::default()
+        };
+
+        let functions = registry.len();
+        let cap_f = cfg.dispatch.caps_dense(functions);
+        let pending_q = PendingQueue::with_layout(functions, &cfg.dispatch.weights_sparse());
+        let router = Router {
+            cfg: cfg.clone(),
+            registry,
+            payload_of,
+            scheduler,
+            policy,
+            mean_exec_s,
+            rx,
+            work_tx,
+            handles,
+            workers,
+            active,
+            autoscaling,
+            last_tick: Instant::now(),
+            sched_rng: Pcg64::new(cfg.workload.seed ^ 0x5EED),
+            metrics,
+            imbalance_cols: active,
+            start: Instant::now(),
+            loads: vec![0u32; workers],
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            outstanding: 0,
+            arrival: Vec::new(),
+            dispatched: Vec::new(),
+            fn_of: Vec::new(),
+            attempts: Vec::new(),
+            reply_of: Vec::new(),
+            pull: cfg.pull_dispatch(),
+            fair: cfg.dispatch.fair,
+            pending_q,
+            cap_f,
+            deadlines: Vec::new(),
+            inflight_f: vec![0usize; functions],
+            cold_lat_ewma: vec![0.0f64; functions],
+            warm_lat_ewma: vec![0.0f64; functions],
+            faults_on,
+            plan,
+            next_crash: 0,
+            next_recover: 0,
+            next_strag: 0,
+            dead: vec![false; workers],
+            last_crash: vec![None; workers],
+            slow: vec![1.0f64; workers],
+            retry_at: Vec::new(),
+            warm_sets: vec![BTreeSet::new(); workers],
+            prewarmed: BTreeSet::new(),
+            drains: Vec::new(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("hiku-router".into())
+            .spawn(move || router.run())
+            .map_err(|e| format!("spawn router: {e}"))?;
+        Ok(Server { client: ServerClient { cmd_tx: tx, functions }, router: Some(handle) })
+    }
+
+    /// A new cloneable client handle for this server.
+    pub fn client(&self) -> ServerClient {
+        self.client.clone()
+    }
+
+    /// Convenience for [`ServerClient::invoke`] on the internal client.
+    pub fn invoke(&self, function: usize) -> Result<InvokeOutcome, String> {
+        self.client.invoke(function)
+    }
+
+    /// Convenience for [`ServerClient::prewarm`] on the internal client.
+    pub fn prewarm(&self, function: usize) -> Result<(), String> {
+        self.client.prewarm(function)
+    }
+
+    /// Convenience for [`ServerClient::summary`] on the internal client.
+    pub fn summary(&self) -> Result<Json, String> {
+        self.client.summary()
+    }
+
+    /// Convenience for [`ServerClient::drain`] on the internal client.
+    pub fn drain(&self) -> Result<(), String> {
+        self.client.drain()
+    }
+
+    /// Number of functions in the served workload.
+    pub fn num_functions(&self) -> usize {
+        self.client.functions
+    }
+
+    /// Stop the router, join the workers, and return the finalized run
+    /// metrics. In-flight requests are abandoned (their clients see an
+    /// error) — call [`Server::drain`] first for a clean stop.
+    pub fn shutdown(mut self) -> Result<RunMetrics, String> {
+        let _ = self.client.cmd_tx.send(RouterMsg::Shutdown);
+        let handle = self.router.take().ok_or_else(|| "server already shut down".to_string())?;
+        handle.join().map_err(|_| "router thread panicked".to_string())?
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Best-effort teardown when the server is dropped without an
+        // explicit shutdown (e.g. on an early error-return in a caller).
+        if let Some(handle) = self.router.take() {
+            let _ = self.client.cmd_tx.send(RouterMsg::Shutdown);
+            let _ = handle.join();
+        }
+    }
 }
 
 /// Spawn one worker thread owning a PJRT engine.
@@ -62,13 +428,13 @@ fn spawn_worker(
     artifacts_dir: String,
     capacity: usize,
     rx: mpsc::Receiver<ExecMsg>,
-    tx: mpsc::Sender<Result<Response, String>>,
+    tx: mpsc::Sender<RouterMsg>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let mut engine = match Engine::from_dir(&artifacts_dir, capacity) {
             Ok(e) => e,
             Err(e) => {
-                let _ = tx.send(Err(format!("worker {id}: {e}")));
+                let _ = tx.send(RouterMsg::Worker(Box::new(Err(format!("worker {id}: {e}")))));
                 return;
             }
         };
@@ -76,76 +442,87 @@ fn spawn_worker(
             if !msg.delay.is_zero() {
                 std::thread::sleep(msg.delay);
             }
-            match engine.execute(&msg.payload, msg.seed) {
-                Ok(r) => {
-                    let _ = tx.send(Ok(Response {
-                        rid: msg.rid,
-                        worker: id,
-                        function: msg.function,
-                        cold: r.cold,
-                        digest: r.digest,
-                        evicted_payloads: r.evicted,
-                    }));
-                }
-                Err(e) => {
-                    let _ = tx.send(Err(format!("worker {id}: {e}")));
-                }
+            let out = match engine.execute(&msg.payload, msg.seed) {
+                Ok(r) => Ok(Response {
+                    rid: msg.rid,
+                    worker: id,
+                    function: msg.function,
+                    cold: r.cold,
+                    digest: r.digest,
+                    evicted_payloads: r.evicted,
+                    prewarm: msg.prewarm,
+                }),
+                Err(e) => Err(format!("worker {id}: {e}")),
+            };
+            if tx.send(RouterMsg::Worker(Box::new(out))).is_err() {
+                return;
             }
         }
     })
 }
 
-/// Bind a parked request `rid` (function `f`) to worker `w`: load and
-/// inflight bookkeeping, assignment/wait metrics, the dispatch stamp the
-/// adaptive-wait EWMAs read, and the send. The single definition keeps
-/// the three claim paths — deadline drain, warm claim, idle-capacity
-/// claim — from drifting apart.
-#[allow(clippy::too_many_arguments)]
-fn bind_parked(
-    rid: u64,
-    f: usize,
-    w: usize,
-    kind: &'static str,
-    loads: &mut [u32],
-    inflight_f: &mut [usize],
-    dispatched: &mut [Instant],
-    arrival: &[Instant],
-    metrics: &mut RunMetrics,
-    start: Instant,
-    work_tx: &[mpsc::Sender<ExecMsg>],
-    payload_of: &[String],
-    delay: Duration,
-) -> Result<(), String> {
-    loads[w] += 1;
-    inflight_f[f] += 1;
-    let now_s = start.elapsed().as_secs_f64();
-    let arr_s = arrival[rid as usize].duration_since(start).as_secs_f64();
-    metrics.record_assignment(w, now_s);
-    metrics.record_pending_wait(f, now_s - arr_s);
-    metrics.trace.record(rid, f, "pending", arr_s, now_s, None, "");
-    metrics.trace.record(rid, f, "bind", now_s, now_s, Some(w), kind);
-    dispatched[rid as usize] = Instant::now();
-    send_to(work_tx, payload_of, rid, f, w, delay)
-}
-
-/// Dispatch one execution message to worker `w`.
-fn send_to(
-    work_tx: &[mpsc::Sender<ExecMsg>],
-    payload_of: &[String],
-    rid: u64,
-    f: usize,
-    w: usize,
-    delay: Duration,
-) -> Result<(), String> {
-    work_tx[w]
-        .send(ExecMsg {
-            rid,
-            payload: payload_of[f].clone(),
-            function: f,
-            seed: (rid as u32).wrapping_mul(2654435761),
-            delay,
-        })
-        .map_err(|_| "worker channel closed".to_string())
+/// Spawn one stub worker thread: the same per-worker LRU payload cache
+/// and cold/warm distinction as the PJRT engine, but each execution is a
+/// sleep of the function's Table-I latency divided by
+/// `runtime.stub_speedup` instead of a real XLA run. Keeps the full
+/// router/scheduler/dispatch path hot without the artifact set.
+fn spawn_stub_worker(
+    id: usize,
+    capacity: usize,
+    specs: Vec<(String, f64, f64)>,
+    cold_extra_ms: f64,
+    speedup: f64,
+    rx: mpsc::Receiver<ExecMsg>,
+    tx: mpsc::Sender<RouterMsg>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        // (payload, last-used tick): a tiny LRU, evicting beyond capacity.
+        let mut cache: Vec<(String, u64)> = Vec::new();
+        let mut tick: u64 = 0;
+        while let Ok(msg) = rx.recv() {
+            if !msg.delay.is_zero() {
+                std::thread::sleep(msg.delay);
+            }
+            tick += 1;
+            let mut evicted = Vec::new();
+            let cold = if let Some(entry) = cache.iter_mut().find(|e| e.0 == msg.payload) {
+                entry.1 = tick;
+                false
+            } else {
+                cache.push((msg.payload.clone(), tick));
+                while cache.len() > capacity {
+                    let mut lru = 0;
+                    for (i, e) in cache.iter().enumerate() {
+                        if e.1 < cache[lru].1 {
+                            lru = i;
+                        }
+                    }
+                    evicted.push(cache.remove(lru).0);
+                }
+                true
+            };
+            let (cold_ms, warm_ms) = specs
+                .iter()
+                .find(|s| s.0 == msg.payload)
+                .map(|s| (s.1, s.2))
+                .unwrap_or((100.0, 10.0));
+            let base_ms = if cold { cold_ms + cold_extra_ms } else { warm_ms };
+            std::thread::sleep(Duration::from_secs_f64(base_ms / 1000.0 / speedup));
+            let digest = [(msg.seed % 997) as f32 * 1e-3, msg.function as f32];
+            let out = Ok(Response {
+                rid: msg.rid,
+                worker: id,
+                function: msg.function,
+                cold,
+                digest,
+                evicted_payloads: evicted,
+                prewarm: msg.prewarm,
+            });
+            if tx.send(RouterMsg::Worker(Box::new(out))).is_err() {
+                return;
+            }
+        }
+    })
 }
 
 /// The straggler delay injected for one execution on worker `w`: the
@@ -161,689 +538,800 @@ fn straggler_delay(slow: &[f64], w: usize, warm_ms: f64) -> Duration {
     }
 }
 
-/// Consume one retry attempt for request `rid` after a fault loss (a
-/// crashed worker's lost result, a cold-init failure, or a dead-worker
-/// bind). Either schedules a deterministically jittered backoff
-/// re-dispatch or — budget exhausted — meters the request as `failed` and
-/// wakes its VU, so no admitted request is ever silently dropped.
-#[allow(clippy::too_many_arguments)]
-fn fault_retry_wallclock(
-    rid: u64,
-    cfg: &Config,
-    attempts: &mut [u32],
-    retry_at: &mut Vec<(Instant, u64)>,
-    failed: &mut usize,
-    metrics: &mut RunMetrics,
-    start: Instant,
-    workload: &Workload,
-    vu_of: &[usize],
-    step_of: &[usize],
-    fn_of: &[usize],
-    vu_step: &mut [usize],
-    wake: &mut Vec<(Instant, usize)>,
-) {
-    let i = rid as usize;
-    let att = attempts[i];
-    let now_s = start.elapsed().as_secs_f64();
-    if att >= cfg.faults.max_retries {
-        *failed += 1;
-        metrics.failed += 1;
-        metrics.trace.record(rid, fn_of[i], "failed", now_s, now_s, None, "budget");
-        let vu = vu_of[i];
-        let think = workload.vus[vu].steps[step_of[i]].think_s;
-        vu_step[vu] = step_of[i] + 1;
-        wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
-        return;
-    }
-    attempts[i] = att + 1;
-    metrics.retried += 1;
-    let backoff = retry_backoff(cfg.faults.retry_backoff_s, cfg.workload.seed, rid, att + 1);
-    metrics.trace.record(rid, fn_of[i], "retry", now_s, now_s, None, "backoff");
-    retry_at.push((Instant::now() + Duration::from_secs_f64(backoff), rid));
+/// The router's scheduler-context builder: the shared
+/// [`SchedCtx::builder`] entry point with the server's avoid-mask
+/// convention baked in (the same helper shape as the simulator's
+/// `sched_ctx`, keeping the construction sites from drifting).
+fn router_ctx<'a>(
+    loads: &'a [u32],
+    rng: &'a mut Pcg64,
+    dead: Option<&'a [bool]>,
+) -> SchedCtxBuilder<'a> {
+    SchedCtx::builder(loads, rng).avoid(dead)
 }
 
-/// Serve `n_requests` through the real-time cluster, closed-loop over the
-/// configured VUs, and return the usual metrics. Think times come from the
-/// workload config (scale them down for demos — wall-clock!).
-///
-/// The dispatch protocol applies here too: under `dispatch.mode = "pull"`
-/// requests with a warm prospect park in the router's pending queue,
-/// completing workers claim them, and wall-clock wait deadlines
-/// force-place stragglers. The fair-dispatcher semantics match the
-/// simulator's: admission caps are per function (`dispatch.queue_cap` +
-/// `dispatch.queue_caps`, rejects metered per function), idle capacity
-/// claims prospect-less backlog in deficit-round-robin order
-/// (`dispatch.fair`/`dispatch.weights`), and with
-/// `dispatch.adaptive_wait` each function's wall-clock deadline is
-/// `min(max_wait_s, ewma_cold_latency − ewma_warm_latency)` — the
-/// observed cost of the cold start waiting might avoid. A request counts
-/// as *resolved* when it completes, is rejected, or exhausts its fault
-/// retry budget — the run serves `n_requests` resolutions. (Scale-to-zero
-/// stays sim-only: the PJRT worker pool never drops below one active
-/// worker.)
-///
-/// With `faults.enabled` the seed-derived fault plan replays against wall
-/// clock: crash-marked workers are routed around and their in-flight
-/// results discarded on arrival (consuming the request's retry budget),
-/// stragglers execute behind an injected service delay, and recoveries
-/// restore routing — the wall-clock mirror of the simulator's fault
-/// events.
-pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
-    let manifest = Manifest::load(&cfg.runtime.artifacts_dir)?;
-    let registry = FunctionRegistry::functionbench(cfg.workload.copies);
-    // Each function copy maps to its base app's payload artifact.
-    let payload_of: Vec<String> = (0..registry.len())
-        .map(|f| registry.app(f).name.to_string())
-        .collect();
-    for p in &payload_of {
-        if manifest.get(p).is_none() {
-            return Err(format!("artifact for payload '{p}' missing; run `make artifacts`"));
+/// The router thread's state and event loop: admission, dispatch,
+/// pull-claims, autoscale ticks, fault replay, pre-warm placement and
+/// metrics — everything the old `serve_n_requests` body did, minus the
+/// closed-loop VU driver (now a client-side concern).
+struct Router {
+    cfg: Config,
+    registry: FunctionRegistry,
+    payload_of: Vec<String>,
+    scheduler: Box<dyn Scheduler>,
+    policy: Box<dyn AutoscalePolicy>,
+    mean_exec_s: Vec<f64>,
+    rx: mpsc::Receiver<RouterMsg>,
+    work_tx: Vec<mpsc::Sender<ExecMsg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    active: usize,
+    autoscaling: bool,
+    last_tick: Instant,
+    sched_rng: Pcg64,
+    metrics: RunMetrics,
+    imbalance_cols: usize,
+    start: Instant,
+    loads: Vec<u32>,
+    completed: usize,
+    rejected: usize,
+    failed: usize,
+    /// Admitted requests not yet resolved (completed or failed).
+    outstanding: usize,
+    // Per-request bookkeeping, indexed by rid.
+    arrival: Vec<Instant>,
+    /// When the request was handed to a worker (== arrival for immediate
+    /// assigns; re-stamped when a parked request is claimed or
+    /// force-placed). The adaptive-wait EWMAs read dispatch -> response,
+    /// NOT arrival -> response: end-to-end latency would include the
+    /// pending wait itself and self-inflate the cold-warm delta.
+    dispatched: Vec<Instant>,
+    fn_of: Vec<usize>,
+    attempts: Vec<u32>,
+    reply_of: Vec<mpsc::Sender<InvokeOutcome>>,
+    // Pull dispatch: pending queue + wall-clock wait deadlines.
+    pull: bool,
+    fair: bool,
+    pending_q: PendingQueue,
+    cap_f: Vec<usize>,
+    deadlines: Vec<(Instant, u64)>,
+    inflight_f: Vec<usize>,
+    /// Adaptive waiting: per-function EWMAs of observed cold and warm
+    /// response latency; their delta is the cold penalty waiting can
+    /// avoid, and it caps the wall-clock wait deadline.
+    cold_lat_ewma: Vec<f64>,
+    warm_lat_ewma: Vec<f64>,
+    // Wall-clock fault injection (`[faults]`): the seed-derived plan the
+    // simulator installs, replayed against wall-clock seconds since
+    // start. A "crashed" worker thread is not killed (it may be
+    // mid-execute); the router marks it dead, routes around it, and
+    // treats any response whose dispatch predates the crash as lost.
+    faults_on: bool,
+    plan: FaultPlan,
+    next_crash: usize,
+    next_recover: usize,
+    next_strag: usize,
+    dead: Vec<bool>,
+    /// Most recent crash instant per worker (never cleared): a response
+    /// dispatched before it refers to state the crash destroyed.
+    last_crash: Vec<Option<Instant>>,
+    slow: Vec<f64>,
+    retry_at: Vec<(Instant, u64)>,
+    /// Per-worker mirror of cached payload names, maintained from
+    /// cold/eviction responses: the router-side warm-placement map that
+    /// pre-warm spreading and the autoscaler's warm-supply signal read.
+    warm_sets: Vec<BTreeSet<String>>,
+    /// Outstanding speculative warmups: (worker, payload) pairs spawned
+    /// but not yet repaid by a warm hit (metered as `prewarm_hits`).
+    prewarmed: BTreeSet<(usize, String)>,
+    /// Pending drain waiters, answered when `outstanding` hits zero.
+    drains: Vec<mpsc::Sender<()>>,
+}
+
+impl Router {
+    fn run(mut self) -> Result<RunMetrics, String> {
+        loop {
+            self.autoscale_tick();
+            self.apply_fault_plan()?;
+            self.expire_deadlines()?;
+            let timeout = self.next_timeout();
+            match self.rx.recv_timeout(timeout) {
+                Ok(RouterMsg::Invoke { function, reply }) => self.on_invoke(function, reply)?,
+                Ok(RouterMsg::Prewarm { function }) => {
+                    self.spawn_prewarm(function);
+                }
+                Ok(RouterMsg::Summary { reply }) => {
+                    let snapshot = self.summary();
+                    let _ = reply.send(snapshot);
+                }
+                Ok(RouterMsg::Drain { reply }) => {
+                    self.drains.push(reply);
+                    self.check_drains();
+                }
+                Ok(RouterMsg::Shutdown) => break,
+                Ok(RouterMsg::Worker(res)) => match *res {
+                    Ok(r) => self.on_response(r)?,
+                    Err(e) => return Err(e),
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                // All command senders and workers gone: nothing can ever
+                // arrive again — finalize as an implicit shutdown.
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
         }
+        self.finish()
     }
 
-    // Autoscaling (reactive/predictive): spawn the full `max_workers`
-    // thread pool up front but only route to the `active` prefix; the
-    // policy moves the boundary. The `scheduled` policy is sim-only (its
-    // exact-time replay has no meaning against wall clock) and behaves
-    // like `none` here.
-    let autoscaling = matches!(cfg.autoscale.policy.as_str(), "reactive" | "predictive");
-    let workers = if autoscaling {
-        cfg.autoscale.max_workers.max(cfg.cluster.workers)
-    } else {
-        cfg.cluster.workers
-    };
-    let mut active = cfg.cluster.workers.min(workers);
-    // Cache capacity from the memory pool: one executable per ~256 MB of
-    // configured sandbox memory (same pressure model as the simulator).
-    let capacity = ((cfg.cluster.mem_mb / 256).max(1) as usize).min(registry.len());
-
-    let (resp_tx, resp_rx) = mpsc::channel::<Result<Response, String>>();
-    let mut work_tx = Vec::new();
-    let mut handles = Vec::new();
-    for w in 0..workers {
-        let (tx, rx) = mpsc::channel::<ExecMsg>();
-        handles.push(spawn_worker(
-            w,
-            cfg.runtime.artifacts_dir.clone(),
-            capacity,
-            rx,
-            resp_tx.clone(),
-        ));
-        work_tx.push(tx);
-    }
-
-    crate::log_info!(
-        "server",
-        "starting {} PJRT workers ({} active, cache capacity {}), scheduler {}, autoscale {}",
-        workers,
-        active,
-        capacity,
-        cfg.scheduler.name,
-        cfg.autoscale.policy
-    );
-    let mut scheduler = make_scheduler(&cfg.scheduler, active)?;
-    let mut policy = make_policy(&cfg.autoscale)?;
-    let mean_exec_s: Vec<f64> =
-        (0..registry.len()).map(|f| registry.app(f).warm_ms / 1000.0).collect();
-    let mut last_tick = Instant::now();
-    let mut sched_rng = Pcg64::new(cfg.workload.seed ^ 0x5EED);
-    let workload = Workload::generate(&cfg.workload, registry.len(), cfg.workload.seed);
-    let vus = cfg.workload.vus.min(n_requests.max(1));
-
-    // Imbalance columns track workers that have ever been active (the
-    // simulator's add_worker convention) — not the idle thread pool. The
-    // telemetry surface matches the simulator's: sketch mode, lifecycle
-    // tracing (span times are wall-clock seconds since server start), and
-    // the same deterministic hash-gate sampling by request id.
-    let mut metrics = RunMetrics::with_telemetry(
-        &cfg.scheduler.name,
-        active,
-        vus,
-        1.0, // duration finalized after the run (wall-clock)
-        &cfg.telemetry,
-    );
-    let mut imbalance_cols = active;
-    metrics.record_scale(0.0, active);
-    let start = Instant::now();
-    let mut loads = vec![0u32; workers];
-    // Dispatch attempts (assigned, parked, or rejected) — gates issuing.
-    let mut issued = 0usize;
-    let mut completed = 0usize;
-    let mut rejected = 0usize;
-    // Per-request bookkeeping.
-    let mut arrival: Vec<Instant> = Vec::new();
-    // When the request was handed to a worker (== arrival for immediate
-    // assigns; re-stamped when a parked request is claimed or
-    // force-placed). The adaptive-wait EWMAs read dispatch -> response,
-    // NOT arrival -> response: end-to-end latency would include the
-    // pending wait itself and self-inflate the cold-warm delta.
-    let mut dispatched: Vec<Instant> = Vec::new();
-    let mut vu_of: Vec<usize> = Vec::new();
-    let mut step_of: Vec<usize> = Vec::new();
-    let mut fn_of: Vec<usize> = Vec::new();
-    // VU cursors and wake times.
-    let mut vu_step = vec![0usize; vus];
-    let mut wake: Vec<(Instant, usize)> = (0..vus).map(|v| (start, v)).collect();
-    // Pull dispatch: router pending queue + wall-clock wait deadlines.
-    let pull = cfg.pull_dispatch();
-    let fair = cfg.dispatch.fair;
-    let mut pending_q =
-        PendingQueue::with_layout(registry.len(), &cfg.dispatch.weights_sparse());
-    let cap_f = cfg.dispatch.caps_dense(registry.len());
-    let mut deadlines: Vec<(Instant, u64)> = Vec::new();
-    let mut inflight_f = vec![0usize; registry.len()];
-    // Adaptive waiting: per-function EWMAs of observed cold and warm
-    // response latency; their delta is the cold penalty waiting can
-    // avoid, and it caps the wall-clock wait deadline.
-    let mut cold_lat_ewma = vec![0.0f64; registry.len()];
-    let mut warm_lat_ewma = vec![0.0f64; registry.len()];
-    let adaptive = cfg.dispatch.adaptive_wait;
-    let wait_for = |f: usize, cold: &[f64], warm: &[f64]| -> f64 {
-        let base = cfg.dispatch.max_wait_s;
-        if !adaptive || cold[f] <= 0.0 || warm[f] <= 0.0 {
-            return base;
-        }
-        // Floor at 1 ms: a noisy non-positive delta means "no observed
-        // cold penalty", i.e. waiting cannot pay — place almost at once.
-        // `dispatch.min_wait_s` then floors the adaptive deadline so a
-        // transiently tiny cold-penalty estimate cannot collapse the
-        // wait to an instant force-place.
-        base.min((cold[f] - warm[f]).max(0.001)).max(cfg.dispatch.min_wait_s)
-    };
-
-    // ---- wall-clock fault injection (`[faults]`) ----
-    // The same seed-derived plan the simulator installs, replayed against
-    // wall-clock seconds since server start. A "crashed" worker thread is
-    // not killed (it may be mid-execute); instead the router marks it
-    // dead, routes around it (the scheduler avoid mask), and treats any
-    // response whose dispatch predates the crash as lost — the request
-    // consumes a retry attempt exactly like the simulator's re-enqueue.
-    let faults_on = cfg.faults.enabled;
-    let plan = if faults_on {
-        FaultPlan::generate(&cfg.faults, workers, cfg.workload.duration_s, cfg.workload.seed)
-    } else {
-        FaultPlan::default()
-    };
-    let (mut next_crash, mut next_recover, mut next_strag) = (0usize, 0usize, 0usize);
-    let mut dead = vec![false; workers];
-    // Most recent crash instant per worker (never cleared): a response
-    // dispatched before it refers to state the crash destroyed.
-    let mut last_crash: Vec<Option<Instant>> = vec![None; workers];
-    let mut slow = vec![1.0f64; workers];
-    let mut attempts: Vec<u32> = Vec::new();
-    let mut retry_at: Vec<(Instant, u64)> = Vec::new();
-    let mut failed = 0usize;
-    metrics.faults_enabled = faults_on;
-
-    while completed + rejected + failed < n_requests {
-        // Autoscale control tick (wall clock). The policy only ever moves
-        // the active boundary; threads beyond it sit idle on their channel.
-        if autoscaling && last_tick.elapsed().as_secs_f64() >= cfg.autoscale.interval_s {
-            last_tick = Instant::now();
-            let total_running: usize = loads[..active].iter().map(|&l| l as usize).sum();
-            let obs = AutoscaleObs {
-                now: start.elapsed().as_secs_f64(),
-                active_workers: active,
-                concurrency: cfg.cluster.concurrency,
-                total_running,
-                total_queued: 0,
-                // The PJRT workers warm on first execution and expose no
-                // speculative-init hook, so the warm supply is opaque here
-                // and pre-warm plans are applied by the simulator only.
-                warm_supply: &[],
-                mean_exec_s: &mean_exec_s,
-            };
-            let d = policy.tick(&obs);
-            if let Some(target) = d.target_workers {
-                let target = target.clamp(1, workers);
-                while active < target {
-                    scheduler.on_worker_added(active);
-                    active += 1;
-                    if active > imbalance_cols {
-                        metrics.imbalance.add_worker();
-                        imbalance_cols = active;
-                    }
-                    metrics.record_scale(start.elapsed().as_secs_f64(), active);
-                }
-                while active > target {
-                    active -= 1;
-                    scheduler.on_worker_removed(active);
-                    metrics.record_scale(start.elapsed().as_secs_f64(), active);
-                }
-            }
-        }
-        // Apply fault-plan events whose wall-clock time has passed, then
-        // re-dispatch retries whose backoff elapsed.
-        if faults_on {
-            let now_s = start.elapsed().as_secs_f64();
-            while next_crash < plan.crashes.len() && plan.crashes[next_crash].0 <= now_s {
-                let (_, w) = plan.crashes[next_crash];
-                next_crash += 1;
-                if !dead[w] {
-                    dead[w] = true;
-                    last_crash[w] = Some(Instant::now());
-                    metrics.worker_crashes += 1;
-                    crate::log_info!("server", "fault: worker {} crashed at t={:.2}s", w, now_s);
-                }
-            }
-            while next_recover < plan.recoveries.len()
-                && plan.recoveries[next_recover].0 <= now_s
-            {
-                let (_, w) = plan.recoveries[next_recover];
-                next_recover += 1;
-                if dead[w] {
-                    dead[w] = false;
-                    metrics.worker_recoveries += 1;
-                    if let Some(c) = last_crash[w] {
-                        metrics.recovery_latency_ms.push(c.elapsed().as_secs_f64() * 1000.0);
-                    }
-                    crate::log_info!("server", "fault: worker {} recovered at t={:.2}s", w, now_s);
-                }
-            }
-            while next_strag < plan.stragglers.len() && plan.stragglers[next_strag].0 <= now_s {
-                let (_, w, m) = plan.stragglers[next_strag];
-                next_strag += 1;
-                slow[w] = m.max(1.0);
-            }
-            let now = Instant::now();
-            let mut i = 0;
-            while i < retry_at.len() {
-                if retry_at[i].0 > now {
-                    i += 1;
-                    continue;
-                }
-                let (_, rid) = retry_at.swap_remove(i);
-                let f = fn_of[rid as usize];
-                let w = {
-                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng)
-                        .with_avoid(&dead[..active]);
-                    scheduler.select(f, &mut ctx)
-                };
-                if dead[w] {
-                    // No live worker took it — the avoid mask is advisory
-                    // and every candidate was dead. Burn another attempt;
-                    // the budget bounds how long the request can wait for
-                    // a recovery.
-                    let t_s = start.elapsed().as_secs_f64();
-                    metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "dead-bind");
-                    fault_retry_wallclock(
-                        rid, cfg, &mut attempts, &mut retry_at, &mut failed, &mut metrics,
-                        start, &workload, &vu_of, &step_of, &fn_of, &mut vu_step, &mut wake,
-                    );
-                    continue;
-                }
-                loads[w] += 1;
-                inflight_f[f] += 1;
-                let t_s = start.elapsed().as_secs_f64();
-                metrics.record_assignment(w, t_s);
-                metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "retry");
-                dispatched[rid as usize] = Instant::now();
-                send_to(
-                    &work_tx,
-                    &payload_of,
-                    rid,
-                    f,
-                    w,
-                    straggler_delay(&slow, w, registry.app(f).warm_ms),
-                )?;
-            }
-        }
-        // Pull dispatch: force-place parked requests whose wait deadline
-        // passed (warm if the completing workers re-advertised, fallback
-        // placement otherwise). Like the simulator, an expired deadline
-        // drains its function's queue oldest-first up to the expired
-        // request, so adaptive deadlines never reorder a function's line.
-        if pull && !deadlines.is_empty() {
-            let now = Instant::now();
-            let mut i = 0;
-            while i < deadlines.len() {
-                if deadlines[i].0 > now {
-                    i += 1;
-                    continue;
-                }
-                let (_, rid) = deadlines.swap_remove(i);
-                let f = fn_of[rid as usize];
-                if !pending_q.is_waiting(rid) {
-                    continue; // already claimed by an idle worker
-                }
-                loop {
-                    let Some(head) = pending_q.pop_fn(f) else { break };
-                    let w = {
-                        let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                        if faults_on {
-                            ctx = ctx.with_avoid(&dead[..active]);
-                        }
-                        scheduler.select(f, &mut ctx)
-                    };
-                    bind_parked(
-                        head,
-                        f,
-                        w,
-                        "deadline",
-                        &mut loads,
-                        &mut inflight_f,
-                        &mut dispatched,
-                        &arrival,
-                        &mut metrics,
-                        start,
-                        &work_tx,
-                        &payload_of,
-                        straggler_delay(&slow, w, registry.app(f).warm_ms),
-                    )?;
-                    if head == rid {
-                        break;
-                    }
-                }
-            }
-        }
-        // Wake any due VUs (issue their next request).
+    /// How long the event loop may sleep in `recv_timeout`: until the
+    /// next wall-clock obligation (pull deadline, retry backoff, fault
+    /// event, autoscale tick), floored at 100 µs so a hot router cannot
+    /// busy-spin.
+    fn next_timeout(&self) -> Duration {
         let now = Instant::now();
-        let mut i = 0;
-        while i < wake.len() {
-            if wake[i].0 <= now && issued < n_requests {
-                let vu = wake[i].1;
-                wake.swap_remove(i);
-                let step = vu_step[vu];
-                if step >= workload.vus[vu].steps.len() {
-                    continue;
-                }
-                // ---- issue the VU's next request ----
-                let f = workload.vus[vu].steps[step].function;
-                let rid = arrival.len() as u64;
-                let t_s = start.elapsed().as_secs_f64();
-                metrics.trace.record(rid, f, "arrival", t_s, t_s, None, "");
-                policy.on_arrival(f, t_s);
-                let decision = {
-                    let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                    if faults_on {
-                        ctx = ctx.with_avoid(&dead[..active]);
-                    }
-                    if pull {
-                        ctx.dispatch = Some(DispatchCtx {
-                            inflight_f: inflight_f[f],
-                            pending_f: pending_q.len_fn(f),
-                        });
-                    }
-                    scheduler.decide(f, &mut ctx)
-                };
-                let refuse = match decision {
-                    Decision::Reject(_) => true,
-                    // An Enqueue against a full per-function queue (or
-                    // outside the pull protocol) is an admission refusal
-                    // — the cap isolates the overflow to this function.
-                    Decision::Enqueue => {
-                        !pull || (cap_f[f] > 0 && pending_q.len_fn(f) >= cap_f[f])
-                    }
-                    // The real-time server does not track core slots: a
-                    // slot pin degrades to a plain worker assignment.
-                    Decision::Assign(_) | Decision::AssignSlot(_, _) => false,
-                };
-                if refuse {
-                    metrics.trace.record(rid, f, "decide", t_s, t_s, None, "reject");
-                    metrics.record_reject(f);
-                    rejected += 1;
-                    // The VU observes the refusal and thinks on.
-                    let think = workload.vus[vu].steps[step].think_s;
-                    vu_step[vu] = step + 1;
-                    wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
-                } else {
-                    let now = Instant::now();
-                    arrival.push(now);
-                    dispatched.push(now);
-                    vu_of.push(vu);
-                    step_of.push(step);
-                    fn_of.push(f);
-                    attempts.push(0);
-                    match decision {
-                        Decision::Assign(w) | Decision::AssignSlot(w, _) => {
-                            metrics.trace.record(rid, f, "decide", t_s, t_s, Some(w), "assign");
-                            loads[w] += 1;
-                            inflight_f[f] += 1;
-                            metrics.record_assignment(w, start.elapsed().as_secs_f64());
-                            send_to(
-                                &work_tx,
-                                &payload_of,
-                                rid,
-                                f,
-                                w,
-                                straggler_delay(&slow, w, registry.app(f).warm_ms),
-                            )?;
-                        }
-                        _ => {
-                            metrics.trace.record(rid, f, "decide", t_s, t_s, None, "enqueue");
-                            pending_q.push(rid, f);
-                            metrics.record_enqueue(pending_q.len());
-                            let wait = wait_for(f, &cold_lat_ewma, &warm_lat_ewma);
-                            deadlines
-                                .push((Instant::now() + Duration::from_secs_f64(wait), rid));
-                        }
-                    }
-                }
-                issued += 1;
-            } else {
-                i += 1;
-            }
-        }
-        // Wait for a response (or the next VU wake / pull deadline).
-        let mut timeout = wake
-            .iter()
-            .map(|(t, _)| t.saturating_duration_since(now))
-            .min()
-            .unwrap_or(Duration::from_millis(5));
-        for (t, _) in &deadlines {
+        let mut timeout = Duration::from_millis(25);
+        for (t, _) in &self.deadlines {
             timeout = timeout.min(t.saturating_duration_since(now));
         }
-        for (t, _) in &retry_at {
+        for (t, _) in &self.retry_at {
             timeout = timeout.min(t.saturating_duration_since(now));
         }
         // Pending fault-plan events are wall-clock scheduled outside the
-        // wake/deadline lists — poll often enough to apply them promptly.
-        if faults_on
-            && (next_crash < plan.crashes.len()
-                || next_recover < plan.recoveries.len()
-                || next_strag < plan.stragglers.len())
+        // deadline lists — poll often enough to apply them promptly.
+        if self.faults_on
+            && (self.next_crash < self.plan.crashes.len()
+                || self.next_recover < self.plan.recoveries.len()
+                || self.next_strag < self.plan.stragglers.len())
         {
             timeout = timeout.min(Duration::from_millis(20));
         }
-        let timeout = timeout.max(Duration::from_micros(100));
-        match resp_rx.recv_timeout(timeout) {
-            Ok(Ok(r)) => {
-                loads[r.worker] -= 1;
-                inflight_f[r.function] -= 1;
-                // Eviction notifications: every function copy whose payload
-                // was evicted from this worker's cache.
-                for p in &r.evicted_payloads {
-                    for f in 0..registry.len() {
-                        if &payload_of[f] == p {
-                            scheduler.on_evict(r.worker, f);
-                        }
-                    }
+        if self.autoscaling {
+            let rem =
+                (self.cfg.autoscale.interval_s - self.last_tick.elapsed().as_secs_f64()).max(0.0);
+            timeout = timeout.min(Duration::from_secs_f64(rem));
+        }
+        timeout.max(Duration::from_micros(100))
+    }
+
+    /// Autoscale control tick (wall clock). The policy only ever moves
+    /// the active boundary; threads beyond it sit idle on their channel.
+    /// Unlike the pre-`Server` loop, the observation now carries the
+    /// live queue depth and a real per-function warm supply (from the
+    /// router's warm-set mirror), and the policy's speculative pre-warm
+    /// plans are applied through the placement-aware spawn path.
+    fn autoscale_tick(&mut self) {
+        if !self.autoscaling
+            || self.last_tick.elapsed().as_secs_f64() < self.cfg.autoscale.interval_s
+        {
+            return;
+        }
+        self.last_tick = Instant::now();
+        let total_running: usize = self.loads[..self.active].iter().map(|&l| l as usize).sum();
+        let warm_supply: Vec<usize> = (0..self.registry.len())
+            .map(|f| {
+                (0..self.active)
+                    .filter(|&w| !self.dead[w] && self.warm_sets[w].contains(&self.payload_of[f]))
+                    .count()
+            })
+            .collect();
+        let obs = AutoscaleObs {
+            now: self.start.elapsed().as_secs_f64(),
+            active_workers: self.active,
+            concurrency: self.cfg.cluster.concurrency,
+            total_running,
+            total_queued: self.pending_q.len(),
+            warm_supply: &warm_supply,
+            mean_exec_s: &self.mean_exec_s,
+        };
+        let d = self.policy.tick(&obs);
+        if let Some(target) = d.target_workers {
+            let target = target.clamp(1, self.workers);
+            while self.active < target {
+                self.scheduler.on_worker_added(self.active);
+                self.active += 1;
+                if self.active > self.imbalance_cols {
+                    self.metrics.imbalance.add_worker();
+                    self.imbalance_cols = self.active;
                 }
-                // Drained workers (beyond the active boundary) and
-                // crash-marked workers must not re-advertise idle
-                // capacity or claim parked work.
-                if r.worker < active && !dead[r.worker] {
-                    // Pull dispatch: the now-idle worker claims a parked
-                    // request first (a warm start); it only advertises
-                    // through on_complete when nothing is waiting.
-                    let mut claimed = false;
-                    if pull && !pending_q.is_empty() {
-                        let p = {
-                            let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng)
-                                .with_dispatch(DispatchCtx {
-                                    inflight_f: inflight_f[r.function],
-                                    pending_f: pending_q.len_fn(r.function),
-                                });
-                            if faults_on {
-                                ctx = ctx.with_avoid(&dead[..active]);
-                            }
-                            scheduler.on_worker_idle(r.worker, r.function, &mut ctx)
-                        };
-                        if let Pull::Function(pf) = p {
-                            if let Some(rid2) = pending_q.pop_fn(pf) {
-                                bind_parked(
-                                    rid2,
-                                    pf,
-                                    r.worker,
-                                    "pull",
-                                    &mut loads,
-                                    &mut inflight_f,
-                                    &mut dispatched,
-                                    &arrival,
-                                    &mut metrics,
-                                    start,
-                                    &work_tx,
-                                    &payload_of,
-                                    straggler_delay(&slow, r.worker, registry.app(pf).warm_ms),
-                                )?;
-                                claimed = true;
-                            }
-                        }
-                    }
-                    if !claimed {
-                        {
-                            let mut ctx = SchedCtx::new(&loads[..active], &mut sched_rng);
-                            if faults_on {
-                                ctx = ctx.with_avoid(&dead[..active]);
-                            }
-                            scheduler.on_complete(r.worker, r.function, &mut ctx);
-                        }
-                        // Idle-capacity fairness claim (same rule as the
-                        // simulator): serve the backlog's next request
-                        // among functions whose warm prospect is gone, in
-                        // DRR order — the advertisement above survives.
-                        if pull && !pending_q.is_empty() {
-                            let eligible = |g: usize| inflight_f[g] == 0;
-                            let got = if fair {
-                                pending_q.pop_fair_where(eligible)
-                            } else {
-                                pending_q.pop_arrival_where(eligible)
-                            };
-                            if let Some((rid2, pf)) = got {
-                                bind_parked(
-                                    rid2,
-                                    pf,
-                                    r.worker,
-                                    "idle",
-                                    &mut loads,
-                                    &mut inflight_f,
-                                    &mut dispatched,
-                                    &arrival,
-                                    &mut metrics,
-                                    start,
-                                    &work_tx,
-                                    &payload_of,
-                                    straggler_delay(&slow, r.worker, registry.app(pf).warm_ms),
-                                )?;
-                            }
-                        }
-                    }
-                }
-                // Fault injection: a response whose dispatch predates the
-                // worker's most recent crash refers to state the crash
-                // destroyed — the result is lost. A cold execution may
-                // also fail initialization (seed-derived coin, same
-                // construction as the simulator). Either way the request
-                // is not resolved; it consumes a retry attempt. Worker
-                // bookkeeping above already ran: the slot is genuinely
-                // free, only the result is discarded.
-                if faults_on {
-                    let i = r.rid as usize;
-                    let crashed = last_crash[r.worker].is_some_and(|c| dispatched[i] < c);
-                    let init_fail = !crashed
-                        && r.cold
-                        && cfg.faults.init_fail_prob > 0.0
-                        && fault_coin(cfg.workload.seed, r.rid, attempts[i])
-                            < cfg.faults.init_fail_prob;
-                    if crashed || init_fail {
-                        let now_s = start.elapsed().as_secs_f64();
-                        if crashed {
-                            metrics.trace.record(
-                                r.rid, r.function, "crash", now_s, now_s, Some(r.worker), "lost",
-                            );
-                        } else {
-                            metrics.init_failures += 1;
-                            metrics.trace.record(
-                                r.rid, r.function, "init_fail", now_s, now_s, Some(r.worker), "",
-                            );
-                        }
-                        fault_retry_wallclock(
-                            r.rid, cfg, &mut attempts, &mut retry_at, &mut failed, &mut metrics,
-                            start, &workload, &vu_of, &step_of, &fn_of, &mut vu_step, &mut wake,
-                        );
-                        continue;
-                    }
-                }
-                let rid = r.rid as usize;
-                let lat = arrival[rid].elapsed().as_secs_f64();
-                if pull {
-                    // Feed the adaptive-deadline EWMAs from the
-                    // dispatch -> response latency: the cold−warm delta
-                    // of the *service* is the observed cold penalty.
-                    // (End-to-end latency would include the pending wait
-                    // and self-inflate the delta.)
-                    const WAIT_ALPHA: f64 = 0.2;
-                    let service_lat = dispatched[rid].elapsed().as_secs_f64();
-                    let e = if r.cold {
-                        &mut cold_lat_ewma[r.function]
-                    } else {
-                        &mut warm_lat_ewma[r.function]
-                    };
-                    *e = if *e > 0.0 {
-                        WAIT_ALPHA * service_lat + (1.0 - WAIT_ALPHA) * *e
-                    } else {
-                        service_lat
-                    };
-                }
-                let resp_s = start.elapsed().as_secs_f64();
-                metrics.record_response(lat, r.cold, 0.0, resp_s);
-                if metrics.trace.sampled(r.rid) {
-                    // No observable init boundary on the real workers
-                    // (PJRT compilation happens inside execute), so the
-                    // whole dispatch -> response window is one `service`
-                    // span; its `cold`/`warm` detail carries the split.
-                    let disp_s = dispatched[rid].duration_since(start).as_secs_f64();
-                    let kind = if r.cold { "cold" } else { "warm" };
-                    metrics.trace.record(
-                        r.rid, r.function, "service", disp_s, resp_s, Some(r.worker), kind,
-                    );
-                    metrics.trace.record(
-                        r.rid, r.function, "complete", resp_s, resp_s, Some(r.worker), kind,
-                    );
-                }
-                debug_assert!(r.digest.iter().all(|d| d.is_finite()));
-                completed += 1;
-                // Closed loop: schedule the VU's next step.
-                let vu = vu_of[rid];
-                let think = workload.vus[vu].steps[step_of[rid]].think_s;
-                vu_step[vu] = step_of[rid] + 1;
-                wake.push((Instant::now() + Duration::from_secs_f64(think), vu));
+                self.metrics.record_scale(self.start.elapsed().as_secs_f64(), self.active);
             }
-            Ok(Err(e)) => return Err(e),
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                return Err("all workers disconnected".into());
+            while self.active > target {
+                self.active -= 1;
+                self.scheduler.on_worker_removed(self.active);
+                self.metrics.record_scale(self.start.elapsed().as_secs_f64(), self.active);
+            }
+        }
+        for (f, n) in d.prewarm {
+            for _ in 0..n {
+                if !self.spawn_prewarm(f) {
+                    break;
+                }
             }
         }
     }
 
-    metrics.duration_s = start.elapsed().as_secs_f64();
-    metrics.finalize_scaling(metrics.duration_s);
-    // Conservation surface (same identity as the simulator): every
-    // admitted request resolved as completed or failed; refusals never
-    // entered `arrival`.
-    metrics.arrivals = arrival.len() as u64 + rejected as u64;
-    // Drop senders so workers exit; join them.
-    drop(work_tx);
-    drop(resp_tx);
-    for h in handles {
+    /// Speculatively warm function `f` on one worker, anti-affinity
+    /// spread: among live active workers neither warm nor already warming
+    /// for `f`'s payload, pick the least loaded (lowest id on ties) and
+    /// execute the payload once off the request path. Returns false when
+    /// no such worker exists (nothing to spread to).
+    fn spawn_prewarm(&mut self, f: usize) -> bool {
+        if f >= self.registry.len() {
+            return false;
+        }
+        let payload = &self.payload_of[f];
+        let mut best: Option<usize> = None;
+        for w in 0..self.active {
+            if self.dead[w]
+                || self.warm_sets[w].contains(payload)
+                || self.prewarmed.contains(&(w, payload.clone()))
+            {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => self.loads[w] < self.loads[b],
+            };
+            if better {
+                best = Some(w);
+            }
+        }
+        let Some(w) = best else { return false };
+        let msg = ExecMsg {
+            rid: u64::MAX,
+            payload: payload.clone(),
+            function: f,
+            seed: 0x9E37,
+            delay: Duration::ZERO,
+            prewarm: true,
+        };
+        let payload = payload.clone();
+        if self.work_tx[w].send(msg).is_err() {
+            return false;
+        }
+        self.loads[w] += 1;
+        self.prewarmed.insert((w, payload));
+        self.metrics.prewarm_spawned += 1;
+        true
+    }
+
+    /// Apply fault-plan events whose wall-clock time has passed, then
+    /// re-dispatch retries whose backoff elapsed.
+    fn apply_fault_plan(&mut self) -> Result<(), String> {
+        if !self.faults_on {
+            return Ok(());
+        }
+        let now_s = self.start.elapsed().as_secs_f64();
+        while self.next_crash < self.plan.crashes.len()
+            && self.plan.crashes[self.next_crash].0 <= now_s
+        {
+            let (_, w) = self.plan.crashes[self.next_crash];
+            self.next_crash += 1;
+            if !self.dead[w] {
+                self.dead[w] = true;
+                self.last_crash[w] = Some(Instant::now());
+                self.metrics.worker_crashes += 1;
+                crate::log_info!("server", "fault: worker {} crashed at t={:.2}s", w, now_s);
+            }
+        }
+        while self.next_recover < self.plan.recoveries.len()
+            && self.plan.recoveries[self.next_recover].0 <= now_s
+        {
+            let (_, w) = self.plan.recoveries[self.next_recover];
+            self.next_recover += 1;
+            if self.dead[w] {
+                self.dead[w] = false;
+                self.metrics.worker_recoveries += 1;
+                if let Some(c) = self.last_crash[w] {
+                    self.metrics.recovery_latency_ms.push(c.elapsed().as_secs_f64() * 1000.0);
+                }
+                crate::log_info!("server", "fault: worker {} recovered at t={:.2}s", w, now_s);
+            }
+        }
+        while self.next_strag < self.plan.stragglers.len()
+            && self.plan.stragglers[self.next_strag].0 <= now_s
+        {
+            let (_, w, m) = self.plan.stragglers[self.next_strag];
+            self.next_strag += 1;
+            self.slow[w] = m.max(1.0);
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.retry_at.len() {
+            if self.retry_at[i].0 > now {
+                i += 1;
+                continue;
+            }
+            let (_, rid) = self.retry_at.swap_remove(i);
+            let f = self.fn_of[rid as usize];
+            let w = self.select(f);
+            if self.dead[w] {
+                // No live worker took it — the avoid mask is advisory and
+                // every candidate was dead. Burn another attempt; the
+                // budget bounds how long the request can wait for a
+                // recovery.
+                let t_s = self.start.elapsed().as_secs_f64();
+                self.metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "dead-bind");
+                self.fault_retry(rid);
+                continue;
+            }
+            self.loads[w] += 1;
+            self.inflight_f[f] += 1;
+            let t_s = self.start.elapsed().as_secs_f64();
+            self.metrics.record_assignment(w, t_s);
+            self.metrics.trace.record(rid, f, "bind", t_s, t_s, Some(w), "retry");
+            self.dispatched[rid as usize] = Instant::now();
+            self.send_to(rid, f, w)?;
+        }
+        Ok(())
+    }
+
+    /// Pull dispatch: force-place parked requests whose wait deadline
+    /// passed (warm if the completing workers re-advertised, fallback
+    /// placement otherwise). Like the simulator, an expired deadline
+    /// drains its function's queue oldest-first up to the expired
+    /// request, so adaptive deadlines never reorder a function's line.
+    fn expire_deadlines(&mut self) -> Result<(), String> {
+        if !self.pull || self.deadlines.is_empty() {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.deadlines.len() {
+            if self.deadlines[i].0 > now {
+                i += 1;
+                continue;
+            }
+            let (_, rid) = self.deadlines.swap_remove(i);
+            let f = self.fn_of[rid as usize];
+            if !self.pending_q.is_waiting(rid) {
+                continue; // already claimed by an idle worker
+            }
+            loop {
+                let Some(head) = self.pending_q.pop_fn(f) else { break };
+                let w = self.select(f);
+                self.bind_parked(head, f, w, "deadline")?;
+                if head == rid {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scheduler fallback selection for function `f` over the active
+    /// prefix (avoiding crash-marked workers when faults are on).
+    fn select(&mut self, f: usize) -> usize {
+        let active = self.active;
+        let mut ctx = router_ctx(
+            &self.loads[..active],
+            &mut self.sched_rng,
+            self.faults_on.then_some(&self.dead[..active]),
+        )
+        .build();
+        self.scheduler.select(f, &mut ctx)
+    }
+
+    /// Admit one request for `f`: the scheduler decides, and the request
+    /// is assigned, parked (pull mode), or refused. `reply` resolves when
+    /// the request does.
+    fn on_invoke(&mut self, f: usize, reply: mpsc::Sender<InvokeOutcome>) -> Result<(), String> {
+        let rid = self.arrival.len() as u64;
+        let t_s = self.start.elapsed().as_secs_f64();
+        self.metrics.trace.record(rid, f, "arrival", t_s, t_s, None, "");
+        self.policy.on_arrival(f, t_s);
+        let active = self.active;
+        let decision = {
+            let dispatch = if self.pull {
+                Some(DispatchCtx {
+                    inflight_f: self.inflight_f[f],
+                    pending_f: self.pending_q.len_fn(f),
+                })
+            } else {
+                None
+            };
+            let mut ctx = router_ctx(
+                &self.loads[..active],
+                &mut self.sched_rng,
+                self.faults_on.then_some(&self.dead[..active]),
+            )
+            .dispatch(dispatch)
+            .build();
+            self.scheduler.decide(f, &mut ctx)
+        };
+        let refuse = match decision {
+            Decision::Reject(_) => true,
+            // An Enqueue against a full per-function queue (or outside
+            // the pull protocol) is an admission refusal — the cap
+            // isolates the overflow to this function.
+            Decision::Enqueue => {
+                !self.pull || (self.cap_f[f] > 0 && self.pending_q.len_fn(f) >= self.cap_f[f])
+            }
+            // The real-time server does not track core slots: a slot pin
+            // degrades to a plain worker assignment.
+            Decision::Assign(_) | Decision::AssignSlot(_, _) => false,
+        };
+        if refuse {
+            self.metrics.trace.record(rid, f, "decide", t_s, t_s, None, "reject");
+            self.metrics.record_reject(f);
+            self.rejected += 1;
+            let _ = reply.send(InvokeOutcome::Rejected);
+            return Ok(());
+        }
+        let now = Instant::now();
+        self.arrival.push(now);
+        self.dispatched.push(now);
+        self.fn_of.push(f);
+        self.attempts.push(0);
+        self.reply_of.push(reply);
+        self.outstanding += 1;
+        match decision {
+            Decision::Assign(w) | Decision::AssignSlot(w, _) => {
+                self.metrics.trace.record(rid, f, "decide", t_s, t_s, Some(w), "assign");
+                self.loads[w] += 1;
+                self.inflight_f[f] += 1;
+                self.metrics.record_assignment(w, self.start.elapsed().as_secs_f64());
+                self.send_to(rid, f, w)?;
+            }
+            _ => {
+                self.metrics.trace.record(rid, f, "decide", t_s, t_s, None, "enqueue");
+                self.pending_q.push(rid, f);
+                self.metrics.record_enqueue(self.pending_q.len());
+                let wait = self.wait_for(f);
+                self.deadlines.push((Instant::now() + Duration::from_secs_f64(wait), rid));
+            }
+        }
+        Ok(())
+    }
+
+    /// One worker's result: bookkeeping, warm-set mirror maintenance,
+    /// pull/idle claims for the now-idle worker, fault-loss filtering,
+    /// and resolution of the waiting client.
+    fn on_response(&mut self, r: Response) -> Result<(), String> {
+        self.loads[r.worker] -= 1;
+        if !r.prewarm {
+            self.inflight_f[r.function] -= 1;
+        }
+        // Warm-set mirror: after this response the payload is cached on
+        // the worker, minus whatever its LRU pushed out. Eviction
+        // notifications fan out to every function copy of the payload.
+        self.warm_sets[r.worker].insert(self.payload_of[r.function].clone());
+        for p in &r.evicted_payloads {
+            self.warm_sets[r.worker].remove(p);
+            self.prewarmed.remove(&(r.worker, p.clone()));
+            for f in 0..self.registry.len() {
+                if &self.payload_of[f] == p {
+                    self.scheduler.on_evict(r.worker, f);
+                }
+            }
+        }
+        // A warm start on a (worker, payload) we speculatively warmed is
+        // the speculation paying off.
+        if !r.prewarm
+            && !r.cold
+            && self.prewarmed.remove(&(r.worker, self.payload_of[r.function].clone()))
+        {
+            self.metrics.prewarm_hits += 1;
+        }
+        // Drained workers (beyond the active boundary) and crash-marked
+        // workers must not re-advertise idle capacity or claim parked
+        // work.
+        if r.worker < self.active && !self.dead[r.worker] {
+            self.worker_idle(r.worker, r.function)?;
+        }
+        if r.prewarm {
+            // Nothing is waiting on a speculative warmup.
+            return Ok(());
+        }
+        // Fault injection: a response whose dispatch predates the
+        // worker's most recent crash refers to state the crash destroyed
+        // — the result is lost. A cold execution may also fail
+        // initialization (seed-derived coin, same construction as the
+        // simulator). Either way the request is not resolved; it consumes
+        // a retry attempt. Worker bookkeeping above already ran: the slot
+        // is genuinely free, only the result is discarded.
+        if self.faults_on {
+            let i = r.rid as usize;
+            let crashed = self.last_crash[r.worker].is_some_and(|c| self.dispatched[i] < c);
+            let init_fail = !crashed
+                && r.cold
+                && self.cfg.faults.init_fail_prob > 0.0
+                && fault_coin(self.cfg.workload.seed, r.rid, self.attempts[i])
+                    < self.cfg.faults.init_fail_prob;
+            if crashed || init_fail {
+                let now_s = self.start.elapsed().as_secs_f64();
+                if crashed {
+                    self.metrics.trace.record(
+                        r.rid, r.function, "crash", now_s, now_s, Some(r.worker), "lost",
+                    );
+                } else {
+                    self.metrics.init_failures += 1;
+                    self.metrics.trace.record(
+                        r.rid, r.function, "init_fail", now_s, now_s, Some(r.worker), "",
+                    );
+                }
+                self.fault_retry(r.rid);
+                return Ok(());
+            }
+        }
+        let rid = r.rid as usize;
+        let lat = self.arrival[rid].elapsed().as_secs_f64();
+        if self.pull {
+            // Feed the adaptive-deadline EWMAs from the dispatch ->
+            // response latency: the cold−warm delta of the *service* is
+            // the observed cold penalty. (End-to-end latency would
+            // include the pending wait and self-inflate the delta.)
+            const WAIT_ALPHA: f64 = 0.2;
+            let service_lat = self.dispatched[rid].elapsed().as_secs_f64();
+            let e = if r.cold {
+                &mut self.cold_lat_ewma[r.function]
+            } else {
+                &mut self.warm_lat_ewma[r.function]
+            };
+            *e = if *e > 0.0 {
+                WAIT_ALPHA * service_lat + (1.0 - WAIT_ALPHA) * *e
+            } else {
+                service_lat
+            };
+        }
+        let resp_s = self.start.elapsed().as_secs_f64();
+        self.metrics.record_response(lat, r.cold, 0.0, resp_s);
+        if self.metrics.trace.sampled(r.rid) {
+            // No observable init boundary on the real workers (PJRT
+            // compilation happens inside execute), so the whole dispatch
+            // -> response window is one `service` span; its `cold`/`warm`
+            // detail carries the split.
+            let disp_s = self.dispatched[rid].duration_since(self.start).as_secs_f64();
+            let kind = if r.cold { "cold" } else { "warm" };
+            self.metrics.trace.record(
+                r.rid, r.function, "service", disp_s, resp_s, Some(r.worker), kind,
+            );
+            self.metrics.trace.record(
+                r.rid, r.function, "complete", resp_s, resp_s, Some(r.worker), kind,
+            );
+        }
+        debug_assert!(r.digest.iter().all(|d| d.is_finite()));
+        self.completed += 1;
+        self.resolve(
+            r.rid,
+            InvokeOutcome::Completed { worker: r.worker, cold: r.cold, latency_s: lat },
+        );
+        Ok(())
+    }
+
+    /// Pull dispatch for a now-idle worker: claim a parked request first
+    /// (a warm start); only advertise through `on_complete` when nothing
+    /// is waiting, then offer idle capacity to the prospect-less backlog
+    /// in DRR order (same rule as the simulator).
+    fn worker_idle(&mut self, w: usize, f: usize) -> Result<(), String> {
+        let mut claimed = false;
+        if self.pull && !self.pending_q.is_empty() {
+            let p = {
+                let active = self.active;
+                let dispatch = Some(DispatchCtx {
+                    inflight_f: self.inflight_f[f],
+                    pending_f: self.pending_q.len_fn(f),
+                });
+                let mut ctx = router_ctx(
+                    &self.loads[..active],
+                    &mut self.sched_rng,
+                    self.faults_on.then_some(&self.dead[..active]),
+                )
+                .dispatch(dispatch)
+                .build();
+                self.scheduler.on_worker_idle(w, f, &mut ctx)
+            };
+            if let Pull::Function(pf) = p {
+                if let Some(rid2) = self.pending_q.pop_fn(pf) {
+                    self.bind_parked(rid2, pf, w, "pull")?;
+                    claimed = true;
+                }
+            }
+        }
+        if !claimed {
+            {
+                let active = self.active;
+                let mut ctx = router_ctx(
+                    &self.loads[..active],
+                    &mut self.sched_rng,
+                    self.faults_on.then_some(&self.dead[..active]),
+                )
+                .build();
+                self.scheduler.on_complete(w, f, &mut ctx);
+            }
+            if self.pull && !self.pending_q.is_empty() {
+                let inflight = &self.inflight_f;
+                let eligible = |g: usize| inflight[g] == 0;
+                let got = if self.fair {
+                    self.pending_q.pop_fair_where(eligible)
+                } else {
+                    self.pending_q.pop_arrival_where(eligible)
+                };
+                if let Some((rid2, pf)) = got {
+                    self.bind_parked(rid2, pf, w, "idle")?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bind a parked request `rid` (function `f`) to worker `w`: load
+    /// and inflight bookkeeping, assignment/wait metrics, the dispatch
+    /// stamp the adaptive-wait EWMAs read, and the send. The single
+    /// definition keeps the three claim paths — deadline drain, warm
+    /// claim, idle-capacity claim — from drifting apart.
+    fn bind_parked(&mut self, rid: u64, f: usize, w: usize, kind: &'static str) -> Result<(), String> {
+        self.loads[w] += 1;
+        self.inflight_f[f] += 1;
+        let now_s = self.start.elapsed().as_secs_f64();
+        let arr_s = self.arrival[rid as usize].duration_since(self.start).as_secs_f64();
+        self.metrics.record_assignment(w, now_s);
+        self.metrics.record_pending_wait(f, now_s - arr_s);
+        self.metrics.trace.record(rid, f, "pending", arr_s, now_s, None, "");
+        self.metrics.trace.record(rid, f, "bind", now_s, now_s, Some(w), kind);
+        self.dispatched[rid as usize] = Instant::now();
+        self.send_to(rid, f, w)
+    }
+
+    /// Dispatch one execution message to worker `w` (straggler delay
+    /// included when faults are on).
+    fn send_to(&mut self, rid: u64, f: usize, w: usize) -> Result<(), String> {
+        let delay = straggler_delay(&self.slow, w, self.registry.app(f).warm_ms);
+        self.work_tx[w]
+            .send(ExecMsg {
+                rid,
+                payload: self.payload_of[f].clone(),
+                function: f,
+                seed: (rid as u32).wrapping_mul(2654435761),
+                delay,
+                prewarm: false,
+            })
+            .map_err(|_| "worker channel closed".to_string())
+    }
+
+    /// The wall-clock pull deadline for function `f` (see
+    /// `dispatch.adaptive_wait`): `min(max_wait_s, ewma cold − warm)`
+    /// floored at 1 ms and `dispatch.min_wait_s`.
+    fn wait_for(&self, f: usize) -> f64 {
+        let base = self.cfg.dispatch.max_wait_s;
+        if !self.cfg.dispatch.adaptive_wait
+            || self.cold_lat_ewma[f] <= 0.0
+            || self.warm_lat_ewma[f] <= 0.0
+        {
+            return base;
+        }
+        // A noisy non-positive delta means "no observed cold penalty",
+        // i.e. waiting cannot pay — place almost at once; min_wait_s then
+        // floors the deadline so a transiently tiny estimate cannot
+        // collapse the wait to an instant force-place.
+        base.min((self.cold_lat_ewma[f] - self.warm_lat_ewma[f]).max(0.001))
+            .max(self.cfg.dispatch.min_wait_s)
+    }
+
+    /// Consume one retry attempt for request `rid` after a fault loss (a
+    /// crashed worker's lost result, a cold-init failure, or a
+    /// dead-worker bind). Either schedules a deterministically jittered
+    /// backoff re-dispatch or — budget exhausted — meters the request as
+    /// `failed` and resolves its client, so no admitted request is ever
+    /// silently dropped.
+    fn fault_retry(&mut self, rid: u64) {
+        let i = rid as usize;
+        let att = self.attempts[i];
+        let now_s = self.start.elapsed().as_secs_f64();
+        if att >= self.cfg.faults.max_retries {
+            self.failed += 1;
+            self.metrics.failed += 1;
+            self.metrics.trace.record(rid, self.fn_of[i], "failed", now_s, now_s, None, "budget");
+            self.resolve(rid, InvokeOutcome::Failed);
+            return;
+        }
+        self.attempts[i] = att + 1;
+        self.metrics.retried += 1;
+        let backoff =
+            retry_backoff(self.cfg.faults.retry_backoff_s, self.cfg.workload.seed, rid, att + 1);
+        self.metrics.trace.record(rid, self.fn_of[i], "retry", now_s, now_s, None, "backoff");
+        self.retry_at.push((Instant::now() + Duration::from_secs_f64(backoff), rid));
+    }
+
+    /// Resolve request `rid` toward its client and settle drain waiters.
+    fn resolve(&mut self, rid: u64, outcome: InvokeOutcome) {
+        let _ = self.reply_of[rid as usize].send(outcome);
+        self.outstanding -= 1;
+        self.check_drains();
+    }
+
+    fn check_drains(&mut self) {
+        if self.outstanding == 0 {
+            for d in self.drains.drain(..) {
+                let _ = d.send(());
+            }
+        }
+    }
+
+    /// The live summary: the simulator's summary keys (duration and
+    /// arrivals refreshed to now) plus the server-only conservation
+    /// fields `arrivals`, `failed` and `outstanding`
+    /// (`arrivals == completed + rejected + failed` once drained).
+    fn summary(&mut self) -> Json {
+        self.metrics.duration_s = self.start.elapsed().as_secs_f64();
+        self.metrics.arrivals = self.arrival.len() as u64 + self.rejected as u64;
+        let mut j = self.metrics.summary_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("arrivals".to_string(), Json::Num(self.metrics.arrivals as f64));
+            m.insert("failed".to_string(), Json::Num(self.failed as f64));
+            m.insert("outstanding".to_string(), Json::Num(self.outstanding as f64));
+        }
+        j
+    }
+
+    /// Finalize metrics, drop the work channels so workers exit, join
+    /// them, and hand the metrics back.
+    fn finish(mut self) -> Result<RunMetrics, String> {
+        self.metrics.duration_s = self.start.elapsed().as_secs_f64();
+        let d = self.metrics.duration_s;
+        self.metrics.finalize_scaling(d);
+        // Conservation surface (same identity as the simulator): every
+        // admitted request resolved as completed or failed; refusals
+        // never entered `arrival`.
+        self.metrics.arrivals = self.arrival.len() as u64 + self.rejected as u64;
+        drop(self.work_tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+        Ok(self.metrics)
+    }
+}
+
+/// Serve `n_requests` through the real-time cluster, closed-loop over the
+/// configured VUs, and return the usual metrics — the original entry
+/// point, now a thin compatibility wrapper over the [`Server`] lifecycle
+/// API: one client thread per VU replays its scripted
+/// invoke-think sequence through [`ServerClient::invoke`] until the
+/// request budget is spent, then the server drains and shuts down. Think
+/// times come from the workload config (scale them down for demos —
+/// wall-clock!).
+///
+/// The dispatch protocol applies exactly as documented on [`Server`]:
+/// pull-mode parking and claims, per-function admission caps, adaptive
+/// wall-clock wait deadlines, DRR idle-capacity claims, and (with
+/// `faults.enabled`) the seed-derived fault plan replayed against wall
+/// clock. A request counts as *resolved* when it completes, is rejected,
+/// or exhausts its fault retry budget — the run serves `n_requests`
+/// resolutions. (Scale-to-zero stays sim-only: the worker pool never
+/// drops below one active worker.)
+pub fn serve_n_requests(cfg: &Config, n_requests: usize) -> Result<RunMetrics, String> {
+    let mut cfg = cfg.clone();
+    cfg.workload.vus = cfg.workload.vus.min(n_requests.max(1)).max(1);
+    let server = Server::start(&cfg)?;
+    let workload = Workload::generate(&cfg.workload, server.num_functions(), cfg.workload.seed);
+    let issued = Arc::new(AtomicUsize::new(0));
+    let mut vu_threads = Vec::new();
+    for script in workload.vus.into_iter().take(cfg.workload.vus) {
+        let client = server.client();
+        let issued = Arc::clone(&issued);
+        vu_threads.push(std::thread::spawn(move || {
+            for step in &script.steps {
+                // Issuing (assigned, parked, or refused) spends budget —
+                // the same accounting as the original closed loop.
+                if issued.fetch_add(1, Ordering::SeqCst) >= n_requests {
+                    break;
+                }
+                if client.invoke(step.function).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_secs_f64(step.think_s));
+            }
+        }));
+    }
+    for h in vu_threads {
         let _ = h.join();
     }
-    Ok(metrics)
+    server.drain()?;
+    server.shutdown()
 }
 
 #[cfg(test)]
 mod tests {
-    // Real-time server tests live in rust/tests/e2e.rs (they need built
-    // artifacts and real wall-clock time).
+    // Real-time server tests live in rust/tests/e2e.rs (PJRT backend;
+    // they need built artifacts) and rust/tests/http.rs (stub backend;
+    // they run anywhere).
 }

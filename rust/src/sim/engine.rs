@@ -91,19 +91,37 @@
 //! (DESIGN.md §6; equivalence property-tested in `tests/determinism.rs`).
 
 use super::events::{Event, EventQueue};
-use crate::autoscale::{AutoscaleObs, AutoscalePolicy, Scheduled};
+use crate::autoscale::{AutoscaleObs, AutoscalePolicy};
 use crate::config::Config;
 use crate::dispatch::PendingQueue;
 use crate::faults::{fault_coin, retry_backoff, FaultPlan};
 use crate::metrics::RunMetrics;
 use crate::platform::{AssignOutcome, BatchCompletion, Cluster, SandboxId, StartInfo, WorkerId};
-use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, Scheduler, SlotCtx};
+use crate::scheduler::{Decision, DispatchCtx, Pull, SchedCtx, SchedCtxBuilder, Scheduler, SlotCtx};
 use crate::util::loadidx::{LoadSummary, MinLoadIndex};
 use crate::util::rng::Pcg64;
 use crate::workload::loadgen::{OpenLoopTrace, Workload};
 use crate::workload::spec::FunctionRegistry;
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// The engine's one `SchedCtx` construction path (a free function so the
+/// split borrows of `Simulation` fields stay legal at every call site):
+/// active-prefix loads, the min-load index (the reference engine opts
+/// out — linear scans are its semantics baseline), the scheduler RNG
+/// stream, and the fault avoid mask. Callers chain `.dispatch()` /
+/// `.slots()` onto the returned builder for the pull/slot signals.
+fn sched_ctx<'a>(
+    loads: &'a MinLoadIndex,
+    reference: bool,
+    active: usize,
+    rng: &'a mut Pcg64,
+    faults: Option<&'a FaultRuntime>,
+) -> SchedCtxBuilder<'a> {
+    SchedCtx::builder(&loads.loads()[..active], rng)
+        .min_index(if reference { None } else { Some(loads) })
+        .avoid(faults.map(|fr| fr.dead.as_slice()))
+}
 
 /// Per-request bookkeeping.
 #[derive(Clone, Copy, Debug)]
@@ -917,14 +935,14 @@ impl<'a> Simulation<'a> {
         let active = self.cluster.active_workers();
         debug_assert!(active > 0, "stolen task handed to an empty shard");
         let w = {
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: None,
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots: None,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .build();
             self.schedulers[si].select(task.function, &mut ctx)
         };
         self.bind_pending(rid, w, t, "steal");
@@ -1365,14 +1383,16 @@ impl<'a> Simulation<'a> {
             } else {
                 None
             };
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch,
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .dispatch(dispatch)
+            .slots(slots)
+            .build();
             self.schedulers[si].decide(f, &mut ctx)
         };
         self.slot_free_scratch = slot_free;
@@ -1648,14 +1668,14 @@ impl<'a> Simulation<'a> {
         let active = self.cluster.active_workers();
         let si = self.requests[rid as usize].sched;
         let w = {
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: None,
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots: None,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .build();
             self.schedulers[si].select(f, &mut ctx)
         };
         self.bind_pending(rid, w, t, kind);
@@ -1916,14 +1936,14 @@ impl<'a> Simulation<'a> {
         }
         let si = meta.sched;
         let w = {
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: None,
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots: None,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .build();
             self.schedulers[si].select(f, &mut ctx)
         };
         if w >= active || self.faults.as_ref().unwrap().is_dead(w) {
@@ -2031,17 +2051,18 @@ impl<'a> Simulation<'a> {
         }
         let active = self.cluster.active_workers();
         let pull = {
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: Some(DispatchCtx {
-                    inflight_f: self.inflight_f[f],
-                    pending_f: self.pending.len_fn(f),
-                }),
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots: None,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .dispatch(Some(DispatchCtx {
+                inflight_f: self.inflight_f[f],
+                pending_f: self.pending.len_fn(f),
+            }))
+            .build();
             self.schedulers[si].on_worker_idle(w, f, &mut ctx)
         };
         let Pull::Function(pf) = pull else { return false };
@@ -2063,14 +2084,14 @@ impl<'a> Simulation<'a> {
         }
         let active = self.cluster.active_workers();
         {
-            let mut ctx = SchedCtx {
-                loads: &self.loads[si].loads()[..active],
-                min_index: if self.reference { None } else { Some(&self.loads[si]) },
-                rng: &mut self.sched_rng,
-                dispatch: None,
-                avoid: self.faults.as_ref().map(|fr| fr.dead.as_slice()),
-                slots: None,
-            };
+            let mut ctx = sched_ctx(
+                &self.loads[si],
+                self.reference,
+                active,
+                &mut self.sched_rng,
+                self.faults.as_ref(),
+            )
+            .build();
             self.schedulers[si].on_complete(w, f, &mut ctx);
         }
         if self.pull && !self.pending.is_empty() {
@@ -2460,30 +2481,6 @@ pub fn run_once_reference(cfg: &Config, seed: u64) -> Result<RunMetrics, String>
     let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
         .with_config_autoscaler()?
         .with_reference_core();
-    Ok(sim.run())
-}
-
-/// Deprecated shim over the `scheduled` autoscale policy: mixed scale
-/// events (time, up); up=false drains the highest-id worker (LIFO).
-/// Prefer `cfg.autoscale.policy = "scheduled"` + `cfg.autoscale.events`.
-pub fn run_scale_events(
-    cfg: &Config,
-    seed: u64,
-    events: &[(f64, bool)],
-) -> Result<RunMetrics, String> {
-    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
-    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
-        .with_autoscaler(Box::new(Scheduled::new(events.to_vec())));
-    Ok(sim.run())
-}
-
-/// Deprecated shim over the `scheduled` autoscale policy: one worker joins
-/// at each of `scale_times`. Prefer `cfg.autoscale`.
-pub fn run_scaled(cfg: &Config, seed: u64, scale_times: &[f64]) -> Result<RunMetrics, String> {
-    let events: Vec<(f64, bool)> = scale_times.iter().map(|&t| (t, true)).collect();
-    let (registry, workload, schedulers) = build_parts(cfg, seed, None)?;
-    let sim = Simulation::with_schedulers(cfg, &registry, &workload, schedulers, seed)
-        .with_autoscaler(Box::new(Scheduled::new(events)));
     Ok(sim.run())
 }
 

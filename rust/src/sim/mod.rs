@@ -6,15 +6,15 @@
 //! [`run_once`]/[`run_trace`] are the policy-driven entry points: all
 //! auto-scaling comes from `cfg.autoscale`, and `cfg.sim.shards` picks
 //! the engine (1 = serial, ≥ 2 = the sharded parallel core in
-//! [`shard`]). [`run_scaled`] and [`run_scale_events`] are thin
-//! deprecated shims over the `scheduled` policy, kept so the original
-//! benches compile unchanged.
+//! [`shard`]). Externally-scripted scaling goes through
+//! `cfg.autoscale.policy = "scheduled"` + `cfg.autoscale.events` (the
+//! `run_scaled`/`run_scale_events` shims that predated it are gone).
 
 pub mod engine;
 pub mod events;
 pub mod shard;
 
-pub use engine::{run_once, run_scale_events, run_scaled, run_trace, Simulation};
+pub use engine::{run_once, run_trace, Simulation};
 #[cfg(feature = "ref-heap")]
 pub use engine::{run_once_reference, run_trace_reference};
 pub use events::{Event, EventQueue};

@@ -1,17 +1,30 @@
-//! k6-like closed-loop load generator (§V-A "Execution").
+//! k6-like load generators (§V-A "Execution").
 //!
-//! Each virtual user (VU) loops: invoke a function chosen by weighted random
-//! selection -> wait for the response -> sleep U(0.1 s, 1 s) -> repeat. The
-//! paper seeds the RNG with the experiment start date so that *the order of
-//! function invocations and the sleep durations are identical for every
-//! scheduling algorithm*; we reproduce that by pre-generating each VU's
-//! script (function choices + think times) from the run seed, independent of
-//! scheduler behaviour.
+//! Closed loop ([`Workload`]): each virtual user (VU) loops: invoke a
+//! function chosen by weighted random selection -> wait for the response ->
+//! sleep U(0.1 s, 1 s) -> repeat. The paper seeds the RNG with the
+//! experiment start date so that *the order of function invocations and the
+//! sleep durations are identical for every scheduling algorithm*; we
+//! reproduce that by pre-generating each VU's script (function choices +
+//! think times) from the run seed, independent of scheduler behaviour.
+//!
+//! Open loop over HTTP ([`run_http_loadgen`]): a self-contained socket
+//! client driving the in-tree HTTP front door
+//! (`hiku serve --http` / [`crate::server::http`]) from a pre-generated
+//! arrival schedule — Poisson arrivals over the same Zipf popularity mix,
+//! or the bursty Azure-like synthetic trace. Wall-clock by nature; every
+//! clock read carries a detlint R2 waiver.
 
-use super::azure::Popularity;
+use super::azure::{Popularity, SyntheticTrace};
 use super::spec::FunctionId;
 use crate::config::WorkloadConfig;
+use crate::util::json::{obj, Json};
 use crate::util::rng::{AliasTable, Pcg64};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One scripted VU step.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -125,6 +138,324 @@ impl OpenLoopTrace {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Open-loop HTTP load generator (`hiku loadgen`)
+// ---------------------------------------------------------------------------
+
+/// Options for the open-loop HTTP load generator (`hiku loadgen`): an
+/// in-tree k6 substitute that drives the HTTP front door over real
+/// sockets. The arrival schedule is pre-generated from `seed` (so two
+/// runs against the same server are identical traffic), then replayed
+/// open-loop: arrivals do not wait for earlier responses, `connections`
+/// bounds concurrency, and a generator running behind schedule bursts to
+/// catch up (k6 "constant-arrival-rate" semantics).
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Total requests to send.
+    pub requests: usize,
+    /// Mean arrival rate in requests/second.
+    pub rate_rps: f64,
+    /// Concurrent keep-alive connections (one OS thread each).
+    pub connections: usize,
+    /// Function-id universe: requests target `0..num_functions`.
+    pub num_functions: usize,
+    /// Zipf exponent of the popularity mix (Poisson mode).
+    pub zipf_s: f64,
+    /// Schedule seed (arrival times + function choices).
+    pub seed: u64,
+    /// Draw arrivals from the bursty Azure-like synthetic trace
+    /// ([`SyntheticTrace`]) instead of a Poisson process; times are
+    /// rescaled so the mean rate still matches `rate_rps`.
+    pub use_trace: bool,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".into(),
+            requests: 1000,
+            rate_rps: 200.0,
+            connections: 8,
+            num_functions: 40,
+            zipf_s: 2.05,
+            seed: 42,
+            use_trace: false,
+        }
+    }
+}
+
+/// Aggregated results of one [`run_http_loadgen`] run. Latency
+/// percentiles cover every HTTP-answered request (completed, rejected,
+/// failed); transport errors have no latency sample.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Requests attempted (schedule entries claimed by a connection).
+    pub sent: usize,
+    /// 2xx responses (request executed).
+    pub completed: usize,
+    /// 429 responses (admission refused).
+    pub rejected: usize,
+    /// Other HTTP statuses (e.g. 500 after retry-budget exhaustion).
+    pub failed: usize,
+    /// Connect/read/write failures — the request got no HTTP answer.
+    pub transport_errors: usize,
+    /// Wall-clock span of the run, seconds.
+    pub duration_s: f64,
+    /// Per-request end-to-end latencies in ms, ascending.
+    latencies_ms: Vec<f64>,
+}
+
+impl LoadgenReport {
+    /// Completed requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.duration_s.max(1e-9)
+    }
+
+    /// Mean end-to-end latency over HTTP-answered requests, ms.
+    pub fn mean_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+    }
+
+    /// Latency percentile (`p` in 0..=100) over HTTP-answered requests, ms.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let last = self.latencies_ms.len() - 1;
+        let idx = ((p / 100.0) * last as f64).round() as usize;
+        self.latencies_ms[idx.min(last)]
+    }
+
+    /// Number of requests with an HTTP answer (latency samples).
+    pub fn responses(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    /// Conservation identity: every attempted request is accounted for
+    /// exactly once across the four outcome counters.
+    pub fn accounted(&self) -> bool {
+        self.sent == self.completed + self.rejected + self.failed + self.transport_errors
+    }
+
+    /// The report as a JSON object (the `BENCH_http.json` row shape).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("sent", self.sent.into()),
+            ("completed", self.completed.into()),
+            ("rejected", self.rejected.into()),
+            ("failed", self.failed.into()),
+            ("transport_errors", self.transport_errors.into()),
+            ("duration_s", self.duration_s.into()),
+            ("throughput_rps", self.throughput_rps().into()),
+            ("mean_ms", self.mean_ms().into()),
+            ("p50_ms", self.percentile_ms(50.0).into()),
+            ("p95_ms", self.percentile_ms(95.0).into()),
+            ("p99_ms", self.percentile_ms(99.0).into()),
+        ])
+    }
+}
+
+/// Pre-generate the open-loop arrival schedule for `opts`:
+/// time-ascending `(arrival_s, function)` pairs, fully determined by
+/// `opts.seed`. Poisson mode yields exactly `opts.requests` arrivals
+/// with exponential inter-arrivals at `rate_rps` and Zipf-weighted
+/// function choices (the same popularity construction as
+/// [`Workload::generate`]); trace mode replays the bursty synthetic
+/// trace rescaled to the requested mean rate (and may yield fewer
+/// arrivals if the trace runs short).
+pub fn loadgen_schedule(opts: &LoadgenOpts) -> Vec<(f64, FunctionId)> {
+    let n = opts.requests;
+    let funcs = opts.num_functions.max(1);
+    let mut rng = Pcg64::new(opts.seed);
+    if opts.use_trace {
+        // Double the trace duration until it covers n arrivals, then
+        // rescale times so the mean rate matches rate_rps.
+        let mut dur = 60.0;
+        for _ in 0..16 {
+            let tr = SyntheticTrace::generate(10_000.max(funcs), dur, opts.seed);
+            if tr.invocations.len() >= n || dur > 1e6 {
+                let folded = OpenLoopTrace::from_synthetic(&tr.invocations, funcs);
+                let mut arr: Vec<(f64, FunctionId)> =
+                    folded.arrivals.into_iter().take(n).collect();
+                let span = arr.last().map(|&(t, _)| t).unwrap_or(0.0).max(1e-9);
+                let target_span = arr.len() as f64 / opts.rate_rps.max(1e-9);
+                let k = target_span / span;
+                for a in &mut arr {
+                    a.0 *= k;
+                }
+                return arr;
+            }
+            dur *= 2.0;
+        }
+        return Vec::new();
+    }
+    let pop = Popularity::new(10_000.max(funcs), opts.zipf_s);
+    let weights = pop.sample_weights(funcs, &mut rng);
+    let table = AliasTable::new(&weights);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(opts.rate_rps.max(1e-9));
+            (t, table.sample(&mut rng))
+        })
+        .collect()
+}
+
+/// Per-connection tallies, merged into the final [`LoadgenReport`].
+#[derive(Default)]
+struct ConnStats {
+    completed: usize,
+    rejected: usize,
+    failed: usize,
+    transport_errors: usize,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run the open-loop HTTP load generator against a live server and
+/// block until the schedule is spent. `connections` OS threads share
+/// one atomic schedule cursor: each claims the next arrival, sleeps
+/// until its time, and issues `POST /invoke/{fn}` on its keep-alive
+/// connection (reconnecting after transport errors).
+pub fn run_http_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport, String> {
+    let schedule = Arc::new(loadgen_schedule(opts));
+    if schedule.is_empty() {
+        return Err("loadgen: empty arrival schedule".to_string());
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    // detlint:allow(R2) -- the loadgen's product is wall-clock pacing and latency measurement
+    let start = Instant::now();
+    let mut threads = Vec::new();
+    for _ in 0..opts.connections.max(1) {
+        let schedule = Arc::clone(&schedule);
+        let next = Arc::clone(&next);
+        let addr = opts.addr.clone();
+        threads.push(std::thread::spawn(move || {
+            drive_connection(&addr, &schedule, &next, start)
+        }));
+    }
+    let mut report = LoadgenReport { sent: schedule.len(), ..Default::default() };
+    for t in threads {
+        let s = t.join().map_err(|_| "loadgen connection thread panicked".to_string())?;
+        report.completed += s.completed;
+        report.rejected += s.rejected;
+        report.failed += s.failed;
+        report.transport_errors += s.transport_errors;
+        report.latencies_ms.extend(s.latencies_ms);
+    }
+    report.duration_s = start.elapsed().as_secs_f64();
+    report.latencies_ms.sort_unstable_by(f64::total_cmp);
+    Ok(report)
+}
+
+/// One connection thread: claim-schedule-send-read until the cursor
+/// passes the end of the schedule.
+fn drive_connection(
+    addr: &str,
+    schedule: &[(f64, FunctionId)],
+    next: &AtomicUsize,
+    start: Instant,
+) -> ConnStats {
+    let mut stats = ConnStats::default();
+    let mut conn: Option<(BufReader<TcpStream>, TcpStream)> = None;
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= schedule.len() {
+            return stats;
+        }
+        let (due, f) = schedule[i];
+        let now_s = start.elapsed().as_secs_f64();
+        if due > now_s {
+            std::thread::sleep(Duration::from_secs_f64(due - now_s));
+        }
+        if conn.is_none() {
+            conn = match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    match stream.try_clone() {
+                        Ok(rd) => Some((BufReader::new(rd), stream)),
+                        Err(_) => None,
+                    }
+                }
+                Err(_) => None,
+            };
+            if conn.is_none() {
+                stats.transport_errors += 1;
+                continue;
+            }
+        }
+        let Some((reader, writer)) = conn.as_mut() else { unreachable!() };
+        // detlint:allow(R2) -- per-request end-to-end latency is the measurement itself
+        let t0 = Instant::now();
+        let req =
+            format!("POST /invoke/{f} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\n\r\n");
+        if writer.write_all(req.as_bytes()).and_then(|_| writer.flush()).is_err() {
+            stats.transport_errors += 1;
+            conn = None;
+            continue;
+        }
+        match read_response(reader) {
+            Ok((code, keep)) => {
+                stats.latencies_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+                match code {
+                    200..=299 => stats.completed += 1,
+                    429 => stats.rejected += 1,
+                    _ => stats.failed += 1,
+                }
+                if !keep {
+                    conn = None;
+                }
+            }
+            Err(()) => {
+                stats.transport_errors += 1;
+                conn = None;
+            }
+        }
+    }
+}
+
+/// Read one HTTP response off the connection; returns (status,
+/// keep-alive). Any socket or framing error is `Err(())` — the caller
+/// reconnects.
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool), ()> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => return Err(()),
+        Ok(_) => {}
+    }
+    let code: u16 = line.split_whitespace().nth(1).and_then(|c| c.parse().ok()).ok_or(())?;
+    let mut content_length = 0usize;
+    let mut keep = true;
+    for _ in 0..128 {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) | Err(_) => return Err(()),
+            Ok(_) => {}
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body).map_err(|_| ())?;
+            return Ok((code, keep));
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().map_err(|_| ())?;
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.eq_ignore_ascii_case("close")
+            {
+                keep = false;
+            }
+        }
+    }
+    Err(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +528,65 @@ mod tests {
         let tr = vec![(0.5, 123usize), (1.0, 41), (2.0, 39)];
         let ol = OpenLoopTrace::from_synthetic(&tr, 40);
         assert_eq!(ol.arrivals, vec![(0.5, 3), (1.0, 1), (2.0, 39)]);
+    }
+
+    #[test]
+    fn loadgen_schedule_deterministic_sorted_in_range() {
+        let opts = LoadgenOpts { requests: 500, num_functions: 40, ..Default::default() };
+        let a = loadgen_schedule(&opts);
+        let b = loadgen_schedule(&opts);
+        assert_eq!(a, b, "schedule must be seed-deterministic");
+        assert_eq!(a.len(), 500);
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "times must ascend");
+        assert!(a.iter().all(|&(t, f)| t >= 0.0 && f < 40));
+        // Mean rate tracks rate_rps (Poisson: span ~ n/rate, loose 2x band).
+        let span = a.last().unwrap().0;
+        let expect = 500.0 / opts.rate_rps;
+        assert!(span > expect * 0.5 && span < expect * 2.0, "span {span} vs {expect}");
+    }
+
+    #[test]
+    fn loadgen_trace_schedule_rescales_to_rate() {
+        let opts = LoadgenOpts {
+            requests: 400,
+            rate_rps: 100.0,
+            use_trace: true,
+            ..Default::default()
+        };
+        let a = loadgen_schedule(&opts);
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "times must ascend");
+        assert!(a.iter().all(|&(_, f)| f < 40));
+        let span = a.last().unwrap().0;
+        let expect = a.len() as f64 / opts.rate_rps;
+        assert!((span - expect).abs() < 1e-6, "trace rescaled span {span} vs {expect}");
+    }
+
+    #[test]
+    fn loadgen_report_percentiles_and_accounting() {
+        let mut r = LoadgenReport {
+            sent: 5,
+            completed: 3,
+            rejected: 1,
+            failed: 0,
+            transport_errors: 1,
+            duration_s: 2.0,
+            ..Default::default()
+        };
+        r.latencies_ms = vec![1.0, 2.0, 3.0, 4.0];
+        assert!(r.accounted());
+        assert_eq!(r.responses(), 4);
+        assert_eq!(r.percentile_ms(0.0), 1.0);
+        assert_eq!(r.percentile_ms(100.0), 4.0);
+        assert!((r.mean_ms() - 2.5).abs() < 1e-12);
+        assert!((r.throughput_rps() - 1.5).abs() < 1e-12);
+        let j = r.to_json();
+        for key in ["sent", "completed", "rejected", "failed", "transport_errors",
+            "duration_s", "throughput_rps", "mean_ms", "p50_ms", "p95_ms", "p99_ms"]
+        {
+            assert!(j.get(key).is_some(), "missing loadgen JSON key {key}");
+        }
+        let bad = LoadgenReport { sent: 2, completed: 1, ..Default::default() };
+        assert!(!bad.accounted());
     }
 }

@@ -5,7 +5,7 @@
 use hiku::config::{Config, SchedulerConfig};
 use hiku::prop_assert;
 use hiku::scheduler::{make_scheduler, Hiku, SchedCtx, Scheduler, ALL_SCHEDULERS};
-use hiku::sim::{run_once, run_scaled};
+use hiku::sim::run_once;
 use hiku::util::prop::{check, PropConfig};
 use hiku::util::rng::Pcg64;
 
@@ -170,21 +170,31 @@ fn reactive_scales_up_under_load() {
     );
 }
 
-/// Consolidation check: the legacy `run_scaled` wrapper and the
-/// `scheduled` policy configured through `[autoscale]` are the same code
-/// path and must agree bit-for-bit.
+/// Consolidation check (the `run_scaled`/`run_scale_events` shims are
+/// gone): the `scheduled` policy configured through `[autoscale]`
+/// replays the parsed event list verbatim at its exact times, and
+/// alternate spec spellings of the same event list are bit-identical
+/// runs.
 #[test]
-fn scheduled_policy_matches_legacy_wrapper() {
+fn scheduled_policy_replays_parsed_events() {
+    use hiku::autoscale::{AutoscalePolicy, Scheduled};
+    let s = Scheduled::parse("30;60").unwrap();
+    assert_eq!(s.scheduled_events(), vec![(30.0, true), (60.0, true)]);
+
     let mut c = cfg("hiku", 60, 90.0);
     c.cluster.workers = 3;
-    let a = run_scaled(&c, 22, &[30.0, 60.0]).unwrap();
+    c.autoscale.policy = "scheduled".into();
+    c.autoscale.events = "30;60".into();
+    let a = run_once(&c, 22).unwrap();
     let mut c2 = c.clone();
-    c2.autoscale.policy = "scheduled".into();
-    c2.autoscale.events = "30;60".into();
+    c2.autoscale.events = " +30, 60.0 ".into();
     let b = run_once(&c2, 22).unwrap();
     assert_eq!(a.completed, b.completed);
     assert_eq!(a.cold_starts, b.cold_starts);
     assert_eq!(a.scaling_timeline, b.scaling_timeline);
+    // The events applied at their exact scripted times: 3 -> 4 -> 5.
+    assert!(a.scaling_timeline.contains(&(30.0, 4)));
+    assert!(a.scaling_timeline.contains(&(60.0, 5)));
     let (mut a, mut b) = (a, b);
     assert!(a.mean_latency_ms() == b.mean_latency_ms());
 }

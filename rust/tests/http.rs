@@ -1,0 +1,167 @@
+//! End-to-end smoke for the HTTP front door (DESIGN.md §13): the
+//! in-tree ingress on an ephemeral port, exercised both with raw
+//! sockets (route/parser behavior) and with the open-loop loadgen
+//! (conservation + summary-shape parity with the Server API).
+//!
+//! Wall-clock tests on the stub runtime backend — no AOT artifacts
+//! needed, kept small.
+
+use hiku::config::Config;
+use hiku::server::http::HttpIngress;
+use hiku::server::{InvokeOutcome, Server};
+use hiku::util::json::Json;
+use hiku::workload::loadgen::{loadgen_schedule, run_http_loadgen, LoadgenOpts};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+fn cfg() -> Config {
+    let mut c = Config::default();
+    c.runtime.backend = "stub".into();
+    c.scheduler.name = "hiku".into();
+    c.dispatch.mode = "pull".into();
+    c.cluster.workers = 2;
+    c.http.io_threads = 4;
+    c
+}
+
+/// One raw HTTP exchange: send `req` verbatim, read the reply to EOF
+/// (callers set `Connection: close` so the server ends the stream).
+fn raw(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("write");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read");
+    out
+}
+
+fn get(addr: &str, path: &str) -> String {
+    raw(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n"))
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+#[test]
+fn routes_and_parser_respond_correctly() {
+    let ingress = HttpIngress::start(&cfg(), "127.0.0.1:0").expect("start");
+    let addr = ingress.local_addr().to_string();
+
+    let health = get(&addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 200"), "healthz: {health}");
+    assert_eq!(body_of(&health), "{\"ok\":true}");
+
+    let summary = get(&addr, "/summary");
+    assert!(summary.starts_with("HTTP/1.1 200"), "summary: {summary}");
+    Json::parse(body_of(&summary)).expect("summary must be valid JSON");
+
+    // One real invocation over the wire.
+    let inv = raw(
+        &addr,
+        "POST /invoke/0 HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+    );
+    assert!(inv.starts_with("HTTP/1.1 200"), "invoke: {inv}");
+    let j = Json::parse(body_of(&inv)).expect("invoke reply must be valid JSON");
+    assert_eq!(j.get("outcome").and_then(Json::as_str), Some("completed"));
+    assert_eq!(j.get("function").and_then(Json::as_u64), Some(0));
+
+    // Speculative warmup is accepted asynchronously.
+    let pre = raw(
+        &addr,
+        "POST /prewarm/1 HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+    );
+    assert!(pre.starts_with("HTTP/1.1 202"), "prewarm: {pre}");
+
+    // Unknown routes and out-of-range function ids are 404.
+    assert!(get(&addr, "/nope").starts_with("HTTP/1.1 404"));
+    let far = raw(
+        &addr,
+        "POST /invoke/99999 HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+    );
+    assert!(far.starts_with("HTTP/1.1 404"), "oob function: {far}");
+
+    // A garbage request line is a 400, not a hang or a crash.
+    let bad = raw(&addr, "GARBAGE\r\n\r\n");
+    assert!(bad.starts_with("HTTP/1.1 400"), "malformed: {bad}");
+
+    // Keep-alive: two requests down one connection both answer.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    for _ in 0..2 {
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").expect("write");
+        let mut resp = String::new();
+        let mut buf = [0u8; 512];
+        while !resp.contains("{\"ok\":true}") {
+            let n = s.read(&mut buf).expect("read");
+            assert!(n > 0, "connection closed mid-response: {resp}");
+            resp.push_str(&String::from_utf8_lossy(&buf[..n]));
+        }
+        assert!(resp.starts_with("HTTP/1.1 200"), "keep-alive: {resp}");
+    }
+
+    let mut m = ingress.stop().expect("stop");
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.arrivals, m.completed + m.rejected + m.failed);
+    assert!(m.mean_latency_ms() > 0.0);
+}
+
+#[test]
+fn loadgen_run_conserves_requests_and_matches_server_api_summary_shape() {
+    let c = cfg();
+    let ingress = HttpIngress::start(&c, "127.0.0.1:0").expect("start");
+    let opts = LoadgenOpts {
+        addr: ingress.local_addr().to_string(),
+        requests: 200,
+        rate_rps: 500.0,
+        connections: 4,
+        num_functions: c.num_functions(),
+        seed: 7,
+        ..Default::default()
+    };
+    let report = run_http_loadgen(&opts).expect("loadgen");
+
+    // Client-side conservation: every scheduled request accounted for,
+    // and on an unbounded localhost queue all of them complete.
+    assert!(report.accounted(), "loadgen accounting must balance");
+    assert_eq!(report.sent, 200);
+    assert_eq!(report.transport_errors, 0);
+    assert_eq!(report.completed, 200);
+    assert_eq!(report.rejected + report.failed, 0);
+
+    // Server-side conservation, scraped over the wire after a drain.
+    ingress.client().drain().expect("drain");
+    let scraped = get(&ingress.local_addr().to_string(), "/summary");
+    let http_summary = Json::parse(body_of(&scraped)).expect("summary JSON");
+    let arrivals = http_summary.get("arrivals").and_then(Json::as_u64).unwrap();
+    let completed = http_summary.get("completed").and_then(Json::as_u64).unwrap();
+    let rejected = http_summary.get("rejected").and_then(Json::as_u64).unwrap();
+    let failed = http_summary.get("failed").and_then(Json::as_u64).unwrap();
+    let outstanding = http_summary.get("outstanding").and_then(Json::as_u64).unwrap();
+    assert_eq!(outstanding, 0, "drained server must have nothing in flight");
+    assert_eq!(arrivals, completed + rejected + failed);
+    assert_eq!(completed, 200);
+
+    // Shape parity: replay the same schedule through the Server API and
+    // require the identical summary key set (HTTP adds nothing and
+    // loses nothing relative to in-process callers).
+    let server = Server::start(&c).expect("server");
+    for &(_, f) in &loadgen_schedule(&opts) {
+        let out = server.invoke(f).expect("invoke");
+        assert_ne!(out, InvokeOutcome::Rejected, "unbounded queue must admit");
+    }
+    server.drain().expect("drain");
+    let api_summary = server.summary().expect("summary");
+    let api_keys: Vec<&String> = api_summary.as_obj().unwrap().keys().collect();
+    let http_keys: Vec<&String> = http_summary.as_obj().unwrap().keys().collect();
+    assert_eq!(http_keys, api_keys, "HTTP /summary shape must match the Server API");
+    let mut m = server.shutdown().expect("shutdown");
+    assert_eq!(m.completed, 200);
+    assert_eq!(m.arrivals, m.completed + m.rejected + m.failed);
+    assert!(m.mean_latency_ms() > 0.0);
+
+    let server_metrics = ingress.stop().expect("stop");
+    assert_eq!(server_metrics.completed, 200);
+    assert_eq!(
+        server_metrics.arrivals,
+        server_metrics.completed + server_metrics.rejected + server_metrics.failed
+    );
+}

@@ -206,11 +206,12 @@ fn hiku_custom_fallback_runs() {
 
 #[test]
 fn autoscale_adds_capacity() {
-    use hiku::sim::run_scaled;
     let mut c = cfg("hiku", 100, 120.0);
     c.cluster.workers = 3;
-    let mut static3 = run_scaled(&c, 22, &[]).unwrap();
-    let mut scaled = run_scaled(&c, 22, &[30.0, 60.0]).unwrap();
+    c.autoscale.policy = "scheduled".into();
+    let mut static3 = run_once(&c, 22).unwrap();
+    c.autoscale.events = "30;60".into();
+    let mut scaled = run_once(&c, 22).unwrap();
     assert!(
         scaled.completed > static3.completed,
         "scaling up must add throughput: {} vs {}",
@@ -226,11 +227,12 @@ fn autoscale_adds_capacity() {
 
 #[test]
 fn autoscale_all_schedulers_route_to_new_worker() {
-    use hiku::sim::run_scaled;
     for sched in ALL_SCHEDULERS {
         let mut c = cfg(sched, 40, 60.0);
         c.cluster.workers = 3;
-        let m = run_scaled(&c, 23, &[20.0]).expect(sched);
+        c.autoscale.policy = "scheduled".into();
+        c.autoscale.events = "20".into();
+        let m = run_once(&c, 23).expect(sched);
         let totals = m.imbalance.totals();
         assert_eq!(totals.len(), 4, "{sched}");
         assert!(totals[3] > 0.0, "{sched}: new worker never used: {totals:?}");
@@ -279,13 +281,13 @@ fn open_loop_trace_replay() {
 
 #[test]
 fn scale_down_drains_lifo() {
-    use hiku::sim::run_scale_events;
     for sched in ["hiku", "ch-bl", "least-connections", "consistent"] {
         let mut c = cfg(sched, 40, 90.0);
         c.cluster.workers = 5;
         // Drain two workers at t=30, re-add one at t=60.
-        let m = run_scale_events(&c, 27, &[(30.0, false), (30.0, false), (60.0, true)])
-            .expect(sched);
+        c.autoscale.policy = "scheduled".into();
+        c.autoscale.events = "-30;-30;60".into();
+        let m = run_once(&c, 27).expect(sched);
         assert_eq!(m.issued, m.completed, "{sched}");
         let totals = m.imbalance.totals();
         // Worker 4 drained at t=30 and never came back; worker 3 returned.
@@ -306,10 +308,11 @@ fn scale_down_drains_lifo() {
 
 #[test]
 fn scale_down_never_removes_last_worker() {
-    use hiku::sim::run_scale_events;
     let mut c = cfg("hiku", 5, 20.0);
     c.cluster.workers = 1;
-    let m = run_scale_events(&c, 28, &[(5.0, false), (6.0, false)]).unwrap();
+    c.autoscale.policy = "scheduled".into();
+    c.autoscale.events = "-5;-6".into();
+    let m = run_once(&c, 28).unwrap();
     assert_eq!(m.issued, m.completed);
     assert!(m.completed > 0);
 }
